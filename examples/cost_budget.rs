@@ -1,0 +1,22 @@
+//! Cost-efficiency study (paper Fig. 9): HexGen-2 on heterogeneous setting 5
+//! — 70% of the homogeneous budget — vs DistServe on 8xH100, per workload.
+//!
+//! Run:  cargo run --release --example cost_budget
+
+use hexgen2::cluster::settings;
+use hexgen2::experiments::{endtoend, ExpOpts};
+use hexgen2::model::LLAMA2_70B;
+
+fn main() {
+    let het5 = settings::het5();
+    let hom = settings::homogeneous();
+    println!(
+        "budgets: het5 ${:.2}/h vs homogeneous ${:.2}/h ({:.0}%)\n",
+        het5.budget_per_hour(),
+        hom.budget_per_hour(),
+        100.0 * het5.budget_per_hour() / hom.budget_per_hour()
+    );
+    let t = endtoend::fig9_budget(&LLAMA2_70B, &ExpOpts::from_env());
+    t.print("Fig. 9: throughput at 70% price budget (LLaMA-2-70B)");
+    println!("\nratio >= 1.0 means the cheaper heterogeneous cluster matches or beats 8xH100.");
+}

@@ -1,0 +1,27 @@
+//! Run the HexGen-2 scheduling algorithm on heterogeneous setting 1 with
+//! LLaMA-2-70B (the paper's flagship configuration) and print the chosen
+//! placement in the paper's Table-2 format, plus the convergence trace.
+//!
+//! Run:  cargo run --release --example schedule_cluster
+
+use hexgen2::cluster::settings;
+use hexgen2::model::LLAMA2_70B;
+use hexgen2::scheduler::{schedule, ScheduleOptions};
+use hexgen2::workload::WorkloadKind;
+
+fn main() {
+    let cluster = settings::het1();
+    println!("cluster {}: {} GPUs, ${:.2}/h\n", cluster.name, cluster.n(), cluster.budget_per_hour());
+
+    for kind in [WorkloadKind::Online, WorkloadKind::Hpld, WorkloadKind::Lphd] {
+        let opts = ScheduleOptions::new(kind);
+        let r = schedule(&cluster, &LLAMA2_70B, &opts).expect("feasible placement");
+        println!(
+            "=== workload {} (scheduled in {:.2}s, {} rounds) ===",
+            kind.name(),
+            r.elapsed_s,
+            r.rounds
+        );
+        println!("{}", r.placement.describe(&cluster));
+    }
+}

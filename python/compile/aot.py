@@ -1,0 +1,219 @@
+"""AOT bridge: lower the JAX model (with its Pallas kernels) to HLO text.
+
+Run once via `make artifacts`. Emits, per model config:
+  artifacts/<model>.params.bin          flat little-endian f32 parameter blob
+  artifacts/<model>_<kind>_b<B>[_s<S>].hlo.txt   one HLO module per variant
+  artifacts/manifest.json               the ABI the Rust runtime consumes
+
+HLO *text* is the interchange format, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+All pallas_calls are lowered with interpret=True so the modules contain only
+portable HLO the CPU PJRT plugin can execute.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Variant tables: which (batch, seq) prefill modules and (batch,) decode
+# modules each model ships with. The Rust batcher selects among these.
+PREFILL_VARIANTS = {
+    "tiny": [(1, 64), (1, 128), (2, 64), (2, 128), (4, 64), (4, 128)],
+    "gpt-100m": [(1, 128), (1, 512), (4, 128), (4, 512)],
+}
+DECODE_VARIANTS = {
+    "tiny": [1, 2, 4, 8],
+    "gpt-100m": [1, 4, 8],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _tensor_meta(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def write_params_blob(cfg, params, out_dir):
+    entries = []
+    offset = 0
+    path = os.path.join(out_dir, f"{cfg.name}.params.bin")
+    with open(path, "wb") as f:
+        for (name, shape), arr in zip(M.param_entries(cfg), params):
+            a = np.asarray(arr, dtype="<f4")
+            assert tuple(a.shape) == tuple(shape), name
+            f.write(a.tobytes())
+            entries.append(
+                {"name": name, "shape": list(shape), "offset": offset, "elems": int(a.size)}
+            )
+            offset += a.nbytes
+    return os.path.basename(path), entries, offset
+
+
+def lower_model(cfg, params, out_dir, quiet=False):
+    modules = []
+    pspecs = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in params)
+    s_max, h, nl, v = cfg.max_seq, cfg.d_model, cfg.n_layers, cfg.vocab
+    cache_shape = (nl, 0, s_max, h)  # batch filled per-variant
+
+    for b, s in PREFILL_VARIANTS[cfg.name]:
+        name = f"{cfg.name}_prefill_b{b}_s{s}"
+        fn = functools.partial(M.prefill, cfg)
+        lowered = jax.jit(fn).lower(
+            pspecs,
+            jax.ShapeDtypeStruct((b, s), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        )
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        modules.append(
+            {
+                "name": name,
+                "kind": "prefill",
+                "batch": b,
+                "seq": s,
+                "file": fname,
+                "extra_inputs": [
+                    _tensor_meta("tokens", "s32", (b, s)),
+                    _tensor_meta("lengths", "s32", (b,)),
+                ],
+                "outputs": [
+                    _tensor_meta("logits", "f32", (b, v)),
+                    _tensor_meta("k_cache", "f32", (nl, b, s_max, h)),
+                    _tensor_meta("v_cache", "f32", (nl, b, s_max, h)),
+                ],
+            }
+        )
+        if not quiet:
+            print(f"  lowered {name}")
+
+    for b in DECODE_VARIANTS[cfg.name]:
+        name = f"{cfg.name}_decode_b{b}"
+        fn = functools.partial(M.decode_step, cfg)
+        cs = jax.ShapeDtypeStruct((nl, b, s_max, h), jnp.float32)
+        lowered = jax.jit(fn).lower(
+            pspecs,
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            cs,
+            cs,
+        )
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        modules.append(
+            {
+                "name": name,
+                "kind": "decode",
+                "batch": b,
+                "seq": 1,
+                "file": fname,
+                "extra_inputs": [
+                    _tensor_meta("token", "s32", (b,)),
+                    _tensor_meta("pos", "s32", (b,)),
+                    _tensor_meta("k_cache", "f32", (nl, b, s_max, h)),
+                    _tensor_meta("v_cache", "f32", (nl, b, s_max, h)),
+                ],
+                "outputs": [
+                    _tensor_meta("logits", "f32", (b, v)),
+                    _tensor_meta("k_cache", "f32", (nl, b, s_max, h)),
+                    _tensor_meta("v_cache", "f32", (nl, b, s_max, h)),
+                ],
+            }
+        )
+        if not quiet:
+            print(f"  lowered {name}")
+    return modules
+
+
+def write_golden(cfg, params, out_dir):
+    """Golden input/output pairs for the Rust runtime's numerics test.
+
+    Fixed tokens through prefill then one decode step; the Rust side must
+    reproduce these logits through the compiled HLO within float tolerance.
+    """
+    b, s = 2, 64
+    tokens = (np.arange(b * s, dtype=np.int32).reshape(b, s) * 7 + 3) % cfg.vocab
+    lengths = np.asarray([s, s // 2], np.int32)
+    logits, kc, vc = M.prefill(cfg, params, jnp.asarray(tokens), jnp.asarray(lengths))
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    dl, _, _ = M.decode_step(cfg, params, nxt, jnp.asarray(lengths), kc, vc)
+    golden = {
+        "model": cfg.name,
+        "batch": b,
+        "seq": s,
+        "tokens": tokens.flatten().tolist(),
+        "lengths": lengths.tolist(),
+        "prefill_logits_head": np.asarray(logits)[:, :8].flatten().tolist(),
+        "prefill_argmax": np.asarray(nxt).tolist(),
+        "decode_logits_head": np.asarray(dl)[:, :8].flatten().tolist(),
+        "decode_argmax": np.asarray(jnp.argmax(dl, -1)).tolist(),
+    }
+    with open(os.path.join(out_dir, f"{cfg.name}.golden.json"), "w") as f:
+        json.dump(golden, f)
+
+
+def build(out_dir, models, seed=0, quiet=False):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "models": {}}
+    for mname in models:
+        cfg = M.CONFIGS[mname]
+        if not quiet:
+            print(f"[aot] {mname}: {cfg.n_params/1e6:.1f}M params")
+        params = M.init_params(cfg, seed)
+        blob, pentries, blob_bytes = write_params_blob(cfg, params, out_dir)
+        modules = lower_model(cfg, params, out_dir, quiet=quiet)
+        write_golden(cfg, params, out_dir)
+        manifest["models"][mname] = {
+            "config": {
+                "name": cfg.name,
+                "n_layers": cfg.n_layers,
+                "d_model": cfg.d_model,
+                "n_heads": cfg.n_heads,
+                "vocab": cfg.vocab,
+                "max_seq": cfg.max_seq,
+                "mlp_ratio": cfg.mlp_ratio,
+            },
+            "seed": seed,
+            "params_file": blob,
+            "params_bytes": blob_bytes,
+            "params": pentries,
+            "modules": modules,
+        }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if not quiet:
+        print(f"[aot] wrote {out_dir}/manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="tiny,gpt-100m",
+        help="comma-separated model configs (tiny, gpt-100m)",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    build(args.out, [m for m in args.models.split(",") if m])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for HexGen-2 (compile-time only; never at runtime).
+
+Exports the flash prefill attention and paged decode attention kernels plus
+their pure-jnp oracles. See DESIGN.md section "Hardware-Adaptation".
+"""
+
+from .attention import flash_prefill
+from .decode import paged_decode
+from .ref import decode_attention_ref, prefill_attention_ref
+
+__all__ = [
+    "flash_prefill",
+    "paged_decode",
+    "prefill_attention_ref",
+    "decode_attention_ref",
+]

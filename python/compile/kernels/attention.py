@@ -1,0 +1,118 @@
+"""Pallas flash-attention prefill kernel (TPU-shaped, interpret=True on CPU).
+
+Hardware adaptation of the CUDA FlashAttention the paper's runtime uses
+(DESIGN.md section "Hardware-Adaptation"): the CUDA threadblock-per-query-tile
+with shared-memory K/V staging becomes a Pallas grid over
+(batch*heads, query blocks) whose BlockSpecs express the HBM->VMEM schedule;
+the online-softmax running (max, denominator, accumulator) live in kernel
+registers/VMEM rather than CUDA registers, and the two matmuls (Q.K^T and
+P.V) are MXU-shaped (tile sizes multiples of the 128-lane MXU where the model
+dims allow).
+
+The kernel MUST be lowered with interpret=True for the CPU PJRT runtime:
+real TPU lowering emits a Mosaic custom-call the CPU plugin cannot execute.
+Under interpret=True the pallas_call lowers to portable HLO (while-loops +
+dots), so the identical module text runs in the Rust PJRT engine.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_prefill_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k, seq_len):
+    """Grid point = (q_block,). Online-softmax over K/V tiles, vectorized
+    over all batch*head rows inside the kernel body.
+
+    On a real TPU the grid would also span bh for cross-core parallelism
+    (one MXU tile per (bh, q_block)); under interpret=True each grid point
+    costs an interpreter dispatch, so bh is folded into the kernel as the
+    leading vector axis — same math, ~100x fewer interpreted iterations
+    (EXPERIMENTS.md §Perf L1).
+
+    Refs (per grid point):
+      len_ref: [BH]          int32 real sequence lengths.
+      q_ref:   [BH, bq, Dh]  query tiles (VMEM).
+      k_ref:   [BH, S, Dh]   full K rows (VMEM-staged per BlockSpec).
+      v_ref:   [BH, S, Dh]   full V rows.
+      o_ref:   [BH, bq, Dh]  output tiles.
+    """
+    bh, block_q, dh = q_ref.shape
+    qi = pl.program_id(0)
+    lengths = len_ref[...]  # [BH]
+
+    q = q_ref[...] * (1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32)))
+    row = qi * block_q + lax.iota(jnp.int32, block_q)  # [bq] query positions
+
+    # Causal: the last query row of this tile attends up to position
+    # qi*bq + bq - 1, so only ceil((qi+1)*bq / bk) K tiles contribute.
+    num_kb = (qi * block_q + block_q + block_k - 1) // block_k
+    num_kb = jnp.minimum(num_kb, (seq_len + block_k - 1) // block_k)
+
+    def body(j, carry):
+        m, l, acc = carry
+        kb = pl.load(k_ref, (slice(None), pl.dslice(j * block_k, block_k), slice(None)))
+        vb = pl.load(v_ref, (slice(None), pl.dslice(j * block_k, block_k), slice(None)))
+        s = jnp.einsum("bqd,bkd->bqk", q, kb, preferred_element_type=jnp.float32)
+        col = j * block_k + lax.iota(jnp.int32, block_k)
+        mask = (col[None, None, :] <= row[None, :, None]) & (
+            col[None, None, :] < lengths[:, None, None]
+        )
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=2))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, :, None]), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=2)
+        acc_new = acc * alpha[:, :, None] + jnp.einsum(
+            "bqk,bkd->bqd", p, vb, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bh, block_q), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bh, block_q), jnp.float32)
+    acc0 = jnp.zeros((bh, block_q, dh), jnp.float32)
+    m, l, acc = lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+
+    out = acc / jnp.maximum(l, 1e-30)[:, :, None]
+    # Zero rows past the real length (padding queries).
+    out = jnp.where((row[None, :] < lengths[:, None])[:, :, None], out, 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def flash_prefill(q, k, v, lengths, *, block_q=64, block_k=64, interpret=True):
+    """Causal flash attention over padded sequences.
+
+    Args:
+      q, k, v: [BH, S, Dh] float32.
+      lengths: [BH] int32 real sequence lengths.
+      block_q, block_k: tile sizes (clamped to S; S % block_q must be 0
+        after clamping — callers use power-of-two S).
+
+    Returns:
+      [BH, S, Dh] float32, rows past `lengths` zeroed.
+    """
+    bh, s, dh = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q != 0 or s % block_k != 0:
+        raise ValueError(f"seq len {s} not divisible by blocks {block_q},{block_k}")
+    grid = (s // block_q,)
+    kernel = functools.partial(_flash_prefill_kernel, block_k=block_k, seq_len=s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bh,), lambda i: (0,)),
+            pl.BlockSpec((bh, block_q, dh), lambda i: (0, i, 0)),
+            pl.BlockSpec((bh, s, dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((bh, s, dh), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bh, block_q, dh), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v)

@@ -1,0 +1,97 @@
+"""Pallas paged decode-attention kernel (interpret=True on CPU).
+
+Hardware adaptation of CUDA PagedAttention: the warp-level
+gather-from-block-table becomes a Pallas grid over (batch*heads,) with an
+in-kernel loop over fixed-size KV pages; pages beyond the live length are
+masked, and partial pages are handled by the same online-softmax merge as
+the prefill kernel. The physical block table (slot allocation, eviction)
+lives in the Rust KV-cache manager (rust/src/coordinator/kvcache.rs); the
+kernel sees the logically-contiguous per-request view the manager exposes,
+paged at `page_size` granularity for the HBM->VMEM schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, page_size, s_max):
+    """Single grid point; all batch*head rows vectorized in the kernel body
+    (same rationale as the prefill kernel: on TPU the grid would span bh,
+    but under interpret=True folding bh into the body removes per-row
+    interpreter dispatch — EXPERIMENTS.md §Perf L1). The page loop walks the
+    cache in page_size chunks up to the largest live length.
+
+    Refs:
+      len_ref: [BH]            int32 live cache lengths (current token incl.).
+      q_ref:   [BH, Dh]        the queries.
+      k_ref:   [BH, S_max, Dh] cached keys.
+      v_ref:   [BH, S_max, Dh] cached values.
+      o_ref:   [BH, Dh]        outputs.
+    """
+    bh, dh = q_ref.shape
+    lengths = len_ref[...]
+    q = q_ref[...] * (1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32)))
+
+    num_pages = (jnp.max(lengths) + page_size - 1) // page_size
+
+    def body(j, carry):
+        m, l, acc = carry
+        kb = pl.load(k_ref, (slice(None), pl.dslice(j * page_size, page_size), slice(None)))
+        vb = pl.load(v_ref, (slice(None), pl.dslice(j * page_size, page_size), slice(None)))
+        s = jnp.einsum("bkd,bd->bk", kb, q, preferred_element_type=jnp.float32)
+        col = j * page_size + lax.iota(jnp.int32, page_size)
+        mask = col[None, :] < lengths[:, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jnp.einsum(
+            "bk,bkd->bd", p, vb, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bh,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bh,), jnp.float32)
+    acc0 = jnp.zeros((bh, dh), jnp.float32)
+    m, l, acc = lax.fori_loop(0, num_pages, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode(q, k_cache, v_cache, lengths, *, page_size=64, interpret=True):
+    """Single-token decode attention over a fixed-capacity KV cache.
+
+    Args:
+      q: [BH, Dh] float32 current-token queries.
+      k_cache, v_cache: [BH, S_max, Dh] float32; entries past `lengths` are
+        ignored (masked), so stale data there is harmless.
+      lengths: [BH] int32, number of live entries (current token included).
+      page_size: KV page granularity; S_max % page_size must be 0.
+
+    Returns:
+      [BH, Dh] float32 attention outputs.
+    """
+    bh, s_max, dh = k_cache.shape
+    page_size = min(page_size, s_max)
+    if s_max % page_size != 0:
+        raise ValueError(f"S_max {s_max} not divisible by page {page_size}")
+    kernel = functools.partial(_paged_decode_kernel, page_size=page_size, s_max=s_max)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((bh,), lambda i: (0,)),
+            pl.BlockSpec((bh, dh), lambda i: (0, 0)),
+            pl.BlockSpec((bh, s_max, dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((bh, s_max, dh), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bh, dh), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, dh), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)

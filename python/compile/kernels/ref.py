@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: slow, obviously-right implementations
+of causal prefill attention and single-token decode attention. The pytest
+suite asserts the Pallas kernels (interpret=True) match these to tight
+tolerances across a hypothesis-driven sweep of shapes.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def prefill_attention_ref(q, k, v, lengths):
+    """Causal masked attention over full sequences.
+
+    Args:
+      q, k, v: [BH, S, Dh] float arrays (BH = batch * heads).
+      lengths: [BH] int32, the real (unpadded) sequence length per row.
+
+    Returns:
+      [BH, S, Dh] attention output; rows at positions >= length are zero.
+    """
+    bh, s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale  # [BH, S, S]
+    row = jnp.arange(s)[None, :, None]  # query positions
+    col = jnp.arange(s)[None, None, :]  # key positions
+    causal = col <= row
+    valid_k = col < lengths[:, None, None]
+    mask = causal & valid_k
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs * mask  # kill fully-masked contributions exactly
+    denom = jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bqk,bkd->bqd", probs / jnp.maximum(denom, 1e-30), v)
+    valid_q = (jnp.arange(s)[None, :] < lengths[:, None])[..., None]
+    return jnp.where(valid_q, out, 0.0)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """One query token attends over the first `lengths` cached KV entries.
+
+    Args:
+      q: [BH, Dh] query for the current token.
+      k_cache, v_cache: [BH, S_max, Dh] KV cache (garbage beyond lengths).
+      lengths: [BH] int32, number of valid cache entries (inclusive of the
+        current token, whose KV must already be written into the cache).
+
+    Returns:
+      [BH, Dh] attention output.
+    """
+    bh, s_max, dh = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    scores = jnp.einsum("bd,bkd->bk", q, k_cache) * scale  # [BH, S_max]
+    valid = jnp.arange(s_max)[None, :] < lengths[:, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs * valid
+    denom = jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bk,bkd->bd", probs / jnp.maximum(denom, 1e-30), v_cache)

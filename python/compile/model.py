@@ -1,0 +1,244 @@
+"""Layer-2 JAX model: a GPT-style decoder-only transformer with disaggregated
+prefill / decode entry points.
+
+This is the compute graph the Rust coordinator serves. It exists only at
+compile time: `aot.py` lowers `prefill` and `decode_step` (per batch/seq
+variant) to HLO text, and the Rust runtime executes those modules via PJRT.
+Attention inside both entry points is the Layer-1 Pallas kernel
+(interpret=True), so the kernels lower into the same HLO modules.
+
+The disaggregation contract (what makes prefill/decode splittable across
+replicas) is the KV-cache shape discipline:
+
+  prefill(params, tokens[B,S], lengths[B])
+      -> (logits[B,V], k_cache[L,B,S_max,H], v_cache[L,B,S_max,H])
+  decode_step(params, token[B], pos[B], k_cache, v_cache)
+      -> (logits[B,V], k_cache', v_cache')
+
+Caches are fixed-capacity buffers; prefill fills positions [0, S), decode
+appends at `pos`. A prefill replica's output caches are exactly a decode
+replica's input caches — the Rust KV-transfer path moves those literals
+(that movement is the KV communication the paper schedules).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import flash_prefill, paged_decode
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration of one transformer variant."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    vocab: int
+    max_seq: int  # KV-cache capacity (prefill len + decode budget)
+    mlp_ratio: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_params(self) -> int:
+        return sum(int(np.prod(s)) for _, s in param_entries(self))
+
+
+# The tiny config drives tests + quickstart; gpt-100m is the ~100M-parameter
+# end-to-end driver model (examples/e2e_serve.rs).
+TINY = ModelConfig("tiny", n_layers=4, d_model=256, n_heads=8, vocab=512, max_seq=192)
+GPT_100M = ModelConfig(
+    "gpt-100m", n_layers=12, d_model=768, n_heads=12, vocab=8192, max_seq=640
+)
+
+CONFIGS = {c.name: c for c in (TINY, GPT_100M)}
+
+
+def param_entries(cfg: ModelConfig):
+    """Deterministic flat ordering of all parameter tensors.
+
+    This ordering IS the ABI between aot.py (which writes the blob and lists
+    module parameters in this order) and the Rust runtime (which feeds
+    literals in this order). Do not reorder.
+    """
+    h, m = cfg.d_model, cfg.d_model * cfg.mlp_ratio
+    entries = [
+        ("tok_emb", (cfg.vocab, h)),
+        ("pos_emb", (cfg.max_seq, h)),
+    ]
+    for l in range(cfg.n_layers):
+        entries += [
+            (f"l{l}.ln1_scale", (h,)),
+            (f"l{l}.ln1_bias", (h,)),
+            (f"l{l}.wqkv", (h, 3 * h)),
+            (f"l{l}.bqkv", (3 * h,)),
+            (f"l{l}.wo", (h, h)),
+            (f"l{l}.bo", (h,)),
+            (f"l{l}.ln2_scale", (h,)),
+            (f"l{l}.ln2_bias", (h,)),
+            (f"l{l}.w1", (h, m)),
+            (f"l{l}.b1", (m,)),
+            (f"l{l}.w2", (m, h)),
+            (f"l{l}.b2", (h,)),
+        ]
+    entries += [("lnf_scale", (h,)), ("lnf_bias", (h,))]
+    return entries
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Seeded deterministic initialization; returns the flat tuple of arrays."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in param_entries(cfg):
+        if name.endswith(("_scale",)):
+            arr = np.ones(shape, np.float32)
+        elif name.endswith(("_bias",)) or name.startswith("b", name.rfind(".") + 1):
+            arr = np.zeros(shape, np.float32)
+        else:
+            arr = rng.normal(0.0, 0.02, size=shape).astype(np.float32)
+        out.append(jnp.asarray(arr))
+    return tuple(out)
+
+
+def _unflatten(cfg: ModelConfig, params):
+    names = [n for n, _ in param_entries(cfg)]
+    assert len(names) == len(params), (len(names), len(params))
+    return dict(zip(names, params))
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + eps) * scale + bias
+
+
+def _gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def _split_heads(x, cfg):
+    # [B, S, H] -> [B*nh, S, Dh]
+    b, s, _ = x.shape
+    x = x.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    return x.reshape(b * cfg.n_heads, s, cfg.head_dim)
+
+
+def _merge_heads(x, b, cfg):
+    # [B*nh, S, Dh] -> [B, S, H]
+    s = x.shape[1]
+    x = x.reshape(b, cfg.n_heads, s, cfg.head_dim).transpose(0, 2, 1, 3)
+    return x.reshape(b, s, cfg.d_model)
+
+
+def prefill(cfg: ModelConfig, params, tokens, lengths, *, interpret=True):
+    """Prefill entry point. See module docstring for the signature contract."""
+    p = _unflatten(cfg, params)
+    b, s = tokens.shape
+    assert s <= cfg.max_seq
+    x = p["tok_emb"][tokens] + p["pos_emb"][:s][None, :, :]
+    k_cache = jnp.zeros((cfg.n_layers, b, cfg.max_seq, cfg.d_model), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+    lens_bh = jnp.repeat(lengths, cfg.n_heads)  # [B*nh]
+
+    for l in range(cfg.n_layers):
+        h = _layernorm(x, p[f"l{l}.ln1_scale"], p[f"l{l}.ln1_bias"])
+        qkv = h @ p[f"l{l}.wqkv"] + p[f"l{l}.bqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)  # each [B, S, H]
+        att = flash_prefill(
+            _split_heads(q, cfg),
+            _split_heads(k, cfg),
+            _split_heads(v, cfg),
+            lens_bh,
+            interpret=interpret,
+        )
+        att = _merge_heads(att, b, cfg)
+        x = x + att @ p[f"l{l}.wo"] + p[f"l{l}.bo"]
+        h = _layernorm(x, p[f"l{l}.ln2_scale"], p[f"l{l}.ln2_bias"])
+        x = x + _gelu(h @ p[f"l{l}.w1"] + p[f"l{l}.b1"]) @ p[f"l{l}.w2"] + p[f"l{l}.b2"]
+        k_cache = lax.dynamic_update_slice(k_cache, k[None], (l, 0, 0, 0))
+        v_cache = lax.dynamic_update_slice(v_cache, v[None], (l, 0, 0, 0))
+
+    x = _layernorm(x, p["lnf_scale"], p["lnf_bias"])
+    # Hidden state of the last *real* token per sequence.
+    idx = jnp.clip(lengths - 1, 0, s - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    logits = last @ p["tok_emb"].T
+    return logits, k_cache, v_cache
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, k_cache, v_cache, *, interpret=True):
+    """One decode step. `pos` is the 0-based position the new token occupies;
+    its KV is written into the caches at `pos` and attention runs over
+    positions [0, pos]."""
+    p = _unflatten(cfg, params)
+    b = token.shape[0]
+    x = p["tok_emb"][token] + p["pos_emb"][pos]
+    lens_bh = jnp.repeat(pos + 1, cfg.n_heads)
+
+    def write_at(cache_l, upd, positions):
+        # cache_l: [B, S_max, H], upd: [B, H], positions: [B]
+        def one(c, u, pp):
+            return lax.dynamic_update_slice(c, u[None, :], (pp, 0))
+
+        return jnp.stack([one(cache_l[i], upd[i], positions[i]) for i in range(b)])
+
+    for l in range(cfg.n_layers):
+        h = _layernorm(x, p[f"l{l}.ln1_scale"], p[f"l{l}.ln1_bias"])
+        qkv = h @ p[f"l{l}.wqkv"] + p[f"l{l}.bqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)  # each [B, H]
+        kc_l = write_at(k_cache[l], k, pos)
+        vc_l = write_at(v_cache[l], v, pos)
+        k_cache = k_cache.at[l].set(kc_l)
+        v_cache = v_cache.at[l].set(vc_l)
+        # [B, H] -> [B*nh, Dh]; caches [B, S_max, H] -> [B*nh, S_max, Dh]
+        q_h = q.reshape(b * cfg.n_heads, cfg.head_dim)
+        kc_h = kc_l.reshape(b, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+        kc_h = kc_h.transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, cfg.max_seq, cfg.head_dim)
+        vc_h = vc_l.reshape(b, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+        vc_h = vc_h.transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, cfg.max_seq, cfg.head_dim)
+        att = paged_decode(q_h, kc_h, vc_h, lens_bh, interpret=interpret)
+        att = att.reshape(b, cfg.d_model)
+        x = x + att @ p[f"l{l}.wo"] + p[f"l{l}.bo"]
+        h = _layernorm(x, p[f"l{l}.ln2_scale"], p[f"l{l}.ln2_bias"])
+        x = x + _gelu(h @ p[f"l{l}.w1"] + p[f"l{l}.b1"]) @ p[f"l{l}.w2"] + p[f"l{l}.b2"]
+
+    x = _layernorm(x, p["lnf_scale"], p["lnf_bias"])
+    logits = x @ p["tok_emb"].T
+    return logits, k_cache, v_cache
+
+
+def forward_full_ref(cfg: ModelConfig, params, tokens):
+    """Oracle: plain full-sequence forward (no kernels, no caches).
+
+    Returns logits for every position [B, S, V]; used by tests to check
+    prefill+decode equivalence.
+    """
+    p = _unflatten(cfg, params)
+    b, s = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][:s][None, :, :]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    for l in range(cfg.n_layers):
+        h = _layernorm(x, p[f"l{l}.ln1_scale"], p[f"l{l}.ln1_bias"])
+        qkv = h @ p[f"l{l}.wqkv"] + p[f"l{l}.bqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        qh = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+        kh = k.reshape(b, s, cfg.n_heads, cfg.head_dim)
+        vh = v.reshape(b, s, cfg.n_heads, cfg.head_dim)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qh, kh) / np.sqrt(cfg.head_dim)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+        probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+        att = jnp.einsum("bhqk,bkhd->bqhd", probs, vh).reshape(b, s, cfg.d_model)
+        x = x + att @ p[f"l{l}.wo"] + p[f"l{l}.bo"]
+        h = _layernorm(x, p[f"l{l}.ln2_scale"], p[f"l{l}.ln2_bias"])
+        x = x + _gelu(h @ p[f"l{l}.w1"] + p[f"l{l}.b1"]) @ p[f"l{l}.w2"] + p[f"l{l}.b2"]
+    x = _layernorm(x, p["lnf_scale"], p["lnf_bias"])
+    return x @ p["tok_emb"].T

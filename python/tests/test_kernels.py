@@ -1,0 +1,126 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The hypothesis sweeps cover shapes, block sizes, and ragged lengths —
+the CORE correctness signal for the compiled artifacts (DESIGN.md §8).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    flash_prefill,
+    paged_decode,
+    decode_attention_ref,
+    prefill_attention_ref,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+class TestFlashPrefill:
+    def test_matches_ref_full_lengths(self):
+        q, k, v = rand(4, 128, 32), rand(4, 128, 32), rand(4, 128, 32)
+        lengths = jnp.full((4,), 128, jnp.int32)
+        out = flash_prefill(q, k, v, lengths)
+        ref = prefill_attention_ref(q, k, v, lengths)
+        np.testing.assert_allclose(out, ref, atol=2e-5)
+
+    def test_ragged_lengths(self):
+        q, k, v = rand(5, 64, 16), rand(5, 64, 16), rand(5, 64, 16)
+        lengths = jnp.asarray([1, 2, 33, 64, 17], jnp.int32)
+        out = flash_prefill(q, k, v, lengths, block_q=32, block_k=32)
+        ref = prefill_attention_ref(q, k, v, lengths)
+        np.testing.assert_allclose(out, ref, atol=2e-5)
+
+    def test_rows_past_length_are_zero(self):
+        q, k, v = rand(2, 64, 16), rand(2, 64, 16), rand(2, 64, 16)
+        lengths = jnp.asarray([10, 64], jnp.int32)
+        out = np.asarray(flash_prefill(q, k, v, lengths))
+        assert np.all(out[0, 10:] == 0.0)
+        assert np.any(out[0, :10] != 0.0)
+
+    def test_causality(self):
+        # Changing K/V beyond a query's position must not change its output.
+        q, k, v = rand(1, 64, 16), rand(1, 64, 16), rand(1, 64, 16)
+        lengths = jnp.asarray([64], jnp.int32)
+        base = np.asarray(flash_prefill(q, k, v, lengths))
+        k2 = k.at[0, 40:].set(99.0)
+        v2 = v.at[0, 40:].set(-99.0)
+        pert = np.asarray(flash_prefill(q, k2, v2, lengths))
+        np.testing.assert_allclose(base[0, :40], pert[0, :40], atol=2e-5)
+        assert not np.allclose(base[0, 40:], pert[0, 40:])
+
+    def test_rejects_indivisible_blocks(self):
+        q = rand(1, 96, 8)
+        with pytest.raises(ValueError):
+            flash_prefill(q, q, q, jnp.asarray([96], jnp.int32), block_q=64, block_k=64)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        bh=st.integers(1, 6),
+        s_pow=st.integers(4, 7),  # S in {16..128}
+        dh=st.sampled_from([8, 16, 32]),
+        bq=st.sampled_from([16, 32, 64]),
+        bk=st.sampled_from([16, 32, 64]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, bh, s_pow, dh, bq, bk, seed):
+        s = 2**s_pow
+        rng = np.random.default_rng(seed)
+        q, k, v = (jnp.asarray(rng.standard_normal((bh, s, dh)), jnp.float32) for _ in range(3))
+        lengths = jnp.asarray(rng.integers(1, s + 1, bh), jnp.int32)
+        out = flash_prefill(q, k, v, lengths, block_q=bq, block_k=bk)
+        ref = prefill_attention_ref(q, k, v, lengths)
+        np.testing.assert_allclose(out, ref, atol=3e-5)
+
+
+class TestPagedDecode:
+    def test_matches_ref(self):
+        q = rand(6, 32)
+        kc, vc = rand(6, 128, 32), rand(6, 128, 32)
+        lengths = jnp.asarray([1, 5, 64, 128, 100, 33], jnp.int32)
+        out = paged_decode(q, kc, vc, lengths)
+        ref = decode_attention_ref(q, kc, vc, lengths)
+        np.testing.assert_allclose(out, ref, atol=2e-5)
+
+    def test_stale_cache_entries_ignored(self):
+        q = rand(1, 16)
+        kc, vc = rand(1, 64, 16), rand(1, 64, 16)
+        lengths = jnp.asarray([20], jnp.int32)
+        base = np.asarray(paged_decode(q, kc, vc, lengths, page_size=16))
+        kc2 = kc.at[0, 20:].set(1e3)  # garbage beyond the live region
+        vc2 = vc.at[0, 20:].set(-1e3)
+        pert = np.asarray(paged_decode(q, kc2, vc2, lengths, page_size=16))
+        np.testing.assert_allclose(base, pert, atol=2e-5)
+
+    def test_rejects_bad_page_size(self):
+        q = rand(1, 8)
+        kc = rand(1, 96, 8)
+        with pytest.raises(ValueError):
+            paged_decode(q, kc, kc, jnp.asarray([5], jnp.int32), page_size=64)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        bh=st.integers(1, 8),
+        s_max=st.sampled_from([32, 64, 128, 192]),
+        dh=st.sampled_from([8, 16, 32]),
+        page=st.sampled_from([16, 32, 64]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, bh, s_max, dh, page, seed):
+        if s_max % page != 0:
+            return
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.standard_normal((bh, dh)), jnp.float32)
+        kc = jnp.asarray(rng.standard_normal((bh, s_max, dh)), jnp.float32)
+        vc = jnp.asarray(rng.standard_normal((bh, s_max, dh)), jnp.float32)
+        lengths = jnp.asarray(rng.integers(1, s_max + 1, bh), jnp.int32)
+        out = paged_decode(q, kc, vc, lengths, page_size=page)
+        ref = decode_attention_ref(q, kc, vc, lengths)
+        np.testing.assert_allclose(out, ref, atol=3e-5)

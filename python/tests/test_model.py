@@ -1,0 +1,113 @@
+"""L2 correctness: the disaggregated prefill/decode entry points against the
+plain full-sequence oracle, including the KV handoff contract."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+CFG = M.TINY
+PARAMS = M.init_params(CFG, seed=0)
+RNG = np.random.default_rng(1)
+
+
+def random_tokens(b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, CFG.vocab, (b, s)), jnp.int32)
+
+
+class TestPrefill:
+    def test_logits_match_full_forward(self):
+        tokens = random_tokens(3, 64, 2)
+        lengths = jnp.asarray([64, 20, 1], jnp.int32)
+        logits, _, _ = M.prefill(CFG, PARAMS, tokens, lengths)
+        full = M.forward_full_ref(CFG, PARAMS, tokens)
+        for i, L in enumerate([64, 20, 1]):
+            np.testing.assert_allclose(
+                logits[i], full[i, L - 1], atol=5e-4,
+                err_msg=f"row {i} len {L}")
+
+    def test_padding_invariance(self):
+        # Tokens beyond `length` must not affect the logits.
+        t1 = random_tokens(1, 64, 3)
+        t2 = t1.at[0, 30:].set(7)
+        lengths = jnp.asarray([30], jnp.int32)
+        l1, _, _ = M.prefill(CFG, PARAMS, t1, lengths)
+        l2, _, _ = M.prefill(CFG, PARAMS, t2, lengths)
+        np.testing.assert_allclose(l1, l2, atol=1e-5)
+
+    def test_kv_cache_written_in_prefix(self):
+        tokens = random_tokens(2, 64, 4)
+        lengths = jnp.asarray([64, 10], jnp.int32)
+        _, kc, vc = M.prefill(CFG, PARAMS, tokens, lengths)
+        assert kc.shape == (CFG.n_layers, 2, CFG.max_seq, CFG.d_model)
+        # Positions beyond the prefill window are zero (cache capacity).
+        assert np.all(np.asarray(kc)[:, :, 64:, :] == 0.0)
+        assert np.any(np.asarray(kc)[:, 0, :64, :] != 0.0)
+        assert vc.shape == kc.shape
+
+
+class TestDecodeChain:
+    @settings(max_examples=8, deadline=None)
+    @given(s0=st.integers(2, 40), steps=st.integers(1, 6), seed=st.integers(0, 999))
+    def test_incremental_equals_full_forward(self, s0, steps, seed):
+        # prefill(s0) + N greedy decode_steps == full forward on the grown
+        # sequence, step by step.
+        rng = np.random.default_rng(seed)
+        prompt = rng.integers(0, CFG.vocab, s0)
+        tokens = np.zeros((1, 64), np.int32)
+        tokens[0, :s0] = prompt
+        logits, kc, vc = M.prefill(
+            CFG, PARAMS, jnp.asarray(tokens), jnp.asarray([s0], jnp.int32)
+        )
+        seq = list(prompt)
+        pos = s0
+        nxt = int(jnp.argmax(logits[0]))
+        for _ in range(steps):
+            seq.append(nxt)
+            full = M.forward_full_ref(CFG, PARAMS, jnp.asarray([seq], jnp.int32))
+            dl, kc, vc = M.decode_step(
+                CFG,
+                PARAMS,
+                jnp.asarray([nxt], jnp.int32),
+                jnp.asarray([pos], jnp.int32),
+                kc,
+                vc,
+            )
+            np.testing.assert_allclose(dl[0], full[0, -1], atol=5e-4)
+            nxt = int(jnp.argmax(dl[0]))
+            pos += 1
+
+    def test_batch_independence(self):
+        # A request's decode logits must not depend on its batch neighbors —
+        # this is what lets the decode worker mix unrelated requests.
+        tokens = random_tokens(2, 64, 5)
+        lengths = jnp.asarray([30, 50], jnp.int32)
+        _, kc, vc = M.prefill(CFG, PARAMS, tokens, lengths)
+        tok = jnp.asarray([3, 9], jnp.int32)
+        dl2, _, _ = M.decode_step(CFG, PARAMS, tok, lengths, kc, vc)
+        # Same request 0 alone (batch 1 slice of the caches).
+        t0 = tokens[:1]
+        _, kc0, vc0 = M.prefill(CFG, PARAMS, t0, lengths[:1])
+        dl1, _, _ = M.decode_step(CFG, PARAMS, tok[:1], lengths[:1], kc0, vc0)
+        np.testing.assert_allclose(dl2[0], dl1[0], atol=5e-4)
+
+
+class TestParams:
+    def test_param_entries_cover_init(self):
+        entries = M.param_entries(CFG)
+        assert len(entries) == len(PARAMS)
+        for (name, shape), arr in zip(entries, PARAMS):
+            assert tuple(arr.shape) == tuple(shape), name
+
+    def test_deterministic_init(self):
+        a = M.init_params(CFG, seed=0)
+        b = M.init_params(CFG, seed=0)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+        c = M.init_params(CFG, seed=1)
+        assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+    def test_param_count_matches_config(self):
+        assert abs(CFG.n_params - sum(int(np.prod(p.shape)) for p in PARAMS)) == 0

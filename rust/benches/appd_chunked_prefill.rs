@@ -1,0 +1,8 @@
+//! Bench: regenerate Appendix D (chunked prefill vs plain colocation).
+use hexgen2::experiments::{tables, ExpOpts};
+use hexgen2::model::OPT_30B;
+
+fn main() {
+    tables::appd_chunked_prefill(&OPT_30B, &ExpOpts::from_env())
+        .print("Appendix D: chunked prefill vs plain colocation (OPT-30B)");
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Fig. 10 (scheduler convergence: ours vs
+//! random-swap vs genetic, het1) and time one full scheduling run.
+use hexgen2::cluster::settings;
+use hexgen2::experiments::{convergence, ExpOpts};
+use hexgen2::model::OPT_30B;
+use hexgen2::scheduler::{schedule, ScheduleOptions};
+use hexgen2::util::bench;
+use hexgen2::workload::WorkloadKind;
+
+fn main() {
+    let opts = ExpOpts::from_env();
+    let runs = if opts.quick { 3 } else { 15 };
+    convergence::fig10_convergence(&OPT_30B, runs, &opts)
+        .print(&format!("Fig. 10: scheduler convergence (het1, OPT-30B, {runs} runs)"));
+    let c = settings::het1();
+    bench::time("fig10/full-schedule-het1-opt30b", 1, 5, || {
+        std::hint::black_box(schedule(&c, &OPT_30B, &ScheduleOptions::new(WorkloadKind::Hphd)));
+    });
+}

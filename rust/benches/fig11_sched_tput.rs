@@ -1,0 +1,9 @@
+//! Bench: regenerate paper Fig. 11 (simulated throughput of the placements
+//! each scheduling strategy finds, het1).
+use hexgen2::experiments::{convergence, ExpOpts};
+use hexgen2::model::OPT_30B;
+
+fn main() {
+    convergence::fig11_throughput(&OPT_30B, &ExpOpts::from_env())
+        .print("Fig. 11: scheduler-variant throughput (het1, OPT-30B)");
+}

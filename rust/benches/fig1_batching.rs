@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Fig. 1 (batching effects on prefill vs decode)
+//! and time the cost-model evaluation that produces it.
+use hexgen2::experiments::batching;
+use hexgen2::util::bench;
+
+fn main() {
+    let (p, d) = batching::fig1_batching();
+    p.print("Fig. 1a: prefill batching (LLaMA-2-7B, 1xA100)");
+    d.print("Fig. 1b: decode batching (LLaMA-2-7B, 1xA100)");
+    bench::time("fig1/costmodel-eval", 3, 20, || {
+        std::hint::black_box(batching::fig1_batching());
+    });
+}

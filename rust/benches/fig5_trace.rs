@@ -1,0 +1,15 @@
+//! Bench: regenerate paper Fig. 5 (online trace length distribution) and
+//! time the trace sampler.
+use hexgen2::experiments::batching;
+use hexgen2::util::bench;
+use hexgen2::workload::{Trace, WorkloadKind};
+
+fn main() {
+    batching::fig5_trace(20_000, 7).print("Fig. 5: online trace length distribution");
+    bench::time("fig5/sample-20k-conversations", 1, 10, || {
+        std::hint::black_box(batching::fig5_trace(20_000, 7));
+    });
+    bench::time("fig5/online-trace-gen", 1, 10, || {
+        std::hint::black_box(Trace::online(WorkloadKind::Online, 5.0, 600.0, 1));
+    });
+}

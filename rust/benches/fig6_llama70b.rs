@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Fig. 6 (LLaMA-2-70B end-to-end throughput grid).
+//! HEXGEN2_FULL=1 runs all four heterogeneous settings at full trace sizes.
+use hexgen2::experiments::{endtoend, ExpOpts};
+use hexgen2::model::LLAMA2_70B;
+
+fn main() {
+    let opts = ExpOpts::from_env();
+    let hets: &[&str] = if opts.quick { &["het1", "het2"] } else { &["het1", "het2", "het3", "het4"] };
+    let t = endtoend::fig6_7_grid(&LLAMA2_70B, hets, &opts);
+    t.print("Fig. 6: LLaMA-2-70B throughput (tokens/s)");
+    for (s, sp) in endtoend::speedup_summary(&t) {
+        println!("  {s}: HEXGEN-2 / HEXGEN geo-mean speedup = {sp:.2}x");
+    }
+}

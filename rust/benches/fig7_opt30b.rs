@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Fig. 7 (OPT-30B end-to-end throughput grid).
+use hexgen2::experiments::{endtoend, ExpOpts};
+use hexgen2::model::OPT_30B;
+
+fn main() {
+    let opts = ExpOpts::from_env();
+    let hets: &[&str] = if opts.quick { &["het1", "het4"] } else { &["het1", "het2", "het3", "het4"] };
+    let t = endtoend::fig6_7_grid(&OPT_30B, hets, &opts);
+    t.print("Fig. 7: OPT-30B throughput (tokens/s)");
+    for (s, sp) in endtoend::speedup_summary(&t) {
+        println!("  {s}: HEXGEN-2 / HEXGEN geo-mean speedup = {sp:.2}x");
+    }
+}

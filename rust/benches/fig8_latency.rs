@@ -1,0 +1,9 @@
+//! Bench: regenerate paper Fig. 8 (online latency / SLO attainment).
+use hexgen2::experiments::{endtoend, ExpOpts};
+use hexgen2::model::LLAMA2_70B;
+
+fn main() {
+    let opts = ExpOpts::from_env();
+    let hets: &[&str] = if opts.quick { &["het1"] } else { &["het1", "het2", "het3", "het4"] };
+    endtoend::fig8_latency(&LLAMA2_70B, hets, &opts).print("Fig. 8: online latency (LLaMA-2-70B)");
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate paper Fig. 9 (70% price-budget cost-efficiency study).
+use hexgen2::experiments::{endtoend, ExpOpts};
+use hexgen2::model::LLAMA2_70B;
+
+fn main() {
+    endtoend::fig9_budget(&LLAMA2_70B, &ExpOpts::from_env())
+        .print("Fig. 9: 70% budget (het5) vs DistServe homogeneous (LLaMA-2-70B)");
+}

@@ -1,0 +1,25 @@
+//! gpt-100m live-path hot-spot bench (§Perf): one decode step at batch 8 —
+//! the dominant cost of the e2e driver. Skips silently if only the tiny
+//! artifacts were built.
+use hexgen2::runtime::{artifacts_dir, load_manifests, ModelRuntime};
+use hexgen2::util::bench;
+
+fn main() {
+    let ok = load_manifests(&artifacts_dir()).map(|m| m.contains_key("gpt-100m")).unwrap_or(false);
+    if !ok {
+        eprintln!("skipping gpt100m_runtime bench: build artifacts with gpt-100m");
+        return;
+    }
+    let rt = ModelRuntime::load_filtered(&artifacts_dir(), "gpt-100m", |m| {
+        m.kind == "decode" && m.batch == 8
+    })
+    .expect("load");
+    let dims = rt.manifest.cache_dims(8);
+    let n: usize = dims.iter().product();
+    let (k, v) = (vec![0f32; n], vec![0f32; n]);
+    let token = vec![1i32; 8];
+    let pos = vec![5i32; 8];
+    bench::time("gpt100m/decode-step-b8", 2, 10, || {
+        std::hint::black_box(rt.decode_step(8, &token, &pos, &k, &v).unwrap());
+    });
+}

@@ -1,0 +1,57 @@
+//! Live-path micro-benchmarks (the §Perf L3 hot path): prefill call and
+//! decode-step call latency through the PJRT runtime, tiny model.
+//! These are the before/after numbers in EXPERIMENTS.md §Perf.
+use hexgen2::runtime::{artifacts_dir, ModelRuntime};
+use hexgen2::util::bench;
+
+fn main() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping live_runtime bench: run `make artifacts`");
+        return;
+    }
+    let rt = ModelRuntime::load_filtered(&artifacts_dir(), "tiny", |m| {
+        (m.kind == "prefill" && (m.batch, m.seq) == (4, 128)) || (m.kind == "decode" && m.batch == 8)
+    })
+    .expect("load");
+
+    let tokens: Vec<i32> = (0..4 * 128).map(|i| (i % 512) as i32).collect();
+    let lengths = vec![128i32, 100, 64, 32];
+    bench::time("live/prefill-b4-s128", 3, 30, || {
+        std::hint::black_box(rt.prefill(4, 128, &tokens, &lengths).unwrap());
+    });
+
+    let out = rt.prefill(4, 128, &tokens, &lengths).unwrap();
+    // Build a batch-8 cache (pad with zeros) for the decode module.
+    let dims8 = rt.manifest.cache_dims(8);
+    let n8: usize = dims8.iter().product();
+    let mut k8 = vec![0f32; n8];
+    let mut v8 = vec![0f32; n8];
+    // splice the 4 prefilled requests into slots 0..4
+    let dims4 = rt.manifest.cache_dims(4);
+    let pane = dims4[2] * dims4[3];
+    for l in 0..dims4[0] {
+        for b in 0..4 {
+            let src = (l * 4 + b) * pane;
+            let dst = (l * 8 + b) * pane;
+            k8[dst..dst + pane].copy_from_slice(&out.k_cache[src..src + pane]);
+            v8[dst..dst + pane].copy_from_slice(&out.v_cache[src..src + pane]);
+        }
+    }
+    let token = vec![1i32; 8];
+    let pos = vec![128i32, 100, 64, 32, 1, 1, 1, 1];
+    bench::time("live/decode-step-b8", 3, 50, || {
+        std::hint::black_box(rt.decode_step(8, &token, &pos, &k8, &v8).unwrap());
+    });
+
+    // Decode step throughput including the cache round-trip (the KV state
+    // carried across steps).
+    let mut k = k8.clone();
+    let mut v = v8.clone();
+    bench::time("live/decode-chain-10-steps", 1, 10, || {
+        for _ in 0..10 {
+            let d = rt.decode_step(8, &token, &pos, &k, &v).unwrap();
+            k = d.k_cache;
+            v = d.v_cache;
+        }
+    });
+}

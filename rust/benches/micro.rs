@@ -1,0 +1,75 @@
+//! Micro-benchmarks of the scheduler/simulator hot paths (the §Perf targets
+//! of EXPERIMENTS.md): push-relabel max-flow, spectral partition, partition
+//! evaluation, full schedule, discrete-event simulation, and the router's
+//! per-request dispatch cost.
+use hexgen2::cluster::settings;
+use hexgen2::costmodel::TaskProfile;
+use hexgen2::model::{LLAMA2_70B, OPT_30B};
+use hexgen2::scheduler::{self, maxflow::FlowNetwork, spectral, strategy::StrategyCache, ScheduleOptions};
+use hexgen2::simulator::run_disaggregated;
+use hexgen2::util::bench;
+use hexgen2::util::rng::Rng;
+use hexgen2::workload::{Trace, WorkloadKind};
+
+fn main() {
+    // Max-flow on a random dense-ish graph.
+    let mut rng = Rng::new(1);
+    let n = 64;
+    let mut edges = Vec::new();
+    for _ in 0..n * 6 {
+        let u = rng.range(0, n);
+        let mut v = rng.range(0, n);
+        if u == v { v = (v + 1) % n; }
+        edges.push((u, v, rng.range_f64(0.1, 10.0)));
+    }
+    bench::time("micro/push-relabel-64n-384e", 3, 50, || {
+        let mut g = FlowNetwork::new(n);
+        for &(u, v, c) in &edges { g.add_edge(u, v, c); }
+        std::hint::black_box(g.max_flow(0, n - 1));
+    });
+
+    // Spectral partition of het1 (20 devices) and a 64-GPU synthetic.
+    let het1 = settings::het1();
+    let devs: Vec<usize> = (0..het1.n()).collect();
+    bench::time("micro/spectral-partition-het1-k6", 3, 50, || {
+        std::hint::black_box(spectral::partition_k(&het1, &devs, 6));
+    });
+    let syn = settings::synthetic(64, 3);
+    let sdevs: Vec<usize> = (0..syn.n()).collect();
+    bench::time("micro/spectral-partition-64gpu-k8", 1, 10, || {
+        std::hint::black_box(spectral::partition_k(&syn, &sdevs, 8));
+    });
+
+    // Partition evaluation (strategy search + type assignment + max-flow).
+    let task = TaskProfile::new(1, 1020.0, 211.0);
+    let groups = spectral::partition_k(&het1, &devs, 6);
+    bench::time("micro/evaluate-partition-cold", 1, 10, || {
+        let mut cache = StrategyCache::new();
+        std::hint::black_box(scheduler::evaluate_partition(
+            &het1, &LLAMA2_70B, &task, 600.0, &groups, 6, &mut cache,
+        ));
+    });
+    let mut warm = StrategyCache::new();
+    scheduler::evaluate_partition(&het1, &LLAMA2_70B, &task, 600.0, &groups, 6, &mut warm);
+    bench::time("micro/evaluate-partition-warm", 3, 50, || {
+        std::hint::black_box(scheduler::evaluate_partition(
+            &het1, &LLAMA2_70B, &task, 600.0, &groups, 6, &mut warm,
+        ));
+    });
+
+    // Full schedule (paper reports 90-120s on the real testbed).
+    bench::time("micro/schedule-het1-llama70b", 1, 5, || {
+        std::hint::black_box(scheduler::schedule(
+            &het1,
+            &LLAMA2_70B,
+            &ScheduleOptions::new(WorkloadKind::Online),
+        ));
+    });
+
+    // Discrete-event simulation of 300 offline requests.
+    let r = scheduler::schedule(&het1, &OPT_30B, &ScheduleOptions::new(WorkloadKind::Hphd)).unwrap();
+    let trace = Trace::offline(WorkloadKind::Hphd, 300, 5);
+    bench::time("micro/simulate-300req-hphd", 1, 10, || {
+        std::hint::black_box(run_disaggregated(&het1, &OPT_30B, &r.placement, &trace));
+    });
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Table 2 (chosen placements per setting).
+use hexgen2::experiments::{tables, ExpOpts};
+use hexgen2::model::{LLAMA2_70B, OPT_30B};
+
+fn main() {
+    let opts = ExpOpts::from_env();
+    let hets: &[&str] = if opts.quick { &["het1", "het4"] } else { &["het1", "het2", "het3", "het4"] };
+    println!("=== Table 2: GPU deployment, strategy, and type ===");
+    for setting in hets {
+        for m in [&LLAMA2_70B, &OPT_30B] {
+            if let Some(s) = tables::table2_placement(setting, m, &opts) {
+                println!("--- {s}");
+            }
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate paper Table 3 (framework comparison incl. vLLM).
+use hexgen2::experiments::{tables, ExpOpts};
+use hexgen2::model::LLAMA2_70B;
+
+fn main() {
+    tables::table3_frameworks(&LLAMA2_70B, &ExpOpts::from_env())
+        .print("Table 3: framework comparison (LLaMA-2-70B)");
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate paper Table 4 (homogeneous 4xH100 case study).
+use hexgen2::experiments::{tables, ExpOpts};
+use hexgen2::model::OPT_30B;
+
+fn main() {
+    tables::table4_homogeneous(&OPT_30B, &ExpOpts::from_env())
+        .print("Table 4: homogeneous 4xH100 (OPT-30B)");
+}

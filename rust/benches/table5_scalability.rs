@@ -1,0 +1,10 @@
+//! Bench: regenerate paper Table 5 (scheduler convergence time vs cluster
+//! size). Full mode sweeps the paper's 64..320 GPU range.
+use hexgen2::experiments::{tables, ExpOpts};
+use hexgen2::model::LLAMA2_70B;
+
+fn main() {
+    let opts = ExpOpts::from_env();
+    let sizes: Vec<usize> = if opts.quick { vec![16, 32, 64] } else { vec![64, 128, 192, 256, 320] };
+    tables::table5_scalability(&LLAMA2_70B, &sizes, &opts).print("Table 5: scheduler scalability");
+}

@@ -1,0 +1,114 @@
+//! DistServe baseline (Zhong et al., 2024): disaggregated prefill/decode on
+//! a *homogeneous* cluster. DistServe searches per-phase parallelism
+//! (intra-node TP, inter-node PP) and a prefill:decode replica ratio but has
+//! no heterogeneity-aware placement — on a homogeneous cluster that search
+//! is an exhaustive sweep over uniform splits, which we implement directly.
+
+use std::time::Instant;
+
+use crate::cluster::Cluster;
+use crate::costmodel::TaskProfile;
+use crate::model::LlmSpec;
+use crate::scheduler::flownet::evaluate_types;
+use crate::scheduler::strategy::StrategyCache;
+use crate::scheduler::Placement;
+use crate::workload::WorkloadKind;
+
+/// A DistServe deployment (uniform groups, typed).
+#[derive(Clone, Debug)]
+pub struct DistServePlan {
+    pub placement: Placement,
+    pub group_size: usize,
+    pub n_prefill: usize,
+    pub elapsed_s: f64,
+}
+
+/// Enumerate uniform group sizes × prefill counts; evaluate each with the
+/// shared flow-network machinery; return the best.
+pub fn schedule_distserve(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    workload: WorkloadKind,
+) -> Option<DistServePlan> {
+    let t0 = Instant::now();
+    let (s_in, s_out) = workload.mean_lengths();
+    let task = TaskProfile::new(1, s_in, s_out);
+    let n = cluster.n();
+    let mut cache = StrategyCache::new();
+    let mut best: Option<DistServePlan> = None;
+
+    for gs in [1usize, 2, 4, 8] {
+        if gs > n || n % gs != 0 {
+            continue;
+        }
+        let k = n / gs;
+        if k < 2 {
+            continue;
+        }
+        let groups: Vec<Vec<usize>> = (0..k).map(|g| (g * gs..(g + 1) * gs).collect()).collect();
+        for n_prefill in 1..k {
+            let assign: Vec<bool> = (0..k).map(|g| g < n_prefill).collect();
+            if let Some(p) =
+                evaluate_types(cluster, model, &task, 600.0, &groups, &assign, &mut cache)
+            {
+                if best
+                    .as_ref()
+                    .map(|b| p.flow_value > b.placement.flow_value)
+                    .unwrap_or(true)
+                {
+                    best = Some(DistServePlan {
+                        placement: p,
+                        group_size: gs,
+                        n_prefill,
+                        elapsed_s: t0.elapsed().as_secs_f64(),
+                    });
+                }
+            }
+        }
+    }
+    best.map(|mut b| {
+        b.elapsed_s = t0.elapsed().as_secs_f64();
+        b
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::model::{LLAMA2_70B, OPT_30B};
+    use crate::simulator::run_disaggregated;
+    use crate::workload::Trace;
+
+    #[test]
+    fn schedules_homogeneous_cluster() {
+        let c = settings::homogeneous();
+        let plan = schedule_distserve(&c, &LLAMA2_70B, WorkloadKind::Hphd).expect("plan");
+        assert!(plan.placement.tokens_per_s > 0.0);
+        assert!(plan.n_prefill >= 1);
+        // Uniform groups by construction.
+        let sizes: Vec<usize> =
+            plan.placement.groups.iter().map(|g| g.devices.len()).collect();
+        assert!(sizes.windows(2).all(|w| w[0] == w[1]), "{sizes:?}");
+    }
+
+    #[test]
+    fn workload_shifts_phase_ratio() {
+        // HPLD needs relatively more prefill than LPHD (§5.2 finding 3).
+        let c = settings::homogeneous();
+        let hpld = schedule_distserve(&c, &OPT_30B, WorkloadKind::Hpld).unwrap();
+        let lphd = schedule_distserve(&c, &OPT_30B, WorkloadKind::Lphd).unwrap();
+        let frac_h = hpld.n_prefill as f64 / hpld.placement.groups.len() as f64;
+        let frac_l = lphd.n_prefill as f64 / lphd.placement.groups.len() as f64;
+        assert!(frac_h >= frac_l, "HPLD prefill frac {frac_h} < LPHD {frac_l}");
+    }
+
+    #[test]
+    fn plan_simulates() {
+        let c = settings::homogeneous();
+        let plan = schedule_distserve(&c, &OPT_30B, WorkloadKind::Lpld).unwrap();
+        let trace = Trace::offline(WorkloadKind::Lpld, 50, 1);
+        let rep = run_disaggregated(&c, &OPT_30B, &plan.placement, &trace);
+        assert_eq!(rep.records.len(), 50);
+    }
+}

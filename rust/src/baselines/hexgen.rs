@@ -1,0 +1,206 @@
+//! HexGen baseline: heterogeneity-aware *colocated* serving (Jiang et al.,
+//! 2024b). Partitions the cluster into independent model replicas with a
+//! genetic-algorithm search over groupings and HexGen's asymmetric
+//! parallelism per group — but each replica serves both phases (continuous
+//! batching), so it pays the prefill–decode interference HexGen-2 removes.
+
+use std::time::Instant;
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};
+use crate::model::LlmSpec;
+use crate::scheduler::strategy;
+use crate::util::rng::Rng;
+use crate::workload::WorkloadKind;
+
+/// A HexGen deployment: independent colocated replicas.
+#[derive(Clone, Debug)]
+pub struct HexGenPlan {
+    pub replicas: Vec<ReplicaConfig>,
+    /// Estimated aggregate throughput, tokens/s.
+    pub tokens_per_s: f64,
+    pub elapsed_s: f64,
+}
+
+/// Estimated colocated throughput of one replica: in steady state each
+/// "macro-round" prefills a batch and then decodes it to completion, the two
+/// phases serialized on the same GPUs (the interference). tokens/s =
+/// b * s_out / (prefill(b) + decode(b)).
+pub fn colocated_throughput(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    cfg: &ReplicaConfig,
+    task: &TaskProfile,
+) -> f64 {
+    let cm = CostModel::new(cluster, model);
+    let mb = cm.max_decode_batch(cfg, task);
+    if mb == 0 {
+        return 0.0;
+    }
+    let b = mb.min(32);
+    let t = task.with_batch(b);
+    let pf = cm.prefill_latency(cfg, &t);
+    let dec = cm.decode_latency(cfg, &t);
+    b as f64 * task.s_out / (pf + dec)
+}
+
+/// Best colocated strategy for a device group: maximize the colocated
+/// throughput estimate over the same strategy space HexGen-2 searches.
+fn best_colocated(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    group: &[DeviceId],
+    task: &TaskProfile,
+) -> Option<(ReplicaConfig, f64)> {
+    let mut best: Option<(ReplicaConfig, f64)> = None;
+    for cfg in strategy::enumerate_configs(cluster, model, group) {
+        let tput = colocated_throughput(cluster, model, &cfg, task);
+        if tput > 0.0 && best.as_ref().map(|(_, t)| tput > *t).unwrap_or(true) {
+            best = Some((cfg, tput));
+        }
+    }
+    best
+}
+
+fn plan_fitness(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    groups: &[Vec<DeviceId>],
+    task: &TaskProfile,
+) -> (f64, Vec<Option<ReplicaConfig>>) {
+    let mut total = 0.0;
+    let mut cfgs = Vec::new();
+    for g in groups {
+        match best_colocated(cluster, model, g, task) {
+            Some((cfg, t)) => {
+                total += t;
+                cfgs.push(Some(cfg));
+            }
+            None => cfgs.push(None),
+        }
+    }
+    (total, cfgs)
+}
+
+/// GA scheduling of colocated replicas (HexGen's scheduler).
+pub fn schedule_hexgen(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    workload: WorkloadKind,
+    seed: u64,
+    generations: usize,
+) -> Option<HexGenPlan> {
+    let t0 = Instant::now();
+    let (s_in, s_out) = workload.mean_lengths();
+    let task = TaskProfile::new(1, s_in, s_out);
+    // Colocated replicas hold weights + KV for both phases: same memory
+    // sizing rule as HexGen-2 (Appendix A).
+    let k = crate::scheduler::choose_k(cluster, model, &task);
+    let mut rng = Rng::new(seed ^ 0xBE5);
+
+    let n = cluster.n();
+    let random_partition = |rng: &mut Rng| -> Vec<Vec<DeviceId>> {
+        loop {
+            let mut groups = vec![Vec::new(); k];
+            for d in 0..n {
+                groups[rng.range(0, k)].push(d);
+            }
+            if groups.iter().all(|g| !g.is_empty()) {
+                return groups;
+            }
+        }
+    };
+
+    const POP: usize = 10;
+    const ELITE: usize = 3;
+    let mut pop: Vec<(Vec<Vec<DeviceId>>, f64, Vec<Option<ReplicaConfig>>)> = (0..POP)
+        .map(|_| {
+            let g = random_partition(&mut rng);
+            let (f, cfgs) = plan_fitness(cluster, model, &g, &task);
+            (g, f, cfgs)
+        })
+        .collect();
+    pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+    for _gen in 0..generations {
+        let mut children = Vec::new();
+        while children.len() + ELITE < POP {
+            let parent = pop[rng.range(0, ELITE)].0.clone();
+            // Mutate: swap or move between two groups.
+            let mut g = parent;
+            let a = rng.range(0, k);
+            let mut b = rng.range(0, k);
+            if a == b {
+                b = (b + 1) % k;
+            }
+            if rng.bool(0.5) && g[a].len() > 1 {
+                let ia = rng.range(0, g[a].len());
+                let d = g[a].remove(ia);
+                g[b].push(d);
+            } else {
+                let ia = rng.range(0, g[a].len());
+                let ib = rng.range(0, g[b].len());
+                let tmp = g[a][ia];
+                g[a][ia] = g[b][ib];
+                g[b][ib] = tmp;
+            }
+            if g.iter().any(|x| x.is_empty()) {
+                continue;
+            }
+            let (f, cfgs) = plan_fitness(cluster, model, &g, &task);
+            children.push((g, f, cfgs));
+        }
+        pop.truncate(ELITE);
+        pop.extend(children);
+        pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    }
+
+    let (_g, fitness, cfgs) = pop.into_iter().next().unwrap();
+    let replicas: Vec<ReplicaConfig> = cfgs.into_iter().flatten().collect();
+    if replicas.is_empty() {
+        return None;
+    }
+    Some(HexGenPlan { replicas, tokens_per_s: fitness, elapsed_s: t0.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::model::OPT_30B;
+    use crate::simulator::run_colocated;
+    use crate::workload::Trace;
+
+    #[test]
+    fn schedules_heterogeneous_cluster() {
+        let c = settings::het1();
+        let plan = schedule_hexgen(&c, &OPT_30B, WorkloadKind::Hphd, 1, 6).expect("plan");
+        assert!(!plan.replicas.is_empty());
+        assert!(plan.tokens_per_s > 0.0);
+        // Replicas use disjoint devices.
+        let mut seen = std::collections::HashSet::new();
+        for r in &plan.replicas {
+            for d in r.devices() {
+                assert!(seen.insert(d), "device {d} reused");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_runs_in_simulator() {
+        let c = settings::het4();
+        let plan = schedule_hexgen(&c, &OPT_30B, WorkloadKind::Lpld, 2, 4).unwrap();
+        let trace = Trace::offline(WorkloadKind::Lpld, 40, 1);
+        let rep = run_colocated(&c, &OPT_30B, &plan.replicas, &trace, None);
+        assert_eq!(rep.records.len(), 40);
+        assert!(rep.tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn colocated_estimate_positive_when_feasible() {
+        let c = settings::homogeneous_small();
+        let task = TaskProfile::new(1, 512.0, 128.0);
+        let cfg = ReplicaConfig::new(vec![(0..4).collect()], vec![OPT_30B.n_layers]);
+        assert!(colocated_throughput(&c, &OPT_30B, &cfg, &task) > 0.0);
+    }
+}

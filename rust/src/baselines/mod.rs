@@ -1,0 +1,17 @@
+//! Comparator systems from the paper's evaluation (§5.1 "Baselines"):
+//!
+//! - [`hexgen`]: HexGen (Jiang et al., 2024b) — colocated serving over
+//!   heterogeneous GPUs with asymmetric parallelism and a genetic-algorithm
+//!   scheduler. No disaggregation.
+//! - [`distserve`]: DistServe (Zhong et al., 2024) — disaggregated serving
+//!   on a *homogeneous* cluster with per-phase parallelism search.
+//! - [`vllm`]: vLLM-style colocated continuous batching on a homogeneous
+//!   cluster (Appendix F), with optional chunked prefill (Appendix D).
+//!
+//! Each baseline reuses the same cost model and simulator, so differences in
+//! results isolate the *system design* (disaggregation + heterogeneity-aware
+//! scheduling), as in the paper.
+
+pub mod distserve;
+pub mod hexgen;
+pub mod vllm;

@@ -1,0 +1,80 @@
+//! vLLM-style baseline (Appendix F): colocated continuous batching on a
+//! homogeneous cluster. Searches the best uniform (TP, replica count) split
+//! by colocated-throughput estimate; serving behaviour (iteration-level
+//! batching, optional chunked prefill per Appendix D) comes from
+//! `simulator::colocated`.
+
+use crate::cluster::Cluster;
+use crate::costmodel::{ReplicaConfig, TaskProfile};
+use crate::model::LlmSpec;
+use crate::workload::WorkloadKind;
+
+use super::hexgen::colocated_throughput;
+
+/// A vLLM deployment: identical colocated replicas.
+#[derive(Clone, Debug)]
+pub struct VllmPlan {
+    pub replicas: Vec<ReplicaConfig>,
+    pub tensor_parallel: usize,
+    pub tokens_per_s: f64,
+}
+
+/// Pick the best uniform TP degree (replicating the engine across the rest
+/// of the cluster, data-parallel style).
+pub fn schedule_vllm(cluster: &Cluster, model: &LlmSpec, workload: WorkloadKind) -> Option<VllmPlan> {
+    let (s_in, s_out) = workload.mean_lengths();
+    let task = TaskProfile::new(1, s_in, s_out);
+    let n = cluster.n();
+    let mut best: Option<VllmPlan> = None;
+    for tp in [1usize, 2, 4, 8] {
+        if tp > n || n % tp != 0 {
+            continue;
+        }
+        let replicas: Vec<ReplicaConfig> = (0..n / tp)
+            .map(|r| ReplicaConfig::new(vec![(r * tp..(r + 1) * tp).collect()], vec![model.n_layers]))
+            .collect();
+        let tput: f64 = replicas
+            .iter()
+            .map(|cfg| colocated_throughput(cluster, model, cfg, &task))
+            .sum();
+        if tput > 0.0 && best.as_ref().map(|b| tput > b.tokens_per_s).unwrap_or(true) {
+            best = Some(VllmPlan { replicas, tensor_parallel: tp, tokens_per_s: tput });
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::model::{LLAMA2_70B, OPT_30B};
+    use crate::simulator::run_colocated;
+    use crate::workload::Trace;
+
+    #[test]
+    fn picks_feasible_tp() {
+        let c = settings::homogeneous();
+        let plan = schedule_vllm(&c, &LLAMA2_70B, WorkloadKind::Hphd).expect("plan");
+        // 70B needs TP >= 4 on 80G GPUs.
+        assert!(plan.tensor_parallel >= 4, "tp {}", plan.tensor_parallel);
+        assert!(plan.tokens_per_s > 0.0);
+    }
+
+    #[test]
+    fn smaller_model_allows_more_replicas() {
+        let c = settings::homogeneous();
+        let p70 = schedule_vllm(&c, &LLAMA2_70B, WorkloadKind::Lpld).unwrap();
+        let p30 = schedule_vllm(&c, &OPT_30B, WorkloadKind::Lpld).unwrap();
+        assert!(p30.replicas.len() >= p70.replicas.len());
+    }
+
+    #[test]
+    fn plan_simulates() {
+        let c = settings::homogeneous();
+        let plan = schedule_vllm(&c, &OPT_30B, WorkloadKind::Lphd).unwrap();
+        let trace = Trace::offline(WorkloadKind::Lphd, 40, 1);
+        let rep = run_colocated(&c, &OPT_30B, &plan.replicas, &trace, None);
+        assert_eq!(rep.records.len(), 40);
+    }
+}

@@ -1,0 +1,13 @@
+//! Heterogeneous cluster substrate: GPU catalog, topology (bandwidth /
+//! latency matrices), and the paper's six evaluation settings.
+//!
+//! This replaces the paper's RunPod rentals + NCCL bandwidth measurement
+//! (DESIGN.md §1): every downstream component (cost model, scheduler,
+//! simulator) consumes clusters only through this interface.
+
+pub mod gpu;
+pub mod settings;
+pub mod topology;
+
+pub use gpu::{GpuType, ALL_GPU_TYPES};
+pub use topology::{Cluster, Device, DeviceId, LinkTier, NodeSpec};

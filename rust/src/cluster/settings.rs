@@ -1,0 +1,246 @@
+//! The six cluster settings from paper Fig. 4 (§5.1), plus synthetic large
+//! clusters for the Table-5 scalability study.
+//!
+//! Node groupings follow plausible RunPod rental shapes (whole servers of a
+//! single GPU type); inter-node fabrics mix InfiniBand / 100GbE / 10GbE, and
+//! the larger settings span two data centers so the scheduler must route
+//! around "ultra-low cross data center communication" (§5.2 finding 2).
+
+use super::gpu::GpuType::{self, A100, A6000, H100, L40};
+use super::topology::{Cluster, LinkTier, NodeSpec};
+use crate::util::rng::Rng;
+
+fn node(gpu: GpuType, count: usize, dc: usize) -> NodeSpec {
+    NodeSpec { gpu, count, dc }
+}
+
+/// Homogeneous setting: 8xH100 in one server (paper budget $29.52/h).
+pub fn homogeneous() -> Cluster {
+    Cluster::build("homogeneous", &[node(H100, 8, 0)], |_, _| LinkTier::InfiniBand)
+}
+
+/// Heterogeneous setting 1: 2xH100, 6xA100, 4xL40, 8xA6000 (paper: $28.8/h).
+pub fn het1() -> Cluster {
+    Cluster::build(
+        "het1",
+        &[
+            node(H100, 2, 0),  // node 0
+            node(A100, 3, 0),  // node 1
+            node(A100, 3, 0),  // node 2
+            node(L40, 4, 0),   // node 3
+            node(A6000, 4, 1), // node 4
+            node(A6000, 4, 1), // node 5
+        ],
+        |a, b| match (a, b) {
+            (0, 1) | (0, 2) | (1, 2) => LinkTier::InfiniBand, // H100/A100 pod
+            (_, 3) => LinkTier::Eth10G,                       // L40 box on slow Ethernet
+            (4, 5) => LinkTier::Eth100G,                      // A6000 pod fabric
+            _ => LinkTier::Eth10G,
+        },
+    )
+}
+
+/// Heterogeneous setting 2: 3xH100+3xA100, 6xL40+6xA6000 (paper: $26.9/h).
+pub fn het2() -> Cluster {
+    Cluster::build(
+        "het2",
+        &[
+            node(H100, 3, 0),  // node 0
+            node(A100, 3, 0),  // node 1
+            node(L40, 3, 0),   // node 2
+            node(L40, 3, 0),   // node 3
+            node(A6000, 3, 1), // node 4
+            node(A6000, 3, 1), // node 5
+        ],
+        |a, b| match (a, b) {
+            (0, 1) => LinkTier::InfiniBand,
+            (2, 3) => LinkTier::Eth100G,
+            (4, 5) => LinkTier::Eth100G,
+            _ => LinkTier::Eth10G,
+        },
+    )
+}
+
+/// Heterogeneous setting 3: 6xA100, 12xL40, 6xA6000 (paper: $27.1/h).
+pub fn het3() -> Cluster {
+    Cluster::build(
+        "het3",
+        &[
+            node(A100, 6, 0),  // node 0: one NVLink A100 server
+            node(L40, 4, 0),   // nodes 1-3: L40 boxes
+            node(L40, 4, 0),
+            node(L40, 4, 1),
+            node(A6000, 3, 1), // nodes 4-5
+            node(A6000, 3, 1),
+        ],
+        |a, b| match (a, b) {
+            (1, 2) => LinkTier::Eth100G,
+            (3, 4) | (3, 5) | (4, 5) => LinkTier::Eth100G,
+            _ => LinkTier::Eth10G,
+        },
+    )
+}
+
+/// Heterogeneous setting 4: 3xH100 + 9xA100 (paper: $26.3/h) — the
+/// "high-end only" heterogeneous pool, single DC.
+pub fn het4() -> Cluster {
+    Cluster::build(
+        "het4",
+        &[
+            node(H100, 3, 0), // node 0
+            node(A100, 3, 0), // node 1
+            node(A100, 3, 0), // node 2
+            node(A100, 3, 0), // node 3
+        ],
+        |a, b| match (a, b) {
+            (0, 1) => LinkTier::InfiniBand,
+            (1, 2) | (2, 3) | (1, 3) => LinkTier::Eth100G,
+            _ => LinkTier::Eth100G,
+        },
+    )
+}
+
+/// Heterogeneous setting 5: 4xA100, 6xL40, 10xA6000 at ~70% of the
+/// homogeneous budget (paper: $20.5/h) — the cost-efficiency study (Fig. 9).
+pub fn het5() -> Cluster {
+    Cluster::build(
+        "het5",
+        &[
+            node(A100, 4, 0),  // node 0
+            node(L40, 3, 0),   // node 1
+            node(L40, 3, 0),   // node 2
+            node(A6000, 4, 1), // node 3
+            node(A6000, 4, 1), // node 4
+            node(A6000, 2, 1), // node 5
+        ],
+        |a, b| match (a, b) {
+            (1, 2) => LinkTier::Eth100G,
+            (3, 4) | (3, 5) | (4, 5) => LinkTier::Eth100G,
+            _ => LinkTier::Eth10G,
+        },
+    )
+}
+
+/// Small homogeneous cluster for the Appendix-G case study: 4xH100.
+pub fn homogeneous_small() -> Cluster {
+    Cluster::build("hom-4xH100", &[node(H100, 4, 0)], |_, _| LinkTier::InfiniBand)
+}
+
+/// Appendix-E case study cluster: 4xH100 + 4xA100 in one DC.
+pub fn case_study() -> Cluster {
+    Cluster::build(
+        "case-4H100-4A100",
+        &[node(H100, 4, 0), node(A100, 4, 0)],
+        |_, _| LinkTier::InfiniBand,
+    )
+}
+
+pub fn by_name(name: &str) -> Option<Cluster> {
+    match name {
+        "homogeneous" | "hom" => Some(homogeneous()),
+        "het1" => Some(het1()),
+        "het2" => Some(het2()),
+        "het3" => Some(het3()),
+        "het4" => Some(het4()),
+        "het5" => Some(het5()),
+        "hom4" => Some(homogeneous_small()),
+        "case" => Some(case_study()),
+        _ => None,
+    }
+}
+
+pub const PAPER_SETTINGS: [&str; 6] = ["homogeneous", "het1", "het2", "het3", "het4", "het5"];
+
+/// Synthetic large cluster for the Table-5 scalability study: `n` GPUs in
+/// 8-GPU nodes with types drawn uniformly and a randomly-tiered fabric.
+pub fn synthetic(n: usize, seed: u64) -> Cluster {
+    use super::gpu::ALL_GPU_TYPES;
+    let mut rng = Rng::new(seed);
+    assert!(n % 8 == 0, "synthetic clusters use 8-GPU nodes");
+    let n_nodes = n / 8;
+    let nodes: Vec<NodeSpec> = (0..n_nodes)
+        .map(|i| NodeSpec {
+            gpu: *rng.choice(&ALL_GPU_TYPES),
+            count: 8,
+            dc: if i < n_nodes / 2 { 0 } else { 1 },
+        })
+        .collect();
+    // Deterministic pseudo-random fabric tiers per node pair.
+    let tiers = [LinkTier::InfiniBand, LinkTier::Eth100G, LinkTier::Eth10G];
+    let fabric_seed = seed.wrapping_mul(0x9E3779B97F4A7C15);
+    Cluster::build(&format!("synthetic-{n}"), &nodes, move |a, b| {
+        let h = fabric_seed ^ (a as u64).wrapping_mul(0x100000001B3) ^ (b as u64).wrapping_mul(0x1B873593);
+        tiers[(h % 3) as usize]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_gpu_mixes() {
+        let c = het1();
+        assert_eq!((c.count_of(H100), c.count_of(A100), c.count_of(L40), c.count_of(A6000)), (2, 6, 4, 8));
+        let c = het2();
+        assert_eq!((c.count_of(H100), c.count_of(A100), c.count_of(L40), c.count_of(A6000)), (3, 3, 6, 6));
+        let c = het3();
+        assert_eq!((c.count_of(A100), c.count_of(L40), c.count_of(A6000)), (6, 12, 6));
+        let c = het4();
+        assert_eq!((c.count_of(H100), c.count_of(A100)), (3, 9));
+        let c = het5();
+        assert_eq!((c.count_of(A100), c.count_of(L40), c.count_of(A6000)), (4, 6, 10));
+    }
+
+    #[test]
+    fn budgets_near_paper() {
+        // Paper Fig. 4 budgets; our fitted prices land within ~6%.
+        let cases = [
+            ("homogeneous", 29.52),
+            ("het1", 28.8),
+            ("het2", 26.9),
+            ("het3", 27.1),
+            ("het4", 26.3),
+            ("het5", 20.5),
+        ];
+        for (name, paper) in cases {
+            let b = by_name(name).unwrap().budget_per_hour();
+            let rel = (b - paper).abs() / paper;
+            assert!(rel < 0.08, "{name}: ours {b:.2} vs paper {paper} ({:.1}%)", rel * 100.0);
+        }
+        // het5 must be ~70% of homogeneous.
+        let frac = het5().budget_per_hour() / homogeneous().budget_per_hour();
+        assert!((0.6..0.75).contains(&frac), "{frac}");
+    }
+
+    #[test]
+    fn het_settings_have_low_bandwidth_links() {
+        // The paper stresses "notable bandwidth limitation and heterogeneity".
+        for name in ["het1", "het2", "het3", "het5"] {
+            let c = by_name(name).unwrap();
+            let mut mn = f64::INFINITY;
+            let mut mx: f64 = 0.0;
+            for i in 0..c.n() {
+                for j in 0..c.n() {
+                    if i != j {
+                        mn = mn.min(c.bandwidth[i][j]);
+                        mx = mx.max(c.bandwidth[i][j]);
+                    }
+                }
+            }
+            assert!(mx / mn > 100.0, "{name} not heterogeneous enough ({mx} / {mn})");
+        }
+    }
+
+    #[test]
+    fn synthetic_sizes() {
+        for n in [64, 128] {
+            let c = synthetic(n, 1);
+            assert_eq!(c.n(), n);
+            // deterministic for the same seed
+            let c2 = synthetic(n, 1);
+            assert_eq!(c.devices[5].gpu, c2.devices[5].gpu);
+            assert_eq!(c.bandwidth[0][n - 1], c2.bandwidth[0][n - 1]);
+        }
+    }
+}

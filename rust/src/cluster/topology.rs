@@ -1,0 +1,247 @@
+//! Cluster topology: devices, nodes, data centers, and the pairwise
+//! bandwidth/latency matrices the scheduler consumes (paper Fig. 4).
+//!
+//! The paper measures these matrices with NCCL on RunPod rentals; we
+//! synthesize them from the same link tiers the paper reports (NVLink and
+//! PCIe within a server; InfiniBand / RoCE / Ethernet across servers; very
+//! low-bandwidth links across data centers). The scheduling algorithm only
+//! ever sees devices through these matrices plus the per-type specs, so the
+//! substitution preserves its behaviour (DESIGN.md §1).
+
+use super::gpu::GpuType;
+
+pub type DeviceId = usize;
+
+/// Inter-node link tiers, with (bandwidth bytes/s, latency seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LinkTier {
+    /// InfiniBand 200 Gb/s (same rack / fabric).
+    InfiniBand,
+    /// 100 GbE RoCE-class datacenter Ethernet.
+    Eth100G,
+    /// 10 GbE commodity Ethernet.
+    Eth10G,
+    /// Cross-data-center WAN (~1 Gb/s): the "ultra-low" links §5.2 says
+    /// the scheduler must avoid for KV traffic.
+    CrossDc,
+}
+
+impl LinkTier {
+    pub fn bandwidth(self) -> f64 {
+        match self {
+            LinkTier::InfiniBand => 25e9, // 200 Gb/s
+            LinkTier::Eth100G => 12.5e9,  // 100 Gb/s
+            LinkTier::Eth10G => 1.25e9,   // 10 Gb/s
+            LinkTier::CrossDc => 0.125e9, // 1 Gb/s
+        }
+    }
+
+    pub fn latency(self) -> f64 {
+        match self {
+            LinkTier::InfiniBand => 5e-6,
+            LinkTier::Eth100G => 20e-6,
+            LinkTier::Eth10G => 100e-6,
+            LinkTier::CrossDc => 20e-3,
+        }
+    }
+}
+
+/// PCIe 4.0 x16 effective bandwidth (intra-node fallback when either GPU
+/// lacks NVLink) and latency.
+pub const PCIE_BW: f64 = 25e9;
+pub const PCIE_LAT: f64 = 2e-6;
+/// NVLink per-hop latency.
+pub const NVLINK_LAT: f64 = 1e-6;
+
+/// One GPU in the cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub id: DeviceId,
+    pub gpu: GpuType,
+    /// Server (node) index; GPUs on the same node talk over NVLink/PCIe.
+    pub node: usize,
+    /// Data-center index; nodes in different DCs talk over LinkTier::CrossDc.
+    pub dc: usize,
+}
+
+/// A group of identical GPUs in one server.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeSpec {
+    pub gpu: GpuType,
+    pub count: usize,
+    pub dc: usize,
+}
+
+/// The full heterogeneous cluster: devices plus measured-equivalent
+/// bandwidth/latency matrices (symmetric; diagonal is intra-GPU and unused).
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub name: String,
+    pub devices: Vec<Device>,
+    /// bytes/s between device pairs.
+    pub bandwidth: Vec<Vec<f64>>,
+    /// seconds between device pairs.
+    pub latency: Vec<Vec<f64>>,
+}
+
+impl Cluster {
+    /// Build a cluster from node specs. `inter_node` maps a pair of node
+    /// indices (same DC) to the tier connecting them.
+    pub fn build(
+        name: &str,
+        nodes: &[NodeSpec],
+        inter_node: impl Fn(usize, usize) -> LinkTier,
+    ) -> Cluster {
+        let mut devices = Vec::new();
+        for (ni, spec) in nodes.iter().enumerate() {
+            for _ in 0..spec.count {
+                devices.push(Device { id: devices.len(), gpu: spec.gpu, node: ni, dc: spec.dc });
+            }
+        }
+        let n = devices.len();
+        let mut bandwidth = vec![vec![0.0; n]; n];
+        let mut latency = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    bandwidth[i][j] = f64::INFINITY;
+                    continue;
+                }
+                let (a, b) = (&devices[i], &devices[j]);
+                let (bw, lat) = if a.node == b.node {
+                    // Intra-node: NVLink when both endpoints support it
+                    // (same type in our single-type nodes), else PCIe.
+                    match (a.gpu.nvlink_bw(), b.gpu.nvlink_bw()) {
+                        (Some(x), Some(y)) => (x.min(y), NVLINK_LAT),
+                        _ => (PCIE_BW, PCIE_LAT),
+                    }
+                } else if a.dc != b.dc {
+                    (LinkTier::CrossDc.bandwidth(), LinkTier::CrossDc.latency())
+                } else {
+                    let t = inter_node(a.node.min(b.node), a.node.max(b.node));
+                    (t.bandwidth(), t.latency())
+                };
+                bandwidth[i][j] = bw;
+                latency[i][j] = lat;
+            }
+        }
+        Cluster { name: name.to_string(), devices, bandwidth, latency }
+    }
+
+    pub fn n(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Total rental cost, $/hour (the paper's budget axis).
+    pub fn budget_per_hour(&self) -> f64 {
+        self.devices.iter().map(|d| d.gpu.price_per_hour()).sum()
+    }
+
+    /// Total device memory, bytes.
+    pub fn total_memory(&self) -> f64 {
+        self.devices.iter().map(|d| d.gpu.mem_bytes()).sum()
+    }
+
+    /// Aggregate dense FP16 compute, FLOP/s.
+    pub fn total_compute(&self) -> f64 {
+        self.devices.iter().map(|d| d.gpu.tflops()).sum()
+    }
+
+    pub fn count_of(&self, t: GpuType) -> usize {
+        self.devices.iter().filter(|d| d.gpu == t).count()
+    }
+
+    /// Best (highest-bandwidth) link between two device sets.
+    pub fn best_link(&self, a: &[DeviceId], b: &[DeviceId]) -> (f64, f64) {
+        let mut best = (0.0f64, f64::INFINITY);
+        for &i in a {
+            for &j in b {
+                if i != j && self.bandwidth[i][j] > best.0 {
+                    best = (self.bandwidth[i][j], self.latency[i][j]);
+                }
+            }
+        }
+        best
+    }
+
+    /// Render the Gbps bandwidth matrix like paper Fig. 4 (for `experiments fig4`).
+    pub fn bandwidth_matrix_gbps(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{} ({} GPUs, budget ${:.2}/h)\n",
+            self.name,
+            self.n(),
+            self.budget_per_hour()
+        ));
+        for i in 0..self.n() {
+            let row: Vec<String> = (0..self.n())
+                .map(|j| {
+                    if i == j {
+                        "    -".to_string()
+                    } else {
+                        format!("{:5.0}", self.bandwidth[i][j] * 8.0 / 1e9)
+                    }
+                })
+                .collect();
+            out.push_str(&format!("{:>6} {}\n", self.devices[i].gpu.name(), row.join(" ")));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_node_cluster() -> Cluster {
+        Cluster::build(
+            "test",
+            &[
+                NodeSpec { gpu: GpuType::A100, count: 2, dc: 0 },
+                NodeSpec { gpu: GpuType::L40, count: 2, dc: 0 },
+                NodeSpec { gpu: GpuType::A6000, count: 2, dc: 1 },
+            ],
+            |_, _| LinkTier::Eth100G,
+        )
+    }
+
+    #[test]
+    fn matrix_is_symmetric_and_tiered() {
+        let c = two_node_cluster();
+        assert_eq!(c.n(), 6);
+        for i in 0..c.n() {
+            for j in 0..c.n() {
+                assert_eq!(c.bandwidth[i][j], c.bandwidth[j][i]);
+                assert_eq!(c.latency[i][j], c.latency[j][i]);
+            }
+        }
+        // A100 pair: NVLink 600 GB/s.
+        assert_eq!(c.bandwidth[0][1], 600e9);
+        // L40 pair: PCIe (no NVLink).
+        assert_eq!(c.bandwidth[2][3], PCIE_BW);
+        // A6000 pair: NVLink bridge.
+        assert_eq!(c.bandwidth[4][5], 112e9);
+        // Same-DC inter-node: the chosen tier.
+        assert_eq!(c.bandwidth[0][2], LinkTier::Eth100G.bandwidth());
+        // Cross-DC: WAN.
+        assert_eq!(c.bandwidth[0][4], LinkTier::CrossDc.bandwidth());
+        assert!(c.bandwidth[0][4] < c.bandwidth[0][2]);
+    }
+
+    #[test]
+    fn budget_and_counts() {
+        let c = two_node_cluster();
+        assert_eq!(c.count_of(GpuType::A100), 2);
+        let want = 2.0 * 1.69 + 2.0 * 1.04 + 2.0 * 0.75;
+        assert!((c.budget_per_hour() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_link_picks_max() {
+        let c = two_node_cluster();
+        let (bw, _) = c.best_link(&[0, 1], &[2, 3]);
+        assert_eq!(bw, LinkTier::Eth100G.bandwidth());
+        let (bw2, _) = c.best_link(&[0], &[1]);
+        assert_eq!(bw2, 600e9);
+    }
+}

@@ -1,0 +1,175 @@
+//! KV-cache slot manager for decode replicas (the PagedAttention-style
+//! block management of §4, adapted to the AOT shape discipline).
+//!
+//! A decode replica's compiled module works on fixed-capacity caches
+//! [L, B, S_max, H]; this manager owns those buffers, allocates batch slots
+//! to requests, and splices migrated per-request caches ([L, S_max, H],
+//! the payload of a KV transfer) into slot columns. Layout is row-major, so
+//! a (layer, slot) pane is one contiguous S_max*H block — inserts are L
+//! memcpys, which is also exactly the wire format of the transfer.
+
+/// Slot-managed KV cache buffers for one decode replica.
+pub struct KvSlots {
+    pub n_layers: usize,
+    pub batch: usize,
+    pub s_max: usize,
+    pub hidden: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    occupied: Vec<bool>,
+}
+
+impl KvSlots {
+    pub fn new(dims: [usize; 4]) -> KvSlots {
+        let [l, b, s, h] = dims;
+        KvSlots {
+            n_layers: l,
+            batch: b,
+            s_max: s,
+            hidden: h,
+            k: vec![0.0; l * b * s * h],
+            v: vec![0.0; l * b * s * h],
+            occupied: vec![false; b],
+        }
+    }
+
+    pub fn pane(&self) -> usize {
+        self.s_max * self.hidden
+    }
+
+    /// Allocate a free slot, if any.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.occupied.iter().position(|&o| !o)?;
+        self.occupied[slot] = true;
+        Some(slot)
+    }
+
+    pub fn free(&mut self, slot: usize) {
+        assert!(self.occupied[slot], "double free of slot {slot}");
+        self.occupied[slot] = false;
+    }
+
+    pub fn n_occupied(&self) -> usize {
+        self.occupied.iter().filter(|&&o| o).count()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.n_occupied() == self.batch
+    }
+
+    /// Splice a migrated per-request cache ([L, S_max, H] row-major — the KV
+    /// transfer payload) into a slot column.
+    pub fn insert(&mut self, slot: usize, k_req: &[f32], v_req: &[f32]) {
+        let pane = self.pane();
+        assert!(slot < self.batch, "slot out of range");
+        assert_eq!(k_req.len(), self.n_layers * pane, "bad k payload");
+        assert_eq!(v_req.len(), self.n_layers * pane, "bad v payload");
+        for l in 0..self.n_layers {
+            let dst = (l * self.batch + slot) * pane;
+            let src = l * pane;
+            self.k[dst..dst + pane].copy_from_slice(&k_req[src..src + pane]);
+            self.v[dst..dst + pane].copy_from_slice(&v_req[src..src + pane]);
+        }
+    }
+
+    /// Extract one request's cache column from a *batch* cache
+    /// [L, B, S_max, H] (used on the prefill side to build the transfer
+    /// payload for request `b`).
+    pub fn extract_request(
+        batch_cache: &[f32],
+        dims: [usize; 4],
+        b: usize,
+    ) -> Vec<f32> {
+        let [l_n, b_n, s, h] = dims;
+        assert!(b < b_n);
+        assert_eq!(batch_cache.len(), l_n * b_n * s * h);
+        let pane = s * h;
+        let mut out = vec![0.0f32; l_n * pane];
+        for l in 0..l_n {
+            let src = (l * b_n + b) * pane;
+            out[l * pane..(l + 1) * pane].copy_from_slice(&batch_cache[src..src + pane]);
+        }
+        out
+    }
+
+    pub fn k(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Replace buffers with the decode module's updated caches.
+    pub fn update(&mut self, k: Vec<f32>, v: Vec<f32>) {
+        assert_eq!(k.len(), self.k.len());
+        assert_eq!(v.len(), self.v.len());
+        self.k = k;
+        self.v = v;
+    }
+
+    /// Bytes a migrated request cache occupies (the KV transfer size).
+    pub fn transfer_bytes(&self) -> usize {
+        2 * self.n_layers * self.pane() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut s = KvSlots::new([2, 3, 4, 8]);
+        let a = s.alloc().unwrap();
+        let b = s.alloc().unwrap();
+        let c = s.alloc().unwrap();
+        assert_eq!((a, b, c), (0, 1, 2));
+        assert!(s.is_full());
+        assert!(s.alloc().is_none());
+        s.free(b);
+        assert_eq!(s.alloc(), Some(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut s = KvSlots::new([1, 1, 2, 2]);
+        let a = s.alloc().unwrap();
+        s.free(a);
+        s.free(a);
+    }
+
+    #[test]
+    fn insert_extract_roundtrip() {
+        // Build a batch cache with recognizable values, extract request 1,
+        // insert into slot 2 of a fresh manager, check exact placement.
+        let dims = [2usize, 3, 4, 2]; // L=2 B=3 S=4 H=2
+        let n: usize = dims.iter().product();
+        let batch_cache: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let req = KvSlots::extract_request(&batch_cache, dims, 1);
+        assert_eq!(req.len(), 2 * 4 * 2);
+        // layer 0, request 1 starts at (0*3+1)*8 = 8.
+        assert_eq!(req[0], 8.0);
+        // layer 1, request 1 starts at (1*3+1)*8 = 32.
+        assert_eq!(req[8], 32.0);
+
+        let mut slots = KvSlots::new(dims);
+        assert_eq!(slots.alloc(), Some(0));
+        assert_eq!(slots.alloc(), Some(1));
+        assert_eq!(slots.alloc(), Some(2));
+        slots.insert(2, &req, &req);
+        // layer 0, slot 2 pane starts at (0*3+2)*8 = 16.
+        assert_eq!(slots.k()[16], 8.0);
+        assert_eq!(slots.v()[16 + 7], 15.0);
+        // layer 1, slot 2 pane starts at (1*3+2)*8 = 40.
+        assert_eq!(slots.k()[40], 32.0);
+    }
+
+    #[test]
+    fn transfer_bytes_formula() {
+        let s = KvSlots::new([4, 2, 192, 256]);
+        // 2 (K and V) * L * S_max * H * 4 bytes.
+        assert_eq!(s.transfer_bytes(), 2 * 4 * 192 * 256 * 4);
+    }
+}

@@ -1,0 +1,274 @@
+//! Replica workers: OS threads owning their own PJRT runtime (the handles
+//! are not Send), connected by channels. Prefill workers batch incoming
+//! requests, run the compiled prefill module, extract each request's KV
+//! column, and ship it *directly* to a decode worker (the coordinator is not
+//! on the KV path, matching §4's NCCL-SendRecv design). Decode workers run
+//! continuous batching over slot-managed caches.
+
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{argmax_rows, ModelRuntime};
+
+use super::kvcache::KvSlots;
+
+/// A request as the live coordinator sees it.
+#[derive(Clone, Debug)]
+pub struct LiveRequest {
+    pub id: usize,
+    pub tokens: Vec<i32>,
+    pub output_len: usize,
+}
+
+/// KV transfer payload: prefill → decode (per-request cache column).
+pub struct KvPacket {
+    pub req: LiveRequest,
+    pub first_token: i32,
+    /// [L, S_max, H] row-major.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub dispatched_at: Instant,
+    pub prefill_done_at: Instant,
+}
+
+/// Completion record sent back to the coordinator.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub req_id: usize,
+    /// All generated tokens (first token from prefill + decode steps).
+    pub generated: Vec<i32>,
+    pub dispatched_at: Instant,
+    pub prefill_done_at: Instant,
+    pub done_at: Instant,
+    pub kv_bytes: usize,
+}
+
+pub enum PrefillMsg {
+    Req(LiveRequest, Instant),
+    Stop,
+}
+
+pub enum DecodeMsg {
+    Kv(KvPacket),
+    Stop,
+}
+
+/// Simulated-bandwidth throttle for KV transfers (models the heterogeneous
+/// links of the paper's settings on a single host). None = full speed.
+#[derive(Clone, Copy, Debug)]
+pub struct KvThrottle {
+    pub bytes_per_s: f64,
+}
+
+/// Prefill worker main loop. Routes each finished request's KV packet to a
+/// decode worker chosen by flow-proportional deficit weighting (§3.3).
+#[allow(clippy::too_many_arguments)]
+pub fn prefill_worker(
+    worker_id: usize,
+    rt: ModelRuntime,
+    rx: Receiver<PrefillMsg>,
+    decode_txs: Vec<Sender<DecodeMsg>>,
+    route_weights: Vec<f64>,
+    throttle: Option<KvThrottle>,
+) -> Result<usize> {
+    assert_eq!(decode_txs.len(), route_weights.len());
+    let variants = rt.prefill_variants();
+    let max_batch = variants.iter().map(|&(b, _)| b).max().unwrap_or(1);
+    let mut queue: Vec<(LiveRequest, Instant)> = Vec::new();
+    let mut routed = vec![0.0f64; decode_txs.len()];
+    let mut processed = 0usize;
+    let mut stopping = false;
+
+    loop {
+        // Blocking receive when idle; drain opportunistically otherwise.
+        if queue.is_empty() && !stopping {
+            match rx.recv() {
+                Ok(PrefillMsg::Req(r, t)) => queue.push((r, t)),
+                Ok(PrefillMsg::Stop) | Err(_) => stopping = true,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(PrefillMsg::Req(r, t)) => queue.push((r, t)),
+                Ok(PrefillMsg::Stop) => {
+                    stopping = true;
+                    break;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    stopping = true;
+                    break;
+                }
+            }
+        }
+        if queue.is_empty() {
+            if stopping {
+                return Ok(processed);
+            }
+            continue;
+        }
+
+        // Batch: take up to max_batch requests, pad to the smallest variant
+        // covering the longest prompt in the batch.
+        let take = queue.len().min(max_batch);
+        let batch_items: Vec<(LiveRequest, Instant)> = queue.drain(..take).collect();
+        let longest = batch_items.iter().map(|(r, _)| r.tokens.len()).max().unwrap();
+        let (vb, vs) = rt
+            .select_prefill_variant(batch_items.len(), longest)
+            .unwrap_or_else(|| panic!("prefill worker {worker_id}: no variant for b{} s{longest}", batch_items.len()));
+        let mut tokens = vec![0i32; vb * vs];
+        let mut lengths = vec![1i32; vb];
+        for (i, (r, _)) in batch_items.iter().enumerate() {
+            tokens[i * vs..i * vs + r.tokens.len()].copy_from_slice(&r.tokens);
+            lengths[i] = r.tokens.len() as i32;
+        }
+        let out = rt.prefill(vb, vs, &tokens, &lengths)?;
+        let done = Instant::now();
+        let first = argmax_rows(&out.logits, rt.vocab());
+        let dims = rt.manifest.cache_dims(vb);
+
+        for (i, (r, dispatched_at)) in batch_items.into_iter().enumerate() {
+            let k = KvSlots::extract_request(&out.k_cache, dims, i);
+            let v = KvSlots::extract_request(&out.v_cache, dims, i);
+            // Throttled "transmission" of the KV payload.
+            if let Some(t) = throttle {
+                let bytes = (k.len() + v.len()) * 4;
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    bytes as f64 / t.bytes_per_s,
+                ));
+            }
+            // Flow-proportional deficit routing.
+            let d = (0..decode_txs.len())
+                .max_by(|&a, &b| {
+                    let fa = route_weights[a] / (routed[a] + 1.0);
+                    let fb = route_weights[b] / (routed[b] + 1.0);
+                    fa.partial_cmp(&fb).unwrap()
+                })
+                .expect("no decode workers");
+            routed[d] += 1.0;
+            decode_txs[d]
+                .send(DecodeMsg::Kv(KvPacket {
+                    first_token: first[i],
+                    req: r,
+                    k,
+                    v,
+                    dispatched_at,
+                    prefill_done_at: done,
+                }))
+                .ok();
+            processed += 1;
+        }
+    }
+}
+
+struct Slot {
+    req: LiveRequest,
+    slot: usize,
+    generated: Vec<i32>,
+    pos: i32,
+    dispatched_at: Instant,
+    prefill_done_at: Instant,
+    kv_bytes: usize,
+}
+
+/// Decode worker main loop: continuous batching over slot-managed caches.
+pub fn decode_worker(
+    _worker_id: usize,
+    rt: ModelRuntime,
+    rx: Receiver<DecodeMsg>,
+    completions: Sender<Completion>,
+) -> Result<usize> {
+    let batch = *rt.decode_variants().last().expect("no decode variants");
+    let dims = rt.manifest.cache_dims(batch);
+    let s_max = rt.manifest.config.max_seq;
+    let mut slots = KvSlots::new(dims);
+    let mut running: Vec<Slot> = Vec::new();
+    let mut waiting: Vec<KvPacket> = Vec::new();
+    let mut done = 0usize;
+    let mut stopping = false;
+
+    loop {
+        // Admission: blocking when idle, drain otherwise.
+        if running.is_empty() && waiting.is_empty() && !stopping {
+            match rx.recv() {
+                Ok(DecodeMsg::Kv(p)) => waiting.push(p),
+                Ok(DecodeMsg::Stop) | Err(_) => stopping = true,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(DecodeMsg::Kv(p)) => waiting.push(p),
+                Ok(DecodeMsg::Stop) => {
+                    stopping = true;
+                    break;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    stopping = true;
+                    break;
+                }
+            }
+        }
+        // Continuous batching: admit while slots free.
+        while !slots.is_full() && !waiting.is_empty() {
+            let p = waiting.remove(0);
+            let slot = slots.alloc().unwrap();
+            let kv_bytes = (p.k.len() + p.v.len()) * 4;
+            slots.insert(slot, &p.k, &p.v);
+            running.push(Slot {
+                slot,
+                generated: vec![p.first_token],
+                pos: p.req.tokens.len() as i32,
+                req: p.req,
+                dispatched_at: p.dispatched_at,
+                prefill_done_at: p.prefill_done_at,
+                kv_bytes,
+            });
+        }
+        if running.is_empty() {
+            if stopping && waiting.is_empty() {
+                return Ok(done);
+            }
+            continue;
+        }
+
+        // One decode step for the whole batch (empty slots carry dummies).
+        let mut token = vec![0i32; batch];
+        let mut pos = vec![0i32; batch];
+        for s in &running {
+            token[s.slot] = *s.generated.last().unwrap();
+            pos[s.slot] = s.pos;
+        }
+        let out = rt.decode_step(batch, &token, &pos, slots.k(), slots.v())?;
+        slots.update(out.k_cache, out.v_cache);
+        let next = argmax_rows(&out.logits, rt.vocab());
+        let now = Instant::now();
+
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, s) in running.iter_mut().enumerate() {
+            s.generated.push(next[s.slot]);
+            s.pos += 1;
+            let budget_hit = (s.pos as usize) >= s_max - 1;
+            if s.generated.len() >= s.req.output_len || budget_hit {
+                finished.push(i);
+            }
+        }
+        for &i in finished.iter().rev() {
+            let s = running.swap_remove(i);
+            slots.free(s.slot);
+            completions
+                .send(Completion {
+                    req_id: s.req.id,
+                    generated: s.generated,
+                    dispatched_at: s.dispatched_at,
+                    prefill_done_at: s.prefill_done_at,
+                    done_at: now,
+                    kv_bytes: s.kv_bytes,
+                })
+                .ok();
+            done += 1;
+        }
+    }
+}

@@ -1,0 +1,548 @@
+//! The HexGen generative-inference cost model (paper Table 1 / Appendix A).
+//!
+//! Every scheduling decision in HexGen-2 — node capacities, edge capacities,
+//! parallel-strategy selection — and the discrete-event simulator are driven
+//! by these formulas. The paper validates that "the estimated serving
+//! throughput closely aligns with the actual throughput" (§5.3), which is
+//! what licenses using the cost model as the executable substrate for the
+//! paper-scale experiments (DESIGN.md §1).
+//!
+//! Notation follows Table 1: `b` batch size, `s_in`/`s_out` input/output
+//! sequence lengths, `H` hidden dim, `B` bytes per element, `c_d` tensor
+//! compute, `m_d` HBM bandwidth, `α/β` link latency/bandwidth, `d_ij` the
+//! device set of stage j, `l_ij` its layer count.
+
+pub mod replica;
+
+pub use replica::ReplicaConfig;
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::model::LlmSpec;
+
+/// An inference task profile: Table 1's (b_t, s_in, s_out).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaskProfile {
+    pub batch: usize,
+    pub s_in: f64,
+    pub s_out: f64,
+}
+
+impl TaskProfile {
+    pub fn new(batch: usize, s_in: f64, s_out: f64) -> TaskProfile {
+        TaskProfile { batch, s_in, s_out }
+    }
+
+    pub fn with_batch(self, batch: usize) -> TaskProfile {
+        TaskProfile { batch, ..self }
+    }
+}
+
+/// GPU compute saturates once a prefill batch reaches this many total tokens
+/// (paper Fig. 1: "once the total number of batched tokens reaches 2048, no
+/// further improvement in throughput is observed"). Below it the kernel is
+/// memory/launch-bound, so the wall time floors at the 2048-token time.
+pub const PREFILL_SATURATION_TOKENS: f64 = 2048.0;
+
+/// Hard cap on decode batch (continuous-batching slot limit).
+pub const MAX_DECODE_BATCH: usize = 256;
+
+/// Cost model bound to one cluster + one model.
+#[derive(Clone, Copy)]
+pub struct CostModel<'a> {
+    pub cluster: &'a Cluster,
+    pub model: &'a LlmSpec,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(cluster: &'a Cluster, model: &'a LlmSpec) -> Self {
+        CostModel { cluster, model }
+    }
+
+    fn h2(&self) -> f64 {
+        let h = self.model.hidden as f64;
+        h * h
+    }
+
+    // ---------------- Table 1, row "Computation cost" ----------------
+
+    /// Prefill compute time of one stage:
+    /// max_d( 24 b s_in H^2 / (|d| c_d) ) * l, with the Fig.-1 saturation
+    /// floor at 2048 batched tokens.
+    pub fn stage_prefill_compute(&self, stage: &[DeviceId], layers: usize, t: &TaskProfile) -> f64 {
+        let tokens = (t.batch as f64 * t.s_in).max(PREFILL_SATURATION_TOKENS);
+        let flops = 24.0 * tokens * self.h2();
+        let worst = stage
+            .iter()
+            .map(|&d| flops / (stage.len() as f64 * self.cluster.devices[d].gpu.effective_tflops()))
+            .fold(0.0f64, f64::max);
+        worst * layers as f64
+    }
+
+    /// Decode compute time of one stage for the full s_out generation:
+    /// max_d( 12 H^2 B s_out / (|d| m_d) ) * l        (weight scan, IO-bound)
+    ///   + max_d( 2 b s_ctx H B s_out / (|d| m_d) ) * l  (KV-cache scan)
+    ///   + max_d( 24 b s_out H^2 / (|d| c_d) ) * l      (arithmetic).
+    ///
+    /// The KV-scan term extends paper Table 1 (which models only the weight
+    /// scan): at large batch x context, reading the KV cache dominates HBM
+    /// traffic and is what makes decode throughput track memory bandwidth —
+    /// the effect the paper's cost-efficiency results rest on (DESIGN.md
+    /// §Deviations). s_ctx is the mean context over the generation,
+    /// s_in + s_out/2.
+    pub fn stage_decode_compute(&self, stage: &[DeviceId], layers: usize, t: &TaskProfile) -> f64 {
+        let tp = stage.len() as f64;
+        let h = self.model.hidden as f64;
+        let s_ctx = t.s_in + 0.5 * t.s_out;
+        let weight_bytes = 12.0 * self.h2() * self.model.bytes_per_elem * t.s_out;
+        let kv_bytes = 2.0 * t.batch as f64 * s_ctx * h * self.model.bytes_per_elem * t.s_out;
+        let scan_bytes = weight_bytes + kv_bytes;
+        let io = stage
+            .iter()
+            .map(|&d| scan_bytes / (tp * self.cluster.devices[d].gpu.mem_bw_eff()))
+            .fold(0.0f64, f64::max);
+        let flops = 24.0 * t.batch as f64 * t.s_out * self.h2();
+        let comp = stage
+            .iter()
+            .map(|&d| flops / (tp * self.cluster.devices[d].gpu.effective_tflops()))
+            .fold(0.0f64, f64::max);
+        (io + comp) * layers as f64
+    }
+
+    // ---------------- Table 1, row "TP communication cost" ----------------
+
+    /// Prefill TP communication of one stage:
+    /// max_d Σ_{d'≠d} ( α + b s_in H B / (|d| β) ) * 4 l.
+    pub fn stage_prefill_tp_comm(&self, stage: &[DeviceId], layers: usize, t: &TaskProfile) -> f64 {
+        self.tp_comm_inner(stage, t.batch as f64 * t.s_in) * 4.0 * layers as f64
+    }
+
+    /// Decode TP communication for the full generation:
+    /// max_d Σ_{d'≠d} ( α + b H B / (|d| β) ) * 4 s_out l.
+    pub fn stage_decode_tp_comm(&self, stage: &[DeviceId], layers: usize, t: &TaskProfile) -> f64 {
+        self.tp_comm_inner(stage, t.batch as f64) * 4.0 * t.s_out * layers as f64
+    }
+
+    fn tp_comm_inner(&self, stage: &[DeviceId], tokens: f64) -> f64 {
+        if stage.len() <= 1 {
+            return 0.0;
+        }
+        let msg = tokens * self.model.hidden as f64 * self.model.bytes_per_elem / stage.len() as f64;
+        stage
+            .iter()
+            .map(|&d| {
+                stage
+                    .iter()
+                    .filter(|&&d2| d2 != d)
+                    .map(|&d2| self.cluster.latency[d][d2] + msg / self.cluster.bandwidth[d][d2])
+                    .sum::<f64>()
+            })
+            .fold(0.0f64, f64::max)
+    }
+
+    // ---------------- Table 1, row "PP communication cost" ----------------
+
+    /// Prefill activation hop between consecutive stages:
+    /// min_{d∈j, d'∈j+1} ( α + b s_in H B / β ).
+    pub fn pp_comm_prefill(&self, from: &[DeviceId], to: &[DeviceId], t: &TaskProfile) -> f64 {
+        let msg = t.batch as f64 * t.s_in * self.model.hidden as f64 * self.model.bytes_per_elem;
+        self.pp_best_pair(from, to, msg)
+    }
+
+    /// Decode activation hops for the full generation:
+    /// min pair ( α + b H B / β ) * s_out.
+    pub fn pp_comm_decode(&self, from: &[DeviceId], to: &[DeviceId], t: &TaskProfile) -> f64 {
+        let msg = t.batch as f64 * self.model.hidden as f64 * self.model.bytes_per_elem;
+        self.pp_best_pair(from, to, msg) * t.s_out
+    }
+
+    fn pp_best_pair(&self, from: &[DeviceId], to: &[DeviceId], msg: f64) -> f64 {
+        let mut best = f64::INFINITY;
+        for &d in from {
+            for &d2 in to {
+                if d == d2 {
+                    continue;
+                }
+                let c = self.cluster.latency[d][d2] + msg / self.cluster.bandwidth[d][d2];
+                best = best.min(c);
+            }
+        }
+        if best.is_infinite() {
+            0.0 // degenerate single-device "pipeline"
+        } else {
+            best
+        }
+    }
+
+    // ---------------- End-to-end replica latencies ----------------
+
+    /// Prefill latency of one request batch through the whole replica.
+    pub fn prefill_latency(&self, cfg: &ReplicaConfig, t: &TaskProfile) -> f64 {
+        let mut total = 0.0;
+        for (i, stage) in cfg.stages.iter().enumerate() {
+            total += self.stage_prefill_compute(stage, cfg.layers[i], t);
+            total += self.stage_prefill_tp_comm(stage, cfg.layers[i], t);
+            if i + 1 < cfg.stages.len() {
+                total += self.pp_comm_prefill(stage, &cfg.stages[i + 1], t);
+            }
+        }
+        total
+    }
+
+    /// Decode latency for generating all s_out tokens of a batch.
+    pub fn decode_latency(&self, cfg: &ReplicaConfig, t: &TaskProfile) -> f64 {
+        let mut total = 0.0;
+        for (i, stage) in cfg.stages.iter().enumerate() {
+            total += self.stage_decode_compute(stage, cfg.layers[i], t);
+            total += self.stage_decode_tp_comm(stage, cfg.layers[i], t);
+            if i + 1 < cfg.stages.len() {
+                total += self.pp_comm_decode(stage, &cfg.stages[i + 1], t);
+            }
+        }
+        total
+    }
+
+    /// Per-token decode step latency at the current batch/context.
+    pub fn decode_step_latency(&self, cfg: &ReplicaConfig, batch: usize, s_ctx: f64) -> f64 {
+        let t = TaskProfile { batch, s_in: s_ctx, s_out: 1.0 };
+        self.decode_latency(cfg, &t)
+    }
+
+    // ---------------- Table 1, row "Memory limit" ----------------
+
+    /// Per-device memory demand of a stage:
+    /// ( 12 H^2 B / |d| + 2 b (s_in+s_out) H B / |d| ) * l
+    ///   + 4 b (s_in+s_out) H B   (activations).
+    pub fn stage_memory_per_device(&self, tp: usize, layers: usize, t: &TaskProfile) -> f64 {
+        let h = self.model.hidden as f64;
+        let b = self.model.bytes_per_elem;
+        let seq = t.s_in + t.s_out;
+        let bt = t.batch as f64;
+        let per_layer = 12.0 * h * h * b / tp as f64 + 2.0 * bt * seq * h * b / tp as f64;
+        per_layer * layers as f64 + 4.0 * bt * seq * h * b
+    }
+
+    /// Does the replica fit in its devices' memory for this task?
+    pub fn memory_ok(&self, cfg: &ReplicaConfig, t: &TaskProfile) -> bool {
+        cfg.stages.iter().enumerate().all(|(i, stage)| {
+            let need = self.stage_memory_per_device(stage.len(), cfg.layers[i], t);
+            let cap = stage
+                .iter()
+                .map(|&d| self.cluster.devices[d].gpu.mem_bytes())
+                .fold(f64::INFINITY, f64::min);
+            need <= cap
+        })
+    }
+
+    /// Largest decode batch that fits in memory (Appendix A's "maximum
+    /// available batch size"), capped at MAX_DECODE_BATCH.
+    pub fn max_decode_batch(&self, cfg: &ReplicaConfig, t: &TaskProfile) -> usize {
+        let mut best = 0usize;
+        for b in 1..=MAX_DECODE_BATCH {
+            if self.memory_ok(cfg, &t.with_batch(b)) {
+                best = b;
+            } else {
+                break;
+            }
+        }
+        best
+    }
+
+    // ---------------- Appendix A: node capacities ----------------
+
+    /// Prefill node capacity: requests per period T. Batching does not raise
+    /// throughput *past saturation* (Appendix A / Fig. 1), so the replica
+    /// batches just enough requests to fill the 2048-token saturation window
+    /// (subject to memory): capacity = b* · T / latency(b*). For prompts at
+    /// or above saturation this reduces to the paper's T / single-request
+    /// latency.
+    pub fn prefill_capacity(&self, cfg: &ReplicaConfig, t: &TaskProfile, period: f64) -> f64 {
+        let mut b = ((PREFILL_SATURATION_TOKENS / t.s_in.max(1.0)).floor() as usize).max(1);
+        // Respect the memory limit at this batch.
+        while b > 1 && !self.memory_ok(cfg, &TaskProfile { batch: b, s_out: 0.0, ..*t }) {
+            b -= 1;
+        }
+        let lat = self.prefill_latency(cfg, &TaskProfile { batch: b, s_out: 0.0, ..*t });
+        if lat <= 0.0 {
+            return 0.0;
+        }
+        b as f64 * period / lat
+    }
+
+    /// Decode node capacity: max_batch * T / full-generation latency
+    /// (Appendix A: decode is IO-bound and benefits from batching).
+    pub fn decode_capacity(&self, cfg: &ReplicaConfig, t: &TaskProfile, period: f64) -> f64 {
+        let mb = self.max_decode_batch(cfg, t);
+        if mb == 0 {
+            return 0.0;
+        }
+        let lat = self.decode_latency(cfg, &t.with_batch(mb));
+        if lat <= 0.0 {
+            return 0.0;
+        }
+        mb as f64 * period / lat
+    }
+
+    // ---------------- Table 1, row "KV cache communication cost" ----------
+
+    /// KV bytes one request of s_in tokens carries across `layers` layers:
+    /// Table 1's 2 b s_in H B per layer.
+    pub fn kv_bytes(&self, s_in: f64, layers: usize) -> f64 {
+        2.0 * s_in * self.model.hidden as f64 * self.model.bytes_per_elem * layers as f64
+    }
+
+    /// Transfer time of one request's KV cache from a prefill replica to a
+    /// decode replica. Each prefill stage sends the KV of its layer range to
+    /// the decode stage(s) holding those layers; device pairs within a
+    /// stage-pair transmit shards in parallel ("the edge capacity is
+    /// determined by the collective performance of all GPU-to-GPU
+    /// transmission connections", §3.3). Decode stage order is permuted to
+    /// minimize the cost when PP is small (Appendix A).
+    pub fn kv_transfer_time(&self, p: &ReplicaConfig, d: &ReplicaConfig, t: &TaskProfile) -> f64 {
+        let dpp = d.stages.len();
+        if dpp <= 4 {
+            // Try all layer-range orderings of the decode stages.
+            let mut order: Vec<usize> = (0..dpp).collect();
+            let mut best = f64::INFINITY;
+            permute(&mut order, 0, &mut |perm| {
+                let c = self.kv_transfer_time_ordered(p, d, perm, t);
+                if c < best {
+                    best = c;
+                }
+            });
+            best
+        } else {
+            let order: Vec<usize> = (0..dpp).collect();
+            self.kv_transfer_time_ordered(p, d, &order, t)
+        }
+    }
+
+    /// KV transfer time with decode stages assigned to layer ranges in the
+    /// given order (order[k] = which decode stage holds the k-th layer range).
+    fn kv_transfer_time_ordered(
+        &self,
+        p: &ReplicaConfig,
+        d: &ReplicaConfig,
+        order: &[usize],
+        t: &TaskProfile,
+    ) -> f64 {
+        // Layer boundaries for both replicas.
+        let p_bounds = bounds(&p.layers);
+        let mut d_layers_perm = vec![0usize; d.layers.len()];
+        for (slot, &stage_idx) in order.iter().enumerate() {
+            d_layers_perm[slot] = d.layers[stage_idx];
+        }
+        let d_bounds = bounds(&d_layers_perm);
+
+        let mut worst = 0.0f64;
+        for (pi, pstage) in p.stages.iter().enumerate() {
+            for (slot, &dstage_idx) in order.iter().enumerate() {
+                let lo = p_bounds[pi].0.max(d_bounds[slot].0);
+                let hi = p_bounds[pi].1.min(d_bounds[slot].1);
+                if lo >= hi {
+                    continue;
+                }
+                let bytes = self.kv_bytes(t.s_in, hi - lo) * t.batch as f64;
+                let dstage = &d.stages[dstage_idx];
+                // Round-robin pairing of TP ranks; shards move in parallel.
+                let nlinks = pstage.len().max(dstage.len());
+                let mut agg_bw = 0.0;
+                let mut max_lat = 0.0f64;
+                for r in 0..nlinks {
+                    let a = pstage[r % pstage.len()];
+                    let b = dstage[r % dstage.len()];
+                    if a == b {
+                        // Same physical GPU serving both phases' layer: free.
+                        agg_bw = f64::INFINITY;
+                    } else {
+                        agg_bw += self.cluster.bandwidth[a][b];
+                        max_lat = max_lat.max(self.cluster.latency[a][b]);
+                    }
+                }
+                let time = if agg_bw.is_infinite() { 0.0 } else { max_lat + bytes / agg_bw };
+                worst = worst.max(time);
+            }
+        }
+        worst
+    }
+}
+
+/// Cumulative (start, end) layer ranges from per-stage layer counts.
+fn bounds(layers: &[usize]) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(layers.len());
+    let mut acc = 0;
+    for &l in layers {
+        out.push((acc, acc + l));
+        acc += l;
+    }
+    out
+}
+
+/// Heap-permute helper (small n only).
+fn permute(v: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+    if k == v.len() {
+        f(v);
+        return;
+    }
+    for i in k..v.len() {
+        v.swap(k, i);
+        permute(v, k + 1, f);
+        v.swap(k, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::model::{LLAMA2_70B, OPT_30B};
+
+    fn hom() -> Cluster {
+        settings::homogeneous()
+    }
+
+    fn cfg(stages: Vec<Vec<DeviceId>>, layers: Vec<usize>) -> ReplicaConfig {
+        ReplicaConfig::new(stages, layers)
+    }
+
+    #[test]
+    fn tp_reduces_prefill_compute() {
+        let c = hom();
+        let m = CostModel::new(&c, &LLAMA2_70B);
+        let t = TaskProfile::new(1, 512.0, 128.0);
+        let tp1 = m.stage_prefill_compute(&[0], 80, &t);
+        let tp4 = m.stage_prefill_compute(&[0, 1, 2, 3], 80, &t);
+        assert!(tp4 < tp1 / 3.5, "tp4={tp4} tp1={tp1}");
+    }
+
+    #[test]
+    fn prefill_saturation_floor() {
+        // Below 2048 batched tokens the wall time is flat (Fig. 1).
+        let c = hom();
+        let m = CostModel::new(&c, &LLAMA2_70B);
+        let t128 = m.stage_prefill_compute(&[0], 1, &TaskProfile::new(1, 128.0, 0.0));
+        let t2048 = m.stage_prefill_compute(&[0], 1, &TaskProfile::new(1, 2048.0, 0.0));
+        let t4096 = m.stage_prefill_compute(&[0], 1, &TaskProfile::new(1, 4096.0, 0.0));
+        assert_eq!(t128, t2048);
+        assert!((t4096 / t2048 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_is_io_bound_at_small_batch() {
+        let c = hom();
+        let m = CostModel::new(&c, &LLAMA2_70B);
+        let t = TaskProfile::new(1, 512.0, 128.0);
+        let scan = 12.0 * 8192.0f64 * 8192.0 * 2.0 * 128.0 / 3.35e12 * 80.0;
+        let got = m.stage_decode_compute(&[0], 80, &t);
+        // IO term dominates; compute adds a small fraction.
+        assert!(got >= scan && got < scan * 1.3, "got {got} scan {scan}");
+    }
+
+    #[test]
+    fn decode_throughput_scales_with_batch() {
+        // tokens/s at batch 32 should be much higher than at batch 1 (Fig. 1).
+        let c = hom();
+        let m = CostModel::new(&c, &LLAMA2_70B);
+        let r = cfg(vec![vec![0, 1, 2, 3]], vec![80]);
+        let lat1 = m.decode_latency(&r, &TaskProfile::new(1, 512.0, 128.0));
+        let lat32 = m.decode_latency(&r, &TaskProfile::new(32, 512.0, 128.0));
+        let tput1 = 128.0 / lat1;
+        let tput32 = 32.0 * 128.0 / lat32;
+        assert!(tput32 > tput1 * 10.0, "{tput1} vs {tput32}");
+    }
+
+    #[test]
+    fn tp1_has_no_tp_comm() {
+        let c = hom();
+        let m = CostModel::new(&c, &LLAMA2_70B);
+        let t = TaskProfile::new(4, 512.0, 128.0);
+        assert_eq!(m.stage_prefill_tp_comm(&[0], 80, &t), 0.0);
+        assert!(m.stage_prefill_tp_comm(&[0, 1], 80, &t) > 0.0);
+    }
+
+    #[test]
+    fn memory_limit_bounds_decode_batch() {
+        let c = hom();
+        let m = CostModel::new(&c, &LLAMA2_70B);
+        let t = TaskProfile::new(1, 512.0, 128.0);
+        // 70B on a single 80G GPU: does not even fit the weights.
+        assert!(!m.memory_ok(&cfg(vec![vec![0]], vec![80]), &t));
+        // 8-way TP fits, with a nontrivial max batch.
+        let r8 = cfg(vec![(0..8).collect()], vec![80]);
+        assert!(m.memory_ok(&r8, &t));
+        let mb = m.max_decode_batch(&r8, &t);
+        assert!(mb >= 8, "max batch {mb}");
+        // OPT-30B fits more batch than LLaMA-70B on the same hardware.
+        let m30 = CostModel::new(&c, &OPT_30B);
+        let r30 = cfg(vec![(0..8).collect()], vec![48]);
+        assert!(m30.max_decode_batch(&r30, &t) > mb);
+    }
+
+    #[test]
+    fn pipeline_latency_adds_pp_hops() {
+        let c = hom();
+        let m = CostModel::new(&c, &LLAMA2_70B);
+        let t = TaskProfile::new(1, 512.0, 128.0);
+        let pp1 = cfg(vec![(0..8).collect()], vec![80]);
+        let pp2 = cfg(vec![(0..4).collect(), (4..8).collect()], vec![40, 40]);
+        // Same total compute resources; pp2 pays activation hops but less TP
+        // overhead. Both must be positive and finite.
+        for r in [&pp1, &pp2] {
+            let l = m.prefill_latency(r, &t);
+            assert!(l.is_finite() && l > 0.0);
+        }
+    }
+
+    #[test]
+    fn kv_transfer_prefers_fast_links() {
+        let het = settings::het1();
+        let m = CostModel::new(&het, &OPT_30B);
+        let t = TaskProfile::new(1, 512.0, 128.0);
+        // Prefill on H100 pair (node 0), decode on A100 trio (node 1): IB.
+        let p = cfg(vec![vec![0, 1]], vec![48]);
+        let d_fast = cfg(vec![vec![2, 3, 4]], vec![48]);
+        // Decode on A6000s in the other DC: WAN link.
+        let d_slow = cfg(vec![vec![15, 16, 17]], vec![48]);
+        let fast = m.kv_transfer_time(&p, &d_fast, &t);
+        let slow = m.kv_transfer_time(&p, &d_slow, &t);
+        assert!(fast < slow / 20.0, "fast {fast} slow {slow}");
+    }
+
+    #[test]
+    fn kv_transfer_zero_when_colocated() {
+        let c = hom();
+        let m = CostModel::new(&c, &LLAMA2_70B);
+        let t = TaskProfile::new(1, 512.0, 128.0);
+        let p = cfg(vec![vec![0, 1]], vec![80]);
+        let same = m.kv_transfer_time(&p, &p, &t);
+        assert_eq!(same, 0.0);
+    }
+
+    #[test]
+    fn kv_transfer_stage_order_optimized() {
+        // With decode PP=2 the permutation search must do no worse than the
+        // identity order.
+        let het = settings::het1();
+        let m = CostModel::new(&het, &OPT_30B);
+        let t = TaskProfile::new(1, 512.0, 128.0);
+        let p = cfg(vec![vec![0, 1]], vec![48]);
+        let d = cfg(vec![vec![2, 3], vec![15, 16]], vec![24, 24]);
+        let opt = m.kv_transfer_time(&p, &d, &t);
+        let ident = m.kv_transfer_time_ordered(&p, &d, &[0, 1], &t);
+        let swapped = m.kv_transfer_time_ordered(&p, &d, &[1, 0], &t);
+        assert!(opt <= ident + 1e-12 && opt <= swapped + 1e-12);
+    }
+
+    #[test]
+    fn capacities_positive_and_sane() {
+        let c = hom();
+        let m = CostModel::new(&c, &LLAMA2_70B);
+        let t = TaskProfile::new(1, 512.0, 128.0);
+        let r = cfg(vec![(0..4).collect()], vec![80]);
+        let pc = m.prefill_capacity(&r, &t, 600.0);
+        let dc = m.decode_capacity(&r, &t, 600.0);
+        assert!(pc > 0.0 && dc > 0.0);
+        // Decode capacity (batched) exceeds prefill capacity per Appendix A
+        // logic on this IO-bound model? Not necessarily — just sanity-bound.
+        assert!(pc.is_finite() && dc.is_finite());
+    }
+}

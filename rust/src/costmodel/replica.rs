@@ -1,0 +1,94 @@
+//! Replica parallel configuration: an ordered pipeline of TP device groups
+//! plus the per-stage layer counts (the paper's "parallel strategy" —
+//! asymmetric TP/PP combinations over heterogeneous devices, Table 2).
+
+use crate::cluster::DeviceId;
+
+/// One model replica's parallel configuration.
+///
+/// `stages[j]` is the TP group serving pipeline stage j (d_ij in Table 1);
+/// `layers[j]` is l_ij. Stages may have *different* TP degrees — that is the
+/// asymmetric parallelism HexGen introduced and HexGen-2 inherits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplicaConfig {
+    pub stages: Vec<Vec<DeviceId>>,
+    pub layers: Vec<usize>,
+}
+
+impl ReplicaConfig {
+    pub fn new(stages: Vec<Vec<DeviceId>>, layers: Vec<usize>) -> ReplicaConfig {
+        assert_eq!(stages.len(), layers.len(), "stage/layer arity mismatch");
+        assert!(!stages.is_empty(), "empty replica");
+        assert!(stages.iter().all(|s| !s.is_empty()), "empty stage");
+        ReplicaConfig { stages, layers }
+    }
+
+    /// Pipeline depth.
+    pub fn pp(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Reported TP degree (max stage width, as paper Table 2 reports).
+    pub fn tp(&self) -> usize {
+        self.stages.iter().map(|s| s.len()).max().unwrap_or(0)
+    }
+
+    /// All devices, in stage order.
+    pub fn devices(&self) -> Vec<DeviceId> {
+        self.stages.iter().flatten().copied().collect()
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.stages.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn total_layers(&self) -> usize {
+        self.layers.iter().sum()
+    }
+
+    /// Human-readable strategy string matching the paper's Table-2 format.
+    pub fn strategy_string(&self) -> String {
+        format!("TP={},PP={}", self.tp(), self.pp())
+    }
+}
+
+impl std::fmt::Display for ReplicaConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} stages[", self.strategy_string())?;
+        for (i, s) in self.stages.iter().enumerate() {
+            if i > 0 {
+                write!(f, " | ")?;
+            }
+            write!(f, "{}l:{:?}", self.layers[i], s)?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let r = ReplicaConfig::new(vec![vec![0, 1], vec![2]], vec![30, 18]);
+        assert_eq!(r.pp(), 2);
+        assert_eq!(r.tp(), 2);
+        assert_eq!(r.n_devices(), 3);
+        assert_eq!(r.total_layers(), 48);
+        assert_eq!(r.devices(), vec![0, 1, 2]);
+        assert_eq!(r.strategy_string(), "TP=2,PP=2");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn rejects_mismatched_layers() {
+        ReplicaConfig::new(vec![vec![0]], vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty stage")]
+    fn rejects_empty_stage() {
+        ReplicaConfig::new(vec![vec![0], vec![]], vec![1, 2]);
+    }
+}

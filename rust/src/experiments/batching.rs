@@ -1,0 +1,121 @@
+//! Fig. 1: effects of batching on the two phases (LLaMA-2-7B, input 512, one
+//! A100) — prefill throughput saturates at 2048 batched tokens while latency
+//! keeps climbing; decode throughput scales with batch size.
+//! Fig. 5: the online trace's input/output length distributions.
+
+use crate::cluster::{Cluster, GpuType, LinkTier, NodeSpec};
+use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};
+use crate::model::LLAMA2_7B;
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+use crate::workload::azure;
+
+fn one_a100() -> Cluster {
+    Cluster::build(
+        "1xA100",
+        &[NodeSpec { gpu: GpuType::A100, count: 1, dc: 0 }],
+        |_, _| LinkTier::InfiniBand,
+    )
+}
+
+/// Fig. 1 rows: batched tokens vs prefill throughput/latency and batch size
+/// vs decode throughput/latency.
+pub fn fig1_batching() -> (Table, Table) {
+    let c = one_a100();
+    let m = LLAMA2_7B;
+    let cm = CostModel::new(&c, &m);
+    let cfg = ReplicaConfig::new(vec![vec![0]], vec![m.n_layers]);
+
+    let mut prefill = Table::new(&["batched tokens", "throughput (tokens/s)", "latency (s)"]);
+    for bt in [256, 512, 1024, 2048, 4096, 8192] {
+        let b = (bt / 512).max(1);
+        let t = TaskProfile::new(b, 512.0, 0.0);
+        let lat = cm.prefill_latency(&cfg, &t);
+        prefill.row(&[
+            bt.to_string(),
+            format!("{:.0}", (b as f64 * 512.0) / lat),
+            format!("{:.3}", lat),
+        ]);
+    }
+
+    let mut decode = Table::new(&["batch size", "throughput (tokens/s)", "latency (s/token)"]);
+    for b in [1usize, 4, 16, 32, 64, 128] {
+        let step = cm.decode_step_latency(&cfg, b, 512.0);
+        decode.row(&[
+            b.to_string(),
+            format!("{:.0}", b as f64 / step),
+            format!("{:.4}", step),
+        ]);
+    }
+    (prefill, decode)
+}
+
+/// Fig. 5: histogram of the Azure-conversation-like online trace lengths.
+pub fn fig5_trace(n: usize, seed: u64) -> Table {
+    let mut rng = Rng::new(seed);
+    let edges = [0usize, 128, 256, 512, 1024, 2048, 4096, usize::MAX];
+    let mut in_counts = vec![0usize; edges.len() - 1];
+    let mut out_counts = vec![0usize; edges.len() - 1];
+    let mut in_sum = 0usize;
+    let mut out_sum = 0usize;
+    for _ in 0..n {
+        let (i, o) = azure::sample_conversation(&mut rng);
+        in_sum += i;
+        out_sum += o;
+        for b in 0..edges.len() - 1 {
+            if i > edges[b] && i <= edges[b + 1] {
+                in_counts[b] += 1;
+            }
+            if o > edges[b] && o <= edges[b + 1] {
+                out_counts[b] += 1;
+            }
+        }
+    }
+    let mut t = Table::new(&["token bucket", "input %", "output %"]);
+    for b in 0..edges.len() - 1 {
+        let hi = if edges[b + 1] == usize::MAX { ">4096".to_string() } else { edges[b + 1].to_string() };
+        t.row(&[
+            format!("({}, {}]", edges[b], hi),
+            format!("{:.1}", 100.0 * in_counts[b] as f64 / n as f64),
+            format!("{:.1}", 100.0 * out_counts[b] as f64 / n as f64),
+        ]);
+    }
+    t.row(&[
+        "mean".to_string(),
+        format!("{:.0} tok", in_sum as f64 / n as f64),
+        format!("{:.0} tok", out_sum as f64 / n as f64),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_shapes_match_paper() {
+        let (prefill, decode) = fig1_batching();
+        // Prefill throughput at 2048 equals 4096/8192 (saturation), and is
+        // higher than at 256.
+        let tput = |t: &Table, i: usize| -> f64 { t_rows(t)[i][1].parse().unwrap() };
+        let lat = |t: &Table, i: usize| -> f64 { t_rows(t)[i][2].parse().unwrap() };
+        assert!(tput(&prefill, 3) > tput(&prefill, 0) * 3.0, "no prefill ramp");
+        assert!((tput(&prefill, 3) - tput(&prefill, 5)).abs() < 2.0, "no saturation");
+        assert!(lat(&prefill, 5) > lat(&prefill, 3) * 1.5, "latency must escalate");
+        // Decode throughput grows ~linearly at small batch.
+        assert!(tput(&decode, 3) > tput(&decode, 0) * 10.0, "no decode batching win");
+    }
+
+    // Table has no public row accessor; reparse its formatting buffer.
+    fn t_rows(t: &Table) -> Vec<Vec<String>> {
+        t.rows_for_test()
+    }
+
+    #[test]
+    fn fig5_distribution_sane() {
+        let t = fig5_trace(5000, 3);
+        let rows = t.rows_for_test();
+        let total_in: f64 = rows[..rows.len() - 1].iter().map(|r| r[1].parse::<f64>().unwrap()).sum();
+        assert!((total_in - 100.0).abs() < 2.0, "input buckets sum to {total_in}");
+    }
+}

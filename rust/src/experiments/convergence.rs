@@ -1,0 +1,172 @@
+//! Figs. 10 & 11 (§5.3): convergence of the scheduling algorithm — the full
+//! max-flow-guided edge swap vs the truncated random-swap variant vs the
+//! genetic algorithm, over het setting 1 and all four workloads, plus the
+//! resulting serving throughputs.
+
+use crate::cluster::settings;
+use crate::model::LlmSpec;
+use crate::scheduler::SwapMode;
+use crate::simulator::run_disaggregated;
+use crate::util::bench::Table;
+use crate::util::stats;
+use crate::workload::{Trace, WorkloadKind, OFFLINE_KINDS};
+
+use super::{convergence_curve, convergence_curve_ga, ExpOpts};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Guided,
+    RandomSwap,
+    Genetic,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Guided => "ours",
+            Strategy::RandomSwap => "ours w/o edge swap",
+            Strategy::Genetic => "genetic algorithm",
+        }
+    }
+
+    pub const ALL: [Strategy; 3] = [Strategy::Guided, Strategy::RandomSwap, Strategy::Genetic];
+}
+
+pub fn curve(
+    strategy: Strategy,
+    model: &LlmSpec,
+    kind: WorkloadKind,
+    seed: u64,
+    opts: &ExpOpts,
+) -> Vec<(f64, f64)> {
+    let c = settings::het1();
+    match strategy {
+        Strategy::Guided => convergence_curve(&c, model, kind, SwapMode::Guided, seed, opts),
+        Strategy::RandomSwap => convergence_curve(&c, model, kind, SwapMode::Random, seed, opts),
+        Strategy::Genetic => convergence_curve_ga(&c, model, kind, seed, opts),
+    }
+}
+
+/// Fig. 10: per strategy × workload, the final objective and the time to
+/// converge, aggregated over `runs` seeded repetitions (paper uses 15).
+pub fn fig10_convergence(model: &LlmSpec, runs: usize, opts: &ExpOpts) -> Table {
+    let mut t = Table::new(&[
+        "workload",
+        "strategy",
+        "final est. tokens/s (mean)",
+        "std",
+        "time to best (s, mean)",
+    ]);
+    for kind in OFFLINE_KINDS {
+        for strat in Strategy::ALL {
+            let mut finals = Vec::new();
+            let mut times = Vec::new();
+            for r in 0..runs {
+                let curve = curve_cached(strat, model, kind, r as u64, opts);
+                if let Some(&(_, best)) = curve.last() {
+                    finals.push(best);
+                    // First time reaching within 1% of the best value.
+                    let t_best = curve
+                        .iter()
+                        .find(|(_, v)| *v >= best * 0.99)
+                        .map(|(tt, _)| *tt)
+                        .unwrap_or(0.0);
+                    times.push(t_best);
+                }
+            }
+            t.row(&[
+                kind.name().to_string(),
+                strat.name().to_string(),
+                format!("{:.0}", stats::mean(&finals)),
+                format!("{:.0}", stats::stddev(&finals)),
+                format!("{:.2}", stats::mean(&times)),
+            ]);
+        }
+    }
+    t
+}
+
+fn curve_cached(
+    strat: Strategy,
+    model: &LlmSpec,
+    kind: WorkloadKind,
+    seed: u64,
+    opts: &ExpOpts,
+) -> Vec<(f64, f64)> {
+    curve(strat, model, kind, seed, opts)
+}
+
+/// Fig. 11: simulated serving throughput of the placements each strategy
+/// found (het setting 1, four workloads).
+pub fn fig11_throughput(model: &LlmSpec, opts: &ExpOpts) -> Table {
+    let c = settings::het1();
+    let mut t = Table::new(&["workload", "ours", "w/o edge swap", "genetic"]);
+    for kind in OFFLINE_KINDS {
+        let trace = Trace::offline(kind, opts.offline_n(), opts.seed + 5);
+        let mut cells = vec![kind.name().to_string()];
+        for strat in Strategy::ALL {
+            let tput = match strat {
+                Strategy::Guided | Strategy::RandomSwap => {
+                    let mut o = opts.sched_opts(kind);
+                    o.swap_mode = if strat == Strategy::Guided {
+                        SwapMode::Guided
+                    } else {
+                        SwapMode::Random
+                    };
+                    crate::scheduler::schedule(&c, model, &o)
+                        .map(|r| run_disaggregated(&c, model, &r.placement, &trace).tokens_per_s())
+                        .unwrap_or(0.0)
+                }
+                Strategy::Genetic => {
+                    let o = opts.sched_opts(kind);
+                    crate::scheduler::genetic::schedule_genetic(&c, model, &o)
+                        .map(|r| run_disaggregated(&c, model, &r.placement, &trace).tokens_per_s())
+                        .unwrap_or(0.0)
+                }
+            };
+            cells.push(format!("{tput:.0}"));
+        }
+        t.row(&cells);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::OPT_30B;
+
+    #[test]
+    fn curves_are_monotone_and_positive() {
+        let opts = ExpOpts { quick: true, seed: 0 };
+        for strat in Strategy::ALL {
+            let c = curve(strat, &OPT_30B, WorkloadKind::Lpld, 0, &opts);
+            assert!(!c.is_empty(), "{strat:?} empty curve");
+            for w in c.windows(2) {
+                assert!(w[1].1 >= w[0].1 - 1e-9, "{strat:?} regressed");
+                assert!(w[1].0 >= w[0].0, "{strat:?} time went backwards");
+            }
+            assert!(c.last().unwrap().1 > 0.0);
+        }
+    }
+
+    #[test]
+    fn guided_final_at_least_random() {
+        // The paper's headline §5.3 claim, in expectation. Use 2 seeds and
+        // compare means to keep the test fast yet stable.
+        let opts = ExpOpts { quick: true, seed: 0 };
+        let avg = |strat| {
+            let mut s = 0.0;
+            for seed in 0..2u64 {
+                s += curve(strat, &OPT_30B, WorkloadKind::Hphd, seed, &opts)
+                    .last()
+                    .map(|x| x.1)
+                    .unwrap_or(0.0);
+            }
+            s / 2.0
+        };
+        let g = avg(Strategy::Guided);
+        let r = avg(Strategy::RandomSwap);
+        assert!(g >= r * 0.95, "guided {g} well below random {r}");
+    }
+}

@@ -1,0 +1,157 @@
+//! Figs. 6, 7, 8, 9: the end-to-end throughput/latency grids — HexGen-2 vs
+//! HexGen on the heterogeneous settings and DistServe on the homogeneous
+//! setting, across the four offline workload classes plus the online trace;
+//! the 70%-budget cost-efficiency study (Fig. 9).
+
+use crate::cluster::settings;
+use crate::model::LlmSpec;
+use crate::util::bench::Table;
+use crate::workload::OFFLINE_KINDS;
+
+use super::{offline_run, online_rate, online_run, ExpOpts, System};
+
+/// One row of the Fig. 6/7 grid: system × setting → 4 offline workloads +
+/// online, all in tokens/s.
+fn grid_row(
+    sys: System,
+    setting: &str,
+    model: &LlmSpec,
+    opts: &ExpOpts,
+) -> Option<Vec<String>> {
+    let cluster = settings::by_name(setting)?;
+    let mut cells = vec![setting.to_string(), sys.name().to_string()];
+    for kind in OFFLINE_KINDS {
+        let t = offline_run(sys, &cluster, model, kind, opts)
+            .map(|r| r.tokens_per_s())
+            .unwrap_or(0.0);
+        cells.push(format!("{t:.0}"));
+    }
+    let rate = online_rate(&cluster, model, opts);
+    let t = online_run(sys, &cluster, model, rate, opts).map(|r| r.tokens_per_s()).unwrap_or(0.0);
+    cells.push(format!("{t:.0}"));
+    Some(cells)
+}
+
+/// Fig. 6 (LLaMA-2-70B) / Fig. 7 (OPT-30B): heterogeneous settings 1..4
+/// (HexGen-2 vs HexGen) plus the homogeneous DistServe reference.
+pub fn fig6_7_grid(model: &LlmSpec, het_settings: &[&str], opts: &ExpOpts) -> Table {
+    let mut t = Table::new(&[
+        "setting", "system", "HPLD", "HPHD", "LPHD", "LPLD", "Online",
+    ]);
+    for s in het_settings {
+        for sys in [System::HexGen2, System::HexGen] {
+            if let Some(row) = grid_row(sys, s, model, opts) {
+                t.row(&row);
+            }
+        }
+    }
+    if let Some(row) = grid_row(System::DistServe, "homogeneous", model, opts) {
+        t.row(&row);
+    }
+    t
+}
+
+/// Fig. 8: online latency comparison — average latency and the SLO scale at
+/// 99% attainment per system/setting.
+pub fn fig8_latency(model: &LlmSpec, het_settings: &[&str], opts: &ExpOpts) -> Table {
+    let mut t = Table::new(&[
+        "setting", "system", "avg latency (s)", "p95 (s)", "SLO scale @99%",
+    ]);
+    let mut run = |sys: System, setting: &str| {
+        let Some(cluster) = settings::by_name(setting) else { return };
+        let rate = online_rate(&cluster, model, opts);
+        if let Some(rep) = online_run(sys, &cluster, model, rate, opts) {
+            t.row(&[
+                setting.to_string(),
+                sys.name().to_string(),
+                format!("{:.2}", rep.avg_latency()),
+                format!("{:.2}", rep.p_latency(95.0)),
+                format!("{:.1}", rep.slo_scale_for_attainment(0.99)),
+            ]);
+        }
+    };
+    for s in het_settings {
+        run(System::HexGen2, s);
+        run(System::HexGen, s);
+    }
+    run(System::DistServe, "homogeneous");
+    t
+}
+
+/// Fig. 9: HexGen-2 on het5 (70% budget) vs DistServe on the homogeneous
+/// setting, per workload.
+pub fn fig9_budget(model: &LlmSpec, opts: &ExpOpts) -> Table {
+    let het5 = settings::het5();
+    let hom = settings::homogeneous();
+    let mut t = Table::new(&[
+        "workload",
+        "HEXGEN-2 het5 (70% budget)",
+        "DISTSERVE homogeneous",
+        "ratio",
+    ]);
+    for kind in OFFLINE_KINDS {
+        let a = offline_run(System::HexGen2, &het5, model, kind, opts)
+            .map(|r| r.tokens_per_s())
+            .unwrap_or(0.0);
+        let b = offline_run(System::DistServe, &hom, model, kind, opts)
+            .map(|r| r.tokens_per_s())
+            .unwrap_or(0.0);
+        t.row(&[
+            kind.name().to_string(),
+            format!("{a:.0}"),
+            format!("{b:.0}"),
+            format!("{:.2}", if b > 0.0 { a / b } else { 0.0 }),
+        ]);
+    }
+    t
+}
+
+/// Summary ratios used by EXPERIMENTS.md: geometric-mean HexGen-2/baseline
+/// speedups over a grid table produced by `fig6_7_grid`.
+pub fn speedup_summary(t: &Table) -> Vec<(String, f64)> {
+    let rows = t.rows_for_test();
+    let mut out = Vec::new();
+    // Pair HEXGEN-2 rows with the HEXGEN row of the same setting.
+    for w in rows.windows(2) {
+        if w[0][1] == "HEXGEN-2" && w[1][1] == "HEXGEN" && w[0][0] == w[1][0] {
+            let mut logsum = 0.0;
+            let mut n = 0;
+            for c in 2..w[0].len() {
+                let a: f64 = w[0][c].parse().unwrap_or(0.0);
+                let b: f64 = w[1][c].parse().unwrap_or(0.0);
+                if a > 0.0 && b > 0.0 {
+                    logsum += (a / b).ln();
+                    n += 1;
+                }
+            }
+            if n > 0 {
+                out.push((w[0][0].clone(), (logsum / n as f64).exp()));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::OPT_30B;
+
+    #[test]
+    fn small_grid_runs() {
+        // One het setting, quick mode: the full grid is exercised by benches.
+        let opts = ExpOpts { quick: true, seed: 3 };
+        let t = fig6_7_grid(&OPT_30B, &["het4"], &opts);
+        let rows = t.rows_for_test();
+        assert_eq!(rows.len(), 3); // hexgen2, hexgen, distserve
+        for r in &rows {
+            for c in &r[2..] {
+                let v: f64 = c.parse().unwrap();
+                assert!(v > 0.0, "zero cell in {r:?}");
+            }
+        }
+        let sp = speedup_summary(&t);
+        assert_eq!(sp.len(), 1);
+        assert!(sp[0].1 > 0.3, "HexGen-2 catastrophically behind: {sp:?}");
+    }
+}

@@ -1,0 +1,221 @@
+//! Experiment harnesses: one runner per table/figure of the paper's
+//! evaluation (§5 + appendices). Each returns printable rows so the benches
+//! (`rust/benches/`) and the CLI (`hexgen2 experiments <id>`) regenerate the
+//! paper artifacts; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod batching;
+pub mod convergence;
+pub mod endtoend;
+pub mod tables;
+
+use crate::baselines::{distserve, hexgen, vllm};
+use crate::cluster::Cluster;
+use crate::model::LlmSpec;
+use crate::scheduler::{self, ScheduleOptions, SwapMode};
+use crate::simulator::{run_colocated, run_disaggregated, SimReport};
+use crate::workload::{Trace, WorkloadKind};
+
+/// Shared experiment options. `quick` shrinks traces and search budgets for
+/// CI-speed runs (`cargo bench` default); full mode feeds EXPERIMENTS.md.
+#[derive(Clone, Copy, Debug)]
+pub struct ExpOpts {
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl ExpOpts {
+    pub fn quick() -> ExpOpts {
+        ExpOpts { quick: true, seed: 0 }
+    }
+
+    pub fn full() -> ExpOpts {
+        ExpOpts { quick: false, seed: 0 }
+    }
+
+    pub fn from_env() -> ExpOpts {
+        if std::env::var("HEXGEN2_FULL").is_ok() {
+            ExpOpts::full()
+        } else {
+            ExpOpts::quick()
+        }
+    }
+
+    pub fn offline_n(&self) -> usize {
+        if self.quick {
+            80
+        } else {
+            300
+        }
+    }
+
+    pub fn online_duration(&self) -> f64 {
+        if self.quick {
+            120.0
+        } else {
+            600.0
+        }
+    }
+
+    pub fn sched_opts(&self, kind: WorkloadKind) -> ScheduleOptions {
+        let mut o = ScheduleOptions::new(kind);
+        o.seed = self.seed;
+        if self.quick {
+            o.max_rounds = 10;
+            o.patience = 4;
+            o.proposals_per_round = 8;
+            o.type_candidates = 4;
+        }
+        o
+    }
+
+    pub fn ga_generations(&self) -> usize {
+        if self.quick {
+            6
+        } else {
+            25
+        }
+    }
+}
+
+/// The compared systems (§5.1 Baselines + Appendix F).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum System {
+    HexGen2,
+    HexGen,
+    DistServe,
+    Vllm,
+}
+
+impl System {
+    pub fn name(self) -> &'static str {
+        match self {
+            System::HexGen2 => "HEXGEN-2",
+            System::HexGen => "HEXGEN",
+            System::DistServe => "DISTSERVE",
+            System::Vllm => "VLLM",
+        }
+    }
+}
+
+/// Run one (system, cluster, model, workload) cell: offline trace → tokens/s.
+pub fn offline_run(
+    sys: System,
+    cluster: &Cluster,
+    model: &LlmSpec,
+    kind: WorkloadKind,
+    opts: &ExpOpts,
+) -> Option<SimReport> {
+    let trace = Trace::offline(kind, opts.offline_n(), opts.seed.wrapping_add(17));
+    run_trace(sys, cluster, model, kind, &trace, opts)
+}
+
+/// Run one online cell at `rate` req/s.
+pub fn online_run(
+    sys: System,
+    cluster: &Cluster,
+    model: &LlmSpec,
+    rate: f64,
+    opts: &ExpOpts,
+) -> Option<SimReport> {
+    let trace = Trace::online(WorkloadKind::Online, rate, opts.online_duration(), opts.seed + 29);
+    run_trace(sys, cluster, model, WorkloadKind::Online, &trace, opts)
+}
+
+fn run_trace(
+    sys: System,
+    cluster: &Cluster,
+    model: &LlmSpec,
+    kind: WorkloadKind,
+    trace: &Trace,
+    opts: &ExpOpts,
+) -> Option<SimReport> {
+    match sys {
+        System::HexGen2 => {
+            let r = scheduler::schedule(cluster, model, &opts.sched_opts(kind))?;
+            Some(run_disaggregated(cluster, model, &r.placement, trace))
+        }
+        System::HexGen => {
+            let plan =
+                hexgen::schedule_hexgen(cluster, model, kind, opts.seed, opts.ga_generations())?;
+            Some(run_colocated(cluster, model, &plan.replicas, trace, None))
+        }
+        System::DistServe => {
+            let plan = distserve::schedule_distserve(cluster, model, kind)?;
+            Some(run_disaggregated(cluster, model, &plan.placement, trace))
+        }
+        System::Vllm => {
+            let plan = vllm::schedule_vllm(cluster, model, kind)?;
+            Some(run_colocated(cluster, model, &plan.replicas, trace, None))
+        }
+    }
+}
+
+/// Online arrival rate for a cluster: 75% of HexGen-2's estimated peak
+/// (§5.1 "we scale the average arrival rate to 75% of the cluster's peak
+/// throughput"). Same rate is used for every system on that cluster.
+pub fn online_rate(cluster: &Cluster, model: &LlmSpec, opts: &ExpOpts) -> f64 {
+    let o = opts.sched_opts(WorkloadKind::Online);
+    let peak_tokens = scheduler::schedule(cluster, model, &o)
+        .map(|r| r.placement.tokens_per_s)
+        .unwrap_or(100.0);
+    let (_s_in, s_out) = WorkloadKind::Online.mean_lengths();
+    0.75 * peak_tokens / s_out
+}
+
+/// Convergence curve of one scheduler variant (Fig. 10 axes).
+pub fn convergence_curve(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    kind: WorkloadKind,
+    mode: SwapMode,
+    seed: u64,
+    opts: &ExpOpts,
+) -> Vec<(f64, f64)> {
+    let mut o = opts.sched_opts(kind);
+    o.seed = seed;
+    o.swap_mode = mode;
+    scheduler::schedule(cluster, model, &o)
+        .map(|r| r.history.iter().map(|p| (p.elapsed_s, p.tokens_per_s)).collect())
+        .unwrap_or_default()
+}
+
+pub fn convergence_curve_ga(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    kind: WorkloadKind,
+    seed: u64,
+    opts: &ExpOpts,
+) -> Vec<(f64, f64)> {
+    let mut o = opts.sched_opts(kind);
+    o.seed = seed;
+    scheduler::genetic::schedule_genetic(cluster, model, &o)
+        .map(|r| r.history.iter().map(|p| (p.elapsed_s, p.tokens_per_s)).collect())
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::model::OPT_30B;
+
+    #[test]
+    fn every_system_produces_throughput() {
+        let opts = ExpOpts { quick: true, seed: 1 };
+        let hom = settings::homogeneous_small();
+        for sys in [System::HexGen2, System::HexGen, System::DistServe, System::Vllm] {
+            let rep = offline_run(sys, &hom, &OPT_30B, WorkloadKind::Lpld, &opts)
+                .unwrap_or_else(|| panic!("{sys:?} failed"));
+            assert!(rep.tokens_per_s() > 0.0, "{sys:?} zero throughput");
+            assert_eq!(rep.records.len(), opts.offline_n(), "{sys:?} lost requests");
+        }
+    }
+
+    #[test]
+    fn online_rate_positive() {
+        let opts = ExpOpts { quick: true, seed: 2 };
+        let c = settings::homogeneous_small();
+        let r = online_rate(&c, &OPT_30B, &opts);
+        assert!(r > 0.0 && r.is_finite());
+    }
+}

@@ -1,0 +1,160 @@
+//! Tables 2–5 and Appendix D:
+//! - Table 2: the placements HexGen-2 chooses per setting (GPU composition,
+//!   TP/PP strategy, instance type).
+//! - Table 3: framework comparison on het1 + homogeneous (incl. vLLM).
+//! - Table 4: homogeneous 4xH100 case study (Appendix G).
+//! - Table 5: scheduler convergence time vs cluster size (Appendix H).
+//! - Appendix D: chunked prefill vs plain colocation per workload.
+
+use std::time::Instant;
+
+use crate::cluster::settings;
+use crate::baselines::vllm;
+use crate::model::LlmSpec;
+use crate::simulator::run_colocated;
+use crate::util::bench::Table;
+use crate::workload::{Trace, WorkloadKind, OFFLINE_KINDS};
+
+use super::{offline_run, online_rate, online_run, ExpOpts, System};
+
+/// Table 2: describe the placement chosen for a setting (online workload).
+pub fn table2_placement(setting: &str, model: &LlmSpec, opts: &ExpOpts) -> Option<String> {
+    let cluster = settings::by_name(setting)?;
+    let o = opts.sched_opts(WorkloadKind::Online);
+    let r = crate::scheduler::schedule(&cluster, model, &o)?;
+    Some(format!(
+        "{} / {} (K={} groups, {} rounds, {:.1}s)\n{}",
+        setting,
+        model.name,
+        r.placement.groups.len(),
+        r.rounds,
+        r.elapsed_s,
+        r.placement.describe(&cluster)
+    ))
+}
+
+/// Table 3: HexGen-2 & HexGen on het1; DistServe & vLLM on homogeneous —
+/// across the four offline workloads + online (tokens/s).
+pub fn table3_frameworks(model: &LlmSpec, opts: &ExpOpts) -> Table {
+    let het1 = settings::het1();
+    let hom = settings::homogeneous();
+    let mut t = Table::new(&["setting", "system", "HPLD", "HPHD", "LPHD", "LPLD", "Online"]);
+    let combos: [(&str, System, &crate::cluster::Cluster); 4] = [
+        ("het1", System::HexGen2, &het1),
+        ("het1", System::HexGen, &het1),
+        ("homogeneous", System::DistServe, &hom),
+        ("homogeneous", System::Vllm, &hom),
+    ];
+    for (name, sys, cluster) in combos {
+        let mut cells = vec![name.to_string(), sys.name().to_string()];
+        for kind in OFFLINE_KINDS {
+            let v = offline_run(sys, cluster, model, kind, opts)
+                .map(|r| r.tokens_per_s())
+                .unwrap_or(0.0);
+            cells.push(format!("{v:.0}"));
+        }
+        let rate = online_rate(cluster, model, opts);
+        let v = online_run(sys, cluster, model, rate, opts)
+            .map(|r| r.tokens_per_s())
+            .unwrap_or(0.0);
+        cells.push(format!("{v:.0}"));
+        t.row(&cells);
+    }
+    t
+}
+
+/// Table 4 (Appendix G): 4xH100, OPT-30B, all three systems.
+pub fn table4_homogeneous(model: &LlmSpec, opts: &ExpOpts) -> Table {
+    let c = settings::homogeneous_small();
+    let mut t = Table::new(&["workload", "HEXGEN-2", "DISTSERVE", "HEXGEN"]);
+    for kind in OFFLINE_KINDS {
+        let mut cells = vec![kind.name().to_string()];
+        for sys in [System::HexGen2, System::DistServe, System::HexGen] {
+            let v = offline_run(sys, &c, model, kind, opts).map(|r| r.tokens_per_s()).unwrap_or(0.0);
+            cells.push(format!("{v:.0}"));
+        }
+        t.row(&cells);
+    }
+    t
+}
+
+/// Table 5 (Appendix H): scheduler convergence time vs cluster size.
+pub fn table5_scalability(model: &LlmSpec, sizes: &[usize], opts: &ExpOpts) -> Table {
+    let mut t = Table::new(&["Ngpus", "time (s)", "est. tokens/s", "groups"]);
+    for &n in sizes {
+        let c = settings::synthetic(n, 11);
+        let mut o = opts.sched_opts(WorkloadKind::Online);
+        if opts.quick {
+            o.max_rounds = 4;
+            o.patience = 2;
+            o.proposals_per_round = 4;
+            o.type_candidates = 2;
+        }
+        let t0 = Instant::now();
+        match crate::scheduler::schedule(&c, model, &o) {
+            Some(r) => t.row(&[
+                n.to_string(),
+                format!("{:.2}", t0.elapsed().as_secs_f64()),
+                format!("{:.0}", r.placement.tokens_per_s),
+                r.placement.groups.len().to_string(),
+            ]),
+            None => t.row(&[n.to_string(), "failed".into(), "-".into(), "-".into()]),
+        }
+    }
+    t
+}
+
+/// Appendix D: vLLM-style colocation, plain vs chunked prefill, per workload
+/// (homogeneous, one H100-class engine).
+pub fn appd_chunked_prefill(model: &LlmSpec, opts: &ExpOpts) -> Table {
+    let c = settings::homogeneous();
+    let plan = vllm::schedule_vllm(&c, model, WorkloadKind::Hphd).expect("vllm plan");
+    let mut t = Table::new(&["workload", "plain (tokens/s)", "chunked (tokens/s)", "gain"]);
+    for kind in OFFLINE_KINDS {
+        let trace = Trace::offline(kind, opts.offline_n(), opts.seed + 31);
+        let plain = run_colocated(&c, model, &plan.replicas, &trace, None).tokens_per_s();
+        let chunked = run_colocated(&c, model, &plan.replicas, &trace, Some(512)).tokens_per_s();
+        t.row(&[
+            kind.name().to_string(),
+            format!("{plain:.0}"),
+            format!("{chunked:.0}"),
+            format!("{:+.0}%", 100.0 * (chunked / plain - 1.0)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::OPT_30B;
+
+    #[test]
+    fn table2_shows_both_instance_types() {
+        let opts = ExpOpts { quick: true, seed: 1 };
+        let s = table2_placement("het4", &OPT_30B, &opts).expect("placement");
+        assert!(s.contains("Prefill Instance"), "{s}");
+        assert!(s.contains("Decode Instance"), "{s}");
+        assert!(s.contains("TP="), "{s}");
+    }
+
+    #[test]
+    fn table4_cells_positive() {
+        let opts = ExpOpts { quick: true, seed: 2 };
+        let t = table4_homogeneous(&OPT_30B, &opts);
+        for row in t.rows_for_test() {
+            for c in &row[1..] {
+                assert!(c.parse::<f64>().unwrap() > 0.0, "{row:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn table5_runs_small() {
+        let opts = ExpOpts { quick: true, seed: 0 };
+        let t = table5_scalability(&OPT_30B, &[16, 24], &opts);
+        let rows = t.rows_for_test();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0][1].parse::<f64>().is_ok());
+    }
+}

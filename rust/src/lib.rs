@@ -1,0 +1,27 @@
+//! # HexGen-2: disaggregated LLM inference over heterogeneous GPUs
+//!
+//! A from-scratch reproduction of *HexGen-2: Disaggregated Generative
+//! Inference of LLMs in Heterogeneous Environment* (ICLR 2025) as a
+//! three-layer Rust + JAX + Pallas system. See DESIGN.md for the full
+//! inventory and EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layering:
+//! - **Layer 3 (this crate)**: the scheduling algorithm (§3 of the paper:
+//!   graph partition → max-flow → iterative refinement), the disaggregated
+//!   serving coordinator, the discrete-event cluster simulator, baselines,
+//!   and the experiment harnesses.
+//! - **Layer 2/1 (python/compile)**: the JAX transformer + Pallas kernels,
+//!   AOT-lowered to HLO text once; `runtime` executes those artifacts via
+//!   PJRT with Python never on the request path.
+
+pub mod baselines;
+pub mod cluster;
+pub mod coordinator;
+pub mod costmodel;
+pub mod experiments;
+pub mod model;
+pub mod util;
+pub mod runtime;
+pub mod scheduler;
+pub mod simulator;
+pub mod workload;

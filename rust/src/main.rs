@@ -1,0 +1,340 @@
+//! `hexgen2` — CLI for the HexGen-2 reproduction.
+//!
+//! Subcommands:
+//!   schedule     run the scheduling algorithm on a cluster setting
+//!   simulate     simulate a system serving a workload on a setting
+//!   serve        live disaggregated serving over the AOT artifacts
+//!   workload     generate and dump a request trace (JSON)
+//!   experiments  regenerate a paper figure/table by id
+//!   settings     print the cluster settings (paper Fig. 4)
+
+use anyhow::{anyhow, bail, Result};
+
+use hexgen2::baselines::{distserve, hexgen, vllm};
+use hexgen2::cluster::settings;
+use hexgen2::coordinator::{self, CoordinatorConfig, LiveRequest};
+use hexgen2::experiments::{self, ExpOpts};
+use hexgen2::model::LlmSpec;
+use hexgen2::scheduler::{self, ScheduleOptions, SwapMode};
+use hexgen2::simulator::{run_colocated, run_disaggregated, SimReport};
+use hexgen2::util::args::Args;
+use hexgen2::util::json;
+use hexgen2::util::rng::Rng;
+use hexgen2::workload::{Trace, WorkloadKind};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["quick", "full", "verbose", "no-refine"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cluster_of(args: &Args) -> Result<hexgen2::cluster::Cluster> {
+    let name = args.get_or("setting", "het1");
+    settings::by_name(name)
+        .ok_or_else(|| anyhow!("unknown setting {name} (try: {:?})", settings::PAPER_SETTINGS))
+}
+
+fn model_of(args: &Args) -> Result<LlmSpec> {
+    let name = args.get_or("model", "llama2-70b");
+    LlmSpec::by_name(name).ok_or_else(|| anyhow!("unknown model {name}"))
+}
+
+fn workload_of(args: &Args) -> Result<WorkloadKind> {
+    let name = args.get_or("workload", "online");
+    WorkloadKind::from_name(name).ok_or_else(|| anyhow!("unknown workload {name}"))
+}
+
+fn print_report(label: &str, rep: &SimReport) {
+    println!(
+        "{label}: {} requests, {:.0} tokens/s, avg latency {:.2}s, p95 {:.2}s, TTFT {:.2}s, SLO@99 scale {:.1}",
+        rep.records.len(),
+        rep.tokens_per_s(),
+        rep.avg_latency(),
+        rep.p_latency(95.0),
+        rep.avg_ttft(),
+        rep.slo_scale_for_attainment(0.99),
+    );
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "schedule" => {
+            let cluster = cluster_of(args)?;
+            let model = model_of(args)?;
+            let mut opts = ScheduleOptions::new(workload_of(args)?);
+            opts.seed = args.get_u64("seed", 0);
+            opts.max_rounds = args.get_usize("rounds", opts.max_rounds);
+            if args.has("no-refine") {
+                opts.swap_mode = SwapMode::None;
+            }
+            match args.get_or("algorithm", "ours") {
+                "ours" => {}
+                "random" => opts.swap_mode = SwapMode::Random,
+                "genetic" => {
+                    let r = scheduler::genetic::schedule_genetic(&cluster, &model, &opts)
+                        .ok_or_else(|| anyhow!("GA found no feasible placement"))?;
+                    println!("{}", r.placement.describe(&cluster));
+                    return Ok(());
+                }
+                other => bail!("unknown algorithm {other}"),
+            }
+            let r = scheduler::schedule(&cluster, &model, &opts)
+                .ok_or_else(|| anyhow!("no feasible placement"))?;
+            println!(
+                "scheduled {} on {} in {:.2}s ({} rounds)",
+                model.name, cluster.name, r.elapsed_s, r.rounds
+            );
+            println!("{}", r.placement.describe(&cluster));
+            if args.has("verbose") {
+                println!("convergence:");
+                for p in &r.history {
+                    println!("  t={:.2}s round={} est={:.0} tok/s", p.elapsed_s, p.round, p.tokens_per_s);
+                }
+            }
+        }
+        "simulate" => {
+            let cluster = cluster_of(args)?;
+            let model = model_of(args)?;
+            let kind = workload_of(args)?;
+            let n = args.get_usize("requests", 100);
+            let seed = args.get_u64("seed", 0);
+            let sys = args.get_or("system", "hexgen2");
+            let trace = if kind == WorkloadKind::Online {
+                let opts = ExpOpts { quick: true, seed };
+                let rate = args
+                    .get("rate")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or_else(|| experiments::online_rate(&cluster, &model, &opts));
+                println!("online rate: {rate:.2} req/s");
+                Trace::online(kind, rate, args.get_f64("duration", 120.0), seed)
+            } else {
+                Trace::offline(kind, n, seed)
+            };
+            let rep = match sys {
+                "hexgen2" => {
+                    let mut opts = ScheduleOptions::new(kind);
+                    opts.seed = seed;
+                    let r = scheduler::schedule(&cluster, &model, &opts)
+                        .ok_or_else(|| anyhow!("no placement"))?;
+                    println!("placement:\n{}", r.placement.describe(&cluster));
+                    run_disaggregated(&cluster, &model, &r.placement, &trace)
+                }
+                "hexgen" => {
+                    let plan = hexgen::schedule_hexgen(&cluster, &model, kind, seed, 15)
+                        .ok_or_else(|| anyhow!("no hexgen plan"))?;
+                    run_colocated(&cluster, &model, &plan.replicas, &trace, None)
+                }
+                "distserve" => {
+                    let plan = distserve::schedule_distserve(&cluster, &model, kind)
+                        .ok_or_else(|| anyhow!("no distserve plan"))?;
+                    run_disaggregated(&cluster, &model, &plan.placement, &trace)
+                }
+                "vllm" => {
+                    let plan = vllm::schedule_vllm(&cluster, &model, kind)
+                        .ok_or_else(|| anyhow!("no vllm plan"))?;
+                    let chunk = args.get("chunk").and_then(|c| c.parse().ok());
+                    run_colocated(&cluster, &model, &plan.replicas, &trace, chunk)
+                }
+                other => bail!("unknown system {other}"),
+            };
+            print_report(&format!("{sys} on {} ({})", cluster.name, kind.name()), &rep);
+        }
+        "serve" => {
+            let mut cfg = CoordinatorConfig::new(args.get_or("model", "tiny"));
+            cfg.n_prefill = args.get_usize("prefill", 2);
+            cfg.n_decode = args.get_usize("decode", 1);
+            if let Some(bw) = args.get("throttle-mbps").and_then(|s| s.parse::<f64>().ok()) {
+                cfg.kv_throttle = Some(coordinator::KvThrottle { bytes_per_s: bw * 1e6 / 8.0 });
+            }
+            let n = args.get_usize("requests", 16);
+            let seed = args.get_u64("seed", 0);
+            let mut rng = Rng::new(seed);
+            let manifests = hexgen2::runtime::load_manifests(&cfg.artifacts)?;
+            let mm = manifests
+                .get(&cfg.model)
+                .ok_or_else(|| anyhow!("model {} not in artifacts", cfg.model))?;
+            let max_prompt = mm.prefill_modules().map(|m| m.seq).max().unwrap_or(64);
+            let vocab = mm.config.vocab;
+            let reqs: Vec<LiveRequest> = (0..n)
+                .map(|id| {
+                    let len = rng.range(8, max_prompt.min(mm.config.max_seq / 2));
+                    LiveRequest {
+                        id,
+                        tokens: (0..len).map(|_| rng.range(0, vocab) as i32).collect(),
+                        output_len: rng.range(4, 24),
+                    }
+                })
+                .collect();
+            let total_in: usize = reqs.iter().map(|r| r.tokens.len()).sum();
+            println!(
+                "serving {n} requests ({total_in} prompt tokens) on {} prefill + {} decode workers...",
+                cfg.n_prefill, cfg.n_decode
+            );
+            let rep = coordinator::serve(&cfg, reqs)?;
+            print_report("live", &rep.report);
+            println!(
+                "kv transferred: {:.1} MiB total; wall {:.2}s (incl. module compile)",
+                rep.kv_bytes_total as f64 / (1 << 20) as f64,
+                rep.elapsed_s
+            );
+            if args.has("verbose") {
+                for (id, toks) in rep.outputs.iter().take(4) {
+                    println!("  req {id}: {toks:?}");
+                }
+            }
+        }
+        "workload" => {
+            let kind = workload_of(args)?;
+            let n = args.get_usize("n", 10);
+            let trace = if kind == WorkloadKind::Online {
+                Trace::online(
+                    kind,
+                    args.get_f64("rate", 2.0),
+                    args.get_f64("duration", 30.0),
+                    args.get_u64("seed", 0),
+                )
+            } else {
+                Trace::offline(kind, n, args.get_u64("seed", 0))
+            };
+            let rows: Vec<json::Json> = trace
+                .requests
+                .iter()
+                .map(|r| {
+                    json::obj(vec![
+                        ("id", json::num(r.id as f64)),
+                        ("arrival", json::num(r.arrival)),
+                        ("input_len", json::num(r.input_len as f64)),
+                        ("output_len", json::num(r.output_len as f64)),
+                    ])
+                })
+                .collect();
+            println!("{}", json::arr(rows).to_string_pretty());
+        }
+        "experiments" => {
+            let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("list");
+            let opts = if args.has("full") { ExpOpts::full() } else { ExpOpts::from_env() };
+            run_experiment(id, &opts, args)?;
+        }
+        "settings" => {
+            for name in settings::PAPER_SETTINGS {
+                let c = settings::by_name(name).unwrap();
+                println!("{}", c.bandwidth_matrix_gbps());
+            }
+        }
+        _ => {
+            println!(
+                "hexgen2 — disaggregated LLM inference over heterogeneous GPUs (ICLR'25 reproduction)\n\n\
+                 usage: hexgen2 <command> [options]\n\n\
+                 commands:\n\
+                 \x20 schedule    --setting het1 --model llama2-70b --workload online [--algorithm ours|random|genetic] [--verbose]\n\
+                 \x20 simulate    --setting het1 --model opt-30b --workload hphd --system hexgen2|hexgen|distserve|vllm [--requests N]\n\
+                 \x20 serve       --model tiny --requests 16 --prefill 2 --decode 1 [--throttle-mbps N] [--verbose]\n\
+                 \x20 workload    --workload hpld --n 10\n\
+                 \x20 experiments <fig1|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table2|table3|table4|table5|appd|all> [--full]\n\
+                 \x20 settings    print bandwidth matrices (paper Fig. 4)"
+            );
+        }
+    }
+    Ok(())
+}
+
+fn run_experiment(id: &str, opts: &ExpOpts, args: &Args) -> Result<()> {
+    use hexgen2::experiments::{batching, convergence, endtoend, tables};
+    use hexgen2::model::{LLAMA2_70B, OPT_30B};
+    let het_all = ["het1", "het2", "het3", "het4"];
+    let het_quick = ["het1", "het4"];
+    let hets: &[&str] = if opts.quick { &het_quick } else { &het_all };
+    match id {
+        "list" => {
+            println!("experiments: fig1 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 table2 table3 table4 table5 appd all");
+        }
+        "fig1" => {
+            let (p, d) = batching::fig1_batching();
+            p.print("Fig. 1a: prefill batching (LLaMA-2-7B, 1xA100)");
+            d.print("Fig. 1b: decode batching (LLaMA-2-7B, 1xA100)");
+        }
+        "fig4" => {
+            for name in settings::PAPER_SETTINGS {
+                println!("{}", settings::by_name(name).unwrap().bandwidth_matrix_gbps());
+            }
+        }
+        "fig5" => {
+            batching::fig5_trace(20_000, 7).print("Fig. 5: online trace length distribution");
+        }
+        "fig6" => {
+            let t = endtoend::fig6_7_grid(&LLAMA2_70B, hets, opts);
+            t.print("Fig. 6: LLaMA-2-70B throughput (tokens/s)");
+            for (s, sp) in endtoend::speedup_summary(&t) {
+                println!("  {s}: HEXGEN-2 / HEXGEN geo-mean speedup = {sp:.2}x");
+            }
+        }
+        "fig7" => {
+            let t = endtoend::fig6_7_grid(&OPT_30B, hets, opts);
+            t.print("Fig. 7: OPT-30B throughput (tokens/s)");
+            for (s, sp) in endtoend::speedup_summary(&t) {
+                println!("  {s}: HEXGEN-2 / HEXGEN geo-mean speedup = {sp:.2}x");
+            }
+        }
+        "fig8" => {
+            endtoend::fig8_latency(&LLAMA2_70B, hets, opts).print("Fig. 8: online latency");
+        }
+        "fig9" => {
+            endtoend::fig9_budget(&LLAMA2_70B, opts)
+                .print("Fig. 9: 70% budget (het5) vs DistServe homogeneous, LLaMA-2-70B");
+        }
+        "fig10" => {
+            let runs = args.get_usize("runs", if opts.quick { 3 } else { 15 });
+            convergence::fig10_convergence(&OPT_30B, runs, opts)
+                .print("Fig. 10: scheduler convergence (het1, OPT-30B)");
+        }
+        "fig11" => {
+            convergence::fig11_throughput(&OPT_30B, opts)
+                .print("Fig. 11: scheduler-variant throughput (het1, OPT-30B)");
+        }
+        "table2" => {
+            for setting in hets {
+                for m in [&LLAMA2_70B, &OPT_30B] {
+                    if let Some(s) = tables::table2_placement(setting, m, opts) {
+                        println!("--- {s}");
+                    }
+                }
+            }
+        }
+        "table3" => {
+            tables::table3_frameworks(&LLAMA2_70B, opts)
+                .print("Table 3: framework comparison (LLaMA-2-70B)");
+        }
+        "table4" => {
+            tables::table4_homogeneous(&OPT_30B, opts)
+                .print("Table 4: homogeneous 4xH100 (OPT-30B)");
+        }
+        "table5" => {
+            let sizes: Vec<usize> =
+                if opts.quick { vec![16, 32, 64] } else { vec![64, 128, 192, 256, 320] };
+            tables::table5_scalability(&LLAMA2_70B, &sizes, opts)
+                .print("Table 5: scheduler scalability");
+        }
+        "appd" => {
+            tables::appd_chunked_prefill(&OPT_30B, opts)
+                .print("Appendix D: chunked prefill vs plain colocation (OPT-30B)");
+        }
+        "all" => {
+            for e in [
+                "fig1", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "table2",
+                "table3", "table4", "table5", "appd",
+            ] {
+                run_experiment(e, opts, args)?;
+            }
+        }
+        other => bail!("unknown experiment {other}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,436 @@
+//! PJRT execution engine: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them on the CPU PJRT client, and runs
+//! prefill / decode-step calls with the parameter blob fed as leading
+//! arguments (the ABI fixed by `model.param_entries` on the Python side).
+//!
+//! Python is never on this path: after `make artifacts` the Rust binary is
+//! self-contained. PJRT client/executable handles are not Send/Sync, so
+//! every replica worker thread owns its own `ModelRuntime` (mirroring the
+//! paper's one-process-per-replica deployment).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{load_manifests, ModelManifest, ModuleMeta};
+
+/// Output of a prefill call.
+#[derive(Debug)]
+pub struct PrefillOut {
+    /// [B, V] row-major.
+    pub logits: Vec<f32>,
+    /// [L, B, S_max, H] row-major.
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
+}
+
+/// Output of a decode step.
+#[derive(Debug)]
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
+}
+
+/// Extra (non-parameter) input for one call: borrowed host data + dims.
+enum ExtraInput<'a> {
+    I32(&'a [i32], Vec<usize>),
+    F32(&'a [f32], Vec<usize>),
+}
+
+impl<'a> ExtraInput<'a> {
+    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        match self {
+            ExtraInput::I32(d, dims) => client.buffer_from_host_buffer(d, dims, None).map_err(wrap),
+            ExtraInput::F32(d, dims) => client.buffer_from_host_buffer(d, dims, None).map_err(wrap),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims_i = |dims: &[usize]| dims.iter().map(|&x| x as i64).collect::<Vec<i64>>();
+        match self {
+            ExtraInput::I32(d, dims) => {
+                xla::Literal::vec1(d).reshape(&dims_i(dims)).map_err(wrap)
+            }
+            ExtraInput::F32(d, dims) => {
+                xla::Literal::vec1(d).reshape(&dims_i(dims)).map_err(wrap)
+            }
+        }
+    }
+}
+
+/// A loaded model: compiled executables + parameters.
+///
+/// Parameters are uploaded to device-resident `PjRtBuffer`s once at load and
+/// passed to `execute_b` by reference — re-marshalling them per call (the
+/// pre-optimization Literal path, ~368 MB per gpt-100m call) dominated the
+/// hot loop; see EXPERIMENTS.md §Perf. Set HEXGEN2_LITERAL_PARAMS=1 to force
+/// the old path (kept for the before/after ablation).
+pub struct ModelRuntime {
+    pub manifest: ModelManifest,
+    client: xla::PjRtClient,
+    /// Device-resident parameters (fast path).
+    param_bufs: Vec<xla::PjRtBuffer>,
+    /// Host literals (ablation path, populated only when requested).
+    param_lits: Vec<xla::Literal>,
+    use_literals: bool,
+    prefill: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    decode: HashMap<usize, xla::PjRtLoadedExecutable>,
+    /// Number of PJRT execute calls (perf accounting).
+    pub exec_calls: std::cell::Cell<u64>,
+}
+
+impl ModelRuntime {
+    /// Load and compile every module of `model` from the artifacts dir.
+    pub fn load(dir: &Path, model: &str) -> Result<ModelRuntime> {
+        Self::load_filtered(dir, model, |_| true)
+    }
+
+    /// Load only the modules `keep` accepts (replica workers compile just
+    /// their own variants; also keeps tests fast).
+    pub fn load_filtered(
+        dir: &Path,
+        model: &str,
+        keep: impl Fn(&ModuleMeta) -> bool,
+    ) -> Result<ModelRuntime> {
+        let manifests = load_manifests(dir)?;
+        let manifest = manifests
+            .get(model)
+            .ok_or_else(|| anyhow!("model {model} not in manifest ({:?})", manifests.keys()))?
+            .clone();
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+
+        // Parameter blob -> literals in manifest (ABI) order.
+        let blob_path: PathBuf = dir.join(&manifest.params_file);
+        let blob = std::fs::read(&blob_path)
+            .with_context(|| format!("reading {}", blob_path.display()))?;
+        if blob.len() != manifest.params_bytes {
+            bail!("params blob size {} != manifest {}", blob.len(), manifest.params_bytes);
+        }
+        let use_literals = std::env::var("HEXGEN2_LITERAL_PARAMS").is_ok();
+        let mut param_bufs = Vec::new();
+        let mut param_lits = Vec::new();
+        for p in &manifest.params {
+            let bytes = &blob[p.offset..p.offset + p.elems * 4];
+            let mut vals = vec![0f32; p.elems];
+            // Little-endian f32 (written with numpy '<f4').
+            for (i, ch) in bytes.chunks_exact(4).enumerate() {
+                vals[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+            }
+            if use_literals {
+                let dims: Vec<i64> = p.shape.iter().map(|&x| x as i64).collect();
+                param_lits.push(xla::Literal::vec1(&vals).reshape(&dims).map_err(wrap)?);
+            } else {
+                param_bufs.push(
+                    client.buffer_from_host_buffer(&vals, &p.shape, None).map_err(wrap)?,
+                );
+            }
+        }
+
+        let mut prefill = HashMap::new();
+        let mut decode = HashMap::new();
+        for md in &manifest.modules {
+            if !keep(md) {
+                continue;
+            }
+            let proto =
+                xla::HloModuleProto::from_text_file(dir.join(&md.file).to_str().unwrap())
+                    .map_err(wrap)
+                    .with_context(|| md.file.clone())?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(wrap)?;
+            match md.kind.as_str() {
+                "prefill" => {
+                    prefill.insert((md.batch, md.seq), exe);
+                }
+                "decode" => {
+                    decode.insert(md.batch, exe);
+                }
+                other => bail!("unknown module kind {other}"),
+            }
+        }
+        Ok(ModelRuntime {
+            manifest,
+            client,
+            param_bufs,
+            param_lits,
+            use_literals,
+            prefill,
+            decode,
+            exec_calls: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn prefill_variants(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self.prefill.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn decode_variants(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.decode.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Pick the smallest prefill variant that fits (batch >= b, seq >= s).
+    pub fn select_prefill_variant(&self, b: usize, s: usize) -> Option<(usize, usize)> {
+        self.prefill_variants()
+            .into_iter()
+            .filter(|&(vb, vs)| vb >= b && vs >= s)
+            .min_by_key(|&(vb, vs)| (vb * vs, vb))
+    }
+
+    pub fn select_decode_variant(&self, b: usize) -> Option<usize> {
+        self.decode_variants().into_iter().filter(|&vb| vb >= b).min()
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        extras: &[ExtraInput],
+        meta: &ModuleMeta,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.exec_calls.set(self.exec_calls.get() + 1);
+        let result = if self.use_literals {
+            // Ablation path: everything as host literals, re-marshalled by
+            // PJRT on every call.
+            let extra_lits: Vec<xla::Literal> = extras
+                .iter()
+                .map(|e| e.to_literal())
+                .collect::<Result<Vec<_>>>()?;
+            let mut args: Vec<&xla::Literal> = self.param_lits.iter().collect();
+            args.extend(extra_lits.iter());
+            exe.execute::<&xla::Literal>(&args).map_err(wrap)?
+        } else {
+            // Fast path: params stay device-resident; only the small/bulk
+            // call inputs are uploaded (single copy each).
+            let extra_bufs: Vec<xla::PjRtBuffer> = extras
+                .iter()
+                .map(|e| e.to_buffer(&self.client))
+                .collect::<Result<Vec<_>>>()?;
+            let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+            args.extend(extra_bufs.iter());
+            exe.execute_b::<&xla::PjRtBuffer>(&args).map_err(wrap)?
+        };
+        let mut lit = result[0][0].to_literal_sync().map_err(wrap)?;
+        let parts = lit.decompose_tuple().map_err(wrap)?;
+        if parts.len() != meta.outputs.len() {
+            bail!("module {} returned {} outputs, expected {}", meta.name, parts.len(), meta.outputs.len());
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (p, m) in parts.iter().zip(&meta.outputs) {
+            let v = p.to_vec::<f32>().map_err(wrap)?;
+            if v.len() != m.elems() {
+                bail!("output {} has {} elems, expected {}", m.name, v.len(), m.elems());
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Run a prefill batch. `tokens` is [B*S] row-major, `lengths` is [B].
+    pub fn prefill(&self, batch: usize, seq: usize, tokens: &[i32], lengths: &[i32]) -> Result<PrefillOut> {
+        let exe = self
+            .prefill
+            .get(&(batch, seq))
+            .ok_or_else(|| anyhow!("no prefill variant b{batch} s{seq}"))?;
+        let meta = self
+            .manifest
+            .prefill_modules()
+            .find(|m| m.batch == batch && m.seq == seq)
+            .unwrap()
+            .clone();
+        if tokens.len() != batch * seq || lengths.len() != batch {
+            bail!("prefill arg shape mismatch");
+        }
+        let mut outs = self.run(
+            exe,
+            &[
+                ExtraInput::I32(tokens, vec![batch, seq]),
+                ExtraInput::I32(lengths, vec![batch]),
+            ],
+            &meta,
+        )?;
+        let v_cache = outs.pop().unwrap();
+        let k_cache = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        Ok(PrefillOut { logits, k_cache, v_cache })
+    }
+
+    /// Run one decode step. Caches are [L, B, S_max, H] row-major.
+    pub fn decode_step(
+        &self,
+        batch: usize,
+        token: &[i32],
+        pos: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+    ) -> Result<DecodeOut> {
+        let exe = self
+            .decode
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no decode variant b{batch}"))?;
+        let meta = self.manifest.decode_modules().find(|m| m.batch == batch).unwrap().clone();
+        let dims = self.manifest.cache_dims(batch);
+        let n_cache: usize = dims.iter().product();
+        if token.len() != batch || pos.len() != batch || k_cache.len() != n_cache || v_cache.len() != n_cache {
+            bail!("decode arg shape mismatch");
+        }
+        let dims_v = dims.to_vec();
+        let mut outs = self.run(
+            exe,
+            &[
+                ExtraInput::I32(token, vec![batch]),
+                ExtraInput::I32(pos, vec![batch]),
+                ExtraInput::F32(k_cache, dims_v.clone()),
+                ExtraInput::F32(v_cache, dims_v),
+            ],
+            &meta,
+        )?;
+        let v_cache = outs.pop().unwrap();
+        let k_cache = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        Ok(DecodeOut { logits, k_cache, v_cache })
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.manifest.config.vocab
+    }
+}
+
+/// Row-wise argmax over [B, V] logits.
+pub fn argmax_rows(logits: &[f32], vocab: usize) -> Vec<i32> {
+    logits
+        .chunks_exact(vocab)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::artifacts_dir;
+    use crate::util::json::Json;
+
+    fn runtime() -> Option<ModelRuntime> {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        // Load just the modules the tests touch (compilation dominates).
+        Some(
+            ModelRuntime::load_filtered(&artifacts_dir(), "tiny", |m| {
+                (m.kind == "prefill" && ((m.batch, m.seq) == (2, 64) || (m.batch, m.seq) == (1, 64)))
+                    || (m.kind == "decode" && m.batch <= 2)
+            })
+            .expect("load tiny"),
+        )
+    }
+
+    #[test]
+    fn matches_python_golden() {
+        let Some(rt) = runtime() else { return };
+        let text = std::fs::read_to_string(artifacts_dir().join("tiny.golden.json")).unwrap();
+        let g = Json::parse(&text).unwrap();
+        let b = g.get("batch").unwrap().as_usize().unwrap();
+        let s = g.get("seq").unwrap().as_usize().unwrap();
+        let tokens: Vec<i32> =
+            g.get("tokens").unwrap().as_arr().unwrap().iter().map(|x| x.as_i64().unwrap() as i32).collect();
+        let lengths: Vec<i32> =
+            g.get("lengths").unwrap().as_arr().unwrap().iter().map(|x| x.as_i64().unwrap() as i32).collect();
+
+        let out = rt.prefill(b, s, &tokens, &lengths).unwrap();
+        // Head-of-logits match.
+        let want: Vec<f64> = g
+            .get("prefill_logits_head")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap())
+            .collect();
+        let vocab = rt.vocab();
+        for (bi, row) in want.chunks_exact(8).enumerate() {
+            for (i, &w) in row.iter().enumerate() {
+                let got = out.logits[bi * vocab + i] as f64;
+                assert!((got - w).abs() < 1e-3, "prefill logits[{bi},{i}]: {got} vs {w}");
+            }
+        }
+        // Argmax (first generated token) must match exactly.
+        let am = argmax_rows(&out.logits, vocab);
+        let want_am: Vec<i32> = g
+            .get("prefill_argmax")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap() as i32)
+            .collect();
+        assert_eq!(am, want_am);
+
+        // One decode step, KV carried over — numerics must track python.
+        let pos: Vec<i32> = lengths.clone();
+        let dec = rt.decode_step(b, &am, &pos, &out.k_cache, &out.v_cache).unwrap();
+        let want_d: Vec<f64> = g
+            .get("decode_logits_head")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap())
+            .collect();
+        for (bi, row) in want_d.chunks_exact(8).enumerate() {
+            for (i, &w) in row.iter().enumerate() {
+                let got = dec.logits[bi * vocab + i] as f64;
+                assert!((got - w).abs() < 1e-3, "decode logits[{bi},{i}]: {got} vs {w}");
+            }
+        }
+        let dam = argmax_rows(&dec.logits, vocab);
+        let want_dam: Vec<i32> = g
+            .get("decode_argmax")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap() as i32)
+            .collect();
+        assert_eq!(dam, want_dam);
+    }
+
+    #[test]
+    fn variant_selection() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.select_prefill_variant(1, 50), Some((1, 64)));
+        assert_eq!(rt.select_prefill_variant(2, 64), Some((2, 64)));
+        assert_eq!(rt.select_prefill_variant(99, 64), None);
+        assert_eq!(rt.select_decode_variant(2), Some(2));
+        assert_eq!(rt.select_decode_variant(1), Some(1));
+        assert_eq!(rt.select_decode_variant(5), None);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let logits = vec![0.1, 0.9, 0.0, 0.5, 0.2, 0.7];
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 2]);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.prefill(1, 64, &[0; 10], &[10]).is_err());
+        assert!(rt.prefill(8, 999, &[0; 8], &[1; 8]).is_err());
+        assert!(rt.decode_step(1, &[0], &[0], &[0.0; 4], &[0.0; 4]).is_err());
+    }
+}

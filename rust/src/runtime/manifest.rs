@@ -1,0 +1,232 @@
+//! AOT artifact manifest: the ABI between `python/compile/aot.py` and the
+//! Rust runtime. Parsed with the in-tree JSON module.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    /// "f32" or "s32".
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModuleMeta {
+    pub name: String,
+    /// "prefill" or "decode".
+    pub kind: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub file: String,
+    pub extra_inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Byte offset into the params blob.
+    pub offset: usize,
+    pub elems: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelConfigMeta {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub config: ModelConfigMeta,
+    pub params_file: String,
+    pub params_bytes: usize,
+    pub params: Vec<ParamMeta>,
+    pub modules: Vec<ModuleMeta>,
+}
+
+impl ModelManifest {
+    pub fn prefill_modules(&self) -> impl Iterator<Item = &ModuleMeta> {
+        self.modules.iter().filter(|m| m.kind == "prefill")
+    }
+
+    pub fn decode_modules(&self) -> impl Iterator<Item = &ModuleMeta> {
+        self.modules.iter().filter(|m| m.kind == "decode")
+    }
+
+    /// KV-cache dims [L, B, S_max, H] for a given batch.
+    pub fn cache_dims(&self, batch: usize) -> [usize; 4] {
+        [self.config.n_layers, batch, self.config.max_seq, self.config.d_model]
+    }
+}
+
+fn tensor(j: &Json) -> Result<TensorMeta> {
+    Ok(TensorMeta {
+        name: j.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+        dtype: j.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string(),
+        shape: j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect(),
+    })
+}
+
+/// Load `<dir>/manifest.json` and return per-model manifests.
+pub fn load_manifests(dir: &Path) -> Result<BTreeMap<String, ModelManifest>> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+    if j.get("format").and_then(Json::as_usize) != Some(1) {
+        bail!("unsupported manifest format");
+    }
+    let models = j.get("models").and_then(Json::as_obj).ok_or_else(|| anyhow!("no models"))?;
+    let mut out = BTreeMap::new();
+    for (name, m) in models {
+        let cfg = m.get("config").ok_or_else(|| anyhow!("{name}: no config"))?;
+        let get = |k: &str| -> Result<usize> {
+            cfg.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("{name}: config.{k}"))
+        };
+        let config = ModelConfigMeta {
+            n_layers: get("n_layers")?,
+            d_model: get("d_model")?,
+            n_heads: get("n_heads")?,
+            vocab: get("vocab")?,
+            max_seq: get("max_seq")?,
+        };
+        let params = m
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{name}: no params"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamMeta {
+                    name: p.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("param shape"))?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: p.get("offset").and_then(Json::as_usize).unwrap_or(0),
+                    elems: p.get("elems").and_then(Json::as_usize).unwrap_or(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let modules = m
+            .get("modules")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{name}: no modules"))?
+            .iter()
+            .map(|md| {
+                Ok(ModuleMeta {
+                    name: md.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+                    kind: md.get("kind").and_then(Json::as_str).unwrap_or_default().to_string(),
+                    batch: md.get("batch").and_then(Json::as_usize).unwrap_or(0),
+                    seq: md.get("seq").and_then(Json::as_usize).unwrap_or(0),
+                    file: md.get("file").and_then(Json::as_str).unwrap_or_default().to_string(),
+                    extra_inputs: md
+                        .get("extra_inputs")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(tensor)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: md
+                        .get("outputs")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(tensor)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        out.insert(
+            name.clone(),
+            ModelManifest {
+                name: name.clone(),
+                config,
+                params_file: m
+                    .get("params_file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}: params_file"))?
+                    .to_string(),
+                params_bytes: m.get("params_bytes").and_then(Json::as_usize).unwrap_or(0),
+                params,
+                modules,
+            },
+        );
+    }
+    Ok(out)
+}
+
+/// Default artifacts directory (repo-root relative), overridable via env.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("HEXGEN2_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn parses_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let m = load_manifests(&artifacts_dir()).unwrap();
+        let tiny = m.get("tiny").expect("tiny model");
+        assert_eq!(tiny.config.n_layers, 4);
+        assert_eq!(tiny.config.d_model, 256);
+        assert!(tiny.prefill_modules().count() >= 2);
+        assert!(tiny.decode_modules().count() >= 2);
+        // Params cover the blob exactly.
+        let total: usize = tiny.params.iter().map(|p| p.elems * 4).sum();
+        assert_eq!(total, tiny.params_bytes);
+        // Param shapes consistent with elems.
+        for p in &tiny.params {
+            assert_eq!(p.shape.iter().product::<usize>(), p.elems, "{}", p.name);
+        }
+        // Modules reference existing files.
+        for md in &tiny.modules {
+            assert!(artifacts_dir().join(&md.file).exists(), "{}", md.file);
+            assert_eq!(md.outputs.len(), 3);
+        }
+        assert_eq!(tiny.cache_dims(2), [4, 2, 192, 256]);
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        let e = load_manifests(Path::new("/nonexistent-hexgen2")).unwrap_err();
+        assert!(e.to_string().contains("make artifacts"), "{e}");
+    }
+}

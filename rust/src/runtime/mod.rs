@@ -1,0 +1,14 @@
+//! PJRT runtime: the bridge that makes the Rust coordinator self-contained.
+//!
+//! `python/compile/aot.py` lowers the JAX model (with its Pallas kernels,
+//! interpret=True) to HLO *text* once; this module loads those artifacts,
+//! compiles them on the CPU PJRT client (`xla` crate, xla_extension 0.5.1),
+//! and exposes typed prefill / decode-step calls. HLO text — not serialized
+//! protos — is the interchange format because jax >= 0.5 emits 64-bit
+//! instruction ids the bundled XLA rejects (see DESIGN.md §2).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{argmax_rows, DecodeOut, ModelRuntime, PrefillOut};
+pub use manifest::{artifacts_dir, load_manifests, ModelManifest, ModuleMeta, TensorMeta};

@@ -1,0 +1,215 @@
+//! Coarsening + secondary partition (paper §3.2 steps ii–iii): merge each
+//! model-serving group into a super node, then partition the super-node
+//! graph into prefill vs decode sides. Unlike the initial partition, the
+//! secondary partition *maximizes* the inter-type edge weight so KV-cache
+//! traffic crosses high-bandwidth links, while balancing phase capacity to
+//! the workload's prefill/decode demand ratio.
+//! Projection back to devices is implicit (groups keep their device lists).
+
+use crate::cluster::{Cluster, DeviceId};
+
+/// Super-node edge weights: total bandwidth between group pairs.
+pub fn inter_group_bandwidth(cluster: &Cluster, groups: &[Vec<DeviceId>]) -> Vec<Vec<f64>> {
+    let k = groups.len();
+    let mut w = vec![vec![0.0; k]; k];
+    for a in 0..k {
+        for b in (a + 1)..k {
+            let mut sum = 0.0;
+            for &i in &groups[a] {
+                for &j in &groups[b] {
+                    sum += cluster.bandwidth[i][j];
+                }
+            }
+            w[a][b] = sum;
+            w[b][a] = sum;
+        }
+    }
+    w
+}
+
+/// Inter-type edge weight of a type assignment (the quantity step ii
+/// maximizes: bandwidth available for prefill→decode KV transfers).
+pub fn inter_type_weight(w: &[Vec<f64>], is_prefill: &[bool]) -> f64 {
+    let k = is_prefill.len();
+    let mut sum = 0.0;
+    for a in 0..k {
+        for b in (a + 1)..k {
+            if is_prefill[a] != is_prefill[b] {
+                sum += w[a][b];
+            }
+        }
+    }
+    sum
+}
+
+/// Score a type assignment: primary term is the balanced-capacity bound
+/// min(prefill demand service rate, decode demand service rate) — the
+/// system can't run faster than its scarcer phase — with the inter-type
+/// bandwidth as a tiebreaker favoring KV-friendly splits.
+///
+/// `caps[g] = (prefill_capacity, decode_capacity)` per group (requests per
+/// period, 0 if the group cannot serve that phase).
+pub fn score_assignment(
+    w: &[Vec<f64>],
+    caps: &[(f64, f64)],
+    is_prefill: &[bool],
+) -> f64 {
+    let cap_p: f64 = caps
+        .iter()
+        .zip(is_prefill)
+        .filter(|(_, &p)| p)
+        .map(|(c, _)| c.0)
+        .sum();
+    let cap_d: f64 = caps
+        .iter()
+        .zip(is_prefill)
+        .filter(|(_, &p)| !p)
+        .map(|(c, _)| c.1)
+        .sum();
+    if cap_p <= 0.0 || cap_d <= 0.0 {
+        return 0.0;
+    }
+    let bound = cap_p.min(cap_d);
+    let total_w: f64 = w.iter().flatten().sum::<f64>() + 1e-30;
+    let bw_frac = inter_type_weight(w, is_prefill) / total_w;
+    bound * (1.0 + 0.05 * bw_frac)
+}
+
+/// Produce up to `max_out` candidate type assignments, best-scored first.
+/// Exhaustive for K <= 14; greedy + local flips beyond.
+pub fn type_candidates(
+    w: &[Vec<f64>],
+    caps: &[(f64, f64)],
+    max_out: usize,
+) -> Vec<Vec<bool>> {
+    let k = caps.len();
+    assert!(k >= 2, "need at least two groups to disaggregate");
+    if k <= 14 {
+        let mut scored: Vec<(f64, Vec<bool>)> = Vec::new();
+        for mask in 1..(1u32 << k) - 1 {
+            let assign: Vec<bool> = (0..k).map(|g| mask & (1 << g) != 0).collect();
+            let s = score_assignment(w, caps, &assign);
+            if s > 0.0 {
+                scored.push((s, assign));
+            }
+        }
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored.into_iter().take(max_out).map(|(_, a)| a).collect()
+    } else {
+        // Greedy: assign each group to the phase where it is relatively
+        // stronger, then fix emptiness and hill-climb with single flips.
+        let mut assign: Vec<bool> = caps.iter().map(|&(p, d)| p >= d).collect();
+        if assign.iter().all(|&x| x) {
+            *assign.last_mut().unwrap() = false;
+        }
+        if assign.iter().all(|&x| !x) {
+            assign[0] = true;
+        }
+        let mut best = score_assignment(w, caps, &assign);
+        loop {
+            let mut improved = false;
+            for g in 0..k {
+                let mut cand = assign.clone();
+                cand[g] = !cand[g];
+                if cand.iter().any(|&x| x) && cand.iter().any(|&x| !x) {
+                    let s = score_assignment(w, caps, &cand);
+                    if s > best {
+                        best = s;
+                        assign = cand;
+                        improved = true;
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        // Emit the greedy fixpoint plus its single-flip neighborhood.
+        let mut out = vec![assign.clone()];
+        for g in 0..k {
+            if out.len() >= max_out {
+                break;
+            }
+            let mut cand = assign.clone();
+            cand[g] = !cand[g];
+            if cand.iter().any(|&x| x) && cand.iter().any(|&x| !x) {
+                out.push(cand);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+
+    #[test]
+    fn inter_group_bandwidth_symmetric() {
+        let c = settings::het2();
+        let groups: Vec<Vec<usize>> = vec![(0..3).collect(), (3..6).collect(), (6..12).collect()];
+        let w = inter_group_bandwidth(&c, &groups);
+        for a in 0..3 {
+            assert_eq!(w[a][a], 0.0);
+            for b in 0..3 {
+                assert_eq!(w[a][b], w[b][a]);
+            }
+        }
+        assert!(w[0][1] > 0.0);
+    }
+
+    #[test]
+    fn inter_type_weight_counts_cross_edges_only() {
+        let w = vec![
+            vec![0.0, 5.0, 1.0],
+            vec![5.0, 0.0, 2.0],
+            vec![1.0, 2.0, 0.0],
+        ];
+        // groups 0,1 prefill; group 2 decode → cross edges (0,2)+(1,2)=3.
+        assert_eq!(inter_type_weight(&w, &[true, true, false]), 3.0);
+        assert_eq!(inter_type_weight(&w, &[true, false, false]), 6.0);
+    }
+
+    #[test]
+    fn candidates_balanced_capacity_first() {
+        // Two strong groups, two weak; best assignments split capacity.
+        let caps = vec![(10.0, 10.0), (10.0, 10.0), (2.0, 2.0), (2.0, 2.0)];
+        let w = vec![vec![1.0; 4]; 4];
+        let cands = type_candidates(&w, &caps, 4);
+        assert!(!cands.is_empty());
+        let top = &cands[0];
+        // Top candidate must put the two strong groups on different sides.
+        assert_ne!(top[0], top[1], "{top:?}");
+        for c in &cands {
+            assert!(c.iter().any(|&x| x) && c.iter().any(|&x| !x));
+        }
+    }
+
+    #[test]
+    fn bandwidth_breaks_ties() {
+        // Symmetric capacities; assignment separating the high-bandwidth
+        // pair (0,1) across types should win the tiebreak.
+        let caps = vec![(5.0, 5.0), (5.0, 5.0)];
+        let mut w = vec![vec![0.0; 2]; 2];
+        w[0][1] = 100.0;
+        w[1][0] = 100.0;
+        let cands = type_candidates(&w, &caps, 2);
+        assert_ne!(cands[0][0], cands[0][1]);
+    }
+
+    #[test]
+    fn greedy_path_for_large_k() {
+        let k = 20;
+        let caps: Vec<(f64, f64)> = (0..k)
+            .map(|i| if i % 2 == 0 { (10.0, 1.0) } else { (1.0, 10.0) })
+            .collect();
+        let w = vec![vec![1.0; k]; k];
+        let cands = type_candidates(&w, &caps, 5);
+        assert!(!cands.is_empty());
+        let top = &cands[0];
+        // Greedy should assign even groups (prefill-strong) to prefill.
+        let correct = (0..k).filter(|&i| top[i] == (i % 2 == 0)).count();
+        assert!(correct >= k - 2, "greedy got {correct}/{k}");
+    }
+}

@@ -1,0 +1,188 @@
+//! Flow-network construction + evaluation of a typed partition (paper §3.3).
+//!
+//! The directed graph has the coordinator h as both source and sink; each
+//! model replica becomes a split compute node (in → out edge with capacity
+//! = requests it can serve per period, Appendix A); valid connections are
+//! (1) h → prefill-in, (2) decode-out → h, (3) prefill-out → decode-in with
+//! capacity T / KV-transfer-cost. Preflow-push (maxflow.rs) then yields the
+//! system throughput bound and the flow assignments that drive both KV
+//! routing and the §3.4 edge-swap guidance.
+
+use crate::cluster::{Cluster, DeviceId, LinkTier};
+use crate::costmodel::{CostModel, TaskProfile};
+use crate::model::LlmSpec;
+
+use super::maxflow::FlowNetwork;
+use super::placement::{GroupPlan, KvRoute, Placement};
+use super::strategy::StrategyCache;
+
+/// Evaluate one (partition, type assignment): choose per-group strategies,
+/// build the flow network, run preflow-push, and package the placement.
+/// Returns None when no prefill or no decode group is feasible at all.
+pub fn evaluate_types(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    task: &TaskProfile,
+    period: f64,
+    groups: &[Vec<DeviceId>],
+    is_prefill: &[bool],
+    cache: &mut StrategyCache,
+) -> Option<Placement> {
+    assert_eq!(groups.len(), is_prefill.len());
+    let cm = CostModel::new(cluster, model);
+
+    // Phase-appropriate strategy per group (cached).
+    let mut plans: Vec<GroupPlan> = Vec::with_capacity(groups.len());
+    for (g, devs) in groups.iter().enumerate() {
+        let (config, capacity) = if is_prefill[g] {
+            match cache.best_prefill(cluster, model, devs, task) {
+                Some((cfg, _lat)) => {
+                    let cap = cm.prefill_capacity(&cfg, task, period);
+                    (Some(cfg), cap)
+                }
+                None => (None, 0.0),
+            }
+        } else {
+            match cache.best_decode(cluster, model, devs, task) {
+                Some((cfg, _tput)) => {
+                    let cap = cm.decode_capacity(&cfg, task, period);
+                    (Some(cfg), cap)
+                }
+                None => (None, 0.0),
+            }
+        };
+        plans.push(GroupPlan { devices: devs.clone(), is_prefill: is_prefill[g], config, capacity });
+    }
+    if !plans.iter().any(|p| p.is_prefill && p.capacity > 0.0)
+        || !plans.iter().any(|p| !p.is_prefill && p.capacity > 0.0)
+    {
+        return None;
+    }
+
+    // Coordinator ingress/egress capacity (connection types (1) and (2)):
+    // request/response payloads over the coordinator's NIC. Rarely binding,
+    // but finite per the paper's formulation.
+    let nic = LinkTier::Eth100G.bandwidth();
+    let ingress_cap = period * nic / (task.s_in * model.bytes_per_elem).max(1.0);
+    let egress_cap = period * nic / (task.s_out * model.bytes_per_elem).max(1.0);
+
+    // Node layout: 0 = source (h), 1 = sink (h), then in/out per group.
+    let k = groups.len();
+    let node_in = |g: usize| 2 + 2 * g;
+    let node_out = |g: usize| 3 + 2 * g;
+    let mut net = FlowNetwork::new(2 + 2 * k);
+
+    let mut compute_edges = Vec::with_capacity(k);
+    for (g, plan) in plans.iter().enumerate() {
+        compute_edges.push(net.add_edge(node_in(g), node_out(g), plan.capacity));
+        if plan.is_prefill {
+            net.add_edge(0, node_in(g), ingress_cap);
+        } else {
+            net.add_edge(node_out(g), 1, egress_cap);
+        }
+    }
+
+    // KV edges (connection type (3)) with stage-order-optimized capacity.
+    let mut kv_edges: Vec<(usize, usize, super::maxflow::EdgeRef, f64)> = Vec::new();
+    for (p, pp) in plans.iter().enumerate() {
+        if !pp.is_prefill || pp.capacity <= 0.0 {
+            continue;
+        }
+        let Some(pcfg) = &pp.config else { continue };
+        for (d, dp) in plans.iter().enumerate() {
+            if dp.is_prefill || dp.capacity <= 0.0 {
+                continue;
+            }
+            let Some(dcfg) = &dp.config else { continue };
+            let t = cm.kv_transfer_time(pcfg, dcfg, &task.with_batch(1));
+            let cap = if t <= 0.0 { ingress_cap } else { period / t };
+            let e = net.add_edge(node_out(p), node_in(d), cap);
+            kv_edges.push((p, d, e, cap));
+        }
+    }
+
+    let flow_value = net.max_flow(0, 1);
+
+    let group_utilization: Vec<f64> =
+        compute_edges.iter().map(|&e| net.utilization(e)).collect();
+    let routes: Vec<KvRoute> = kv_edges
+        .iter()
+        .map(|&(p, d, e, cap)| KvRoute { prefill: p, decode: d, flow: net.flow(e), capacity: cap })
+        .collect();
+
+    Some(Placement {
+        groups: plans,
+        routes,
+        flow_value,
+        tokens_per_s: flow_value * task.s_out / period,
+        group_utilization,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::model::OPT_30B;
+
+    #[test]
+    fn evaluate_simple_disaggregation() {
+        let c = settings::homogeneous_small(); // 4xH100
+        let task = TaskProfile::new(1, 512.0, 128.0);
+        let groups = vec![vec![0, 1], vec![2, 3]];
+        let mut cache = StrategyCache::new();
+        let p = evaluate_types(&c, &OPT_30B, &task, 600.0, &groups, &[true, false], &mut cache)
+            .expect("feasible placement");
+        assert!(p.flow_value > 0.0, "no flow");
+        assert!(p.tokens_per_s > 0.0);
+        assert_eq!(p.groups.len(), 2);
+        assert!(p.groups[0].is_prefill && !p.groups[1].is_prefill);
+        assert_eq!(p.routes.len(), 1);
+        // Flow conservation at system level: route flow equals flow value.
+        assert!((p.routes[0].flow - p.flow_value).abs() < 1e-6);
+        // Utilization of the binding group is 1.
+        let max_util = p.group_utilization.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max_util > 0.99, "{:?}", p.group_utilization);
+    }
+
+    #[test]
+    fn infeasible_types_return_none() {
+        let c = settings::homogeneous_small();
+        let task = TaskProfile::new(1, 512.0, 128.0);
+        let groups = vec![vec![0, 1], vec![2, 3]];
+        let mut cache = StrategyCache::new();
+        // All groups prefill: no decode side.
+        assert!(evaluate_types(&c, &OPT_30B, &task, 600.0, &groups, &[true, true], &mut cache)
+            .is_none());
+    }
+
+    #[test]
+    fn slow_kv_link_caps_flow() {
+        // Prefill in dc0, decode in dc1 (WAN): KV edge should bind well below
+        // the compute capacities.
+        let c = settings::het1();
+        let task = TaskProfile::new(1, 512.0, 128.0);
+        // group0: 2xH100 (dc0), group1: 4xA6000 (dc1).
+        let groups = vec![vec![0, 1], vec![12, 13, 14, 15]];
+        let mut cache = StrategyCache::new();
+        let p = evaluate_types(&c, &OPT_30B, &task, 600.0, &groups, &[true, false], &mut cache)
+            .expect("feasible");
+        let kv = &p.routes[0];
+        assert!(kv.capacity < p.groups[0].capacity, "KV not binding: {p:?}");
+        assert!(p.flow_value <= kv.capacity + 1e-6);
+    }
+
+    #[test]
+    fn multiple_replicas_add_flow() {
+        let c = settings::homogeneous(); // 8xH100
+        let task = TaskProfile::new(1, 512.0, 128.0);
+        let two = vec![vec![0, 1], vec![2, 3]];
+        let four = vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]];
+        let mut cache = StrategyCache::new();
+        let p2 = evaluate_types(&c, &OPT_30B, &task, 600.0, &two, &[true, false], &mut cache).unwrap();
+        let p4 =
+            evaluate_types(&c, &OPT_30B, &task, 600.0, &four, &[true, false, true, false], &mut cache)
+                .unwrap();
+        assert!(p4.flow_value > p2.flow_value * 1.5, "{} vs {}", p4.flow_value, p2.flow_value);
+    }
+}

@@ -1,0 +1,194 @@
+//! Genetic-algorithm scheduler baseline (§5.3): HexGen's population-based
+//! search with merge / split / swap operations over GPU groupings, used for
+//! the Fig. 10/11 convergence comparison. We keep the same evaluation
+//! pipeline (strategy search + max-flow) so the comparison isolates the
+//! *search* strategy, exactly as the paper does ("we replaced the group
+//! generation step ... and the iterative refinement phases of our algorithm
+//! with the genetic algorithm").
+
+use std::time::Instant;
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::model::LlmSpec;
+use crate::util::rng::Rng;
+
+use super::strategy::StrategyCache;
+use super::{evaluate_partition, task_for, ConvergencePoint, Placement, ScheduleOptions, ScheduleResult};
+
+type Groups = Vec<Vec<DeviceId>>;
+
+fn random_partition(n: usize, k: usize, rng: &mut Rng) -> Groups {
+    loop {
+        let mut groups: Groups = vec![Vec::new(); k];
+        for d in 0..n {
+            groups[rng.range(0, k)].push(d);
+        }
+        if groups.iter().all(|g| !g.is_empty()) {
+            return groups;
+        }
+    }
+}
+
+/// One GA mutation: merge two groups then re-split randomly, or swap/move
+/// devices between two groups (HexGen's merge/split/swap operators).
+fn mutate(groups: &Groups, rng: &mut Rng) -> Groups {
+    let k = groups.len();
+    let mut g = groups.clone();
+    match rng.range(0, 3) {
+        0 if k >= 2 => {
+            // merge + split: combine two groups, redistribute randomly.
+            let a = rng.range(0, k);
+            let mut b = rng.range(0, k);
+            if a == b {
+                b = (b + 1) % k;
+            }
+            let mut pool: Vec<DeviceId> = g[a].drain(..).collect();
+            pool.extend(g[b].drain(..));
+            rng.shuffle(&mut pool);
+            let cut = rng.range(1, pool.len());
+            g[a] = pool[..cut].to_vec();
+            g[b] = pool[cut..].to_vec();
+        }
+        1 => {
+            // swap
+            let a = rng.range(0, k);
+            let mut b = rng.range(0, k);
+            if a == b {
+                b = (b + 1) % k;
+            }
+            let ia = rng.range(0, g[a].len());
+            let ib = rng.range(0, g[b].len());
+            let tmp = g[a][ia];
+            g[a][ia] = g[b][ib];
+            g[b][ib] = tmp;
+        }
+        _ => {
+            // move
+            let a = rng.range(0, k);
+            if g[a].len() > 1 {
+                let b = (a + 1 + rng.range(0, k - 1)) % k;
+                let ia = rng.range(0, g[a].len());
+                let d = g[a].remove(ia);
+                g[b].push(d);
+            }
+        }
+    }
+    g
+}
+
+/// Run the GA scheduler. Interface mirrors [`super::schedule`].
+pub fn schedule_genetic(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    opts: &ScheduleOptions,
+) -> Option<ScheduleResult> {
+    let t0 = Instant::now();
+    let task = task_for(opts.workload);
+    let k = opts.force_k.unwrap_or_else(|| super::choose_k(cluster, model, &task));
+    let mut rng = Rng::new(opts.seed ^ 0x6E6E);
+    let mut cache = StrategyCache::new();
+
+    const POP: usize = 12;
+    const ELITE: usize = 4;
+
+    let eval = |groups: &Groups, cache: &mut StrategyCache| -> Option<Placement> {
+        evaluate_partition(cluster, model, &task, opts.period, groups, opts.type_candidates, cache)
+    };
+
+    // Initial population: random partitions (the GA baseline has no spectral
+    // seed — that is the point of the comparison).
+    let mut pop: Vec<(Groups, Option<Placement>)> = (0..POP)
+        .map(|_| {
+            let g = random_partition(cluster.n(), k, &mut rng);
+            let p = eval(&g, &mut cache);
+            (g, p)
+        })
+        .collect();
+
+    let fitness = |p: &Option<Placement>| p.as_ref().map(|x| x.flow_value).unwrap_or(0.0);
+    pop.sort_by(|a, b| fitness(&b.1).partial_cmp(&fitness(&a.1)).unwrap());
+
+    let mut history = vec![ConvergencePoint {
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        round: 0,
+        tokens_per_s: pop[0].1.as_ref().map(|p| p.tokens_per_s).unwrap_or(0.0),
+    }];
+
+    let mut stall = 0;
+    let mut rounds = 0;
+    for round in 1..=opts.max_rounds {
+        rounds = round;
+        let best_before = fitness(&pop[0].1);
+        // Children: mutate elites.
+        let mut children: Vec<(Groups, Option<Placement>)> = Vec::new();
+        while children.len() + ELITE < POP {
+            let parent = &pop[rng.range(0, ELITE)].0;
+            let child = mutate(parent, &mut rng);
+            if child.iter().any(|g| g.is_empty()) {
+                continue;
+            }
+            let p = eval(&child, &mut cache);
+            children.push((child, p));
+        }
+        pop.truncate(ELITE);
+        pop.extend(children);
+        pop.sort_by(|a, b| fitness(&b.1).partial_cmp(&fitness(&a.1)).unwrap());
+        history.push(ConvergencePoint {
+            elapsed_s: t0.elapsed().as_secs_f64(),
+            round,
+            tokens_per_s: pop[0].1.as_ref().map(|p| p.tokens_per_s).unwrap_or(0.0),
+        });
+        if fitness(&pop[0].1) > best_before * (1.0 + 1e-6) {
+            stall = 0;
+        } else {
+            stall += 1;
+            if stall >= opts.patience {
+                break;
+            }
+        }
+    }
+
+    let (_g, best) = pop.into_iter().next().unwrap();
+    best.map(|placement| ScheduleResult {
+        placement,
+        history,
+        rounds,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::model::OPT_30B;
+    use crate::workload::WorkloadKind;
+
+    #[test]
+    fn ga_finds_a_feasible_placement() {
+        let c = settings::case_study();
+        let mut opts = ScheduleOptions::new(WorkloadKind::Lphd);
+        opts.max_rounds = 6;
+        opts.patience = 3;
+        opts.force_k = Some(4);
+        let r = schedule_genetic(&c, &OPT_30B, &opts).expect("GA schedules");
+        assert!(r.placement.tokens_per_s > 0.0);
+        // Still a valid partition.
+        let mut all: Vec<usize> =
+            r.placement.groups.iter().flat_map(|g| g.devices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..c.n()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mutation_preserves_device_multiset() {
+        let mut rng = Rng::new(5);
+        let groups: Groups = vec![vec![0, 1, 2], vec![3, 4], vec![5]];
+        for _ in 0..200 {
+            let m = mutate(&groups, &mut rng);
+            let mut all: Vec<usize> = m.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+        }
+    }
+}

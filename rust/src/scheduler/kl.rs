@@ -1,0 +1,165 @@
+//! Kernighan–Lin partition refinement (paper §3.2 step i, after
+//! Kernighan & Lin 1970): iteratively swap device pairs between groups to
+//! reduce the inter-group edge weight (bandwidth cut) while keeping the
+//! node weights (memory capacities) balanced.
+
+use crate::cluster::{Cluster, DeviceId};
+
+/// Sum of bandwidth over all inter-group pairs (the quantity the initial
+/// partition minimizes).
+pub fn cut_weight(cluster: &Cluster, groups: &[Vec<DeviceId>]) -> f64 {
+    let mut owner = vec![usize::MAX; cluster.n()];
+    for (g, devs) in groups.iter().enumerate() {
+        for &d in devs {
+            owner[d] = g;
+        }
+    }
+    let mut cut = 0.0;
+    for i in 0..cluster.n() {
+        for j in (i + 1)..cluster.n() {
+            if owner[i] != usize::MAX && owner[j] != usize::MAX && owner[i] != owner[j] {
+                cut += cluster.bandwidth[i][j];
+            }
+        }
+    }
+    cut
+}
+
+/// Memory imbalance: max group memory / min group memory.
+pub fn memory_imbalance(cluster: &Cluster, groups: &[Vec<DeviceId>]) -> f64 {
+    let mems: Vec<f64> = groups
+        .iter()
+        .map(|g| g.iter().map(|&d| cluster.devices[d].gpu.mem_bytes()).sum::<f64>())
+        .collect();
+    let mx = mems.iter().cloned().fold(f64::MIN, f64::max);
+    let mn = mems.iter().cloned().fold(f64::MAX, f64::min);
+    if mn <= 0.0 {
+        f64::INFINITY
+    } else {
+        mx / mn
+    }
+}
+
+/// External-minus-internal connectivity of device `d` in group `a` vs
+/// group `b` (the classic KL D-value restricted to a group pair).
+fn d_value(cluster: &Cluster, d: DeviceId, a: &[DeviceId], b: &[DeviceId]) -> f64 {
+    let ext: f64 = b.iter().filter(|&&x| x != d).map(|&x| cluster.bandwidth[d][x]).sum();
+    let int: f64 = a.iter().filter(|&&x| x != d).map(|&x| cluster.bandwidth[d][x]).sum();
+    ext - int
+}
+
+/// One KL pass over every pair of groups: greedily apply the best
+/// cut-reducing swaps that keep memory imbalance within `max_imbalance`.
+/// Returns the number of swaps applied.
+pub fn refine_pass(
+    cluster: &Cluster,
+    groups: &mut [Vec<DeviceId>],
+    max_imbalance: f64,
+) -> usize {
+    let mut swaps = 0;
+    let k = groups.len();
+    for ga in 0..k {
+        for gb in (ga + 1)..k {
+            loop {
+                // Best single swap between ga and gb.
+                let mut best: Option<(usize, usize, f64)> = None;
+                for (ia, &da) in groups[ga].iter().enumerate() {
+                    for (ib, &db) in groups[gb].iter().enumerate() {
+                        let gain = d_value(cluster, da, &groups[ga], &groups[gb])
+                            + d_value(cluster, db, &groups[gb], &groups[ga])
+                            - 2.0 * cluster.bandwidth[da][db];
+                        if gain > 1e-9 && best.map(|(_, _, g)| gain > g).unwrap_or(true) {
+                            best = Some((ia, ib, gain));
+                        }
+                    }
+                }
+                let Some((ia, ib, _gain)) = best else { break };
+                // Tentatively swap; check memory balance.
+                let (da, db) = (groups[ga][ia], groups[gb][ib]);
+                groups[ga][ia] = db;
+                groups[gb][ib] = da;
+                if memory_imbalance(cluster, groups) > max_imbalance {
+                    // revert
+                    groups[ga][ia] = da;
+                    groups[gb][ib] = db;
+                    break;
+                }
+                swaps += 1;
+                if swaps > 4 * cluster.n() {
+                    return swaps; // safety valve
+                }
+            }
+        }
+    }
+    swaps
+}
+
+/// Run KL passes to fixpoint (bounded).
+pub fn refine(cluster: &Cluster, groups: &mut [Vec<DeviceId>], max_imbalance: f64) {
+    for _ in 0..8 {
+        if refine_pass(cluster, groups, max_imbalance) == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn refine_reduces_cut() {
+        let c = settings::het2();
+        // Deliberately bad partition: interleave devices across groups.
+        let mut groups = vec![Vec::new(), Vec::new(), Vec::new()];
+        for d in 0..c.n() {
+            groups[d % 3].push(d);
+        }
+        let before = cut_weight(&c, &groups);
+        refine(&c, &mut groups, 3.0);
+        let after = cut_weight(&c, &groups);
+        assert!(after <= before, "KL increased cut: {before} -> {after}");
+        assert!(after < before * 0.8, "KL barely improved: {before} -> {after}");
+    }
+
+    #[test]
+    fn refine_preserves_partition_property() {
+        check(0x6b1, 30, |rng| {
+            let c = settings::synthetic(rng.range(2, 5) * 8, rng.next_u64());
+            let k = rng.range(2, 5);
+            let mut groups = vec![Vec::new(); k];
+            for d in 0..c.n() {
+                groups[rng.range(0, k)].push(d);
+            }
+            // Ensure non-empty groups.
+            for g in 0..k {
+                if groups[g].is_empty() {
+                    let from = (0..k).find(|&x| groups[x].len() > 1).unwrap();
+                    let d = groups[from].pop().unwrap();
+                    groups[g].push(d);
+                }
+            }
+            let sizes_before: Vec<usize> = groups.iter().map(|g| g.len()).collect();
+            let before = cut_weight(&c, &groups);
+            refine(&c, &mut groups, 4.0);
+            let sizes_after: Vec<usize> = groups.iter().map(|g| g.len()).collect();
+            prop_assert!(sizes_before == sizes_after, "KL changed group sizes");
+            let mut all: Vec<usize> = groups.iter().flatten().copied().collect();
+            all.sort_unstable();
+            prop_assert!(all == (0..c.n()).collect::<Vec<_>>(), "not a partition after KL");
+            prop_assert!(cut_weight(&c, &groups) <= before + 1e-6, "cut increased");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let c = settings::het1(); // H100(80G) x2 first, A6000(48G) last
+        let g1 = vec![vec![0, 1], vec![18, 19]]; // 160G vs 96G
+        let im = memory_imbalance(&c, &g1);
+        assert!((im - 160.0 / 96.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,371 @@
+//! Preflow-push (push–relabel) maximum flow (§3.3 of the paper, after
+//! Cheriyan & Maheshwari 1989), with FIFO active-node selection and the gap
+//! heuristic, over real-valued capacities.
+//!
+//! Besides the flow value, callers need the *flow assignment* per edge
+//! (the paper uses these to set KV-communication frequencies, §3.3) and the
+//! bottleneck / underutilized edge classification that drives the
+//! max-flow-guided edge swap (§3.4) — both exposed here.
+
+/// Opaque handle to an added edge (for querying flow afterwards).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EdgeRef {
+    node: usize,
+    idx: usize,
+}
+
+#[derive(Clone, Debug)]
+struct Edge {
+    to: usize,
+    cap: f64,
+    flow: f64,
+    /// index of the reverse edge in adj[to]
+    rev: usize,
+}
+
+/// A directed flow network with float capacities.
+#[derive(Clone, Debug)]
+pub struct FlowNetwork {
+    adj: Vec<Vec<Edge>>,
+}
+
+const EPS: f64 = 1e-9;
+
+impl FlowNetwork {
+    pub fn new(n: usize) -> FlowNetwork {
+        FlowNetwork { adj: vec![Vec::new(); n] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn add_node(&mut self) -> usize {
+        self.adj.push(Vec::new());
+        self.adj.len() - 1
+    }
+
+    /// Add a directed edge u -> v with the given capacity.
+    pub fn add_edge(&mut self, u: usize, v: usize, cap: f64) -> EdgeRef {
+        assert!(u != v, "self-loop");
+        assert!(cap >= 0.0, "negative capacity");
+        let ui = self.adj[u].len();
+        let vi = self.adj[v].len();
+        self.adj[u].push(Edge { to: v, cap, flow: 0.0, rev: vi });
+        self.adj[v].push(Edge { to: u, cap: 0.0, flow: 0.0, rev: ui });
+        EdgeRef { node: u, idx: ui }
+    }
+
+    pub fn capacity(&self, e: EdgeRef) -> f64 {
+        self.adj[e.node][e.idx].cap
+    }
+
+    /// Flow currently routed through the edge (after `max_flow`).
+    pub fn flow(&self, e: EdgeRef) -> f64 {
+        self.adj[e.node][e.idx].flow.max(0.0)
+    }
+
+    /// Utilization in [0,1]; 0 for zero-capacity edges.
+    pub fn utilization(&self, e: EdgeRef) -> f64 {
+        let c = self.capacity(e);
+        if c <= 0.0 {
+            0.0
+        } else {
+            (self.flow(e) / c).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Is this edge saturated (a bottleneck in §3.4's sense)?
+    pub fn is_bottleneck(&self, e: EdgeRef) -> bool {
+        let ed = &self.adj[e.node][e.idx];
+        ed.cap > 0.0 && ed.flow >= ed.cap - EPS * (1.0 + ed.cap)
+    }
+
+    fn reset_flows(&mut self) {
+        for v in &mut self.adj {
+            for e in v {
+                e.flow = 0.0;
+            }
+        }
+    }
+
+    /// Push–relabel max flow from s to t. Returns the flow value; per-edge
+    /// assignments are queryable afterwards via `flow`.
+    pub fn max_flow(&mut self, s: usize, t: usize) -> f64 {
+        let n = self.n();
+        assert!(s != t && s < n && t < n);
+        self.reset_flows();
+        let mut height = vec![0usize; n];
+        let mut excess = vec![0.0f64; n];
+        height[s] = n;
+
+        // Saturate all source edges.
+        for i in 0..self.adj[s].len() {
+            let (to, cap) = {
+                let e = &self.adj[s][i];
+                (e.to, e.cap)
+            };
+            if cap > 0.0 {
+                self.push_raw(s, i, cap);
+                excess[to] += cap;
+                excess[s] -= cap;
+            }
+        }
+
+        let mut queue: std::collections::VecDeque<usize> = (0..n)
+            .filter(|&v| v != s && v != t && excess[v] > EPS)
+            .collect();
+        let mut in_queue = vec![false; n];
+        for &v in &queue {
+            in_queue[v] = true;
+        }
+        // Gap heuristic bookkeeping.
+        let mut height_count = vec![0usize; 2 * n + 1];
+        for &h in &height {
+            height_count[h] += 1;
+        }
+
+        while let Some(u) = queue.pop_front() {
+            in_queue[u] = false;
+            // Discharge u.
+            while excess[u] > EPS {
+                let mut pushed = false;
+                for i in 0..self.adj[u].len() {
+                    let (to, residual) = {
+                        let e = &self.adj[u][i];
+                        (e.to, e.cap - e.flow)
+                    };
+                    if residual > EPS && height[u] == height[to] + 1 {
+                        let delta = excess[u].min(residual);
+                        self.push_raw(u, i, delta);
+                        excess[u] -= delta;
+                        excess[to] += delta;
+                        if to != s && to != t && !in_queue[to] {
+                            queue.push_back(to);
+                            in_queue[to] = true;
+                        }
+                        pushed = true;
+                        if excess[u] <= EPS {
+                            break;
+                        }
+                    }
+                }
+                if !pushed {
+                    // Relabel u to 1 + min reachable height.
+                    let old = height[u];
+                    let mut min_h = usize::MAX;
+                    for e in &self.adj[u] {
+                        if e.cap - e.flow > EPS {
+                            min_h = min_h.min(height[e.to]);
+                        }
+                    }
+                    if min_h == usize::MAX {
+                        break; // no residual edges; excess is stuck (shouldn't happen)
+                    }
+                    height_count[old] -= 1;
+                    height[u] = min_h + 1;
+                    height_count[height[u]] += 1;
+                    // Gap heuristic: if no node remains at `old`, lift all
+                    // nodes above the gap out of reach.
+                    if height_count[old] == 0 && old < n {
+                        for v in 0..n {
+                            if v != s && height[v] > old && height[v] <= n {
+                                height_count[height[v]] -= 1;
+                                height[v] = n + 1;
+                                height_count[height[v]] += 1;
+                            }
+                        }
+                    }
+                    if height[u] > 2 * n {
+                        break;
+                    }
+                }
+            }
+        }
+        // Max flow = total into t.
+        self.adj[t]
+            .iter()
+            .map(|e| -e.flow) // reverse edges carry negative of inflow
+            .filter(|f| *f > 0.0)
+            .sum()
+    }
+
+    fn push_raw(&mut self, u: usize, i: usize, delta: f64) {
+        let (to, rev) = {
+            let e = &mut self.adj[u][i];
+            e.flow += delta;
+            (e.to, e.rev)
+        };
+        self.adj[to][rev].flow -= delta;
+    }
+
+    /// Slow Edmonds–Karp reference implementation (tests only): BFS
+    /// augmenting paths. Used by the property tests to cross-check
+    /// push–relabel on random graphs.
+    pub fn max_flow_reference(&mut self, s: usize, t: usize) -> f64 {
+        self.reset_flows();
+        let n = self.n();
+        let mut total = 0.0;
+        loop {
+            // BFS for an augmenting path.
+            let mut prev: Vec<Option<(usize, usize)>> = vec![None; n];
+            let mut q = std::collections::VecDeque::new();
+            q.push_back(s);
+            let mut seen = vec![false; n];
+            seen[s] = true;
+            while let Some(u) = q.pop_front() {
+                for (i, e) in self.adj[u].iter().enumerate() {
+                    if !seen[e.to] && e.cap - e.flow > EPS {
+                        seen[e.to] = true;
+                        prev[e.to] = Some((u, i));
+                        q.push_back(e.to);
+                    }
+                }
+            }
+            if !seen[t] {
+                return total;
+            }
+            // Find bottleneck.
+            let mut delta = f64::INFINITY;
+            let mut v = t;
+            while let Some((u, i)) = prev[v] {
+                let e = &self.adj[u][i];
+                delta = delta.min(e.cap - e.flow);
+                v = u;
+            }
+            // Augment.
+            let mut v = t;
+            while let Some((u, i)) = prev[v] {
+                self.push_raw(u, i, delta);
+                v = u;
+            }
+            total += delta;
+        }
+    }
+
+    /// Check flow conservation at every node except s and t (tests).
+    pub fn check_conservation(&self, s: usize, t: usize) -> Result<(), String> {
+        for v in 0..self.n() {
+            if v == s || v == t {
+                continue;
+            }
+            let net: f64 = self.adj[v].iter().map(|e| e.flow).sum();
+            if net.abs() > 1e-6 {
+                return Err(format!("node {v} violates conservation: net {net}"));
+            }
+        }
+        for v in 0..self.n() {
+            for e in &self.adj[v] {
+                if e.flow > e.cap + 1e-6 {
+                    return Err(format!("edge {v}->{} over capacity", e.to));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn trivial_path() {
+        let mut g = FlowNetwork::new(3);
+        g.add_edge(0, 1, 5.0);
+        g.add_edge(1, 2, 3.0);
+        assert!((g.max_flow(0, 2) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn classic_diamond() {
+        // Two disjoint paths 0->1->3 (cap 2) and 0->2->3 (cap 3), plus a
+        // cross edge 1->2 enabling rerouting.
+        let mut g = FlowNetwork::new(4);
+        g.add_edge(0, 1, 4.0);
+        g.add_edge(0, 2, 3.0);
+        let e12 = g.add_edge(1, 2, 2.0);
+        g.add_edge(1, 3, 2.0);
+        g.add_edge(2, 3, 5.0);
+        let f = g.max_flow(0, 3);
+        assert!((f - 7.0).abs() < 1e-9, "{f}");
+        g.check_conservation(0, 3).unwrap();
+        assert!(g.flow(e12) <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn disconnected_is_zero() {
+        let mut g = FlowNetwork::new(4);
+        g.add_edge(0, 1, 5.0);
+        g.add_edge(2, 3, 5.0);
+        assert_eq!(g.max_flow(0, 3), 0.0);
+    }
+
+    #[test]
+    fn bottleneck_detection() {
+        let mut g = FlowNetwork::new(3);
+        let a = g.add_edge(0, 1, 1.0);
+        let b = g.add_edge(1, 2, 10.0);
+        g.max_flow(0, 2);
+        assert!(g.is_bottleneck(a));
+        assert!(!g.is_bottleneck(b));
+        assert!(g.utilization(b) < 0.2);
+        assert!((g.utilization(a) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fractional_capacities() {
+        let mut g = FlowNetwork::new(3);
+        g.add_edge(0, 1, 0.3);
+        g.add_edge(0, 1, 0.45); // parallel edge
+        g.add_edge(1, 2, 0.5);
+        let f = g.max_flow(0, 2);
+        assert!((f - 0.5).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn matches_reference_on_random_graphs() {
+        check(0xF10, 150, |rng| {
+            let n = rng.range(4, 12);
+            let mut g = FlowNetwork::new(n);
+            let m = rng.range(n, 4 * n);
+            for _ in 0..m {
+                let u = rng.range(0, n);
+                let mut v = rng.range(0, n);
+                if u == v {
+                    v = (v + 1) % n;
+                }
+                g.add_edge(u, v, rng.range_f64(0.0, 10.0));
+            }
+            let mut g2 = g.clone();
+            let f1 = g.max_flow(0, n - 1);
+            let f2 = g2.max_flow_reference(0, n - 1);
+            prop_assert!((f1 - f2).abs() < 1e-6, "push-relabel {f1} != reference {f2}");
+            g.check_conservation(0, n - 1).map_err(|e| e)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn flow_value_equals_out_of_source() {
+        check(0xF11, 60, |rng| {
+            let n = rng.range(4, 10);
+            let mut g = FlowNetwork::new(n);
+            for _ in 0..rng.range(n, 3 * n) {
+                let u = rng.range(0, n);
+                let mut v = rng.range(0, n);
+                if u == v {
+                    v = (v + 1) % n;
+                }
+                g.add_edge(u, v, rng.range_f64(0.0, 5.0));
+            }
+            let f = g.max_flow(0, n - 1);
+            let out_s: f64 = g.adj[0].iter().map(|e| e.flow.max(0.0)).sum::<f64>()
+                - g.adj[0].iter().map(|e| (-e.flow).max(0.0)).sum::<f64>();
+            prop_assert!((f - out_s).abs() < 1e-6, "value {f} vs source net {out_s}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,526 @@
+//! The HexGen-2 scheduling algorithm (paper §3): graph partition (spectral +
+//! Kernighan–Lin), coarsen + secondary partition for group types, per-group
+//! parallel-strategy search, preflow-push max-flow for KV routing, and the
+//! max-flow-guided edge-swap iterative refinement.
+//!
+//! Entry point: [`schedule`]. The genetic-algorithm and random-swap variants
+//! used by the §5.3 convergence study live in [`genetic`] and are selected
+//! via [`SwapMode`].
+
+pub mod coarsen;
+pub mod flownet;
+pub mod genetic;
+pub mod kl;
+pub mod maxflow;
+pub mod placement;
+pub mod spectral;
+pub mod strategy;
+
+pub use placement::{GroupPlan, KvRoute, Placement};
+
+use std::time::Instant;
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::costmodel::TaskProfile;
+use crate::model::LlmSpec;
+use crate::util::rng::Rng;
+use crate::workload::WorkloadKind;
+use strategy::StrategyCache;
+
+/// Refinement mode (§5.3 ablation axes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapMode {
+    /// Max-flow-guided edge swap (the paper's contribution, §3.4).
+    Guided,
+    /// Truncated variant: random swaps (the paper's "w/o edge swap").
+    Random,
+    /// No iterative refinement: one-shot two-phase output.
+    None,
+}
+
+#[derive(Clone, Debug)]
+pub struct ScheduleOptions {
+    pub workload: WorkloadKind,
+    /// Scheduling period T in seconds (§3.3 uses e.g. 10 minutes).
+    pub period: f64,
+    /// Maximum refinement rounds.
+    pub max_rounds: usize,
+    /// Stop after this many rounds without improvement.
+    pub patience: usize,
+    pub seed: u64,
+    pub swap_mode: SwapMode,
+    /// How many type assignments to max-flow-evaluate per partition.
+    pub type_candidates: usize,
+    /// Proposals evaluated per refinement round.
+    pub proposals_per_round: usize,
+    /// Override the memory-derived group count (tests/case studies).
+    pub force_k: Option<usize>,
+}
+
+impl ScheduleOptions {
+    pub fn new(workload: WorkloadKind) -> ScheduleOptions {
+        ScheduleOptions {
+            workload,
+            period: 600.0,
+            max_rounds: 60,
+            patience: 8,
+            seed: 0,
+            swap_mode: SwapMode::Guided,
+            type_candidates: 6,
+            proposals_per_round: 16,
+            force_k: None,
+        }
+    }
+}
+
+/// One point of the convergence trace (paper Fig. 10 axes).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvergencePoint {
+    pub elapsed_s: f64,
+    pub round: usize,
+    pub tokens_per_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ScheduleResult {
+    pub placement: Placement,
+    pub history: Vec<ConvergencePoint>,
+    pub rounds: usize,
+    pub elapsed_s: f64,
+}
+
+/// Appendix A: memory needed by one model replica = parameters + 32
+/// concurrent requests' KV caches.
+pub fn replica_memory_requirement(model: &LlmSpec, task: &TaskProfile) -> f64 {
+    let kv_per_req = model.kv_bytes_per_token(model.n_layers) * (task.s_in + task.s_out);
+    model.param_bytes() + 32.0 * kv_per_req
+}
+
+/// §3.2: K = total cluster memory / single-replica memory estimate,
+/// clamped to [2, n_devices].
+pub fn choose_k(cluster: &Cluster, model: &LlmSpec, task: &TaskProfile) -> usize {
+    let k = (cluster.total_memory() / replica_memory_requirement(model, task)).floor() as usize;
+    k.clamp(2, cluster.n())
+}
+
+/// Task profile representing a workload class (mean lengths, batch 1).
+pub fn task_for(workload: WorkloadKind) -> TaskProfile {
+    let (s_in, s_out) = workload.mean_lengths();
+    TaskProfile::new(1, s_in, s_out)
+}
+
+/// Evaluate a partition: secondary-partition candidates (coarsen) then
+/// max-flow on each, returning the best placement.
+pub fn evaluate_partition(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    task: &TaskProfile,
+    period: f64,
+    groups: &[Vec<DeviceId>],
+    n_type_candidates: usize,
+    cache: &mut StrategyCache,
+) -> Option<Placement> {
+    // Per-group phase capacities feed the secondary-partition scoring.
+    let cm = crate::costmodel::CostModel::new(cluster, model);
+    let caps: Vec<(f64, f64)> = groups
+        .iter()
+        .map(|g| {
+            let p = cache
+                .best_prefill(cluster, model, g, task)
+                .map(|(cfg, _)| cm.prefill_capacity(&cfg, task, period))
+                .unwrap_or(0.0);
+            let d = cache
+                .best_decode(cluster, model, g, task)
+                .map(|(cfg, _)| cm.decode_capacity(&cfg, task, period))
+                .unwrap_or(0.0);
+            (p, d)
+        })
+        .collect();
+    let w = coarsen::inter_group_bandwidth(cluster, groups);
+    // With few groups the full 2^K type space is cheap to max-flow-evaluate
+    // (strategy search is cached); only large K relies on the ranked subset.
+    let n_cand = if groups.len() <= 6 { 64 } else { n_type_candidates };
+    let mut best: Option<Placement> = None;
+    for assign in coarsen::type_candidates(&w, &caps, n_cand) {
+        if let Some(p) = flownet::evaluate_types(cluster, model, task, period, groups, &assign, cache)
+        {
+            if best.as_ref().map(|b| p.flow_value > b.flow_value).unwrap_or(true) {
+                best = Some(p);
+            }
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// Refinement proposals
+// ---------------------------------------------------------------------------
+
+type Groups = Vec<Vec<DeviceId>>;
+
+fn swap_devices(groups: &Groups, ga: usize, ia: usize, gb: usize, ib: usize) -> Groups {
+    let mut g = groups.clone();
+    let (da, db) = (g[ga][ia], g[gb][ib]);
+    g[ga][ia] = db;
+    g[gb][ib] = da;
+    g
+}
+
+fn move_device(groups: &Groups, from: usize, idx: usize, to: usize) -> Groups {
+    let mut g = groups.clone();
+    let d = g[from].remove(idx);
+    g[to].push(d);
+    g
+}
+
+/// Max-flow-guided proposals (§3.4): use the flow assignment to find
+/// bottleneck and underutilized edges, then propose device moves/swaps that
+/// (i) rebalance compute between over- and under-utilized groups and
+/// (ii) raise the bandwidth of bottlenecked KV edges.
+fn guided_proposals(
+    cluster: &Cluster,
+    groups: &Groups,
+    placement: &Placement,
+    rng: &mut Rng,
+    max_out: usize,
+) -> Vec<Groups> {
+    let mut out: Vec<Groups> = Vec::new();
+    let k = groups.len();
+    let util = &placement.group_utilization;
+
+    // (i) Compute rebalancing: saturated groups pull devices from slack ones.
+    let mut hot: Vec<usize> = (0..k).filter(|&g| util[g] > 0.98).collect();
+    let mut cold: Vec<usize> = (0..k).filter(|&g| util[g] < 0.6).collect();
+    // Order hottest-first / coldest-first.
+    hot.sort_by(|&a, &b| util[b].partial_cmp(&util[a]).unwrap());
+    cold.sort_by(|&a, &b| util[a].partial_cmp(&util[b]).unwrap());
+    for &h in hot.iter().take(3) {
+        for &c in cold.iter().take(3) {
+            if h == c || groups[c].len() <= 1 {
+                continue;
+            }
+            // Move the cold group's device best-connected to the hot group.
+            let (best_idx, _) = groups[c]
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| {
+                    let bw: f64 = groups[h].iter().map(|&x| cluster.bandwidth[d][x]).sum();
+                    (i, bw)
+                })
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            out.push(move_device(groups, c, best_idx, h));
+            // Also propose a swap: strongest cold device for weakest hot device.
+            let (wi, _) = groups[h]
+                .iter()
+                .enumerate()
+                .min_by(|(_, &a), (_, &b)| {
+                    cluster.devices[a]
+                        .gpu
+                        .tflops()
+                        .partial_cmp(&cluster.devices[b].gpu.tflops())
+                        .unwrap()
+                })
+                .unwrap();
+            let (si, _) = groups[c]
+                .iter()
+                .enumerate()
+                .max_by(|(_, &a), (_, &b)| {
+                    cluster.devices[a]
+                        .gpu
+                        .tflops()
+                        .partial_cmp(&cluster.devices[b].gpu.tflops())
+                        .unwrap()
+                })
+                .unwrap();
+            out.push(swap_devices(groups, h, wi, c, si));
+        }
+    }
+
+    // (ii) KV bottleneck repair: for saturated KV routes, swap a device of
+    // the decode group with one (from any other group) that is better
+    // connected to the prefill group.
+    for r in &placement.routes {
+        if r.capacity <= 0.0 || r.flow < r.capacity * 0.98 {
+            continue;
+        }
+        let (pg, dg) = (r.prefill, r.decode);
+        for other in 0..k {
+            if other == pg || other == dg {
+                continue;
+            }
+            // Candidate from `other` with the best bandwidth to the prefill group.
+            let Some((oi, obw)) = groups[other]
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| {
+                    (i, groups[pg].iter().map(|&x| cluster.bandwidth[d][x]).sum::<f64>())
+                })
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            else {
+                continue;
+            };
+            // Decode-group device with the worst bandwidth to the prefill group.
+            let Some((di, dbw)) = groups[dg]
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| {
+                    (i, groups[pg].iter().map(|&x| cluster.bandwidth[d][x]).sum::<f64>())
+                })
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            else {
+                continue;
+            };
+            if obw > dbw * 1.2 {
+                out.push(swap_devices(groups, dg, di, other, oi));
+            }
+        }
+    }
+
+    // Keep at most half the budget for targeted repairs (randomly sampled
+    // when more exist); fill the rest with random exploration (escaping the
+    // local minima the paper's §5.3 ablation attributes to purely-random
+    // refinement is the job of the guided half, but exploration must not
+    // starve).
+    rng.shuffle(&mut out);
+    out.truncate(max_out / 2);
+    while out.len() < max_out {
+        out.push(random_mutation(groups, rng));
+    }
+    out
+}
+
+/// Canonical signature of a partition (ignores group/device order) for the
+/// evaluated-set memo.
+fn partition_signature(groups: &Groups) -> Vec<usize> {
+    let mut gs: Vec<Vec<usize>> = groups
+        .iter()
+        .map(|g| {
+            let mut v = g.clone();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+    gs.sort();
+    let mut sig = Vec::new();
+    for g in gs {
+        sig.extend(g);
+        sig.push(usize::MAX);
+    }
+    sig
+}
+
+/// Random mutation (move or swap) — the truncated §5.3 variant's proposal.
+fn random_mutation(groups: &Groups, rng: &mut Rng) -> Groups {
+    let k = groups.len();
+    loop {
+        let ga = rng.range(0, k);
+        let gb = rng.range(0, k);
+        if ga == gb {
+            continue;
+        }
+        if rng.bool(0.5) && groups[ga].len() > 1 {
+            let ia = rng.range(0, groups[ga].len());
+            return move_device(groups, ga, ia, gb);
+        }
+        let ia = rng.range(0, groups[ga].len());
+        let ib = rng.range(0, groups[gb].len());
+        return swap_devices(groups, ga, ia, gb, ib);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Main entry point
+// ---------------------------------------------------------------------------
+
+/// Run the full HexGen-2 scheduling algorithm on a cluster.
+pub fn schedule(cluster: &Cluster, model: &LlmSpec, opts: &ScheduleOptions) -> Option<ScheduleResult> {
+    let t0 = Instant::now();
+    let task = task_for(opts.workload);
+    let k = opts.force_k.unwrap_or_else(|| choose_k(cluster, model, &task));
+    let mut rng = Rng::new(opts.seed);
+    let mut cache = StrategyCache::new();
+
+    // Phase 1: initial partition (spectral + KL), plus uniform-split seeds —
+    // the search space contains DistServe-style homogeneous layouts as
+    // special cases, and seeding them guarantees we never start below them.
+    let devs: Vec<DeviceId> = (0..cluster.n()).collect();
+    let mut seeds: Vec<Groups> = Vec::new();
+    {
+        let mut spectral_seed = spectral::partition_k(cluster, &devs, k);
+        kl::refine(cluster, &mut spectral_seed, 3.0);
+        seeds.push(spectral_seed);
+        // DistServe-style uniform layouts: every group size dividing n with
+        // at least two groups. K is an *estimate* (Appendix A), so exploring
+        // nearby group counts is legitimate — except when a caller pinned K.
+        for gs in [1usize, 2, 4, 8] {
+            if gs <= cluster.n() && cluster.n() % gs == 0 && cluster.n() / gs >= 2 {
+                let k2 = cluster.n() / gs;
+                if opts.force_k.is_some() && k2 != k {
+                    continue;
+                }
+                seeds.push((0..k2).map(|g| (g * gs..(g + 1) * gs).collect()).collect());
+            }
+        }
+    }
+
+    // Phase 2 (+ type assignment): evaluate seeds, keep the best.
+    let mut best_placement: Option<Placement> = None;
+    let mut best_groups: Groups = Vec::new();
+    for groups in seeds {
+        if let Some(p) = evaluate_partition(
+            cluster,
+            model,
+            &task,
+            opts.period,
+            &groups,
+            opts.type_candidates,
+            &mut cache,
+        ) {
+            if best_placement.as_ref().map(|b| p.flow_value > b.flow_value).unwrap_or(true) {
+                best_placement = Some(p);
+                best_groups = groups;
+            }
+        }
+    }
+    let mut best_placement = best_placement?;
+    let mut history = vec![ConvergencePoint {
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        round: 0,
+        tokens_per_s: best_placement.tokens_per_s,
+    }];
+
+    if opts.swap_mode == SwapMode::None {
+        return Some(ScheduleResult {
+            placement: best_placement,
+            history,
+            rounds: 0,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        });
+    }
+
+    // Phase 3: iterative refinement (§3.4). A seen-set memo keeps the
+    // proposal budget pointed at *new* partitions.
+    let mut seen: std::collections::HashSet<Vec<usize>> = std::collections::HashSet::new();
+    seen.insert(partition_signature(&best_groups));
+    let mut stall = 0usize;
+    let mut rounds = 0usize;
+    for round in 1..=opts.max_rounds {
+        rounds = round;
+        let proposals = match opts.swap_mode {
+            SwapMode::Guided => guided_proposals(
+                cluster,
+                &best_groups,
+                &best_placement,
+                &mut rng,
+                opts.proposals_per_round,
+            ),
+            SwapMode::Random => (0..opts.proposals_per_round)
+                .map(|_| random_mutation(&best_groups, &mut rng))
+                .collect(),
+            SwapMode::None => unreachable!(),
+        };
+        let mut improved = false;
+        for cand in proposals {
+            if cand.iter().any(|g| g.is_empty()) {
+                continue;
+            }
+            if !seen.insert(partition_signature(&cand)) {
+                continue; // already evaluated
+            }
+            if let Some(p) = evaluate_partition(
+                cluster,
+                model,
+                &task,
+                opts.period,
+                &cand,
+                opts.type_candidates,
+                &mut cache,
+            ) {
+                if p.flow_value > best_placement.flow_value * (1.0 + 1e-6) {
+                    best_placement = p;
+                    best_groups = cand;
+                    improved = true;
+                }
+            }
+        }
+        history.push(ConvergencePoint {
+            elapsed_s: t0.elapsed().as_secs_f64(),
+            round,
+            tokens_per_s: best_placement.tokens_per_s,
+        });
+        if improved {
+            stall = 0;
+        } else {
+            stall += 1;
+            if stall >= opts.patience {
+                break;
+            }
+        }
+    }
+
+    Some(ScheduleResult {
+        placement: best_placement,
+        history,
+        rounds,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::model::{LLAMA2_70B, OPT_30B};
+
+    #[test]
+    fn choose_k_is_memory_driven() {
+        let task = TaskProfile::new(1, 1020.0, 211.0);
+        let het1 = settings::het1();
+        let k70 = choose_k(&het1, &LLAMA2_70B, &task);
+        let k30 = choose_k(&het1, &OPT_30B, &task);
+        assert!(k30 > k70, "more replicas of the smaller model: {k30} vs {k70}");
+        assert!((4..=8).contains(&k70), "llama70b K = {k70}");
+        assert!((8..=14).contains(&k30), "opt30b K = {k30}");
+    }
+
+    #[test]
+    fn schedule_case_study_cluster() {
+        // Appendix E: 4xH100 + 4xA100, LPHD workload.
+        let c = settings::case_study();
+        let mut opts = ScheduleOptions::new(WorkloadKind::Lphd);
+        opts.max_rounds = 10;
+        opts.force_k = Some(4);
+        let r = schedule(&c, &OPT_30B, &opts).expect("schedules");
+        let p = &r.placement;
+        assert!(p.tokens_per_s > 0.0);
+        assert!(!p.prefill_indices().is_empty());
+        assert!(!p.decode_indices().is_empty());
+        // Every device used exactly once.
+        let mut all: Vec<usize> = p.groups.iter().flat_map(|g| g.devices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..c.n()).collect::<Vec<_>>());
+        // History is monotone non-decreasing.
+        for w in r.history.windows(2) {
+            assert!(w[1].tokens_per_s >= w[0].tokens_per_s - 1e-9);
+        }
+    }
+
+    #[test]
+    fn guided_beats_or_matches_oneshot() {
+        let c = settings::het1();
+        let mut base = ScheduleOptions::new(WorkloadKind::Hphd);
+        base.max_rounds = 8;
+        base.patience = 4;
+        let mut oneshot = base.clone();
+        oneshot.swap_mode = SwapMode::None;
+        let g = schedule(&c, &OPT_30B, &base).unwrap();
+        let o = schedule(&c, &OPT_30B, &oneshot).unwrap();
+        assert!(
+            g.placement.tokens_per_s >= o.placement.tokens_per_s - 1e-9,
+            "guided {} < one-shot {}",
+            g.placement.tokens_per_s,
+            o.placement.tokens_per_s
+        );
+    }
+}

@@ -1,0 +1,137 @@
+//! Model placement: the scheduler's output (paper §3.1's four decisions —
+//! group partition, group type, per-group parallel strategy, KV routes).
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::costmodel::ReplicaConfig;
+
+/// One model-serving group with its chosen phase and parallel strategy.
+#[derive(Clone, Debug)]
+pub struct GroupPlan {
+    pub devices: Vec<DeviceId>,
+    pub is_prefill: bool,
+    /// None if no feasible strategy exists for this group (it then takes no
+    /// traffic; refinement will try to repair it).
+    pub config: Option<ReplicaConfig>,
+    /// Requests per scheduling period T this replica can serve (Appendix A).
+    pub capacity: f64,
+}
+
+/// A KV-cache communication route between a prefill and a decode replica
+/// with the flow assignment the max-flow algorithm produced (§3.3: "the
+/// generated flow assignments ... are used to guide the KV cache
+/// communication. The communication frequency is set to be proportional to
+/// these flow values").
+#[derive(Clone, Copy, Debug)]
+pub struct KvRoute {
+    /// Index into `Placement::groups` (a prefill group).
+    pub prefill: usize,
+    /// Index into `Placement::groups` (a decode group).
+    pub decode: usize,
+    /// Requests per period routed across this edge.
+    pub flow: f64,
+    /// Edge capacity (requests per period).
+    pub capacity: f64,
+}
+
+/// Complete placement + flow solution for one partition.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub groups: Vec<GroupPlan>,
+    pub routes: Vec<KvRoute>,
+    /// Max-flow value: requests the system serves per period T.
+    pub flow_value: f64,
+    /// Estimated decode throughput, tokens/s (the paper's headline metric).
+    pub tokens_per_s: f64,
+    /// Per-group utilization (flow through the compute node / capacity).
+    pub group_utilization: Vec<f64>,
+}
+
+impl Placement {
+    pub fn prefill_indices(&self) -> Vec<usize> {
+        (0..self.groups.len()).filter(|&g| self.groups[g].is_prefill).collect()
+    }
+
+    pub fn decode_indices(&self) -> Vec<usize> {
+        (0..self.groups.len()).filter(|&g| !self.groups[g].is_prefill).collect()
+    }
+
+    /// Paper-Table-2-style description: GPU composition, strategy, type.
+    pub fn describe(&self, cluster: &Cluster) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "estimated throughput {:.0} tokens/s ({} prefill / {} decode groups)\n",
+            self.tokens_per_s,
+            self.prefill_indices().len(),
+            self.decode_indices().len()
+        ));
+        for (gi, g) in self.groups.iter().enumerate() {
+            // Count GPUs by type, e.g. "1xH100+1xA100".
+            let mut counts: std::collections::BTreeMap<&str, usize> = Default::default();
+            for &d in &g.devices {
+                *counts.entry(cluster.devices[d].gpu.name()).or_default() += 1;
+            }
+            let comp: Vec<String> = counts.iter().map(|(t, c)| format!("{c}x{t}")).collect();
+            let strat = g
+                .config
+                .as_ref()
+                .map(|c| c.strategy_string())
+                .unwrap_or_else(|| "infeasible".to_string());
+            out.push_str(&format!(
+                "  group {gi}: {:<22} {:<12} {} (util {:.0}%, cap {:.0} req/T)\n",
+                comp.join("+"),
+                strat,
+                if g.is_prefill { "Prefill Instance" } else { "Decode Instance" },
+                self.group_utilization.get(gi).copied().unwrap_or(0.0) * 100.0,
+                g.capacity,
+            ));
+        }
+        for r in &self.routes {
+            if r.flow > 1e-9 {
+                out.push_str(&format!(
+                    "  kv route: group {} -> group {} flow {:.1} req/T (cap {:.1})\n",
+                    r.prefill, r.decode, r.flow, r.capacity
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+
+    #[test]
+    fn describe_formats_table2_style() {
+        let c = settings::het1();
+        let p = Placement {
+            groups: vec![
+                GroupPlan {
+                    devices: vec![0, 2],
+                    is_prefill: true,
+                    config: Some(ReplicaConfig::new(vec![vec![0], vec![2]], vec![24, 24])),
+                    capacity: 100.0,
+                },
+                GroupPlan {
+                    devices: vec![1, 3],
+                    is_prefill: false,
+                    config: Some(ReplicaConfig::new(vec![vec![1], vec![3]], vec![24, 24])),
+                    capacity: 80.0,
+                },
+            ],
+            routes: vec![KvRoute { prefill: 0, decode: 1, flow: 50.0, capacity: 200.0 }],
+            flow_value: 50.0,
+            tokens_per_s: 123.0,
+            group_utilization: vec![0.5, 0.62],
+        };
+        let s = p.describe(&c);
+        assert!(s.contains("1xA100+1xH100"), "{s}");
+        assert!(s.contains("TP=1,PP=2"), "{s}");
+        assert!(s.contains("Prefill Instance"), "{s}");
+        assert!(s.contains("Decode Instance"), "{s}");
+        assert!(s.contains("kv route"), "{s}");
+        assert_eq!(p.prefill_indices(), vec![0]);
+        assert_eq!(p.decode_indices(), vec![1]);
+    }
+}

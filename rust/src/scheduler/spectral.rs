@@ -1,0 +1,268 @@
+//! Spectral graph partitioning (paper §3.2 step i, after Alpert & Yao 1995):
+//! a dense symmetric Jacobi eigensolver computes the Laplacian's
+//! eigenvectors; recursive Fiedler-vector bisection with a memory-balance
+//! constraint produces the K model-serving groups.
+//!
+//! Edge weights are pairwise bandwidths (so minimizing the cut keeps
+//! high-bandwidth links *inside* groups for TP traffic); node weights are
+//! device memories (groups must each hold a model replica, so memory — not
+//! compute — is balanced, §3.2: "we balance memory rather than compute
+//! capacity to avoid potential OOM issues").
+
+use crate::cluster::{Cluster, DeviceId};
+
+/// Cyclic Jacobi eigensolver for a dense symmetric matrix.
+/// Returns (eigenvalues, eigenvectors) with eigenvectors\[k\] the unit
+/// eigenvector for eigenvalues\[k\], sorted ascending.
+pub fn jacobi_eigen(a: &[Vec<f64>]) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let n = a.len();
+    let mut m: Vec<Vec<f64>> = a.to_vec();
+    let mut v = vec![vec![0.0; n]; n];
+    for (i, row) in v.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i][j] * m[i][j];
+            }
+        }
+        if off.sqrt() < 1e-10 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                if m[p][q].abs() < 1e-14 {
+                    continue;
+                }
+                // Jacobi rotation annihilating m[p][q].
+                let theta = (m[q][q] - m[p][p]) / (2.0 * m[p][q]);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for i in 0..n {
+                    let (mip, miq) = (m[i][p], m[i][q]);
+                    m[i][p] = c * mip - s * miq;
+                    m[i][q] = s * mip + c * miq;
+                }
+                for j in 0..n {
+                    let (mpj, mqj) = (m[p][j], m[q][j]);
+                    m[p][j] = c * mpj - s * mqj;
+                    m[q][j] = s * mpj + c * mqj;
+                }
+                for i in 0..n {
+                    let (vip, viq) = (v[i][p], v[i][q]);
+                    v[i][p] = c * vip - s * viq;
+                    v[i][q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| m[i][i].partial_cmp(&m[j][j]).unwrap());
+    let evals: Vec<f64> = idx.iter().map(|&i| m[i][i]).collect();
+    let evecs: Vec<Vec<f64>> = idx.iter().map(|&k| (0..n).map(|i| v[i][k]).collect()).collect();
+    (evals, evecs)
+}
+
+/// Graph Laplacian L = D - W over the given device subset, with weights
+/// normalized by the max so Jacobi works in O(1)-scaled space.
+fn laplacian(cluster: &Cluster, devs: &[DeviceId]) -> Vec<Vec<f64>> {
+    let n = devs.len();
+    let mut w = vec![vec![0.0; n]; n];
+    let mut wmax: f64 = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                let bw = cluster.bandwidth[devs[i]][devs[j]];
+                w[i][j] = bw;
+                wmax = wmax.max(bw);
+            }
+        }
+    }
+    if wmax <= 0.0 {
+        wmax = 1.0;
+    }
+    let mut l = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        let mut deg = 0.0;
+        for j in 0..n {
+            if i != j {
+                let x = w[i][j] / wmax;
+                l[i][j] = -x;
+                deg += x;
+            }
+        }
+        l[i][i] = deg;
+    }
+    l
+}
+
+/// Fiedler vector (eigenvector of the second-smallest Laplacian eigenvalue)
+/// of the bandwidth graph over `devs`.
+pub fn fiedler_vector(cluster: &Cluster, devs: &[DeviceId]) -> Vec<f64> {
+    let l = laplacian(cluster, devs);
+    let (_vals, vecs) = jacobi_eigen(&l);
+    vecs[1].clone()
+}
+
+/// Bisect `devs` into two parts whose memory ratio approximates
+/// `frac` : (1-frac), ordering by the Fiedler value so the cut follows the
+/// spectral embedding.
+pub fn bisect(cluster: &Cluster, devs: &[DeviceId], frac: f64) -> (Vec<DeviceId>, Vec<DeviceId>) {
+    assert!(devs.len() >= 2);
+    let f = fiedler_vector(cluster, devs);
+    let mut order: Vec<usize> = (0..devs.len()).collect();
+    order.sort_by(|&i, &j| f[i].partial_cmp(&f[j]).unwrap());
+    let total_mem: f64 = devs.iter().map(|&d| cluster.devices[d].gpu.mem_bytes()).sum();
+    let target = total_mem * frac;
+    let mut acc = 0.0;
+    let mut left = Vec::new();
+    let mut right = Vec::new();
+    for (rank, &i) in order.iter().enumerate() {
+        let d = devs[i];
+        let m = cluster.devices[d].gpu.mem_bytes();
+        // Keep filling the left side until the target is met, but never
+        // leave either side empty.
+        let must_left = left.is_empty() && rank + 2 > order.len();
+        let room_right = order.len() - rank > 1;
+        if (acc + m * 0.5 <= target && room_right) || must_left || left.is_empty() {
+            left.push(d);
+            acc += m;
+        } else {
+            right.push(d);
+        }
+    }
+    if right.is_empty() {
+        right.push(left.pop().unwrap());
+    }
+    (left, right)
+}
+
+/// Partition `devs` into `k` memory-balanced groups by recursive spectral
+/// bisection. Groups are non-empty and disjoint, covering all of `devs`.
+pub fn partition_k(cluster: &Cluster, devs: &[DeviceId], k: usize) -> Vec<Vec<DeviceId>> {
+    assert!(k >= 1);
+    assert!(devs.len() >= k, "cannot split {} devices into {k} groups", devs.len());
+    if k == 1 {
+        return vec![devs.to_vec()];
+    }
+    let k_left = k / 2;
+    let k_right = k - k_left;
+    let frac = k_left as f64 / k as f64;
+    let (l, r) = bisect(cluster, devs, frac);
+    // Guarantee each side can host its group count.
+    let (mut l, mut r) = (l, r);
+    while l.len() < k_left {
+        l.push(r.pop().unwrap());
+    }
+    while r.len() < k_right {
+        r.push(l.pop().unwrap());
+    }
+    let mut out = partition_k(cluster, &l, k_left);
+    out.extend(partition_k(cluster, &r, k_right));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn jacobi_small_known() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = vec![vec![2.0, 1.0], vec![1.0, 2.0]];
+        let (vals, vecs) = jacobi_eigen(&a);
+        assert!((vals[0] - 1.0).abs() < 1e-8);
+        assert!((vals[1] - 3.0).abs() < 1e-8);
+        // eigenvector for 1 is (1,-1)/sqrt(2) up to sign
+        let v = &vecs[0];
+        assert!((v[0] + v[1]).abs() < 1e-8, "{v:?}");
+    }
+
+    #[test]
+    fn jacobi_reconstructs_matrix() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        for _ in 0..20 {
+            let n = rng.range(2, 8);
+            let mut a = vec![vec![0.0; n]; n];
+            for i in 0..n {
+                for j in i..n {
+                    let x = rng.range_f64(-2.0, 2.0);
+                    a[i][j] = x;
+                    a[j][i] = x;
+                }
+            }
+            let (vals, vecs) = jacobi_eigen(&a);
+            // Check A v = lambda v for each pair.
+            for (k, v) in vecs.iter().enumerate() {
+                for i in 0..n {
+                    let av: f64 = (0..n).map(|j| a[i][j] * v[j]).sum();
+                    assert!((av - vals[k] * v[i]).abs() < 1e-6, "eigenpair {k} broken");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fiedler_separates_clusters() {
+        // het1: the A6000 pod is in a different DC from the H100/A100 pod;
+        // the Fiedler vector must separate DC0 from DC1 devices.
+        let c = settings::het1();
+        let devs: Vec<usize> = (0..c.n()).collect();
+        let f = fiedler_vector(&c, &devs);
+        let dc0: Vec<f64> = devs.iter().filter(|&&d| c.devices[d].dc == 0).map(|&d| f[d]).collect();
+        let dc1: Vec<f64> = devs.iter().filter(|&&d| c.devices[d].dc == 1).map(|&d| f[d]).collect();
+        let max0 = dc0.iter().cloned().fold(f64::MIN, f64::max);
+        let min0 = dc0.iter().cloned().fold(f64::MAX, f64::min);
+        let max1 = dc1.iter().cloned().fold(f64::MIN, f64::max);
+        let min1 = dc1.iter().cloned().fold(f64::MAX, f64::min);
+        // One DC entirely above the other in Fiedler coordinates.
+        assert!(max0 < min1 || max1 < min0, "fiedler did not separate DCs");
+    }
+
+    #[test]
+    fn partition_covers_and_balances() {
+        let c = settings::het1();
+        let devs: Vec<usize> = (0..c.n()).collect();
+        for k in 2..=6 {
+            let parts = partition_k(&c, &devs, k);
+            assert_eq!(parts.len(), k);
+            let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, devs, "k={k} not a partition");
+            // Memory balance within 3x of ideal (KL refines further).
+            let mems: Vec<f64> = parts
+                .iter()
+                .map(|g| g.iter().map(|&d| c.devices[d].gpu.mem_bytes()).sum::<f64>())
+                .collect();
+            let ideal = mems.iter().sum::<f64>() / k as f64;
+            for m in &mems {
+                assert!(*m > ideal / 4.0, "group too small: {m} vs ideal {ideal} (k={k})");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_random_clusters_property() {
+        check(0x5bec, 25, |rng| {
+            let n_nodes = rng.range(2, 6);
+            let c = settings::synthetic(n_nodes * 8 / 8 * 8, rng.next_u64());
+            let devs: Vec<usize> = (0..c.n()).collect();
+            let k = rng.range(2, (c.n() / 2).min(8));
+            let parts = partition_k(&c, &devs, k);
+            prop_assert!(parts.len() == k, "wrong group count");
+            let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+            all.sort_unstable();
+            prop_assert!(all == devs, "not a partition");
+            prop_assert!(parts.iter().all(|p| !p.is_empty()), "empty group");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,353 @@
+//! Per-group parallel-strategy search (paper §3.3): for every model-serving
+//! group we enumerate TP×PP combinations (including HexGen-style asymmetric
+//! pipelines whose stages have different widths) and pick the
+//! *latency-optimal* strategy for prefill replicas and the
+//! *throughput-optimal* strategy for decode replicas.
+
+use std::collections::HashMap;
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};
+use crate::model::LlmSpec;
+
+/// Largest TP width we consider (NVLink islands are at most 8-wide in the
+/// paper's settings).
+const MAX_TP: usize = 8;
+
+/// Order devices for chunking: same node together, then by type so
+/// consecutive chunks are as homogeneous as possible (this is what yields
+/// the paper's Table-2 asymmetric configs like [H100+A100] TP=1,PP=2).
+fn canonical_order(cluster: &Cluster, group: &[DeviceId]) -> Vec<DeviceId> {
+    let mut devs = group.to_vec();
+    devs.sort_by_key(|&d| {
+        let dev = &cluster.devices[d];
+        (dev.node, std::cmp::Reverse((dev.gpu.tflops() * 1e-12) as u64), d)
+    });
+    devs
+}
+
+/// Distribute `total_layers` over stages proportionally to aggregate stage
+/// compute (largest-remainder rounding, every stage >= 1 layer).
+pub fn assign_layers(cluster: &Cluster, stages: &[Vec<DeviceId>], total_layers: usize) -> Vec<usize> {
+    let powers: Vec<f64> = stages
+        .iter()
+        .map(|s| s.iter().map(|&d| cluster.devices[d].gpu.tflops()).sum::<f64>())
+        .collect();
+    let total_power: f64 = powers.iter().sum();
+    let mut layers: Vec<usize> = powers
+        .iter()
+        .map(|p| ((p / total_power) * total_layers as f64).floor() as usize)
+        .collect();
+    // Everyone gets at least one layer.
+    for l in layers.iter_mut() {
+        if *l == 0 {
+            *l = 1;
+        }
+    }
+    // Fix the sum with largest-remainder style adjustments.
+    loop {
+        let sum: usize = layers.iter().sum();
+        if sum == total_layers {
+            break;
+        }
+        if sum < total_layers {
+            // Give an extra layer to the most powerful-per-layer stage.
+            let i = (0..layers.len())
+                .max_by(|&a, &b| {
+                    (powers[a] / layers[a] as f64)
+                        .partial_cmp(&(powers[b] / layers[b] as f64))
+                        .unwrap()
+                })
+                .unwrap();
+            layers[i] += 1;
+        } else {
+            // Take a layer from the weakest-per-layer stage that can spare one.
+            let i = (0..layers.len())
+                .filter(|&i| layers[i] > 1)
+                .min_by(|&a, &b| {
+                    (powers[a] / layers[a] as f64)
+                        .partial_cmp(&(powers[b] / layers[b] as f64))
+                        .unwrap()
+                })
+                .expect("cannot shrink layers below 1 per stage");
+            layers[i] -= 1;
+        }
+    }
+    layers
+}
+
+/// Enumerate candidate replica configurations for a device group.
+pub fn enumerate_configs(cluster: &Cluster, model: &LlmSpec, group: &[DeviceId]) -> Vec<ReplicaConfig> {
+    let devs = canonical_order(cluster, group);
+    let n = devs.len();
+    let total_layers = model.n_layers;
+    let mut seen: HashMap<Vec<usize>, ()> = HashMap::new();
+    let mut out = Vec::new();
+
+    let mut push = |stages: Vec<Vec<DeviceId>>| {
+        if stages.is_empty() || stages.len() > total_layers {
+            return;
+        }
+        let sig: Vec<usize> = stages.iter().flat_map(|s| s.iter().copied().chain([usize::MAX])).collect();
+        if seen.insert(sig, ()).is_some() {
+            return;
+        }
+        let layers = assign_layers(cluster, &stages, total_layers);
+        out.push(ReplicaConfig::new(stages, layers));
+    };
+
+    // Uniform chunking: every tp dividing n (up to MAX_TP).
+    for tp in 1..=n.min(MAX_TP) {
+        if n % tp != 0 {
+            continue;
+        }
+        let stages: Vec<Vec<DeviceId>> = devs.chunks(tp).map(|c| c.to_vec()).collect();
+        push(stages);
+    }
+    // Node-aligned stages: each node's devices form one stage (split >MAX_TP).
+    {
+        let mut stages: Vec<Vec<DeviceId>> = Vec::new();
+        let mut cur: Vec<DeviceId> = Vec::new();
+        let mut cur_node = usize::MAX;
+        for &d in &devs {
+            let node = cluster.devices[d].node;
+            if node != cur_node && !cur.is_empty() {
+                stages.push(std::mem::take(&mut cur));
+            }
+            cur_node = node;
+            cur.push(d);
+            if cur.len() == MAX_TP {
+                stages.push(std::mem::take(&mut cur));
+            }
+        }
+        if !cur.is_empty() {
+            stages.push(cur);
+        }
+        push(stages.clone());
+        // And node-aligned halves: split each node stage of even width in two
+        // (gives e.g. TP=2,PP=2 on a 4-GPU node).
+        let mut halves = Vec::new();
+        for s in &stages {
+            if s.len() >= 2 && s.len() % 2 == 0 {
+                halves.push(s[..s.len() / 2].to_vec());
+                halves.push(s[s.len() / 2..].to_vec());
+            } else {
+                halves.push(s.clone());
+            }
+        }
+        push(halves);
+    }
+    out
+}
+
+/// Feasible = fits in memory for the task at batch 1 (Table 1 memory limit).
+fn feasible<'a>(
+    cm: &CostModel<'a>,
+    cfg: &ReplicaConfig,
+    task: &TaskProfile,
+) -> bool {
+    cm.memory_ok(cfg, &task.with_batch(1))
+}
+
+/// Latency-optimal prefill strategy: minimize single-request prefill latency
+/// (§3.3: "for prefill model replicas, we aim to determine the
+/// latency-optimal parallel configurations").
+pub fn best_prefill(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    group: &[DeviceId],
+    task: &TaskProfile,
+) -> Option<(ReplicaConfig, f64)> {
+    let cm = CostModel::new(cluster, model);
+    let mut best: Option<(ReplicaConfig, f64)> = None;
+    for cfg in enumerate_configs(cluster, model, group) {
+        if !feasible(&cm, &cfg, task) {
+            continue;
+        }
+        let lat = cm.prefill_latency(&cfg, &task.with_batch(1));
+        if best.as_ref().map(|(_, l)| lat < *l).unwrap_or(true) {
+            best = Some((cfg, lat));
+        }
+    }
+    best
+}
+
+/// Throughput-optimal decode strategy: maximize generated tokens/s at the
+/// memory-limited max batch (§3.3: decode replicas are IO-bound and benefit
+/// from batching).
+pub fn best_decode(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    group: &[DeviceId],
+    task: &TaskProfile,
+) -> Option<(ReplicaConfig, f64)> {
+    let cm = CostModel::new(cluster, model);
+    let mut best: Option<(ReplicaConfig, f64)> = None;
+    for cfg in enumerate_configs(cluster, model, group) {
+        if !feasible(&cm, &cfg, task) {
+            continue;
+        }
+        let mb = cm.max_decode_batch(&cfg, task);
+        if mb == 0 {
+            continue;
+        }
+        let lat = cm.decode_latency(&cfg, &task.with_batch(mb));
+        let tput = mb as f64 * task.s_out / lat; // tokens per second
+        if best.as_ref().map(|(_, t)| tput > *t).unwrap_or(true) {
+            best = Some((cfg, tput));
+        }
+    }
+    best
+}
+
+/// Memoized per-group strategy search; the refinement loop re-evaluates
+/// thousands of partitions and most groups repeat.
+#[derive(Default)]
+pub struct StrategyCache {
+    prefill: HashMap<Vec<DeviceId>, Option<(ReplicaConfig, f64)>>,
+    decode: HashMap<Vec<DeviceId>, Option<(ReplicaConfig, f64)>>,
+    pub hits: usize,
+    pub misses: usize,
+}
+
+impl StrategyCache {
+    pub fn new() -> StrategyCache {
+        StrategyCache::default()
+    }
+
+    fn key(group: &[DeviceId]) -> Vec<DeviceId> {
+        let mut k = group.to_vec();
+        k.sort_unstable();
+        k
+    }
+
+    pub fn best_prefill(
+        &mut self,
+        cluster: &Cluster,
+        model: &LlmSpec,
+        group: &[DeviceId],
+        task: &TaskProfile,
+    ) -> Option<(ReplicaConfig, f64)> {
+        let key = Self::key(group);
+        if let Some(v) = self.prefill.get(&key) {
+            self.hits += 1;
+            return v.clone();
+        }
+        self.misses += 1;
+        let v = best_prefill(cluster, model, group, task);
+        self.prefill.insert(key, v.clone());
+        v
+    }
+
+    pub fn best_decode(
+        &mut self,
+        cluster: &Cluster,
+        model: &LlmSpec,
+        group: &[DeviceId],
+        task: &TaskProfile,
+    ) -> Option<(ReplicaConfig, f64)> {
+        let key = Self::key(group);
+        if let Some(v) = self.decode.get(&key) {
+            self.hits += 1;
+            return v.clone();
+        }
+        self.misses += 1;
+        let v = best_decode(cluster, model, group, task);
+        self.decode.insert(key, v.clone());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::model::{LLAMA2_70B, OPT_30B};
+
+    fn task() -> TaskProfile {
+        TaskProfile::new(1, 512.0, 128.0)
+    }
+
+    #[test]
+    fn layers_proportional_to_power() {
+        let c = settings::het1();
+        // Stage 0: H100 pair; stage 1: A6000 pair. H100 ~12.8x A6000 flops.
+        let stages = vec![vec![0, 1], vec![18, 19]];
+        let layers = assign_layers(&c, &stages, 48);
+        assert_eq!(layers.iter().sum::<usize>(), 48);
+        assert!(layers[0] > layers[1] * 5, "{layers:?}");
+        assert!(layers[1] >= 1);
+    }
+
+    #[test]
+    fn enumerate_includes_uniform_and_asymmetric() {
+        let c = settings::het1();
+        // Mixed group: 2 H100 (node0) + 2 A100 (node1).
+        let group = vec![0, 1, 2, 3];
+        let cfgs = enumerate_configs(&c, &OPT_30B, &group);
+        assert!(!cfgs.is_empty());
+        let sigs: Vec<(usize, usize)> = cfgs.iter().map(|c| (c.tp(), c.pp())).collect();
+        assert!(sigs.contains(&(1, 4)), "{sigs:?}");
+        assert!(sigs.contains(&(2, 2)), "{sigs:?}");
+        assert!(sigs.contains(&(4, 1)), "{sigs:?}");
+        for cfg in &cfgs {
+            assert_eq!(cfg.total_layers(), OPT_30B.n_layers);
+            assert_eq!(cfg.n_devices(), 4);
+        }
+    }
+
+    #[test]
+    fn prefill_prefers_tensor_parallelism() {
+        // §5.2 finding (1): scheduling prioritizes TP for prefill replicas.
+        let c = settings::homogeneous();
+        let group: Vec<usize> = (0..4).collect();
+        let (cfg, _lat) = best_prefill(&c, &OPT_30B, &group, &task()).unwrap();
+        assert!(cfg.tp() >= 2, "prefill picked {}", cfg.strategy_string());
+    }
+
+    #[test]
+    fn decode_feasible_and_batched() {
+        let c = settings::homogeneous();
+        let group: Vec<usize> = (0..4).collect();
+        let (cfg, tput) = best_decode(&c, &LLAMA2_70B, &group, &task()).unwrap();
+        assert!(tput > 0.0);
+        assert!(cfg.n_devices() == 4);
+    }
+
+    #[test]
+    fn infeasible_group_returns_none() {
+        // LLaMA-2-70B cannot fit on a single A6000 (48 GB).
+        let c = settings::het1();
+        let a6000 = (0..c.n()).find(|&d| c.devices[d].gpu == crate::cluster::GpuType::A6000).unwrap();
+        assert!(best_prefill(&c, &LLAMA2_70B, &[a6000], &task()).is_none());
+        assert!(best_decode(&c, &LLAMA2_70B, &[a6000], &task()).is_none());
+    }
+
+    #[test]
+    fn low_bandwidth_groups_prefer_pp() {
+        // §5.2 finding (2): PP reduces inter-machine communication over
+        // limited bandwidth. A group spanning the WAN (H100 in dc0 + A6000
+        // in dc1 on het1) must not choose TP across the WAN link.
+        let c = settings::het1();
+        let group = vec![0, 1, 16, 17]; // 2xH100 dc0 + 2xA6000 dc1
+        let (cfg, _) = best_prefill(&c, &OPT_30B, &group, &task()).unwrap();
+        // No stage may contain devices from both DCs.
+        for stage in &cfg.stages {
+            let dcs: std::collections::HashSet<usize> =
+                stage.iter().map(|&d| c.devices[d].dc).collect();
+            assert_eq!(dcs.len(), 1, "TP across WAN: {cfg}");
+        }
+    }
+
+    #[test]
+    fn cache_hits() {
+        let c = settings::homogeneous();
+        let mut cache = StrategyCache::new();
+        let g: Vec<usize> = (0..4).collect();
+        let a = cache.best_prefill(&c, &OPT_30B, &g, &task());
+        let b = cache.best_prefill(&c, &OPT_30B, &g, &task());
+        assert_eq!(a.is_some(), b.is_some());
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 1);
+    }
+}

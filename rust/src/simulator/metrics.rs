@@ -1,0 +1,148 @@
+//! Simulation metrics: the paper's evaluation quantities (§2 "Inference
+//! serving goal"): decode throughput (tokens/s), end-to-end latency
+//! statistics, and SLO attainment at configurable SLO scales.
+
+use crate::util::stats;
+
+/// Per-request timing record.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub arrival: f64,
+    /// When the prefill finished (≈ time to first token).
+    pub prefill_done: f64,
+    /// When the last output token was generated.
+    pub completion: f64,
+    pub input_len: usize,
+    pub output_len: usize,
+    /// SLO base: the request's "single device execution latency" (§2),
+    /// against which SLO scales are measured.
+    pub slo_base: f64,
+}
+
+impl RequestRecord {
+    pub fn latency(&self) -> f64 {
+        self.completion - self.arrival
+    }
+
+    pub fn ttft(&self) -> f64 {
+        self.prefill_done - self.arrival
+    }
+}
+
+/// Aggregated simulation report.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub records: Vec<RequestRecord>,
+    /// Wall-clock span of the simulation (first arrival → last completion).
+    pub makespan: f64,
+    pub total_output_tokens: usize,
+    pub total_input_tokens: usize,
+}
+
+impl SimReport {
+    pub fn from_records(records: Vec<RequestRecord>) -> SimReport {
+        let first = records.iter().map(|r| r.arrival).fold(f64::INFINITY, f64::min);
+        let last = records.iter().map(|r| r.completion).fold(0.0f64, f64::max);
+        let makespan = if records.is_empty() { 0.0 } else { (last - first).max(1e-9) };
+        let total_output_tokens = records.iter().map(|r| r.output_len).sum();
+        let total_input_tokens = records.iter().map(|r| r.input_len).sum();
+        SimReport { records, makespan, total_output_tokens, total_input_tokens }
+    }
+
+    /// The paper's offline metric: generated tokens per second.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.total_output_tokens as f64 / self.makespan
+    }
+
+    pub fn latencies(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.latency()).collect()
+    }
+
+    pub fn avg_latency(&self) -> f64 {
+        stats::mean(&self.latencies())
+    }
+
+    pub fn p_latency(&self, p: f64) -> f64 {
+        stats::percentile(&self.latencies(), p)
+    }
+
+    pub fn avg_ttft(&self) -> f64 {
+        stats::mean(&self.records.iter().map(|r| r.ttft()).collect::<Vec<_>>())
+    }
+
+    /// SLO attainment at the given scale: fraction of requests whose
+    /// end-to-end latency is within `scale` × their single-device base
+    /// latency (§2 "SLO scale").
+    pub fn slo_attainment(&self, scale: f64) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let ok = self
+            .records
+            .iter()
+            .filter(|r| r.latency() <= scale * r.slo_base)
+            .count();
+        ok as f64 / self.records.len() as f64
+    }
+
+    /// Smallest SLO scale achieving the given attainment (bisection over
+    /// scales; the paper's Fig. 8 reports latency deadlines at 99%).
+    pub fn slo_scale_for_attainment(&self, target: f64) -> f64 {
+        let (mut lo, mut hi) = (0.1, 1000.0);
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if self.slo_attainment(mid) >= target {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, arrival: f64, done: f64, out: usize, base: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            arrival,
+            prefill_done: arrival + 0.1,
+            completion: done,
+            input_len: 100,
+            output_len: out,
+            slo_base: base,
+        }
+    }
+
+    #[test]
+    fn throughput_counts_output_tokens() {
+        let r = SimReport::from_records(vec![rec(0, 0.0, 10.0, 50, 1.0), rec(1, 0.0, 10.0, 50, 1.0)]);
+        assert!((r.tokens_per_s() - 10.0).abs() < 1e-9);
+        assert_eq!(r.total_output_tokens, 100);
+    }
+
+    #[test]
+    fn slo_attainment_scales() {
+        // latencies 1.0 and 3.0, bases 1.0.
+        let r = SimReport::from_records(vec![rec(0, 0.0, 1.0, 10, 1.0), rec(1, 0.0, 3.0, 10, 1.0)]);
+        assert_eq!(r.slo_attainment(0.5), 0.0);
+        assert_eq!(r.slo_attainment(1.5), 0.5);
+        assert_eq!(r.slo_attainment(3.5), 1.0);
+        let s99 = r.slo_scale_for_attainment(0.99);
+        assert!((s99 - 3.0).abs() < 0.01, "{s99}");
+    }
+
+    #[test]
+    fn empty_report() {
+        let r = SimReport::from_records(vec![]);
+        assert_eq!(r.tokens_per_s(), 0.0);
+        assert_eq!(r.slo_attainment(1.0), 0.0);
+    }
+}

@@ -1,0 +1,58 @@
+//! Discrete-event simulation of LLM serving on a heterogeneous cluster,
+//! driven by the Table-1 cost model (the executable substitute for the
+//! paper's RunPod testbed — DESIGN.md §1).
+//!
+//! Two engines:
+//! - [`disagg::run_disaggregated`]: HexGen-2/DistServe-style serving over a
+//!   [`Placement`](crate::scheduler::Placement) — prefill queues + batching,
+//!   per-route KV-transfer links with serialization, decode continuous
+//!   batching.
+//! - [`colocated::run_colocated`]: HexGen/vLLM-style colocated serving where
+//!   each iteration interleaves prefill and decode on the same replica (the
+//!   prefill-decoding interference the paper eliminates), with optional
+//!   SARATHI-style chunked prefill (Appendix D).
+
+pub mod colocated;
+pub mod disagg;
+pub mod events;
+pub mod metrics;
+
+pub use colocated::run_colocated;
+pub use disagg::run_disaggregated;
+pub use metrics::{RequestRecord, SimReport};
+
+use crate::cluster::GpuType;
+use crate::model::LlmSpec;
+use crate::workload::Request;
+
+/// SLO base latency for a request: its "single device execution latency"
+/// (§2) on a reference H100, from the Table-1 formulas with memory limits
+/// ignored (the base is notional — SLO scales are multiples of it).
+pub fn slo_base(model: &LlmSpec, req: &Request) -> f64 {
+    let g = GpuType::H100;
+    let h2 = (model.hidden * model.hidden) as f64;
+    let l = model.n_layers as f64;
+    let prefill = 24.0 * (req.input_len as f64).max(1.0) * h2 * l / g.tflops();
+    let scan = 12.0 * h2 * model.bytes_per_elem * l / g.mem_bw();
+    let step_flops = 24.0 * h2 * l / g.tflops();
+    prefill + (scan + step_flops) * req.output_len as f64
+}
+
+/// Per-iteration prefill token budget (paper Fig. 1 saturation point).
+pub const PREFILL_TOKEN_BUDGET: f64 = 2048.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LLAMA2_70B;
+
+    #[test]
+    fn slo_base_scales_with_lengths() {
+        let short = Request { id: 0, arrival: 0.0, input_len: 128, output_len: 16 };
+        let long = Request { id: 1, arrival: 0.0, input_len: 1024, output_len: 256 };
+        let a = slo_base(&LLAMA2_70B, &short);
+        let b = slo_base(&LLAMA2_70B, &long);
+        assert!(b > a * 5.0, "{a} vs {b}");
+        assert!(a > 0.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Built-in micro-benchmark harness (the offline registry has no criterion).
+//!
+//! Used by every file under `rust/benches/` (declared with `harness = false`).
+//! Each bench both (a) times its hot function with warmup + repeated samples
+//! and (b) prints the paper table/figure rows it regenerates, so
+//! `cargo bench` reproduces the evaluation section end to end.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// One timed measurement: runs `f` for `warmup` + `samples` iterations and
+/// reports mean/p50/p95 wall-clock in a criterion-like line.
+pub fn time<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        mean_s: stats::mean(&times),
+        p50_s: stats::percentile(&times, 50.0),
+        p95_s: stats::percentile(&times, 95.0),
+        samples,
+    };
+    println!("{res}");
+    res
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub samples: usize,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bench {:<44} mean {:>10} p50 {:>10} p95 {:>10} ({} samples)",
+            self.name,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.p50_s),
+            fmt_dur(self.p95_s),
+            self.samples
+        )
+    }
+}
+
+pub fn fmt_dur(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Fixed-width table printer for paper-row reproduction output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Raw row access (tests and downstream formatting).
+    pub fn rows_for_test(&self) -> Vec<Vec<String>> {
+        self.rows.clone()
+    }
+
+    pub fn headers(&self) -> &[String] {
+        &self.headers
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n=== {title} ===");
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reports_positive() {
+        let r = time("noop-ish", 1, 5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_s >= 0.0);
+        assert_eq!(r.samples, 5);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+        assert!(fmt_dur(2e-6).ends_with("µs"));
+        assert!(fmt_dur(2e-3).ends_with("ms"));
+        assert!(fmt_dur(2.0).ends_with('s'));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_checks_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".to_string()]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Support utilities: deterministic RNG, stats, minimal JSON, CLI args,
+//! bench harness, and a mini property-testing framework.
+//!
+//! These exist because the build environment's offline crate registry only
+//! carries the `xla` crate's transitive closure (see DESIGN.md §2) — no
+//! rand/serde/clap/criterion/proptest.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,60 @@
+//! Mini property-testing harness (the offline registry has no proptest).
+//!
+//! `check(seed, cases, |rng| ...)` runs a closure over many deterministic
+//! random cases; on failure it reports the case index and per-case seed so
+//! the exact failure reproduces with `case(seed)`. Used by the scheduler,
+//! max-flow, router, and simulator invariant tests (DESIGN.md §8).
+
+use crate::util::rng::Rng;
+
+/// Run `cases` property checks. The closure gets a per-case RNG and returns
+/// `Err(msg)` to fail. Panics with the reproducing seed on failure.
+pub fn check<F>(seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(1_000_003).wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at case {case}/{cases} (reproduce with seed {case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        check(1, 200, |rng| {
+            let a = rng.range(0, 100);
+            let b = rng.range(0, 100);
+            prop_assert!(a + b >= a, "overflow {a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_bad_property() {
+        check(2, 200, |rng| {
+            let a = rng.range(0, 100);
+            prop_assert!(a < 99, "hit {a}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,205 @@
+//! LLM inference workloads: the paper's four offline workload classes
+//! (HPLD / HPHD / LPHD / LPLD, §5.1) and the online Azure-conversation-like
+//! trace (Fig. 5), with Poisson arrivals.
+//!
+//! Thresholds follow the paper: prefill > 512 tokens is "heavy"; decode
+//! > 128 tokens is "heavy" (after Hu et al., 2024).
+
+pub mod azure;
+
+use crate::util::rng::Rng;
+
+pub const HEAVY_PREFILL_THRESHOLD: usize = 512;
+pub const HEAVY_DECODE_THRESHOLD: usize = 128;
+
+/// One inference request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    pub id: usize,
+    /// Arrival time in seconds from trace start (0.0 for offline traces).
+    pub arrival: f64,
+    pub input_len: usize,
+    pub output_len: usize,
+}
+
+/// The paper's workload classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    /// Heavy prefill, light decoding (e.g. coding workloads).
+    Hpld,
+    /// Heavy prefill, heavy decoding.
+    Hphd,
+    /// Light prefill, heavy decoding (e.g. conversation with long answers).
+    Lphd,
+    /// Light prefill, light decoding.
+    Lpld,
+    /// Mixed online trace sampled from the Azure-conversation-like
+    /// distribution (Fig. 5).
+    Online,
+}
+
+pub const OFFLINE_KINDS: [WorkloadKind; 4] =
+    [WorkloadKind::Hpld, WorkloadKind::Hphd, WorkloadKind::Lphd, WorkloadKind::Lpld];
+
+impl WorkloadKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::Hpld => "HPLD",
+            WorkloadKind::Hphd => "HPHD",
+            WorkloadKind::Lphd => "LPHD",
+            WorkloadKind::Lpld => "LPLD",
+            WorkloadKind::Online => "Online",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<WorkloadKind> {
+        match s.to_ascii_uppercase().as_str() {
+            "HPLD" => Some(WorkloadKind::Hpld),
+            "HPHD" => Some(WorkloadKind::Hphd),
+            "LPHD" => Some(WorkloadKind::Lphd),
+            "LPLD" => Some(WorkloadKind::Lpld),
+            "ONLINE" => Some(WorkloadKind::Online),
+            _ => None,
+        }
+    }
+
+    /// Sample (input_len, output_len) for this class.
+    pub fn sample_lengths(self, rng: &mut Rng) -> (usize, usize) {
+        match self {
+            WorkloadKind::Hpld => (azure::sample_heavy_prefill(rng), azure::sample_light_decode(rng)),
+            WorkloadKind::Hphd => (azure::sample_heavy_prefill(rng), azure::sample_heavy_decode(rng)),
+            WorkloadKind::Lphd => (azure::sample_light_prefill(rng), azure::sample_heavy_decode(rng)),
+            WorkloadKind::Lpld => (azure::sample_light_prefill(rng), azure::sample_light_decode(rng)),
+            WorkloadKind::Online => azure::sample_conversation(rng),
+        }
+    }
+
+    /// Representative task profile (mean lengths) used by the scheduler to
+    /// size capacities for this workload class.
+    pub fn mean_lengths(self) -> (f64, f64) {
+        match self {
+            WorkloadKind::Hpld => (1024.0, 64.0),
+            WorkloadKind::Hphd => (1024.0, 256.0),
+            WorkloadKind::Lphd => (256.0, 256.0),
+            WorkloadKind::Lpld => (256.0, 64.0),
+            WorkloadKind::Online => (1020.0, 211.0),
+        }
+    }
+}
+
+/// A generated request trace.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub kind: WorkloadKind,
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    /// Offline trace: `n` requests all available at t=0 ("requests arrive at
+    /// a rate that fully utilizes the cluster", §5.1).
+    pub fn offline(kind: WorkloadKind, n: usize, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed ^ 0x0FF1CE);
+        let requests = (0..n)
+            .map(|id| {
+                let (input_len, output_len) = kind.sample_lengths(&mut rng);
+                Request { id, arrival: 0.0, input_len, output_len }
+            })
+            .collect();
+        Trace { kind, requests }
+    }
+
+    /// Online trace: Poisson arrivals at `rate` req/s for `duration` seconds
+    /// (the paper scales rate to 75% of cluster peak).
+    pub fn online(kind: WorkloadKind, rate: f64, duration: f64, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed ^ 0x0411_15E5);
+        let mut requests = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += rng.exp(rate);
+            if t >= duration {
+                break;
+            }
+            let (input_len, output_len) = kind.sample_lengths(&mut rng);
+            requests.push(Request { id: requests.len(), arrival: t, input_len, output_len });
+        }
+        Trace { kind, requests }
+    }
+
+    pub fn total_output_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.output_len).sum()
+    }
+
+    pub fn total_input_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.input_len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offline_classes_respect_thresholds() {
+        for kind in OFFLINE_KINDS {
+            let t = Trace::offline(kind, 500, 7);
+            assert_eq!(t.requests.len(), 500);
+            for r in &t.requests {
+                assert_eq!(r.arrival, 0.0);
+                match kind {
+                    WorkloadKind::Hpld => {
+                        assert!(r.input_len > HEAVY_PREFILL_THRESHOLD);
+                        assert!(r.output_len <= HEAVY_DECODE_THRESHOLD);
+                    }
+                    WorkloadKind::Hphd => {
+                        assert!(r.input_len > HEAVY_PREFILL_THRESHOLD);
+                        assert!(r.output_len > HEAVY_DECODE_THRESHOLD);
+                    }
+                    WorkloadKind::Lphd => {
+                        assert!(r.input_len <= HEAVY_PREFILL_THRESHOLD);
+                        assert!(r.output_len > HEAVY_DECODE_THRESHOLD);
+                    }
+                    WorkloadKind::Lpld => {
+                        assert!(r.input_len <= HEAVY_PREFILL_THRESHOLD);
+                        assert!(r.output_len <= HEAVY_DECODE_THRESHOLD);
+                    }
+                    WorkloadKind::Online => unreachable!(),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn online_poisson_rate() {
+        let t = Trace::online(WorkloadKind::Online, 5.0, 200.0, 3);
+        let n = t.requests.len() as f64;
+        assert!((n / 200.0 - 5.0).abs() < 0.5, "rate {} off", n / 200.0);
+        // arrivals strictly increasing
+        for w in t.requests.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Trace::offline(WorkloadKind::Hphd, 50, 9);
+        let b = Trace::offline(WorkloadKind::Hphd, 50, 9);
+        assert_eq!(a.requests, b.requests);
+        let c = Trace::offline(WorkloadKind::Hphd, 50, 10);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for k in [WorkloadKind::Hpld, WorkloadKind::Hphd, WorkloadKind::Lphd, WorkloadKind::Lpld, WorkloadKind::Online] {
+            assert_eq!(WorkloadKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(WorkloadKind::from_name("hpld"), Some(WorkloadKind::Hpld));
+    }
+
+    #[test]
+    fn token_totals() {
+        let t = Trace::offline(WorkloadKind::Lpld, 10, 1);
+        assert_eq!(t.total_output_tokens(), t.requests.iter().map(|r| r.output_len).sum::<usize>());
+        assert!(t.total_input_tokens() > 0);
+    }
+}

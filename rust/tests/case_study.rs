@@ -1,0 +1,101 @@
+//! Appendix-E case study: the scheduling algorithm on the small 4xH100 +
+//! 4xA100 cluster, where the paper walks through every phase and reports
+//! that the output matches exhaustive search.
+
+use hexgen2::cluster::settings;
+use hexgen2::model::OPT_30B;
+use hexgen2::scheduler::{self, ScheduleOptions, SwapMode};
+use hexgen2::simulator::run_disaggregated;
+use hexgen2::workload::{Trace, WorkloadKind};
+
+#[test]
+fn phase1_spectral_partition_groups_by_type() {
+    // Appendix E step 1: groups come out homogeneous (H100s with H100s,
+    // A100s with A100s) because NVLink islands dominate the cut.
+    let c = settings::case_study();
+    let devs: Vec<usize> = (0..c.n()).collect();
+    let groups = scheduler::spectral::partition_k(&c, &devs, 4);
+    for g in &groups {
+        let types: std::collections::HashSet<_> =
+            g.iter().map(|&d| c.devices[d].gpu).collect();
+        assert_eq!(types.len(), 1, "mixed group {g:?}");
+        assert_eq!(g.len(), 2, "expected pairs, got {g:?}");
+    }
+}
+
+#[test]
+fn full_algorithm_produces_balanced_disaggregation() {
+    let c = settings::case_study();
+    let mut opts = ScheduleOptions::new(WorkloadKind::Lphd);
+    opts.force_k = Some(4);
+    let r = scheduler::schedule(&c, &OPT_30B, &opts).expect("schedules");
+    let p = &r.placement;
+    assert_eq!(p.groups.len(), 4);
+    // Both phases live, every group feasible.
+    assert!(!p.prefill_indices().is_empty());
+    assert!(!p.decode_indices().is_empty());
+    for g in &p.groups {
+        assert!(g.config.is_some(), "infeasible group in tiny case study");
+        assert!(g.capacity > 0.0);
+    }
+    // LPHD: decode-heavy => at least half the GPUs serve decode (Appendix E
+    // swaps devices toward decode for LPHD).
+    let decode_gpus: usize = p.decode_indices().iter().map(|&g| p.groups[g].devices.len()).sum();
+    assert!(decode_gpus >= 4, "only {decode_gpus} GPUs on decode for LPHD");
+}
+
+#[test]
+fn matches_exhaustive_search_on_type_assignment() {
+    // With the partition fixed to the spectral pairs, our secondary
+    // partition + max-flow must find the same objective as brute force over
+    // all 2^4 type assignments.
+    let c = settings::case_study();
+    let task = scheduler::task_for(WorkloadKind::Lphd);
+    let devs: Vec<usize> = (0..c.n()).collect();
+    let groups = scheduler::spectral::partition_k(&c, &devs, 4);
+
+    let mut cache = hexgen2::scheduler::strategy::StrategyCache::new();
+    let ours = scheduler::evaluate_partition(&c, &OPT_30B, &task, 600.0, &groups, 64, &mut cache)
+        .expect("placement");
+
+    let mut brute_best = 0.0f64;
+    for mask in 1u32..15 {
+        let assign: Vec<bool> = (0..4).map(|g| mask & (1 << g) != 0).collect();
+        if let Some(p) = hexgen2::scheduler::flownet::evaluate_types(
+            &c, &OPT_30B, &task, 600.0, &groups, &assign, &mut cache,
+        ) {
+            brute_best = brute_best.max(p.flow_value);
+        }
+    }
+    assert!(
+        (ours.flow_value - brute_best).abs() < 1e-6 * brute_best,
+        "ours {} != exhaustive {}",
+        ours.flow_value,
+        brute_best
+    );
+}
+
+#[test]
+fn guided_matches_or_beats_random_on_case_study() {
+    let c = settings::case_study();
+    let run = |mode, seed| {
+        let mut o = ScheduleOptions::new(WorkloadKind::Lphd);
+        o.swap_mode = mode;
+        o.seed = seed;
+        o.max_rounds = 8;
+        scheduler::schedule(&c, &OPT_30B, &o).unwrap().placement.tokens_per_s
+    };
+    let g: f64 = (0..3).map(|s| run(SwapMode::Guided, s)).sum();
+    let rnd: f64 = (0..3).map(|s| run(SwapMode::Random, s)).sum();
+    assert!(g >= rnd * 0.95, "guided {g} well below random {rnd}");
+}
+
+#[test]
+fn placement_survives_simulation() {
+    let c = settings::case_study();
+    let r = scheduler::schedule(&c, &OPT_30B, &ScheduleOptions::new(WorkloadKind::Lphd)).unwrap();
+    let trace = Trace::offline(WorkloadKind::Lphd, 100, 9);
+    let rep = run_disaggregated(&c, &OPT_30B, &r.placement, &trace);
+    assert_eq!(rep.records.len(), 100, "requests lost");
+    assert!(rep.tokens_per_s() > 0.0);
+}

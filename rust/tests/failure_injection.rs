@@ -1,0 +1,148 @@
+//! Failure injection + conservation: the system must degrade gracefully
+//! when replicas are infeasible or links are pathological, and no request
+//! may ever be lost or duplicated (DESIGN.md §8).
+
+use hexgen2::cluster::settings;
+use hexgen2::costmodel::ReplicaConfig;
+use hexgen2::model::{LLAMA2_70B, OPT_30B};
+use hexgen2::prop_assert;
+use hexgen2::scheduler::placement::{GroupPlan, KvRoute, Placement};
+use hexgen2::simulator::{run_colocated, run_disaggregated};
+use hexgen2::util::prop::check;
+use hexgen2::workload::{Trace, WorkloadKind};
+
+/// Build a placement by hand with one dead (infeasible) decode group: the
+/// router must send everything through the live one.
+#[test]
+fn dead_replica_is_routed_around() {
+    let c = settings::homogeneous();
+    let mk = |devs: Vec<usize>| ReplicaConfig::new(vec![devs], vec![OPT_30B.n_layers]);
+    let placement = Placement {
+        groups: vec![
+            GroupPlan { devices: vec![0, 1], is_prefill: true, config: Some(mk(vec![0, 1])), capacity: 100.0 },
+            GroupPlan { devices: vec![2, 3], is_prefill: false, config: Some(mk(vec![2, 3])), capacity: 100.0 },
+            // Dead decode group: no config, zero capacity (e.g. OOM).
+            GroupPlan { devices: vec![4, 5], is_prefill: false, config: None, capacity: 0.0 },
+        ],
+        routes: vec![
+            KvRoute { prefill: 0, decode: 1, flow: 100.0, capacity: 200.0 },
+            KvRoute { prefill: 0, decode: 2, flow: 0.0, capacity: 0.0 },
+        ],
+        flow_value: 100.0,
+        tokens_per_s: 0.0,
+        group_utilization: vec![1.0, 1.0, 0.0],
+    };
+    let trace = Trace::offline(WorkloadKind::Lpld, 60, 1);
+    let rep = run_disaggregated(&c, &OPT_30B, &placement, &trace);
+    assert_eq!(rep.records.len(), 60, "requests lost with a dead replica");
+}
+
+#[test]
+fn all_dead_decode_returns_empty_not_hang() {
+    let c = settings::homogeneous();
+    let mk = |devs: Vec<usize>| ReplicaConfig::new(vec![devs], vec![OPT_30B.n_layers]);
+    let placement = Placement {
+        groups: vec![
+            GroupPlan { devices: vec![0, 1], is_prefill: true, config: Some(mk(vec![0, 1])), capacity: 100.0 },
+            GroupPlan { devices: vec![2, 3], is_prefill: false, config: None, capacity: 0.0 },
+        ],
+        routes: vec![],
+        flow_value: 0.0,
+        tokens_per_s: 0.0,
+        group_utilization: vec![0.0, 0.0],
+    };
+    let trace = Trace::offline(WorkloadKind::Lpld, 10, 1);
+    let rep = run_disaggregated(&c, &OPT_30B, &placement, &trace);
+    assert!(rep.records.is_empty());
+}
+
+#[test]
+fn infeasible_colocated_replicas_are_skipped() {
+    // One replica that cannot hold the model (single GPU, 70B) + one that
+    // can: only the feasible one serves, nothing is lost.
+    let c = settings::homogeneous();
+    let bad = ReplicaConfig::new(vec![vec![0]], vec![LLAMA2_70B.n_layers]);
+    let good = ReplicaConfig::new(vec![(1..8).collect()], vec![LLAMA2_70B.n_layers]);
+    let trace = Trace::offline(WorkloadKind::Lpld, 30, 2);
+    let rep = run_colocated(&c, &LLAMA2_70B, &[bad, good], &trace, None);
+    assert_eq!(rep.records.len(), 30);
+}
+
+#[test]
+fn conservation_across_random_placements() {
+    // Requests in == requests out for arbitrary (valid) hand-built
+    // disaggregated placements and any workload.
+    check(0xFA11, 10, |rng| {
+        let c = settings::homogeneous();
+        let kinds = [WorkloadKind::Hpld, WorkloadKind::Hphd, WorkloadKind::Lphd, WorkloadKind::Lpld];
+        let kind = *rng.choice(&kinds);
+        // Random split of 8 GPUs into 2-4 groups of 2.
+        let mut ids: Vec<usize> = (0..8).collect();
+        rng.shuffle(&mut ids);
+        let n_groups = 2 + rng.range(0, 3);
+        let per = 8 / n_groups;
+        let mut groups = Vec::new();
+        for g in 0..n_groups {
+            let devs: Vec<usize> = ids[g * per..(g + 1) * per].to_vec();
+            let is_prefill = g % 2 == 0;
+            let cfg = ReplicaConfig::new(vec![devs.clone()], vec![OPT_30B.n_layers]);
+            groups.push(GroupPlan { devices: devs, is_prefill, config: Some(cfg), capacity: 50.0 });
+        }
+        let mut routes = Vec::new();
+        for p in 0..n_groups {
+            for d in 0..n_groups {
+                if groups[p].is_prefill && !groups[d].is_prefill {
+                    routes.push(KvRoute { prefill: p, decode: d, flow: 10.0, capacity: 100.0 });
+                }
+            }
+        }
+        if routes.is_empty() {
+            return Ok(());
+        }
+        let placement = Placement {
+            group_utilization: vec![0.5; groups.len()],
+            groups,
+            routes,
+            flow_value: 10.0,
+            tokens_per_s: 0.0,
+        };
+        let n = rng.range(20, 80);
+        let trace = Trace::offline(kind, n, rng.next_u64());
+        let rep = run_disaggregated(&c, &OPT_30B, &placement, &trace);
+        prop_assert!(rep.records.len() == n, "lost {} of {n}", n - rep.records.len());
+        // No duplicates.
+        let mut ids: Vec<usize> = rep.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        prop_assert!(ids.len() == n, "duplicated requests");
+        // Causality on every record.
+        for r in &rep.records {
+            prop_assert!(r.prefill_done >= r.arrival, "prefill before arrival");
+            prop_assert!(r.completion >= r.prefill_done, "completion before prefill");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zero_output_requests_complete() {
+    // Degenerate workload: decode length 1 (prefill-only responses).
+    let c = settings::homogeneous_small();
+    let mk = |devs: Vec<usize>| ReplicaConfig::new(vec![devs], vec![OPT_30B.n_layers]);
+    let placement = Placement {
+        groups: vec![
+            GroupPlan { devices: vec![0, 1], is_prefill: true, config: Some(mk(vec![0, 1])), capacity: 10.0 },
+            GroupPlan { devices: vec![2, 3], is_prefill: false, config: Some(mk(vec![2, 3])), capacity: 10.0 },
+        ],
+        routes: vec![KvRoute { prefill: 0, decode: 1, flow: 10.0, capacity: 10.0 }],
+        flow_value: 10.0,
+        tokens_per_s: 0.0,
+        group_utilization: vec![1.0, 1.0],
+    };
+    let mut trace = Trace::offline(WorkloadKind::Lpld, 5, 3);
+    for r in trace.requests.iter_mut() {
+        r.output_len = 1;
+    }
+    let rep = run_disaggregated(&c, &OPT_30B, &placement, &trace);
+    assert_eq!(rep.records.len(), 5);
+}

@@ -1,0 +1,169 @@
+//! Integration property tests: scheduler output validity over random
+//! clusters, workloads and seeds (DESIGN.md §8).
+
+use hexgen2::cluster::settings;
+use hexgen2::costmodel::CostModel;
+use hexgen2::model::{LLAMA2_70B, OPT_30B};
+use hexgen2::prop_assert;
+use hexgen2::scheduler::{self, ScheduleOptions, SwapMode};
+use hexgen2::util::prop::check;
+use hexgen2::workload::WorkloadKind;
+
+fn quick_opts(kind: WorkloadKind, seed: u64, mode: SwapMode) -> ScheduleOptions {
+    let mut o = ScheduleOptions::new(kind);
+    o.seed = seed;
+    o.max_rounds = 6;
+    o.patience = 3;
+    o.proposals_per_round = 6;
+    o.type_candidates = 3;
+    o.swap_mode = mode;
+    o
+}
+
+#[test]
+fn placement_is_valid_on_random_clusters() {
+    check(0xA11, 12, |rng| {
+        let n_nodes = rng.range(2, 5);
+        let cluster = settings::synthetic(n_nodes * 8, rng.next_u64());
+        let model = if rng.bool(0.5) { OPT_30B } else { LLAMA2_70B };
+        let kinds = [WorkloadKind::Hpld, WorkloadKind::Hphd, WorkloadKind::Lphd, WorkloadKind::Lpld];
+        let kind = *rng.choice(&kinds);
+        let mode = if rng.bool(0.5) { SwapMode::Guided } else { SwapMode::Random };
+        let Some(r) = scheduler::schedule(&cluster, &model, &quick_opts(kind, rng.next_u64(), mode))
+        else {
+            return Ok(()); // tiny clusters may be infeasible for 70B: allowed
+        };
+        let p = &r.placement;
+
+        // 1. Partition: every device in exactly one group.
+        let mut all: Vec<usize> = p.groups.iter().flat_map(|g| g.devices.clone()).collect();
+        all.sort_unstable();
+        prop_assert!(all == (0..cluster.n()).collect::<Vec<_>>(), "not a partition");
+
+        // 2. Both phases represented with positive capacity.
+        prop_assert!(
+            p.groups.iter().any(|g| g.is_prefill && g.capacity > 0.0),
+            "no live prefill group"
+        );
+        prop_assert!(
+            p.groups.iter().any(|g| !g.is_prefill && g.capacity > 0.0),
+            "no live decode group"
+        );
+
+        // 3. Configs use exactly their group's devices and all model layers;
+        //    memory limits hold at batch 1.
+        let cm = CostModel::new(&cluster, &model);
+        let task = scheduler::task_for(kind);
+        for g in &p.groups {
+            let Some(cfg) = &g.config else { continue };
+            let mut a = cfg.devices();
+            a.sort_unstable();
+            let mut b = g.devices.clone();
+            b.sort_unstable();
+            prop_assert!(a == b, "config devices != group devices");
+            prop_assert!(cfg.total_layers() == model.n_layers, "layer count wrong");
+            prop_assert!(cm.memory_ok(cfg, &task.with_batch(1)), "memory violated");
+        }
+
+        // 4. Flow respects capacities; routed flow equals flow value.
+        for route in &p.routes {
+            prop_assert!(route.flow <= route.capacity + 1e-6, "route over capacity");
+            prop_assert!(p.groups[route.prefill].is_prefill, "route from non-prefill");
+            prop_assert!(!p.groups[route.decode].is_prefill, "route to non-decode");
+        }
+        let routed: f64 = p.routes.iter().map(|r| r.flow).sum();
+        prop_assert!(
+            (routed - p.flow_value).abs() < 1e-4 * (1.0 + p.flow_value),
+            "kv flow {} != flow value {}",
+            routed,
+            p.flow_value
+        );
+
+        // 5. History is monotone.
+        for w in r.history.windows(2) {
+            prop_assert!(w[1].tokens_per_s >= w[0].tokens_per_s - 1e-9, "history regressed");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn refinement_never_hurts() {
+    check(0xA12, 8, |rng| {
+        let cluster = settings::synthetic(16, rng.next_u64());
+        let seed = rng.next_u64();
+        let one_shot = quick_opts(WorkloadKind::Hphd, seed, SwapMode::None);
+        let refined = quick_opts(WorkloadKind::Hphd, seed, SwapMode::Guided);
+        let (Some(a), Some(b)) = (
+            scheduler::schedule(&cluster, &OPT_30B, &one_shot),
+            scheduler::schedule(&cluster, &OPT_30B, &refined),
+        ) else {
+            return Ok(());
+        };
+        prop_assert!(
+            b.placement.tokens_per_s >= a.placement.tokens_per_s - 1e-9,
+            "refinement regressed: {} -> {}",
+            a.placement.tokens_per_s,
+            b.placement.tokens_per_s
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn workload_shifts_resources() {
+    // §5.2 finding (3): HPLD allocates relatively more prefill capacity than
+    // LPHD on the same cluster.
+    let cluster = settings::het2();
+    let frac = |kind| {
+        let r = scheduler::schedule(&cluster, &OPT_30B, &ScheduleOptions::new(kind)).unwrap();
+        let p: f64 = r
+            .placement
+            .groups
+            .iter()
+            .filter(|g| g.is_prefill)
+            .flat_map(|g| g.devices.iter())
+            .map(|&d| cluster.devices[d].gpu.effective_tflops())
+            .sum();
+        let total: f64 = cluster.devices.iter().map(|d| d.gpu.effective_tflops()).sum();
+        p / total
+    };
+    let hpld = frac(WorkloadKind::Hpld);
+    let lphd = frac(WorkloadKind::Lphd);
+    assert!(
+        hpld >= lphd,
+        "HPLD prefill share {hpld:.2} below LPHD {lphd:.2}"
+    );
+}
+
+#[test]
+fn kv_routes_avoid_cross_dc_links() {
+    // §5.2 finding (4): KV communication goes through high-bandwidth links.
+    let cluster = settings::het1();
+    let r = scheduler::schedule(&cluster, &LLAMA2_70B, &ScheduleOptions::new(WorkloadKind::Online))
+        .unwrap();
+    let p = &r.placement;
+    let mut cross_dc_flow = 0.0;
+    let mut total_flow = 0.0;
+    for route in &p.routes {
+        if route.flow <= 1e-9 {
+            continue;
+        }
+        total_flow += route.flow;
+        // A route is cross-DC if every device pair between the two groups
+        // spans data centers.
+        let pg = &p.groups[route.prefill].devices;
+        let dg = &p.groups[route.decode].devices;
+        let same_dc = pg.iter().any(|&a| {
+            dg.iter().any(|&b| cluster.devices[a].dc == cluster.devices[b].dc)
+        });
+        if !same_dc {
+            cross_dc_flow += route.flow;
+        }
+    }
+    assert!(
+        cross_dc_flow <= total_flow * 0.25,
+        "{:.0}% of KV flow crosses the WAN",
+        100.0 * cross_dc_flow / total_flow
+    );
+}
