@@ -1,0 +1,42 @@
+//! Bench: §5.4-style rescheduling case study — steady-state throughput with
+//! and without online rescheduling on a phased LPHD→HPLD trace, plus the
+//! warm-start vs cold-start re-plan wall-clock. HEXGEN2_FULL=1 lengthens the
+//! phases to full-study durations.
+use hexgen2::cluster::settings;
+use hexgen2::experiments::{resched, ExpOpts};
+use hexgen2::model::OPT_30B;
+use hexgen2::scheduler::{self, ScheduleOptions};
+use hexgen2::util::bench;
+use hexgen2::workload::WorkloadKind;
+
+fn main() {
+    let opts = ExpOpts::from_env();
+    let cluster = settings::case_study();
+    let Some(spec) = resched::default_phases(&cluster, &OPT_30B, &opts) else {
+        eprintln!("no feasible placement on {}", cluster.name);
+        return;
+    };
+    let Some(cs) = resched::case_resched(&cluster, &OPT_30B, &spec, &opts) else {
+        eprintln!("case study failed to schedule");
+        return;
+    };
+    cs.table.print("Rescheduling case study (case_study cluster, OPT-30B)");
+    resched::print_summary(&cs);
+
+    // Time the warm vs cold re-plan directly (same cluster, HPLD target).
+    let mut base = opts.sched_opts(WorkloadKind::Lphd);
+    base.force_k = Some(4);
+    let incumbent = scheduler::schedule(&cluster, &OPT_30B, &base)
+        .expect("incumbent")
+        .placement;
+    let mut shifted = base.clone();
+    shifted.workload = WorkloadKind::Hpld;
+    bench::time("resched/replan-cold-case-hpld", 1, 5, || {
+        std::hint::black_box(scheduler::schedule(&cluster, &OPT_30B, &shifted));
+    });
+    bench::time("resched/replan-warm-case-hpld", 1, 5, || {
+        std::hint::black_box(hexgen2::rescheduler::warmstart::replan(
+            &cluster, &OPT_30B, &shifted, &incumbent,
+        ));
+    });
+}

@@ -144,7 +144,7 @@ pub fn by_name(name: &str) -> Option<Cluster> {
         "het4" => Some(het4()),
         "het5" => Some(het5()),
         "hom4" => Some(homogeneous_small()),
-        "case" => Some(case_study()),
+        "case" | "case_study" | "case-study" => Some(case_study()),
         _ => None,
     }
 }

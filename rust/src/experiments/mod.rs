@@ -6,6 +6,7 @@
 pub mod batching;
 pub mod convergence;
 pub mod endtoend;
+pub mod resched;
 pub mod tables;
 
 use crate::baselines::{distserve, hexgen, vllm};

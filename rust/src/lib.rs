@@ -7,9 +7,12 @@
 //!
 //! Layering:
 //! - **Layer 3 (this crate)**: the scheduling algorithm (§3 of the paper:
-//!   graph partition → max-flow → iterative refinement), the disaggregated
-//!   serving coordinator, the discrete-event cluster simulator, baselines,
-//!   and the experiment harnesses.
+//!   graph partition → max-flow → iterative refinement), the online
+//!   rescheduler (`rescheduler`: drift monitoring → warm-started re-plan →
+//!   priced migration, closing the §3.3 per-period loop on live traffic),
+//!   the disaggregated serving coordinator, the discrete-event cluster
+//!   simulator (including mid-trace placement switches), baselines, and the
+//!   experiment harnesses.
 //! - **Layer 2/1 (python/compile)**: the JAX transformer + Pallas kernels,
 //!   AOT-lowered to HLO text once; `runtime` executes those artifacts via
 //!   PJRT with Python never on the request path.
@@ -20,6 +23,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod experiments;
 pub mod model;
+pub mod rescheduler;
 pub mod util;
 pub mod runtime;
 pub mod scheduler;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   schedule     run the scheduling algorithm on a cluster setting
+//!   reschedule   online rescheduling case study on a phased (drifting) trace
 //!   simulate     simulate a system serving a workload on a setting
 //!   serve        live disaggregated serving over the AOT artifacts
 //!   workload     generate and dump a request trace (JSON)
@@ -64,6 +65,30 @@ fn print_report(label: &str, rep: &SimReport) {
     );
 }
 
+/// Parse the phased-trace syntax `KIND:RATE:DURATION[,KIND:RATE:DURATION...]`
+/// (e.g. `LPHD:2.5:300,HPLD:2.5:600`): per phase, the workload class, the
+/// Poisson arrival rate in req/s, and the phase duration in seconds.
+fn parse_phases(s: &str) -> Result<Vec<(WorkloadKind, f64, f64)>> {
+    s.split(',')
+        .map(|p| {
+            let parts: Vec<&str> = p.split(':').collect();
+            if parts.len() != 3 {
+                bail!("phase must be KIND:RATE:DURATION, got '{p}'");
+            }
+            let kind = WorkloadKind::from_name(parts[0])
+                .ok_or_else(|| anyhow!("unknown workload '{}'", parts[0]))?;
+            let rate: f64 =
+                parts[1].parse().map_err(|_| anyhow!("bad rate '{}'", parts[1]))?;
+            let dur: f64 =
+                parts[2].parse().map_err(|_| anyhow!("bad duration '{}'", parts[2]))?;
+            if !(rate > 0.0 && rate.is_finite()) || !(dur > 0.0 && dur.is_finite()) {
+                bail!("rate and duration must be positive finite numbers in '{p}'");
+            }
+            Ok((kind, rate, dur))
+        })
+        .collect()
+}
+
 fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "schedule" => {
@@ -99,6 +124,35 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     println!("  t={:.2}s round={} est={:.0} tok/s", p.elapsed_s, p.round, p.tokens_per_s);
                 }
             }
+        }
+        "reschedule" => {
+            let cluster = cluster_of(args)?;
+            let model = model_of(args)?;
+            let opts = ExpOpts {
+                quick: !args.has("full"),
+                seed: args.get_u64("seed", 0),
+            };
+            let spec = match args.get("phases") {
+                Some(s) => parse_phases(s)?,
+                None => experiments::resched::default_phases(&cluster, &model, &opts)
+                    .ok_or_else(|| anyhow!("no feasible placement on {}", cluster.name))?,
+            };
+            if spec.len() < 2 {
+                bail!("need at least two phases (see --phases syntax in help)");
+            }
+            println!(
+                "rescheduling case study on {} / {}: {}",
+                cluster.name,
+                model.name,
+                spec.iter()
+                    .map(|(k, r, d)| format!("{}@{r:.2}req/s x{d:.0}s", k.name()))
+                    .collect::<Vec<_>>()
+                    .join(" -> ")
+            );
+            let cs = experiments::resched::case_resched(&cluster, &model, &spec, &opts)
+                .ok_or_else(|| anyhow!("static scheduling failed on {}", cluster.name))?;
+            cs.table.print("Rescheduling case study: per-phase throughput");
+            experiments::resched::print_summary(&cs);
         }
         "simulate" => {
             let cluster = cluster_of(args)?;
@@ -235,6 +289,14 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  usage: hexgen2 <command> [options]\n\n\
                  commands:\n\
                  \x20 schedule    --setting het1 --model llama2-70b --workload online [--algorithm ours|random|genetic] [--verbose]\n\
+                 \x20 reschedule  --setting case_study --model opt30b [--phases SPEC] [--seed N] [--full]\n\
+                 \x20             online rescheduling case study on a phased (drifting) trace: detects the\n\
+                 \x20             workload shift, warm-starts a re-plan from the incumbent placement, prices\n\
+                 \x20             the migration, and compares static vs rescheduled per-phase throughput.\n\
+                 \x20             SPEC is KIND:RATE:DURATION[,KIND:RATE:DURATION...] — per phase, the workload\n\
+                 \x20             class (HPLD|HPHD|LPHD|LPLD|online), Poisson rate in req/s, and seconds,\n\
+                 \x20             e.g. --phases LPHD:2.5:300,HPLD:2.5:600. Default: LPHD->HPLD at 75% of the\n\
+                 \x20             static placement's estimated peak.\n\
                  \x20 simulate    --setting het1 --model opt-30b --workload hphd --system hexgen2|hexgen|distserve|vllm [--requests N]\n\
                  \x20 serve       --model tiny --requests 16 --prefill 2 --decode 1 [--throttle-mbps N] [--verbose]\n\
                  \x20 workload    --workload hpld --n 10\n\

@@ -75,12 +75,12 @@ impl LlmSpec {
     }
 
     pub fn by_name(name: &str) -> Option<LlmSpec> {
-        match name {
-            "opt-30b" => Some(OPT_30B),
-            "llama2-70b" => Some(LLAMA2_70B),
-            "llama2-7b" => Some(LLAMA2_7B),
+        match name.to_ascii_lowercase().as_str() {
+            "opt-30b" | "opt30b" | "opt_30b" => Some(OPT_30B),
+            "llama2-70b" | "llama70b" | "llama2_70b" => Some(LLAMA2_70B),
+            "llama2-7b" | "llama7b" => Some(LLAMA2_7B),
             "tiny" => Some(TINY),
-            "gpt-100m" => Some(GPT_100M),
+            "gpt-100m" | "gpt100m" => Some(GPT_100M),
             _ => None,
         }
     }

@@ -1,0 +1,287 @@
+//! Workload monitoring + drift detection (the sensing half of the online
+//! rescheduling loop).
+//!
+//! [`WorkloadMonitor`] ingests per-request observations (arrival time, input
+//! length, output length) into a sliding time window and summarizes them as
+//! [`WindowStats`] — arrival rate and mean prefill/decode lengths, the same
+//! quantities §3.3's per-period scheduler keys on. [`DriftDetector`] turns
+//! those stats into at most one [`DriftEvent`] per *sustained* shift: the
+//! effective [`WorkloadKind`] (classified against the paper's heavy/light
+//! thresholds) must differ from the baseline — or the arrival rate must
+//! leave its hysteresis band — continuously for a dwell period before an
+//! event fires, and firing re-baselines the detector, so transients and
+//! threshold flapping never trigger spurious re-plans.
+
+use std::collections::VecDeque;
+
+use crate::workload::{WorkloadKind, HEAVY_DECODE_THRESHOLD, HEAVY_PREFILL_THRESHOLD};
+
+/// Monitoring / drift-detection knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct MonitorConfig {
+    /// Sliding-window length, seconds.
+    pub window: f64,
+    /// Minimum observations before stats are reported (cold-start guard).
+    pub min_samples: usize,
+    /// A shift must persist this long (seconds) before an event fires.
+    pub dwell: f64,
+    /// Relative hysteresis band on the arrival rate: a rate drift fires only
+    /// when |rate / baseline - 1| exceeds this.
+    pub rate_band: f64,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> MonitorConfig {
+        MonitorConfig { window: 30.0, min_samples: 20, dwell: 10.0, rate_band: 0.5 }
+    }
+}
+
+/// Windowed request statistics at a point in time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowStats {
+    /// Time the stats were taken.
+    pub at: f64,
+    /// Arrival rate over the window, requests/s.
+    pub rate: f64,
+    pub mean_input: f64,
+    pub mean_output: f64,
+    pub n: usize,
+}
+
+impl WindowStats {
+    /// Classify the observed mix against the paper's §5.1 thresholds
+    /// (prefill > 512 heavy, decode > 128 heavy).
+    pub fn effective_kind(&self) -> WorkloadKind {
+        let hp = self.mean_input > HEAVY_PREFILL_THRESHOLD as f64;
+        let hd = self.mean_output > HEAVY_DECODE_THRESHOLD as f64;
+        match (hp, hd) {
+            (true, true) => WorkloadKind::Hphd,
+            (true, false) => WorkloadKind::Hpld,
+            (false, true) => WorkloadKind::Lphd,
+            (false, false) => WorkloadKind::Lpld,
+        }
+    }
+}
+
+/// Sliding-window request monitor.
+pub struct WorkloadMonitor {
+    cfg: MonitorConfig,
+    /// (arrival, input_len, output_len), arrival-ordered.
+    buf: VecDeque<(f64, usize, usize)>,
+}
+
+impl WorkloadMonitor {
+    pub fn new(cfg: MonitorConfig) -> WorkloadMonitor {
+        WorkloadMonitor { cfg, buf: VecDeque::new() }
+    }
+
+    /// Record one request observation. Arrivals must be non-decreasing.
+    pub fn observe(&mut self, t: f64, input_len: usize, output_len: usize) {
+        while let Some(&(t0, _, _)) = self.buf.front() {
+            if t0 < t - self.cfg.window {
+                self.buf.pop_front();
+            } else {
+                break;
+            }
+        }
+        self.buf.push_back((t, input_len, output_len));
+    }
+
+    /// Current window stats, or None during cold start.
+    pub fn stats(&self, now: f64) -> Option<WindowStats> {
+        let n = self.buf.len();
+        if n < self.cfg.min_samples.max(2) {
+            return None;
+        }
+        let span = (now - self.buf.front().unwrap().0).max(1e-9);
+        let (si, so) = self
+            .buf
+            .iter()
+            .fold((0usize, 0usize), |(a, b), &(_, i, o)| (a + i, b + o));
+        Some(WindowStats {
+            at: now,
+            rate: n as f64 / span,
+            mean_input: si as f64 / n as f64,
+            mean_output: so as f64 / n as f64,
+            n,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// What changed when a drift event fired.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DriftKind {
+    /// The effective workload class crossed a heavy/light threshold.
+    Workload { from: WorkloadKind, to: WorkloadKind },
+    /// The arrival rate left its hysteresis band.
+    Rate { from: f64, to: f64 },
+}
+
+/// A detected, sustained workload shift.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftEvent {
+    pub at: f64,
+    pub kind: DriftKind,
+    pub stats: WindowStats,
+}
+
+/// Hysteresis drift detector: fires exactly once per sustained shift.
+pub struct DriftDetector {
+    cfg: MonitorConfig,
+    baseline: Option<(WorkloadKind, f64)>,
+    /// Time the current (not yet sustained) deviation started.
+    pending_since: Option<f64>,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: MonitorConfig) -> DriftDetector {
+        DriftDetector { cfg, baseline: None, pending_since: None }
+    }
+
+    /// The (kind, rate) the detector currently considers normal.
+    pub fn baseline(&self) -> Option<(WorkloadKind, f64)> {
+        self.baseline
+    }
+
+    /// Feed the latest window stats; returns an event when a shift has been
+    /// sustained for the dwell period. Firing re-baselines the detector.
+    pub fn update(&mut self, stats: &WindowStats) -> Option<DriftEvent> {
+        let kind = stats.effective_kind();
+        let Some((bk, br)) = self.baseline else {
+            self.baseline = Some((kind, stats.rate));
+            return None;
+        };
+        let kind_shift = kind != bk;
+        let rate_shift = br > 0.0 && (stats.rate / br - 1.0).abs() > self.cfg.rate_band;
+        if !kind_shift && !rate_shift {
+            // Steady traffic: re-center the rate baseline (EWMA) so a noisy
+            // first window cannot arm the band forever. A genuine sustained
+            // jump still trips it — re-centering only happens while inside.
+            self.baseline = Some((bk, 0.9 * br + 0.1 * stats.rate));
+            self.pending_since = None;
+            return None;
+        }
+        match self.pending_since {
+            None => {
+                self.pending_since = Some(stats.at);
+                None
+            }
+            Some(t0) if stats.at - t0 >= self.cfg.dwell => {
+                self.pending_since = None;
+                self.baseline = Some((kind, stats.rate));
+                Some(DriftEvent {
+                    at: stats.at,
+                    kind: if kind_shift {
+                        DriftKind::Workload { from: bk, to: kind }
+                    } else {
+                        DriftKind::Rate { from: br, to: stats.rate }
+                    },
+                    stats: *stats,
+                })
+            }
+            Some(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MonitorConfig {
+        MonitorConfig { window: 20.0, min_samples: 10, dwell: 10.0, rate_band: 0.6 }
+    }
+
+    #[test]
+    fn classification_matches_thresholds() {
+        let mk = |i: f64, o: f64| WindowStats { at: 0.0, rate: 1.0, mean_input: i, mean_output: o, n: 10 };
+        assert_eq!(mk(1024.0, 64.0).effective_kind(), WorkloadKind::Hpld);
+        assert_eq!(mk(1024.0, 256.0).effective_kind(), WorkloadKind::Hphd);
+        assert_eq!(mk(256.0, 256.0).effective_kind(), WorkloadKind::Lphd);
+        assert_eq!(mk(256.0, 64.0).effective_kind(), WorkloadKind::Lpld);
+    }
+
+    #[test]
+    fn monitor_windows_and_rates() {
+        let mut m = WorkloadMonitor::new(cfg());
+        for k in 0..100 {
+            m.observe(k as f64 * 0.5, 100, 50);
+        }
+        let s = m.stats(49.5).unwrap();
+        // 20 s window at 2 req/s → ~40-41 samples.
+        assert!(s.n >= 40 && s.n <= 42, "{}", s.n);
+        assert!((s.rate - 2.0).abs() < 0.3, "{}", s.rate);
+        assert_eq!(s.mean_input, 100.0);
+        assert_eq!(s.mean_output, 50.0);
+    }
+
+    #[test]
+    fn cold_start_reports_nothing() {
+        let m = WorkloadMonitor::new(cfg());
+        assert!(m.stats(0.0).is_none());
+        let mut m = WorkloadMonitor::new(cfg());
+        for k in 0..5 {
+            m.observe(k as f64, 10, 10);
+        }
+        assert!(m.stats(5.0).is_none(), "below min_samples");
+    }
+
+    #[test]
+    fn transient_blips_do_not_fire() {
+        let c = cfg();
+        let mut det = DriftDetector::new(c);
+        let mk = |t: f64, i: f64| WindowStats { at: t, rate: 2.0, mean_input: i, mean_output: 256.0, n: 40 };
+        assert!(det.update(&mk(0.0, 256.0)).is_none()); // baseline LPHD
+        // A 5 s excursion above the prefill threshold: shorter than dwell.
+        for t in [10.0, 12.0, 14.0] {
+            assert!(det.update(&mk(t, 600.0)).is_none());
+        }
+        // Back to normal: pending resets, never fires.
+        for t in [16.0, 30.0, 60.0] {
+            assert!(det.update(&mk(t, 256.0)).is_none());
+        }
+        // A sustained excursion fires exactly once, then re-baselines.
+        assert!(det.update(&mk(70.0, 900.0)).is_none());
+        assert!(det.update(&mk(75.0, 900.0)).is_none());
+        let e = det.update(&mk(81.0, 900.0)).expect("sustained shift fires");
+        assert_eq!(
+            e.kind,
+            DriftKind::Workload { from: WorkloadKind::Lphd, to: WorkloadKind::Hphd }
+        );
+        for t in [85.0, 100.0, 200.0] {
+            assert!(det.update(&mk(t, 900.0)).is_none(), "re-fired after re-baseline");
+        }
+    }
+
+    #[test]
+    fn rate_drift_respects_band() {
+        let c = cfg();
+        let mut det = DriftDetector::new(c);
+        let mk = |t: f64, r: f64| WindowStats { at: t, rate: r, mean_input: 256.0, mean_output: 256.0, n: 40 };
+        det.update(&mk(0.0, 2.0));
+        // 30% above baseline: inside the 60% band.
+        for t in [5.0, 20.0, 40.0] {
+            assert!(det.update(&mk(t, 2.6)).is_none());
+        }
+        // 2.2x baseline sustained: fires once. The baseline has been EWMA
+        // re-centered toward 2.6 meanwhile, still far below 4.4.
+        assert!(det.update(&mk(50.0, 4.4)).is_none());
+        let e = det.update(&mk(61.0, 4.4)).expect("rate drift fires");
+        match e.kind {
+            DriftKind::Rate { from, to } => {
+                assert!(from > 1.9 && from < 2.7, "baseline drifted too far: {from}");
+                assert_eq!(to, 4.4);
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+        assert!(det.update(&mk(70.0, 4.4)).is_none());
+    }
+}

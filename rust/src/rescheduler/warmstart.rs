@@ -1,0 +1,90 @@
+//! Warm-started re-planning: re-run the §3 scheduling algorithm seeded from
+//! the *incumbent* placement's group partition.
+//!
+//! Two properties make warm starts the right tool for the per-period
+//! rescheduling loop:
+//! - **Quality floor.** The incumbent partition is injected into the phase-1
+//!   seed set (`ScheduleOptions::initial_groups`), so the re-plan's objective
+//!   can never fall below the incumbent's objective *under the new
+//!   workload* — switching is always weakly improving before migration costs
+//!   are priced.
+//! - **Convergence budget.** Starting at (or near) a good optimum, the §3.4
+//!   refinement needs far fewer rounds; [`warm_opts`] halves the round and
+//!   patience budgets and pins K to the incumbent's group count, so re-plans
+//!   fit comfortably inside a scheduling period T.
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::model::LlmSpec;
+use crate::scheduler::{self, Placement, ScheduleOptions, ScheduleResult};
+
+/// The incumbent placement's group partition (the warm-start seed).
+pub fn incumbent_groups(p: &Placement) -> Vec<Vec<DeviceId>> {
+    p.groups.iter().map(|g| g.devices.clone()).collect()
+}
+
+/// Derive warm-start options from a cold-start baseline: seed with the
+/// incumbent partition, pin K to its group count, and halve the refinement
+/// budgets (re-plans start near an optimum).
+pub fn warm_opts(base: &ScheduleOptions, incumbent: &Placement) -> ScheduleOptions {
+    let mut o = base.clone();
+    o.initial_groups = Some(incumbent_groups(incumbent));
+    o.force_k = Some(incumbent.groups.len());
+    o.max_rounds = (base.max_rounds / 2).max(2);
+    o.patience = (base.patience / 2).max(2);
+    o
+}
+
+/// Warm-started re-plan. `base` carries the *new* workload (and any budget
+/// overrides); the incumbent supplies the seed partition.
+pub fn replan(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    base: &ScheduleOptions,
+    incumbent: &Placement,
+) -> Option<ScheduleResult> {
+    scheduler::schedule(cluster, model, &warm_opts(base, incumbent))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::model::OPT_30B;
+    use crate::workload::WorkloadKind;
+
+    #[test]
+    fn warm_opts_seed_and_budgets() {
+        let c = settings::case_study();
+        let mut base = ScheduleOptions::new(WorkloadKind::Lphd);
+        base.max_rounds = 8;
+        base.patience = 6;
+        base.force_k = Some(4);
+        let incumbent = scheduler::schedule(&c, &OPT_30B, &base).unwrap().placement;
+        let w = warm_opts(&base, &incumbent);
+        assert_eq!(w.max_rounds, 4);
+        assert_eq!(w.patience, 3);
+        assert_eq!(w.force_k, Some(incumbent.groups.len()));
+        let seed = w.initial_groups.as_ref().unwrap();
+        assert_eq!(seed.len(), incumbent.groups.len());
+        let mut all: Vec<usize> = seed.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..c.n()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn replan_produces_valid_placement_for_new_workload() {
+        let c = settings::case_study();
+        let mut base = ScheduleOptions::new(WorkloadKind::Lphd);
+        base.max_rounds = 6;
+        base.force_k = Some(4);
+        let incumbent = scheduler::schedule(&c, &OPT_30B, &base).unwrap().placement;
+        let mut shifted = base.clone();
+        shifted.workload = WorkloadKind::Hpld;
+        let r = replan(&c, &OPT_30B, &shifted, &incumbent).expect("replans");
+        assert!(r.placement.tokens_per_s > 0.0);
+        let mut all: Vec<usize> =
+            r.placement.groups.iter().flat_map(|g| g.devices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..c.n()).collect::<Vec<_>>());
+    }
+}

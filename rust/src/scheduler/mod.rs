@@ -55,6 +55,13 @@ pub struct ScheduleOptions {
     pub proposals_per_round: usize,
     /// Override the memory-derived group count (tests/case studies).
     pub force_k: Option<usize>,
+    /// Warm-start seed: a group partition (typically the incumbent
+    /// placement's) evaluated ahead of the spectral/uniform seeds in phase 1.
+    /// The incumbent is guaranteed to be *in* the evaluated seed set, so a
+    /// warm-started schedule never ends below the incumbent's objective
+    /// under the same workload. Used by `rescheduler::warmstart`; also lets
+    /// tests pin a starting partition.
+    pub initial_groups: Option<Vec<Vec<DeviceId>>>,
 }
 
 impl ScheduleOptions {
@@ -69,8 +76,20 @@ impl ScheduleOptions {
             type_candidates: 6,
             proposals_per_round: 16,
             force_k: None,
+            initial_groups: None,
         }
     }
+}
+
+/// Is `groups` a valid partition of the cluster's devices (every device in
+/// exactly one non-empty group)?
+pub fn is_valid_partition(cluster: &Cluster, groups: &[Vec<DeviceId>]) -> bool {
+    if groups.is_empty() || groups.iter().any(|g| g.is_empty()) {
+        return false;
+    }
+    let mut all: Vec<DeviceId> = groups.iter().flatten().copied().collect();
+    all.sort_unstable();
+    all == (0..cluster.n()).collect::<Vec<_>>()
 }
 
 /// One point of the convergence trace (paper Fig. 10 axes).
@@ -346,6 +365,14 @@ pub fn schedule(cluster: &Cluster, model: &LlmSpec, opts: &ScheduleOptions) -> O
     // special cases, and seeding them guarantees we never start below them.
     let devs: Vec<DeviceId> = (0..cluster.n()).collect();
     let mut seeds: Vec<Groups> = Vec::new();
+    // Warm start (rescheduling / pinned tests): the caller-provided partition
+    // is evaluated first, so on ties it wins and the result can never fall
+    // below the incumbent's objective under this workload.
+    if let Some(g) = &opts.initial_groups {
+        if is_valid_partition(cluster, g) {
+            seeds.push(g.clone());
+        }
+    }
     {
         let mut spectral_seed = spectral::partition_k(cluster, &devs, k);
         kl::refine(cluster, &mut spectral_seed, 3.0);
@@ -504,6 +531,43 @@ mod tests {
         for w in r.history.windows(2) {
             assert!(w[1].tokens_per_s >= w[0].tokens_per_s - 1e-9);
         }
+    }
+
+    #[test]
+    fn initial_groups_seed_never_undercut() {
+        // Warm-start contract: the schedule's objective is >= the one-shot
+        // evaluation of the provided seed partition (it is in the seed set).
+        let c = settings::case_study();
+        let task = task_for(WorkloadKind::Lphd);
+        let groups: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]];
+        let mut cache = strategy::StrategyCache::new();
+        let seed_eval =
+            evaluate_partition(&c, &OPT_30B, &task, 600.0, &groups, 64, &mut cache).expect("seed");
+        let mut opts = ScheduleOptions::new(WorkloadKind::Lphd);
+        opts.max_rounds = 4;
+        opts.force_k = Some(4);
+        opts.initial_groups = Some(groups);
+        let r = schedule(&c, &OPT_30B, &opts).expect("schedules");
+        assert!(
+            r.placement.flow_value >= seed_eval.flow_value - 1e-9,
+            "warm start fell below its seed: {} < {}",
+            r.placement.flow_value,
+            seed_eval.flow_value
+        );
+    }
+
+    #[test]
+    fn invalid_initial_groups_ignored() {
+        let c = settings::case_study();
+        let mut opts = ScheduleOptions::new(WorkloadKind::Lphd);
+        opts.max_rounds = 2;
+        opts.force_k = Some(4);
+        // Device 7 missing, device 0 duplicated: not a partition.
+        opts.initial_groups = Some(vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 0]]);
+        let r = schedule(&c, &OPT_30B, &opts).expect("falls back to spectral seeds");
+        let mut all: Vec<usize> = r.placement.groups.iter().flat_map(|g| g.devices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..c.n()).collect::<Vec<_>>());
     }
 
     #[test]

@@ -2,6 +2,14 @@
 //! [`Placement`]: request routing proportional to the max-flow assignment,
 //! prefill batching with the Fig.-1 token budget, KV-cache transfers over
 //! bandwidth-serialized links, and decode continuous batching.
+//!
+//! Supports *online rescheduling* (the rescheduler subsystem's §3.3 loop):
+//! [`run_disaggregated_with_resched`] takes a list of [`PlacementSwitch`]es;
+//! at each switch time a `Resched` event quiesces the active replicas (their
+//! unstarted queue drains back to a holding buffer, in-flight batches and
+//! running decodes complete on the old placement — the drain), and after the
+//! switch's migration delay an `Activate` event brings the new placement's
+//! replicas live and flushes the held requests to them.
 
 use std::collections::{HashMap, VecDeque};
 
@@ -9,21 +17,39 @@ use crate::cluster::Cluster;
 use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};
 use crate::model::LlmSpec;
 use crate::scheduler::Placement;
-use crate::workload::{Request, Trace};
+use crate::workload::{Request, Trace, WorkloadKind};
 
 use super::events::EventQueue;
 use super::metrics::{RequestRecord, SimReport};
 use super::{slo_base, PREFILL_TOKEN_BUDGET};
 
+/// One placement switch of a rescheduling scenario: at time `at` the old
+/// replicas are quiesced; at `at + delay` (drain + KV/weight migration, as
+/// priced by `rescheduler::migration`) the new placement starts serving.
+#[derive(Clone, Debug)]
+pub struct PlacementSwitch {
+    pub at: f64,
+    pub delay: f64,
+    pub placement: Placement,
+    /// Workload the new placement was (re-)planned for: its mean lengths
+    /// size the new replicas' batching (prefill memory batch, decode slot
+    /// count). None = keep the trace's opening-phase statistics.
+    pub workload: Option<WorkloadKind>,
+}
+
 #[derive(Clone, Copy, Debug)]
 enum Ev {
     Arrive(usize),
-    /// Prefill batch finished on prefill replica `p`.
+    /// Prefill batch finished on prefill replica `p` (arena index).
     PrefillDone(usize),
-    /// KV cache of request `r` arrived at decode replica `d`.
+    /// KV cache of request `r` arrived at decode replica `d` (arena index).
     KvArrive { d: usize, r: usize },
-    /// One decode iteration finished on decode replica `d`.
+    /// One decode iteration finished on decode replica `d` (arena index).
     Step(usize),
+    /// Initiate placement switch `i`: quiesce the active replicas.
+    Resched(usize),
+    /// Switch `i`'s new placement goes live.
+    Activate(usize),
 }
 
 struct PrefillState {
@@ -50,23 +76,23 @@ struct DecodeState {
     assigned_from: HashMap<usize, f64>,
 }
 
-/// Simulate a trace against a placement. Requests that cannot be served at
-/// all (no feasible replica) are dropped from the report.
-pub fn run_disaggregated(
-    cluster: &Cluster,
-    model: &LlmSpec,
+/// Append one placement's replicas to the arenas. Returns the arena indices
+/// of the appended prefill replicas (the new active set), or None when the
+/// placement has no feasible prefill or decode replica.
+#[allow(clippy::too_many_arguments)]
+fn build_replicas(
+    cm: &CostModel,
     placement: &Placement,
-    trace: &Trace,
-) -> SimReport {
-    let cm = CostModel::new(cluster, model);
-    let (s_in_mean, s_out_mean) = trace.kind.mean_lengths();
-    let task = TaskProfile::new(1, s_in_mean, s_out_mean);
-
-    // Live prefill/decode replica tables (placement indices preserved via maps).
-    let mut prefills: Vec<PrefillState> = Vec::new();
+    s_in_mean: f64,
+    task: &TaskProfile,
+    prefills: &mut Vec<PrefillState>,
+    decodes: &mut Vec<DecodeState>,
+    route_w: &mut HashMap<(usize, usize), f64>,
+) -> Option<Vec<usize>> {
     let mut p_of_group: HashMap<usize, usize> = HashMap::new();
-    let mut decodes: Vec<DecodeState> = Vec::new();
     let mut d_of_group: HashMap<usize, usize> = HashMap::new();
+    let p_base = prefills.len();
+    let d_base = decodes.len();
     for (gi, g) in placement.groups.iter().enumerate() {
         let Some(cfg) = g.config.clone() else { continue };
         if g.capacity <= 0.0 {
@@ -91,7 +117,7 @@ pub fn run_disaggregated(
                 weight: 0.0,
             });
         } else {
-            let mb = cm.max_decode_batch(&cfg, &task).max(1);
+            let mb = cm.max_decode_batch(&cfg, task).max(1);
             d_of_group.insert(gi, decodes.len());
             decodes.push(DecodeState {
                 cfg,
@@ -103,13 +129,15 @@ pub fn run_disaggregated(
             });
         }
     }
-    if prefills.is_empty() || decodes.is_empty() {
-        return SimReport::from_records(vec![]);
+    if prefills.len() == p_base || decodes.len() == d_base {
+        // Infeasible placement: roll back the partial build.
+        prefills.truncate(p_base);
+        decodes.truncate(d_base);
+        return None;
     }
 
     // Flow-proportional routing weights (§3.3: "communication frequency is
     // set to be proportional to these flow values").
-    let mut route_w: HashMap<(usize, usize), f64> = HashMap::new();
     for r in &placement.routes {
         let (Some(&p), Some(&d)) = (p_of_group.get(&r.prefill), d_of_group.get(&r.decode)) else {
             continue;
@@ -120,113 +148,224 @@ pub fn run_disaggregated(
         }
     }
     // Fallback: if max-flow left a prefill replica unrouted, connect it to
-    // every decode replica with a tiny weight so requests are never stranded.
-    for p in 0..prefills.len() {
+    // every decode replica *of this placement* with a tiny weight so requests
+    // are never stranded.
+    for p in p_base..prefills.len() {
         if prefills[p].weight <= 0.0 {
-            for d in 0..decodes.len() {
+            for d in d_base..decodes.len() {
                 route_w.insert((p, d), 1e-6);
             }
-            prefills[p].weight = 1e-6 * decodes.len() as f64;
+            prefills[p].weight = 1e-6 * (decodes.len() - d_base) as f64;
         }
     }
+    Some((p_base..prefills.len()).collect())
+}
+
+/// Deficit-weighted pick among the active prefill replicas:
+/// argmax weight / (assigned + 1).
+fn pick_prefill(prefills: &[PrefillState], active: &[usize]) -> usize {
+    *active
+        .iter()
+        .max_by(|&&a, &&b| {
+            let fa = prefills[a].weight / (prefills[a].assigned + 1.0);
+            let fb = prefills[b].weight / (prefills[b].assigned + 1.0);
+            fa.partial_cmp(&fb).unwrap()
+        })
+        .expect("no active prefill replica")
+}
+
+// Start a prefill batch if idle and work is queued.
+fn maybe_start_prefill(
+    p: usize,
+    now: f64,
+    prefills: &mut [PrefillState],
+    reqs: &[Request],
+    cm: &CostModel,
+    q: &mut EventQueue<Ev>,
+) {
+    let st = &mut prefills[p];
+    if st.busy || st.queue.is_empty() {
+        return;
+    }
+    let mut batch = Vec::new();
+    let mut tokens = 0.0;
+    let mut max_len = 0usize;
+    while let Some(&r) = st.queue.front() {
+        let len = reqs[r].input_len;
+        if !batch.is_empty()
+            && (tokens + len as f64 > PREFILL_TOKEN_BUDGET || batch.len() >= st.max_batch)
+        {
+            break;
+        }
+        st.queue.pop_front();
+        tokens += len as f64;
+        max_len = max_len.max(len);
+        batch.push(r);
+    }
+    let t = TaskProfile::new(batch.len(), max_len as f64, 0.0);
+    let lat = cm.prefill_latency(&st.cfg, &t);
+    st.busy = true;
+    st.batch = batch;
+    q.push(now + lat, Ev::PrefillDone(p));
+}
+
+// Start a decode iteration if idle and work exists.
+fn maybe_start_step(
+    d: usize,
+    now: f64,
+    decodes: &mut [DecodeState],
+    reqs: &[Request],
+    cm: &CostModel,
+    q: &mut EventQueue<Ev>,
+) {
+    let st = &mut decodes[d];
+    if st.stepping {
+        return;
+    }
+    // Continuous batching: admit waiting requests at step boundaries.
+    while st.running.len() < st.max_batch {
+        match st.waiting.pop_front() {
+            Some(r) => st.running.push(Running { req: r, generated: 0 }),
+            None => break,
+        }
+    }
+    if st.running.is_empty() {
+        return;
+    }
+    let avg_ctx = st
+        .running
+        .iter()
+        .map(|r| (reqs[r.req].input_len + r.generated) as f64)
+        .sum::<f64>()
+        / st.running.len() as f64;
+    let lat = cm.decode_step_latency(&st.cfg, st.running.len(), avg_ctx);
+    st.stepping = true;
+    q.push(now + lat, Ev::Step(d));
+}
+
+/// Simulate a trace against a placement. Requests that cannot be served at
+/// all (no feasible replica) are dropped from the report.
+pub fn run_disaggregated(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    placement: &Placement,
+    trace: &Trace,
+) -> SimReport {
+    run_disaggregated_with_resched(cluster, model, placement, &[], trace)
+}
+
+/// Simulate a trace with mid-trace placement switches (the rescheduler's
+/// closed loop). `switches` must be sorted by `at` and non-overlapping
+/// (each `at + delay` before the next `at`). An infeasible switch placement
+/// is skipped: the previously active replicas resume at activation time.
+pub fn run_disaggregated_with_resched(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    initial: &Placement,
+    switches: &[PlacementSwitch],
+    trace: &Trace,
+) -> SimReport {
+    for s in switches {
+        assert!(
+            s.at.is_finite() && s.delay.is_finite() && s.at >= 0.0 && s.delay >= 0.0,
+            "placement switch times must be finite and non-negative (at {}, delay {})",
+            s.at,
+            s.delay
+        );
+    }
+    for w in switches.windows(2) {
+        assert!(
+            w[0].at + w[0].delay <= w[1].at,
+            "placement switches must be sorted and non-overlapping"
+        );
+    }
+    let cm = CostModel::new(cluster, model);
+    let (s_in_mean, s_out_mean) = trace.kind.mean_lengths();
+    let task = TaskProfile::new(1, s_in_mean, s_out_mean);
+
+    // Replica arena: switches append; indices stay valid for in-flight
+    // events, so a draining replica keeps serving after it is deactivated.
+    let mut prefills: Vec<PrefillState> = Vec::new();
+    let mut decodes: Vec<DecodeState> = Vec::new();
+    let mut route_w: HashMap<(usize, usize), f64> = HashMap::new();
+
+    let Some(mut active_p) =
+        build_replicas(&cm, initial, s_in_mean, &task, &mut prefills, &mut decodes, &mut route_w)
+    else {
+        return SimReport::from_records(vec![]);
+    };
 
     let reqs = &trace.requests;
     let mut q: EventQueue<Ev> = EventQueue::new();
     for (i, r) in reqs.iter().enumerate() {
         q.push(r.arrival, Ev::Arrive(i));
     }
+    for (i, s) in switches.iter().enumerate() {
+        q.push(s.at, Ev::Resched(i));
+        q.push(s.at + s.delay, Ev::Activate(i));
+    }
 
     let mut link_free: HashMap<(usize, usize), f64> = HashMap::new();
     let mut prefill_done_at: Vec<f64> = vec![0.0; reqs.len()];
     let mut records: Vec<RequestRecord> = Vec::new();
-
-    // Deficit-weighted pick: argmax weight / (assigned + 1).
-    let pick_prefill = |prefills: &[PrefillState]| -> usize {
-        (0..prefills.len())
-            .max_by(|&a, &b| {
-                let fa = prefills[a].weight / (prefills[a].assigned + 1.0);
-                let fb = prefills[b].weight / (prefills[b].assigned + 1.0);
-                fa.partial_cmp(&fb).unwrap()
-            })
-            .unwrap()
-    };
-
-    // Start a prefill batch if idle and work is queued.
-    fn maybe_start_prefill(
-        p: usize,
-        now: f64,
-        prefills: &mut [PrefillState],
-        reqs: &[Request],
-        cm: &CostModel,
-        q: &mut EventQueue<Ev>,
-    ) {
-        let st = &mut prefills[p];
-        if st.busy || st.queue.is_empty() {
-            return;
-        }
-        let mut batch = Vec::new();
-        let mut tokens = 0.0;
-        let mut max_len = 0usize;
-        while let Some(&r) = st.queue.front() {
-            let len = reqs[r].input_len;
-            if !batch.is_empty()
-                && (tokens + len as f64 > PREFILL_TOKEN_BUDGET || batch.len() >= st.max_batch)
-            {
-                break;
-            }
-            st.queue.pop_front();
-            tokens += len as f64;
-            max_len = max_len.max(len);
-            batch.push(r);
-        }
-        let t = TaskProfile::new(batch.len(), max_len as f64, 0.0);
-        let lat = cm.prefill_latency(&st.cfg, &t);
-        st.busy = true;
-        st.batch = batch;
-        q.push(now + lat, Ev::PrefillDone(p));
-    }
-
-    // Start a decode iteration if idle and work exists.
-    fn maybe_start_step(
-        d: usize,
-        now: f64,
-        decodes: &mut [DecodeState],
-        reqs: &[Request],
-        cm: &CostModel,
-        q: &mut EventQueue<Ev>,
-    ) {
-        let st = &mut decodes[d];
-        if st.stepping {
-            return;
-        }
-        // Continuous batching: admit waiting requests at step boundaries.
-        while st.running.len() < st.max_batch {
-            match st.waiting.pop_front() {
-                Some(r) => st.running.push(Running { req: r, generated: 0 }),
-                None => break,
-            }
-        }
-        if st.running.is_empty() {
-            return;
-        }
-        let avg_ctx = st
-            .running
-            .iter()
-            .map(|r| (reqs[r.req].input_len + r.generated) as f64)
-            .sum::<f64>()
-            / st.running.len() as f64;
-        let lat = cm.decode_step_latency(&st.cfg, st.running.len(), avg_ctx);
-        st.stepping = true;
-        q.push(now + lat, Ev::Step(d));
-    }
+    // Requests waiting out a migration blackout (no active prefill replica).
+    let mut holding: Vec<usize> = Vec::new();
+    // Active set stashed at Resched time, restored if the switch is infeasible.
+    let mut quiesced: Vec<Vec<usize>> = vec![Vec::new(); switches.len()];
 
     while let Some((now, ev)) = q.pop() {
         match ev {
             Ev::Arrive(r) => {
-                let p = pick_prefill(&prefills);
-                prefills[p].assigned += 1.0;
-                prefills[p].queue.push_back(r);
-                maybe_start_prefill(p, now, &mut prefills, reqs, &cm, &mut q);
+                if active_p.is_empty() {
+                    holding.push(r);
+                } else {
+                    let p = pick_prefill(&prefills, &active_p);
+                    prefills[p].assigned += 1.0;
+                    prefills[p].queue.push_back(r);
+                    maybe_start_prefill(p, now, &mut prefills, reqs, &cm, &mut q);
+                }
+            }
+            Ev::Resched(i) => {
+                // Quiesce: stop admitting to the active replicas; pull their
+                // unstarted requests back into the holding buffer (arrival
+                // order preserved by sorting on request id, which is
+                // arrival-ordered for generated traces). In-flight prefill
+                // batches and running decodes drain on the old placement.
+                quiesced[i] = std::mem::take(&mut active_p);
+                let mut pulled: Vec<usize> = Vec::new();
+                for &p in &quiesced[i] {
+                    pulled.extend(prefills[p].queue.drain(..));
+                }
+                pulled.sort_unstable();
+                holding.extend(pulled);
+            }
+            Ev::Activate(i) => {
+                // Size the new replicas for the workload they were planned
+                // for (post-shift statistics), not the opening phase's.
+                let (sw_s_in, sw_s_out) = switches[i]
+                    .workload
+                    .map(|k| k.mean_lengths())
+                    .unwrap_or((s_in_mean, s_out_mean));
+                let sw_task = TaskProfile::new(1, sw_s_in, sw_s_out);
+                match build_replicas(
+                    &cm,
+                    &switches[i].placement,
+                    sw_s_in,
+                    &sw_task,
+                    &mut prefills,
+                    &mut decodes,
+                    &mut route_w,
+                ) {
+                    Some(fresh) => active_p = fresh,
+                    // Infeasible new placement: resume the old replicas.
+                    None => active_p = std::mem::take(&mut quiesced[i]),
+                }
+                for r in std::mem::take(&mut holding) {
+                    let p = pick_prefill(&prefills, &active_p);
+                    prefills[p].assigned += 1.0;
+                    prefills[p].queue.push_back(r);
+                    maybe_start_prefill(p, now, &mut prefills, reqs, &cm, &mut q);
+                }
             }
             Ev::PrefillDone(p) => {
                 let batch = std::mem::take(&mut prefills[p].batch);
@@ -246,8 +385,7 @@ pub fn run_disaggregated(
                     *decodes[d].assigned_from.entry(p).or_default() += 1.0;
                     // KV transfer over the (p,d) link; links serialize.
                     let t_task = TaskProfile::new(1, reqs[r].input_len as f64, 0.0);
-                    let xfer =
-                        cm.kv_transfer_time(&prefills[p].cfg, &decodes[d].cfg, &t_task);
+                    let xfer = cm.kv_transfer_time(&prefills[p].cfg, &decodes[d].cfg, &t_task);
                     let free = link_free.get(&(p, d)).copied().unwrap_or(0.0).max(now);
                     let done = free + xfer;
                     link_free.insert((p, d), done);
@@ -353,5 +491,89 @@ mod tests {
         let est = p.tokens_per_s;
         let sim = rep.tokens_per_s();
         assert!(sim > est * 0.3 && sim < est * 3.0, "est {est} vs sim {sim}");
+    }
+
+    #[test]
+    fn resched_no_requests_lost_across_switch() {
+        // A mid-trace switch to a different placement must not lose or
+        // duplicate any request, even with a blackout window.
+        let (c, p) = small_placement();
+        let mut opts = ScheduleOptions::new(WorkloadKind::Lpld);
+        opts.max_rounds = 4;
+        opts.force_k = Some(2);
+        opts.seed = 99;
+        let p2 = scheduler::schedule(&c, &OPT_30B, &opts).unwrap().placement;
+        let trace = Trace::online(WorkloadKind::Lpld, 1.0, 120.0, 4);
+        let n = trace.requests.len();
+        let switches = vec![PlacementSwitch { at: 60.0, delay: 5.0, placement: p2, workload: None }];
+        let rep = run_disaggregated_with_resched(&c, &OPT_30B, &p, &switches, &trace);
+        assert_eq!(rep.records.len(), n, "requests lost across the switch");
+        let mut ids: Vec<usize> = rep.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicated requests");
+        for r in &rep.records {
+            assert!(r.prefill_done >= r.arrival && r.completion > r.prefill_done);
+        }
+    }
+
+    #[test]
+    fn resched_identity_switch_is_benign() {
+        // Switching to the same placement only inserts the blackout; all
+        // requests still complete and throughput stays positive.
+        let (c, p) = small_placement();
+        let trace = Trace::online(WorkloadKind::Lpld, 0.8, 100.0, 6);
+        let n = trace.requests.len();
+        let switches = vec![PlacementSwitch { at: 50.0, delay: 2.0, placement: p.clone(), workload: None }];
+        let rep = run_disaggregated_with_resched(&c, &OPT_30B, &p, &switches, &trace);
+        assert_eq!(rep.records.len(), n);
+        assert!(rep.tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn resched_infeasible_switch_falls_back_to_old_placement() {
+        use crate::scheduler::placement::GroupPlan;
+        let (c, p) = small_placement();
+        // A placement whose every group is dead: the switch must be skipped
+        // and the old replicas must resume after the blackout.
+        let dead = Placement {
+            groups: vec![GroupPlan {
+                devices: (0..c.n()).collect(),
+                is_prefill: true,
+                config: None,
+                capacity: 0.0,
+            }],
+            routes: vec![],
+            flow_value: 0.0,
+            tokens_per_s: 0.0,
+            group_utilization: vec![0.0],
+        };
+        let trace = Trace::online(WorkloadKind::Lpld, 0.8, 80.0, 7);
+        let n = trace.requests.len();
+        let switches = vec![PlacementSwitch { at: 40.0, delay: 3.0, placement: dead, workload: None }];
+        let rep = run_disaggregated_with_resched(&c, &OPT_30B, &p, &switches, &trace);
+        assert_eq!(rep.records.len(), n, "fallback lost requests");
+    }
+
+    #[test]
+    fn resched_blackout_delays_held_requests() {
+        let (c, p) = small_placement();
+        // All arrivals land inside the blackout: their TTFT must include the
+        // wait until activation.
+        let mut trace = Trace::offline(WorkloadKind::Lpld, 5, 8);
+        for (i, r) in trace.requests.iter_mut().enumerate() {
+            r.arrival = 10.0 + i as f64 * 0.01;
+        }
+        let switches =
+            vec![PlacementSwitch { at: 9.0, delay: 20.0, placement: p.clone(), workload: None }];
+        let rep = run_disaggregated_with_resched(&c, &OPT_30B, &p, &switches, &trace);
+        assert_eq!(rep.records.len(), 5);
+        for r in &rep.records {
+            assert!(
+                r.prefill_done >= 29.0,
+                "request served during blackout: prefill_done {}",
+                r.prefill_done
+            );
+        }
     }
 }

@@ -89,6 +89,15 @@ impl SimReport {
         ok as f64 / self.records.len() as f64
     }
 
+    /// Sub-report of the requests that *arrived* in `[t0, t1)` — used by the
+    /// rescheduler case studies to compare per-phase service quality before
+    /// and after a workload shift.
+    pub fn windowed(&self, t0: f64, t1: f64) -> SimReport {
+        SimReport::from_records(
+            self.records.iter().filter(|r| r.arrival >= t0 && r.arrival < t1).copied().collect(),
+        )
+    }
+
     /// Smallest SLO scale achieving the given attainment (bisection over
     /// scales; the paper's Fig. 8 reports latency deadlines at 99%).
     pub fn slo_scale_for_attainment(&self, target: f64) -> f64 {
@@ -137,6 +146,20 @@ mod tests {
         assert_eq!(r.slo_attainment(3.5), 1.0);
         let s99 = r.slo_scale_for_attainment(0.99);
         assert!((s99 - 3.0).abs() < 0.01, "{s99}");
+    }
+
+    #[test]
+    fn windowed_filters_by_arrival() {
+        let r = SimReport::from_records(vec![
+            rec(0, 0.0, 5.0, 10, 1.0),
+            rec(1, 10.0, 15.0, 20, 1.0),
+            rec(2, 20.0, 25.0, 30, 1.0),
+        ]);
+        let w = r.windowed(10.0, 20.0);
+        assert_eq!(w.records.len(), 1);
+        assert_eq!(w.records[0].id, 1);
+        assert_eq!(w.total_output_tokens, 20);
+        assert!(r.windowed(100.0, 200.0).records.is_empty());
     }
 
     #[test]

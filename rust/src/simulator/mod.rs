@@ -18,7 +18,7 @@ pub mod events;
 pub mod metrics;
 
 pub use colocated::run_colocated;
-pub use disagg::run_disaggregated;
+pub use disagg::{run_disaggregated, run_disaggregated_with_resched, PlacementSwitch};
 pub use metrics::{RequestRecord, SimReport};
 
 use crate::cluster::GpuType;

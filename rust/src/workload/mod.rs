@@ -109,13 +109,20 @@ impl Trace {
     }
 
     /// Online trace: Poisson arrivals at `rate` req/s for `duration` seconds
-    /// (the paper scales rate to 75% of cluster peak).
+    /// (the paper scales rate to 75% of cluster peak). Arrival timestamps are
+    /// strictly increasing: exponential gaps can round to zero in f64 once
+    /// `t` is large, so equal timestamps are deduplicated at generation by
+    /// nudging to the next representable instant.
     pub fn online(kind: WorkloadKind, rate: f64, duration: f64, seed: u64) -> Trace {
         let mut rng = Rng::new(seed ^ 0x0411_15E5);
         let mut requests = Vec::new();
-        let mut t = 0.0;
+        let mut t = 0.0f64;
         loop {
+            let prev = t;
             t += rng.exp(rate);
+            if t <= prev {
+                t = next_after(prev);
+            }
             if t >= duration {
                 break;
             }
@@ -125,12 +132,77 @@ impl Trace {
         Trace { kind, requests }
     }
 
+    /// Phased trace for workload-drift scenarios (rescheduler case studies):
+    /// each `(kind, rate, duration)` phase contributes Poisson arrivals over
+    /// its own time window, concatenated on a single global clock. The
+    /// trace's `kind` is the *first* phase's kind (the placement a static
+    /// scheduler would provision for). Arrivals are strictly increasing
+    /// across phase boundaries.
+    pub fn phases(phases: &[(WorkloadKind, f64, f64)], seed: u64) -> Trace {
+        assert!(!phases.is_empty(), "need at least one phase");
+        let mut rng = Rng::new(seed ^ 0x9_4A5E_D0);
+        let mut requests: Vec<Request> = Vec::new();
+        let mut t0 = 0.0f64;
+        for &(kind, rate, duration) in phases {
+            assert!(
+                rate > 0.0 && rate.is_finite() && duration > 0.0 && duration.is_finite(),
+                "phase rate/duration must be positive and finite"
+            );
+            let end = t0 + duration;
+            // Poisson arrivals are memoryless: each phase restarts its clock
+            // at the boundary with gaps drawn at its own rate (carrying the
+            // previous phase's overshoot gap would distort the first window
+            // after the boundary whenever rates differ).
+            let mut t = t0;
+            loop {
+                let prev = t;
+                t += rng.exp(rate);
+                if t <= prev {
+                    t = next_after(prev);
+                }
+                if t >= end {
+                    break;
+                }
+                let (input_len, output_len) = kind.sample_lengths(&mut rng);
+                requests.push(Request { id: requests.len(), arrival: t, input_len, output_len });
+            }
+            t0 = end;
+        }
+        Trace { kind: phases[0].0, requests }
+    }
+
+    /// Phase boundary times of a phased trace spec: `boundaries[i]` is the
+    /// start of phase i+1 (cumulative durations, excluding the final end).
+    pub fn phase_boundaries(phases: &[(WorkloadKind, f64, f64)]) -> Vec<f64> {
+        let mut out = Vec::new();
+        let mut acc = 0.0;
+        for &(_, _, d) in &phases[..phases.len().saturating_sub(1)] {
+            acc += d;
+            out.push(acc);
+        }
+        out
+    }
+
     pub fn total_output_tokens(&self) -> usize {
         self.requests.iter().map(|r| r.output_len).sum()
     }
 
     pub fn total_input_tokens(&self) -> usize {
         self.requests.iter().map(|r| r.input_len).sum()
+    }
+}
+
+/// Smallest f64 strictly greater than `x` (for deduplicating arrival
+/// timestamps without pulling in the unstable-era `next_up`).
+fn next_after(x: f64) -> f64 {
+    if x == 0.0 {
+        return f64::MIN_POSITIVE;
+    }
+    let bits = x.to_bits();
+    if x > 0.0 {
+        f64::from_bits(bits + 1)
+    } else {
+        f64::from_bits(bits - 1)
     }
 }
 
@@ -173,9 +245,43 @@ mod tests {
         let t = Trace::online(WorkloadKind::Online, 5.0, 200.0, 3);
         let n = t.requests.len() as f64;
         assert!((n / 200.0 - 5.0).abs() < 0.5, "rate {} off", n / 200.0);
-        // arrivals strictly increasing
+        // arrivals strictly increasing (generation dedupes equal stamps)
         for w in t.requests.windows(2) {
-            assert!(w[1].arrival >= w[0].arrival);
+            assert!(w[1].arrival > w[0].arrival, "{} !> {}", w[1].arrival, w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn phased_trace_shifts_mix_at_boundary() {
+        let spec = [(WorkloadKind::Lphd, 4.0, 50.0), (WorkloadKind::Hpld, 4.0, 50.0)];
+        let t = Trace::phases(&spec, 11);
+        assert_eq!(t.kind, WorkloadKind::Lphd);
+        assert_eq!(Trace::phase_boundaries(&spec), vec![50.0]);
+        // Strictly increasing across the whole trace, ids sequential.
+        for (i, w) in t.requests.windows(2).enumerate() {
+            assert!(w[1].arrival > w[0].arrival);
+            assert_eq!(t.requests[i].id, i);
+        }
+        // Phase 1 requests are light-prefill, phase 2 heavy-prefill.
+        for r in &t.requests {
+            if r.arrival < 50.0 {
+                assert!(r.input_len <= HEAVY_PREFILL_THRESHOLD, "LPHD phase got {}", r.input_len);
+                assert!(r.output_len > HEAVY_DECODE_THRESHOLD);
+            } else {
+                assert!(r.input_len > HEAVY_PREFILL_THRESHOLD, "HPLD phase got {}", r.input_len);
+                assert!(r.output_len <= HEAVY_DECODE_THRESHOLD);
+            }
+        }
+        // Both phases populated at roughly the requested rate.
+        let n1 = t.requests.iter().filter(|r| r.arrival < 50.0).count();
+        let n2 = t.requests.len() - n1;
+        assert!(n1 > 100 && n2 > 100, "{n1}/{n2}");
+    }
+
+    #[test]
+    fn next_after_strictly_increases() {
+        for x in [0.0, 1.0, 123.456, 1e12] {
+            assert!(next_after(x) > x);
         }
     }
 

@@ -1,0 +1,127 @@
+//! Rescheduler subsystem contracts (ISSUE 1 satellite coverage):
+//! - warm-start from the incumbent never ends below the incumbent's
+//!   objective under the new workload;
+//! - the drift detector fires exactly once per sustained shift (hysteresis,
+//!   no flapping) on a deterministic phased trace;
+//! - the migration planner refuses a switch whose drain+transfer cost
+//!   exceeds the projected gain.
+
+use hexgen2::cluster::settings;
+use hexgen2::model::OPT_30B;
+use hexgen2::rescheduler::{migration, warmstart, DriftKind, MonitorConfig, Rescheduler};
+use hexgen2::scheduler::{self, ScheduleOptions};
+use hexgen2::simulator::{run_disaggregated, run_disaggregated_with_resched, PlacementSwitch};
+use hexgen2::workload::{Trace, WorkloadKind};
+
+fn incumbent_for(kind: WorkloadKind, seed: u64) -> (hexgen2::cluster::Cluster, scheduler::Placement) {
+    let c = settings::case_study();
+    let mut o = ScheduleOptions::new(kind);
+    o.max_rounds = 6;
+    o.patience = 3;
+    o.force_k = Some(4);
+    o.seed = seed;
+    let p = scheduler::schedule(&c, &OPT_30B, &o).expect("incumbent schedules").placement;
+    (c, p)
+}
+
+#[test]
+fn warm_start_never_below_incumbent_under_new_workload() {
+    let (c, incumbent) = incumbent_for(WorkloadKind::Lphd, 1);
+    // The workload drifts to HPLD. Baseline: the incumbent partition
+    // re-evaluated under the new mix (what "keep the placement" would yield).
+    let task = scheduler::task_for(WorkloadKind::Hpld);
+    let groups = warmstart::incumbent_groups(&incumbent);
+    let mut cache = hexgen2::scheduler::strategy::StrategyCache::new();
+    let keep = scheduler::evaluate_partition(&c, &OPT_30B, &task, 600.0, &groups, 64, &mut cache)
+        .expect("incumbent evaluates under HPLD");
+    let mut shifted = ScheduleOptions::new(WorkloadKind::Hpld);
+    shifted.max_rounds = 6;
+    shifted.patience = 3;
+    let warm = warmstart::replan(&c, &OPT_30B, &shifted, &incumbent).expect("warm replan");
+    assert!(
+        warm.placement.tokens_per_s >= keep.tokens_per_s - 1e-9,
+        "warm re-plan {} fell below the incumbent's {} under the new workload",
+        warm.placement.tokens_per_s,
+        keep.tokens_per_s
+    );
+}
+
+#[test]
+fn drift_detector_fires_exactly_once_per_sustained_shift() {
+    let cfg = MonitorConfig { window: 20.0, min_samples: 15, dwell: 10.0, rate_band: 0.6 };
+    // One sustained LPHD→HPLD shift: exactly one event, workload-kind drift.
+    let spec = [(WorkloadKind::Lphd, 4.0, 120.0), (WorkloadKind::Hpld, 4.0, 120.0)];
+    let trace = Trace::phases(&spec, 5);
+    let mut sensor = Rescheduler::new(cfg);
+    let mut events = Vec::new();
+    for r in &trace.requests {
+        if let Some(e) = sensor.observe(r.arrival, r.input_len, r.output_len) {
+            events.push(e);
+        }
+    }
+    assert_eq!(events.len(), 1, "expected exactly one drift event, got {events:?}");
+    let e = &events[0];
+    assert!(e.at > 120.0 && e.at < 165.0, "drift at {:.1}s", e.at);
+    match e.kind {
+        DriftKind::Workload { from, to } => {
+            assert_eq!(from, WorkloadKind::Lphd);
+            assert_eq!(to, WorkloadKind::Hpld);
+        }
+        other => panic!("expected a workload drift, got {other:?}"),
+    }
+
+    // A steady trace must produce no events at all (no flapping around the
+    // detector's own noise).
+    let steady = Trace::online(WorkloadKind::Lphd, 4.0, 240.0, 6);
+    let mut sensor = Rescheduler::new(cfg);
+    for r in &steady.requests {
+        assert!(
+            sensor.observe(r.arrival, r.input_len, r.output_len).is_none(),
+            "spurious drift on a steady trace"
+        );
+    }
+}
+
+#[test]
+fn migration_refuses_switch_costlier_than_gain() {
+    let (c, p) = incumbent_for(WorkloadKind::Lphd, 2);
+    let task = scheduler::task_for(WorkloadKind::Lphd);
+    // Candidate with a vanishing projected gain but a real drain cost.
+    let mut marginal = p.clone();
+    marginal.tokens_per_s = p.tokens_per_s * 1.00001;
+    let m = migration::plan(&c, &OPT_30B, &p, &marginal, &task, 600.0);
+    assert!(m.tokens_lost > 0.0, "no migration cost modeled: {m:?}");
+    assert!(!m.migrate, "unprofitable switch approved: {m:?}");
+    // And a candidate that is outright worse must always be refused.
+    let mut worse = p.clone();
+    worse.tokens_per_s = p.tokens_per_s * 0.5;
+    assert!(!migration::plan(&c, &OPT_30B, &p, &worse, &task, 600.0).migrate);
+}
+
+#[test]
+fn resched_simulation_preserves_every_request() {
+    // End-to-end over the simulator: a priced, approved switch mid-trace
+    // must not lose or duplicate requests versus the static run.
+    let (c, p) = incumbent_for(WorkloadKind::Lphd, 3);
+    let mut shifted = ScheduleOptions::new(WorkloadKind::Hpld);
+    shifted.max_rounds = 4;
+    shifted.patience = 2;
+    let warm = warmstart::replan(&c, &OPT_30B, &shifted, &p).expect("replan");
+    let spec = [(WorkloadKind::Lphd, 2.0, 80.0), (WorkloadKind::Hpld, 2.0, 120.0)];
+    let trace = Trace::phases(&spec, 9);
+    let n = trace.requests.len();
+    let static_rep = run_disaggregated(&c, &OPT_30B, &p, &trace);
+    let sw = PlacementSwitch {
+        at: 100.0,
+        delay: 4.0,
+        placement: warm.placement,
+        workload: Some(WorkloadKind::Hpld),
+    };
+    let resched_rep = run_disaggregated_with_resched(&c, &OPT_30B, &p, &[sw], &trace);
+    assert_eq!(static_rep.records.len(), n);
+    assert_eq!(resched_rep.records.len(), n, "switch lost requests");
+    let mut ids: Vec<usize> = resched_rep.records.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "switch duplicated requests");
+}

@@ -1,0 +1,172 @@
+//! Minimal `anyhow`-compatible error shim.
+//!
+//! The offline crate registry this repo builds against carries no
+//! third-party crates, so this in-tree shim provides the (small) subset of
+//! the real `anyhow` API the codebase uses: [`Error`], [`Result`],
+//! [`Context`], and the `anyhow!` / `bail!` macros. Swapping in the real
+//! crate is a one-line Cargo.toml change; nothing here depends on shim
+//! internals.
+//!
+//! Semantics mirror `anyhow`:
+//! - `Error` is an opaque, context-carrying error (it does NOT implement
+//!   `std::error::Error`, which is what allows the blanket `From` below).
+//! - `Display` shows the outermost message; `{:#}` (alternate) shows the
+//!   whole chain joined by `": "`.
+//! - `.context(..)` / `.with_context(..)` prepend a new outermost message.
+
+use std::fmt;
+
+/// Opaque error: an ordered chain of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Add an outer context message (used by the [`Context`] trait).
+    pub fn wrap(mut self, m: impl fmt::Display) -> Error {
+        self.chain.insert(0, m.to_string());
+        self
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain_messages(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or("unknown error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or("unknown error"))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts into `Error` (mirrors anyhow's blanket From).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the source chain as context lines.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` (subset of anyhow's trait).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.wrap(c)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.wrap(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::Error::msg(format!($($t)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest.json".to_string())
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest.json");
+        let alt = format!("{e:#}");
+        assert!(alt.starts_with("reading manifest.json: "), "{alt}");
+        assert!(alt.contains("no such file"), "{alt}");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn f() -> Result<()> {
+            bail!("nope {}", "x");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope x");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely-not-a-file-hexgen2")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_on_anyhow_result_nests() {
+        let e: Error = Err::<(), _>(anyhow!("inner")).context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+}

@@ -1,0 +1,118 @@
+//! Stub of the `xla` (PJRT) binding surface used by `runtime/engine.rs`.
+//!
+//! The offline build environment for this repo does not ship the
+//! `xla_extension` native library, so this stub mirrors the API the runtime
+//! layer calls and reports the backend as unavailable at *runtime* (every
+//! entry point returns [`Error`]). The analytic layers — scheduler, cost
+//! model, simulator, experiments, and the new rescheduler — never touch this
+//! module; the live-serving paths (`coordinator`, `runtime`) detect missing
+//! AOT artifacts before constructing a client and skip cleanly.
+//!
+//! Vendoring the real crate in place of this one re-enables the live path
+//! with no source changes in `src/`.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error("PJRT backend not available: built against the in-tree xla stub (vendor the real xla crate to enable the live path)".to_string())
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Device-resident buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module proto (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
