@@ -8,7 +8,7 @@
 //! Proves all layers compose: disaggregated prefill/decode replica workers,
 //! flow-weighted routing, real KV-cache transfers between workers, decode
 //! continuous batching over slot-managed caches. Results are recorded in
-//! EXPERIMENTS.md §End-to-end.
+//! DESIGN.md §6.
 //!
 //! Run:  make artifacts && cargo run --release --example e2e_serve
 //!       (HEXGEN2_E2E_REQS=N and HEXGEN2_E2E_MODEL=tiny|gpt-100m override)

@@ -1,12 +1,12 @@
 //! Run the HexGen-2 scheduling algorithm on heterogeneous setting 1 with
-//! LLaMA-2-70B (the paper's flagship configuration) and print the chosen
-//! placement in the paper's Table-2 format, plus the convergence trace.
+//! LLaMA-2-70B (the paper's flagship configuration) through the unified
+//! deploy API, and print the chosen placement in the paper's Table-2 format.
 //!
 //! Run:  cargo run --release --example schedule_cluster
 
 use hexgen2::cluster::settings;
+use hexgen2::deploy::{DeploymentSpec, HexGen2Planner};
 use hexgen2::model::LLAMA2_70B;
-use hexgen2::scheduler::{schedule, ScheduleOptions};
 use hexgen2::workload::WorkloadKind;
 
 fn main() {
@@ -14,14 +14,16 @@ fn main() {
     println!("cluster {}: {} GPUs, ${:.2}/h\n", cluster.name, cluster.n(), cluster.budget_per_hour());
 
     for kind in [WorkloadKind::Online, WorkloadKind::Hpld, WorkloadKind::Lphd] {
-        let opts = ScheduleOptions::new(kind);
-        let r = schedule(&cluster, &LLAMA2_70B, &opts).expect("feasible placement");
+        let dep = DeploymentSpec::new(cluster.clone(), LLAMA2_70B)
+            .workload(kind)
+            .plan(&HexGen2Planner)
+            .expect("feasible placement");
         println!(
-            "=== workload {} (scheduled in {:.2}s, {} rounds) ===",
+            "=== workload {} (planned in {:.2}s, est {:.0} tokens/s) ===",
             kind.name(),
-            r.elapsed_s,
-            r.rounds
+            dep.plan.elapsed_s,
+            dep.plan.est_tokens_per_s
         );
-        println!("{}", r.placement.describe(&cluster));
+        println!("{}", dep.describe());
     }
 }

@@ -1,23 +1,22 @@
 //! Online serving comparison on heterogeneous setting 2: HexGen-2's
 //! disaggregated placement vs the HexGen colocated baseline, at 75% of peak
-//! arrival rate (paper §5.1 online protocol). Reports throughput, latency
-//! percentiles and SLO attainment (Fig. 8 axes).
+//! arrival rate (paper §5.1 online protocol), both planned and run through
+//! the unified deploy API (one `Planner` per system, one simulator
+//! `Backend`). Reports throughput, latency percentiles and SLO attainment
+//! (Fig. 8 axes).
 //!
 //! Run:  cargo run --release --example serve_online
 
-use hexgen2::baselines::hexgen::schedule_hexgen;
 use hexgen2::cluster::settings;
+use hexgen2::deploy::{DeploymentSpec, HexGen2Planner, HexGenPlanner, Planner, SimBackend};
 use hexgen2::experiments::{online_rate, ExpOpts};
 use hexgen2::model::OPT_30B;
-use hexgen2::scheduler::{schedule, ScheduleOptions};
-use hexgen2::simulator::{run_colocated, run_disaggregated};
 use hexgen2::workload::{Trace, WorkloadKind};
 
 fn main() {
     let cluster = settings::het2();
-    let model = OPT_30B;
     let opts = ExpOpts::quick();
-    let rate = online_rate(&cluster, &model, &opts);
+    let rate = online_rate(&cluster, &OPT_30B, &opts);
     let trace = Trace::online(WorkloadKind::Online, rate, 240.0, 3);
     println!(
         "online trace: {} requests at {:.2} req/s on {}\n",
@@ -26,14 +25,14 @@ fn main() {
         cluster.name
     );
 
-    let r = schedule(&cluster, &model, &ScheduleOptions::new(WorkloadKind::Online)).unwrap();
-    let a = run_disaggregated(&cluster, &model, &r.placement, &trace);
-    let plan = schedule_hexgen(&cluster, &model, WorkloadKind::Online, 0, 15).unwrap();
-    let b = run_colocated(&cluster, &model, &plan.replicas, &trace, None);
-
-    for (name, rep) in [("HEXGEN-2 (disaggregated)", &a), ("HEXGEN (colocated)", &b)] {
+    let spec = DeploymentSpec::new(cluster, OPT_30B).workload(WorkloadKind::Online).quick(true);
+    let planners: [&dyn Planner; 2] = [&HexGen2Planner, &HexGenPlanner];
+    for planner in planners {
+        let dep = spec.plan(planner).expect("plans");
+        let rep = dep.run(&SimBackend, &trace).expect("simulates");
         println!(
-            "{name:26} {:>6.0} tokens/s | avg {:.2}s p95 {:.2}s | TTFT {:.2}s | SLO@99 scale {:.1}",
+            "{:26} {:>6.0} tokens/s | avg {:.2}s p95 {:.2}s | TTFT {:.2}s | SLO@99 scale {:.1}",
+            planner.display_name(),
             rep.tokens_per_s(),
             rep.avg_latency(),
             rep.p_latency(95.0),

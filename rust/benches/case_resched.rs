@@ -1,7 +1,8 @@
 //! Bench: §5.4-style rescheduling case study — steady-state throughput with
-//! and without online rescheduling on a phased LPHD→HPLD trace, plus the
-//! warm-start vs cold-start re-plan wall-clock. HEXGEN2_FULL=1 lengthens the
-//! phases to full-study durations.
+//! and without online rescheduling on a phased LPHD→HPLD trace, an
+//! *oscillating* LPHD↔HPLD trace (the hysteresis must bound the switch
+//! count), plus the warm-start vs cold-start re-plan wall-clock.
+//! HEXGEN2_FULL=1 lengthens the phases to full-study durations.
 use hexgen2::cluster::settings;
 use hexgen2::experiments::{resched, ExpOpts};
 use hexgen2::model::OPT_30B;
@@ -22,6 +23,25 @@ fn main() {
     };
     cs.table.print("Rescheduling case study (case_study cluster, OPT-30B)");
     resched::print_summary(&cs);
+
+    // Oscillating mix at the same rate: LPHD -> HPLD -> LPHD -> HPLD. Three
+    // sustained shifts; the hysteresis + net-benefit gate must keep the
+    // switch count at or below that.
+    let rate = spec[0].1;
+    let phase_s = if opts.quick { 90.0 } else { 300.0 };
+    let osc = [
+        (WorkloadKind::Lphd, rate, phase_s),
+        (WorkloadKind::Hpld, rate, phase_s),
+        (WorkloadKind::Lphd, rate, phase_s),
+        (WorkloadKind::Hpld, rate, phase_s),
+    ];
+    if let Some(ocs) = resched::case_resched(&cluster, &OPT_30B, &osc, &opts) {
+        ocs.table.print("Oscillating trace (LPHD <-> HPLD x2)");
+        println!(
+            "oscillation: {} drift event(s), {} switch(es) for 3 sustained shifts (no thrash)",
+            ocs.n_events, ocs.n_switches
+        );
+    }
 
     // Time the warm vs cold re-plan directly (same cluster, HPLD target).
     let mut base = opts.sched_opts(WorkloadKind::Lphd);

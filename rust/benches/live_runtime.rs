@@ -1,6 +1,6 @@
 //! Live-path micro-benchmarks (the §Perf L3 hot path): prefill call and
 //! decode-step call latency through the PJRT runtime, tiny model.
-//! These are the before/after numbers in EXPERIMENTS.md §Perf.
+//! These are the before/after numbers in DESIGN.md §5 (perf notes).
 use hexgen2::runtime::{artifacts_dir, ModelRuntime};
 use hexgen2::util::bench;
 

@@ -1,11 +1,13 @@
-//! Micro-benchmarks of the scheduler/simulator hot paths (the §Perf targets
-//! of EXPERIMENTS.md): push-relabel max-flow, spectral partition, partition
-//! evaluation, full schedule, discrete-event simulation, and the router's
-//! per-request dispatch cost.
+//! Micro-benchmarks of the scheduler/simulator hot paths (DESIGN.md §5):
+//! push-relabel max-flow, spectral partition, partition evaluation, full
+//! schedule, discrete-event simulation, and the router's per-request
+//! dispatch cost.
 use hexgen2::cluster::settings;
 use hexgen2::costmodel::TaskProfile;
 use hexgen2::model::{LLAMA2_70B, OPT_30B};
-use hexgen2::scheduler::{self, maxflow::FlowNetwork, spectral, strategy::StrategyCache, ScheduleOptions};
+use hexgen2::scheduler::{
+    self, maxflow::FlowNetwork, spectral, strategy::StrategyCache, Objective, ScheduleOptions,
+};
 use hexgen2::simulator::run_disaggregated;
 use hexgen2::util::bench;
 use hexgen2::util::rng::Rng;
@@ -46,14 +48,16 @@ fn main() {
     bench::time("micro/evaluate-partition-cold", 1, 10, || {
         let mut cache = StrategyCache::new();
         std::hint::black_box(scheduler::evaluate_partition(
-            &het1, &LLAMA2_70B, &task, 600.0, &groups, 6, &mut cache,
+            &het1, &LLAMA2_70B, &task, 600.0, &groups, 6, Objective::Throughput, &mut cache,
         ));
     });
     let mut warm = StrategyCache::new();
-    scheduler::evaluate_partition(&het1, &LLAMA2_70B, &task, 600.0, &groups, 6, &mut warm);
+    scheduler::evaluate_partition(
+        &het1, &LLAMA2_70B, &task, 600.0, &groups, 6, Objective::Throughput, &mut warm,
+    );
     bench::time("micro/evaluate-partition-warm", 3, 50, || {
         std::hint::black_box(scheduler::evaluate_partition(
-            &het1, &LLAMA2_70B, &task, 600.0, &groups, 6, &mut warm,
+            &het1, &LLAMA2_70B, &task, 600.0, &groups, 6, Objective::Throughput, &mut warm,
         ));
     });
 

@@ -11,7 +11,7 @@ use crate::costmodel::TaskProfile;
 use crate::model::LlmSpec;
 use crate::scheduler::flownet::evaluate_types;
 use crate::scheduler::strategy::StrategyCache;
-use crate::scheduler::Placement;
+use crate::scheduler::{Objective, Placement};
 use crate::workload::WorkloadKind;
 
 /// A DistServe deployment (uniform groups, typed).
@@ -24,11 +24,24 @@ pub struct DistServePlan {
 }
 
 /// Enumerate uniform group sizes × prefill counts; evaluate each with the
-/// shared flow-network machinery; return the best.
+/// shared flow-network machinery; return the best (throughput objective,
+/// DistServe's own criterion).
 pub fn schedule_distserve(
     cluster: &Cluster,
     model: &LlmSpec,
     workload: WorkloadKind,
+) -> Option<DistServePlan> {
+    schedule_distserve_with(cluster, model, workload, Objective::Throughput)
+}
+
+/// Objective-aware DistServe sweep: the same uniform enumeration, with each
+/// candidate ranked under the caller's [`Objective`] (the deploy layer's
+/// unified `Planner` path).
+pub fn schedule_distserve_with(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    workload: WorkloadKind,
+    objective: Objective,
 ) -> Option<DistServePlan> {
     let t0 = Instant::now();
     let (s_in, s_out) = workload.mean_lengths();
@@ -48,12 +61,13 @@ pub fn schedule_distserve(
         let groups: Vec<Vec<usize>> = (0..k).map(|g| (g * gs..(g + 1) * gs).collect()).collect();
         for n_prefill in 1..k {
             let assign: Vec<bool> = (0..k).map(|g| g < n_prefill).collect();
-            if let Some(p) =
+            if let Some(mut p) =
                 evaluate_types(cluster, model, &task, 600.0, &groups, &assign, &mut cache)
             {
+                p.objective_score = objective.score(cluster, model, &task, &p);
                 if best
                     .as_ref()
-                    .map(|b| p.flow_value > b.placement.flow_value)
+                    .map(|b| p.objective_score > b.placement.objective_score)
                     .unwrap_or(true)
                 {
                     best = Some(DistServePlan {

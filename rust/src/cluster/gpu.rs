@@ -74,7 +74,7 @@ impl GpuType {
     }
 
     /// Rental price, $/hour (fitted to the paper's Fig. 4 budgets; see
-    /// EXPERIMENTS.md for the computed per-setting budgets vs paper's).
+    /// `cluster::settings` tests for the computed per-setting budgets vs paper's).
     pub fn price_per_hour(self) -> f64 {
         match self {
             GpuType::H100 => 3.69,

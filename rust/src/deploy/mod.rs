@@ -1,0 +1,357 @@
+//! The unified `deploy` API: one way to describe, plan, and run a
+//! deployment, shared by every CLI subcommand, example, bench, and
+//! experiment harness.
+//!
+//! Three pieces (DESIGN.md §3):
+//! - [`DeploymentSpec`] — a builder carrying cluster + model + workload +
+//!   [`Objective`] + search knobs.
+//! - [`Planner`] — one trait for all four systems (HexGen-2's
+//!   graph-partition scheduler and the HexGen / DistServe / vLLM baselines),
+//!   all returning a common [`Plan`].
+//! - [`Backend`] — one trait for every execution substrate: the
+//!   discrete-event simulator, the rescheduling-enabled simulator, and the
+//!   live PJRT coordinator.
+//!
+//! The single path everything goes through:
+//!
+//! ```text
+//! spec.plan(&HexGen2Planner)?.run(&SimBackend, &trace)?
+//! ```
+//!
+//! SLO-constrained or price-budget-constrained planning is a one-line spec
+//! change (`.objective(Objective::SloGoodput { scale })`), not a new
+//! harness.
+
+pub mod backend;
+pub mod planner;
+
+pub use crate::scheduler::Objective;
+pub use backend::{backend_by_name, Backend, LiveBackend, ReschedBackend, SimBackend};
+pub use planner::{
+    planner_by_name, standard_planners, DistServePlanner, GeneticPlanner, HexGen2Planner,
+    HexGenPlanner, Plan, PlanKind, Planner, VllmPlanner,
+};
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::Cluster;
+use crate::costmodel::TaskProfile;
+use crate::model::LlmSpec;
+use crate::scheduler::{self, ScheduleOptions, SwapMode};
+use crate::simulator::SimReport;
+use crate::util::json::{self, Json};
+use crate::workload::{Trace, WorkloadKind};
+
+/// Everything needed to deploy a model on a cluster: what to serve, what
+/// traffic to expect, what to optimize for, and how hard to search.
+#[derive(Clone, Debug)]
+pub struct DeploymentSpec {
+    pub cluster: Cluster,
+    pub model: LlmSpec,
+    pub workload: WorkloadKind,
+    pub objective: Objective,
+    pub seed: u64,
+    /// Shrink search budgets to CI-speed (the same budgets as
+    /// `ExpOpts::quick`, so experiment results are reproducible through
+    /// either path).
+    pub quick: bool,
+    pub swap_mode: SwapMode,
+    /// Pin the group count K (tests / case studies).
+    pub force_k: Option<usize>,
+    /// Override the refinement round budget.
+    pub max_rounds: Option<usize>,
+    /// Colocated vLLM-style plans: optional SARATHI chunked-prefill size.
+    pub chunked_prefill: Option<usize>,
+}
+
+impl DeploymentSpec {
+    pub fn new(cluster: Cluster, model: LlmSpec) -> DeploymentSpec {
+        DeploymentSpec {
+            cluster,
+            model,
+            workload: WorkloadKind::Online,
+            objective: Objective::Throughput,
+            seed: 0,
+            quick: false,
+            swap_mode: SwapMode::Guided,
+            force_k: None,
+            max_rounds: None,
+            chunked_prefill: None,
+        }
+    }
+
+    pub fn workload(mut self, kind: WorkloadKind) -> Self {
+        self.workload = kind;
+        self
+    }
+
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn quick(mut self, quick: bool) -> Self {
+        self.quick = quick;
+        self
+    }
+
+    pub fn swap_mode(mut self, mode: SwapMode) -> Self {
+        self.swap_mode = mode;
+        self
+    }
+
+    pub fn force_k(mut self, k: usize) -> Self {
+        self.force_k = Some(k);
+        self
+    }
+
+    pub fn max_rounds(mut self, rounds: usize) -> Self {
+        self.max_rounds = Some(rounds);
+        self
+    }
+
+    pub fn chunked_prefill(mut self, chunk: Option<usize>) -> Self {
+        self.chunked_prefill = chunk;
+        self
+    }
+
+    /// The mean-lengths task profile the planners size capacities with.
+    pub fn task(&self) -> TaskProfile {
+        scheduler::task_for(self.workload)
+    }
+
+    /// Scheduling options derived from the spec. Quick mode uses exactly the
+    /// `ExpOpts::sched_opts` budgets so experiment harnesses produce the same
+    /// placements through either path.
+    pub fn sched_opts(&self) -> ScheduleOptions {
+        let mut o = ScheduleOptions::new(self.workload);
+        o.seed = self.seed;
+        o.objective = self.objective;
+        o.swap_mode = self.swap_mode;
+        if self.quick {
+            o.max_rounds = 10;
+            o.patience = 4;
+            o.proposals_per_round = 8;
+            o.type_candidates = 4;
+        }
+        if let Some(k) = self.force_k {
+            o.force_k = Some(k);
+        }
+        if let Some(r) = self.max_rounds {
+            o.max_rounds = r;
+        }
+        o
+    }
+
+    /// Plan this deployment with the given planner; errors when the planner
+    /// finds no feasible deployment.
+    pub fn plan(&self, planner: &dyn Planner) -> Result<Deployment> {
+        let plan = planner.plan(self).ok_or_else(|| {
+            anyhow!(
+                "{} found no feasible deployment for {} on {}",
+                planner.name(),
+                self.model.name,
+                self.cluster.name
+            )
+        })?;
+        Ok(Deployment { spec: self.clone(), plan })
+    }
+}
+
+/// A planned deployment, ready to run on any [`Backend`].
+pub struct Deployment {
+    pub spec: DeploymentSpec,
+    pub plan: Plan,
+}
+
+impl Deployment {
+    /// Execute the plan on a backend over a request trace.
+    pub fn run(&self, backend: &dyn Backend, trace: &Trace) -> Result<SimReport> {
+        backend.run(&self.spec, &self.plan, trace)
+    }
+
+    /// Human-readable description of the plan (Table-2 style for
+    /// disaggregated placements).
+    pub fn describe(&self) -> String {
+        match &self.plan.kind {
+            PlanKind::Disaggregated(p) => p.describe(&self.spec.cluster),
+            PlanKind::Colocated { replicas, chunked_prefill } => {
+                let mut out = format!(
+                    "colocated: {} replica(s), est {:.0} tokens/s{}\n",
+                    replicas.len(),
+                    self.plan.est_tokens_per_s,
+                    match chunked_prefill {
+                        Some(c) => format!(", chunked prefill {c} tokens"),
+                        None => String::new(),
+                    }
+                );
+                for (i, r) in replicas.iter().enumerate() {
+                    out.push_str(&format!("  replica {i}: {r}\n"));
+                }
+                out
+            }
+        }
+    }
+
+    /// JSON description of the plan alone (`hexgen2 schedule --json`).
+    pub fn plan_json(&self) -> Json {
+        let mut fields = vec![
+            ("planner", json::s(self.plan.planner)),
+            ("system", json::s(self.plan.display)),
+            ("cluster", json::s(&self.spec.cluster.name)),
+            ("model", json::s(self.spec.model.name)),
+            ("workload", json::s(self.spec.workload.name())),
+            ("objective", json::s(self.spec.objective.name())),
+            ("est_tokens_per_s", json::num(self.plan.est_tokens_per_s)),
+            ("objective_score", json::num(self.plan.objective_score)),
+            ("plan_elapsed_s", json::num(self.plan.elapsed_s)),
+        ];
+        match &self.plan.kind {
+            PlanKind::Disaggregated(p) => {
+                let groups: Vec<Json> = p
+                    .groups
+                    .iter()
+                    .enumerate()
+                    .map(|(gi, g)| {
+                        json::obj(vec![
+                            (
+                                "devices",
+                                json::arr(
+                                    g.devices.iter().map(|&d| json::num(d as f64)).collect(),
+                                ),
+                            ),
+                            ("type", json::s(if g.is_prefill { "prefill" } else { "decode" })),
+                            (
+                                "strategy",
+                                json::s(
+                                    &g.config
+                                        .as_ref()
+                                        .map(|c| c.strategy_string())
+                                        .unwrap_or_else(|| "infeasible".into()),
+                                ),
+                            ),
+                            ("capacity_req_per_period", json::num(g.capacity)),
+                            (
+                                "utilization",
+                                json::num(p.group_utilization.get(gi).copied().unwrap_or(0.0)),
+                            ),
+                        ])
+                    })
+                    .collect();
+                let routes: Vec<Json> = p
+                    .routes
+                    .iter()
+                    .filter(|r| r.flow > 1e-9)
+                    .map(|r| {
+                        json::obj(vec![
+                            ("prefill", json::num(r.prefill as f64)),
+                            ("decode", json::num(r.decode as f64)),
+                            ("flow", json::num(r.flow)),
+                            ("capacity", json::num(r.capacity)),
+                        ])
+                    })
+                    .collect();
+                fields.push(("mode", json::s("disaggregated")));
+                fields.push(("flow_value", json::num(p.flow_value)));
+                fields.push(("groups", json::arr(groups)));
+                fields.push(("kv_routes", json::arr(routes)));
+            }
+            PlanKind::Colocated { replicas, chunked_prefill } => {
+                fields.push(("mode", json::s("colocated")));
+                fields.push(("replicas", json::num(replicas.len() as f64)));
+                if let Some(c) = chunked_prefill {
+                    fields.push(("chunked_prefill", json::num(*c as f64)));
+                }
+            }
+        }
+        json::obj(fields)
+    }
+
+    /// JSON report of a finished run (`hexgen2 simulate --json`).
+    pub fn report_json(&self, rep: &SimReport) -> Json {
+        let mut fields = match self.plan_json() {
+            Json::Obj(m) => m.into_iter().collect::<Vec<_>>(),
+            _ => unreachable!("plan_json always returns an object"),
+        };
+        let mut result = vec![
+            ("requests".to_string(), json::num(rep.records.len() as f64)),
+            ("tokens_per_s".to_string(), json::num(rep.tokens_per_s())),
+            ("avg_latency_s".to_string(), json::num(rep.avg_latency())),
+            ("p95_latency_s".to_string(), json::num(rep.p_latency(95.0))),
+            ("avg_ttft_s".to_string(), json::num(rep.avg_ttft())),
+            ("slo_scale_at_99".to_string(), json::num(rep.slo_scale_for_attainment(0.99))),
+        ];
+        fields.append(&mut result);
+        Json::Obj(fields.into_iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::model::OPT_30B;
+
+    fn spec() -> DeploymentSpec {
+        DeploymentSpec::new(settings::homogeneous_small(), OPT_30B)
+            .workload(WorkloadKind::Lpld)
+            .quick(true)
+            .seed(1)
+    }
+
+    #[test]
+    fn builder_sets_fields_and_sched_opts_match_expopts_budgets() {
+        let s = spec()
+            .objective(Objective::MeanLatency)
+            .force_k(2)
+            .max_rounds(3)
+            .swap_mode(SwapMode::None);
+        let o = s.sched_opts();
+        assert_eq!(o.workload, WorkloadKind::Lpld);
+        assert_eq!(o.objective, Objective::MeanLatency);
+        assert_eq!(o.seed, 1);
+        assert_eq!(o.swap_mode, SwapMode::None);
+        assert_eq!(o.force_k, Some(2));
+        assert_eq!(o.max_rounds, 3);
+        // Quick budgets mirror ExpOpts::sched_opts exactly.
+        assert_eq!(o.patience, 4);
+        assert_eq!(o.proposals_per_round, 8);
+        assert_eq!(o.type_candidates, 4);
+    }
+
+    #[test]
+    fn spec_plan_run_single_path() {
+        // The one-line deploy path: spec -> plan -> run.
+        let s = spec();
+        let dep = s.plan(&HexGen2Planner).expect("plans");
+        assert_eq!(dep.plan.planner, "hexgen2");
+        assert!(dep.plan.est_tokens_per_s > 0.0);
+        let trace = Trace::offline(WorkloadKind::Lpld, 30, 2);
+        let rep = dep.run(&SimBackend, &trace).expect("runs");
+        assert_eq!(rep.records.len(), 30);
+        assert!(rep.tokens_per_s() > 0.0);
+        // Reports serialize.
+        let j = dep.report_json(&rep);
+        assert_eq!(j.get("planner").unwrap().as_str(), Some("hexgen2"));
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(30));
+        assert!(j.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+        // describe() renders the Table-2 style placement.
+        assert!(dep.describe().contains("Prefill Instance"), "{}", dep.describe());
+    }
+
+    #[test]
+    fn infeasible_plan_is_an_error() {
+        // 70B on a tiny homogeneous cluster pinned to absurd K still plans,
+        // but an unknown-planner-style failure path: vLLM on a cluster where
+        // nothing fits. A 1-GPU cluster cannot serve OPT-30B at all.
+        let c = settings::synthetic(8, 2);
+        let s = DeploymentSpec::new(c, crate::model::LLAMA2_70B).workload(WorkloadKind::Hphd);
+        // Whichever way it goes, the API must return Result, not panic.
+        let _ = s.plan(&VllmPlanner);
+    }
+}

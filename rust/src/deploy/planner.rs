@@ -1,0 +1,345 @@
+//! The [`Planner`] trait: one interface over all four systems of the
+//! paper's evaluation (§5.1) — HexGen-2's graph-partition scheduler and the
+//! HexGen / DistServe / vLLM baselines — plus the genetic-algorithm variant
+//! used by the §5.3 convergence study. Every planner consumes the same
+//! [`DeploymentSpec`] and returns the same [`Plan`], so harnesses iterate
+//! over `&[&dyn Planner]` instead of calling four bespoke functions.
+
+use crate::baselines::{distserve, hexgen, vllm};
+use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};
+use crate::scheduler::{self, genetic, objective, ConvergencePoint, Objective, Placement};
+
+use super::DeploymentSpec;
+
+/// What a planner decided to run.
+#[derive(Clone, Debug)]
+pub enum PlanKind {
+    /// Disaggregated prefill/decode groups with KV routes (HexGen-2,
+    /// DistServe).
+    Disaggregated(Placement),
+    /// Colocated continuous-batching replicas (HexGen, vLLM), optionally
+    /// with SARATHI-style chunked prefill.
+    Colocated { replicas: Vec<ReplicaConfig>, chunked_prefill: Option<usize> },
+}
+
+/// Common planner output: the deployment decision plus its estimates.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// CLI name of the planner that produced this ("hexgen2", "vllm", ...).
+    pub planner: &'static str,
+    /// Table label ("HEXGEN-2", "VLLM", ...).
+    pub display: &'static str,
+    pub kind: PlanKind,
+    /// Estimated serving throughput, tokens/s.
+    pub est_tokens_per_s: f64,
+    /// Score under the spec's [`Objective`] (higher is better).
+    pub objective_score: f64,
+    /// Planning wall-clock, seconds.
+    pub elapsed_s: f64,
+    /// Convergence trace of the search (empty for one-shot baselines).
+    pub history: Vec<ConvergencePoint>,
+}
+
+/// A deployment planner: turns a [`DeploymentSpec`] into a [`Plan`], or
+/// `None` when no feasible deployment exists.
+pub trait Planner {
+    /// CLI name (`--planner=<name>`).
+    fn name(&self) -> &'static str;
+    /// Paper-table label.
+    fn display_name(&self) -> &'static str;
+    fn plan(&self, spec: &DeploymentSpec) -> Option<Plan>;
+}
+
+/// HexGen-2 (§3): spectral partition → max-flow → guided refinement, ranked
+/// by the spec's objective.
+pub struct HexGen2Planner;
+
+impl Planner for HexGen2Planner {
+    fn name(&self) -> &'static str {
+        "hexgen2"
+    }
+
+    fn display_name(&self) -> &'static str {
+        "HEXGEN-2"
+    }
+
+    fn plan(&self, spec: &DeploymentSpec) -> Option<Plan> {
+        let r = scheduler::schedule(&spec.cluster, &spec.model, &spec.sched_opts())?;
+        Some(Plan {
+            planner: self.name(),
+            display: self.display_name(),
+            est_tokens_per_s: r.placement.tokens_per_s,
+            objective_score: r.placement.objective_score,
+            elapsed_s: r.elapsed_s,
+            history: r.history,
+            kind: PlanKind::Disaggregated(r.placement),
+        })
+    }
+}
+
+/// Genetic-algorithm variant of the HexGen-2 pipeline (§5.3 ablation).
+pub struct GeneticPlanner;
+
+impl Planner for GeneticPlanner {
+    fn name(&self) -> &'static str {
+        "genetic"
+    }
+
+    fn display_name(&self) -> &'static str {
+        "HEXGEN-2 (GA)"
+    }
+
+    fn plan(&self, spec: &DeploymentSpec) -> Option<Plan> {
+        let r = genetic::schedule_genetic(&spec.cluster, &spec.model, &spec.sched_opts())?;
+        Some(Plan {
+            planner: self.name(),
+            display: self.display_name(),
+            est_tokens_per_s: r.placement.tokens_per_s,
+            objective_score: r.placement.objective_score,
+            elapsed_s: r.elapsed_s,
+            history: r.history,
+            kind: PlanKind::Disaggregated(r.placement),
+        })
+    }
+}
+
+/// HexGen (Jiang et al., 2024b): colocated replicas, GA-scheduled. The GA's
+/// internal fitness is colocated throughput (the published algorithm); the
+/// returned plan is re-scored under the spec's objective for comparability.
+pub struct HexGenPlanner;
+
+impl Planner for HexGenPlanner {
+    fn name(&self) -> &'static str {
+        "hexgen"
+    }
+
+    fn display_name(&self) -> &'static str {
+        "HEXGEN"
+    }
+
+    fn plan(&self, spec: &DeploymentSpec) -> Option<Plan> {
+        let generations = if spec.quick { 6 } else { 25 };
+        let p = hexgen::schedule_hexgen(
+            &spec.cluster,
+            &spec.model,
+            spec.workload,
+            spec.seed,
+            generations,
+        )?;
+        Some(Plan {
+            planner: self.name(),
+            display: self.display_name(),
+            est_tokens_per_s: p.tokens_per_s,
+            objective_score: colocated_score(spec, &p.replicas, p.tokens_per_s),
+            elapsed_s: p.elapsed_s,
+            history: Vec::new(),
+            kind: PlanKind::Colocated { replicas: p.replicas, chunked_prefill: None },
+        })
+    }
+}
+
+/// DistServe (Zhong et al., 2024): uniform disaggregated sweep, with each
+/// candidate ranked under the spec's objective.
+pub struct DistServePlanner;
+
+impl Planner for DistServePlanner {
+    fn name(&self) -> &'static str {
+        "distserve"
+    }
+
+    fn display_name(&self) -> &'static str {
+        "DISTSERVE"
+    }
+
+    fn plan(&self, spec: &DeploymentSpec) -> Option<Plan> {
+        let p = distserve::schedule_distserve_with(
+            &spec.cluster,
+            &spec.model,
+            spec.workload,
+            spec.objective,
+        )?;
+        Some(Plan {
+            planner: self.name(),
+            display: self.display_name(),
+            est_tokens_per_s: p.placement.tokens_per_s,
+            objective_score: p.placement.objective_score,
+            elapsed_s: p.elapsed_s,
+            history: Vec::new(),
+            kind: PlanKind::Disaggregated(p.placement),
+        })
+    }
+}
+
+/// vLLM-style baseline (Appendix F): identical colocated replicas at the
+/// best uniform TP degree; `spec.chunked_prefill` enables the Appendix-D
+/// chunked mode.
+pub struct VllmPlanner;
+
+impl Planner for VllmPlanner {
+    fn name(&self) -> &'static str {
+        "vllm"
+    }
+
+    fn display_name(&self) -> &'static str {
+        "VLLM"
+    }
+
+    fn plan(&self, spec: &DeploymentSpec) -> Option<Plan> {
+        let p = vllm::schedule_vllm(&spec.cluster, &spec.model, spec.workload)?;
+        Some(Plan {
+            planner: self.name(),
+            display: self.display_name(),
+            est_tokens_per_s: p.tokens_per_s,
+            objective_score: colocated_score(spec, &p.replicas, p.tokens_per_s),
+            elapsed_s: 0.0,
+            history: Vec::new(),
+            kind: PlanKind::Colocated {
+                replicas: p.replicas,
+                chunked_prefill: spec.chunked_prefill,
+            },
+        })
+    }
+}
+
+/// The four compared systems, in the paper's Table-3 order.
+pub fn standard_planners() -> [&'static dyn Planner; 4] {
+    [&HexGen2Planner, &HexGenPlanner, &DistServePlanner, &VllmPlanner]
+}
+
+/// Resolve a planner by its CLI name.
+pub fn planner_by_name(name: &str) -> Option<&'static dyn Planner> {
+    match name.to_ascii_lowercase().as_str() {
+        "hexgen2" | "ours" => Some(&HexGen2Planner),
+        "hexgen" => Some(&HexGenPlanner),
+        "distserve" => Some(&DistServePlanner),
+        "vllm" => Some(&VllmPlanner),
+        "genetic" | "ga" => Some(&GeneticPlanner),
+        _ => None,
+    }
+}
+
+/// Objective score of a colocated plan. There is no flow network: throughput
+/// is the sum of per-replica colocated estimates, latency the
+/// throughput-weighted macro-round (prefill + full decode) latency, and cost
+/// counts every replica's devices (colocated replicas all serve traffic).
+fn colocated_score(spec: &DeploymentSpec, replicas: &[ReplicaConfig], tokens_per_s: f64) -> f64 {
+    let task = spec.task();
+    match spec.objective {
+        Objective::Throughput => tokens_per_s,
+        Objective::MeanLatency => -colocated_latency(spec, replicas, &task),
+        Objective::SloGoodput { scale } => {
+            let lat = colocated_latency(spec, replicas, &task);
+            if !lat.is_finite() || lat <= 0.0 {
+                return 0.0;
+            }
+            let budget = scale * objective::mean_slo_base(&spec.model, &task);
+            tokens_per_s * (budget / lat).min(1.0)
+        }
+        Objective::CostPerToken => {
+            let cost: f64 = replicas
+                .iter()
+                .flat_map(|r| r.devices())
+                .map(|d| spec.cluster.devices[d].gpu.price_per_hour())
+                .sum();
+            if cost <= 0.0 {
+                0.0
+            } else {
+                tokens_per_s * 3600.0 / cost
+            }
+        }
+    }
+}
+
+/// Throughput-weighted mean request latency of colocated replicas: in steady
+/// state each macro-round prefills a batch then decodes it to completion
+/// (the same model as `baselines::hexgen::colocated_throughput`).
+fn colocated_latency(spec: &DeploymentSpec, replicas: &[ReplicaConfig], task: &TaskProfile) -> f64 {
+    let cm = CostModel::new(&spec.cluster, &spec.model);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for cfg in replicas {
+        let mb = cm.max_decode_batch(cfg, task);
+        if mb == 0 {
+            continue;
+        }
+        let b = mb.min(32);
+        let t = task.with_batch(b);
+        let lat = cm.prefill_latency(cfg, &t) + cm.decode_latency(cfg, &t);
+        if lat <= 0.0 {
+            continue;
+        }
+        let tput = b as f64 * task.s_out / lat;
+        num += tput * lat;
+        den += tput;
+    }
+    if den <= 0.0 {
+        f64::INFINITY
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::settings;
+    use crate::deploy::DeploymentSpec;
+    use crate::model::OPT_30B;
+    use crate::workload::WorkloadKind;
+
+    fn spec(cluster: crate::cluster::Cluster) -> DeploymentSpec {
+        DeploymentSpec::new(cluster, OPT_30B).workload(WorkloadKind::Lpld).quick(true).seed(3)
+    }
+
+    #[test]
+    fn all_four_systems_plan_through_the_trait() {
+        let hom = settings::homogeneous_small();
+        for planner in standard_planners() {
+            let s = spec(hom.clone());
+            let plan = planner.plan(&s).unwrap_or_else(|| panic!("{} failed", planner.name()));
+            assert!(plan.est_tokens_per_s > 0.0, "{} zero estimate", planner.name());
+            assert!(
+                plan.objective_score > 0.0,
+                "{} zero throughput score",
+                planner.name()
+            );
+            match plan.kind {
+                PlanKind::Disaggregated(ref p) => assert!(!p.groups.is_empty()),
+                PlanKind::Colocated { ref replicas, .. } => assert!(!replicas.is_empty()),
+            }
+        }
+    }
+
+    #[test]
+    fn planner_names_resolve() {
+        for planner in standard_planners() {
+            let resolved = planner_by_name(planner.name()).expect("resolves");
+            assert_eq!(resolved.name(), planner.name());
+        }
+        assert!(planner_by_name("genetic").is_some());
+        assert!(planner_by_name("ours").is_some());
+        assert!(planner_by_name("sglang").is_none());
+    }
+
+    #[test]
+    fn colocated_scores_follow_objectives() {
+        let hom = settings::homogeneous_small();
+        let replicas =
+            vec![ReplicaConfig::new(vec![(0..4).collect()], vec![OPT_30B.n_layers])];
+        let s = spec(hom);
+        let tput = 500.0;
+        assert_eq!(colocated_score(&s, &replicas, tput), tput);
+        let lat_score =
+            colocated_score(&s.clone().objective(Objective::MeanLatency), &replicas, tput);
+        assert!(lat_score < 0.0 && lat_score.is_finite());
+        let cost_score =
+            colocated_score(&s.clone().objective(Objective::CostPerToken), &replicas, tput);
+        assert!(cost_score > 0.0);
+        let slo_score = colocated_score(
+            &s.objective(Objective::SloGoodput { scale: 5.0 }),
+            &replicas,
+            tput,
+        );
+        assert!(slo_score > 0.0 && slo_score <= tput + 1e-9);
+    }
+}

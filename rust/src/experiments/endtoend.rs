@@ -11,7 +11,8 @@ use crate::workload::OFFLINE_KINDS;
 use super::{offline_run, online_rate, online_run, ExpOpts, System};
 
 /// One row of the Fig. 6/7 grid: system × setting → 4 offline workloads +
-/// online, all in tokens/s.
+/// online, all in tokens/s (every cell planned and run through the deploy
+/// API via the system's planner).
 fn grid_row(
     sys: System,
     setting: &str,
@@ -19,15 +20,17 @@ fn grid_row(
     opts: &ExpOpts,
 ) -> Option<Vec<String>> {
     let cluster = settings::by_name(setting)?;
+    let planner = sys.planner();
     let mut cells = vec![setting.to_string(), sys.name().to_string()];
     for kind in OFFLINE_KINDS {
-        let t = offline_run(sys, &cluster, model, kind, opts)
+        let t = offline_run(planner, &cluster, model, kind, opts)
             .map(|r| r.tokens_per_s())
             .unwrap_or(0.0);
         cells.push(format!("{t:.0}"));
     }
     let rate = online_rate(&cluster, model, opts);
-    let t = online_run(sys, &cluster, model, rate, opts).map(|r| r.tokens_per_s()).unwrap_or(0.0);
+    let t =
+        online_run(planner, &cluster, model, rate, opts).map(|r| r.tokens_per_s()).unwrap_or(0.0);
     cells.push(format!("{t:.0}"));
     Some(cells)
 }
@@ -60,7 +63,7 @@ pub fn fig8_latency(model: &LlmSpec, het_settings: &[&str], opts: &ExpOpts) -> T
     let mut run = |sys: System, setting: &str| {
         let Some(cluster) = settings::by_name(setting) else { return };
         let rate = online_rate(&cluster, model, opts);
-        if let Some(rep) = online_run(sys, &cluster, model, rate, opts) {
+        if let Some(rep) = online_run(sys.planner(), &cluster, model, rate, opts) {
             t.row(&[
                 setting.to_string(),
                 sys.name().to_string(),
@@ -90,10 +93,10 @@ pub fn fig9_budget(model: &LlmSpec, opts: &ExpOpts) -> Table {
         "ratio",
     ]);
     for kind in OFFLINE_KINDS {
-        let a = offline_run(System::HexGen2, &het5, model, kind, opts)
+        let a = offline_run(System::HexGen2.planner(), &het5, model, kind, opts)
             .map(|r| r.tokens_per_s())
             .unwrap_or(0.0);
-        let b = offline_run(System::DistServe, &hom, model, kind, opts)
+        let b = offline_run(System::DistServe.planner(), &hom, model, kind, opts)
             .map(|r| r.tokens_per_s())
             .unwrap_or(0.0);
         t.row(&[
@@ -106,7 +109,7 @@ pub fn fig9_budget(model: &LlmSpec, opts: &ExpOpts) -> Table {
     t
 }
 
-/// Summary ratios used by EXPERIMENTS.md: geometric-mean HexGen-2/baseline
+/// Summary ratios (DESIGN.md §6): geometric-mean HexGen-2/baseline
 /// speedups over a grid table produced by `fig6_7_grid`.
 pub fn speedup_summary(t: &Table) -> Vec<(String, f64)> {
     let rows = t.rows_for_test();

@@ -1,7 +1,13 @@
 //! Experiment harnesses: one runner per table/figure of the paper's
 //! evaluation (§5 + appendices). Each returns printable rows so the benches
 //! (`rust/benches/`) and the CLI (`hexgen2 experiments <id>`) regenerate the
-//! paper artifacts; EXPERIMENTS.md records paper-vs-measured.
+//! paper artifacts; DESIGN.md §6 records the validation protocol.
+//!
+//! Every (system, cluster, workload) cell goes through the unified
+//! [`deploy`](crate::deploy) API: a [`DeploymentSpec`] planned by the
+//! system's [`Planner`] and executed on the simulator [`Backend`] — the
+//! harnesses iterate over planners instead of calling bespoke per-system
+//! functions.
 
 pub mod batching;
 pub mod convergence;
@@ -9,15 +15,19 @@ pub mod endtoend;
 pub mod resched;
 pub mod tables;
 
-use crate::baselines::{distserve, hexgen, vllm};
 use crate::cluster::Cluster;
+use crate::deploy::{
+    Backend, DeploymentSpec, DistServePlanner, HexGen2Planner, HexGenPlanner, Planner, SimBackend,
+    VllmPlanner,
+};
 use crate::model::LlmSpec;
 use crate::scheduler::{self, ScheduleOptions, SwapMode};
-use crate::simulator::{run_colocated, run_disaggregated, SimReport};
+use crate::simulator::SimReport;
 use crate::workload::{Trace, WorkloadKind};
 
 /// Shared experiment options. `quick` shrinks traces and search budgets for
-/// CI-speed runs (`cargo bench` default); full mode feeds EXPERIMENTS.md.
+/// CI-speed runs (`cargo bench` default); full mode feeds the DESIGN.md §6
+/// validation protocol.
 #[derive(Clone, Copy, Debug)]
 pub struct ExpOpts {
     pub quick: bool,
@@ -96,59 +106,78 @@ impl System {
             System::Vllm => "VLLM",
         }
     }
+
+    /// The system's planner in the unified deploy API.
+    pub fn planner(self) -> &'static dyn Planner {
+        match self {
+            System::HexGen2 => &HexGen2Planner,
+            System::HexGen => &HexGenPlanner,
+            System::DistServe => &DistServePlanner,
+            System::Vllm => &VllmPlanner,
+        }
+    }
 }
 
-/// Run one (system, cluster, model, workload) cell: offline trace → tokens/s.
+/// The deployment spec for one experiment cell (quick budgets mirror
+/// [`ExpOpts::sched_opts`]).
+pub fn spec_for(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    kind: WorkloadKind,
+    opts: &ExpOpts,
+) -> DeploymentSpec {
+    DeploymentSpec::new(cluster.clone(), *model).workload(kind).seed(opts.seed).quick(opts.quick)
+}
+
+/// Run one (planner, cluster, model, workload) cell: offline trace → tokens/s.
 pub fn offline_run(
-    sys: System,
+    planner: &dyn Planner,
     cluster: &Cluster,
     model: &LlmSpec,
     kind: WorkloadKind,
     opts: &ExpOpts,
 ) -> Option<SimReport> {
     let trace = Trace::offline(kind, opts.offline_n(), opts.seed.wrapping_add(17));
-    run_trace(sys, cluster, model, kind, &trace, opts)
+    run_trace(planner, cluster, model, kind, &trace, opts)
 }
 
 /// Run one online cell at `rate` req/s.
 pub fn online_run(
-    sys: System,
+    planner: &dyn Planner,
     cluster: &Cluster,
     model: &LlmSpec,
     rate: f64,
     opts: &ExpOpts,
 ) -> Option<SimReport> {
     let trace = Trace::online(WorkloadKind::Online, rate, opts.online_duration(), opts.seed + 29);
-    run_trace(sys, cluster, model, WorkloadKind::Online, &trace, opts)
+    run_trace(planner, cluster, model, WorkloadKind::Online, &trace, opts)
 }
 
 fn run_trace(
-    sys: System,
+    planner: &dyn Planner,
     cluster: &Cluster,
     model: &LlmSpec,
     kind: WorkloadKind,
     trace: &Trace,
     opts: &ExpOpts,
 ) -> Option<SimReport> {
-    match sys {
-        System::HexGen2 => {
-            let r = scheduler::schedule(cluster, model, &opts.sched_opts(kind))?;
-            Some(run_disaggregated(cluster, model, &r.placement, trace))
-        }
-        System::HexGen => {
-            let plan =
-                hexgen::schedule_hexgen(cluster, model, kind, opts.seed, opts.ga_generations())?;
-            Some(run_colocated(cluster, model, &plan.replicas, trace, None))
-        }
-        System::DistServe => {
-            let plan = distserve::schedule_distserve(cluster, model, kind)?;
-            Some(run_disaggregated(cluster, model, &plan.placement, trace))
-        }
-        System::Vllm => {
-            let plan = vllm::schedule_vllm(cluster, model, kind)?;
-            Some(run_colocated(cluster, model, &plan.replicas, trace, None))
-        }
-    }
+    let dep = spec_for(cluster, model, kind, opts).plan(planner).ok()?;
+    dep.run(&SimBackend, trace).ok()
+}
+
+/// Run one cell on an arbitrary backend (rescheduling-enabled simulation,
+/// live coordinator) — same path, different substrate.
+pub fn run_on_backend(
+    planner: &dyn Planner,
+    backend: &dyn Backend,
+    cluster: &Cluster,
+    model: &LlmSpec,
+    kind: WorkloadKind,
+    trace: &Trace,
+    opts: &ExpOpts,
+) -> Option<SimReport> {
+    let dep = spec_for(cluster, model, kind, opts).plan(planner).ok()?;
+    dep.run(backend, trace).ok()
 }
 
 /// Online arrival rate for a cluster: 75% of HexGen-2's estimated peak
@@ -205,7 +234,7 @@ mod tests {
         let opts = ExpOpts { quick: true, seed: 1 };
         let hom = settings::homogeneous_small();
         for sys in [System::HexGen2, System::HexGen, System::DistServe, System::Vllm] {
-            let rep = offline_run(sys, &hom, &OPT_30B, WorkloadKind::Lpld, &opts)
+            let rep = offline_run(sys.planner(), &hom, &OPT_30B, WorkloadKind::Lpld, &opts)
                 .unwrap_or_else(|| panic!("{sys:?} failed"));
             assert!(rep.tokens_per_s() > 0.0, "{sys:?} zero throughput");
             assert_eq!(rep.records.len(), opts.offline_n(), "{sys:?} lost requests");

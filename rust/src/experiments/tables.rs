@@ -10,6 +10,7 @@ use std::time::Instant;
 
 use crate::cluster::settings;
 use crate::baselines::vllm;
+use crate::deploy::{DistServePlanner, HexGen2Planner, HexGenPlanner, Planner, VllmPlanner};
 use crate::model::LlmSpec;
 use crate::simulator::run_colocated;
 use crate::util::bench::Table;
@@ -34,27 +35,29 @@ pub fn table2_placement(setting: &str, model: &LlmSpec, opts: &ExpOpts) -> Optio
 }
 
 /// Table 3: HexGen-2 & HexGen on het1; DistServe & vLLM on homogeneous —
-/// across the four offline workloads + online (tokens/s).
+/// across the four offline workloads + online (tokens/s). All four systems
+/// run through the single [`Planner`] trait: the harness iterates over
+/// `&[&dyn Planner]` instead of calling four bespoke functions.
 pub fn table3_frameworks(model: &LlmSpec, opts: &ExpOpts) -> Table {
     let het1 = settings::het1();
     let hom = settings::homogeneous();
     let mut t = Table::new(&["setting", "system", "HPLD", "HPHD", "LPHD", "LPLD", "Online"]);
-    let combos: [(&str, System, &crate::cluster::Cluster); 4] = [
-        ("het1", System::HexGen2, &het1),
-        ("het1", System::HexGen, &het1),
-        ("homogeneous", System::DistServe, &hom),
-        ("homogeneous", System::Vllm, &hom),
+    let combos: [(&str, &crate::cluster::Cluster, &dyn Planner); 4] = [
+        ("het1", &het1, &HexGen2Planner),
+        ("het1", &het1, &HexGenPlanner),
+        ("homogeneous", &hom, &DistServePlanner),
+        ("homogeneous", &hom, &VllmPlanner),
     ];
-    for (name, sys, cluster) in combos {
-        let mut cells = vec![name.to_string(), sys.name().to_string()];
+    for (name, cluster, planner) in combos {
+        let mut cells = vec![name.to_string(), planner.display_name().to_string()];
         for kind in OFFLINE_KINDS {
-            let v = offline_run(sys, cluster, model, kind, opts)
+            let v = offline_run(planner, cluster, model, kind, opts)
                 .map(|r| r.tokens_per_s())
                 .unwrap_or(0.0);
             cells.push(format!("{v:.0}"));
         }
         let rate = online_rate(cluster, model, opts);
-        let v = online_run(sys, cluster, model, rate, opts)
+        let v = online_run(planner, cluster, model, rate, opts)
             .map(|r| r.tokens_per_s())
             .unwrap_or(0.0);
         cells.push(format!("{v:.0}"));
@@ -70,7 +73,9 @@ pub fn table4_homogeneous(model: &LlmSpec, opts: &ExpOpts) -> Table {
     for kind in OFFLINE_KINDS {
         let mut cells = vec![kind.name().to_string()];
         for sys in [System::HexGen2, System::DistServe, System::HexGen] {
-            let v = offline_run(sys, &c, model, kind, opts).map(|r| r.tokens_per_s()).unwrap_or(0.0);
+            let v = offline_run(sys.planner(), &c, model, kind, opts)
+                .map(|r| r.tokens_per_s())
+                .unwrap_or(0.0);
             cells.push(format!("{v:.0}"));
         }
         t.row(&cells);

@@ -2,17 +2,23 @@
 //!
 //! A from-scratch reproduction of *HexGen-2: Disaggregated Generative
 //! Inference of LLMs in Heterogeneous Environment* (ICLR 2025) as a
-//! three-layer Rust + JAX + Pallas system. See DESIGN.md for the full
-//! inventory and EXPERIMENTS.md for paper-vs-measured results.
+//! three-layer Rust + JAX + Pallas system. See DESIGN.md for the layer
+//! inventory, the unified `deploy` API, and the paper-vs-reproduction
+//! deviations.
 //!
 //! Layering:
 //! - **Layer 3 (this crate)**: the scheduling algorithm (§3 of the paper:
-//!   graph partition → max-flow → iterative refinement), the online
-//!   rescheduler (`rescheduler`: drift monitoring → warm-started re-plan →
-//!   priced migration, closing the §3.3 per-period loop on live traffic),
-//!   the disaggregated serving coordinator, the discrete-event cluster
+//!   graph partition → max-flow → iterative refinement) with pluggable
+//!   [`Objective`](scheduler::Objective)s, the online rescheduler
+//!   (`rescheduler`: drift monitoring → warm-started re-plan → priced
+//!   migration, closing the §3.3 per-period loop on live traffic), the
+//!   disaggregated serving coordinator, the discrete-event cluster
 //!   simulator (including mid-trace placement switches), baselines, and the
-//!   experiment harnesses.
+//!   experiment harnesses — all tied together by the [`deploy`] API: one
+//!   [`Planner`](deploy::Planner) trait over every system and one
+//!   [`Backend`](deploy::Backend) trait over simulation and live serving,
+//!   so `spec.plan(planner)?.run(backend, &trace)` is the single path every
+//!   CLI subcommand, example, bench, and experiment goes through.
 //! - **Layer 2/1 (python/compile)**: the JAX transformer + Pallas kernels,
 //!   AOT-lowered to HLO text once; `runtime` executes those artifacts via
 //!   PJRT with Python never on the request path.
@@ -21,6 +27,7 @@ pub mod baselines;
 pub mod cluster;
 pub mod coordinator;
 pub mod costmodel;
+pub mod deploy;
 pub mod experiments;
 pub mod model;
 pub mod rescheduler;

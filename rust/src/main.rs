@@ -11,13 +11,13 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use hexgen2::baselines::{distserve, hexgen, vllm};
 use hexgen2::cluster::settings;
 use hexgen2::coordinator::{self, CoordinatorConfig, LiveRequest};
+use hexgen2::deploy::{self, DeploymentSpec, Objective, ReschedBackend, SimBackend};
 use hexgen2::experiments::{self, ExpOpts};
 use hexgen2::model::LlmSpec;
-use hexgen2::scheduler::{self, ScheduleOptions, SwapMode};
-use hexgen2::simulator::{run_colocated, run_disaggregated, SimReport};
+use hexgen2::scheduler::SwapMode;
+use hexgen2::simulator::SimReport;
 use hexgen2::util::args::Args;
 use hexgen2::util::json;
 use hexgen2::util::rng::Rng;
@@ -25,7 +25,7 @@ use hexgen2::workload::{Trace, WorkloadKind};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, &["quick", "full", "verbose", "no-refine"]);
+    let args = Args::parse(&argv, &["quick", "full", "verbose", "no-refine", "json", "resched"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match run(cmd, &args) {
         Ok(()) => 0,
@@ -51,6 +51,49 @@ fn model_of(args: &Args) -> Result<LlmSpec> {
 fn workload_of(args: &Args) -> Result<WorkloadKind> {
     let name = args.get_or("workload", "online");
     WorkloadKind::from_name(name).ok_or_else(|| anyhow!("unknown workload {name}"))
+}
+
+fn objective_of(args: &Args) -> Result<Objective> {
+    let name = args.get_or("objective", "throughput");
+    Objective::from_name(name).ok_or_else(|| {
+        anyhow!("unknown objective {name} (try: throughput | slo-goodput[:SCALE] | mean-latency | cost-per-token)")
+    })
+}
+
+/// Build the deployment spec shared by `schedule` and `simulate`.
+fn spec_of(args: &Args) -> Result<DeploymentSpec> {
+    let mut spec = DeploymentSpec::new(cluster_of(args)?, model_of(args)?)
+        .workload(workload_of(args)?)
+        .objective(objective_of(args)?)
+        .seed(args.get_u64("seed", 0))
+        .quick(args.has("quick"))
+        .chunked_prefill(args.get("chunk").and_then(|c| c.parse().ok()));
+    if let Some(r) = args.get("rounds").and_then(|s| s.parse().ok()) {
+        spec = spec.max_rounds(r);
+    }
+    if args.has("no-refine") {
+        spec = spec.swap_mode(SwapMode::None);
+    }
+    Ok(spec)
+}
+
+/// Resolve the planner: `--planner` wins; `--system` and `--algorithm` are
+/// kept as aliases (`--algorithm random` selects the random-swap refinement
+/// variant of the hexgen2 planner).
+fn planner_of(args: &Args, spec: &mut DeploymentSpec) -> Result<&'static dyn deploy::Planner> {
+    let name = match args.get("planner").or_else(|| args.get("system")) {
+        Some(n) => n.to_string(),
+        None => match args.get_or("algorithm", "ours") {
+            "ours" => "hexgen2".to_string(),
+            "random" => {
+                spec.swap_mode = SwapMode::Random;
+                "hexgen2".to_string()
+            }
+            other => other.to_string(),
+        },
+    };
+    deploy::planner_by_name(&name)
+        .ok_or_else(|| anyhow!("unknown planner {name} (try: hexgen2 | hexgen | distserve | vllm | genetic)"))
 }
 
 fn print_report(label: &str, rep: &SimReport) {
@@ -92,36 +135,31 @@ fn parse_phases(s: &str) -> Result<Vec<(WorkloadKind, f64, f64)>> {
 fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "schedule" => {
-            let cluster = cluster_of(args)?;
-            let model = model_of(args)?;
-            let mut opts = ScheduleOptions::new(workload_of(args)?);
-            opts.seed = args.get_u64("seed", 0);
-            opts.max_rounds = args.get_usize("rounds", opts.max_rounds);
-            if args.has("no-refine") {
-                opts.swap_mode = SwapMode::None;
+            let mut spec = spec_of(args)?;
+            let planner = planner_of(args, &mut spec)?;
+            let dep = spec.plan(planner)?;
+            if args.has("json") {
+                println!("{}", dep.plan_json().to_string_pretty());
+                return Ok(());
             }
-            match args.get_or("algorithm", "ours") {
-                "ours" => {}
-                "random" => opts.swap_mode = SwapMode::Random,
-                "genetic" => {
-                    let r = scheduler::genetic::schedule_genetic(&cluster, &model, &opts)
-                        .ok_or_else(|| anyhow!("GA found no feasible placement"))?;
-                    println!("{}", r.placement.describe(&cluster));
-                    return Ok(());
-                }
-                other => bail!("unknown algorithm {other}"),
-            }
-            let r = scheduler::schedule(&cluster, &model, &opts)
-                .ok_or_else(|| anyhow!("no feasible placement"))?;
             println!(
-                "scheduled {} on {} in {:.2}s ({} rounds)",
-                model.name, cluster.name, r.elapsed_s, r.rounds
+                "planned {} on {} with {} (objective {}) in {:.2}s: est {:.0} tokens/s, score {:.4}",
+                dep.spec.model.name,
+                dep.spec.cluster.name,
+                planner.display_name(),
+                dep.spec.objective.name(),
+                dep.plan.elapsed_s,
+                dep.plan.est_tokens_per_s,
+                dep.plan.objective_score,
             );
-            println!("{}", r.placement.describe(&cluster));
-            if args.has("verbose") {
+            println!("{}", dep.describe());
+            if args.has("verbose") && !dep.plan.history.is_empty() {
                 println!("convergence:");
-                for p in &r.history {
-                    println!("  t={:.2}s round={} est={:.0} tok/s", p.elapsed_s, p.round, p.tokens_per_s);
+                for p in &dep.plan.history {
+                    println!(
+                        "  t={:.2}s round={} est={:.0} tok/s score={:.4}",
+                        p.elapsed_s, p.round, p.tokens_per_s, p.score
+                    );
                 }
             }
         }
@@ -155,51 +193,48 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             experiments::resched::print_summary(&cs);
         }
         "simulate" => {
-            let cluster = cluster_of(args)?;
-            let model = model_of(args)?;
-            let kind = workload_of(args)?;
+            let mut spec = spec_of(args)?;
+            let planner = planner_of(args, &mut spec)?;
+            let kind = spec.workload;
+            let seed = spec.seed;
             let n = args.get_usize("requests", 100);
-            let seed = args.get_u64("seed", 0);
-            let sys = args.get_or("system", "hexgen2");
+            let json_out = args.has("json");
             let trace = if kind == WorkloadKind::Online {
                 let opts = ExpOpts { quick: true, seed };
                 let rate = args
                     .get("rate")
                     .and_then(|s| s.parse().ok())
-                    .unwrap_or_else(|| experiments::online_rate(&cluster, &model, &opts));
-                println!("online rate: {rate:.2} req/s");
+                    .unwrap_or_else(|| experiments::online_rate(&spec.cluster, &spec.model, &opts));
+                if !json_out {
+                    println!("online rate: {rate:.2} req/s");
+                }
                 Trace::online(kind, rate, args.get_f64("duration", 120.0), seed)
             } else {
                 Trace::offline(kind, n, seed)
             };
-            let rep = match sys {
-                "hexgen2" => {
-                    let mut opts = ScheduleOptions::new(kind);
-                    opts.seed = seed;
-                    let r = scheduler::schedule(&cluster, &model, &opts)
-                        .ok_or_else(|| anyhow!("no placement"))?;
-                    println!("placement:\n{}", r.placement.describe(&cluster));
-                    run_disaggregated(&cluster, &model, &r.placement, &trace)
-                }
-                "hexgen" => {
-                    let plan = hexgen::schedule_hexgen(&cluster, &model, kind, seed, 15)
-                        .ok_or_else(|| anyhow!("no hexgen plan"))?;
-                    run_colocated(&cluster, &model, &plan.replicas, &trace, None)
-                }
-                "distserve" => {
-                    let plan = distserve::schedule_distserve(&cluster, &model, kind)
-                        .ok_or_else(|| anyhow!("no distserve plan"))?;
-                    run_disaggregated(&cluster, &model, &plan.placement, &trace)
-                }
-                "vllm" => {
-                    let plan = vllm::schedule_vllm(&cluster, &model, kind)
-                        .ok_or_else(|| anyhow!("no vllm plan"))?;
-                    let chunk = args.get("chunk").and_then(|c| c.parse().ok());
-                    run_colocated(&cluster, &model, &plan.replicas, &trace, chunk)
-                }
-                other => bail!("unknown system {other}"),
+            let dep = spec.plan(planner)?;
+            if !json_out {
+                println!("plan:\n{}", dep.describe());
+            }
+            let rep = if args.has("resched") {
+                dep.run(&ReschedBackend::default(), &trace)?
+            } else {
+                dep.run(&SimBackend, &trace)?
             };
-            print_report(&format!("{sys} on {} ({})", cluster.name, kind.name()), &rep);
+            if json_out {
+                println!("{}", dep.report_json(&rep).to_string_pretty());
+            } else {
+                print_report(
+                    &format!(
+                        "{} on {} ({}, objective {})",
+                        planner.name(),
+                        dep.spec.cluster.name,
+                        kind.name(),
+                        dep.spec.objective.name()
+                    ),
+                    &rep,
+                );
+            }
         }
         "serve" => {
             let mut cfg = CoordinatorConfig::new(args.get_or("model", "tiny"));
@@ -287,17 +322,29 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             println!(
                 "hexgen2 — disaggregated LLM inference over heterogeneous GPUs (ICLR'25 reproduction)\n\n\
                  usage: hexgen2 <command> [options]\n\n\
+                 Every planning command goes through the unified deploy API: pick a --planner\n\
+                 (which system decides the placement) and an --objective (what it optimizes).\n\n\
+                 \x20 --planner    hexgen2 | hexgen | distserve | vllm | genetic  (default hexgen2)\n\
+                 \x20 --objective  throughput | slo-goodput[:SCALE] | mean-latency | cost-per-token\n\
+                 \x20              (default throughput — the paper's §3 max-flow objective)\n\n\
                  commands:\n\
-                 \x20 schedule    --setting het1 --model llama2-70b --workload online [--algorithm ours|random|genetic] [--verbose]\n\
+                 \x20 schedule    --setting het1 --model llama2-70b --workload online [--planner P]\n\
+                 \x20             [--objective O] [--no-refine] [--rounds N] [--json] [--verbose]\n\
+                 \x20             plan only: print the placement (Table-2 style) or a JSON report.\n\
                  \x20 reschedule  --setting case_study --model opt30b [--phases SPEC] [--seed N] [--full]\n\
-                 \x20             online rescheduling case study on a phased (drifting) trace: detects the\n\
-                 \x20             workload shift, warm-starts a re-plan from the incumbent placement, prices\n\
-                 \x20             the migration, and compares static vs rescheduled per-phase throughput.\n\
+                 \x20             online rescheduling case study on a phased (drifting) trace: detects every\n\
+                 \x20             sustained workload shift, warm-starts re-plans from the incumbent placement,\n\
+                 \x20             prices each migration, and compares static vs rescheduled per-phase\n\
+                 \x20             throughput. Oscillating traces are handled; the hysteresis bounds the\n\
+                 \x20             switch count.\n\
                  \x20             SPEC is KIND:RATE:DURATION[,KIND:RATE:DURATION...] — per phase, the workload\n\
                  \x20             class (HPLD|HPHD|LPHD|LPLD|online), Poisson rate in req/s, and seconds,\n\
-                 \x20             e.g. --phases LPHD:2.5:300,HPLD:2.5:600. Default: LPHD->HPLD at 75% of the\n\
-                 \x20             static placement's estimated peak.\n\
-                 \x20 simulate    --setting het1 --model opt-30b --workload hphd --system hexgen2|hexgen|distserve|vllm [--requests N]\n\
+                 \x20             e.g. --phases LPHD:2.5:300,HPLD:2.5:600,LPHD:2.5:300. Default: LPHD->HPLD\n\
+                 \x20             at 75% of the static placement's estimated peak.\n\
+                 \x20 simulate    --setting het1 --model opt-30b --workload hphd [--planner P] [--objective O]\n\
+                 \x20             [--requests N] [--resched] [--json] [--chunk TOKENS]\n\
+                 \x20             plan + run on the discrete-event simulator (--resched enables the online\n\
+                 \x20             rescheduling loop mid-trace).\n\
                  \x20 serve       --model tiny --requests 16 --prefill 2 --decode 1 [--throttle-mbps N] [--verbose]\n\
                  \x20 workload    --workload hpld --n 10\n\
                  \x20 experiments <fig1|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table2|table3|table4|table5|appd|all> [--full]\n\

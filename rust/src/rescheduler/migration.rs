@@ -18,7 +18,7 @@
 use crate::cluster::Cluster;
 use crate::costmodel::{CostModel, TaskProfile, PREFILL_SATURATION_TOKENS};
 use crate::model::LlmSpec;
-use crate::scheduler::Placement;
+use crate::scheduler::{Objective, Placement};
 
 /// Priced migration from an incumbent placement to a candidate.
 #[derive(Clone, Copy, Debug)]
@@ -47,7 +47,9 @@ fn devset(devices: &[usize]) -> Vec<usize> {
 }
 
 /// Price a switch `old` → `new` for traffic described by `task`, against a
-/// scheduling period of `period` seconds.
+/// scheduling period of `period` seconds. The net-benefit verdict compares
+/// the two placements under `objective` — the same criterion the re-plan was
+/// ranked by — so the gate and the warm-start agree on what "better" means.
 pub fn plan(
     cluster: &Cluster,
     model: &LlmSpec,
@@ -55,6 +57,7 @@ pub fn plan(
     new: &Placement,
     task: &TaskProfile,
     period: f64,
+    objective: Objective,
 ) -> MigrationPlan {
     let cm = CostModel::new(cluster, model);
 
@@ -118,9 +121,26 @@ pub fn plan(
     let total_delay_s = drain_s + transfer_s;
     let tokens_lost = old.tokens_per_s * total_delay_s;
     let gain_tokens = (new.tokens_per_s - old.tokens_per_s) * period;
-    let migrate = new.tokens_per_s > old.tokens_per_s
-        && total_delay_s.is_finite()
-        && gain_tokens > tokens_lost;
+    let migrate = total_delay_s.is_finite()
+        && match objective {
+            // Paper-default gate: the throughput gain over one period must
+            // amortize the tokens foregone while draining + transferring.
+            Objective::Throughput => {
+                new.tokens_per_s > old.tokens_per_s && gain_tokens > tokens_lost
+            }
+            // Other objectives: require a >1% score improvement under the
+            // chosen objective (the same hysteresis role the token
+            // amortization plays for throughput — never flap onto a
+            // marginally-better placement). Both placements are re-scored
+            // under the *current* task: the incumbent's stored score was
+            // computed under the workload it was planned for, which may
+            // differ from the drifted traffic being priced here.
+            _ => {
+                let ns = objective.score(cluster, model, task, new);
+                let os = objective.score(cluster, model, task, old);
+                ns > os + os.abs() * 0.01
+            }
+        };
     MigrationPlan { drain_s, kv_bytes, transfer_s, total_delay_s, tokens_lost, gain_tokens, migrate }
 }
 
@@ -145,7 +165,7 @@ mod tests {
     fn identity_switch_refused() {
         let (c, p) = incumbent();
         let task = scheduler::task_for(WorkloadKind::Lphd);
-        let m = plan(&c, &OPT_30B, &p, &p, &task, 600.0);
+        let m = plan(&c, &OPT_30B, &p, &p, &task, 600.0, Objective::Throughput);
         assert!(!m.migrate, "zero-gain switch approved: {m:?}");
         assert!(m.drain_s > 0.0, "no drain cost modeled");
         // Same device sets serve decode: no KV moves.
@@ -160,7 +180,7 @@ mod tests {
         let mut better = p.clone();
         // A 0.001% projected gain can never amortize a real drain cost.
         better.tokens_per_s = p.tokens_per_s * 1.00001;
-        let m = plan(&c, &OPT_30B, &p, &better, &task, 600.0);
+        let m = plan(&c, &OPT_30B, &p, &better, &task, 600.0, Objective::Throughput);
         assert!(m.tokens_lost > 0.0);
         assert!(m.gain_tokens > 0.0);
         assert!(!m.migrate, "drain+transfer cost exceeds gain yet approved: {m:?}");
@@ -176,7 +196,7 @@ mod tests {
         for g in better.groups.iter_mut() {
             g.is_prefill = !g.is_prefill;
         }
-        let m = plan(&c, &OPT_30B, &p, &better, &task, 600.0);
+        let m = plan(&c, &OPT_30B, &p, &better, &task, 600.0, Objective::Throughput);
         assert!(m.kv_bytes > 0.0, "phase flip should move KV: {m:?}");
         assert!(m.transfer_s > 0.0);
         assert!(m.migrate, "2x gain refused: {m:?}");

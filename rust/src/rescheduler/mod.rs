@@ -32,7 +32,15 @@ pub use monitor::{DriftDetector, DriftEvent, DriftKind, MonitorConfig, WindowSta
 use crate::cluster::Cluster;
 use crate::model::LlmSpec;
 use crate::scheduler::{self, Placement, ScheduleOptions, ScheduleResult};
-use crate::workload::WorkloadKind;
+use crate::simulator::PlacementSwitch;
+use crate::workload::{Trace, WorkloadKind};
+
+/// Modeled online re-planning budget, simulated seconds: an approved switch
+/// lands this long after its drift was detected. A fixed model — not the
+/// host's measured wall-clock — keeps seeded simulations deterministic
+/// across machines; the *measured* warm/cold re-plan times are reported
+/// separately by the case-study harness.
+pub const MODELED_REPLAN_S: f64 = 10.0;
 
 /// Streaming sensor: one monitor + detector pair fed per-request.
 pub struct Rescheduler {
@@ -60,6 +68,7 @@ impl Rescheduler {
 
 /// Outcome of reacting to one drift event: the warm re-plan and the priced
 /// migration decision.
+#[derive(Clone)]
 pub struct ReplanOutcome {
     pub to_kind: WorkloadKind,
     pub result: ScheduleResult,
@@ -67,8 +76,8 @@ pub struct ReplanOutcome {
 }
 
 /// React to a drift event: warm-start a re-plan for the observed workload
-/// and price the migration. The caller switches placements only when
-/// `outcome.migration.migrate` holds.
+/// and price the migration, both under `base.objective`. The caller
+/// switches placements only when `outcome.migration.migrate` holds.
 pub fn replan_for_drift(
     cluster: &Cluster,
     model: &LlmSpec,
@@ -81,9 +90,72 @@ pub fn replan_for_drift(
     opts.workload = to_kind;
     let result = warmstart::replan(cluster, model, &opts, incumbent)?;
     let task = scheduler::task_for(to_kind);
-    let migration =
-        migration::plan(cluster, model, incumbent, &result.placement, &task, opts.period);
+    let migration = migration::plan(
+        cluster,
+        model,
+        incumbent,
+        &result.placement,
+        &task,
+        opts.period,
+        opts.objective,
+    );
     Some(ReplanOutcome { to_kind, result, migration })
+}
+
+/// Everything one closed-loop pass over a trace produced: the drift events
+/// in detection order, the re-plan outcome attempted for each, and the
+/// *approved* placement switches — sorted, non-overlapping, and ready for
+/// [`run_disaggregated_with_resched`](crate::simulator::run_disaggregated_with_resched).
+pub struct DriveOutcome {
+    pub events: Vec<DriftEvent>,
+    /// One entry per event: `None` when the warm re-plan found no placement.
+    pub outcomes: Vec<Option<ReplanOutcome>>,
+    pub switches: Vec<PlacementSwitch>,
+}
+
+/// Run the full §3.3 online loop over a trace's arrival stream: sense every
+/// sustained drift (not just the first), warm-start a re-plan from the
+/// *current* incumbent, price each migration, and emit the approved
+/// switches. Handles oscillating traces: after an approved switch the new
+/// placement becomes the incumbent, and the hysteresis detector re-baselines,
+/// so the switch count is bounded by the number of real sustained shifts.
+pub fn drive(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    initial: &Placement,
+    trace: &Trace,
+    mcfg: MonitorConfig,
+    base: &ScheduleOptions,
+    modeled_replan_s: f64,
+) -> DriveOutcome {
+    let mut sensor = Rescheduler::new(mcfg);
+    let mut incumbent = initial.clone();
+    let mut events = Vec::new();
+    let mut outcomes = Vec::new();
+    let mut switches: Vec<PlacementSwitch> = Vec::new();
+    for r in &trace.requests {
+        let Some(e) = sensor.observe(r.arrival, r.input_len, r.output_len) else { continue };
+        events.push(e);
+        let out = replan_for_drift(cluster, model, &incumbent, &e, base);
+        if let Some(o) = &out {
+            if o.migration.migrate {
+                // The switch lands after the modeled re-planning budget, and
+                // never before the previous switch has fully activated (the
+                // simulator requires non-overlapping switches).
+                let floor = switches.last().map(|s| s.at + s.delay).unwrap_or(0.0);
+                let at = (e.at + modeled_replan_s).max(floor);
+                incumbent = o.result.placement.clone();
+                switches.push(PlacementSwitch {
+                    at,
+                    delay: o.migration.total_delay_s,
+                    placement: o.result.placement.clone(),
+                    workload: Some(o.to_kind),
+                });
+            }
+        }
+        outcomes.push(out);
+    }
+    DriveOutcome { events, outcomes, switches }
 }
 
 #[cfg(test)]
@@ -106,7 +178,7 @@ mod tests {
 
         let spec = [(WorkloadKind::Lphd, 4.0, 90.0), (WorkloadKind::Hpld, 4.0, 90.0)];
         let trace = Trace::phases(&spec, 3);
-        let cfg = MonitorConfig { window: 20.0, min_samples: 15, dwell: 10.0, rate_band: 0.6 };
+        let cfg = MonitorConfig::case_study();
         let mut rs = Rescheduler::new(cfg);
         let mut events = Vec::new();
         for r in &trace.requests {

@@ -36,6 +36,18 @@ impl Default for MonitorConfig {
     }
 }
 
+impl MonitorConfig {
+    /// The tuned sensing profile shared by the §5.4 case studies,
+    /// [`deploy::ReschedBackend`](crate::deploy::ReschedBackend), and the
+    /// rescheduler tests: a 20 s window reacts within a phase, 15 samples
+    /// guard cold start, and the 10 s dwell + 60% rate band provide the
+    /// no-thrash hysteresis. One definition so harnesses and backends can
+    /// never silently diverge.
+    pub fn case_study() -> MonitorConfig {
+        MonitorConfig { window: 20.0, min_samples: 15, dwell: 10.0, rate_band: 0.6 }
+    }
+}
+
 /// Windowed request statistics at a point in time.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct WindowStats {

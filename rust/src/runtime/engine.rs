@@ -65,7 +65,7 @@ impl<'a> ExtraInput<'a> {
 /// Parameters are uploaded to device-resident `PjRtBuffer`s once at load and
 /// passed to `execute_b` by reference — re-marshalling them per call (the
 /// pre-optimization Literal path, ~368 MB per gpt-100m call) dominated the
-/// hot loop; see EXPERIMENTS.md §Perf. Set HEXGEN2_LITERAL_PARAMS=1 to force
+/// hot loop; see DESIGN.md §5. Set HEXGEN2_LITERAL_PARAMS=1 to force
 /// the old path (kept for the before/after ablation).
 pub struct ModelRuntime {
     pub manifest: ModelManifest,

@@ -116,6 +116,9 @@ pub fn evaluate_types(
         flow_value,
         tokens_per_s: flow_value * task.s_out / period,
         group_utilization,
+        // Default (throughput) score; `evaluate_partition` re-scores under
+        // the caller's chosen objective.
+        objective_score: flow_value,
     })
 }
 

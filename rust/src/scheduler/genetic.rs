@@ -92,7 +92,16 @@ pub fn schedule_genetic(
     const ELITE: usize = 4;
 
     let eval = |groups: &Groups, cache: &mut StrategyCache| -> Option<Placement> {
-        evaluate_partition(cluster, model, &task, opts.period, groups, opts.type_candidates, cache)
+        evaluate_partition(
+            cluster,
+            model,
+            &task,
+            opts.period,
+            groups,
+            opts.type_candidates,
+            opts.objective,
+            cache,
+        )
     };
 
     // Initial population: random partitions (the GA baseline has no spectral
@@ -105,13 +114,19 @@ pub fn schedule_genetic(
         })
         .collect();
 
-    let fitness = |p: &Option<Placement>| p.as_ref().map(|x| x.flow_value).unwrap_or(0.0);
+    // GA fitness is the same per-objective score the main scheduler ranks by
+    // (the flow value under the paper-default throughput objective). The
+    // neutral element must sort below every real score, including negative
+    // MeanLatency scores.
+    let fitness =
+        |p: &Option<Placement>| p.as_ref().map(|x| x.objective_score).unwrap_or(f64::NEG_INFINITY);
     pop.sort_by(|a, b| fitness(&b.1).partial_cmp(&fitness(&a.1)).unwrap());
 
     let mut history = vec![ConvergencePoint {
         elapsed_s: t0.elapsed().as_secs_f64(),
         round: 0,
         tokens_per_s: pop[0].1.as_ref().map(|p| p.tokens_per_s).unwrap_or(0.0),
+        score: fitness(&pop[0].1),
     }];
 
     let mut stall = 0;
@@ -137,8 +152,9 @@ pub fn schedule_genetic(
             elapsed_s: t0.elapsed().as_secs_f64(),
             round,
             tokens_per_s: pop[0].1.as_ref().map(|p| p.tokens_per_s).unwrap_or(0.0),
+            score: fitness(&pop[0].1),
         });
-        if fitness(&pop[0].1) > best_before * (1.0 + 1e-6) {
+        if opts.objective.improves(fitness(&pop[0].1), best_before) {
             stall = 0;
         } else {
             stall += 1;

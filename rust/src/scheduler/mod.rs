@@ -12,10 +12,12 @@ pub mod flownet;
 pub mod genetic;
 pub mod kl;
 pub mod maxflow;
+pub mod objective;
 pub mod placement;
 pub mod spectral;
 pub mod strategy;
 
+pub use objective::Objective;
 pub use placement::{GroupPlan, KvRoute, Placement};
 
 use std::time::Instant;
@@ -41,6 +43,9 @@ pub enum SwapMode {
 #[derive(Clone, Debug)]
 pub struct ScheduleOptions {
     pub workload: WorkloadKind,
+    /// What candidate placements are ranked by ([`Objective::Throughput`] is
+    /// the paper default and reproduces the pre-objective behaviour).
+    pub objective: Objective,
     /// Scheduling period T in seconds (§3.3 uses e.g. 10 minutes).
     pub period: f64,
     /// Maximum refinement rounds.
@@ -68,6 +73,7 @@ impl ScheduleOptions {
     pub fn new(workload: WorkloadKind) -> ScheduleOptions {
         ScheduleOptions {
             workload,
+            objective: Objective::Throughput,
             period: 600.0,
             max_rounds: 60,
             patience: 8,
@@ -98,6 +104,9 @@ pub struct ConvergencePoint {
     pub elapsed_s: f64,
     pub round: usize,
     pub tokens_per_s: f64,
+    /// The incumbent's score under the run's chosen objective (equals the
+    /// flow value for [`Objective::Throughput`]).
+    pub score: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -129,7 +138,8 @@ pub fn task_for(workload: WorkloadKind) -> TaskProfile {
 }
 
 /// Evaluate a partition: secondary-partition candidates (coarsen) then
-/// max-flow on each, returning the best placement.
+/// max-flow on each, returning the placement with the best score under
+/// `objective` (each candidate's `objective_score` is filled in).
 pub fn evaluate_partition(
     cluster: &Cluster,
     model: &LlmSpec,
@@ -137,6 +147,7 @@ pub fn evaluate_partition(
     period: f64,
     groups: &[Vec<DeviceId>],
     n_type_candidates: usize,
+    objective: Objective,
     cache: &mut StrategyCache,
 ) -> Option<Placement> {
     // Per-group phase capacities feed the secondary-partition scoring.
@@ -161,9 +172,11 @@ pub fn evaluate_partition(
     let n_cand = if groups.len() <= 6 { 64 } else { n_type_candidates };
     let mut best: Option<Placement> = None;
     for assign in coarsen::type_candidates(&w, &caps, n_cand) {
-        if let Some(p) = flownet::evaluate_types(cluster, model, task, period, groups, &assign, cache)
+        if let Some(mut p) =
+            flownet::evaluate_types(cluster, model, task, period, groups, &assign, cache)
         {
-            if best.as_ref().map(|b| p.flow_value > b.flow_value).unwrap_or(true) {
+            p.objective_score = objective.score(cluster, model, task, &p);
+            if best.as_ref().map(|b| p.objective_score > b.objective_score).unwrap_or(true) {
                 best = Some(p);
             }
         }
@@ -391,7 +404,8 @@ pub fn schedule(cluster: &Cluster, model: &LlmSpec, opts: &ScheduleOptions) -> O
         }
     }
 
-    // Phase 2 (+ type assignment): evaluate seeds, keep the best.
+    // Phase 2 (+ type assignment): evaluate seeds, keep the best under the
+    // chosen objective.
     let mut best_placement: Option<Placement> = None;
     let mut best_groups: Groups = Vec::new();
     for groups in seeds {
@@ -402,9 +416,11 @@ pub fn schedule(cluster: &Cluster, model: &LlmSpec, opts: &ScheduleOptions) -> O
             opts.period,
             &groups,
             opts.type_candidates,
+            opts.objective,
             &mut cache,
         ) {
-            if best_placement.as_ref().map(|b| p.flow_value > b.flow_value).unwrap_or(true) {
+            if best_placement.as_ref().map(|b| p.objective_score > b.objective_score).unwrap_or(true)
+            {
                 best_placement = Some(p);
                 best_groups = groups;
             }
@@ -415,6 +431,7 @@ pub fn schedule(cluster: &Cluster, model: &LlmSpec, opts: &ScheduleOptions) -> O
         elapsed_s: t0.elapsed().as_secs_f64(),
         round: 0,
         tokens_per_s: best_placement.tokens_per_s,
+        score: best_placement.objective_score,
     }];
 
     if opts.swap_mode == SwapMode::None {
@@ -462,9 +479,10 @@ pub fn schedule(cluster: &Cluster, model: &LlmSpec, opts: &ScheduleOptions) -> O
                 opts.period,
                 &cand,
                 opts.type_candidates,
+                opts.objective,
                 &mut cache,
             ) {
-                if p.flow_value > best_placement.flow_value * (1.0 + 1e-6) {
+                if opts.objective.improves(p.objective_score, best_placement.objective_score) {
                     best_placement = p;
                     best_groups = cand;
                     improved = true;
@@ -475,6 +493,7 @@ pub fn schedule(cluster: &Cluster, model: &LlmSpec, opts: &ScheduleOptions) -> O
             elapsed_s: t0.elapsed().as_secs_f64(),
             round,
             tokens_per_s: best_placement.tokens_per_s,
+            score: best_placement.objective_score,
         });
         if improved {
             stall = 0;
@@ -542,7 +561,8 @@ mod tests {
         let groups: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]];
         let mut cache = strategy::StrategyCache::new();
         let seed_eval =
-            evaluate_partition(&c, &OPT_30B, &task, 600.0, &groups, 64, &mut cache).expect("seed");
+            evaluate_partition(&c, &OPT_30B, &task, 600.0, &groups, 64, Objective::Throughput, &mut cache)
+                .expect("seed");
         let mut opts = ScheduleOptions::new(WorkloadKind::Lphd);
         opts.max_rounds = 4;
         opts.force_k = Some(4);

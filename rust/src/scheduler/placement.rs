@@ -44,6 +44,10 @@ pub struct Placement {
     pub tokens_per_s: f64,
     /// Per-group utilization (flow through the compute node / capacity).
     pub group_utilization: Vec<f64>,
+    /// Score under the [`Objective`](super::Objective) the placement was
+    /// ranked by (higher is better; equals `flow_value` for the paper's
+    /// default throughput objective).
+    pub objective_score: f64,
 }
 
 impl Placement {
@@ -124,6 +128,7 @@ mod tests {
             flow_value: 50.0,
             tokens_per_s: 123.0,
             group_utilization: vec![0.5, 0.62],
+            objective_score: 50.0,
         };
         let s = p.describe(&c);
         assert!(s.contains("1xA100+1xH100"), "{s}");

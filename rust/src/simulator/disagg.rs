@@ -547,6 +547,7 @@ mod tests {
             flow_value: 0.0,
             tokens_per_s: 0.0,
             group_utilization: vec![0.0],
+            objective_score: 0.0,
         };
         let trace = Trace::online(WorkloadKind::Lpld, 0.8, 80.0, 7);
         let n = trace.requests.len();

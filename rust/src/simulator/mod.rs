@@ -1,6 +1,8 @@
 //! Discrete-event simulation of LLM serving on a heterogeneous cluster,
 //! driven by the Table-1 cost model (the executable substitute for the
-//! paper's RunPod testbed — DESIGN.md §1).
+//! paper's RunPod testbed — DESIGN.md §1). Callers normally reach these
+//! engines through [`deploy::SimBackend`](crate::deploy::SimBackend) /
+//! [`deploy::ReschedBackend`](crate::deploy::ReschedBackend).
 //!
 //! Two engines:
 //! - [`disagg::run_disaggregated`]: HexGen-2/DistServe-style serving over a

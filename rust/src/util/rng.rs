@@ -2,7 +2,7 @@
 //! workload generator and schedulers need.
 //!
 //! The offline crate registry has no `rand`; this is a small, fully
-//! deterministic replacement so every experiment in EXPERIMENTS.md is
+//! deterministic replacement so every experiment harness is
 //! reproducible from a seed.
 
 /// xoshiro256** by Blackman & Vigna (public domain reference algorithm).

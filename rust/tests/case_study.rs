@@ -4,7 +4,7 @@
 
 use hexgen2::cluster::settings;
 use hexgen2::model::OPT_30B;
-use hexgen2::scheduler::{self, ScheduleOptions, SwapMode};
+use hexgen2::scheduler::{self, Objective, ScheduleOptions, SwapMode};
 use hexgen2::simulator::run_disaggregated;
 use hexgen2::workload::{Trace, WorkloadKind};
 
@@ -55,8 +55,17 @@ fn matches_exhaustive_search_on_type_assignment() {
     let groups = scheduler::spectral::partition_k(&c, &devs, 4);
 
     let mut cache = hexgen2::scheduler::strategy::StrategyCache::new();
-    let ours = scheduler::evaluate_partition(&c, &OPT_30B, &task, 600.0, &groups, 64, &mut cache)
-        .expect("placement");
+    let ours = scheduler::evaluate_partition(
+        &c,
+        &OPT_30B,
+        &task,
+        600.0,
+        &groups,
+        64,
+        Objective::Throughput,
+        &mut cache,
+    )
+    .expect("placement");
 
     let mut brute_best = 0.0f64;
     for mask in 1u32..15 {

@@ -31,6 +31,7 @@ fn dead_replica_is_routed_around() {
         flow_value: 100.0,
         tokens_per_s: 0.0,
         group_utilization: vec![1.0, 1.0, 0.0],
+        objective_score: 100.0,
     };
     let trace = Trace::offline(WorkloadKind::Lpld, 60, 1);
     let rep = run_disaggregated(&c, &OPT_30B, &placement, &trace);
@@ -50,6 +51,7 @@ fn all_dead_decode_returns_empty_not_hang() {
         flow_value: 0.0,
         tokens_per_s: 0.0,
         group_utilization: vec![0.0, 0.0],
+        objective_score: 0.0,
     };
     let trace = Trace::offline(WorkloadKind::Lpld, 10, 1);
     let rep = run_disaggregated(&c, &OPT_30B, &placement, &trace);
@@ -105,6 +107,7 @@ fn conservation_across_random_placements() {
             routes,
             flow_value: 10.0,
             tokens_per_s: 0.0,
+            objective_score: 10.0,
         };
         let n = rng.range(20, 80);
         let trace = Trace::offline(kind, n, rng.next_u64());
@@ -138,6 +141,7 @@ fn zero_output_requests_complete() {
         flow_value: 10.0,
         tokens_per_s: 0.0,
         group_utilization: vec![1.0, 1.0],
+        objective_score: 10.0,
     };
     let mut trace = Trace::offline(WorkloadKind::Lpld, 5, 3);
     for r in trace.requests.iter_mut() {

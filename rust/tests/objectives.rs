@@ -1,0 +1,136 @@
+//! Objective plumbing contracts (ISSUE 2 satellite coverage):
+//! - the paper-default `Objective::Throughput` reproduces the pre-objective
+//!   behaviour bit-for-bit (same seeds → same placements, score == flow);
+//! - `SloGoodput` and `CostPerToken` actually steer the search: under a
+//!   one-shot (no-refinement) schedule both objectives evaluate exactly the
+//!   same candidate set as the throughput run, so their pick can never score
+//!   below the throughput pick under their own metric — and on at least one
+//!   setting it scores strictly better.
+
+use hexgen2::cluster::settings;
+use hexgen2::model::OPT_30B;
+use hexgen2::scheduler::{self, Objective, Placement, ScheduleOptions, SwapMode};
+use hexgen2::workload::WorkloadKind;
+
+/// Structural identity of a placement (devices, types, strategies).
+fn signature(p: &Placement) -> Vec<(Vec<usize>, bool, String)> {
+    p.groups
+        .iter()
+        .map(|g| {
+            let mut d = g.devices.clone();
+            d.sort_unstable();
+            (
+                d,
+                g.is_prefill,
+                g.config.as_ref().map(|c| c.strategy_string()).unwrap_or_default(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn throughput_objective_reproduces_case_study_placement_bit_for_bit() {
+    // The default options carry Objective::Throughput implicitly; setting it
+    // explicitly must change nothing about the chosen case-study placement.
+    let c = settings::case_study();
+    let mut default_opts = ScheduleOptions::new(WorkloadKind::Lphd);
+    default_opts.max_rounds = 10;
+    default_opts.force_k = Some(4);
+    let mut explicit = default_opts.clone();
+    explicit.objective = Objective::Throughput;
+
+    let a = scheduler::schedule(&c, &OPT_30B, &default_opts).expect("schedules");
+    let b = scheduler::schedule(&c, &OPT_30B, &explicit).expect("schedules");
+    assert_eq!(
+        a.placement.flow_value.to_bits(),
+        b.placement.flow_value.to_bits(),
+        "flow value changed under an explicit throughput objective"
+    );
+    assert_eq!(a.placement.tokens_per_s.to_bits(), b.placement.tokens_per_s.to_bits());
+    assert_eq!(signature(&a.placement), signature(&b.placement), "placement changed");
+    // The throughput score IS the flow value, on every candidate kept.
+    assert_eq!(a.placement.objective_score.to_bits(), a.placement.flow_value.to_bits());
+    // And the convergence history carries the same score.
+    let last = a.history.last().unwrap();
+    assert_eq!(last.score.to_bits(), a.placement.objective_score.to_bits());
+}
+
+/// One-shot schedule (no refinement): both objectives evaluate the identical
+/// seed-partition × type-assignment candidate set.
+fn one_shot(c: &hexgen2::cluster::Cluster, kind: WorkloadKind, objective: Objective) -> Option<Placement> {
+    let mut o = ScheduleOptions::new(kind);
+    o.swap_mode = SwapMode::None;
+    o.objective = objective;
+    scheduler::schedule(c, &OPT_30B, &o).map(|r| r.placement)
+}
+
+/// For `alt`, compare its pick against the throughput pick *under alt's own
+/// metric* across a grid of settings × workloads. Returns (violations,
+/// strictly-better count).
+fn steering(alt: Objective) -> (usize, usize) {
+    let mut violations = 0;
+    let mut strict = 0;
+    for name in ["het1", "het3", "het5"] {
+        let c = settings::by_name(name).unwrap();
+        for kind in [WorkloadKind::Hphd, WorkloadKind::Hpld, WorkloadKind::Lphd] {
+            let (Some(pt), Some(pa)) =
+                (one_shot(&c, kind, Objective::Throughput), one_shot(&c, kind, alt))
+            else {
+                continue;
+            };
+            let task = scheduler::task_for(kind);
+            let score_t = alt.score(&c, &OPT_30B, &task, &pt);
+            let score_a = alt.score(&c, &OPT_30B, &task, &pa);
+            if score_a < score_t - 1e-9 {
+                violations += 1;
+                eprintln!(
+                    "{name}/{kind:?}: {} pick scored {score_a} < throughput pick {score_t}",
+                    alt.name()
+                );
+            } else if score_a > score_t + score_t.abs() * 1e-9 + 1e-12 {
+                strict += 1;
+            }
+        }
+    }
+    (violations, strict)
+}
+
+#[test]
+fn slo_goodput_steers_toward_its_own_metric() {
+    let (violations, strict) = steering(Objective::SloGoodput { scale: 2.0 });
+    assert_eq!(violations, 0, "SLO pick scored below the throughput pick under the SLO metric");
+    assert!(
+        strict >= 1,
+        "SloGoodput never picked a better placement under its own metric on any setting"
+    );
+}
+
+#[test]
+fn cost_per_token_steers_toward_its_own_metric() {
+    let (violations, strict) = steering(Objective::CostPerToken);
+    assert_eq!(violations, 0, "cost pick scored below the throughput pick under the cost metric");
+    assert!(
+        strict >= 1,
+        "CostPerToken never picked a better placement under its own metric on any setting"
+    );
+}
+
+#[test]
+fn mean_latency_objective_schedules_and_orders_sanely() {
+    // MeanLatency produces a valid placement whose estimated latency is no
+    // worse than the throughput pick's (same one-shot candidate set).
+    let c = settings::het1();
+    let kind = WorkloadKind::Lphd;
+    let pt = one_shot(&c, kind, Objective::Throughput).expect("tput plan");
+    let pl = one_shot(&c, kind, Objective::MeanLatency).expect("latency plan");
+    let task = scheduler::task_for(kind);
+    let alt = Objective::MeanLatency;
+    assert!(
+        alt.score(&c, &OPT_30B, &task, &pl) >= alt.score(&c, &OPT_30B, &task, &pt) - 1e-9,
+        "latency pick was worse under its own metric"
+    );
+    // Still a valid partition of the cluster.
+    let mut all: Vec<usize> = pl.groups.iter().flat_map(|g| g.devices.clone()).collect();
+    all.sort_unstable();
+    assert_eq!(all, (0..c.n()).collect::<Vec<_>>());
+}
