@@ -1,0 +1,10 @@
+//! Bench: heavy-tail admission study — static mean-length sizing vs
+//! per-request KV accounting on an extreme-dispersion trace.
+use hexgen2::experiments::{endtoend, ExpOpts};
+use hexgen2::model::OPT_30B;
+
+fn main() {
+    endtoend::heavy_tail_admission(&OPT_30B, "case_study", &ExpOpts::from_env())
+        .expect("case_study setting exists")
+        .print("Heavy-tail admission: static mean-length sizing vs per-request KV accounting (OPT-30B)");
+}

@@ -3,6 +3,10 @@
 //! (intra-node TP, inter-node PP) and a prefill:decode replica ratio but has
 //! no heterogeneity-aware placement — on a homogeneous cluster that search
 //! is an exhaustive sweep over uniform splits, which we implement directly.
+//! The resulting placement executes on the same unified simulation core as
+//! HexGen-2's (`simulator::core`'s `DisaggPrefill`/`DisaggDecode`
+//! policies), so engine scenarios — chunked prefill, per-request KV
+//! admission, shared-NIC contention — apply to this baseline unchanged.
 
 use std::time::Instant;
 

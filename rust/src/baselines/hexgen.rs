@@ -3,6 +3,10 @@
 //! genetic-algorithm search over groupings and HexGen's asymmetric
 //! parallelism per group — but each replica serves both phases (continuous
 //! batching), so it pays the prefill–decode interference HexGen-2 removes.
+//! The plan executes on the unified simulation core's
+//! [`Colocated`](crate::simulator::core::Colocated) policy
+//! (`run_colocated`), which also makes it a valid rescheduling epoch
+//! ([`ServingSpec::Colocated`](crate::simulator::ServingSpec)).
 
 use std::time::Instant;
 

@@ -8,9 +8,14 @@
 //! - [`vllm`]: vLLM-style colocated continuous batching on a homogeneous
 //!   cluster (Appendix F), with optional chunked prefill (Appendix D).
 //!
-//! Each baseline reuses the same cost model and simulator, so differences in
-//! results isolate the *system design* (disaggregation + heterogeneity-aware
-//! scheduling), as in the paper.
+//! Each baseline reuses the same cost model and the same unified simulation
+//! core (`simulator::core` — the colocated baselines run the
+//! [`Colocated`](crate::simulator::core::Colocated) policy, DistServe the
+//! disaggregated ones), so differences in results isolate the *system
+//! design* (disaggregation + heterogeneity-aware scheduling), as in the
+//! paper. Engine-level scenario knobs (per-request KV admission, chunked
+//! prefill, link contention) apply to every baseline uniformly through
+//! [`SimConfig`](crate::simulator::SimConfig).
 
 pub mod distserve;
 pub mod hexgen;

@@ -247,6 +247,62 @@ impl<'a> CostModel<'a> {
         best
     }
 
+    /// Largest prefill batch that fits in memory at input length `s_in`,
+    /// searched up to `cap` (memory demand is monotone in batch, so the
+    /// first failure ends the scan). This is the memory-derived bound that
+    /// replaces the simulator's old hardcoded `1..=16` scan; pass
+    /// `MAX_DECODE_BATCH` for an effectively unbounded search. Returns at
+    /// least 1 (the old engines floored infeasible replicas at batch 1 and
+    /// let the per-iteration token budget bound the work).
+    pub fn max_prefill_batch(&self, cfg: &ReplicaConfig, s_in: f64, cap: usize) -> usize {
+        let mut best = 1usize;
+        for b in 1..=cap {
+            if self.memory_ok(cfg, &TaskProfile::new(b, s_in, 0.0)) {
+                best = b;
+            } else {
+                break;
+            }
+        }
+        best
+    }
+
+    /// Resident-token capacity of a replica: the largest total number of
+    /// sequence tokens (prompt + generated, summed over all resident
+    /// requests) whose KV cache and activations fit alongside the weights.
+    ///
+    /// Derived per stage from the Table-1 memory row, which is linear in
+    /// b·(s_in+s_out): headroom_i = min-device-mem − weight bytes, and each
+    /// resident token costs `2 H B l_i / |d_i| + 4 H B` bytes on the
+    /// binding device. The replica capacity is the minimum over stages;
+    /// 0.0 when the weights alone do not fit. This is what the simulator's
+    /// per-request admission ledger charges actual request lengths against
+    /// (in place of mean-length batch sizing).
+    pub fn token_capacity(&self, cfg: &ReplicaConfig) -> f64 {
+        let h = self.model.hidden as f64;
+        let b = self.model.bytes_per_elem;
+        let mut cap = f64::INFINITY;
+        for (i, stage) in cfg.stages.iter().enumerate() {
+            let tp = stage.len() as f64;
+            let layers = cfg.layers[i] as f64;
+            let mem = stage
+                .iter()
+                .map(|&d| self.cluster.devices[d].gpu.mem_bytes())
+                .fold(f64::INFINITY, f64::min);
+            let weights = 12.0 * h * h * b * layers / tp;
+            let per_token = 2.0 * h * b * layers / tp + 4.0 * h * b;
+            let headroom = mem - weights;
+            if headroom <= 0.0 {
+                return 0.0;
+            }
+            cap = cap.min(headroom / per_token);
+        }
+        if cap.is_finite() {
+            cap
+        } else {
+            0.0
+        }
+    }
+
     // ---------------- Appendix A: node capacities ----------------
 
     /// Prefill node capacity: requests per period T. Batching does not raise
@@ -530,6 +586,51 @@ mod tests {
         let ident = m.kv_transfer_time_ordered(&p, &d, &[0, 1], &t);
         let swapped = m.kv_transfer_time_ordered(&p, &d, &[1, 0], &t);
         assert!(opt <= ident + 1e-12 && opt <= swapped + 1e-12);
+    }
+
+    #[test]
+    fn max_prefill_batch_matches_memory_ok() {
+        let c = hom();
+        let m = CostModel::new(&c, &OPT_30B);
+        let r = cfg(vec![(0..4).collect()], vec![48]);
+        // Pinned to the old hardcoded bound, the scan reproduces the legacy
+        // "largest b in 1..=16 that fits" exactly.
+        let legacy = {
+            let mut mb = 1;
+            for b in 1..=16 {
+                if m.memory_ok(&r, &TaskProfile::new(b, 512.0, 0.0)) {
+                    mb = b;
+                }
+            }
+            mb
+        };
+        assert_eq!(m.max_prefill_batch(&r, 512.0, 16), legacy);
+        // The memory-derived bound is at least as large and still feasible.
+        let derived = m.max_prefill_batch(&r, 512.0, MAX_DECODE_BATCH);
+        assert!(derived >= legacy);
+        assert!(m.memory_ok(&r, &TaskProfile::new(derived, 512.0, 0.0)));
+        // Longer prompts admit fewer batched requests.
+        assert!(m.max_prefill_batch(&r, 4096.0, MAX_DECODE_BATCH) <= derived);
+    }
+
+    #[test]
+    fn token_capacity_consistent_with_memory_ok() {
+        let c = hom();
+        let m = CostModel::new(&c, &OPT_30B);
+        let r = cfg(vec![(0..4).collect()], vec![48]);
+        let cap = m.token_capacity(&r);
+        assert!(cap > 0.0, "weights must fit");
+        // A batch whose total tokens sit just under the capacity passes the
+        // memory check; just over fails (same linear model, two views).
+        let seq = 1000.0;
+        let b_fit = (cap / seq * 0.98) as usize;
+        let b_over = (cap / seq * 1.02) as usize + 1;
+        assert!(m.memory_ok(&r, &TaskProfile::new(b_fit.max(1), seq, 0.0)));
+        assert!(!m.memory_ok(&r, &TaskProfile::new(b_over, seq, 0.0)));
+        // A replica that cannot even hold the weights has zero capacity.
+        let tiny = cfg(vec![vec![0]], vec![80]);
+        let m70 = CostModel::new(&c, &LLAMA2_70B);
+        assert_eq!(m70.token_capacity(&tiny), 0.0);
     }
 
     #[test]

@@ -10,12 +10,24 @@ use crate::coordinator::{self, CoordinatorConfig, KvThrottle, LiveRequest};
 use crate::rescheduler::{self, MonitorConfig, MODELED_REPLAN_S};
 use crate::runtime;
 use crate::simulator::{
-    run_colocated, run_disaggregated, run_disaggregated_with_resched, SimReport,
+    run_colocated_cfg, run_disaggregated_cfg, simulate, ServingSpec, SimConfig, SimReport,
+    SwitchSpec,
 };
 use crate::util::rng::Rng;
 use crate::workload::Trace;
 
 use super::{DeploymentSpec, Plan, PlanKind};
+
+/// The engine knobs a spec implies: admission model and (for disaggregated
+/// prefill replicas) the chunk size. Colocated plans carry their chunk in
+/// the plan itself.
+fn sim_config(spec: &DeploymentSpec) -> SimConfig {
+    SimConfig {
+        sizing: spec.admission,
+        chunked_prefill: spec.chunked_prefill,
+        ..SimConfig::default()
+    }
+}
 
 /// An execution substrate for a planned deployment.
 pub trait Backend {
@@ -35,10 +47,13 @@ impl Backend for SimBackend {
     }
 
     fn run(&self, spec: &DeploymentSpec, plan: &Plan, trace: &Trace) -> Result<SimReport> {
+        let cfg = sim_config(spec);
         Ok(match &plan.kind {
-            PlanKind::Disaggregated(p) => run_disaggregated(&spec.cluster, &spec.model, p, trace),
+            PlanKind::Disaggregated(p) => {
+                run_disaggregated_cfg(&spec.cluster, &spec.model, p, trace, &cfg)
+            }
             PlanKind::Colocated { replicas, chunked_prefill } => {
-                run_colocated(&spec.cluster, &spec.model, replicas, trace, *chunked_prefill)
+                run_colocated_cfg(&spec.cluster, &spec.model, replicas, trace, *chunked_prefill, &cfg)
             }
         })
     }
@@ -81,17 +96,16 @@ impl Backend for ReschedBackend {
             &base,
             self.modeled_replan_s,
         );
-        Ok(if drive.switches.is_empty() {
-            run_disaggregated(&spec.cluster, &spec.model, initial, trace)
-        } else {
-            run_disaggregated_with_resched(
-                &spec.cluster,
-                &spec.model,
-                initial,
-                &drive.switches,
-                trace,
-            )
-        })
+        let cfg = sim_config(spec);
+        let switches: Vec<SwitchSpec> = drive.switches.iter().map(SwitchSpec::from).collect();
+        Ok(simulate(
+            &spec.cluster,
+            &spec.model,
+            &ServingSpec::Disaggregated(initial.clone()),
+            &switches,
+            trace,
+            &cfg,
+        ))
     }
 }
 

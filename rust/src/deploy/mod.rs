@@ -38,7 +38,7 @@ use crate::cluster::Cluster;
 use crate::costmodel::TaskProfile;
 use crate::model::LlmSpec;
 use crate::scheduler::{self, ScheduleOptions, SwapMode};
-use crate::simulator::SimReport;
+use crate::simulator::{SimReport, Sizing};
 use crate::util::json::{self, Json};
 use crate::workload::{Trace, WorkloadKind};
 
@@ -60,8 +60,13 @@ pub struct DeploymentSpec {
     pub force_k: Option<usize>,
     /// Override the refinement round budget.
     pub max_rounds: Option<usize>,
-    /// Colocated vLLM-style plans: optional SARATHI chunked-prefill size.
+    /// Optional SARATHI chunked-prefill size, applied to colocated
+    /// replicas *and* (since the unified simulation core) to disaggregated
+    /// prefill replicas.
     pub chunked_prefill: Option<usize>,
+    /// Simulator admission model: static mean-length sizing (default) or
+    /// per-request KV/memory accounting with queueing under pressure.
+    pub admission: Sizing,
 }
 
 impl DeploymentSpec {
@@ -77,6 +82,7 @@ impl DeploymentSpec {
             force_k: None,
             max_rounds: None,
             chunked_prefill: None,
+            admission: Sizing::StaticMean,
         }
     }
 
@@ -117,6 +123,11 @@ impl DeploymentSpec {
 
     pub fn chunked_prefill(mut self, chunk: Option<usize>) -> Self {
         self.chunked_prefill = chunk;
+        self
+    }
+
+    pub fn admission(mut self, sizing: Sizing) -> Self {
+        self.admission = sizing;
         self
     }
 
@@ -285,6 +296,13 @@ impl Deployment {
             ("p95_latency_s".to_string(), json::num(rep.p_latency(95.0))),
             ("avg_ttft_s".to_string(), json::num(rep.avg_ttft())),
             ("slo_scale_at_99".to_string(), json::num(rep.slo_scale_for_attainment(0.99))),
+            // Engine-level counters: the memory ones move only under
+            // per-request admission; link wait accrues in every run.
+            ("mem_stalls".to_string(), json::num(rep.stats.mem_stalls as f64)),
+            ("rejected".to_string(), json::num(rep.stats.rejected as f64)),
+            ("unserved".to_string(), json::num(rep.stats.unserved as f64)),
+            ("peak_resident_tokens".to_string(), json::num(rep.stats.peak_resident_tokens)),
+            ("kv_link_wait_s".to_string(), json::num(rep.stats.kv_link_wait_s)),
         ];
         fields.append(&mut result);
         Json::Obj(fields.into_iter().collect())

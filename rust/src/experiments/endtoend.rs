@@ -1,14 +1,18 @@
 //! Figs. 6, 7, 8, 9: the end-to-end throughput/latency grids — HexGen-2 vs
 //! HexGen on the heterogeneous settings and DistServe on the homogeneous
 //! setting, across the four offline workload classes plus the online trace;
-//! the 70%-budget cost-efficiency study (Fig. 9).
+//! the 70%-budget cost-efficiency study (Fig. 9); and the heavy-tail
+//! admission study exercising the unified simulator's per-request KV
+//! accounting.
 
 use crate::cluster::settings;
+use crate::deploy::SimBackend;
 use crate::model::LlmSpec;
+use crate::simulator::Sizing;
 use crate::util::bench::Table;
-use crate::workload::OFFLINE_KINDS;
+use crate::workload::{Trace, WorkloadKind, OFFLINE_KINDS};
 
-use super::{offline_run, online_rate, online_run, ExpOpts, System};
+use super::{offline_run, online_rate, online_run, spec_for, ExpOpts, System};
 
 /// One row of the Fig. 6/7 grid: system × setting → 4 offline workloads +
 /// online, all in tokens/s (every cell planned and run through the deploy
@@ -107,6 +111,62 @@ pub fn fig9_budget(model: &LlmSpec, opts: &ExpOpts) -> Table {
         ]);
     }
     t
+}
+
+/// Heavy-tail admission study: the same plans serving an extreme-dispersion
+/// offline trace under static mean-length sizing vs per-request KV
+/// accounting. Static sizing freezes batch caps at the trace *means*, which
+/// a σ≈1.3 log-normal badly misrepresents; per-request accounting charges
+/// actual lengths against replica memory and queues under pressure — the
+/// `mem stalls` / `peak resident` columns make that pressure visible.
+pub fn heavy_tail_admission(model: &LlmSpec, setting: &str, opts: &ExpOpts) -> Option<Table> {
+    let cluster = settings::by_name(setting)?;
+    let n = opts.offline_n().max(200);
+    let trace = Trace::offline(WorkloadKind::HeavyTail, n, opts.seed.wrapping_add(83));
+    let mut t = Table::new(&[
+        "system",
+        "admission",
+        "tokens/s",
+        "p95 lat (s)",
+        "mem stalls",
+        "peak resident (ktok)",
+        "unserved",
+    ]);
+    for sys in [System::HexGen2, System::Vllm] {
+        // Plan once per system: the admission model is a simulation-time
+        // knob (deploy::backend::sim_config), not a planner input, so both
+        // rows run on the identical plan.
+        let spec = spec_for(&cluster, model, WorkloadKind::HeavyTail, opts);
+        let mut dep = match spec.plan(sys.planner()) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("heavy_tail: {} planning failed: {e}", sys.name());
+                continue;
+            }
+        };
+        for (label, sizing) in
+            [("static-mean", Sizing::StaticMean), ("per-request", Sizing::PerRequest)]
+        {
+            dep.spec.admission = sizing;
+            let rep = match dep.run(&SimBackend, &trace) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("heavy_tail: {} ({label}) simulation failed: {e}", sys.name());
+                    continue;
+                }
+            };
+            t.row(&[
+                sys.name().to_string(),
+                label.to_string(),
+                format!("{:.0}", rep.tokens_per_s()),
+                format!("{:.2}", rep.p_latency(95.0)),
+                format!("{}", rep.stats.mem_stalls),
+                format!("{:.1}", rep.stats.peak_resident_tokens / 1000.0),
+                format!("{}", rep.stats.unserved),
+            ]);
+        }
+    }
+    Some(t)
 }
 
 /// Summary ratios (DESIGN.md §6): geometric-mean HexGen-2/baseline

@@ -10,6 +10,10 @@
 //! Driven by `hexgen2 reschedule` and `benches/case_resched.rs`. The loop
 //! itself is [`rescheduler::drive`]; generic deployments get the same
 //! behaviour through [`deploy::ReschedBackend`](crate::deploy::ReschedBackend).
+//! Switch execution happens in the unified simulation core
+//! ([`simulator::simulate`](crate::simulator::simulate)), whose
+//! quiesce/drain/activate path also accepts colocated epochs — see
+//! `tests/sim_core.rs` for baseline-rescheduling scenarios.
 
 use crate::cluster::Cluster;
 use crate::model::LlmSpec;

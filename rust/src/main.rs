@@ -62,12 +62,25 @@ fn objective_of(args: &Args) -> Result<Objective> {
 
 /// Build the deployment spec shared by `schedule` and `simulate`.
 fn spec_of(args: &Args) -> Result<DeploymentSpec> {
+    // `--chunked-prefill` is the canonical flag (it now applies to
+    // disaggregated prefill replicas too); `--chunk` stays as an alias.
+    let chunk = args
+        .get("chunked-prefill")
+        .or_else(|| args.get("chunk"))
+        .and_then(|c| c.parse().ok());
     let mut spec = DeploymentSpec::new(cluster_of(args)?, model_of(args)?)
         .workload(workload_of(args)?)
         .objective(objective_of(args)?)
         .seed(args.get_u64("seed", 0))
         .quick(args.has("quick"))
-        .chunked_prefill(args.get("chunk").and_then(|c| c.parse().ok()));
+        .chunked_prefill(chunk);
+    match args.get_or("admission", "static") {
+        "static" | "mean" => {}
+        "per-request" | "per_request" | "perreq" => {
+            spec = spec.admission(hexgen2::simulator::Sizing::PerRequest);
+        }
+        other => bail!("unknown admission model {other} (try: static | per-request)"),
+    }
     if let Some(r) = args.get("rounds").and_then(|s| s.parse().ok()) {
         spec = spec.max_rounds(r);
     }
@@ -342,12 +355,16 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             e.g. --phases LPHD:2.5:300,HPLD:2.5:600,LPHD:2.5:300. Default: LPHD->HPLD\n\
                  \x20             at 75% of the static placement's estimated peak.\n\
                  \x20 simulate    --setting het1 --model opt-30b --workload hphd [--planner P] [--objective O]\n\
-                 \x20             [--requests N] [--resched] [--json] [--chunk TOKENS]\n\
-                 \x20             plan + run on the discrete-event simulator (--resched enables the online\n\
-                 \x20             rescheduling loop mid-trace).\n\
+                 \x20             [--requests N] [--resched] [--json] [--chunked-prefill TOKENS]\n\
+                 \x20             [--admission static|per-request]\n\
+                 \x20             plan + run on the unified discrete-event simulator (--resched enables the\n\
+                 \x20             online rescheduling loop mid-trace; --chunked-prefill chunks prompts on\n\
+                 \x20             both colocated and disaggregated prefill replicas; per-request admission\n\
+                 \x20             charges actual request lengths against replica memory and reports\n\
+                 \x20             mem_stalls/unserved — pair it with --workload heavy_tail).\n\
                  \x20 serve       --model tiny --requests 16 --prefill 2 --decode 1 [--throttle-mbps N] [--verbose]\n\
-                 \x20 workload    --workload hpld --n 10\n\
-                 \x20 experiments <fig1|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table2|table3|table4|table5|appd|all> [--full]\n\
+                 \x20 workload    --workload hpld --n 10   (classes: HPLD|HPHD|LPHD|LPLD|online|heavy_tail)\n\
+                 \x20 experiments <fig1|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table2|table3|table4|table5|appd|heavy_tail|all> [--full]\n\
                  \x20 settings    print bandwidth matrices (paper Fig. 4)"
             );
         }
@@ -363,7 +380,7 @@ fn run_experiment(id: &str, opts: &ExpOpts, args: &Args) -> Result<()> {
     let hets: &[&str] = if opts.quick { &het_quick } else { &het_all };
     match id {
         "list" => {
-            println!("experiments: fig1 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 table2 table3 table4 table5 appd all");
+            println!("experiments: fig1 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 table2 table3 table4 table5 appd heavy_tail all");
         }
         "fig1" => {
             let (p, d) = batching::fig1_batching();
@@ -435,10 +452,16 @@ fn run_experiment(id: &str, opts: &ExpOpts, args: &Args) -> Result<()> {
             tables::appd_chunked_prefill(&OPT_30B, opts)
                 .print("Appendix D: chunked prefill vs plain colocation (OPT-30B)");
         }
+        "heavy_tail" => {
+            let setting = args.get_or("setting", "case_study");
+            endtoend::heavy_tail_admission(&OPT_30B, setting, opts)
+                .ok_or_else(|| anyhow!("unknown setting {setting}"))?
+                .print("Heavy-tail admission: static mean-length sizing vs per-request KV accounting (OPT-30B)");
+        }
         "all" => {
             for e in [
                 "fig1", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "table2",
-                "table3", "table4", "table5", "appd",
+                "table3", "table4", "table5", "appd", "heavy_tail",
             ] {
                 run_experiment(e, opts, args)?;
             }

@@ -17,8 +17,13 @@
 //!   over the cluster bandwidth matrix) and approves it only when the
 //!   projected gain amortizes the cost within one period T.
 //!
-//! The discrete-event simulator executes approved switches via
-//! [`simulator::run_disaggregated_with_resched`](crate::simulator::run_disaggregated_with_resched);
+//! The unified simulation core executes approved switches via
+//! [`simulator::run_disaggregated_with_resched`](crate::simulator::run_disaggregated_with_resched)
+//! (a wrapper over [`simulator::simulate`](crate::simulator::simulate));
+//! because the quiesce/drain/activate machinery lives in the core rather
+//! than a disagg-only loop, [`PlacementSwitch`]es generalize to
+//! [`SwitchSpec`](crate::simulator::SwitchSpec)s whose target epoch may be
+//! colocated — rescheduling case studies run against the baselines too.
 //! `experiments::resched` and the `hexgen2 reschedule` CLI subcommand drive
 //! §5.4-style case studies end to end.
 

@@ -1,49 +1,26 @@
-//! Event-driven simulation of *colocated* serving (the paradigm the paper
-//! disaggregates away from): each replica interleaves prefill and decode in
-//! shared iterations — continuous batching à la Orca/vLLM — so every
-//! admitted prefill delays all running decodes (the interference of Fig. 1).
-//! Optional SARATHI-style chunked prefill (Appendix D) caps the prefill
-//! tokens per iteration, trading interference for prefill latency.
+//! Colocated serving entry point — a thin wrapper over the unified event
+//! engine ([`core::simulate`](super::core::simulate)) instantiating one
+//! [`Colocated`](super::core::Colocated) policy per replica: each iteration
+//! interleaves prefill and decode on the same GPUs — continuous batching à
+//! la Orca/vLLM — so every admitted prefill delays all running decodes (the
+//! interference of paper Fig. 1). Optional SARATHI-style chunked prefill
+//! (Appendix D) caps the prefill tokens per iteration, trading interference
+//! for prefill latency.
 //!
-//! Used by the HexGen and vLLM baselines (`baselines/`).
-
-use std::collections::VecDeque;
+//! Used by the HexGen and vLLM baselines (`baselines/`). Because the
+//! colocated policy runs inside the same core as the disaggregated ones,
+//! mid-trace rescheduling (quiesce → drain → activate) works on colocated
+//! deployments too — pass [`SwitchSpec`](super::SwitchSpec)s with
+//! [`ServingSpec::Colocated`](super::ServingSpec) epochs to
+//! [`simulate`](super::simulate).
 
 use crate::cluster::Cluster;
-use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};
+use crate::costmodel::ReplicaConfig;
 use crate::model::LlmSpec;
-use crate::workload::{Request, Trace};
+use crate::workload::Trace;
 
-use super::events::EventQueue;
-use super::metrics::{RequestRecord, SimReport};
-use super::{slo_base, PREFILL_TOKEN_BUDGET};
-
-#[derive(Clone, Copy, Debug)]
-enum Ev {
-    Arrive(usize),
-    IterDone(usize),
-}
-
-struct PendingPrefill {
-    req: usize,
-    remaining: usize,
-}
-
-struct Running {
-    req: usize,
-    generated: usize,
-}
-
-struct Replica {
-    cfg: ReplicaConfig,
-    queue: VecDeque<PendingPrefill>,
-    /// Requests whose prefill completed this iteration (first token pending).
-    running: Vec<Running>,
-    iterating: bool,
-    max_batch: usize,
-    /// Prefills being chunk-processed, still occupying a slot.
-    inflight_prefill: Vec<PendingPrefill>,
-}
+use super::core::{simulate, ServingSpec, SimConfig};
+use super::metrics::SimReport;
 
 /// Simulate colocated continuous batching over one or more replicas.
 /// `chunk` = Some(c) enables chunked prefill with c-token chunks.
@@ -54,191 +31,27 @@ pub fn run_colocated(
     trace: &Trace,
     chunk: Option<usize>,
 ) -> SimReport {
-    let cm = CostModel::new(cluster, model);
-    let (s_in_mean, s_out_mean) = trace.kind.mean_lengths();
-    let task = TaskProfile::new(1, s_in_mean, s_out_mean);
+    run_colocated_cfg(cluster, model, replicas, trace, chunk, &SimConfig::default())
+}
 
-    let mut reps: Vec<Replica> = replicas
-        .iter()
-        .filter(|cfg| cm.memory_ok(cfg, &task))
-        .map(|cfg| {
-            let mb = cm.max_decode_batch(cfg, &task).max(1);
-            Replica {
-                cfg: cfg.clone(),
-                queue: VecDeque::new(),
-                running: Vec::new(),
-                iterating: false,
-                max_batch: mb,
-                inflight_prefill: Vec::new(),
-            }
-        })
-        .collect();
-    if reps.is_empty() {
-        return SimReport::from_records(vec![]);
-    }
-
-    let reqs = &trace.requests;
-    let mut q: EventQueue<Ev> = EventQueue::new();
-    for (i, r) in reqs.iter().enumerate() {
-        q.push(r.arrival, Ev::Arrive(i));
-    }
-
-    let mut prefill_done_at = vec![0.0f64; reqs.len()];
-    let mut records: Vec<RequestRecord> = Vec::new();
-
-    // One shared iteration scheduler: admit prefill work, run (prefill +
-    // decode) serially, finish after the combined latency.
-    fn maybe_start_iter(
-        ri: usize,
-        now: f64,
-        reps: &mut [Replica],
-        reqs: &[Request],
-        cm: &CostModel,
-        chunk: Option<usize>,
-        q: &mut EventQueue<Ev>,
-    ) {
-        let st = &mut reps[ri];
-        if st.iterating {
-            return;
-        }
-        // Per-iteration prefill token budget (Fig. 1 saturation point); in
-        // chunked mode `chunk` additionally bounds per-request work so long
-        // prompts spread over iterations.
-        let per_req = chunk.unwrap_or(usize::MAX);
-        let projected = |infl: &[PendingPrefill]| -> f64 {
-            infl.iter().map(|p| p.remaining.min(per_req) as f64).sum()
-        };
-        while st.running.len() + st.inflight_prefill.len() < st.max_batch {
-            let Some(p) = st.queue.front() else { break };
-            let next_work = p.remaining.min(per_req) as f64;
-            if !st.inflight_prefill.is_empty()
-                && projected(&st.inflight_prefill) + next_work > PREFILL_TOKEN_BUDGET
-            {
-                break;
-            }
-            let p = st.queue.pop_front().unwrap();
-            st.inflight_prefill.push(p);
-        }
-        if st.running.is_empty() && st.inflight_prefill.is_empty() {
-            return;
-        }
-        // Prefill work this iteration: chunks (or whole remainders) within
-        // the shared iteration budget.
-        let mut pf_tokens = 0.0;
-        let mut pf_reqs = 0usize;
-        for p in st.inflight_prefill.iter_mut() {
-            if pf_tokens >= PREFILL_TOKEN_BUDGET && pf_reqs > 0 {
-                break;
-            }
-            let work = p.remaining.min(per_req);
-            if work == 0 {
-                continue;
-            }
-            pf_tokens += work as f64;
-            p.remaining -= work;
-            pf_reqs += 1;
-        }
-        let avg_ctx = if st.running.is_empty() {
-            0.0
-        } else {
-            st.running
-                .iter()
-                .map(|r| (reqs[r.req].input_len + r.generated) as f64)
-                .sum::<f64>()
-                / st.running.len() as f64
-        };
-        let mut lat = 0.0;
-        if pf_reqs > 0 && chunk.is_some() {
-            // SARATHI-style chunked prefill piggybacks the running decode
-            // tokens into the prefill chunk: one fused kernel over
-            // (chunk + batch) tokens. The weight scan that bounds the decode
-            // step is shared with the prefill GEMM, so the fused iteration
-            // costs the max of the two phases rather than their sum — this
-            // is why chunking helps (Appendix D).
-            let fused_tokens = pf_tokens + st.running.len() as f64;
-            let pf_t = cm.prefill_latency(&st.cfg, &TaskProfile::new(1, fused_tokens, 0.0));
-            let dec_t = if st.running.is_empty() {
-                0.0
-            } else {
-                cm.decode_step_latency(&st.cfg, st.running.len(), avg_ctx)
-            };
-            lat += pf_t.max(dec_t);
-        } else {
-            // Plain continuous batching: prefill and decode serialize in the
-            // iteration (the prefill-decoding interference of Fig. 1).
-            if pf_reqs > 0 {
-                let t = TaskProfile::new(pf_reqs, pf_tokens / pf_reqs as f64, 0.0);
-                lat += cm.prefill_latency(&st.cfg, &t);
-            }
-            if !st.running.is_empty() {
-                lat += cm.decode_step_latency(&st.cfg, st.running.len(), avg_ctx);
-            }
-        }
-        st.iterating = true;
-        q.push(now + lat, Ev::IterDone(ri));
-    }
-
-    while let Some((now, ev)) = q.pop() {
-        match ev {
-            Ev::Arrive(r) => {
-                // Least-outstanding-work routing.
-                let ri = (0..reps.len())
-                    .min_by_key(|&i| {
-                        reps[i].queue.len() + reps[i].running.len() + reps[i].inflight_prefill.len()
-                    })
-                    .unwrap();
-                reps[ri]
-                    .queue
-                    .push_back(PendingPrefill { req: r, remaining: reqs[r].input_len });
-                maybe_start_iter(ri, now, &mut reps, reqs, &cm, chunk, &mut q);
-            }
-            Ev::IterDone(ri) => {
-                let st = &mut reps[ri];
-                st.iterating = false;
-                // Decode progress.
-                let mut finished = Vec::new();
-                for run in st.running.iter_mut() {
-                    run.generated += 1;
-                    if run.generated >= reqs[run.req].output_len {
-                        finished.push(run.req);
-                    }
-                }
-                st.running.retain(|run| run.generated < reqs[run.req].output_len);
-                // Prefills that completed all chunks: first token produced.
-                let mut done_pf = Vec::new();
-                st.inflight_prefill.retain(|p| {
-                    if p.remaining == 0 {
-                        done_pf.push(p.req);
-                        false
-                    } else {
-                        true
-                    }
-                });
-                for r in done_pf {
-                    prefill_done_at[r] = now;
-                    if reqs[r].output_len <= 1 {
-                        finished.push(r);
-                    } else {
-                        st.running.push(Running { req: r, generated: 1 });
-                    }
-                }
-                for r in finished {
-                    records.push(RequestRecord {
-                        id: reqs[r].id,
-                        arrival: reqs[r].arrival,
-                        prefill_done: prefill_done_at[r],
-                        completion: now,
-                        input_len: reqs[r].input_len,
-                        output_len: reqs[r].output_len,
-                        slo_base: slo_base(model, &reqs[r]),
-                    });
-                }
-                maybe_start_iter(ri, now, &mut reps, reqs, &cm, chunk, &mut q);
-            }
-        }
-    }
-
-    SimReport::from_records(records)
+/// [`run_colocated`] with explicit engine knobs (per-request admission,
+/// link contention model — chunking stays a per-plan argument).
+pub fn run_colocated_cfg(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    replicas: &[ReplicaConfig],
+    trace: &Trace,
+    chunk: Option<usize>,
+    cfg: &SimConfig,
+) -> SimReport {
+    simulate(
+        cluster,
+        model,
+        &ServingSpec::Colocated { replicas: replicas.to_vec(), chunked_prefill: chunk },
+        &[],
+        trace,
+        cfg,
+    )
 }
 
 #[cfg(test)]
@@ -258,6 +71,7 @@ mod tests {
         let trace = Trace::offline(WorkloadKind::Lpld, 40, 1);
         let rep = run_colocated(&c, &OPT_30B, &one_replica(&c), &trace, None);
         assert_eq!(rep.records.len(), 40);
+        assert_eq!(rep.stats.unserved, 0);
         assert!(rep.tokens_per_s() > 0.0);
     }
 

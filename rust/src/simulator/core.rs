@@ -1,0 +1,1274 @@
+//! The unified discrete-event simulation core: **one** event engine driving
+//! **pluggable per-replica phase policies**.
+//!
+//! Before this module existed, `disagg.rs` and `colocated.rs` were two
+//! parallel event loops with duplicated event enums, replica structs,
+//! admission logic, and metrics plumbing. Now there is a single
+//! [`simulate`] driver — clock, replica arena, request router, KV-link
+//! queues, quiesce/drain/activate rescheduling, and record collection —
+//! and everything phase-specific lives behind the [`ReplicaPolicy`] trait:
+//!
+//! - [`DisaggPrefill`]: token-budget prefill batching (Fig. 1), optionally
+//!   SARATHI-style chunked so long prompts interleave with later arrivals.
+//! - [`DisaggDecode`]: continuous batching gated on KV-cache arrival.
+//! - [`Colocated`]: interleaved prefill+decode iterations (HexGen / vLLM
+//!   style), chunked or not — the interference baseline the paper
+//!   disaggregates away from.
+//!
+//! Event lifecycle (see DESIGN.md §9 for the full diagram):
+//!
+//! ```text
+//! Arrive(r) ──router──▶ entry replica ─▶ Service(i) ─▶ outcomes:
+//!     KvReady(r)   → KV link queue → KvArrive{p,d,r} → decode replica
+//!     FirstToken(r)→ TTFT recorded (colocated: first token in place)
+//!     Finished(r)  → RequestRecord
+//! Resched(i) quiesces the active set (unstarted work → holding buffer);
+//! Activate(i) builds the switch's replicas — disaggregated *or* colocated —
+//! and flushes the holding buffer, so the §3.3 drain/activate machinery
+//! works for any policy mix.
+//! ```
+//!
+//! Two admission models ([`Sizing`]): the legacy *static mean-length*
+//! sizing (batch caps frozen at trace-mean lengths, as in the original
+//! engines) and *per-request accounting*, where every resident request
+//! reserves its actual token footprint against the replica's memory
+//! ([`CostModel::token_capacity`]) and waits in queue under memory
+//! pressure — the regime where heavy-tailed traces behave nothing like
+//! their means. KV transfers serialize through per-link queues
+//! ([`LinkModel`]): per-route (the classic assumption) or shared-NIC,
+//! where every transfer leaving a prefill replica contends for one egress
+//! link.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::cluster::Cluster;
+use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile, MAX_DECODE_BATCH};
+use crate::model::LlmSpec;
+use crate::scheduler::Placement;
+use crate::workload::{Request, Trace, WorkloadKind};
+
+use super::events::EventQueue;
+use super::metrics::{RequestRecord, SimReport, SimStats};
+use super::{slo_base, PREFILL_TOKEN_BUDGET};
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// How replicas admit work against their memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Sizing {
+    /// Pre-size batches from the trace's *mean* lengths (the original
+    /// engines' behaviour): prefill batch = largest memory-feasible batch
+    /// at the mean input length, decode slots = `max_decode_batch` at the
+    /// mean task profile.
+    #[default]
+    StaticMean,
+    /// Per-request KV/memory accounting at admission time: each resident
+    /// request reserves its actual `s_in` (+ generation budget on decode /
+    /// colocated replicas) against [`CostModel::token_capacity`]; requests
+    /// that do not fit wait in queue (observable as
+    /// [`SimStats::mem_stalls`]), and requests larger than every replica's
+    /// memory are rejected rather than wedging the queue.
+    PerRequest,
+}
+
+/// How concurrent KV-cache transfers contend for the fabric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum LinkModel {
+    /// Each (prefill, decode) route serializes independently (the original
+    /// engines' assumption: routes have private bandwidth).
+    #[default]
+    PerRoute,
+    /// Every transfer leaving a prefill replica shares its egress NIC:
+    /// transfers from the same source serialize regardless of destination.
+    SharedNic,
+}
+
+/// Knobs of one simulation run. `Default` reproduces the pre-refactor
+/// engines' behaviour except that the static prefill-batch cap is derived
+/// from device memory instead of the old hardcoded `1..=16` scan.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimConfig {
+    pub sizing: Sizing,
+    /// SARATHI-style chunked prefill for **disaggregated** prefill replicas
+    /// (tokens per chunk). Colocated replicas carry their chunk size in
+    /// [`ServingSpec::Colocated`] because it is part of the plan.
+    pub chunked_prefill: Option<usize>,
+    pub link: LinkModel,
+    /// Pin the static prefill-batch search bound (None = derive it from
+    /// device memory via [`CostModel::max_prefill_batch`]). The golden
+    /// parity suite pins this to 16 — the pre-refactor magic constant — to
+    /// isolate the engine refactor from that deliberate sizing fix.
+    pub static_prefill_cap: Option<usize>,
+}
+
+/// What to instantiate when a serving epoch starts: a disaggregated
+/// placement or a set of colocated replicas.
+#[derive(Clone, Debug)]
+pub enum ServingSpec {
+    Disaggregated(Placement),
+    Colocated { replicas: Vec<ReplicaConfig>, chunked_prefill: Option<usize> },
+}
+
+/// One placement switch of a rescheduling scenario, generalized over
+/// paradigms: at `at` the active replicas are quiesced; at `at + delay` the
+/// new spec goes live. Unlike the old disagg-only switch type, `to` may be
+/// colocated — rescheduling experiments run on the baselines for free.
+#[derive(Clone, Debug)]
+pub struct SwitchSpec {
+    pub at: f64,
+    pub delay: f64,
+    pub to: ServingSpec,
+    /// Workload the new epoch was (re-)planned for: its mean lengths size
+    /// the new replicas' static batching. None = keep the trace's opening
+    /// statistics.
+    pub workload: Option<WorkloadKind>,
+}
+
+// ---------------------------------------------------------------------------
+// The policy abstraction
+// ---------------------------------------------------------------------------
+
+/// Read-only simulation context plus the stats sink, handed to policies.
+pub struct PolicyEnv<'a, 'b> {
+    pub cm: &'a CostModel<'b>,
+    pub reqs: &'a [Request],
+    pub sim: &'a SimConfig,
+    pub stats: &'a mut SimStats,
+}
+
+/// What a completed service burst did to each affected request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Prefill finished on a disaggregated prefill replica: the engine
+    /// stamps TTFT and routes the KV cache to a decode replica.
+    KvReady(usize),
+    /// Prefill finished on a colocated replica: first token produced in
+    /// place, no KV transfer.
+    FirstToken(usize),
+    /// All output tokens generated: the engine records the request.
+    Finished(usize),
+}
+
+/// Coarse phase of a replica, used by the engine for routing decisions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Prefill,
+    Decode,
+    Colocated,
+}
+
+/// One replica's serving discipline. The engine owns time and transport;
+/// a policy owns queues, batch formation, and burst latencies. Adding a new
+/// discipline (e.g. priority prefill, speculative decode) means implementing
+/// this trait and appending instances from a `ServingSpec` — the driver,
+/// router, link queues, and resched machinery come for free (DESIGN.md §9).
+pub trait ReplicaPolicy {
+    fn kind(&self) -> PolicyKind;
+    fn cfg(&self) -> &ReplicaConfig;
+    /// Queue a newly admitted request (entry replicas only).
+    fn admit(&mut self, req: usize);
+    /// KV cache of `req` arrived (decode replicas only).
+    fn deliver_kv(&mut self, req: usize);
+    /// KV transfer of `req` *out of* this replica completed: drop its
+    /// reservation (prefill replicas under per-request accounting).
+    fn release_kv(&mut self, req: usize, env: &mut PolicyEnv);
+    /// Pull every not-yet-started request back out (quiesce drain).
+    fn drain_unstarted(&mut self) -> Vec<usize>;
+    /// Start a service burst if idle and work is admissible; returns the
+    /// burst latency.
+    fn try_start(&mut self, env: &mut PolicyEnv) -> Option<f64>;
+    /// The burst the engine timed has completed; report per-request
+    /// outcomes in occurrence order.
+    fn service_done(&mut self, env: &mut PolicyEnv, out: &mut Vec<Outcome>);
+    /// Outstanding work (least-loaded routing).
+    fn load(&self) -> usize;
+    /// Resident-token capacity (infinite under static sizing).
+    fn mem_capacity_tokens(&self) -> f64;
+    /// Currently reserved resident tokens.
+    fn resident_tokens(&self) -> f64;
+}
+
+// ---------------------------------------------------------------------------
+// Memory ledger (per-request accounting)
+// ---------------------------------------------------------------------------
+
+/// Token-denominated memory ledger of one replica. The Table-1 memory row
+/// is linear in resident sequence tokens, so admission control reduces to a
+/// scalar budget (see [`CostModel::token_capacity`]).
+#[derive(Clone, Copy, Debug)]
+struct MemLedger {
+    capacity: f64,
+    resident: f64,
+    enabled: bool,
+}
+
+impl MemLedger {
+    fn new(cm: &CostModel, cfg: &ReplicaConfig, sizing: Sizing) -> MemLedger {
+        MemLedger {
+            capacity: cm.token_capacity(cfg),
+            resident: 0.0,
+            enabled: sizing == Sizing::PerRequest,
+        }
+    }
+
+    fn fits(&self, tokens: f64) -> bool {
+        !self.enabled || self.resident + tokens <= self.capacity
+    }
+
+    fn reserve(&mut self, tokens: f64) {
+        if self.enabled {
+            self.resident += tokens;
+        }
+    }
+
+    fn free(&mut self, tokens: f64) {
+        if self.enabled {
+            self.resident = (self.resident - tokens).max(0.0);
+        }
+    }
+
+    fn capacity_or_inf(&self) -> f64 {
+        if self.enabled {
+            self.capacity
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// A prompt whose prefill is split into chunks.
+struct PendingPrefill {
+    req: usize,
+    remaining: usize,
+}
+
+struct Running {
+    req: usize,
+    generated: usize,
+}
+
+/// Token footprint a request pins on a replica that holds its KV through
+/// generation (decode and colocated replicas): prompt + full output budget.
+fn gen_footprint(r: &Request) -> f64 {
+    (r.input_len + r.output_len) as f64
+}
+
+/// Shared chunk-admission rule (SARATHI-style, used by both the dedicated
+/// prefill policy and the colocated policy so the two cannot drift): pull
+/// queued prompts into the in-flight chunk set while slots remain and the
+/// next chunk fits the shared iteration token budget; `footprint` is the
+/// resident reservation a request takes (prompt-only on dedicated prefill,
+/// prompt + generation budget on colocated). Stops — counting a stall —
+/// when the head of the queue does not fit the memory ledger.
+#[allow(clippy::too_many_arguments)]
+fn admit_chunked(
+    queue: &mut VecDeque<usize>,
+    inflight: &mut Vec<PendingPrefill>,
+    occupied_slots: usize,
+    max_batch: usize,
+    per_req: usize,
+    ledger: &mut MemLedger,
+    env: &mut PolicyEnv,
+    footprint: impl Fn(&Request) -> f64,
+) {
+    let projected = |infl: &[PendingPrefill]| -> f64 {
+        infl.iter().map(|p| p.remaining.min(per_req) as f64).sum()
+    };
+    while occupied_slots + inflight.len() < max_batch {
+        let Some(&r) = queue.front() else { break };
+        let remaining = env.reqs[r].input_len;
+        let next_work = remaining.min(per_req) as f64;
+        if !inflight.is_empty() && projected(inflight) + next_work > PREFILL_TOKEN_BUDGET {
+            break;
+        }
+        let fp = footprint(&env.reqs[r]);
+        if !ledger.fits(fp) {
+            env.stats.mem_stalls += 1;
+            break;
+        }
+        queue.pop_front();
+        ledger.reserve(fp);
+        inflight.push(PendingPrefill { req: r, remaining });
+    }
+}
+
+/// Shared per-iteration chunk work: process up to `per_req` tokens of each
+/// in-flight prompt within the shared budget. Returns (tokens processed,
+/// prompts touched).
+fn chunk_work(inflight: &mut [PendingPrefill], per_req: usize) -> (f64, usize) {
+    let mut tokens = 0.0;
+    let mut worked = 0usize;
+    for p in inflight.iter_mut() {
+        if tokens >= PREFILL_TOKEN_BUDGET && worked > 0 {
+            break;
+        }
+        let work = p.remaining.min(per_req);
+        if work == 0 {
+            continue;
+        }
+        tokens += work as f64;
+        p.remaining -= work;
+        worked += 1;
+    }
+    (tokens, worked)
+}
+
+// ---------------------------------------------------------------------------
+// DisaggPrefill
+// ---------------------------------------------------------------------------
+
+/// Token-budget prefill batching (paper Fig. 1), optionally chunked.
+pub struct DisaggPrefill {
+    cfg: ReplicaConfig,
+    queue: VecDeque<usize>,
+    busy: bool,
+    /// In-flight unchunked batch.
+    batch: Vec<usize>,
+    /// In-flight chunk-processed prompts (chunked mode).
+    chunks: Vec<PendingPrefill>,
+    max_batch: usize,
+    chunk: Option<usize>,
+    ledger: MemLedger,
+}
+
+impl ReplicaPolicy for DisaggPrefill {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Prefill
+    }
+
+    fn cfg(&self) -> &ReplicaConfig {
+        &self.cfg
+    }
+
+    fn admit(&mut self, req: usize) {
+        self.queue.push_back(req);
+    }
+
+    fn deliver_kv(&mut self, _req: usize) {
+        debug_assert!(false, "KV delivered to a prefill replica");
+    }
+
+    fn release_kv(&mut self, req: usize, env: &mut PolicyEnv) {
+        self.ledger.free(env.reqs[req].input_len as f64);
+    }
+
+    fn drain_unstarted(&mut self) -> Vec<usize> {
+        self.queue.drain(..).collect()
+    }
+
+    fn try_start(&mut self, env: &mut PolicyEnv) -> Option<f64> {
+        if self.busy {
+            return None;
+        }
+        match self.chunk {
+            None => {
+                // Greedy batch under the Fig.-1 token budget; the first
+                // request is always admitted so oversized prompts cannot
+                // wedge the queue.
+                let mut batch = Vec::new();
+                let mut tokens = 0.0;
+                let mut max_len = 0usize;
+                while let Some(&r) = self.queue.front() {
+                    let len = env.reqs[r].input_len;
+                    if !batch.is_empty()
+                        && (tokens + len as f64 > PREFILL_TOKEN_BUDGET
+                            || batch.len() >= self.max_batch)
+                    {
+                        break;
+                    }
+                    if !self.ledger.fits(len as f64) {
+                        env.stats.mem_stalls += 1;
+                        break;
+                    }
+                    self.queue.pop_front();
+                    self.ledger.reserve(len as f64);
+                    tokens += len as f64;
+                    max_len = max_len.max(len);
+                    batch.push(r);
+                }
+                if batch.is_empty() {
+                    return None;
+                }
+                let t = TaskProfile::new(batch.len(), max_len as f64, 0.0);
+                let lat = env.cm.prefill_latency(&self.cfg, &t);
+                self.busy = true;
+                self.batch = batch;
+                Some(lat)
+            }
+            Some(c) => {
+                // SARATHI-style chunking on a dedicated prefill replica:
+                // long prompts spread over iterations so later short
+                // prompts interleave instead of queueing behind them. A
+                // dedicated prefill replica only holds the prompt KV (it
+                // ships after the transfer), hence the prompt-only
+                // footprint.
+                admit_chunked(
+                    &mut self.queue,
+                    &mut self.chunks,
+                    0,
+                    self.max_batch,
+                    c,
+                    &mut self.ledger,
+                    env,
+                    |r| r.input_len as f64,
+                );
+                let (tokens, worked) = chunk_work(&mut self.chunks, c);
+                if worked == 0 {
+                    return None;
+                }
+                let lat = env.cm.prefill_latency(&self.cfg, &TaskProfile::new(1, tokens, 0.0));
+                self.busy = true;
+                Some(lat)
+            }
+        }
+    }
+
+    fn service_done(&mut self, _env: &mut PolicyEnv, out: &mut Vec<Outcome>) {
+        self.busy = false;
+        if self.chunk.is_some() {
+            self.chunks.retain(|p| {
+                if p.remaining == 0 {
+                    out.push(Outcome::KvReady(p.req));
+                    false
+                } else {
+                    true
+                }
+            });
+        } else {
+            for r in std::mem::take(&mut self.batch) {
+                out.push(Outcome::KvReady(r));
+            }
+        }
+    }
+
+    fn load(&self) -> usize {
+        self.queue.len() + self.batch.len() + self.chunks.len()
+    }
+
+    fn mem_capacity_tokens(&self) -> f64 {
+        self.ledger.capacity_or_inf()
+    }
+
+    fn resident_tokens(&self) -> f64 {
+        self.ledger.resident
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DisaggDecode
+// ---------------------------------------------------------------------------
+
+/// Continuous batching gated on KV-cache arrival.
+pub struct DisaggDecode {
+    cfg: ReplicaConfig,
+    running: Vec<Running>,
+    waiting: VecDeque<usize>,
+    stepping: bool,
+    max_batch: usize,
+    ledger: MemLedger,
+}
+
+impl ReplicaPolicy for DisaggDecode {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Decode
+    }
+
+    fn cfg(&self) -> &ReplicaConfig {
+        &self.cfg
+    }
+
+    fn admit(&mut self, _req: usize) {
+        debug_assert!(false, "request routed to a decode replica without KV");
+    }
+
+    fn deliver_kv(&mut self, req: usize) {
+        self.waiting.push_back(req);
+    }
+
+    fn release_kv(&mut self, _req: usize, _env: &mut PolicyEnv) {}
+
+    fn drain_unstarted(&mut self) -> Vec<usize> {
+        // Waiting requests already hold transferred KV here; they drain on
+        // this replica rather than re-entering the prefill path.
+        Vec::new()
+    }
+
+    fn try_start(&mut self, env: &mut PolicyEnv) -> Option<f64> {
+        if self.stepping {
+            return None;
+        }
+        // Continuous batching: admit waiting requests at step boundaries,
+        // each reserving its full generation footprint under per-request
+        // accounting.
+        while self.running.len() < self.max_batch {
+            let Some(&r) = self.waiting.front() else { break };
+            let tok = gen_footprint(&env.reqs[r]);
+            if !self.ledger.fits(tok) {
+                env.stats.mem_stalls += 1;
+                break;
+            }
+            self.waiting.pop_front();
+            self.ledger.reserve(tok);
+            self.running.push(Running { req: r, generated: 0 });
+        }
+        if self.running.is_empty() {
+            return None;
+        }
+        let avg_ctx = self
+            .running
+            .iter()
+            .map(|r| (env.reqs[r.req].input_len + r.generated) as f64)
+            .sum::<f64>()
+            / self.running.len() as f64;
+        let lat = env.cm.decode_step_latency(&self.cfg, self.running.len(), avg_ctx);
+        self.stepping = true;
+        Some(lat)
+    }
+
+    fn service_done(&mut self, env: &mut PolicyEnv, out: &mut Vec<Outcome>) {
+        self.stepping = false;
+        let reqs = env.reqs;
+        let mut freed = 0.0;
+        for run in self.running.iter_mut() {
+            run.generated += 1;
+            if run.generated >= reqs[run.req].output_len {
+                out.push(Outcome::Finished(run.req));
+                freed += gen_footprint(&reqs[run.req]);
+            }
+        }
+        self.ledger.free(freed);
+        self.running.retain(|run| run.generated < reqs[run.req].output_len);
+    }
+
+    fn load(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    fn mem_capacity_tokens(&self) -> f64 {
+        self.ledger.capacity_or_inf()
+    }
+
+    fn resident_tokens(&self) -> f64 {
+        self.ledger.resident
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Colocated
+// ---------------------------------------------------------------------------
+
+/// Interleaved prefill+decode iterations (Orca/vLLM continuous batching):
+/// every admitted prefill delays all running decodes — the interference of
+/// paper Fig. 1. Optional SARATHI chunking fuses a bounded prefill chunk
+/// with the decode batch so the iteration costs max(prefill, decode)
+/// instead of their sum (Appendix D).
+pub struct Colocated {
+    cfg: ReplicaConfig,
+    queue: VecDeque<usize>,
+    running: Vec<Running>,
+    inflight: Vec<PendingPrefill>,
+    iterating: bool,
+    max_batch: usize,
+    chunk: Option<usize>,
+    ledger: MemLedger,
+}
+
+impl ReplicaPolicy for Colocated {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Colocated
+    }
+
+    fn cfg(&self) -> &ReplicaConfig {
+        &self.cfg
+    }
+
+    fn admit(&mut self, req: usize) {
+        self.queue.push_back(req);
+    }
+
+    fn deliver_kv(&mut self, _req: usize) {
+        debug_assert!(false, "KV routed to a colocated replica");
+    }
+
+    fn release_kv(&mut self, _req: usize, _env: &mut PolicyEnv) {}
+
+    fn drain_unstarted(&mut self) -> Vec<usize> {
+        self.queue.drain(..).collect()
+    }
+
+    fn try_start(&mut self, env: &mut PolicyEnv) -> Option<f64> {
+        if self.iterating {
+            return None;
+        }
+        // Per-iteration prefill token budget (Fig. 1 saturation point); in
+        // chunked mode `chunk` additionally bounds per-request work so long
+        // prompts spread over iterations. A colocated replica keeps the
+        // request through generation, hence the prompt+output footprint.
+        let per_req = self.chunk.unwrap_or(usize::MAX);
+        admit_chunked(
+            &mut self.queue,
+            &mut self.inflight,
+            self.running.len(),
+            self.max_batch,
+            per_req,
+            &mut self.ledger,
+            env,
+            gen_footprint,
+        );
+        if self.running.is_empty() && self.inflight.is_empty() {
+            return None;
+        }
+        // Prefill work this iteration: chunks (or whole remainders) within
+        // the shared iteration budget.
+        let (pf_tokens, pf_reqs) = chunk_work(&mut self.inflight, per_req);
+        let avg_ctx = if self.running.is_empty() {
+            0.0
+        } else {
+            self.running
+                .iter()
+                .map(|r| (env.reqs[r.req].input_len + r.generated) as f64)
+                .sum::<f64>()
+                / self.running.len() as f64
+        };
+        let mut lat = 0.0;
+        if pf_reqs > 0 && self.chunk.is_some() {
+            // SARATHI-style chunked prefill piggybacks the running decode
+            // tokens into the prefill chunk: one fused kernel over
+            // (chunk + batch) tokens. The weight scan that bounds the decode
+            // step is shared with the prefill GEMM, so the fused iteration
+            // costs the max of the two phases rather than their sum — this
+            // is why chunking helps (Appendix D).
+            let fused_tokens = pf_tokens + self.running.len() as f64;
+            let pf_t = env.cm.prefill_latency(&self.cfg, &TaskProfile::new(1, fused_tokens, 0.0));
+            let dec_t = if self.running.is_empty() {
+                0.0
+            } else {
+                env.cm.decode_step_latency(&self.cfg, self.running.len(), avg_ctx)
+            };
+            lat += pf_t.max(dec_t);
+        } else {
+            // Plain continuous batching: prefill and decode serialize in the
+            // iteration (the prefill-decoding interference of Fig. 1).
+            if pf_reqs > 0 {
+                let t = TaskProfile::new(pf_reqs, pf_tokens / pf_reqs as f64, 0.0);
+                lat += env.cm.prefill_latency(&self.cfg, &t);
+            }
+            if !self.running.is_empty() {
+                lat += env.cm.decode_step_latency(&self.cfg, self.running.len(), avg_ctx);
+            }
+        }
+        self.iterating = true;
+        Some(lat)
+    }
+
+    fn service_done(&mut self, env: &mut PolicyEnv, out: &mut Vec<Outcome>) {
+        self.iterating = false;
+        let reqs = env.reqs;
+        let mut freed = 0.0;
+        // Decode progress.
+        let mut finished = Vec::new();
+        for run in self.running.iter_mut() {
+            run.generated += 1;
+            if run.generated >= reqs[run.req].output_len {
+                finished.push(run.req);
+                freed += gen_footprint(&reqs[run.req]);
+            }
+        }
+        self.running.retain(|run| run.generated < reqs[run.req].output_len);
+        // Prefills that completed all chunks: first token produced.
+        let mut done_pf = Vec::new();
+        self.inflight.retain(|p| {
+            if p.remaining == 0 {
+                done_pf.push(p.req);
+                false
+            } else {
+                true
+            }
+        });
+        for r in finished {
+            out.push(Outcome::Finished(r));
+        }
+        for r in done_pf {
+            out.push(Outcome::FirstToken(r));
+            if reqs[r].output_len <= 1 {
+                out.push(Outcome::Finished(r));
+                freed += gen_footprint(&reqs[r]);
+            } else {
+                self.running.push(Running { req: r, generated: 1 });
+            }
+        }
+        self.ledger.free(freed);
+    }
+
+    fn load(&self) -> usize {
+        self.queue.len() + self.running.len() + self.inflight.len()
+    }
+
+    fn mem_capacity_tokens(&self) -> f64 {
+        self.ledger.capacity_or_inf()
+    }
+
+    fn resident_tokens(&self) -> f64 {
+        self.ledger.resident
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Arrive(usize),
+    /// Replica `i`'s service burst (prefill batch, decode step, or
+    /// colocated iteration) completed.
+    Service(usize),
+    /// KV cache of request `r` finished transferring from prefill replica
+    /// `p` to decode replica `d`.
+    KvArrive { p: usize, d: usize, r: usize },
+    /// Initiate switch `i`: quiesce the active replicas.
+    Resched(usize),
+    /// Switch `i`'s new epoch goes live.
+    Activate(usize),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Router {
+    /// Deficit-weighted by max-flow route weight (disaggregated entry).
+    FlowWeighted,
+    /// Least outstanding work (colocated entry).
+    LeastLoaded,
+}
+
+struct Engine<'a> {
+    cm: CostModel<'a>,
+    reqs: &'a [Request],
+    sim: &'a SimConfig,
+    replicas: Vec<Box<dyn ReplicaPolicy>>,
+    kinds: Vec<PolicyKind>,
+    /// Flow-proportional routing weight per replica (prefill entries).
+    weight: Vec<f64>,
+    /// Requests assigned so far per replica (deficit routing).
+    assigned: Vec<f64>,
+    /// Requests routed so far across (decode, prefill) pairs.
+    assigned_from: HashMap<(usize, usize), f64>,
+    /// Max-flow route weights across (prefill, decode) pairs.
+    route_w: HashMap<(usize, usize), f64>,
+    /// Busy-until time per KV link key.
+    link_free: HashMap<(usize, usize), f64>,
+    /// Entry replicas of the current epoch.
+    active: Vec<usize>,
+    router: Router,
+    q: EventQueue<Ev>,
+    prefill_done_at: Vec<f64>,
+    done: Vec<bool>,
+    records: Vec<RequestRecord>,
+    /// Requests waiting out a migration blackout (no active entry replica).
+    holding: Vec<usize>,
+    /// Active set stashed at Resched time, restored if the switch is
+    /// infeasible.
+    quiesced: Vec<Vec<usize>>,
+    /// Last observed resident tokens per replica + their running total
+    /// (incremental peak tracking under per-request accounting — avoids a
+    /// full arena scan per event).
+    resident: Vec<f64>,
+    resident_total: f64,
+    stats: SimStats,
+}
+
+macro_rules! penv {
+    ($self:ident) => {
+        PolicyEnv { cm: &$self.cm, reqs: $self.reqs, sim: $self.sim, stats: &mut $self.stats }
+    };
+}
+
+impl<'a> Engine<'a> {
+    /// Append one disaggregated placement's replicas to the arena. Returns
+    /// the arena indices of the new entry (prefill) replicas, or None when
+    /// the placement has no feasible prefill or decode replica.
+    fn build_disagg(
+        &mut self,
+        placement: &Placement,
+        s_in_mean: f64,
+        task: &TaskProfile,
+    ) -> Option<Vec<usize>> {
+        let base = self.replicas.len();
+        let mut p_of_group: HashMap<usize, usize> = HashMap::new();
+        let mut d_of_group: HashMap<usize, usize> = HashMap::new();
+        let mut new_p: Vec<usize> = Vec::new();
+        let mut new_d: Vec<usize> = Vec::new();
+        for (gi, g) in placement.groups.iter().enumerate() {
+            let Some(cfg) = g.config.clone() else { continue };
+            if g.capacity <= 0.0 {
+                continue;
+            }
+            let idx = self.replicas.len();
+            if g.is_prefill {
+                let mb = match self.sim.sizing {
+                    // Memory-limited prefill batch at the mean input length
+                    // (bound derived from device memory, not a magic cap).
+                    Sizing::StaticMean => {
+                        let cap = self.sim.static_prefill_cap.unwrap_or(MAX_DECODE_BATCH);
+                        self.cm.max_prefill_batch(&cfg, s_in_mean, cap)
+                    }
+                    // Per-request accounting: the ledger is the limit.
+                    Sizing::PerRequest => MAX_DECODE_BATCH,
+                };
+                let ledger = MemLedger::new(&self.cm, &cfg, self.sim.sizing);
+                p_of_group.insert(gi, idx);
+                new_p.push(idx);
+                self.push_replica(
+                    Box::new(DisaggPrefill {
+                        cfg,
+                        queue: VecDeque::new(),
+                        busy: false,
+                        batch: Vec::new(),
+                        chunks: Vec::new(),
+                        max_batch: mb,
+                        chunk: self.sim.chunked_prefill,
+                        ledger,
+                    }),
+                    PolicyKind::Prefill,
+                );
+            } else {
+                let mb = match self.sim.sizing {
+                    Sizing::StaticMean => self.cm.max_decode_batch(&cfg, task).max(1),
+                    Sizing::PerRequest => MAX_DECODE_BATCH,
+                };
+                let ledger = MemLedger::new(&self.cm, &cfg, self.sim.sizing);
+                d_of_group.insert(gi, idx);
+                new_d.push(idx);
+                self.push_replica(
+                    Box::new(DisaggDecode {
+                        cfg,
+                        running: Vec::new(),
+                        waiting: VecDeque::new(),
+                        stepping: false,
+                        max_batch: mb,
+                        ledger,
+                    }),
+                    PolicyKind::Decode,
+                );
+            }
+        }
+        if new_p.is_empty() || new_d.is_empty() {
+            // Infeasible placement: roll back the partial build (the new
+            // entries are all zero-resident, so the running total stands).
+            self.replicas.truncate(base);
+            self.kinds.truncate(base);
+            self.weight.truncate(base);
+            self.assigned.truncate(base);
+            self.resident.truncate(base);
+            return None;
+        }
+
+        // Flow-proportional routing weights (§3.3: "communication frequency
+        // is set to be proportional to these flow values").
+        for r in &placement.routes {
+            let (Some(&p), Some(&d)) = (p_of_group.get(&r.prefill), d_of_group.get(&r.decode))
+            else {
+                continue;
+            };
+            if r.flow > 1e-9 {
+                *self.route_w.entry((p, d)).or_default() += r.flow;
+                self.weight[p] += r.flow;
+            }
+        }
+        // Fallback: if max-flow left a prefill replica unrouted, connect it
+        // to every decode replica *of this placement* with a tiny weight so
+        // requests are never stranded.
+        for &p in &new_p {
+            if self.weight[p] <= 0.0 {
+                for &d in &new_d {
+                    self.route_w.insert((p, d), 1e-6);
+                }
+                self.weight[p] = 1e-6 * new_d.len() as f64;
+            }
+        }
+        Some(new_p)
+    }
+
+    /// Append colocated replicas to the arena; all of them are entries.
+    fn build_colocated(
+        &mut self,
+        cfgs: &[ReplicaConfig],
+        chunk: Option<usize>,
+        task: &TaskProfile,
+    ) -> Option<Vec<usize>> {
+        let base = self.replicas.len();
+        for cfg in cfgs {
+            let feasible = match self.sim.sizing {
+                Sizing::StaticMean => self.cm.memory_ok(cfg, task),
+                Sizing::PerRequest => self.cm.token_capacity(cfg) > 0.0,
+            };
+            if !feasible {
+                continue;
+            }
+            let mb = match self.sim.sizing {
+                Sizing::StaticMean => self.cm.max_decode_batch(cfg, task).max(1),
+                Sizing::PerRequest => MAX_DECODE_BATCH,
+            };
+            let ledger = MemLedger::new(&self.cm, cfg, self.sim.sizing);
+            self.push_replica(
+                Box::new(Colocated {
+                    cfg: cfg.clone(),
+                    queue: VecDeque::new(),
+                    running: Vec::new(),
+                    inflight: Vec::new(),
+                    iterating: false,
+                    max_batch: mb,
+                    chunk,
+                    ledger,
+                }),
+                PolicyKind::Colocated,
+            );
+        }
+        if self.replicas.len() == base {
+            None
+        } else {
+            Some((base..self.replicas.len()).collect())
+        }
+    }
+
+    fn push_replica(&mut self, policy: Box<dyn ReplicaPolicy>, kind: PolicyKind) {
+        self.replicas.push(policy);
+        self.kinds.push(kind);
+        self.weight.push(0.0);
+        self.assigned.push(0.0);
+        self.resident.push(0.0);
+    }
+
+    /// Re-read replica `i`'s resident tokens after a reserve/free and fold
+    /// the delta into the running total + peak (per-request mode only).
+    fn note_resident(&mut self, i: usize) {
+        if self.sim.sizing != Sizing::PerRequest {
+            return;
+        }
+        let now_res = self.replicas[i].resident_tokens();
+        self.resident_total += now_res - self.resident[i];
+        self.resident[i] = now_res;
+        if self.resident_total > self.stats.peak_resident_tokens {
+            self.stats.peak_resident_tokens = self.resident_total;
+        }
+    }
+
+    fn build_spec(&mut self, spec: &ServingSpec, s_in: f64, s_out: f64) -> Option<(Vec<usize>, Router)> {
+        let task = TaskProfile::new(1, s_in, s_out);
+        match spec {
+            ServingSpec::Disaggregated(p) => {
+                self.build_disagg(p, s_in, &task).map(|a| (a, Router::FlowWeighted))
+            }
+            ServingSpec::Colocated { replicas, chunked_prefill } => self
+                .build_colocated(replicas, *chunked_prefill, &task)
+                .map(|a| (a, Router::LeastLoaded)),
+        }
+    }
+
+    /// Token footprint request `r` pins on entry replica `i`.
+    fn entry_footprint(&self, i: usize, r: usize) -> f64 {
+        match self.kinds[i] {
+            // A prefill replica holds the prompt KV until it is shipped.
+            PolicyKind::Prefill => self.reqs[r].input_len as f64,
+            // Colocated replicas keep the request through generation.
+            _ => gen_footprint(&self.reqs[r]),
+        }
+    }
+
+    /// Pick an entry replica among `cands` under the epoch's router.
+    fn pick(&self, cands: &[usize]) -> usize {
+        match self.router {
+            // Deficit-weighted pick: argmax weight / (assigned + 1).
+            Router::FlowWeighted => *cands
+                .iter()
+                .max_by(|&&a, &&b| {
+                    let fa = self.weight[a] / (self.assigned[a] + 1.0);
+                    let fb = self.weight[b] / (self.assigned[b] + 1.0);
+                    fa.partial_cmp(&fb).unwrap()
+                })
+                .expect("no active entry replica"),
+            // Least-outstanding-work routing.
+            Router::LeastLoaded => *cands
+                .iter()
+                .min_by_key(|&&i| self.replicas[i].load())
+                .expect("no active entry replica"),
+        }
+    }
+
+    /// If the replica can start a burst, schedule its completion.
+    fn try_start(&mut self, i: usize, now: f64) {
+        let mut env = penv!(self);
+        if let Some(lat) = self.replicas[i].try_start(&mut env) {
+            self.q.push(now + lat, Ev::Service(i));
+        }
+        // try_start is where admissions reserve memory.
+        self.note_resident(i);
+    }
+
+    /// Route an arrived (or re-flushed) request to an entry replica, or
+    /// hold it through a migration blackout.
+    fn admit(&mut self, r: usize, now: f64) {
+        if self.active.is_empty() {
+            self.holding.push(r);
+            return;
+        }
+        let i = if self.sim.sizing == Sizing::PerRequest {
+            let fitting: Vec<usize> = self
+                .active
+                .iter()
+                .copied()
+                .filter(|&i| self.replicas[i].mem_capacity_tokens() >= self.entry_footprint(i, r))
+                .collect();
+            if fitting.is_empty() {
+                // Larger than every active replica's memory: reject rather
+                // than wedge a queue forever.
+                self.stats.rejected += 1;
+                return;
+            }
+            self.pick(&fitting)
+        } else {
+            self.pick(&self.active)
+        };
+        if self.router == Router::FlowWeighted {
+            self.assigned[i] += 1.0;
+        }
+        self.replicas[i].admit(r);
+        self.try_start(i, now);
+    }
+
+    /// Prefill of `r` finished on replica `p`: stamp TTFT, pick a decode
+    /// replica flow-proportionally, and enqueue the KV transfer on the
+    /// link.
+    fn route_kv(&mut self, p: usize, r: usize, now: f64) {
+        self.prefill_done_at[r] = now;
+        let routed: Vec<usize> = (0..self.replicas.len())
+            .filter(|&d| self.kinds[d] == PolicyKind::Decode && self.route_w.contains_key(&(p, d)))
+            .collect();
+        // Legacy fallback: an unrouted prefill replica sends to the first
+        // decode replica in the arena.
+        let mut pool = if routed.is_empty() {
+            match (0..self.replicas.len()).find(|&d| self.kinds[d] == PolicyKind::Decode) {
+                Some(d) => vec![d],
+                None => {
+                    // Unreachable for specs built by this engine (every
+                    // disagg build has ≥1 decode replica; colocated never
+                    // routes KV) — still account the drop and free the
+                    // prefill-side reservation defensively.
+                    self.stats.rejected += 1;
+                    let mut env = penv!(self);
+                    self.replicas[p].release_kv(r, &mut env);
+                    return;
+                }
+            }
+        } else {
+            routed
+        };
+        if self.sim.sizing == Sizing::PerRequest {
+            let footprint = gen_footprint(&self.reqs[r]);
+            pool.retain(|&d| self.replicas[d].mem_capacity_tokens() >= footprint);
+            if pool.is_empty() {
+                // No decode replica can ever hold this generation: drop the
+                // KV and report the request unserved.
+                self.stats.rejected += 1;
+                let mut env = penv!(self);
+                self.replicas[p].release_kv(r, &mut env);
+                return;
+            }
+        }
+        let d = *pool
+            .iter()
+            .max_by(|&&a, &&b| {
+                let wa = self.route_w.get(&(p, a)).copied().unwrap_or(1e-6)
+                    / (self.assigned_from.get(&(a, p)).copied().unwrap_or(0.0) + 1.0);
+                let wb = self.route_w.get(&(p, b)).copied().unwrap_or(1e-6)
+                    / (self.assigned_from.get(&(b, p)).copied().unwrap_or(0.0) + 1.0);
+                wa.partial_cmp(&wb).unwrap()
+            })
+            .expect("pool checked non-empty");
+        *self.assigned_from.entry((d, p)).or_default() += 1.0;
+        // KV transfer over the link; links serialize through a shared
+        // queue (per route, or per source NIC).
+        let t_task = TaskProfile::new(1, self.reqs[r].input_len as f64, 0.0);
+        let xfer = self.cm.kv_transfer_time(self.replicas[p].cfg(), self.replicas[d].cfg(), &t_task);
+        let key = match self.sim.link {
+            LinkModel::PerRoute => (p, d),
+            LinkModel::SharedNic => (p, usize::MAX),
+        };
+        let free = self.link_free.get(&key).copied().unwrap_or(0.0).max(now);
+        self.stats.kv_link_wait_s += free - now;
+        let done = free + xfer;
+        self.link_free.insert(key, done);
+        self.q.push(done, Ev::KvArrive { p, d, r });
+    }
+
+    fn finish(&mut self, r: usize, now: f64) {
+        self.done[r] = true;
+        let req = &self.reqs[r];
+        self.records.push(RequestRecord {
+            id: req.id,
+            arrival: req.arrival,
+            prefill_done: self.prefill_done_at[r],
+            completion: now,
+            input_len: req.input_len,
+            output_len: req.output_len,
+            slo_base: slo_base(self.cm.model, req),
+        });
+    }
+
+    fn run(
+        &mut self,
+        switches: &[SwitchSpec],
+        base_means: (f64, f64),
+    ) {
+        while let Some((now, ev)) = self.q.pop() {
+            match ev {
+                Ev::Arrive(r) => self.admit(r, now),
+                Ev::Resched(i) => {
+                    // Quiesce: stop admitting to the active replicas; pull
+                    // their unstarted requests back into the holding buffer
+                    // (arrival order preserved by sorting on request index).
+                    // In-flight bursts and running decodes drain on the old
+                    // epoch's replicas.
+                    let old = std::mem::take(&mut self.active);
+                    let mut pulled: Vec<usize> = Vec::new();
+                    for &p in &old {
+                        pulled.extend(self.replicas[p].drain_unstarted());
+                    }
+                    pulled.sort_unstable();
+                    self.holding.extend(pulled);
+                    self.quiesced[i] = old;
+                }
+                Ev::Activate(i) => {
+                    // Size the new replicas for the workload they were
+                    // planned for (post-shift statistics), not the opening
+                    // phase's.
+                    let (s_in, s_out) = switches[i]
+                        .workload
+                        .map(|k| k.mean_lengths())
+                        .unwrap_or(base_means);
+                    match self.build_spec(&switches[i].to, s_in, s_out) {
+                        Some((fresh, router)) => {
+                            self.active = fresh;
+                            self.router = router;
+                        }
+                        // Infeasible new epoch: resume the old replicas.
+                        None => self.active = std::mem::take(&mut self.quiesced[i]),
+                    }
+                    for r in std::mem::take(&mut self.holding) {
+                        self.admit(r, now);
+                    }
+                }
+                Ev::Service(i) => {
+                    let mut out = Vec::new();
+                    {
+                        let mut env = penv!(self);
+                        self.replicas[i].service_done(&mut env, &mut out);
+                    }
+                    for o in out {
+                        match o {
+                            Outcome::KvReady(r) => self.route_kv(i, r, now),
+                            Outcome::FirstToken(r) => self.prefill_done_at[r] = now,
+                            Outcome::Finished(r) => self.finish(r, now),
+                        }
+                    }
+                    // Completions freed memory; the trailing try_start
+                    // re-reads replica i's residency either way.
+                    self.try_start(i, now);
+                }
+                Ev::KvArrive { p, d, r } => {
+                    if self.sim.sizing == Sizing::PerRequest {
+                        // The shipped KV frees prefill-side memory, which
+                        // may unblock queued prompts.
+                        let mut env = penv!(self);
+                        self.replicas[p].release_kv(r, &mut env);
+                        self.try_start(p, now);
+                    }
+                    self.replicas[d].deliver_kv(r);
+                    self.try_start(d, now);
+                }
+            }
+        }
+    }
+}
+
+/// Simulate a trace on the unified engine: an initial serving epoch, an
+/// optional sequence of mid-trace switches (sorted, non-overlapping — each
+/// `at + delay` before the next `at`), and the run's [`SimConfig`].
+/// Requests that cannot be served at all are dropped from the records and
+/// counted in [`SimStats::unserved`].
+pub fn simulate(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    initial: &ServingSpec,
+    switches: &[SwitchSpec],
+    trace: &Trace,
+    cfg: &SimConfig,
+) -> SimReport {
+    for s in switches {
+        assert!(
+            s.at.is_finite() && s.delay.is_finite() && s.at >= 0.0 && s.delay >= 0.0,
+            "placement switch times must be finite and non-negative (at {}, delay {})",
+            s.at,
+            s.delay
+        );
+    }
+    for w in switches.windows(2) {
+        assert!(
+            w[0].at + w[0].delay <= w[1].at,
+            "placement switches must be sorted and non-overlapping"
+        );
+    }
+    let cm = CostModel::new(cluster, model);
+    let (s_in_mean, s_out_mean) = trace.kind.mean_lengths();
+    let reqs = &trace.requests;
+
+    let mut eng = Engine {
+        cm,
+        reqs,
+        sim: cfg,
+        replicas: Vec::new(),
+        kinds: Vec::new(),
+        weight: Vec::new(),
+        assigned: Vec::new(),
+        assigned_from: HashMap::new(),
+        route_w: HashMap::new(),
+        link_free: HashMap::new(),
+        active: Vec::new(),
+        router: Router::FlowWeighted,
+        q: EventQueue::new(),
+        prefill_done_at: vec![0.0; reqs.len()],
+        done: vec![false; reqs.len()],
+        records: Vec::new(),
+        holding: Vec::new(),
+        quiesced: vec![Vec::new(); switches.len()],
+        resident: Vec::new(),
+        resident_total: 0.0,
+        stats: SimStats::default(),
+    };
+
+    // Replica arena: switches append; indices stay valid for in-flight
+    // events, so a draining replica keeps serving after it is deactivated.
+    let Some((active, router)) = eng.build_spec(initial, s_in_mean, s_out_mean) else {
+        let mut rep = SimReport::from_records(vec![]);
+        rep.stats.unserved = reqs.len();
+        return rep;
+    };
+    eng.active = active;
+    eng.router = router;
+
+    for (i, r) in reqs.iter().enumerate() {
+        eng.q.push(r.arrival, Ev::Arrive(i));
+    }
+    for (i, s) in switches.iter().enumerate() {
+        eng.q.push(s.at, Ev::Resched(i));
+        eng.q.push(s.at + s.delay, Ev::Activate(i));
+    }
+
+    eng.run(switches, (s_in_mean, s_out_mean));
+
+    eng.stats.unserved = eng.done.iter().filter(|&&d| !d).count();
+    let mut rep = SimReport::from_records(eng.records);
+    rep.stats = eng.stats;
+    rep
+}

@@ -1,27 +1,30 @@
-//! Event-driven simulation of disaggregated serving over a scheduler
-//! [`Placement`]: request routing proportional to the max-flow assignment,
-//! prefill batching with the Fig.-1 token budget, KV-cache transfers over
-//! bandwidth-serialized links, and decode continuous batching.
+//! Disaggregated serving entry points — thin wrappers over the unified
+//! event engine ([`core::simulate`](super::core::simulate)).
 //!
-//! Supports *online rescheduling* (the rescheduler subsystem's §3.3 loop):
-//! [`run_disaggregated_with_resched`] takes a list of [`PlacementSwitch`]es;
-//! at each switch time a `Resched` event quiesces the active replicas (their
-//! unstarted queue drains back to a holding buffer, in-flight batches and
-//! running decodes complete on the old placement — the drain), and after the
-//! switch's migration delay an `Activate` event brings the new placement's
-//! replicas live and flushes the held requests to them.
-
-use std::collections::{HashMap, VecDeque};
+//! The engine instantiates one [`DisaggPrefill`](super::core::DisaggPrefill)
+//! policy per prefill group (token-budget batching, Fig. 1) and one
+//! [`DisaggDecode`](super::core::DisaggDecode) per decode group (continuous
+//! batching gated on KV arrival), routes requests proportionally to the
+//! max-flow assignment, and serializes KV transfers through per-link
+//! queues.
+//!
+//! Online rescheduling (the §3.3 loop): [`run_disaggregated_with_resched`]
+//! takes a list of [`PlacementSwitch`]es; at each switch time a `Resched`
+//! event quiesces the active replicas (their unstarted queue drains back to
+//! a holding buffer, in-flight batches and running decodes complete on the
+//! old placement — the drain), and after the switch's migration delay an
+//! `Activate` event brings the new placement's replicas live and flushes
+//! the held requests to them. The same quiesce/drain/activate machinery
+//! works for colocated epochs through [`SwitchSpec`](super::SwitchSpec)
+//! directly.
 
 use crate::cluster::Cluster;
-use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};
 use crate::model::LlmSpec;
 use crate::scheduler::Placement;
-use crate::workload::{Request, Trace, WorkloadKind};
+use crate::workload::{Trace, WorkloadKind};
 
-use super::events::EventQueue;
-use super::metrics::{RequestRecord, SimReport};
-use super::{slo_base, PREFILL_TOKEN_BUDGET};
+use super::core::{simulate, ServingSpec, SimConfig, SwitchSpec};
+use super::metrics::SimReport;
 
 /// One placement switch of a rescheduling scenario: at time `at` the old
 /// replicas are quiesced; at `at + delay` (drain + KV/weight migration, as
@@ -37,210 +40,15 @@ pub struct PlacementSwitch {
     pub workload: Option<WorkloadKind>,
 }
 
-#[derive(Clone, Copy, Debug)]
-enum Ev {
-    Arrive(usize),
-    /// Prefill batch finished on prefill replica `p` (arena index).
-    PrefillDone(usize),
-    /// KV cache of request `r` arrived at decode replica `d` (arena index).
-    KvArrive { d: usize, r: usize },
-    /// One decode iteration finished on decode replica `d` (arena index).
-    Step(usize),
-    /// Initiate placement switch `i`: quiesce the active replicas.
-    Resched(usize),
-    /// Switch `i`'s new placement goes live.
-    Activate(usize),
-}
-
-struct PrefillState {
-    cfg: ReplicaConfig,
-    queue: VecDeque<usize>,
-    busy: bool,
-    batch: Vec<usize>,
-    max_batch: usize,
-    assigned: f64,
-    weight: f64,
-}
-
-struct Running {
-    req: usize,
-    generated: usize,
-}
-
-struct DecodeState {
-    cfg: ReplicaConfig,
-    running: Vec<Running>,
-    waiting: VecDeque<usize>,
-    stepping: bool,
-    max_batch: usize,
-    assigned_from: HashMap<usize, f64>,
-}
-
-/// Append one placement's replicas to the arenas. Returns the arena indices
-/// of the appended prefill replicas (the new active set), or None when the
-/// placement has no feasible prefill or decode replica.
-#[allow(clippy::too_many_arguments)]
-fn build_replicas(
-    cm: &CostModel,
-    placement: &Placement,
-    s_in_mean: f64,
-    task: &TaskProfile,
-    prefills: &mut Vec<PrefillState>,
-    decodes: &mut Vec<DecodeState>,
-    route_w: &mut HashMap<(usize, usize), f64>,
-) -> Option<Vec<usize>> {
-    let mut p_of_group: HashMap<usize, usize> = HashMap::new();
-    let mut d_of_group: HashMap<usize, usize> = HashMap::new();
-    let p_base = prefills.len();
-    let d_base = decodes.len();
-    for (gi, g) in placement.groups.iter().enumerate() {
-        let Some(cfg) = g.config.clone() else { continue };
-        if g.capacity <= 0.0 {
-            continue;
-        }
-        if g.is_prefill {
-            // Memory-limited prefill batch (at the mean input length).
-            let mut mb = 1;
-            for b in 1..=16 {
-                if cm.memory_ok(&cfg, &TaskProfile::new(b, s_in_mean, 0.0)) {
-                    mb = b;
-                }
-            }
-            p_of_group.insert(gi, prefills.len());
-            prefills.push(PrefillState {
-                cfg,
-                queue: VecDeque::new(),
-                busy: false,
-                batch: Vec::new(),
-                max_batch: mb,
-                assigned: 0.0,
-                weight: 0.0,
-            });
-        } else {
-            let mb = cm.max_decode_batch(&cfg, task).max(1);
-            d_of_group.insert(gi, decodes.len());
-            decodes.push(DecodeState {
-                cfg,
-                running: Vec::new(),
-                waiting: VecDeque::new(),
-                stepping: false,
-                max_batch: mb,
-                assigned_from: HashMap::new(),
-            });
+impl From<&PlacementSwitch> for SwitchSpec {
+    fn from(s: &PlacementSwitch) -> SwitchSpec {
+        SwitchSpec {
+            at: s.at,
+            delay: s.delay,
+            to: ServingSpec::Disaggregated(s.placement.clone()),
+            workload: s.workload,
         }
     }
-    if prefills.len() == p_base || decodes.len() == d_base {
-        // Infeasible placement: roll back the partial build.
-        prefills.truncate(p_base);
-        decodes.truncate(d_base);
-        return None;
-    }
-
-    // Flow-proportional routing weights (§3.3: "communication frequency is
-    // set to be proportional to these flow values").
-    for r in &placement.routes {
-        let (Some(&p), Some(&d)) = (p_of_group.get(&r.prefill), d_of_group.get(&r.decode)) else {
-            continue;
-        };
-        if r.flow > 1e-9 {
-            *route_w.entry((p, d)).or_default() += r.flow;
-            prefills[p].weight += r.flow;
-        }
-    }
-    // Fallback: if max-flow left a prefill replica unrouted, connect it to
-    // every decode replica *of this placement* with a tiny weight so requests
-    // are never stranded.
-    for p in p_base..prefills.len() {
-        if prefills[p].weight <= 0.0 {
-            for d in d_base..decodes.len() {
-                route_w.insert((p, d), 1e-6);
-            }
-            prefills[p].weight = 1e-6 * (decodes.len() - d_base) as f64;
-        }
-    }
-    Some((p_base..prefills.len()).collect())
-}
-
-/// Deficit-weighted pick among the active prefill replicas:
-/// argmax weight / (assigned + 1).
-fn pick_prefill(prefills: &[PrefillState], active: &[usize]) -> usize {
-    *active
-        .iter()
-        .max_by(|&&a, &&b| {
-            let fa = prefills[a].weight / (prefills[a].assigned + 1.0);
-            let fb = prefills[b].weight / (prefills[b].assigned + 1.0);
-            fa.partial_cmp(&fb).unwrap()
-        })
-        .expect("no active prefill replica")
-}
-
-// Start a prefill batch if idle and work is queued.
-fn maybe_start_prefill(
-    p: usize,
-    now: f64,
-    prefills: &mut [PrefillState],
-    reqs: &[Request],
-    cm: &CostModel,
-    q: &mut EventQueue<Ev>,
-) {
-    let st = &mut prefills[p];
-    if st.busy || st.queue.is_empty() {
-        return;
-    }
-    let mut batch = Vec::new();
-    let mut tokens = 0.0;
-    let mut max_len = 0usize;
-    while let Some(&r) = st.queue.front() {
-        let len = reqs[r].input_len;
-        if !batch.is_empty()
-            && (tokens + len as f64 > PREFILL_TOKEN_BUDGET || batch.len() >= st.max_batch)
-        {
-            break;
-        }
-        st.queue.pop_front();
-        tokens += len as f64;
-        max_len = max_len.max(len);
-        batch.push(r);
-    }
-    let t = TaskProfile::new(batch.len(), max_len as f64, 0.0);
-    let lat = cm.prefill_latency(&st.cfg, &t);
-    st.busy = true;
-    st.batch = batch;
-    q.push(now + lat, Ev::PrefillDone(p));
-}
-
-// Start a decode iteration if idle and work exists.
-fn maybe_start_step(
-    d: usize,
-    now: f64,
-    decodes: &mut [DecodeState],
-    reqs: &[Request],
-    cm: &CostModel,
-    q: &mut EventQueue<Ev>,
-) {
-    let st = &mut decodes[d];
-    if st.stepping {
-        return;
-    }
-    // Continuous batching: admit waiting requests at step boundaries.
-    while st.running.len() < st.max_batch {
-        match st.waiting.pop_front() {
-            Some(r) => st.running.push(Running { req: r, generated: 0 }),
-            None => break,
-        }
-    }
-    if st.running.is_empty() {
-        return;
-    }
-    let avg_ctx = st
-        .running
-        .iter()
-        .map(|r| (reqs[r.req].input_len + r.generated) as f64)
-        .sum::<f64>()
-        / st.running.len() as f64;
-    let lat = cm.decode_step_latency(&st.cfg, st.running.len(), avg_ctx);
-    st.stepping = true;
-    q.push(now + lat, Ev::Step(d));
 }
 
 /// Simulate a trace against a placement. Requests that cannot be served at
@@ -251,7 +59,26 @@ pub fn run_disaggregated(
     placement: &Placement,
     trace: &Trace,
 ) -> SimReport {
-    run_disaggregated_with_resched(cluster, model, placement, &[], trace)
+    run_disaggregated_cfg(cluster, model, placement, trace, &SimConfig::default())
+}
+
+/// [`run_disaggregated`] with explicit engine knobs (chunked prefill,
+/// per-request admission, link contention model).
+pub fn run_disaggregated_cfg(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    placement: &Placement,
+    trace: &Trace,
+    cfg: &SimConfig,
+) -> SimReport {
+    simulate(
+        cluster,
+        model,
+        &ServingSpec::Disaggregated(placement.clone()),
+        &[],
+        trace,
+        cfg,
+    )
 }
 
 /// Simulate a trace with mid-trace placement switches (the rescheduler's
@@ -265,167 +92,15 @@ pub fn run_disaggregated_with_resched(
     switches: &[PlacementSwitch],
     trace: &Trace,
 ) -> SimReport {
-    for s in switches {
-        assert!(
-            s.at.is_finite() && s.delay.is_finite() && s.at >= 0.0 && s.delay >= 0.0,
-            "placement switch times must be finite and non-negative (at {}, delay {})",
-            s.at,
-            s.delay
-        );
-    }
-    for w in switches.windows(2) {
-        assert!(
-            w[0].at + w[0].delay <= w[1].at,
-            "placement switches must be sorted and non-overlapping"
-        );
-    }
-    let cm = CostModel::new(cluster, model);
-    let (s_in_mean, s_out_mean) = trace.kind.mean_lengths();
-    let task = TaskProfile::new(1, s_in_mean, s_out_mean);
-
-    // Replica arena: switches append; indices stay valid for in-flight
-    // events, so a draining replica keeps serving after it is deactivated.
-    let mut prefills: Vec<PrefillState> = Vec::new();
-    let mut decodes: Vec<DecodeState> = Vec::new();
-    let mut route_w: HashMap<(usize, usize), f64> = HashMap::new();
-
-    let Some(mut active_p) =
-        build_replicas(&cm, initial, s_in_mean, &task, &mut prefills, &mut decodes, &mut route_w)
-    else {
-        return SimReport::from_records(vec![]);
-    };
-
-    let reqs = &trace.requests;
-    let mut q: EventQueue<Ev> = EventQueue::new();
-    for (i, r) in reqs.iter().enumerate() {
-        q.push(r.arrival, Ev::Arrive(i));
-    }
-    for (i, s) in switches.iter().enumerate() {
-        q.push(s.at, Ev::Resched(i));
-        q.push(s.at + s.delay, Ev::Activate(i));
-    }
-
-    let mut link_free: HashMap<(usize, usize), f64> = HashMap::new();
-    let mut prefill_done_at: Vec<f64> = vec![0.0; reqs.len()];
-    let mut records: Vec<RequestRecord> = Vec::new();
-    // Requests waiting out a migration blackout (no active prefill replica).
-    let mut holding: Vec<usize> = Vec::new();
-    // Active set stashed at Resched time, restored if the switch is infeasible.
-    let mut quiesced: Vec<Vec<usize>> = vec![Vec::new(); switches.len()];
-
-    while let Some((now, ev)) = q.pop() {
-        match ev {
-            Ev::Arrive(r) => {
-                if active_p.is_empty() {
-                    holding.push(r);
-                } else {
-                    let p = pick_prefill(&prefills, &active_p);
-                    prefills[p].assigned += 1.0;
-                    prefills[p].queue.push_back(r);
-                    maybe_start_prefill(p, now, &mut prefills, reqs, &cm, &mut q);
-                }
-            }
-            Ev::Resched(i) => {
-                // Quiesce: stop admitting to the active replicas; pull their
-                // unstarted requests back into the holding buffer (arrival
-                // order preserved by sorting on request id, which is
-                // arrival-ordered for generated traces). In-flight prefill
-                // batches and running decodes drain on the old placement.
-                quiesced[i] = std::mem::take(&mut active_p);
-                let mut pulled: Vec<usize> = Vec::new();
-                for &p in &quiesced[i] {
-                    pulled.extend(prefills[p].queue.drain(..));
-                }
-                pulled.sort_unstable();
-                holding.extend(pulled);
-            }
-            Ev::Activate(i) => {
-                // Size the new replicas for the workload they were planned
-                // for (post-shift statistics), not the opening phase's.
-                let (sw_s_in, sw_s_out) = switches[i]
-                    .workload
-                    .map(|k| k.mean_lengths())
-                    .unwrap_or((s_in_mean, s_out_mean));
-                let sw_task = TaskProfile::new(1, sw_s_in, sw_s_out);
-                match build_replicas(
-                    &cm,
-                    &switches[i].placement,
-                    sw_s_in,
-                    &sw_task,
-                    &mut prefills,
-                    &mut decodes,
-                    &mut route_w,
-                ) {
-                    Some(fresh) => active_p = fresh,
-                    // Infeasible new placement: resume the old replicas.
-                    None => active_p = std::mem::take(&mut quiesced[i]),
-                }
-                for r in std::mem::take(&mut holding) {
-                    let p = pick_prefill(&prefills, &active_p);
-                    prefills[p].assigned += 1.0;
-                    prefills[p].queue.push_back(r);
-                    maybe_start_prefill(p, now, &mut prefills, reqs, &cm, &mut q);
-                }
-            }
-            Ev::PrefillDone(p) => {
-                let batch = std::mem::take(&mut prefills[p].batch);
-                for r in batch {
-                    prefill_done_at[r] = now;
-                    // Route KV to a decode replica, flow-proportionally.
-                    let d = (0..decodes.len())
-                        .filter(|&d| route_w.contains_key(&(p, d)))
-                        .max_by(|&a, &b| {
-                            let wa = route_w[&(p, a)]
-                                / (decodes[a].assigned_from.get(&p).copied().unwrap_or(0.0) + 1.0);
-                            let wb = route_w[&(p, b)]
-                                / (decodes[b].assigned_from.get(&p).copied().unwrap_or(0.0) + 1.0);
-                            wa.partial_cmp(&wb).unwrap()
-                        })
-                        .unwrap_or(0);
-                    *decodes[d].assigned_from.entry(p).or_default() += 1.0;
-                    // KV transfer over the (p,d) link; links serialize.
-                    let t_task = TaskProfile::new(1, reqs[r].input_len as f64, 0.0);
-                    let xfer = cm.kv_transfer_time(&prefills[p].cfg, &decodes[d].cfg, &t_task);
-                    let free = link_free.get(&(p, d)).copied().unwrap_or(0.0).max(now);
-                    let done = free + xfer;
-                    link_free.insert((p, d), done);
-                    q.push(done, Ev::KvArrive { d, r });
-                }
-                prefills[p].busy = false;
-                maybe_start_prefill(p, now, &mut prefills, reqs, &cm, &mut q);
-            }
-            Ev::KvArrive { d, r } => {
-                decodes[d].waiting.push_back(r);
-                maybe_start_step(d, now, &mut decodes, reqs, &cm, &mut q);
-            }
-            Ev::Step(d) => {
-                let st = &mut decodes[d];
-                st.stepping = false;
-                let mut finished = Vec::new();
-                for run in st.running.iter_mut() {
-                    run.generated += 1;
-                    if run.generated >= reqs[run.req].output_len {
-                        finished.push(run.req);
-                    }
-                }
-                st.running.retain(|run| run.generated < reqs[run.req].output_len);
-                for r in finished {
-                    records.push(RequestRecord {
-                        id: reqs[r].id,
-                        arrival: reqs[r].arrival,
-                        prefill_done: prefill_done_at[r],
-                        completion: now,
-                        input_len: reqs[r].input_len,
-                        output_len: reqs[r].output_len,
-                        slo_base: slo_base(model, &reqs[r]),
-                    });
-                }
-                maybe_start_step(d, now, &mut decodes, reqs, &cm, &mut q);
-            }
-        }
-    }
-
-    SimReport::from_records(records)
+    let sw: Vec<SwitchSpec> = switches.iter().map(SwitchSpec::from).collect();
+    simulate(
+        cluster,
+        model,
+        &ServingSpec::Disaggregated(initial.clone()),
+        &sw,
+        trace,
+        &SimConfig::default(),
+    )
 }
 
 #[cfg(test)]
@@ -451,6 +126,7 @@ mod tests {
         let trace = Trace::offline(WorkloadKind::Lpld, 40, 1);
         let rep = run_disaggregated(&c, &OPT_30B, &p, &trace);
         assert_eq!(rep.records.len(), 40, "lost requests");
+        assert_eq!(rep.stats.unserved, 0);
         assert!(rep.tokens_per_s() > 0.0);
         for r in &rep.records {
             assert!(r.prefill_done >= r.arrival);
@@ -491,6 +167,23 @@ mod tests {
         let est = p.tokens_per_s;
         let sim = rep.tokens_per_s();
         assert!(sim > est * 0.3 && sim < est * 3.0, "est {est} vs sim {sim}");
+    }
+
+    #[test]
+    fn chunked_prefill_disagg_completes_and_keeps_throughput() {
+        // The SARATHI-style chunking the engine now supports on dedicated
+        // prefill replicas: long prompts spread over iterations, nothing is
+        // lost, and throughput stays in the plain engine's ballpark.
+        let (c, p) = small_placement();
+        let trace = Trace::offline(WorkloadKind::Hpld, 60, 4);
+        let plain = run_disaggregated(&c, &OPT_30B, &p, &trace);
+        let cfg = SimConfig { chunked_prefill: Some(512), ..SimConfig::default() };
+        let chunked = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &cfg);
+        assert_eq!(chunked.records.len(), plain.records.len(), "chunking lost requests");
+        assert!(chunked.tokens_per_s() > plain.tokens_per_s() * 0.5);
+        for r in &chunked.records {
+            assert!(r.prefill_done >= r.arrival && r.completion > r.prefill_done);
+        }
     }
 
     #[test]

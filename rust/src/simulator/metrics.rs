@@ -30,6 +30,30 @@ impl RequestRecord {
     }
 }
 
+/// Engine-level counters the per-request records cannot express: memory
+/// pressure, rejections, link contention. Filled by the unified simulation
+/// core ([`simulate`](crate::simulator::simulate)); zeroed on reports built
+/// purely from records (e.g. [`SimReport::windowed`] sub-reports and the
+/// live coordinator's report).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimStats {
+    /// Admissions deferred because a replica's KV/activation memory was
+    /// full (per-request accounting mode): each count is one service
+    /// boundary at which the head of a queue could not be admitted.
+    pub mem_stalls: usize,
+    /// Requests dropped because they exceed every eligible replica's
+    /// resident-token capacity outright.
+    pub rejected: usize,
+    /// Requests that arrived but were never completed (rejected, stranded
+    /// in a migration blackout, or still queued when events ran dry).
+    pub unserved: usize,
+    /// Peak total resident sequence tokens across all replicas
+    /// (per-request accounting mode).
+    pub peak_resident_tokens: f64,
+    /// Total seconds KV transfers spent queued behind a busy link.
+    pub kv_link_wait_s: f64,
+}
+
 /// Aggregated simulation report.
 #[derive(Clone, Debug)]
 pub struct SimReport {
@@ -38,6 +62,8 @@ pub struct SimReport {
     pub makespan: f64,
     pub total_output_tokens: usize,
     pub total_input_tokens: usize,
+    /// Engine-level counters (memory pressure, rejections, link waits).
+    pub stats: SimStats,
 }
 
 impl SimReport {
@@ -47,7 +73,13 @@ impl SimReport {
         let makespan = if records.is_empty() { 0.0 } else { (last - first).max(1e-9) };
         let total_output_tokens = records.iter().map(|r| r.output_len).sum();
         let total_input_tokens = records.iter().map(|r| r.input_len).sum();
-        SimReport { records, makespan, total_output_tokens, total_input_tokens }
+        SimReport {
+            records,
+            makespan,
+            total_output_tokens,
+            total_input_tokens,
+            stats: SimStats::default(),
+        }
     }
 
     /// The paper's offline metric: generated tokens per second.

@@ -1,27 +1,40 @@
 //! Discrete-event simulation of LLM serving on a heterogeneous cluster,
 //! driven by the Table-1 cost model (the executable substitute for the
-//! paper's RunPod testbed — DESIGN.md §1). Callers normally reach these
-//! engines through [`deploy::SimBackend`](crate::deploy::SimBackend) /
+//! paper's RunPod testbed — DESIGN.md §1). Callers normally reach the
+//! engine through [`deploy::SimBackend`](crate::deploy::SimBackend) /
 //! [`deploy::ReschedBackend`](crate::deploy::ReschedBackend).
 //!
-//! Two engines:
-//! - [`disagg::run_disaggregated`]: HexGen-2/DistServe-style serving over a
-//!   [`Placement`](crate::scheduler::Placement) — prefill queues + batching,
-//!   per-route KV-transfer links with serialization, decode continuous
-//!   batching.
-//! - [`colocated::run_colocated`]: HexGen/vLLM-style colocated serving where
-//!   each iteration interleaves prefill and decode on the same replica (the
+//! One engine ([`core`], DESIGN.md §9): a single event-driven driver with
+//! pluggable [`ReplicaPolicy`] phase policies —
+//! - [`run_disaggregated`]: HexGen-2/DistServe-style serving over a
+//!   [`Placement`](crate::scheduler::Placement) — prefill token-budget
+//!   batching (optionally chunked), per-link KV-transfer queues, decode
+//!   continuous batching gated on KV arrival.
+//! - [`run_colocated`]: HexGen/vLLM-style colocated serving where each
+//!   iteration interleaves prefill and decode on the same replica (the
 //!   prefill-decoding interference the paper eliminates), with optional
 //!   SARATHI-style chunked prefill (Appendix D).
+//! - [`simulate`]: the core entry itself — arbitrary epoch sequences
+//!   (disaggregated and/or colocated) with quiesce/drain/activate
+//!   rescheduling, static-mean or per-request memory accounting
+//!   ([`SimConfig`]).
 
 pub mod colocated;
+pub mod core;
 pub mod disagg;
 pub mod events;
 pub mod metrics;
 
-pub use colocated::run_colocated;
-pub use disagg::{run_disaggregated, run_disaggregated_with_resched, PlacementSwitch};
-pub use metrics::{RequestRecord, SimReport};
+pub use colocated::{run_colocated, run_colocated_cfg};
+// `self::` disambiguates the submodule from the `core` crate.
+pub use self::core::{
+    simulate, LinkModel, Outcome, PolicyEnv, PolicyKind, ReplicaPolicy, ServingSpec, SimConfig,
+    Sizing, SwitchSpec,
+};
+pub use disagg::{
+    run_disaggregated, run_disaggregated_cfg, run_disaggregated_with_resched, PlacementSwitch,
+};
+pub use metrics::{RequestRecord, SimReport, SimStats};
 
 use crate::cluster::GpuType;
 use crate::model::LlmSpec;

@@ -43,6 +43,17 @@ pub fn sample_conversation(rng: &mut Rng) -> (usize, usize) {
     (input, output)
 }
 
+/// Extreme-dispersion mixture for the `heavy_tail` workload alias: mostly
+/// short prompts with rare multi-thousand-token outliers (σ≈1.3 log-normal,
+/// clamped at 16k). Means sit near the conversation trace's, but the p95/
+/// mean ratio is far larger — the regime where mean-length batch sizing
+/// breaks and per-request KV accounting matters.
+pub fn sample_heavy_tail(rng: &mut Rng) -> (usize, usize) {
+    let input = ln_clamped(rng, 6.2, 1.3, 16, 16_384);
+    let output = ln_clamped(rng, 4.6, 1.1, 4, 2_048);
+    (input, output)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,5 +94,18 @@ mod tests {
         let m = mean(&xs);
         let p95 = crate::util::stats::percentile(&xs, 95.0);
         assert!(p95 > 2.0 * m, "p95 {p95} vs mean {m}");
+    }
+
+    #[test]
+    fn heavy_tail_workload_disperses_beyond_conversation() {
+        // The heavy_tail alias must be substantially more dispersed than the
+        // conversation mixture: higher p95/mean, with outliers past 8k.
+        let mut rng = Rng::new(9);
+        let xs: Vec<f64> = (0..20_000).map(|_| sample_heavy_tail(&mut rng).0 as f64).collect();
+        let m = mean(&xs);
+        let p95 = crate::util::stats::percentile(&xs, 95.0);
+        assert!(p95 > 3.0 * m, "p95 {p95} vs mean {m}");
+        assert!(xs.iter().any(|&x| x > 8192.0), "no deep-tail outliers");
+        assert!((400.0..2500.0).contains(&m), "mean input {m}");
     }
 }

@@ -36,6 +36,10 @@ pub enum WorkloadKind {
     /// Mixed online trace sampled from the Azure-conversation-like
     /// distribution (Fig. 5).
     Online,
+    /// Extreme length dispersion (σ≈1.3 log-normal, outliers to 16k
+    /// tokens): the stress case for per-request KV admission, where mean
+    /// lengths say nothing about memory demand.
+    HeavyTail,
 }
 
 pub const OFFLINE_KINDS: [WorkloadKind; 4] =
@@ -49,6 +53,7 @@ impl WorkloadKind {
             WorkloadKind::Lphd => "LPHD",
             WorkloadKind::Lpld => "LPLD",
             WorkloadKind::Online => "Online",
+            WorkloadKind::HeavyTail => "HEAVY_TAIL",
         }
     }
 
@@ -59,6 +64,7 @@ impl WorkloadKind {
             "LPHD" => Some(WorkloadKind::Lphd),
             "LPLD" => Some(WorkloadKind::Lpld),
             "ONLINE" => Some(WorkloadKind::Online),
+            "HEAVY_TAIL" | "HEAVY-TAIL" | "HEAVYTAIL" => Some(WorkloadKind::HeavyTail),
             _ => None,
         }
     }
@@ -71,6 +77,7 @@ impl WorkloadKind {
             WorkloadKind::Lphd => (azure::sample_light_prefill(rng), azure::sample_heavy_decode(rng)),
             WorkloadKind::Lpld => (azure::sample_light_prefill(rng), azure::sample_light_decode(rng)),
             WorkloadKind::Online => azure::sample_conversation(rng),
+            WorkloadKind::HeavyTail => azure::sample_heavy_tail(rng),
         }
     }
 
@@ -83,6 +90,8 @@ impl WorkloadKind {
             WorkloadKind::Lphd => (256.0, 256.0),
             WorkloadKind::Lpld => (256.0, 64.0),
             WorkloadKind::Online => (1020.0, 211.0),
+            // Means alone badly undersell this class — that is the point.
+            WorkloadKind::HeavyTail => (1100.0, 180.0),
         }
     }
 }
@@ -234,7 +243,7 @@ mod tests {
                         assert!(r.input_len <= HEAVY_PREFILL_THRESHOLD);
                         assert!(r.output_len <= HEAVY_DECODE_THRESHOLD);
                     }
-                    WorkloadKind::Online => unreachable!(),
+                    _ => unreachable!(),
                 }
             }
         }
@@ -296,10 +305,19 @@ mod tests {
 
     #[test]
     fn name_roundtrip() {
-        for k in [WorkloadKind::Hpld, WorkloadKind::Hphd, WorkloadKind::Lphd, WorkloadKind::Lpld, WorkloadKind::Online] {
+        for k in [
+            WorkloadKind::Hpld,
+            WorkloadKind::Hphd,
+            WorkloadKind::Lphd,
+            WorkloadKind::Lpld,
+            WorkloadKind::Online,
+            WorkloadKind::HeavyTail,
+        ] {
             assert_eq!(WorkloadKind::from_name(k.name()), Some(k));
         }
         assert_eq!(WorkloadKind::from_name("hpld"), Some(WorkloadKind::Hpld));
+        // CLI alias: `--workload heavy_tail`.
+        assert_eq!(WorkloadKind::from_name("heavy_tail"), Some(WorkloadKind::HeavyTail));
     }
 
     #[test]

@@ -1,0 +1,732 @@
+//! Golden parity: the unified simulation core reproduces the pre-refactor
+//! engines' per-request timelines and aggregates within 1e-9.
+//!
+//! `legacy` below is a frozen, verbatim port of the two pre-refactor event
+//! loops (`simulator/disagg.rs` @ 580 LoC and `simulator/colocated.rs` @
+//! 353 LoC, commit 8e920f9) against the crate's public cost-model/queue
+//! APIs. It exists only as the parity reference — the production path is
+//! the single engine in `simulator::core`.
+//!
+//! The new engine runs with `static_prefill_cap: Some(16)`, pinning the one
+//! deliberate sizing change of the refactor (the old hardcoded `1..=16`
+//! prefill-batch scan, now memory-derived by default) so these tests
+//! isolate the *engine* refactor. The cap fix itself is verified
+//! independently in `costmodel` and `tests/sim_core.rs`.
+
+use hexgen2::cluster::settings;
+use hexgen2::model::OPT_30B;
+use hexgen2::scheduler::{self, Placement, ScheduleOptions};
+use hexgen2::simulator::{
+    run_colocated_cfg, run_disaggregated_cfg, simulate, PlacementSwitch, ServingSpec, SimConfig,
+    SimReport, SwitchSpec,
+};
+use hexgen2::workload::{Trace, WorkloadKind};
+
+/// Frozen pre-refactor engines (reference implementation for parity only).
+mod legacy {
+    use std::collections::{HashMap, VecDeque};
+
+    use hexgen2::cluster::Cluster;
+    use hexgen2::costmodel::{CostModel, ReplicaConfig, TaskProfile};
+    use hexgen2::model::LlmSpec;
+    use hexgen2::scheduler::Placement;
+    use hexgen2::simulator::events::EventQueue;
+    use hexgen2::simulator::metrics::{RequestRecord, SimReport};
+    use hexgen2::simulator::{slo_base, PlacementSwitch, PREFILL_TOKEN_BUDGET};
+    use hexgen2::workload::{Request, Trace};
+
+    #[derive(Clone, Copy, Debug)]
+    enum Ev {
+        Arrive(usize),
+        PrefillDone(usize),
+        KvArrive { d: usize, r: usize },
+        Step(usize),
+        Resched(usize),
+        Activate(usize),
+    }
+
+    struct PrefillState {
+        cfg: ReplicaConfig,
+        queue: VecDeque<usize>,
+        busy: bool,
+        batch: Vec<usize>,
+        max_batch: usize,
+        assigned: f64,
+        weight: f64,
+    }
+
+    struct Running {
+        req: usize,
+        generated: usize,
+    }
+
+    struct DecodeState {
+        cfg: ReplicaConfig,
+        running: Vec<Running>,
+        waiting: VecDeque<usize>,
+        stepping: bool,
+        max_batch: usize,
+        assigned_from: HashMap<usize, f64>,
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_replicas(
+        cm: &CostModel,
+        placement: &Placement,
+        s_in_mean: f64,
+        task: &TaskProfile,
+        prefills: &mut Vec<PrefillState>,
+        decodes: &mut Vec<DecodeState>,
+        route_w: &mut HashMap<(usize, usize), f64>,
+    ) -> Option<Vec<usize>> {
+        let mut p_of_group: HashMap<usize, usize> = HashMap::new();
+        let mut d_of_group: HashMap<usize, usize> = HashMap::new();
+        let p_base = prefills.len();
+        let d_base = decodes.len();
+        for (gi, g) in placement.groups.iter().enumerate() {
+            let Some(cfg) = g.config.clone() else { continue };
+            if g.capacity <= 0.0 {
+                continue;
+            }
+            if g.is_prefill {
+                // The pre-refactor hardcoded 1..=16 prefill-batch scan.
+                let mut mb = 1;
+                for b in 1..=16 {
+                    if cm.memory_ok(&cfg, &TaskProfile::new(b, s_in_mean, 0.0)) {
+                        mb = b;
+                    }
+                }
+                p_of_group.insert(gi, prefills.len());
+                prefills.push(PrefillState {
+                    cfg,
+                    queue: VecDeque::new(),
+                    busy: false,
+                    batch: Vec::new(),
+                    max_batch: mb,
+                    assigned: 0.0,
+                    weight: 0.0,
+                });
+            } else {
+                let mb = cm.max_decode_batch(&cfg, task).max(1);
+                d_of_group.insert(gi, decodes.len());
+                decodes.push(DecodeState {
+                    cfg,
+                    running: Vec::new(),
+                    waiting: VecDeque::new(),
+                    stepping: false,
+                    max_batch: mb,
+                    assigned_from: HashMap::new(),
+                });
+            }
+        }
+        if prefills.len() == p_base || decodes.len() == d_base {
+            prefills.truncate(p_base);
+            decodes.truncate(d_base);
+            return None;
+        }
+        for r in &placement.routes {
+            let (Some(&p), Some(&d)) = (p_of_group.get(&r.prefill), d_of_group.get(&r.decode))
+            else {
+                continue;
+            };
+            if r.flow > 1e-9 {
+                *route_w.entry((p, d)).or_default() += r.flow;
+                prefills[p].weight += r.flow;
+            }
+        }
+        for p in p_base..prefills.len() {
+            if prefills[p].weight <= 0.0 {
+                for d in d_base..decodes.len() {
+                    route_w.insert((p, d), 1e-6);
+                }
+                prefills[p].weight = 1e-6 * (decodes.len() - d_base) as f64;
+            }
+        }
+        Some((p_base..prefills.len()).collect())
+    }
+
+    fn pick_prefill(prefills: &[PrefillState], active: &[usize]) -> usize {
+        *active
+            .iter()
+            .max_by(|&&a, &&b| {
+                let fa = prefills[a].weight / (prefills[a].assigned + 1.0);
+                let fb = prefills[b].weight / (prefills[b].assigned + 1.0);
+                fa.partial_cmp(&fb).unwrap()
+            })
+            .expect("no active prefill replica")
+    }
+
+    fn maybe_start_prefill(
+        p: usize,
+        now: f64,
+        prefills: &mut [PrefillState],
+        reqs: &[Request],
+        cm: &CostModel,
+        q: &mut EventQueue<Ev>,
+    ) {
+        let st = &mut prefills[p];
+        if st.busy || st.queue.is_empty() {
+            return;
+        }
+        let mut batch = Vec::new();
+        let mut tokens = 0.0;
+        let mut max_len = 0usize;
+        while let Some(&r) = st.queue.front() {
+            let len = reqs[r].input_len;
+            if !batch.is_empty()
+                && (tokens + len as f64 > PREFILL_TOKEN_BUDGET || batch.len() >= st.max_batch)
+            {
+                break;
+            }
+            st.queue.pop_front();
+            tokens += len as f64;
+            max_len = max_len.max(len);
+            batch.push(r);
+        }
+        let t = TaskProfile::new(batch.len(), max_len as f64, 0.0);
+        let lat = cm.prefill_latency(&st.cfg, &t);
+        st.busy = true;
+        st.batch = batch;
+        q.push(now + lat, Ev::PrefillDone(p));
+    }
+
+    fn maybe_start_step(
+        d: usize,
+        now: f64,
+        decodes: &mut [DecodeState],
+        reqs: &[Request],
+        cm: &CostModel,
+        q: &mut EventQueue<Ev>,
+    ) {
+        let st = &mut decodes[d];
+        if st.stepping {
+            return;
+        }
+        while st.running.len() < st.max_batch {
+            match st.waiting.pop_front() {
+                Some(r) => st.running.push(Running { req: r, generated: 0 }),
+                None => break,
+            }
+        }
+        if st.running.is_empty() {
+            return;
+        }
+        let avg_ctx = st
+            .running
+            .iter()
+            .map(|r| (reqs[r.req].input_len + r.generated) as f64)
+            .sum::<f64>()
+            / st.running.len() as f64;
+        let lat = cm.decode_step_latency(&st.cfg, st.running.len(), avg_ctx);
+        st.stepping = true;
+        q.push(now + lat, Ev::Step(d));
+    }
+
+    pub fn run_disaggregated(
+        cluster: &Cluster,
+        model: &LlmSpec,
+        placement: &Placement,
+        trace: &Trace,
+    ) -> SimReport {
+        run_disaggregated_with_resched(cluster, model, placement, &[], trace)
+    }
+
+    pub fn run_disaggregated_with_resched(
+        cluster: &Cluster,
+        model: &LlmSpec,
+        initial: &Placement,
+        switches: &[PlacementSwitch],
+        trace: &Trace,
+    ) -> SimReport {
+        let cm = CostModel::new(cluster, model);
+        let (s_in_mean, s_out_mean) = trace.kind.mean_lengths();
+        let task = TaskProfile::new(1, s_in_mean, s_out_mean);
+
+        let mut prefills: Vec<PrefillState> = Vec::new();
+        let mut decodes: Vec<DecodeState> = Vec::new();
+        let mut route_w: HashMap<(usize, usize), f64> = HashMap::new();
+
+        let Some(mut active_p) = build_replicas(
+            &cm,
+            initial,
+            s_in_mean,
+            &task,
+            &mut prefills,
+            &mut decodes,
+            &mut route_w,
+        ) else {
+            return SimReport::from_records(vec![]);
+        };
+
+        let reqs = &trace.requests;
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        for (i, r) in reqs.iter().enumerate() {
+            q.push(r.arrival, Ev::Arrive(i));
+        }
+        for (i, s) in switches.iter().enumerate() {
+            q.push(s.at, Ev::Resched(i));
+            q.push(s.at + s.delay, Ev::Activate(i));
+        }
+
+        let mut link_free: HashMap<(usize, usize), f64> = HashMap::new();
+        let mut prefill_done_at: Vec<f64> = vec![0.0; reqs.len()];
+        let mut records: Vec<RequestRecord> = Vec::new();
+        let mut holding: Vec<usize> = Vec::new();
+        let mut quiesced: Vec<Vec<usize>> = vec![Vec::new(); switches.len()];
+
+        while let Some((now, ev)) = q.pop() {
+            match ev {
+                Ev::Arrive(r) => {
+                    if active_p.is_empty() {
+                        holding.push(r);
+                    } else {
+                        let p = pick_prefill(&prefills, &active_p);
+                        prefills[p].assigned += 1.0;
+                        prefills[p].queue.push_back(r);
+                        maybe_start_prefill(p, now, &mut prefills, reqs, &cm, &mut q);
+                    }
+                }
+                Ev::Resched(i) => {
+                    quiesced[i] = std::mem::take(&mut active_p);
+                    let mut pulled: Vec<usize> = Vec::new();
+                    for &p in &quiesced[i] {
+                        pulled.extend(prefills[p].queue.drain(..));
+                    }
+                    pulled.sort_unstable();
+                    holding.extend(pulled);
+                }
+                Ev::Activate(i) => {
+                    let (sw_s_in, sw_s_out) = switches[i]
+                        .workload
+                        .map(|k| k.mean_lengths())
+                        .unwrap_or((s_in_mean, s_out_mean));
+                    let sw_task = TaskProfile::new(1, sw_s_in, sw_s_out);
+                    match build_replicas(
+                        &cm,
+                        &switches[i].placement,
+                        sw_s_in,
+                        &sw_task,
+                        &mut prefills,
+                        &mut decodes,
+                        &mut route_w,
+                    ) {
+                        Some(fresh) => active_p = fresh,
+                        None => active_p = std::mem::take(&mut quiesced[i]),
+                    }
+                    for r in std::mem::take(&mut holding) {
+                        let p = pick_prefill(&prefills, &active_p);
+                        prefills[p].assigned += 1.0;
+                        prefills[p].queue.push_back(r);
+                        maybe_start_prefill(p, now, &mut prefills, reqs, &cm, &mut q);
+                    }
+                }
+                Ev::PrefillDone(p) => {
+                    let batch = std::mem::take(&mut prefills[p].batch);
+                    for r in batch {
+                        prefill_done_at[r] = now;
+                        let d = (0..decodes.len())
+                            .filter(|&d| route_w.contains_key(&(p, d)))
+                            .max_by(|&a, &b| {
+                                let wa = route_w[&(p, a)]
+                                    / (decodes[a].assigned_from.get(&p).copied().unwrap_or(0.0)
+                                        + 1.0);
+                                let wb = route_w[&(p, b)]
+                                    / (decodes[b].assigned_from.get(&p).copied().unwrap_or(0.0)
+                                        + 1.0);
+                                wa.partial_cmp(&wb).unwrap()
+                            })
+                            .unwrap_or(0);
+                        *decodes[d].assigned_from.entry(p).or_default() += 1.0;
+                        let t_task = TaskProfile::new(1, reqs[r].input_len as f64, 0.0);
+                        let xfer = cm.kv_transfer_time(&prefills[p].cfg, &decodes[d].cfg, &t_task);
+                        let free = link_free.get(&(p, d)).copied().unwrap_or(0.0).max(now);
+                        let done = free + xfer;
+                        link_free.insert((p, d), done);
+                        q.push(done, Ev::KvArrive { d, r });
+                    }
+                    prefills[p].busy = false;
+                    maybe_start_prefill(p, now, &mut prefills, reqs, &cm, &mut q);
+                }
+                Ev::KvArrive { d, r } => {
+                    decodes[d].waiting.push_back(r);
+                    maybe_start_step(d, now, &mut decodes, reqs, &cm, &mut q);
+                }
+                Ev::Step(d) => {
+                    let st = &mut decodes[d];
+                    st.stepping = false;
+                    let mut finished = Vec::new();
+                    for run in st.running.iter_mut() {
+                        run.generated += 1;
+                        if run.generated >= reqs[run.req].output_len {
+                            finished.push(run.req);
+                        }
+                    }
+                    st.running.retain(|run| run.generated < reqs[run.req].output_len);
+                    for r in finished {
+                        records.push(RequestRecord {
+                            id: reqs[r].id,
+                            arrival: reqs[r].arrival,
+                            prefill_done: prefill_done_at[r],
+                            completion: now,
+                            input_len: reqs[r].input_len,
+                            output_len: reqs[r].output_len,
+                            slo_base: slo_base(model, &reqs[r]),
+                        });
+                    }
+                    maybe_start_step(d, now, &mut decodes, reqs, &cm, &mut q);
+                }
+            }
+        }
+
+        SimReport::from_records(records)
+    }
+
+    // ------------------ legacy colocated engine ------------------
+
+    #[derive(Clone, Copy, Debug)]
+    enum CEv {
+        Arrive(usize),
+        IterDone(usize),
+    }
+
+    struct PendingPrefill {
+        req: usize,
+        remaining: usize,
+    }
+
+    struct Replica {
+        cfg: ReplicaConfig,
+        queue: VecDeque<PendingPrefill>,
+        running: Vec<Running>,
+        iterating: bool,
+        max_batch: usize,
+        inflight_prefill: Vec<PendingPrefill>,
+    }
+
+    pub fn run_colocated(
+        cluster: &Cluster,
+        model: &LlmSpec,
+        replicas: &[ReplicaConfig],
+        trace: &Trace,
+        chunk: Option<usize>,
+    ) -> SimReport {
+        let cm = CostModel::new(cluster, model);
+        let (s_in_mean, s_out_mean) = trace.kind.mean_lengths();
+        let task = TaskProfile::new(1, s_in_mean, s_out_mean);
+
+        let mut reps: Vec<Replica> = replicas
+            .iter()
+            .filter(|cfg| cm.memory_ok(cfg, &task))
+            .map(|cfg| {
+                let mb = cm.max_decode_batch(cfg, &task).max(1);
+                Replica {
+                    cfg: cfg.clone(),
+                    queue: VecDeque::new(),
+                    running: Vec::new(),
+                    iterating: false,
+                    max_batch: mb,
+                    inflight_prefill: Vec::new(),
+                }
+            })
+            .collect();
+        if reps.is_empty() {
+            return SimReport::from_records(vec![]);
+        }
+
+        let reqs = &trace.requests;
+        let mut q: EventQueue<CEv> = EventQueue::new();
+        for (i, r) in reqs.iter().enumerate() {
+            q.push(r.arrival, CEv::Arrive(i));
+        }
+
+        let mut prefill_done_at = vec![0.0f64; reqs.len()];
+        let mut records: Vec<RequestRecord> = Vec::new();
+
+        fn maybe_start_iter(
+            ri: usize,
+            now: f64,
+            reps: &mut [Replica],
+            reqs: &[Request],
+            cm: &CostModel,
+            chunk: Option<usize>,
+            q: &mut EventQueue<CEv>,
+        ) {
+            let st = &mut reps[ri];
+            if st.iterating {
+                return;
+            }
+            let per_req = chunk.unwrap_or(usize::MAX);
+            let projected = |infl: &[PendingPrefill]| -> f64 {
+                infl.iter().map(|p| p.remaining.min(per_req) as f64).sum()
+            };
+            while st.running.len() + st.inflight_prefill.len() < st.max_batch {
+                let Some(p) = st.queue.front() else { break };
+                let next_work = p.remaining.min(per_req) as f64;
+                if !st.inflight_prefill.is_empty()
+                    && projected(&st.inflight_prefill) + next_work > PREFILL_TOKEN_BUDGET
+                {
+                    break;
+                }
+                let p = st.queue.pop_front().unwrap();
+                st.inflight_prefill.push(p);
+            }
+            if st.running.is_empty() && st.inflight_prefill.is_empty() {
+                return;
+            }
+            let mut pf_tokens = 0.0;
+            let mut pf_reqs = 0usize;
+            for p in st.inflight_prefill.iter_mut() {
+                if pf_tokens >= PREFILL_TOKEN_BUDGET && pf_reqs > 0 {
+                    break;
+                }
+                let work = p.remaining.min(per_req);
+                if work == 0 {
+                    continue;
+                }
+                pf_tokens += work as f64;
+                p.remaining -= work;
+                pf_reqs += 1;
+            }
+            let avg_ctx = if st.running.is_empty() {
+                0.0
+            } else {
+                st.running
+                    .iter()
+                    .map(|r| (reqs[r.req].input_len + r.generated) as f64)
+                    .sum::<f64>()
+                    / st.running.len() as f64
+            };
+            let mut lat = 0.0;
+            if pf_reqs > 0 && chunk.is_some() {
+                let fused_tokens = pf_tokens + st.running.len() as f64;
+                let pf_t = cm.prefill_latency(&st.cfg, &TaskProfile::new(1, fused_tokens, 0.0));
+                let dec_t = if st.running.is_empty() {
+                    0.0
+                } else {
+                    cm.decode_step_latency(&st.cfg, st.running.len(), avg_ctx)
+                };
+                lat += pf_t.max(dec_t);
+            } else {
+                if pf_reqs > 0 {
+                    let t = TaskProfile::new(pf_reqs, pf_tokens / pf_reqs as f64, 0.0);
+                    lat += cm.prefill_latency(&st.cfg, &t);
+                }
+                if !st.running.is_empty() {
+                    lat += cm.decode_step_latency(&st.cfg, st.running.len(), avg_ctx);
+                }
+            }
+            st.iterating = true;
+            q.push(now + lat, CEv::IterDone(ri));
+        }
+
+        while let Some((now, ev)) = q.pop() {
+            match ev {
+                CEv::Arrive(r) => {
+                    let ri = (0..reps.len())
+                        .min_by_key(|&i| {
+                            reps[i].queue.len()
+                                + reps[i].running.len()
+                                + reps[i].inflight_prefill.len()
+                        })
+                        .unwrap();
+                    reps[ri]
+                        .queue
+                        .push_back(PendingPrefill { req: r, remaining: reqs[r].input_len });
+                    maybe_start_iter(ri, now, &mut reps, reqs, &cm, chunk, &mut q);
+                }
+                CEv::IterDone(ri) => {
+                    let st = &mut reps[ri];
+                    st.iterating = false;
+                    let mut finished = Vec::new();
+                    for run in st.running.iter_mut() {
+                        run.generated += 1;
+                        if run.generated >= reqs[run.req].output_len {
+                            finished.push(run.req);
+                        }
+                    }
+                    st.running.retain(|run| run.generated < reqs[run.req].output_len);
+                    let mut done_pf = Vec::new();
+                    st.inflight_prefill.retain(|p| {
+                        if p.remaining == 0 {
+                            done_pf.push(p.req);
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    for r in done_pf {
+                        prefill_done_at[r] = now;
+                        if reqs[r].output_len <= 1 {
+                            finished.push(r);
+                        } else {
+                            st.running.push(Running { req: r, generated: 1 });
+                        }
+                    }
+                    for r in finished {
+                        records.push(RequestRecord {
+                            id: reqs[r].id,
+                            arrival: reqs[r].arrival,
+                            prefill_done: prefill_done_at[r],
+                            completion: now,
+                            input_len: reqs[r].input_len,
+                            output_len: reqs[r].output_len,
+                            slo_base: slo_base(model, &reqs[r]),
+                        });
+                    }
+                    maybe_start_iter(ri, now, &mut reps, reqs, &cm, chunk, &mut q);
+                }
+            }
+        }
+
+        SimReport::from_records(records)
+    }
+}
+
+/// The unified engine pinned to the legacy prefill-batch cap.
+fn legacy_compatible_cfg() -> SimConfig {
+    SimConfig { static_prefill_cap: Some(16), ..SimConfig::default() }
+}
+
+fn assert_reports_match(new: &SimReport, old: &SimReport, what: &str) {
+    assert_eq!(new.records.len(), old.records.len(), "{what}: record count");
+    let mut a = new.records.clone();
+    let mut b = old.records.clone();
+    a.sort_by_key(|r| r.id);
+    b.sort_by_key(|r| r.id);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id, "{what}: id order");
+        assert_eq!(x.input_len, y.input_len, "{what}: input_len of {}", x.id);
+        assert_eq!(x.output_len, y.output_len, "{what}: output_len of {}", x.id);
+        assert!((x.arrival - y.arrival).abs() <= 1e-9, "{what}: arrival of {}", x.id);
+        assert!(
+            (x.prefill_done - y.prefill_done).abs() <= 1e-9,
+            "{what}: prefill_done of {}: {} vs {}",
+            x.id,
+            x.prefill_done,
+            y.prefill_done
+        );
+        assert!(
+            (x.completion - y.completion).abs() <= 1e-9,
+            "{what}: completion of {}: {} vs {}",
+            x.id,
+            x.completion,
+            y.completion
+        );
+    }
+    for (na, oa, label) in [
+        (new.tokens_per_s(), old.tokens_per_s(), "tokens_per_s"),
+        (new.avg_latency(), old.avg_latency(), "avg_latency"),
+        (new.avg_ttft(), old.avg_ttft(), "avg_ttft"),
+        (new.p_latency(95.0), old.p_latency(95.0), "p95"),
+    ] {
+        assert!(
+            (na - oa).abs() <= 1e-9 * oa.abs().max(1.0),
+            "{what}: {label} {na} vs {oa}"
+        );
+    }
+}
+
+fn schedule(
+    cluster: &hexgen2::cluster::Cluster,
+    kind: WorkloadKind,
+    k: usize,
+    seed: u64,
+) -> Placement {
+    let mut opts = ScheduleOptions::new(kind);
+    opts.max_rounds = 4;
+    opts.force_k = Some(k);
+    opts.seed = seed;
+    scheduler::schedule(cluster, &OPT_30B, &opts).expect("schedules").placement
+}
+
+#[test]
+fn disagg_parity_on_case_study() {
+    // The acceptance scenario: OPT-30B on the case_study setting.
+    let c = settings::case_study();
+    let p = schedule(&c, WorkloadKind::Lphd, 4, 0);
+    let cfg = legacy_compatible_cfg();
+    for trace in [
+        Trace::offline(WorkloadKind::Lphd, 60, 3),
+        Trace::offline(WorkloadKind::Hpld, 40, 9),
+        Trace::online(WorkloadKind::Lphd, 2.0, 90.0, 5),
+    ] {
+        let old = legacy::run_disaggregated(&c, &OPT_30B, &p, &trace);
+        let new = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &cfg);
+        assert!(!old.records.is_empty(), "legacy reference produced nothing");
+        assert_reports_match(&new, &old, "case_study disagg");
+    }
+}
+
+#[test]
+fn disagg_parity_on_small_homogeneous() {
+    let c = settings::homogeneous_small();
+    let p = schedule(&c, WorkloadKind::Lpld, 2, 0);
+    let cfg = legacy_compatible_cfg();
+    for trace in [
+        Trace::offline(WorkloadKind::Lpld, 40, 1),
+        Trace::offline(WorkloadKind::Hphd, 30, 5),
+    ] {
+        let old = legacy::run_disaggregated(&c, &OPT_30B, &p, &trace);
+        let new = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &cfg);
+        assert_reports_match(&new, &old, "homogeneous_small disagg");
+    }
+}
+
+#[test]
+fn resched_parity_across_switch() {
+    // The quiesce → drain → activate path, timeline-for-timeline.
+    let c = settings::case_study();
+    let p1 = schedule(&c, WorkloadKind::Lphd, 4, 0);
+    let p2 = schedule(&c, WorkloadKind::Hpld, 4, 99);
+    let trace = Trace::online(WorkloadKind::Lphd, 1.5, 120.0, 4);
+    let switches = vec![PlacementSwitch {
+        at: 60.0,
+        delay: 5.0,
+        placement: p2,
+        workload: Some(WorkloadKind::Hpld),
+    }];
+    let old = legacy::run_disaggregated_with_resched(&c, &OPT_30B, &p1, &switches, &trace);
+    let sw: Vec<SwitchSpec> = switches.iter().map(SwitchSpec::from).collect();
+    let new = simulate(
+        &c,
+        &OPT_30B,
+        &ServingSpec::Disaggregated(p1.clone()),
+        &sw,
+        &trace,
+        &legacy_compatible_cfg(),
+    );
+    assert_eq!(old.records.len(), trace.requests.len(), "legacy lost requests");
+    assert_reports_match(&new, &old, "resched switch");
+}
+
+#[test]
+fn colocated_parity_plain_and_chunked() {
+    use hexgen2::costmodel::ReplicaConfig;
+    let c = settings::homogeneous_small();
+    let replicas = vec![ReplicaConfig::new(vec![(0..4).collect()], vec![OPT_30B.n_layers])];
+    let cfg = legacy_compatible_cfg();
+    for (trace, chunk) in [
+        (Trace::offline(WorkloadKind::Hpld, 60, 3), None),
+        (Trace::offline(WorkloadKind::Hpld, 60, 3), Some(512)),
+        (Trace::offline(WorkloadKind::Lphd, 50, 7), None),
+        (Trace::online(WorkloadKind::Lpld, 1.0, 80.0, 2), None),
+    ] {
+        let old = legacy::run_colocated(&c, &OPT_30B, &replicas, &trace, chunk);
+        let new = run_colocated_cfg(&c, &OPT_30B, &replicas, &trace, chunk, &cfg);
+        assert_reports_match(&new, &old, "colocated");
+    }
+}
+
+#[test]
+fn colocated_parity_multi_replica() {
+    use hexgen2::costmodel::ReplicaConfig;
+    let c = settings::homogeneous();
+    let replicas = vec![
+        ReplicaConfig::new(vec![(0..4).collect()], vec![OPT_30B.n_layers]),
+        ReplicaConfig::new(vec![(4..8).collect()], vec![OPT_30B.n_layers]),
+    ];
+    let trace = Trace::offline(WorkloadKind::Lphd, 100, 4);
+    let old = legacy::run_colocated(&c, &OPT_30B, &replicas, &trace, None);
+    let new = run_colocated_cfg(&c, &OPT_30B, &replicas, &trace, None, &legacy_compatible_cfg());
+    assert_reports_match(&new, &old, "colocated multi-replica");
+}

@@ -1,0 +1,292 @@
+//! Unified-simulation-core contracts beyond golden parity: request
+//! conservation under oscillating rescheduling, the generalized
+//! quiesce/drain/activate path on colocated (and mixed-paradigm) epochs,
+//! per-request KV admission with observable memory pressure on heavy-tail
+//! traces, chunked-prefill disaggregation through the deploy API, and the
+//! shared-NIC link-contention model.
+
+use hexgen2::cluster::settings;
+use hexgen2::costmodel::ReplicaConfig;
+use hexgen2::deploy::{DeploymentSpec, HexGen2Planner, SimBackend, VllmPlanner};
+use hexgen2::model::OPT_30B;
+use hexgen2::scheduler::{self, Placement, ScheduleOptions};
+use hexgen2::simulator::{
+    run_disaggregated_cfg, simulate, LinkModel, PlacementSwitch, ServingSpec, SimConfig,
+    SimReport, Sizing, SwitchSpec,
+};
+use hexgen2::workload::{Trace, WorkloadKind};
+
+fn schedule(
+    cluster: &hexgen2::cluster::Cluster,
+    kind: WorkloadKind,
+    k: usize,
+    seed: u64,
+) -> Placement {
+    let mut opts = ScheduleOptions::new(kind);
+    opts.max_rounds = 4;
+    opts.force_k = Some(k);
+    opts.seed = seed;
+    scheduler::schedule(cluster, &OPT_30B, &opts).expect("schedules").placement
+}
+
+/// Conservation + causality: every arrived request is completed or
+/// explicitly accounted unserved, ids are unique, and per-request
+/// timestamps are monotone.
+fn assert_conserved(rep: &SimReport, n: usize, what: &str) {
+    assert_eq!(
+        rep.records.len() + rep.stats.unserved,
+        n,
+        "{what}: {} completed + {} unserved != {} arrived",
+        rep.records.len(),
+        rep.stats.unserved,
+        n
+    );
+    let mut ids: Vec<usize> = rep.records.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), rep.records.len(), "{what}: duplicated requests");
+    for r in &rep.records {
+        assert!(
+            r.arrival <= r.prefill_done && r.prefill_done <= r.completion,
+            "{what}: non-monotone timestamps for {}: {} / {} / {}",
+            r.id,
+            r.arrival,
+            r.prefill_done,
+            r.completion
+        );
+    }
+}
+
+#[test]
+fn conservation_under_oscillating_resched() {
+    // Three switches oscillating between two placements, blackouts
+    // included: nothing lost, nothing duplicated, timestamps monotone.
+    let c = settings::case_study();
+    let p1 = schedule(&c, WorkloadKind::Lphd, 4, 0);
+    let p2 = schedule(&c, WorkloadKind::Hpld, 4, 99);
+    let trace = Trace::online(WorkloadKind::Lphd, 1.5, 180.0, 11);
+    let n = trace.requests.len();
+    let mk = |at: f64, p: &Placement, w: WorkloadKind| PlacementSwitch {
+        at,
+        delay: 2.0,
+        placement: p.clone(),
+        workload: Some(w),
+    };
+    let switches = vec![
+        mk(40.0, &p2, WorkloadKind::Hpld),
+        mk(90.0, &p1, WorkloadKind::Lphd),
+        mk(140.0, &p2, WorkloadKind::Hpld),
+    ];
+    let sw: Vec<SwitchSpec> = switches.iter().map(SwitchSpec::from).collect();
+    let rep = simulate(
+        &c,
+        &OPT_30B,
+        &ServingSpec::Disaggregated(p1.clone()),
+        &sw,
+        &trace,
+        &SimConfig::default(),
+    );
+    assert_conserved(&rep, n, "oscillating resched");
+    // Both placements are feasible, so nothing may go unserved.
+    assert_eq!(rep.stats.unserved, 0, "feasible placements left requests unserved");
+    // The same holds under per-request accounting.
+    let cfg = SimConfig { sizing: Sizing::PerRequest, ..SimConfig::default() };
+    let rep2 = simulate(&c, &OPT_30B, &ServingSpec::Disaggregated(p1), &sw, &trace, &cfg);
+    assert_conserved(&rep2, n, "oscillating resched (per-request)");
+}
+
+#[test]
+fn resched_works_on_colocated_epochs() {
+    // The quiesce/drain/activate machinery on the *colocated* paradigm —
+    // previously locked inside the disagg loop.
+    let c = settings::homogeneous();
+    let tp4_a = ReplicaConfig::new(vec![(0..4).collect()], vec![OPT_30B.n_layers]);
+    let tp4_b = ReplicaConfig::new(vec![(4..8).collect()], vec![OPT_30B.n_layers]);
+    let initial =
+        ServingSpec::Colocated { replicas: vec![tp4_a.clone()], chunked_prefill: None };
+    let switch = SwitchSpec {
+        at: 30.0,
+        delay: 2.0,
+        to: ServingSpec::Colocated {
+            replicas: vec![tp4_a, tp4_b],
+            chunked_prefill: Some(512),
+        },
+        workload: None,
+    };
+    let trace = Trace::online(WorkloadKind::Lpld, 1.0, 80.0, 2);
+    let n = trace.requests.len();
+    let rep = simulate(&c, &OPT_30B, &initial, &[switch], &trace, &SimConfig::default());
+    assert_conserved(&rep, n, "colocated resched");
+    assert_eq!(rep.stats.unserved, 0);
+    assert!(rep.tokens_per_s() > 0.0);
+}
+
+#[test]
+fn resched_switches_paradigm_mid_trace() {
+    // Disaggregated → colocated mid-trace: a policy-mix switch no separate
+    // engine could express.
+    let c = settings::homogeneous_small();
+    let p = schedule(&c, WorkloadKind::Lpld, 2, 0);
+    let colo = ServingSpec::Colocated {
+        replicas: vec![ReplicaConfig::new(vec![(0..4).collect()], vec![OPT_30B.n_layers])],
+        chunked_prefill: None,
+    };
+    let switch = SwitchSpec { at: 40.0, delay: 3.0, to: colo, workload: None };
+    let trace = Trace::online(WorkloadKind::Lpld, 0.8, 100.0, 6);
+    let n = trace.requests.len();
+    let rep = simulate(
+        &c,
+        &OPT_30B,
+        &ServingSpec::Disaggregated(p),
+        &[switch],
+        &trace,
+        &SimConfig::default(),
+    );
+    assert_conserved(&rep, n, "paradigm switch");
+    assert_eq!(rep.stats.unserved, 0);
+    // Requests arriving well after the switch complete on the colocated
+    // epoch — the trace outlives the blackout by almost a minute.
+    let post = rep.records.iter().filter(|r| r.arrival > 43.0).count();
+    assert!(post > 0, "no post-switch completions");
+}
+
+#[test]
+fn chunked_prefill_disagg_through_deploy_api() {
+    // Acceptance scenario 1: chunked-prefill disaggregated serving,
+    // end-to-end via spec.plan(..)?.run(..).
+    let spec = DeploymentSpec::new(settings::case_study(), OPT_30B)
+        .workload(WorkloadKind::Hpld)
+        .quick(true)
+        .force_k(4)
+        .chunked_prefill(Some(512));
+    let dep = spec.plan(&HexGen2Planner).expect("plans");
+    let trace = Trace::offline(WorkloadKind::Hpld, 60, 4);
+    let rep = dep.run(&SimBackend, &trace).expect("runs");
+    assert_conserved(&rep, 60, "chunked disagg via deploy");
+    assert_eq!(rep.stats.unserved, 0);
+    assert!(rep.tokens_per_s() > 0.0);
+    // The JSON report carries the engine counters for the CLI path.
+    let j = dep.report_json(&rep);
+    assert!(j.get("mem_stalls").is_some());
+    assert!(j.get("unserved").is_some());
+}
+
+#[test]
+fn heavy_tail_per_request_admission_shows_memory_pressure() {
+    // Acceptance scenario 2: a heavy-tail trace through per-request KV
+    // admission, with memory-pressure queueing observable in the report.
+    // An offline flood of ~400 heavy-tailed requests demands far more
+    // resident KV than the case_study cluster can hold, so admission must
+    // stall at least once; every request is either completed or accounted.
+    let trace = Trace::offline(WorkloadKind::HeavyTail, 400, 21);
+    let n = trace.requests.len();
+    let spec = DeploymentSpec::new(settings::case_study(), OPT_30B)
+        .workload(WorkloadKind::HeavyTail)
+        .quick(true)
+        .force_k(4)
+        .admission(Sizing::PerRequest);
+    let dep = spec.plan(&HexGen2Planner).expect("plans");
+    let rep = dep.run(&SimBackend, &trace).expect("runs");
+    assert_conserved(&rep, n, "heavy-tail disagg per-request");
+    assert!(
+        rep.stats.mem_stalls > 0,
+        "no memory pressure observed: demand far exceeds resident capacity"
+    );
+    assert!(rep.stats.peak_resident_tokens > 0.0);
+    // Static sizing on the same trace serves everything too — but blind to
+    // actual lengths (no pressure is ever visible).
+    let static_rep = DeploymentSpec::new(settings::case_study(), OPT_30B)
+        .workload(WorkloadKind::HeavyTail)
+        .quick(true)
+        .force_k(4)
+        .plan(&HexGen2Planner)
+        .expect("plans")
+        .run(&SimBackend, &trace)
+        .expect("runs");
+    assert_eq!(static_rep.stats.mem_stalls, 0);
+}
+
+#[test]
+fn heavy_tail_colocated_per_request_admission() {
+    // Same pressure on the colocated baseline via the vLLM planner: total
+    // demand (~400 × ~1.3k tokens) exceeds any OPT-30B resident capacity on
+    // 4 GPUs, so the ledger must stall admissions.
+    let trace = Trace::offline(WorkloadKind::HeavyTail, 400, 22);
+    let n = trace.requests.len();
+    let spec = DeploymentSpec::new(settings::homogeneous_small(), OPT_30B)
+        .workload(WorkloadKind::HeavyTail)
+        .quick(true)
+        .admission(Sizing::PerRequest);
+    let dep = spec.plan(&VllmPlanner).expect("plans");
+    let rep = dep.run(&SimBackend, &trace).expect("runs");
+    assert_conserved(&rep, n, "heavy-tail colocated per-request");
+    assert!(rep.stats.mem_stalls > 0, "colocated ledger never stalled");
+}
+
+#[test]
+fn oversized_requests_are_rejected_not_wedged() {
+    // A request larger than every replica's resident capacity must be
+    // rejected and counted — never silently lost, never blocking others.
+    let c = settings::homogeneous_small();
+    let p = schedule(&c, WorkloadKind::Lpld, 2, 0);
+    let mut trace = Trace::offline(WorkloadKind::Lpld, 20, 1);
+    let giant = trace.requests.len();
+    trace.requests.push(hexgen2::workload::Request {
+        id: giant,
+        arrival: 0.0,
+        input_len: 3_000_000,
+        output_len: 8,
+    });
+    let cfg = SimConfig { sizing: Sizing::PerRequest, ..SimConfig::default() };
+    let rep = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &cfg);
+    assert_conserved(&rep, trace.requests.len(), "oversized reject");
+    assert!(rep.stats.rejected >= 1, "giant request not rejected");
+    assert_eq!(rep.stats.unserved, 1, "only the giant goes unserved");
+    assert!(rep.records.iter().all(|r| r.id != giant));
+}
+
+#[test]
+fn shared_nic_contention_no_less_than_per_route() {
+    // Shared-NIC serialization can only add queueing over independent
+    // per-route links, and must not lose requests.
+    let c = settings::case_study();
+    let p = schedule(&c, WorkloadKind::Lphd, 4, 0);
+    let trace = Trace::offline(WorkloadKind::Lphd, 80, 13);
+    let per_route = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &SimConfig::default());
+    let shared_cfg = SimConfig { link: LinkModel::SharedNic, ..SimConfig::default() };
+    let shared = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &shared_cfg);
+    assert_eq!(per_route.records.len(), 80);
+    assert_eq!(shared.records.len(), 80);
+    assert!(
+        shared.stats.kv_link_wait_s >= per_route.stats.kv_link_wait_s - 1e-9,
+        "shared NIC queued less than independent links: {} vs {}",
+        shared.stats.kv_link_wait_s,
+        per_route.stats.kv_link_wait_s
+    );
+}
+
+#[test]
+fn derived_prefill_cap_no_worse_than_legacy_16() {
+    // Satellite check, independent of per-request accounting: deriving the
+    // static prefill-batch bound from memory (instead of the old 1..=16
+    // constant) must not lose requests and must stay in the capped
+    // engine's throughput ballpark. (Exact ordering is workload-dependent:
+    // the Table-1 batch cost is b × max_len, so merging many tiny prompts
+    // under one long outlier can cost more than the capped split — the
+    // per-iteration token budget keeps the two within range either way.)
+    let c = settings::homogeneous_small();
+    let p = schedule(&c, WorkloadKind::Lpld, 2, 0);
+    let trace = Trace::offline(WorkloadKind::Lpld, 120, 17);
+    let pinned_cfg = SimConfig { static_prefill_cap: Some(16), ..SimConfig::default() };
+    let pinned = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &pinned_cfg);
+    let derived = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &SimConfig::default());
+    assert_eq!(pinned.records.len(), derived.records.len());
+    assert_eq!(derived.stats.unserved, 0);
+    let ratio = derived.tokens_per_s() / pinned.tokens_per_s();
+    assert!(
+        (0.5..2.5).contains(&ratio),
+        "memory-derived cap far off the capped engine: {} vs {}",
+        derived.tokens_per_s(),
+        pinned.tokens_per_s()
+    );
+}
