@@ -46,18 +46,18 @@ fn main() {
     let task = TaskProfile::new(1, 1020.0, 211.0);
     let groups = spectral::partition_k(&het1, &devs, 6);
     bench::time("micro/evaluate-partition-cold", 1, 10, || {
-        let mut cache = StrategyCache::new();
+        let cache = StrategyCache::new();
         std::hint::black_box(scheduler::evaluate_partition(
-            &het1, &LLAMA2_70B, &task, 600.0, &groups, 6, Objective::Throughput, &mut cache,
+            &het1, &LLAMA2_70B, &task, 600.0, &groups, 6, Objective::Throughput, &cache,
         ));
     });
-    let mut warm = StrategyCache::new();
+    let warm = StrategyCache::new();
     scheduler::evaluate_partition(
-        &het1, &LLAMA2_70B, &task, 600.0, &groups, 6, Objective::Throughput, &mut warm,
+        &het1, &LLAMA2_70B, &task, 600.0, &groups, 6, Objective::Throughput, &warm,
     );
     bench::time("micro/evaluate-partition-warm", 3, 50, || {
         std::hint::black_box(scheduler::evaluate_partition(
-            &het1, &LLAMA2_70B, &task, 600.0, &groups, 6, Objective::Throughput, &mut warm,
+            &het1, &LLAMA2_70B, &task, 600.0, &groups, 6, Objective::Throughput, &warm,
         ));
     });
 

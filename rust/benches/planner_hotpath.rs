@@ -1,0 +1,89 @@
+//! Planner hot-path perf harness (DESIGN.md §10): the same serving-loop
+//! replay as `hexgen2 bench planner`, plus micro-timings of the two layers
+//! the PR optimizes — memoized vs uncached partition evaluation and
+//! incremental vs cold max-flow re-solves. Counter outputs (evals, hit
+//! rates) are deterministic; timings are environment-dependent context.
+
+use hexgen2::cluster::settings;
+use hexgen2::experiments::perf;
+use hexgen2::model::OPT_30B;
+use hexgen2::scheduler::{
+    flownet::PartitionFlowNet, maxflow::FlowNetwork, strategy::StrategyCache, Objective,
+};
+use hexgen2::util::bench;
+use hexgen2::util::rng::Rng;
+use hexgen2::workload::WorkloadKind;
+
+fn main() {
+    // The serving-loop replay (writes nothing; prints per-case counters).
+    let doc = perf::bench_planner(true, 2);
+    println!("{}", doc.to_string_pretty());
+
+    // Incremental vs cold max-flow on a random graph with capacity churn.
+    let mut rng = Rng::new(11);
+    let n = 48;
+    let mut g = FlowNetwork::new(n);
+    let mut edges = Vec::new();
+    for _ in 0..n * 5 {
+        let u = rng.range(0, n);
+        let mut v = rng.range(0, n);
+        if u == v {
+            v = (v + 1) % n;
+        }
+        edges.push(g.add_edge(u, v, rng.range_f64(0.1, 10.0)));
+    }
+    let _ = g.max_flow_incremental(0, n - 1);
+    let mut churn_rng = Rng::new(12);
+    bench::time("planner_hotpath/maxflow-incremental-3-edge-churn", 3, 50, || {
+        for _ in 0..3 {
+            let e = edges[churn_rng.range(0, edges.len())];
+            g.set_capacity(e, churn_rng.range_f64(0.1, 10.0));
+        }
+        std::hint::black_box(g.max_flow_incremental(0, n - 1));
+    });
+    let mut cold_rng = Rng::new(12);
+    bench::time("planner_hotpath/maxflow-cold-3-edge-churn", 3, 50, || {
+        let mut h = FlowNetwork::new(n);
+        let mut es = Vec::with_capacity(edges.len());
+        let mut build_rng = Rng::new(11);
+        for _ in 0..n * 5 {
+            let u = build_rng.range(0, n);
+            let mut v = build_rng.range(0, n);
+            if u == v {
+                v = (v + 1) % n;
+            }
+            es.push(h.add_edge(u, v, build_rng.range_f64(0.1, 10.0)));
+        }
+        for _ in 0..3 {
+            let e = es[cold_rng.range(0, es.len())];
+            h.set_capacity(e, cold_rng.range_f64(0.1, 10.0));
+        }
+        std::hint::black_box(h.max_flow(0, n - 1));
+    });
+
+    // Type-assignment sweep: incremental PartitionFlowNet vs per-assignment
+    // one-shot evaluation (both on a warm strategy cache).
+    let c = settings::case_study();
+    let task = hexgen2::scheduler::task_for(WorkloadKind::Lphd);
+    let groups: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]];
+    let cache = StrategyCache::new();
+    // Warm the strategy entries once so both sides time the flow layer.
+    let _ = hexgen2::scheduler::evaluate_partition(
+        &c, &OPT_30B, &task, 600.0, &groups, 64, Objective::Throughput, &cache,
+    );
+    bench::time("planner_hotpath/type-sweep-incremental-14-assignments", 3, 30, || {
+        let mut net = PartitionFlowNet::new(&c, &OPT_30B, &task, 600.0, &groups, &cache);
+        for mask in 1u32..15 {
+            let assign: Vec<bool> = (0..4).map(|g| mask & (1 << g) != 0).collect();
+            std::hint::black_box(net.evaluate(&assign));
+        }
+    });
+    bench::time("planner_hotpath/type-sweep-oneshot-14-assignments", 3, 30, || {
+        for mask in 1u32..15 {
+            let assign: Vec<bool> = (0..4).map(|g| mask & (1 << g) != 0).collect();
+            std::hint::black_box(hexgen2::scheduler::flownet::evaluate_types(
+                &c, &OPT_30B, &task, 600.0, &groups, &assign, &cache,
+            ));
+        }
+    });
+}

@@ -13,7 +13,7 @@ use std::time::Instant;
 use crate::cluster::Cluster;
 use crate::costmodel::TaskProfile;
 use crate::model::LlmSpec;
-use crate::scheduler::flownet::evaluate_types;
+use crate::scheduler::flownet;
 use crate::scheduler::strategy::StrategyCache;
 use crate::scheduler::{Objective, Placement};
 use crate::workload::WorkloadKind;
@@ -51,7 +51,7 @@ pub fn schedule_distserve_with(
     let (s_in, s_out) = workload.mean_lengths();
     let task = TaskProfile::new(1, s_in, s_out);
     let n = cluster.n();
-    let mut cache = StrategyCache::new();
+    let cache = StrategyCache::new();
     let mut best: Option<DistServePlan> = None;
 
     for gs in [1usize, 2, 4, 8] {
@@ -63,11 +63,13 @@ pub fn schedule_distserve_with(
             continue;
         }
         let groups: Vec<Vec<usize>> = (0..k).map(|g| (g * gs..(g + 1) * gs).collect()).collect();
+        // One incremental flow net per uniform split: the k-1 prefill
+        // ratios only retune capacities on it (same partition throughout).
+        let mut net =
+            flownet::PartitionFlowNet::new(cluster, model, &task, 600.0, &groups, &cache);
         for n_prefill in 1..k {
             let assign: Vec<bool> = (0..k).map(|g| g < n_prefill).collect();
-            if let Some(mut p) =
-                evaluate_types(cluster, model, &task, 600.0, &groups, &assign, &mut cache)
-            {
+            if let Some(mut p) = net.evaluate(&assign) {
                 p.objective_score = objective.score(cluster, model, &task, &p);
                 if best
                     .as_ref()

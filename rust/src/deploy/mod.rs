@@ -67,6 +67,12 @@ pub struct DeploymentSpec {
     /// Simulator admission model: static mean-length sizing (default) or
     /// per-request KV/memory accounting with queueing under pressure.
     pub admission: Sizing,
+    /// Planner worker threads for candidate evaluation (`--threads`);
+    /// plans are bit-identical across thread counts.
+    pub threads: usize,
+    /// Memoize whole partition evaluations during planning
+    /// (`--no-eval-cache` turns it off — the perf harness's A/B baseline).
+    pub use_eval_cache: bool,
 }
 
 impl DeploymentSpec {
@@ -83,6 +89,8 @@ impl DeploymentSpec {
             max_rounds: None,
             chunked_prefill: None,
             admission: Sizing::StaticMean,
+            threads: 1,
+            use_eval_cache: true,
         }
     }
 
@@ -131,6 +139,16 @@ impl DeploymentSpec {
         self
     }
 
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn eval_cache(mut self, on: bool) -> Self {
+        self.use_eval_cache = on;
+        self
+    }
+
     /// The mean-lengths task profile the planners size capacities with.
     pub fn task(&self) -> TaskProfile {
         scheduler::task_for(self.workload)
@@ -156,6 +174,8 @@ impl DeploymentSpec {
         if let Some(r) = self.max_rounds {
             o.max_rounds = r;
         }
+        o.threads = self.threads.max(1);
+        o.use_eval_cache = self.use_eval_cache;
         o
     }
 
@@ -221,6 +241,16 @@ impl Deployment {
             ("est_tokens_per_s", json::num(self.plan.est_tokens_per_s)),
             ("objective_score", json::num(self.plan.objective_score)),
             ("plan_elapsed_s", json::num(self.plan.elapsed_s)),
+            // Search-effort counters (deterministic perf proxies; zero for
+            // one-shot baselines that bypass the evaluation pipeline).
+            ("search_evals", json::num(self.plan.stats.evals as f64)),
+            ("search_cache_hits", json::num(self.plan.stats.eval_cache_hits as f64)),
+            ("search_cache_hit_rate", json::num(self.plan.stats.hit_rate())),
+            (
+                "search_partitions_explored",
+                json::num(self.plan.stats.partitions_explored as f64),
+            ),
+            ("search_threads", json::num(self.plan.stats.threads.max(1) as f64)),
         ];
         match &self.plan.kind {
             PlanKind::Disaggregated(p) => {

@@ -7,7 +7,9 @@
 
 use crate::baselines::{distserve, hexgen, vllm};
 use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};
-use crate::scheduler::{self, genetic, objective, ConvergencePoint, Objective, Placement};
+use crate::scheduler::{
+    self, genetic, objective, ConvergencePoint, Objective, Placement, SearchStats,
+};
 
 use super::DeploymentSpec;
 
@@ -38,6 +40,9 @@ pub struct Plan {
     pub elapsed_s: f64,
     /// Convergence trace of the search (empty for one-shot baselines).
     pub history: Vec<ConvergencePoint>,
+    /// Search-effort counters (zeroed for baselines that don't run the
+    /// evaluation pipeline through the cache).
+    pub stats: SearchStats,
 }
 
 /// A deployment planner: turns a [`DeploymentSpec`] into a [`Plan`], or
@@ -72,6 +77,7 @@ impl Planner for HexGen2Planner {
             objective_score: r.placement.objective_score,
             elapsed_s: r.elapsed_s,
             history: r.history,
+            stats: r.stats,
             kind: PlanKind::Disaggregated(r.placement),
         })
     }
@@ -98,6 +104,7 @@ impl Planner for GeneticPlanner {
             objective_score: r.placement.objective_score,
             elapsed_s: r.elapsed_s,
             history: r.history,
+            stats: r.stats,
             kind: PlanKind::Disaggregated(r.placement),
         })
     }
@@ -133,6 +140,7 @@ impl Planner for HexGenPlanner {
             objective_score: colocated_score(spec, &p.replicas, p.tokens_per_s),
             elapsed_s: p.elapsed_s,
             history: Vec::new(),
+            stats: SearchStats::default(),
             kind: PlanKind::Colocated { replicas: p.replicas, chunked_prefill: None },
         })
     }
@@ -165,6 +173,7 @@ impl Planner for DistServePlanner {
             objective_score: p.placement.objective_score,
             elapsed_s: p.elapsed_s,
             history: Vec::new(),
+            stats: SearchStats::default(),
             kind: PlanKind::Disaggregated(p.placement),
         })
     }
@@ -193,6 +202,7 @@ impl Planner for VllmPlanner {
             objective_score: colocated_score(spec, &p.replicas, p.tokens_per_s),
             elapsed_s: 0.0,
             history: Vec::new(),
+            stats: SearchStats::default(),
             kind: PlanKind::Colocated {
                 replicas: p.replicas,
                 chunked_prefill: spec.chunked_prefill,

@@ -12,6 +12,7 @@
 pub mod batching;
 pub mod convergence;
 pub mod endtoend;
+pub mod perf;
 pub mod resched;
 pub mod tables;
 

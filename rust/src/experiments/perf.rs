@@ -1,0 +1,311 @@
+//! Perf-regression harness: `hexgen2 bench planner|sim` and
+//! `benches/planner_hotpath.rs` (DESIGN.md §10).
+//!
+//! The planner bench replays the §3.3 serving-loop workload — periodic
+//! re-plans under steady traffic, warm-started re-plans across an
+//! oscillating workload, and GA re-runs — twice per case: once against a
+//! shared [`EvalCache`] and once with memoization disabled. The *counter*
+//! deltas (evaluate_partition executions) are the regression signal:
+//! deterministic where wall-clock is not. A third, multi-threaded cached
+//! run cross-checks that plans stay bit-identical with the cache on, off,
+//! and fanned out over worker threads.
+//!
+//! Output lands in `BENCH_planner.json` / `BENCH_sim.json` (schema in
+//! DESIGN.md §10); CI runs `bench planner --quick` and guards the schema,
+//! not the timings.
+
+use std::time::Instant;
+
+use crate::cluster::{settings, Cluster};
+use crate::deploy::{DeploymentSpec, HexGen2Planner, SimBackend};
+use crate::model::{LlmSpec, LLAMA2_70B, OPT_30B};
+use crate::rescheduler::warmstart;
+use crate::scheduler::{self, genetic, EvalCache, ScheduleOptions};
+use crate::util::json::{self, Json};
+use crate::workload::{Trace, WorkloadKind};
+
+/// The benched (setting, model, workload) grid: the paper's case-study
+/// cluster plus the two het1 end-to-end models.
+pub fn planner_cases() -> Vec<(&'static str, LlmSpec, WorkloadKind)> {
+    vec![
+        ("case_study", OPT_30B, WorkloadKind::Lphd),
+        ("het1", OPT_30B, WorkloadKind::Hphd),
+        ("het1", LLAMA2_70B, WorkloadKind::Lphd),
+    ]
+}
+
+/// The workload class the oscillation phase drifts to and from.
+fn osc_pair(kind: WorkloadKind) -> WorkloadKind {
+    match kind {
+        WorkloadKind::Lphd => WorkloadKind::Hpld,
+        WorkloadKind::Hpld => WorkloadKind::Lphd,
+        WorkloadKind::Hphd => WorkloadKind::Lpld,
+        WorkloadKind::Lpld => WorkloadKind::Hphd,
+        WorkloadKind::Online | WorkloadKind::HeavyTail => WorkloadKind::Hpld,
+    }
+}
+
+fn base_opts(kind: WorkloadKind, quick: bool, threads: usize, use_cache: bool) -> ScheduleOptions {
+    let mut o = ScheduleOptions::new(kind);
+    o.max_rounds = if quick { 6 } else { 12 };
+    o.patience = if quick { 3 } else { 6 };
+    o.proposals_per_round = 8;
+    o.type_candidates = 4;
+    o.threads = threads;
+    o.use_eval_cache = use_cache;
+    o
+}
+
+/// One full serving-loop replay for one case. Returns None when the
+/// setting cannot serve the model at all.
+struct LoopOutcome {
+    /// `evaluate_partition` executions performed.
+    evals: usize,
+    /// Evaluations served from the memo.
+    hits: usize,
+    strategy_hits: usize,
+    strategy_misses: usize,
+    /// Unique partitions held by the cache at the end (0 when disabled).
+    unique_partitions: usize,
+    /// Largest per-search seen-set across the replay.
+    peak_partitions_explored: usize,
+    wall_s: f64,
+    /// Debug fingerprints of every produced plan, in production order —
+    /// bitwise-comparable across cache/thread configurations.
+    fingerprints: Vec<String>,
+}
+
+fn run_loop(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    kind: WorkloadKind,
+    quick: bool,
+    threads: usize,
+    use_cache: bool,
+) -> Option<LoopOutcome> {
+    let cache = if use_cache { EvalCache::new() } else { EvalCache::disabled() };
+    let base = base_opts(kind, quick, threads, use_cache);
+    let t0 = Instant::now();
+    let mut fingerprints = Vec::new();
+    let mut peak = 0usize;
+
+    // (a) Periodic re-plans under steady traffic: the §3.3 loop re-runs
+    // the whole search every period T even when nothing drifted — under
+    // memoization every repeat is pure hits.
+    let periods = if quick { 6 } else { 8 };
+    let mut incumbent = None;
+    for _ in 0..periods {
+        let r = scheduler::schedule_with_cache(cluster, model, &base, &cache)?;
+        peak = peak.max(r.stats.partitions_explored);
+        fingerprints.push(format!("{:?}", r.placement));
+        incumbent = Some(r.placement);
+    }
+    let mut inc = incumbent?;
+
+    // (b) Warm-started re-plans across a workload drift and back; traffic
+    // then holds steady in the new class for one more period, so each leg's
+    // re-plan runs twice with an identical incumbent (the second is the
+    // periodic case again).
+    let away = osc_pair(kind);
+    for k2 in [away, kind] {
+        let mut o = base.clone();
+        o.workload = k2;
+        let mut next = None;
+        for _period in 0..2 {
+            if let Some(r) = warmstart::replan_with_cache(cluster, model, &o, &inc, &cache) {
+                peak = peak.max(r.stats.partitions_explored);
+                fingerprints.push(format!("{:?}", r.placement));
+                next = Some(r.placement);
+            }
+        }
+        if let Some(p) = next {
+            inc = p;
+        }
+    }
+
+    // (c) Periodic GA baseline re-runs (identical seeds): without the
+    // cache the GA re-scores every genome occurrence, including genomes
+    // re-bred across generations.
+    for _ in 0..4 {
+        if let Some(r) = genetic::schedule_genetic_with_cache(cluster, model, &base, &cache) {
+            peak = peak.max(r.stats.partitions_explored);
+            fingerprints.push(format!("{:?}", r.placement));
+        }
+    }
+
+    let c = cache.counters();
+    Some(LoopOutcome {
+        evals: c.misses,
+        hits: c.hits,
+        strategy_hits: c.strategy_hits,
+        strategy_misses: c.strategy_misses,
+        unique_partitions: c.unique_evals,
+        peak_partitions_explored: peak,
+        wall_s: t0.elapsed().as_secs_f64(),
+        fingerprints,
+    })
+}
+
+/// Run the planner bench and return the `BENCH_planner.json` document.
+/// `threads` sizes the parallel verification pass (min 2 so the
+/// bit-identity check always exercises the fan-out).
+pub fn bench_planner(quick: bool, threads: usize) -> Json {
+    let par = threads.max(2);
+    let mut cases = Vec::new();
+    for (setting, model, kind) in planner_cases() {
+        let cluster = settings::by_name(setting).expect("bench setting exists");
+        let Some(cached) = run_loop(&cluster, &model, kind, quick, 1, true) else {
+            continue;
+        };
+        let uncached =
+            run_loop(&cluster, &model, kind, quick, 1, false).expect("uncached replay plans too");
+        let threaded =
+            run_loop(&cluster, &model, kind, quick, par, true).expect("threaded replay plans too");
+        let identical = cached.fingerprints == uncached.fingerprints
+            && cached.fingerprints == threaded.fingerprints;
+        // (max(1): a first schedule always executes at least one
+        // evaluation, but never let the JSON carry a non-finite number.)
+        let reduction = uncached.evals as f64 / cached.evals.max(1) as f64;
+        let hit_rate = if cached.evals + cached.hits == 0 {
+            0.0
+        } else {
+            cached.hits as f64 / (cached.evals + cached.hits) as f64
+        };
+        let strat_total = cached.strategy_hits + cached.strategy_misses;
+        println!(
+            "bench planner/{setting}/{}/{}: {} evals cached vs {} uncached ({reduction:.2}x), \
+             hit rate {:.1}%, {:.2}s vs {:.2}s wall, bit-identical: {identical}",
+            model.name,
+            kind.name(),
+            cached.evals,
+            uncached.evals,
+            hit_rate * 100.0,
+            cached.wall_s,
+            uncached.wall_s,
+        );
+        cases.push(json::obj(vec![
+            ("setting", json::s(setting)),
+            ("model", json::s(model.name)),
+            ("workload", json::s(kind.name())),
+            ("evals", json::num(cached.evals as f64)),
+            ("evals_uncached", json::num(uncached.evals as f64)),
+            ("eval_reduction", json::num(reduction)),
+            ("cache_hit_rate", json::num(hit_rate)),
+            ("cache_hits", json::num(cached.hits as f64)),
+            (
+                "strategy_hit_rate",
+                json::num(if strat_total == 0 {
+                    0.0
+                } else {
+                    cached.strategy_hits as f64 / strat_total as f64
+                }),
+            ),
+            ("unique_partitions", json::num(cached.unique_partitions as f64)),
+            (
+                "peak_partitions_explored",
+                json::num(cached.peak_partitions_explored as f64),
+            ),
+            ("wall_s", json::num(cached.wall_s)),
+            ("wall_s_uncached", json::num(uncached.wall_s)),
+            (
+                "evals_per_s",
+                json::num(if uncached.wall_s > 0.0 {
+                    uncached.evals as f64 / uncached.wall_s
+                } else {
+                    0.0
+                }),
+            ),
+            ("plans", json::num(cached.fingerprints.len() as f64)),
+            ("plans_bit_identical", Json::Bool(identical)),
+        ]));
+    }
+    json::obj(vec![
+        ("schema", json::s("hexgen2-bench-planner/v1")),
+        ("quick", Json::Bool(quick)),
+        ("threads", json::num(par as f64)),
+        ("cases", json::arr(cases)),
+    ])
+}
+
+/// Run the simulator bench and return the `BENCH_sim.json` document: plan
+/// once per case, then time repeated discrete-event runs of the same trace
+/// (the post-allocation-sweep hot loop).
+pub fn bench_sim(quick: bool) -> Json {
+    let n_requests = if quick { 200 } else { 1000 };
+    let samples = if quick { 3 } else { 10 };
+    let mut cases = Vec::new();
+    for (setting, model, kind) in planner_cases() {
+        let cluster = settings::by_name(setting).expect("bench setting exists");
+        let spec = DeploymentSpec::new(cluster, model).workload(kind).quick(true).seed(7);
+        let Ok(dep) = spec.plan(&HexGen2Planner) else { continue };
+        let trace = Trace::offline(kind, n_requests, 7);
+        // Warm once (also provides the report the throughput fields quote).
+        let rep = dep.run(&SimBackend, &trace).expect("simulates");
+        let mut walls = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            let r = dep.run(&SimBackend, &trace).expect("simulates");
+            std::hint::black_box(r.records.len());
+            walls.push(t0.elapsed().as_secs_f64());
+        }
+        walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = walls.iter().sum::<f64>() / walls.len() as f64;
+        let p50 = walls[walls.len() / 2];
+        println!(
+            "bench sim/{setting}/{}/{}: {} requests in {:.4}s mean ({:.0} req/s), {:.0} tokens/s served",
+            model.name,
+            kind.name(),
+            rep.records.len(),
+            mean,
+            n_requests as f64 / mean.max(1e-12),
+            rep.tokens_per_s(),
+        );
+        cases.push(json::obj(vec![
+            ("setting", json::s(setting)),
+            ("model", json::s(model.name)),
+            ("workload", json::s(kind.name())),
+            ("requests", json::num(n_requests as f64)),
+            ("served", json::num(rep.records.len() as f64)),
+            ("unserved", json::num(rep.stats.unserved as f64)),
+            ("wall_s_mean", json::num(mean)),
+            ("wall_s_p50", json::num(p50)),
+            ("reqs_per_s", json::num(n_requests as f64 / mean.max(1e-12))),
+            ("sim_tokens_per_s", json::num(rep.tokens_per_s())),
+        ]));
+    }
+    json::obj(vec![
+        ("schema", json::s("hexgen2-bench-sim/v1")),
+        ("quick", Json::Bool(quick)),
+        ("samples", json::num(samples as f64)),
+        ("cases", json::arr(cases)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planner_bench_case_study_memoization_and_identity() {
+        // The acceptance gate, counter-based and deterministic: on the
+        // case-study setting the serving-loop replay must execute >= 3x
+        // fewer evaluate_partition calls with the cache than without, and
+        // every produced plan must be bit-identical across cache on/off
+        // and threaded evaluation.
+        let c = settings::by_name("case_study").unwrap();
+        let cached = run_loop(&c, &OPT_30B, WorkloadKind::Lphd, true, 1, true).expect("plans");
+        let uncached = run_loop(&c, &OPT_30B, WorkloadKind::Lphd, true, 1, false).expect("plans");
+        let threaded = run_loop(&c, &OPT_30B, WorkloadKind::Lphd, true, 4, true).expect("plans");
+        assert!(cached.evals > 0);
+        assert!(
+            uncached.evals as f64 >= 3.0 * cached.evals as f64,
+            "memoization saved too little: {} uncached vs {} cached executions",
+            uncached.evals,
+            cached.evals
+        );
+        assert_eq!(cached.fingerprints, uncached.fingerprints, "cache changed a plan");
+        assert_eq!(cached.fingerprints, threaded.fingerprints, "threads changed a plan");
+        assert_eq!(uncached.unique_partitions, 0, "disabled cache retained entries");
+        assert!(cached.hits > cached.evals, "hit rate below 50% on the replay");
+    }
+}

@@ -25,7 +25,10 @@ use hexgen2::workload::{Trace, WorkloadKind};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, &["quick", "full", "verbose", "no-refine", "json", "resched"]);
+    let args = Args::parse(
+        &argv,
+        &["quick", "full", "verbose", "no-refine", "json", "resched", "no-eval-cache"],
+    );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match run(cmd, &args) {
         Ok(()) => 0,
@@ -73,6 +76,8 @@ fn spec_of(args: &Args) -> Result<DeploymentSpec> {
         .objective(objective_of(args)?)
         .seed(args.get_u64("seed", 0))
         .quick(args.has("quick"))
+        .threads(args.get_usize("threads", 1))
+        .eval_cache(!args.has("no-eval-cache"))
         .chunked_prefill(chunk);
     match args.get_or("admission", "static") {
         "static" | "mean" => {}
@@ -166,6 +171,18 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 dep.plan.objective_score,
             );
             println!("{}", dep.describe());
+            let st = &dep.plan.stats;
+            if st.evals + st.eval_cache_hits > 0 {
+                println!(
+                    "search: {} evaluations executed, {} served from cache ({:.0}% hit rate), \
+                     {} unique partitions explored, {} thread(s)",
+                    st.evals,
+                    st.eval_cache_hits,
+                    st.hit_rate() * 100.0,
+                    st.partitions_explored,
+                    st.threads.max(1),
+                );
+            }
             if args.has("verbose") && !dep.plan.history.is_empty() {
                 println!("convergence:");
                 for p in &dep.plan.history {
@@ -320,6 +337,25 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 .collect();
             println!("{}", json::arr(rows).to_string_pretty());
         }
+        "bench" => {
+            let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("planner");
+            let quick = args.has("quick") || !args.has("full");
+            match what {
+                "planner" => {
+                    let j = experiments::perf::bench_planner(quick, args.get_usize("threads", 2));
+                    std::fs::write("BENCH_planner.json", j.to_string_pretty())
+                        .map_err(|e| anyhow!("writing BENCH_planner.json: {e}"))?;
+                    println!("wrote BENCH_planner.json");
+                }
+                "sim" => {
+                    let j = experiments::perf::bench_sim(quick);
+                    std::fs::write("BENCH_sim.json", j.to_string_pretty())
+                        .map_err(|e| anyhow!("writing BENCH_sim.json: {e}"))?;
+                    println!("wrote BENCH_sim.json");
+                }
+                other => bail!("unknown bench target {other} (try: planner | sim)"),
+            }
+        }
         "experiments" => {
             let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("list");
             let opts = if args.has("full") { ExpOpts::full() } else { ExpOpts::from_env() };
@@ -342,8 +378,12 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20              (default throughput — the paper's §3 max-flow objective)\n\n\
                  commands:\n\
                  \x20 schedule    --setting het1 --model llama2-70b --workload online [--planner P]\n\
-                 \x20             [--objective O] [--no-refine] [--rounds N] [--json] [--verbose]\n\
+                 \x20             [--objective O] [--no-refine] [--rounds N] [--threads N]\n\
+                 \x20             [--no-eval-cache] [--json] [--verbose]\n\
                  \x20             plan only: print the placement (Table-2 style) or a JSON report.\n\
+                 \x20             --threads fans candidate evaluation over worker threads (plans are\n\
+                 \x20             bit-identical to sequential); --no-eval-cache disables evaluation\n\
+                 \x20             memoization (A/B perf baseline, same plans).\n\
                  \x20 reschedule  --setting case_study --model opt30b [--phases SPEC] [--seed N] [--full]\n\
                  \x20             online rescheduling case study on a phased (drifting) trace: detects every\n\
                  \x20             sustained workload shift, warm-starts re-plans from the incumbent placement,\n\
@@ -364,6 +404,11 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             mem_stalls/unserved — pair it with --workload heavy_tail).\n\
                  \x20 serve       --model tiny --requests 16 --prefill 2 --decode 1 [--throttle-mbps N] [--verbose]\n\
                  \x20 workload    --workload hpld --n 10   (classes: HPLD|HPHD|LPHD|LPLD|online|heavy_tail)\n\
+                 \x20 bench       planner|sim [--full] [--threads N]\n\
+                 \x20             perf-regression harness (DESIGN.md \u{a7}10): replays the \u{a7}3.3 serving-loop\n\
+                 \x20             planning workload cached vs uncached vs threaded and writes\n\
+                 \x20             BENCH_planner.json / BENCH_sim.json (counter-based: evals, cache hit\n\
+                 \x20             rate, partitions explored — deterministic where wall-time is not).\n\
                  \x20 experiments <fig1|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table2|table3|table4|table5|appd|heavy_tail|all> [--full]\n\
                  \x20 settings    print bandwidth matrices (paper Fig. 4)"
             );

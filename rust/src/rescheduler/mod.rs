@@ -90,10 +90,25 @@ pub fn replan_for_drift(
     event: &DriftEvent,
     base: &ScheduleOptions,
 ) -> Option<ReplanOutcome> {
+    replan_for_drift_with_cache(cluster, model, incumbent, event, base, &scheduler::EvalCache::new())
+}
+
+/// [`replan_for_drift`] against a caller-owned [`EvalCache`]: the closed
+/// loop re-plans on every sustained drift, and oscillating traffic revisits
+/// earlier workloads — a shared cache makes those re-plans mostly memo
+/// hits. Never changes the chosen plan.
+pub fn replan_for_drift_with_cache(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    incumbent: &Placement,
+    event: &DriftEvent,
+    base: &ScheduleOptions,
+    cache: &scheduler::EvalCache,
+) -> Option<ReplanOutcome> {
     let to_kind = event.stats.effective_kind();
     let mut opts = base.clone();
     opts.workload = to_kind;
-    let result = warmstart::replan(cluster, model, &opts, incumbent)?;
+    let result = warmstart::replan_with_cache(cluster, model, &opts, incumbent, cache)?;
     let task = scheduler::task_for(to_kind);
     let migration = migration::plan(
         cluster,
@@ -138,10 +153,20 @@ pub fn drive(
     let mut events = Vec::new();
     let mut outcomes = Vec::new();
     let mut switches: Vec<PlacementSwitch> = Vec::new();
+    // One evaluation cache for the whole closed loop: every re-plan seeds
+    // from some recent incumbent and oscillating traffic revisits earlier
+    // workloads, so most re-plan evaluations are repeats of work already
+    // done — served from the memo instead of re-executed. Honors the
+    // caller's `use_eval_cache` (the perf harness's uncached A/B baseline).
+    let cache = if base.use_eval_cache {
+        scheduler::EvalCache::new()
+    } else {
+        scheduler::EvalCache::disabled()
+    };
     for r in &trace.requests {
         let Some(e) = sensor.observe(r.arrival, r.input_len, r.output_len) else { continue };
         events.push(e);
-        let out = replan_for_drift(cluster, model, &incumbent, &e, base);
+        let out = replan_for_drift_with_cache(cluster, model, &incumbent, &e, base, &cache);
         if let Some(o) = &out {
             if o.migration.migrate {
                 // The switch lands after the modeled re-planning budget, and

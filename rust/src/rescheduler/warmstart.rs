@@ -15,7 +15,7 @@
 
 use crate::cluster::{Cluster, DeviceId};
 use crate::model::LlmSpec;
-use crate::scheduler::{self, Placement, ScheduleOptions, ScheduleResult};
+use crate::scheduler::{self, EvalCache, Placement, ScheduleOptions, ScheduleResult};
 
 /// The incumbent placement's group partition (the warm-start seed).
 pub fn incumbent_groups(p: &Placement) -> Vec<Vec<DeviceId>> {
@@ -43,6 +43,22 @@ pub fn replan(
     incumbent: &Placement,
 ) -> Option<ScheduleResult> {
     scheduler::schedule(cluster, model, &warm_opts(base, incumbent))
+}
+
+/// [`replan`] against a caller-owned [`EvalCache`]: the §3.3 loop holds one
+/// cache across its whole run, so a re-plan after an oscillating workload
+/// returns to partitions already evaluated (incumbent seeds, uniform
+/// layouts, earlier refinement proposals) without re-executing them. Shared
+/// caching never changes the chosen plan — only how much of the search
+/// re-executes.
+pub fn replan_with_cache(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    base: &ScheduleOptions,
+    incumbent: &Placement,
+    cache: &EvalCache,
+) -> Option<ScheduleResult> {
+    scheduler::schedule_with_cache(cluster, model, &warm_opts(base, incumbent), cache)
 }
 
 #[cfg(test)]

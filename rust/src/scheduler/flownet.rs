@@ -9,16 +9,230 @@
 //! routing and the §3.4 edge-swap guidance.
 
 use crate::cluster::{Cluster, DeviceId, LinkTier};
-use crate::costmodel::{CostModel, TaskProfile};
+use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};
 use crate::model::LlmSpec;
 
-use super::maxflow::FlowNetwork;
+use super::maxflow::{EdgeRef, FlowNetwork};
 use super::placement::{GroupPlan, KvRoute, Placement};
 use super::strategy::StrategyCache;
 
+/// Incremental evaluator of every type assignment of *one* partition.
+///
+/// Built once per partition: the per-group strategy search (through the
+/// [`StrategyCache`]), the phase capacities, the KV transfer times of every
+/// (prefill, decode) orientation, and the flow network itself — with an edge
+/// for every connection that *any* assignment can activate. Evaluating an
+/// assignment then only retunes edge capacities (the deltas between
+/// consecutive assignments are a handful of edges) and warm-starts max-flow
+/// from the previous residual state via
+/// [`FlowNetwork::max_flow_incremental`], instead of rebuilding and
+/// re-solving the network from scratch per candidate.
+pub struct PartitionFlowNet<'a> {
+    groups: &'a [Vec<DeviceId>],
+    task: TaskProfile,
+    period: f64,
+    ingress_cap: f64,
+    egress_cap: f64,
+    /// Latency-optimal prefill strategy + capacity (requests/T) per group.
+    prefill: Vec<Option<(ReplicaConfig, f64)>>,
+    /// Throughput-optimal decode strategy + capacity per group.
+    decode: Vec<Option<(ReplicaConfig, f64)>>,
+    /// KV edge capacity for every ordered (p, d) pair; 0.0 when either
+    /// side has no feasible strategy (no edge exists then).
+    kv_cap: Vec<Vec<f64>>,
+    net: FlowNetwork,
+    compute_edges: Vec<EdgeRef>,
+    ingress_edges: Vec<EdgeRef>,
+    egress_edges: Vec<EdgeRef>,
+    kv_edges: Vec<(usize, usize, EdgeRef)>,
+}
+
+impl<'a> PartitionFlowNet<'a> {
+    pub fn new(
+        cluster: &Cluster,
+        model: &LlmSpec,
+        task: &TaskProfile,
+        period: f64,
+        groups: &'a [Vec<DeviceId>],
+        cache: &StrategyCache,
+    ) -> PartitionFlowNet<'a> {
+        let cm = CostModel::new(cluster, model);
+        let prefill: Vec<Option<(ReplicaConfig, f64)>> = groups
+            .iter()
+            .map(|g| {
+                cache
+                    .best_prefill(cluster, model, g, task)
+                    .map(|(cfg, _lat)| {
+                        let cap = cm.prefill_capacity(&cfg, task, period);
+                        (cfg, cap)
+                    })
+            })
+            .collect();
+        let decode: Vec<Option<(ReplicaConfig, f64)>> = groups
+            .iter()
+            .map(|g| {
+                cache
+                    .best_decode(cluster, model, g, task)
+                    .map(|(cfg, _tput)| {
+                        let cap = cm.decode_capacity(&cfg, task, period);
+                        (cfg, cap)
+                    })
+            })
+            .collect();
+
+        // Coordinator ingress/egress capacity (connection types (1)/(2)):
+        // request/response payloads over the coordinator's NIC. Rarely
+        // binding, but finite per the paper's formulation.
+        let nic = LinkTier::Eth100G.bandwidth();
+        let ingress_cap = period * nic / (task.s_in * model.bytes_per_elem).max(1.0);
+        let egress_cap = period * nic / (task.s_out * model.bytes_per_elem).max(1.0);
+
+        // Node layout: 0 = source (h), 1 = sink (h), then in/out per group.
+        let k = groups.len();
+        let node_in = |g: usize| 2 + 2 * g;
+        let node_out = |g: usize| 3 + 2 * g;
+        let mut net = FlowNetwork::new(2 + 2 * k);
+
+        // All edges start at capacity 0; `evaluate` retunes them per
+        // assignment. Every group gets both an ingress and an egress edge —
+        // only the side matching its assigned type is ever opened.
+        let mut compute_edges = Vec::with_capacity(k);
+        let mut ingress_edges = Vec::with_capacity(k);
+        let mut egress_edges = Vec::with_capacity(k);
+        for g in 0..k {
+            compute_edges.push(net.add_edge(node_in(g), node_out(g), 0.0));
+            ingress_edges.push(net.add_edge(0, node_in(g), 0.0));
+            egress_edges.push(net.add_edge(node_out(g), 1, 0.0));
+        }
+
+        // KV edges (connection type (3)) with stage-order-optimized
+        // capacity, for every orientation both strategies support.
+        let mut kv_cap = vec![vec![0.0f64; k]; k];
+        let mut kv_edges: Vec<(usize, usize, EdgeRef)> = Vec::new();
+        for p in 0..k {
+            let Some((pcfg, _)) = &prefill[p] else { continue };
+            for d in 0..k {
+                if p == d {
+                    continue;
+                }
+                let Some((dcfg, _)) = &decode[d] else { continue };
+                let t = cm.kv_transfer_time(pcfg, dcfg, &task.with_batch(1));
+                let cap = if t <= 0.0 { ingress_cap } else { period / t };
+                kv_cap[p][d] = cap;
+                kv_edges.push((p, d, net.add_edge(node_out(p), node_in(d), 0.0)));
+            }
+        }
+
+        PartitionFlowNet {
+            groups,
+            task: *task,
+            period,
+            ingress_cap,
+            egress_cap,
+            prefill,
+            decode,
+            kv_cap,
+            net,
+            compute_edges,
+            ingress_edges,
+            egress_edges,
+            kv_edges,
+        }
+    }
+
+    /// Per-group (prefill_capacity, decode_capacity) — the secondary
+    /// partition's scoring input (0.0 where the phase is infeasible).
+    pub fn phase_caps(&self) -> Vec<(f64, f64)> {
+        (0..self.groups.len())
+            .map(|g| {
+                (
+                    self.prefill[g].as_ref().map(|(_, c)| *c).unwrap_or(0.0),
+                    self.decode[g].as_ref().map(|(_, c)| *c).unwrap_or(0.0),
+                )
+            })
+            .collect()
+    }
+
+    /// Evaluate one type assignment: retune the capacity deltas, warm-start
+    /// max-flow, and package the placement. Returns None when no prefill or
+    /// no decode group is feasible under this assignment.
+    pub fn evaluate(&mut self, is_prefill: &[bool]) -> Option<Placement> {
+        assert_eq!(self.groups.len(), is_prefill.len());
+        let k = self.groups.len();
+
+        // Phase-appropriate strategy per group (precomputed).
+        let mut plans: Vec<GroupPlan> = Vec::with_capacity(k);
+        for g in 0..k {
+            let slot = if is_prefill[g] { &self.prefill[g] } else { &self.decode[g] };
+            let (config, capacity) = match slot {
+                Some((cfg, cap)) => (Some(cfg.clone()), *cap),
+                None => (None, 0.0),
+            };
+            plans.push(GroupPlan {
+                devices: self.groups[g].clone(),
+                is_prefill: is_prefill[g],
+                config,
+                capacity,
+            });
+        }
+        if !plans.iter().any(|p| p.is_prefill && p.capacity > 0.0)
+            || !plans.iter().any(|p| !p.is_prefill && p.capacity > 0.0)
+        {
+            return None;
+        }
+
+        for g in 0..k {
+            self.net.set_capacity(self.compute_edges[g], plans[g].capacity);
+            self.net
+                .set_capacity(self.ingress_edges[g], if is_prefill[g] { self.ingress_cap } else { 0.0 });
+            self.net
+                .set_capacity(self.egress_edges[g], if is_prefill[g] { 0.0 } else { self.egress_cap });
+        }
+        for &(p, d, e) in &self.kv_edges {
+            let live = is_prefill[p]
+                && !is_prefill[d]
+                && plans[p].capacity > 0.0
+                && plans[d].capacity > 0.0;
+            self.net.set_capacity(e, if live { self.kv_cap[p][d] } else { 0.0 });
+        }
+
+        let flow_value = self.net.max_flow_incremental(0, 1);
+
+        let group_utilization: Vec<f64> =
+            self.compute_edges.iter().map(|&e| self.net.utilization(e)).collect();
+        let routes: Vec<KvRoute> = self
+            .kv_edges
+            .iter()
+            .filter(|&&(p, d, _)| {
+                is_prefill[p] && !is_prefill[d] && plans[p].capacity > 0.0 && plans[d].capacity > 0.0
+            })
+            .map(|&(p, d, e)| KvRoute {
+                prefill: p,
+                decode: d,
+                flow: self.net.flow(e),
+                capacity: self.kv_cap[p][d],
+            })
+            .collect();
+
+        Some(Placement {
+            groups: plans,
+            routes,
+            flow_value,
+            tokens_per_s: flow_value * self.task.s_out / self.period,
+            group_utilization,
+            // Default (throughput) score; `evaluate_partition` re-scores
+            // under the caller's chosen objective.
+            objective_score: flow_value,
+        })
+    }
+}
+
 /// Evaluate one (partition, type assignment): choose per-group strategies,
-/// build the flow network, run preflow-push, and package the placement.
+/// build the flow network, solve max-flow, and package the placement.
 /// Returns None when no prefill or no decode group is feasible at all.
+/// One-shot wrapper over [`PartitionFlowNet`]; callers sweeping many
+/// assignments of the same partition should hold a `PartitionFlowNet` and
+/// reuse its warm residual state instead.
 pub fn evaluate_types(
     cluster: &Cluster,
     model: &LlmSpec,
@@ -26,100 +240,9 @@ pub fn evaluate_types(
     period: f64,
     groups: &[Vec<DeviceId>],
     is_prefill: &[bool],
-    cache: &mut StrategyCache,
+    cache: &StrategyCache,
 ) -> Option<Placement> {
-    assert_eq!(groups.len(), is_prefill.len());
-    let cm = CostModel::new(cluster, model);
-
-    // Phase-appropriate strategy per group (cached).
-    let mut plans: Vec<GroupPlan> = Vec::with_capacity(groups.len());
-    for (g, devs) in groups.iter().enumerate() {
-        let (config, capacity) = if is_prefill[g] {
-            match cache.best_prefill(cluster, model, devs, task) {
-                Some((cfg, _lat)) => {
-                    let cap = cm.prefill_capacity(&cfg, task, period);
-                    (Some(cfg), cap)
-                }
-                None => (None, 0.0),
-            }
-        } else {
-            match cache.best_decode(cluster, model, devs, task) {
-                Some((cfg, _tput)) => {
-                    let cap = cm.decode_capacity(&cfg, task, period);
-                    (Some(cfg), cap)
-                }
-                None => (None, 0.0),
-            }
-        };
-        plans.push(GroupPlan { devices: devs.clone(), is_prefill: is_prefill[g], config, capacity });
-    }
-    if !plans.iter().any(|p| p.is_prefill && p.capacity > 0.0)
-        || !plans.iter().any(|p| !p.is_prefill && p.capacity > 0.0)
-    {
-        return None;
-    }
-
-    // Coordinator ingress/egress capacity (connection types (1) and (2)):
-    // request/response payloads over the coordinator's NIC. Rarely binding,
-    // but finite per the paper's formulation.
-    let nic = LinkTier::Eth100G.bandwidth();
-    let ingress_cap = period * nic / (task.s_in * model.bytes_per_elem).max(1.0);
-    let egress_cap = period * nic / (task.s_out * model.bytes_per_elem).max(1.0);
-
-    // Node layout: 0 = source (h), 1 = sink (h), then in/out per group.
-    let k = groups.len();
-    let node_in = |g: usize| 2 + 2 * g;
-    let node_out = |g: usize| 3 + 2 * g;
-    let mut net = FlowNetwork::new(2 + 2 * k);
-
-    let mut compute_edges = Vec::with_capacity(k);
-    for (g, plan) in plans.iter().enumerate() {
-        compute_edges.push(net.add_edge(node_in(g), node_out(g), plan.capacity));
-        if plan.is_prefill {
-            net.add_edge(0, node_in(g), ingress_cap);
-        } else {
-            net.add_edge(node_out(g), 1, egress_cap);
-        }
-    }
-
-    // KV edges (connection type (3)) with stage-order-optimized capacity.
-    let mut kv_edges: Vec<(usize, usize, super::maxflow::EdgeRef, f64)> = Vec::new();
-    for (p, pp) in plans.iter().enumerate() {
-        if !pp.is_prefill || pp.capacity <= 0.0 {
-            continue;
-        }
-        let Some(pcfg) = &pp.config else { continue };
-        for (d, dp) in plans.iter().enumerate() {
-            if dp.is_prefill || dp.capacity <= 0.0 {
-                continue;
-            }
-            let Some(dcfg) = &dp.config else { continue };
-            let t = cm.kv_transfer_time(pcfg, dcfg, &task.with_batch(1));
-            let cap = if t <= 0.0 { ingress_cap } else { period / t };
-            let e = net.add_edge(node_out(p), node_in(d), cap);
-            kv_edges.push((p, d, e, cap));
-        }
-    }
-
-    let flow_value = net.max_flow(0, 1);
-
-    let group_utilization: Vec<f64> =
-        compute_edges.iter().map(|&e| net.utilization(e)).collect();
-    let routes: Vec<KvRoute> = kv_edges
-        .iter()
-        .map(|&(p, d, e, cap)| KvRoute { prefill: p, decode: d, flow: net.flow(e), capacity: cap })
-        .collect();
-
-    Some(Placement {
-        groups: plans,
-        routes,
-        flow_value,
-        tokens_per_s: flow_value * task.s_out / period,
-        group_utilization,
-        // Default (throughput) score; `evaluate_partition` re-scores under
-        // the caller's chosen objective.
-        objective_score: flow_value,
-    })
+    PartitionFlowNet::new(cluster, model, task, period, groups, cache).evaluate(is_prefill)
 }
 
 #[cfg(test)]
@@ -173,6 +296,42 @@ mod tests {
         let kv = &p.routes[0];
         assert!(kv.capacity < p.groups[0].capacity, "KV not binding: {p:?}");
         assert!(p.flow_value <= kv.capacity + 1e-6);
+    }
+
+    #[test]
+    fn incremental_sweep_matches_oneshot_per_assignment() {
+        // PartitionFlowNet carries the residual graph across assignments;
+        // every assignment's flow value must still match a fresh one-shot
+        // solve of the same typed network.
+        let c = settings::case_study();
+        let task = TaskProfile::new(1, 512.0, 128.0);
+        let groups: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]];
+        let cache = StrategyCache::new();
+        let mut net = PartitionFlowNet::new(&c, &OPT_30B, &task, 600.0, &groups, &cache);
+        let mut evaluated = 0;
+        for mask in 1u32..15 {
+            let assign: Vec<bool> = (0..4).map(|g| mask & (1 << g) != 0).collect();
+            let warm = net.evaluate(&assign);
+            let cold = evaluate_types(&c, &OPT_30B, &task, 600.0, &groups, &assign, &cache);
+            assert_eq!(warm.is_some(), cold.is_some(), "feasibility differs for {assign:?}");
+            let (Some(w), Some(f)) = (warm, cold) else { continue };
+            evaluated += 1;
+            assert!(
+                (w.flow_value - f.flow_value).abs() < 1e-9 * (1.0 + f.flow_value),
+                "assignment {assign:?}: warm {} != cold {}",
+                w.flow_value,
+                f.flow_value
+            );
+            // Routed flow still accounts for the whole value.
+            let routed: f64 = w.routes.iter().map(|r| r.flow).sum();
+            assert!(
+                (routed - w.flow_value).abs() < 1e-6 * (1.0 + w.flow_value),
+                "warm routes {} != value {}",
+                routed,
+                w.flow_value
+            );
+        }
+        assert!(evaluated >= 4, "too few feasible assignments exercised: {evaluated}");
     }
 
     #[test]

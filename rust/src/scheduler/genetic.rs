@@ -12,8 +12,9 @@ use crate::cluster::{Cluster, DeviceId};
 use crate::model::LlmSpec;
 use crate::util::rng::Rng;
 
-use super::strategy::StrategyCache;
-use super::{evaluate_partition, task_for, ConvergencePoint, Placement, ScheduleOptions, ScheduleResult};
+use super::{
+    task_for, ConvergencePoint, EvalCache, Placement, ScheduleOptions, ScheduleResult, SearchStats,
+};
 
 type Groups = Vec<Vec<DeviceId>>;
 
@@ -82,17 +83,37 @@ pub fn schedule_genetic(
     model: &LlmSpec,
     opts: &ScheduleOptions,
 ) -> Option<ScheduleResult> {
+    let cache = if opts.use_eval_cache { EvalCache::new() } else { EvalCache::disabled() };
+    schedule_genetic_with_cache(cluster, model, opts, &cache)
+}
+
+/// [`schedule_genetic`] against a caller-owned [`EvalCache`]. Fitness calls
+/// route through the cache keyed by the canonical partition signature, so a
+/// genome re-bred in a later generation (or an earlier GA/schedule run
+/// sharing the cache) is scored for free instead of re-running the
+/// strategy-search + max-flow pipeline — GA populations repeat partitions
+/// heavily.
+pub fn schedule_genetic_with_cache(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    opts: &ScheduleOptions,
+    cache: &EvalCache,
+) -> Option<ScheduleResult> {
     let t0 = Instant::now();
+    let c0 = cache.counters();
     let task = task_for(opts.workload);
     let k = opts.force_k.unwrap_or_else(|| super::choose_k(cluster, model, &task));
     let mut rng = Rng::new(opts.seed ^ 0x6E6E);
-    let mut cache = StrategyCache::new();
+    let mut explored: std::collections::HashSet<Vec<usize>> = std::collections::HashSet::new();
 
     const POP: usize = 12;
     const ELITE: usize = 4;
 
-    let eval = |groups: &Groups, cache: &mut StrategyCache| -> Option<Placement> {
-        evaluate_partition(
+    let eval = |groups: &Groups,
+                explored: &mut std::collections::HashSet<Vec<usize>>|
+     -> Option<Placement> {
+        explored.insert(super::partition_signature(groups));
+        cache.evaluate(
             cluster,
             model,
             &task,
@@ -100,7 +121,6 @@ pub fn schedule_genetic(
             groups,
             opts.type_candidates,
             opts.objective,
-            cache,
         )
     };
 
@@ -109,7 +129,7 @@ pub fn schedule_genetic(
     let mut pop: Vec<(Groups, Option<Placement>)> = (0..POP)
         .map(|_| {
             let g = random_partition(cluster.n(), k, &mut rng);
-            let p = eval(&g, &mut cache);
+            let p = eval(&g, &mut explored);
             (g, p)
         })
         .collect();
@@ -142,7 +162,7 @@ pub fn schedule_genetic(
             if child.iter().any(|g| g.is_empty()) {
                 continue;
             }
-            let p = eval(&child, &mut cache);
+            let p = eval(&child, &mut explored);
             children.push((child, p));
         }
         pop.truncate(ELITE);
@@ -164,12 +184,14 @@ pub fn schedule_genetic(
         }
     }
 
+    let stats = SearchStats::delta(&c0, &cache.counters(), explored.len(), 1);
     let (_g, best) = pop.into_iter().next().unwrap();
     best.map(|placement| ScheduleResult {
         placement,
         history,
         rounds,
         elapsed_s: t0.elapsed().as_secs_f64(),
+        stats,
     })
 }
 
@@ -194,6 +216,25 @@ mod tests {
             r.placement.groups.iter().flat_map(|g| g.devices.clone()).collect();
         all.sort_unstable();
         assert_eq!(all, (0..c.n()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn repeated_ga_run_is_free_with_shared_cache() {
+        // The §3.3 loop re-runs the GA per period; with a shared EvalCache
+        // an identical re-run costs zero evaluations and lands on a
+        // bit-identical plan.
+        let c = settings::case_study();
+        let mut opts = ScheduleOptions::new(WorkloadKind::Lphd);
+        opts.max_rounds = 4;
+        opts.patience = 2;
+        opts.force_k = Some(4);
+        let cache = EvalCache::new();
+        let a = schedule_genetic_with_cache(&c, &OPT_30B, &opts, &cache).expect("GA schedules");
+        assert!(a.stats.evals > 0);
+        let b = schedule_genetic_with_cache(&c, &OPT_30B, &opts, &cache).expect("GA schedules");
+        assert_eq!(b.stats.evals, 0, "identical GA re-run re-executed evaluations");
+        assert_eq!(b.stats.eval_cache_hits, a.stats.evals + a.stats.eval_cache_hits);
+        assert_eq!(format!("{:?}", a.placement), format!("{:?}", b.placement));
     }
 
     #[test]

@@ -60,6 +60,17 @@ impl FlowNetwork {
         self.adj[e.node][e.idx].cap
     }
 
+    /// Update an existing edge's capacity in place. The carried flow is left
+    /// untouched (possibly over the new capacity); call
+    /// [`FlowNetwork::max_flow_incremental`] afterwards to repair and
+    /// re-maximize from the warm residual state instead of re-solving from
+    /// scratch — the §3.4 edge-swap / type-flip proposals change only a
+    /// handful of capacities per step.
+    pub fn set_capacity(&mut self, e: EdgeRef, cap: f64) {
+        assert!(cap >= 0.0, "negative capacity");
+        self.adj[e.node][e.idx].cap = cap;
+    }
+
     /// Flow currently routed through the edge (after `max_flow`).
     pub fn flow(&self, e: EdgeRef) -> f64 {
         self.adj[e.node][e.idx].flow.max(0.0)
@@ -204,43 +215,205 @@ impl FlowNetwork {
     /// push–relabel on random graphs.
     pub fn max_flow_reference(&mut self, s: usize, t: usize) -> f64 {
         self.reset_flows();
-        let n = self.n();
         let mut total = 0.0;
+        while let Some(delta) = self.augment_path(s, t, f64::INFINITY, None) {
+            total += delta;
+        }
+        total
+    }
+
+    /// BFS one shortest augmenting path from `s2` to `t2` in the residual
+    /// graph and push `min(limit, bottleneck)` along it. Returns the pushed
+    /// amount, or `None` when `t2` is unreachable. Nodes in `block` are
+    /// never expanded *through* (they may still terminate the path): the
+    /// incremental repair uses this to keep reroutes from threading flow
+    /// through the source or sink, which would break the "no flow out of t
+    /// / value = reverse-edge inflow at t" invariant.
+    fn augment_path(
+        &mut self,
+        s2: usize,
+        t2: usize,
+        limit: f64,
+        block: Option<(usize, usize)>,
+    ) -> Option<f64> {
+        let n = self.n();
+        let blocked = |v: usize| match block {
+            Some((a, b)) => v != s2 && (v == a || v == b),
+            None => false,
+        };
+        let mut prev: Vec<Option<(usize, usize)>> = vec![None; n];
+        let mut q = std::collections::VecDeque::new();
+        q.push_back(s2);
+        let mut seen = vec![false; n];
+        seen[s2] = true;
+        while let Some(u) = q.pop_front() {
+            if blocked(u) {
+                continue;
+            }
+            for (i, e) in self.adj[u].iter().enumerate() {
+                if !seen[e.to] && e.cap - e.flow > EPS {
+                    seen[e.to] = true;
+                    prev[e.to] = Some((u, i));
+                    q.push_back(e.to);
+                }
+            }
+        }
+        if !seen[t2] {
+            return None;
+        }
+        let mut delta = limit;
+        let mut v = t2;
+        while let Some((u, i)) = prev[v] {
+            let e = &self.adj[u][i];
+            delta = delta.min(e.cap - e.flow);
+            v = u;
+        }
+        let mut v = t2;
+        while let Some((u, i)) = prev[v] {
+            self.push_raw(u, i, delta);
+            v = u;
+        }
+        Some(delta)
+    }
+
+    /// Max flow warm-started from the current flow assignment (typically
+    /// after [`FlowNetwork::set_capacity`] updates). Where a capacity
+    /// dropped below the carried flow the overage is first rerouted through
+    /// the residual graph; what cannot be rerouted is cancelled along the
+    /// upstream (s→u) and downstream (v→t) flow decomposition. BFS
+    /// augmenting paths then restore maximality — from a zero flow state
+    /// this is plain Edmonds–Karp. The returned flow *value* always matches
+    /// [`FlowNetwork::max_flow`] (the max-flow value is unique); the
+    /// per-edge assignment may legitimately differ (max flows are not).
+    pub fn max_flow_incremental(&mut self, s: usize, t: usize) -> f64 {
+        let n = self.n();
+        assert!(s != t && s < n && t < n);
+        if !self.repair(s, t) {
+            // Defensive: a repair that cannot restore conservation falls
+            // back to a cold solve (guarded by the randomized parity tests;
+            // not observed in practice).
+            self.reset_flows();
+        }
+        while self.augment_path(s, t, f64::INFINITY, None).is_some() {}
+        self.adj[t]
+            .iter()
+            .map(|e| -e.flow)
+            .filter(|f| *f > 0.0)
+            .sum()
+    }
+
+    /// Restore capacity-feasibility after `set_capacity` decreases. Returns
+    /// false if a flow decomposition unexpectedly runs dry (caller resets).
+    fn repair(&mut self, s: usize, t: usize) -> bool {
         loop {
-            // BFS for an augmenting path.
-            let mut prev: Vec<Option<(usize, usize)>> = vec![None; n];
-            let mut q = std::collections::VecDeque::new();
-            q.push_back(s);
-            let mut seen = vec![false; n];
-            seen[s] = true;
-            while let Some(u) = q.pop_front() {
-                for (i, e) in self.adj[u].iter().enumerate() {
-                    if !seen[e.to] && e.cap - e.flow > EPS {
-                        seen[e.to] = true;
-                        prev[e.to] = Some((u, i));
-                        q.push_back(e.to);
+            // Find an overflowing edge. Only real edges can overflow:
+            // reverse edges carry flow <= 0 <= cap.
+            let mut found = None;
+            'outer: for u in 0..self.n() {
+                for i in 0..self.adj[u].len() {
+                    let e = &self.adj[u][i];
+                    if e.flow > e.cap + EPS {
+                        found = Some((u, i));
+                        break 'outer;
                     }
                 }
             }
-            if !seen[t] {
-                return total;
-            }
-            // Find bottleneck.
-            let mut delta = f64::INFINITY;
-            let mut v = t;
-            while let Some((u, i)) = prev[v] {
+            let Some((u, i)) = found else { return true };
+            let (v, mut over) = {
                 let e = &self.adj[u][i];
-                delta = delta.min(e.cap - e.flow);
-                v = u;
+                (e.to, e.flow - e.cap)
+            };
+            // Clamp to the new capacity; u is now left with excess inflow
+            // `over` and v with the matching deficit.
+            self.push_raw(u, i, -over);
+            // (1) Reroute u -> v through the residual graph where possible
+            // (the clamped edge itself has zero residual, so it is skipped;
+            // s and t are blocked as intermediates so the reroute cannot
+            // thread flow through the terminals).
+            while over > EPS {
+                match self.augment_path(u, v, over, Some((s, t))) {
+                    Some(delta) => over -= delta,
+                    None => break,
+                }
             }
-            // Augment.
-            let mut v = t;
-            while let Some((u, i)) = prev[v] {
-                self.push_raw(u, i, delta);
-                v = u;
+            // (2) The irreparable remainder shrinks the s->t value: cancel
+            // the same amount of carried flow downstream (v..t) and
+            // upstream (s..u).
+            if over > EPS {
+                if v != t && !self.cancel_flow(v, t, over) {
+                    return false;
+                }
+                if u != s && !self.cancel_flow(s, u, over) {
+                    return false;
+                }
             }
-            total += delta;
         }
+    }
+
+    /// Cancel `need` units of carried flow along `from`→`to` paths of
+    /// positive-flow edges. Flow cycles encountered on the way (push–relabel
+    /// and earlier repairs can leave them) are cancelled outright — they
+    /// carry no s→t value. Returns false if the decomposition runs dry
+    /// before `need` is cancelled.
+    fn cancel_flow(&mut self, from: usize, to: usize, mut need: f64) -> bool {
+        'search: while need > EPS {
+            // DFS along real edges with positive flow; `on_path[w]` is w's
+            // position in the node path (usize::MAX = not on it).
+            let mut path: Vec<(usize, usize)> = Vec::new(); // (node, edge idx)
+            let mut on_path = vec![usize::MAX; self.n()];
+            let mut next_idx = vec![0usize; self.n()];
+            let mut cur = from;
+            on_path[from] = 0;
+            loop {
+                if cur == to {
+                    let mut delta = need;
+                    for &(u, i) in &path {
+                        delta = delta.min(self.adj[u][i].flow);
+                    }
+                    for &(u, i) in &path {
+                        self.push_raw(u, i, -delta);
+                    }
+                    need -= delta;
+                    continue 'search;
+                }
+                let mut advanced = false;
+                while next_idx[cur] < self.adj[cur].len() {
+                    let i = next_idx[cur];
+                    next_idx[cur] += 1;
+                    let e = &self.adj[cur][i];
+                    if e.flow > EPS {
+                        let w = e.to;
+                        if on_path[w] != usize::MAX {
+                            // Flow cycle w .. cur -> w: cancel its minimum.
+                            let start = on_path[w];
+                            let mut delta = self.adj[cur][i].flow;
+                            for &(u2, i2) in &path[start..] {
+                                delta = delta.min(self.adj[u2][i2].flow);
+                            }
+                            self.push_raw(cur, i, -delta);
+                            for &(u2, i2) in &path[start..] {
+                                self.push_raw(u2, i2, -delta);
+                            }
+                            continue 'search;
+                        }
+                        path.push((cur, i));
+                        on_path[w] = path.len();
+                        cur = w;
+                        advanced = true;
+                        break;
+                    }
+                }
+                if !advanced {
+                    if cur == from {
+                        return false; // decomposition ran dry
+                    }
+                    on_path[cur] = usize::MAX;
+                    let (pu, _pi) = path.pop().expect("non-root node has a path entry");
+                    cur = pu;
+                }
+            }
+        }
+        true
     }
 
     /// Check flow conservation at every node except s and t (tests).
@@ -344,6 +517,78 @@ mod tests {
             let f2 = g2.max_flow_reference(0, n - 1);
             prop_assert!((f1 - f2).abs() < 1e-6, "push-relabel {f1} != reference {f2}");
             g.check_conservation(0, n - 1).map_err(|e| e)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn incremental_from_zero_matches_reference() {
+        check(0xF12, 100, |rng| {
+            let n = rng.range(4, 12);
+            let mut g = FlowNetwork::new(n);
+            for _ in 0..rng.range(n, 4 * n) {
+                let u = rng.range(0, n);
+                let mut v = rng.range(0, n);
+                if u == v {
+                    v = (v + 1) % n;
+                }
+                g.add_edge(u, v, rng.range_f64(0.0, 10.0));
+            }
+            let mut g2 = g.clone();
+            let f1 = g.max_flow_incremental(0, n - 1);
+            let f2 = g2.max_flow_reference(0, n - 1);
+            prop_assert!(
+                (f1 - f2).abs() < 1e-9 * (1.0 + f2.abs()),
+                "incremental {f1} != reference {f2}"
+            );
+            g.check_conservation(0, n - 1).map_err(|e| e)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn incremental_matches_reference_after_capacity_updates() {
+        // The §3.4 usage pattern: solve, retune a handful of capacities
+        // (including down to zero — disabling an edge), warm-start from the
+        // residual state, and land on the same max-flow value as a cold
+        // reference solve.
+        check(0xF13, 80, |rng| {
+            let n = rng.range(4, 10);
+            let mut g = FlowNetwork::new(n);
+            let mut edges = Vec::new();
+            for _ in 0..rng.range(n, 4 * n) {
+                let u = rng.range(0, n);
+                let mut v = rng.range(0, n);
+                if u == v {
+                    v = (v + 1) % n;
+                }
+                edges.push(g.add_edge(u, v, rng.range_f64(0.0, 10.0)));
+            }
+            let _ = g.max_flow_incremental(0, n - 1);
+            for _round in 0..4 {
+                for _ in 0..rng.range(1, 4) {
+                    let e = edges[rng.range(0, edges.len())];
+                    // Bias toward hard cases: zeroing an edge that may
+                    // carry flow forces the cancel path.
+                    let cap = if rng.bool(0.3) { 0.0 } else { rng.range_f64(0.0, 10.0) };
+                    g.set_capacity(e, cap);
+                }
+                let f = g.max_flow_incremental(0, n - 1);
+                let mut r = g.clone();
+                let fr = r.max_flow_reference(0, n - 1);
+                prop_assert!(
+                    (f - fr).abs() < 1e-9 * (1.0 + fr.abs()),
+                    "incremental {f} != reference {fr} after updates"
+                );
+                g.check_conservation(0, n - 1).map_err(|e| e)?;
+                // Feasibility: no edge above its (new) capacity.
+                for &e in &edges {
+                    prop_assert!(
+                        g.flow(e) <= g.capacity(e) + 1e-9,
+                        "edge over capacity after incremental solve"
+                    );
+                }
+            }
             Ok(())
         });
     }

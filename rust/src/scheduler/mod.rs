@@ -8,6 +8,7 @@
 //! via [`SwapMode`].
 
 pub mod coarsen;
+pub mod evalcache;
 pub mod flownet;
 pub mod genetic;
 pub mod kl;
@@ -17,6 +18,7 @@ pub mod placement;
 pub mod spectral;
 pub mod strategy;
 
+pub use evalcache::{EvalCache, EvalCounters};
 pub use objective::Objective;
 pub use placement::{GroupPlan, KvRoute, Placement};
 
@@ -67,6 +69,15 @@ pub struct ScheduleOptions {
     /// under the same workload. Used by `rescheduler::warmstart`; also lets
     /// tests pin a starting partition.
     pub initial_groups: Option<Vec<Vec<DeviceId>>>,
+    /// Worker threads for candidate evaluation (1 = sequential). Plans are
+    /// bit-identical across thread counts: candidates are deduplicated and
+    /// ordered before the fan-out, evaluation is pure, and the accept fold
+    /// replays in proposal order.
+    pub threads: usize,
+    /// Memoize whole partition evaluations (see [`EvalCache`]). `false`
+    /// re-executes every evaluation — same plans, useful only as the perf
+    /// harness's uncached baseline.
+    pub use_eval_cache: bool,
 }
 
 impl ScheduleOptions {
@@ -83,6 +94,8 @@ impl ScheduleOptions {
             proposals_per_round: 16,
             force_k: None,
             initial_groups: None,
+            threads: 1,
+            use_eval_cache: true,
         }
     }
 }
@@ -109,12 +122,62 @@ pub struct ConvergencePoint {
     pub score: f64,
 }
 
+/// Search-effort accounting of one scheduling run (perf-regression proxy:
+/// counters are deterministic where wall-clock is not).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// `evaluate_partition` executions actually performed by this search.
+    pub evals: usize,
+    /// Evaluations served from the [`EvalCache`] memo instead.
+    pub eval_cache_hits: usize,
+    /// Per-group strategy-search executions / memo hits (inner layer).
+    pub strategy_misses: usize,
+    pub strategy_hits: usize,
+    /// Unique partitions this search put through evaluation (its seen-set).
+    pub partitions_explored: usize,
+    /// Worker threads used for candidate evaluation.
+    pub threads: usize,
+}
+
+impl SearchStats {
+    /// Counter deltas between two [`EvalCounters`] snapshots of the same
+    /// cache — the per-search stats both `schedule_with_cache` and
+    /// `schedule_genetic_with_cache` report.
+    pub fn delta(
+        c0: &EvalCounters,
+        c1: &EvalCounters,
+        partitions_explored: usize,
+        threads: usize,
+    ) -> SearchStats {
+        SearchStats {
+            evals: c1.misses - c0.misses,
+            eval_cache_hits: c1.hits - c0.hits,
+            strategy_misses: c1.strategy_misses - c0.strategy_misses,
+            strategy_hits: c1.strategy_hits - c0.strategy_hits,
+            partitions_explored,
+            threads: threads.max(1),
+        }
+    }
+
+    /// Cache hit rate over the full-evaluation layer, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.evals + self.eval_cache_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.eval_cache_hits as f64 / total as f64
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ScheduleResult {
     pub placement: Placement,
     pub history: Vec<ConvergencePoint>,
     pub rounds: usize,
     pub elapsed_s: f64,
+    /// Evaluation-effort counters for this run (deltas, not cache totals).
+    pub stats: SearchStats,
 }
 
 /// Appendix A: memory needed by one model replica = parameters + 32
@@ -140,6 +203,13 @@ pub fn task_for(workload: WorkloadKind) -> TaskProfile {
 /// Evaluate a partition: secondary-partition candidates (coarsen) then
 /// max-flow on each, returning the placement with the best score under
 /// `objective` (each candidate's `objective_score` is filled in).
+///
+/// One [`flownet::PartitionFlowNet`] serves the whole candidate sweep: the
+/// typed network is built once and each assignment only retunes capacity
+/// deltas, warm-starting max-flow from the previous residual state. This is
+/// a pure function of its arguments — [`EvalCache::evaluate`] memoizes it
+/// across searches.
+#[allow(clippy::too_many_arguments)]
 pub fn evaluate_partition(
     cluster: &Cluster,
     model: &LlmSpec,
@@ -148,33 +218,18 @@ pub fn evaluate_partition(
     groups: &[Vec<DeviceId>],
     n_type_candidates: usize,
     objective: Objective,
-    cache: &mut StrategyCache,
+    cache: &StrategyCache,
 ) -> Option<Placement> {
+    let mut net = flownet::PartitionFlowNet::new(cluster, model, task, period, groups, cache);
     // Per-group phase capacities feed the secondary-partition scoring.
-    let cm = crate::costmodel::CostModel::new(cluster, model);
-    let caps: Vec<(f64, f64)> = groups
-        .iter()
-        .map(|g| {
-            let p = cache
-                .best_prefill(cluster, model, g, task)
-                .map(|(cfg, _)| cm.prefill_capacity(&cfg, task, period))
-                .unwrap_or(0.0);
-            let d = cache
-                .best_decode(cluster, model, g, task)
-                .map(|(cfg, _)| cm.decode_capacity(&cfg, task, period))
-                .unwrap_or(0.0);
-            (p, d)
-        })
-        .collect();
+    let caps = net.phase_caps();
     let w = coarsen::inter_group_bandwidth(cluster, groups);
     // With few groups the full 2^K type space is cheap to max-flow-evaluate
     // (strategy search is cached); only large K relies on the ranked subset.
     let n_cand = if groups.len() <= 6 { 64 } else { n_type_candidates };
     let mut best: Option<Placement> = None;
     for assign in coarsen::type_candidates(&w, &caps, n_cand) {
-        if let Some(mut p) =
-            flownet::evaluate_types(cluster, model, task, period, groups, &assign, cache)
-        {
+        if let Some(mut p) = net.evaluate(&assign) {
             p.objective_score = objective.score(cluster, model, task, &p);
             if best.as_ref().map(|b| p.objective_score > b.objective_score).unwrap_or(true) {
                 best = Some(p);
@@ -322,9 +377,9 @@ fn guided_proposals(
     out
 }
 
-/// Canonical signature of a partition (ignores group/device order) for the
-/// evaluated-set memo.
-fn partition_signature(groups: &Groups) -> Vec<usize> {
+/// Canonical signature of a partition (ignores group/device order): the key
+/// of both the per-search seen-set memo and the cross-search [`EvalCache`].
+pub fn partition_signature(groups: &[Vec<DeviceId>]) -> Vec<usize> {
     let mut gs: Vec<Vec<usize>> = groups
         .iter()
         .map(|g| {
@@ -365,13 +420,68 @@ fn random_mutation(groups: &Groups, rng: &mut Rng) -> Groups {
 // Main entry point
 // ---------------------------------------------------------------------------
 
-/// Run the full HexGen-2 scheduling algorithm on a cluster.
+/// Evaluate a batch of candidate partitions through the cache, fanning out
+/// over `threads` scoped workers when asked to. Results come back in input
+/// order, so the caller's accept fold is independent of the thread count —
+/// and evaluation is a pure function, so the plans are bit-identical to a
+/// sequential run.
+#[allow(clippy::too_many_arguments)]
+fn evaluate_batch(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    task: &TaskProfile,
+    period: f64,
+    cands: &[Groups],
+    n_type_candidates: usize,
+    objective: Objective,
+    cache: &EvalCache,
+    threads: usize,
+) -> Vec<Option<Placement>> {
+    let eval = |g: &Groups| {
+        cache.evaluate(cluster, model, task, period, g, n_type_candidates, objective)
+    };
+    if threads <= 1 || cands.len() <= 1 {
+        return cands.iter().map(eval).collect();
+    }
+    // Contiguous chunks keep the join order deterministic; the chunk count
+    // matches the worker count so every thread gets one spawn.
+    let chunk = cands.len().div_ceil(threads.min(cands.len()));
+    std::thread::scope(|s| {
+        let handles: Vec<_> = cands
+            .chunks(chunk)
+            .map(|part| s.spawn(move || part.iter().map(eval).collect::<Vec<_>>()))
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("evaluation worker panicked"))
+            .collect()
+    })
+}
+
+/// Run the full HexGen-2 scheduling algorithm on a cluster with a private
+/// evaluation cache (memoized within the run when
+/// [`ScheduleOptions::use_eval_cache`] holds).
 pub fn schedule(cluster: &Cluster, model: &LlmSpec, opts: &ScheduleOptions) -> Option<ScheduleResult> {
+    let cache = if opts.use_eval_cache { EvalCache::new() } else { EvalCache::disabled() };
+    schedule_with_cache(cluster, model, opts, &cache)
+}
+
+/// [`schedule`] against a caller-owned [`EvalCache`]: the §3.3 serving loop
+/// shares one cache across periodic re-plans, warm starts, and GA runs so
+/// repeated partitions are never re-evaluated. Sharing never changes plans
+/// (memoized results are bit-identical to recomputation); it only changes
+/// how many evaluations execute — reported in [`ScheduleResult::stats`].
+pub fn schedule_with_cache(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    opts: &ScheduleOptions,
+    cache: &EvalCache,
+) -> Option<ScheduleResult> {
     let t0 = Instant::now();
+    let c0 = cache.counters();
     let task = task_for(opts.workload);
     let k = opts.force_k.unwrap_or_else(|| choose_k(cluster, model, &task));
     let mut rng = Rng::new(opts.seed);
-    let mut cache = StrategyCache::new();
 
     // Phase 1: initial partition (spectral + KL), plus uniform-split seeds —
     // the search space contains DistServe-style homogeneous layouts as
@@ -404,21 +514,34 @@ pub fn schedule(cluster: &Cluster, model: &LlmSpec, opts: &ScheduleOptions) -> O
         }
     }
 
+    // Per-search seen-set: unique partitions this run put through
+    // evaluation. Seeds enter it too, so phase 3 never re-proposes a seed
+    // (their phase-2 scores already lost to — or are — the incumbent, so
+    // skipping them cannot change the outcome).
+    let mut seen: std::collections::HashSet<Vec<usize>> = std::collections::HashSet::new();
+    let stats_of = |seen: &std::collections::HashSet<Vec<usize>>, cache: &EvalCache| {
+        SearchStats::delta(&c0, &cache.counters(), seen.len(), opts.threads)
+    };
+
     // Phase 2 (+ type assignment): evaluate seeds, keep the best under the
-    // chosen objective.
+    // chosen objective. The fold replays in seed order (earliest wins ties)
+    // regardless of how the batch was fanned out.
+    seeds.retain(|g| seen.insert(partition_signature(g)));
+    let evals = evaluate_batch(
+        cluster,
+        model,
+        &task,
+        opts.period,
+        &seeds,
+        opts.type_candidates,
+        opts.objective,
+        cache,
+        opts.threads,
+    );
     let mut best_placement: Option<Placement> = None;
     let mut best_groups: Groups = Vec::new();
-    for groups in seeds {
-        if let Some(p) = evaluate_partition(
-            cluster,
-            model,
-            &task,
-            opts.period,
-            &groups,
-            opts.type_candidates,
-            opts.objective,
-            &mut cache,
-        ) {
+    for (groups, p) in seeds.into_iter().zip(evals) {
+        if let Some(p) = p {
             if best_placement.as_ref().map(|b| p.objective_score > b.objective_score).unwrap_or(true)
             {
                 best_placement = Some(p);
@@ -435,18 +558,20 @@ pub fn schedule(cluster: &Cluster, model: &LlmSpec, opts: &ScheduleOptions) -> O
     }];
 
     if opts.swap_mode == SwapMode::None {
+        let stats = stats_of(&seen, cache);
         return Some(ScheduleResult {
             placement: best_placement,
             history,
             rounds: 0,
             elapsed_s: t0.elapsed().as_secs_f64(),
+            stats,
         });
     }
 
-    // Phase 3: iterative refinement (§3.4). A seen-set memo keeps the
-    // proposal budget pointed at *new* partitions.
-    let mut seen: std::collections::HashSet<Vec<usize>> = std::collections::HashSet::new();
-    seen.insert(partition_signature(&best_groups));
+    // Phase 3: iterative refinement (§3.4). The seen-set memo keeps the
+    // proposal budget pointed at *new* partitions; the cross-search
+    // EvalCache additionally serves any partition some earlier run (seed,
+    // re-plan, GA generation) already evaluated.
     let mut stall = 0usize;
     let mut rounds = 0usize;
     for round in 1..=opts.max_rounds {
@@ -464,24 +589,27 @@ pub fn schedule(cluster: &Cluster, model: &LlmSpec, opts: &ScheduleOptions) -> O
                 .collect(),
             SwapMode::None => unreachable!(),
         };
+        // Dedup in proposal order, then evaluate the fresh ones as one
+        // (possibly parallel) batch; the accept fold replays sequentially.
+        let fresh: Vec<Groups> = proposals
+            .into_iter()
+            .filter(|cand| !cand.iter().any(|g| g.is_empty()))
+            .filter(|cand| seen.insert(partition_signature(cand)))
+            .collect();
+        let evals = evaluate_batch(
+            cluster,
+            model,
+            &task,
+            opts.period,
+            &fresh,
+            opts.type_candidates,
+            opts.objective,
+            cache,
+            opts.threads,
+        );
         let mut improved = false;
-        for cand in proposals {
-            if cand.iter().any(|g| g.is_empty()) {
-                continue;
-            }
-            if !seen.insert(partition_signature(&cand)) {
-                continue; // already evaluated
-            }
-            if let Some(p) = evaluate_partition(
-                cluster,
-                model,
-                &task,
-                opts.period,
-                &cand,
-                opts.type_candidates,
-                opts.objective,
-                &mut cache,
-            ) {
+        for (cand, p) in fresh.into_iter().zip(evals) {
+            if let Some(p) = p {
                 if opts.objective.improves(p.objective_score, best_placement.objective_score) {
                     best_placement = p;
                     best_groups = cand;
@@ -505,11 +633,13 @@ pub fn schedule(cluster: &Cluster, model: &LlmSpec, opts: &ScheduleOptions) -> O
         }
     }
 
+    let stats = stats_of(&seen, cache);
     Some(ScheduleResult {
         placement: best_placement,
         history,
         rounds,
         elapsed_s: t0.elapsed().as_secs_f64(),
+        stats,
     })
 }
 
@@ -559,9 +689,9 @@ mod tests {
         let c = settings::case_study();
         let task = task_for(WorkloadKind::Lphd);
         let groups: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]];
-        let mut cache = strategy::StrategyCache::new();
+        let cache = strategy::StrategyCache::new();
         let seed_eval =
-            evaluate_partition(&c, &OPT_30B, &task, 600.0, &groups, 64, Objective::Throughput, &mut cache)
+            evaluate_partition(&c, &OPT_30B, &task, 600.0, &groups, 64, Objective::Throughput, &cache)
                 .expect("seed");
         let mut opts = ScheduleOptions::new(WorkloadKind::Lphd);
         opts.max_rounds = 4;

@@ -5,6 +5,8 @@
 //! *throughput-optimal* strategy for decode replicas.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::cluster::{Cluster, DeviceId};
 use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};
@@ -200,14 +202,27 @@ pub fn best_decode(
     best
 }
 
+/// (sorted group, (batch, s_in bits, s_out bits)).
+type StrategyKey = (Vec<DeviceId>, (usize, u64, u64));
+
 /// Memoized per-group strategy search; the refinement loop re-evaluates
 /// thousands of partitions and most groups repeat.
+///
+/// Thread-safe with interior mutability (`&self` methods): the parallel
+/// proposal evaluation of [`schedule`](super::schedule) shares one cache
+/// across `std::thread::scope` workers. Entries memoize pure functions of
+/// the key, so concurrent lookups can at worst duplicate a computation —
+/// never change a result. The key is (sorted group, task lengths): the
+/// sort makes one entry serve every partition containing the group, and
+/// the task lengths matter because feasibility and decode batching depend
+/// on them — an [`EvalCache`](super::EvalCache) shared across warm-started
+/// re-plans sees *different* workloads through the same cache.
 #[derive(Default)]
 pub struct StrategyCache {
-    prefill: HashMap<Vec<DeviceId>, Option<(ReplicaConfig, f64)>>,
-    decode: HashMap<Vec<DeviceId>, Option<(ReplicaConfig, f64)>>,
-    pub hits: usize,
-    pub misses: usize,
+    prefill: Mutex<HashMap<StrategyKey, Option<(ReplicaConfig, f64)>>>,
+    decode: Mutex<HashMap<StrategyKey, Option<(ReplicaConfig, f64)>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
 }
 
 impl StrategyCache {
@@ -215,45 +230,61 @@ impl StrategyCache {
         StrategyCache::default()
     }
 
-    fn key(group: &[DeviceId]) -> Vec<DeviceId> {
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Drop every entry (counters keep running). Used when the owning
+    /// [`EvalCache`](super::EvalCache) re-binds to a different cluster or
+    /// model: the key carries neither, so entries would go stale.
+    pub fn clear(&self) {
+        self.prefill.lock().unwrap().clear();
+        self.decode.lock().unwrap().clear();
+    }
+
+    fn key(group: &[DeviceId], task: &TaskProfile) -> StrategyKey {
         let mut k = group.to_vec();
         k.sort_unstable();
-        k
+        (k, (task.batch, task.s_in.to_bits(), task.s_out.to_bits()))
     }
 
     pub fn best_prefill(
-        &mut self,
+        &self,
         cluster: &Cluster,
         model: &LlmSpec,
         group: &[DeviceId],
         task: &TaskProfile,
     ) -> Option<(ReplicaConfig, f64)> {
-        let key = Self::key(group);
-        if let Some(v) = self.prefill.get(&key) {
-            self.hits += 1;
+        let key = Self::key(group, task);
+        if let Some(v) = self.prefill.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return v.clone();
         }
-        self.misses += 1;
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let v = best_prefill(cluster, model, group, task);
-        self.prefill.insert(key, v.clone());
+        self.prefill.lock().unwrap().insert(key, v.clone());
         v
     }
 
     pub fn best_decode(
-        &mut self,
+        &self,
         cluster: &Cluster,
         model: &LlmSpec,
         group: &[DeviceId],
         task: &TaskProfile,
     ) -> Option<(ReplicaConfig, f64)> {
-        let key = Self::key(group);
-        if let Some(v) = self.decode.get(&key) {
-            self.hits += 1;
+        let key = Self::key(group, task);
+        if let Some(v) = self.decode.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return v.clone();
         }
-        self.misses += 1;
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let v = best_decode(cluster, model, group, task);
-        self.decode.insert(key, v.clone());
+        self.decode.lock().unwrap().insert(key, v.clone());
         v
     }
 }
@@ -342,12 +373,27 @@ mod tests {
     #[test]
     fn cache_hits() {
         let c = settings::homogeneous();
-        let mut cache = StrategyCache::new();
+        let cache = StrategyCache::new();
         let g: Vec<usize> = (0..4).collect();
         let a = cache.best_prefill(&c, &OPT_30B, &g, &task());
         let b = cache.best_prefill(&c, &OPT_30B, &g, &task());
         assert_eq!(a.is_some(), b.is_some());
-        assert_eq!(cache.hits, 1);
-        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn cache_keys_on_task_lengths() {
+        // The same group under a different workload mix is a different
+        // entry: feasibility and decode batching depend on the lengths, and
+        // a shared cache sees multiple workloads across warm re-plans.
+        let c = settings::homogeneous();
+        let cache = StrategyCache::new();
+        let g: Vec<usize> = (0..4).collect();
+        let _ = cache.best_decode(&c, &OPT_30B, &g, &TaskProfile::new(1, 128.0, 64.0));
+        let _ = cache.best_decode(&c, &OPT_30B, &g, &TaskProfile::new(1, 2048.0, 512.0));
+        assert_eq!(cache.misses(), 2, "distinct tasks must not share an entry");
+        let _ = cache.best_decode(&c, &OPT_30B, &g, &TaskProfile::new(1, 128.0, 64.0));
+        assert_eq!(cache.hits(), 1);
     }
 }

@@ -366,15 +366,16 @@ impl ReplicaPolicy for DisaggPrefill {
             None => {
                 // Greedy batch under the Fig.-1 token budget; the first
                 // request is always admitted so oversized prompts cannot
-                // wedge the queue.
-                let mut batch = Vec::new();
+                // wedge the queue. Built in place into the (empty when not
+                // busy) batch buffer — no per-burst allocation.
+                debug_assert!(self.batch.is_empty());
                 let mut tokens = 0.0;
                 let mut max_len = 0usize;
                 while let Some(&r) = self.queue.front() {
                     let len = env.reqs[r].input_len;
-                    if !batch.is_empty()
+                    if !self.batch.is_empty()
                         && (tokens + len as f64 > PREFILL_TOKEN_BUDGET
-                            || batch.len() >= self.max_batch)
+                            || self.batch.len() >= self.max_batch)
                     {
                         break;
                     }
@@ -386,15 +387,14 @@ impl ReplicaPolicy for DisaggPrefill {
                     self.ledger.reserve(len as f64);
                     tokens += len as f64;
                     max_len = max_len.max(len);
-                    batch.push(r);
+                    self.batch.push(r);
                 }
-                if batch.is_empty() {
+                if self.batch.is_empty() {
                     return None;
                 }
-                let t = TaskProfile::new(batch.len(), max_len as f64, 0.0);
+                let t = TaskProfile::new(self.batch.len(), max_len as f64, 0.0);
                 let lat = env.cm.prefill_latency(&self.cfg, &t);
                 self.busy = true;
-                self.batch = batch;
                 Some(lat)
             }
             Some(c) => {
@@ -437,7 +437,9 @@ impl ReplicaPolicy for DisaggPrefill {
                 }
             });
         } else {
-            for r in std::mem::take(&mut self.batch) {
+            // Drain (not take) so the buffer's allocation is reused by the
+            // next burst.
+            for r in self.batch.drain(..) {
                 out.push(Outcome::KvReady(r));
             }
         }
@@ -573,6 +575,9 @@ pub struct Colocated {
     max_batch: usize,
     chunk: Option<usize>,
     ledger: MemLedger,
+    /// Reused per-iteration scratch for prefills completing all chunks
+    /// (promoted into `running` after the retain) — no per-event `Vec`.
+    promote_buf: Vec<usize>,
 }
 
 impl ReplicaPolicy for Colocated {
@@ -667,18 +672,22 @@ impl ReplicaPolicy for Colocated {
         self.iterating = false;
         let reqs = env.reqs;
         let mut freed = 0.0;
-        // Decode progress.
-        let mut finished = Vec::new();
+        // Decode progress: finished requests report straight into `out`
+        // (same order as the old intermediate Vec: running order first,
+        // promotions after).
         for run in self.running.iter_mut() {
             run.generated += 1;
             if run.generated >= reqs[run.req].output_len {
-                finished.push(run.req);
+                out.push(Outcome::Finished(run.req));
                 freed += gen_footprint(&reqs[run.req]);
             }
         }
         self.running.retain(|run| run.generated < reqs[run.req].output_len);
-        // Prefills that completed all chunks: first token produced.
-        let mut done_pf = Vec::new();
+        // Prefills that completed all chunks: first token produced. The
+        // promotion buffer is taken (not allocated) so retain can fill it
+        // while `inflight` is borrowed.
+        let mut done_pf = std::mem::take(&mut self.promote_buf);
+        debug_assert!(done_pf.is_empty());
         self.inflight.retain(|p| {
             if p.remaining == 0 {
                 done_pf.push(p.req);
@@ -687,10 +696,7 @@ impl ReplicaPolicy for Colocated {
                 true
             }
         });
-        for r in finished {
-            out.push(Outcome::Finished(r));
-        }
-        for r in done_pf {
+        for r in done_pf.drain(..) {
             out.push(Outcome::FirstToken(r));
             if reqs[r].output_len <= 1 {
                 out.push(Outcome::Finished(r));
@@ -699,6 +705,7 @@ impl ReplicaPolicy for Colocated {
                 self.running.push(Running { req: r, generated: 1 });
             }
         }
+        self.promote_buf = done_pf;
         self.ledger.free(freed);
     }
 
@@ -775,6 +782,11 @@ struct Engine<'a> {
     /// full arena scan per event).
     resident: Vec<f64>,
     resident_total: f64,
+    /// Reused per-event buffers (the alloc-free hot loop): service-burst
+    /// outcomes, and a usize scratch shared by admission filtering, KV
+    /// route pooling, and quiesce drains — never live at the same time.
+    outcome_buf: Vec<Outcome>,
+    scratch: Vec<usize>,
     stats: SimStats,
 }
 
@@ -921,6 +933,7 @@ impl<'a> Engine<'a> {
                     max_batch: mb,
                     chunk,
                     ledger,
+                    promote_buf: Vec::new(),
                 }),
                 PolicyKind::Colocated,
             );
@@ -1014,19 +1027,24 @@ impl<'a> Engine<'a> {
             return;
         }
         let i = if self.sim.sizing == Sizing::PerRequest {
-            let fitting: Vec<usize> = self
-                .active
-                .iter()
-                .copied()
-                .filter(|&i| self.replicas[i].mem_capacity_tokens() >= self.entry_footprint(i, r))
-                .collect();
+            let mut fitting = std::mem::take(&mut self.scratch);
+            fitting.clear();
+            fitting.extend(
+                self.active
+                    .iter()
+                    .copied()
+                    .filter(|&i| self.replicas[i].mem_capacity_tokens() >= self.entry_footprint(i, r)),
+            );
             if fitting.is_empty() {
                 // Larger than every active replica's memory: reject rather
                 // than wedge a queue forever.
+                self.scratch = fitting;
                 self.stats.rejected += 1;
                 return;
             }
-            self.pick(&fitting)
+            let i = self.pick(&fitting);
+            self.scratch = fitting;
+            i
         } else {
             self.pick(&self.active)
         };
@@ -1042,34 +1060,37 @@ impl<'a> Engine<'a> {
     /// link.
     fn route_kv(&mut self, p: usize, r: usize, now: f64) {
         self.prefill_done_at[r] = now;
-        let routed: Vec<usize> = (0..self.replicas.len())
-            .filter(|&d| self.kinds[d] == PolicyKind::Decode && self.route_w.contains_key(&(p, d)))
-            .collect();
+        let mut pool = std::mem::take(&mut self.scratch);
+        pool.clear();
+        pool.extend(
+            (0..self.replicas.len())
+                .filter(|&d| self.kinds[d] == PolicyKind::Decode && self.route_w.contains_key(&(p, d))),
+        );
         // Legacy fallback: an unrouted prefill replica sends to the first
         // decode replica in the arena.
-        let mut pool = if routed.is_empty() {
+        if pool.is_empty() {
             match (0..self.replicas.len()).find(|&d| self.kinds[d] == PolicyKind::Decode) {
-                Some(d) => vec![d],
+                Some(d) => pool.push(d),
                 None => {
                     // Unreachable for specs built by this engine (every
                     // disagg build has ≥1 decode replica; colocated never
                     // routes KV) — still account the drop and free the
                     // prefill-side reservation defensively.
+                    self.scratch = pool;
                     self.stats.rejected += 1;
                     let mut env = penv!(self);
                     self.replicas[p].release_kv(r, &mut env);
                     return;
                 }
             }
-        } else {
-            routed
-        };
+        }
         if self.sim.sizing == Sizing::PerRequest {
             let footprint = gen_footprint(&self.reqs[r]);
             pool.retain(|&d| self.replicas[d].mem_capacity_tokens() >= footprint);
             if pool.is_empty() {
                 // No decode replica can ever hold this generation: drop the
                 // KV and report the request unserved.
+                self.scratch = pool;
                 self.stats.rejected += 1;
                 let mut env = penv!(self);
                 self.replicas[p].release_kv(r, &mut env);
@@ -1086,6 +1107,7 @@ impl<'a> Engine<'a> {
                 wa.partial_cmp(&wb).unwrap()
             })
             .expect("pool checked non-empty");
+        self.scratch = pool;
         *self.assigned_from.entry((d, p)).or_default() += 1.0;
         // KV transfer over the link; links serialize through a shared
         // queue (per route, or per source NIC).
@@ -1129,14 +1151,17 @@ impl<'a> Engine<'a> {
                     // their unstarted requests back into the holding buffer
                     // (arrival order preserved by sorting on request index).
                     // In-flight bursts and running decodes drain on the old
-                    // epoch's replicas.
+                    // epoch's replicas. The pulled-request buffer is the
+                    // shared scratch, not a fresh Vec.
                     let old = std::mem::take(&mut self.active);
-                    let mut pulled: Vec<usize> = Vec::new();
+                    let mut pulled = std::mem::take(&mut self.scratch);
+                    pulled.clear();
                     for &p in &old {
-                        pulled.extend(self.replicas[p].drain_unstarted());
+                        pulled.append(&mut self.replicas[p].drain_unstarted());
                     }
                     pulled.sort_unstable();
-                    self.holding.extend(pulled);
+                    self.holding.extend(pulled.drain(..));
+                    self.scratch = pulled;
                     self.quiesced[i] = old;
                 }
                 Ev::Activate(i) => {
@@ -1160,18 +1185,21 @@ impl<'a> Engine<'a> {
                     }
                 }
                 Ev::Service(i) => {
-                    let mut out = Vec::new();
+                    // Outcomes land in the reused per-event buffer.
+                    let mut out = std::mem::take(&mut self.outcome_buf);
+                    out.clear();
                     {
                         let mut env = penv!(self);
                         self.replicas[i].service_done(&mut env, &mut out);
                     }
-                    for o in out {
+                    for o in out.drain(..) {
                         match o {
                             Outcome::KvReady(r) => self.route_kv(i, r, now),
                             Outcome::FirstToken(r) => self.prefill_done_at[r] = now,
                             Outcome::Finished(r) => self.finish(r, now),
                         }
                     }
+                    self.outcome_buf = out;
                     // Completions freed memory; the trailing try_start
                     // re-reads replica i's residency either way.
                     self.try_start(i, now);
@@ -1236,14 +1264,19 @@ pub fn simulate(
         link_free: HashMap::new(),
         active: Vec::new(),
         router: Router::FlowWeighted,
-        q: EventQueue::new(),
+        // Arrivals + resched/activate pairs, plus slack for in-flight
+        // service/KV events.
+        q: EventQueue::with_capacity(reqs.len() + 2 * switches.len() + 16),
         prefill_done_at: vec![0.0; reqs.len()],
         done: vec![false; reqs.len()],
-        records: Vec::new(),
+        // Record arena sized up front: every request finishes at most once.
+        records: Vec::with_capacity(reqs.len()),
         holding: Vec::new(),
         quiesced: vec![Vec::new(); switches.len()],
         resident: Vec::new(),
         resident_total: 0.0,
+        outcome_buf: Vec::new(),
+        scratch: Vec::new(),
         stats: SimStats::default(),
     };
 

@@ -44,6 +44,13 @@ impl<E> EventQueue<E> {
         EventQueue { heap: BinaryHeap::new(), seq: 0 }
     }
 
+    /// Preallocate for a known event volume (e.g. one arrival per request
+    /// plus the resched pairs) — the serving loop then never regrows the
+    /// heap.
+    pub fn with_capacity(n: usize) -> Self {
+        EventQueue { heap: BinaryHeap::with_capacity(n), seq: 0 }
+    }
+
     pub fn push(&mut self, time: f64, payload: E) {
         assert!(time.is_finite(), "non-finite event time");
         self.seq += 1;

@@ -54,7 +54,7 @@ fn matches_exhaustive_search_on_type_assignment() {
     let devs: Vec<usize> = (0..c.n()).collect();
     let groups = scheduler::spectral::partition_k(&c, &devs, 4);
 
-    let mut cache = hexgen2::scheduler::strategy::StrategyCache::new();
+    let cache = hexgen2::scheduler::strategy::StrategyCache::new();
     let ours = scheduler::evaluate_partition(
         &c,
         &OPT_30B,
@@ -63,7 +63,7 @@ fn matches_exhaustive_search_on_type_assignment() {
         &groups,
         64,
         Objective::Throughput,
-        &mut cache,
+        &cache,
     )
     .expect("placement");
 
@@ -71,7 +71,7 @@ fn matches_exhaustive_search_on_type_assignment() {
     for mask in 1u32..15 {
         let assign: Vec<bool> = (0..4).map(|g| mask & (1 << g) != 0).collect();
         if let Some(p) = hexgen2::scheduler::flownet::evaluate_types(
-            &c, &OPT_30B, &task, 600.0, &groups, &assign, &mut cache,
+            &c, &OPT_30B, &task, 600.0, &groups, &assign, &cache,
         ) {
             brute_best = brute_best.max(p.flow_value);
         }

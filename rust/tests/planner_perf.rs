@@ -1,0 +1,122 @@
+//! Deterministic perf-proxy contracts (ISSUE 4 satellite coverage). No
+//! wall-time assertions — everything here is counter- or bit-identity
+//! based, so it cannot flake on a loaded CI machine:
+//! - memoization drops the evaluate_partition execution count on the
+//!   case-study setting (a periodic re-plan is free; the full serving-loop
+//!   3x gate lives in `experiments::perf`'s unit test);
+//! - `--threads 4` plans are bit-identical to sequential ones;
+//! - plans are bit-identical with the cache on and off;
+//! - a shared cache never changes what a warm-started re-plan picks.
+
+use hexgen2::cluster::settings;
+use hexgen2::model::OPT_30B;
+use hexgen2::rescheduler::warmstart;
+use hexgen2::scheduler::{self, EvalCache, Placement, ScheduleOptions};
+use hexgen2::workload::WorkloadKind;
+
+fn opts(kind: WorkloadKind) -> ScheduleOptions {
+    let mut o = ScheduleOptions::new(kind);
+    o.max_rounds = 6;
+    o.patience = 3;
+    o.proposals_per_round = 8;
+    o.type_candidates = 4;
+    o.seed = 3;
+    o
+}
+
+/// Bitwise plan fingerprint: f64 Debug prints the shortest round-trip
+/// representation, so equal strings == equal bits (no NaNs in plans).
+fn fp(p: &Placement) -> String {
+    format!("{p:?}")
+}
+
+#[test]
+fn periodic_replan_is_free_with_shared_cache() {
+    let c = settings::case_study();
+    let cache = EvalCache::new();
+    let o = opts(WorkloadKind::Lphd);
+    let a = scheduler::schedule_with_cache(&c, &OPT_30B, &o, &cache).expect("schedules");
+    assert!(a.stats.evals > 0, "first plan executed nothing?");
+    assert_eq!(a.stats.evals, a.stats.partitions_explored);
+    // The §3.3 loop re-plans every period; under steady traffic the re-plan
+    // is an identical search — pure cache hits, zero executions.
+    let b = scheduler::schedule_with_cache(&c, &OPT_30B, &o, &cache).expect("schedules");
+    assert_eq!(b.stats.evals, 0, "periodic re-plan re-executed evaluations");
+    assert_eq!(b.stats.eval_cache_hits, a.stats.evals);
+    assert_eq!(fp(&a.placement), fp(&b.placement), "memoized re-plan changed the plan");
+    assert_eq!(a.rounds, b.rounds);
+}
+
+#[test]
+fn threaded_plan_bit_identical_to_sequential() {
+    let c = settings::case_study();
+    let mut seq = opts(WorkloadKind::Lphd);
+    seq.threads = 1;
+    let mut par = seq.clone();
+    par.threads = 4;
+    let a = scheduler::schedule(&c, &OPT_30B, &seq).expect("schedules");
+    let b = scheduler::schedule(&c, &OPT_30B, &par).expect("schedules");
+    assert_eq!(fp(&a.placement), fp(&b.placement), "threads changed the plan");
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.stats.partitions_explored, b.stats.partitions_explored);
+    let scores_a: Vec<u64> = a.history.iter().map(|h| h.score.to_bits()).collect();
+    let scores_b: Vec<u64> = b.history.iter().map(|h| h.score.to_bits()).collect();
+    assert_eq!(scores_a, scores_b, "convergence history diverged under threads");
+    assert_eq!(b.stats.threads, 4);
+}
+
+#[test]
+fn cache_on_off_bit_identical() {
+    let c = settings::het1();
+    let mut on = opts(WorkloadKind::Hphd);
+    on.use_eval_cache = true;
+    let mut off = on.clone();
+    off.use_eval_cache = false;
+    let a = scheduler::schedule(&c, &OPT_30B, &on).expect("schedules");
+    let b = scheduler::schedule(&c, &OPT_30B, &off).expect("schedules");
+    assert_eq!(fp(&a.placement), fp(&b.placement), "eval cache changed the plan");
+    // Same search trajectory => same explored set either way.
+    assert_eq!(a.stats.partitions_explored, b.stats.partitions_explored);
+    assert_eq!(b.stats.eval_cache_hits, 0, "disabled cache served a hit");
+}
+
+#[test]
+fn shared_cache_never_changes_warm_replans() {
+    // Drift away and back with a shared cache vs fresh caches: identical
+    // placements, strictly fewer executions on the shared path.
+    let c = settings::case_study();
+    let base = opts(WorkloadKind::Lphd);
+    let shared = EvalCache::new();
+    let incumbent =
+        scheduler::schedule_with_cache(&c, &OPT_30B, &base, &shared).expect("schedules").placement;
+
+    let mut away = base.clone();
+    away.workload = WorkloadKind::Hpld;
+    let mut back = base.clone();
+    back.workload = WorkloadKind::Lphd;
+
+    // Fresh-cache (per-replan) trajectory; the return leg repeats once
+    // (the next period under now-steady traffic) and pays full price again.
+    let f1 = warmstart::replan(&c, &OPT_30B, &away, &incumbent).expect("replans");
+    let f2 = warmstart::replan(&c, &OPT_30B, &back, &f1.placement).expect("replans");
+    let f2b = warmstart::replan(&c, &OPT_30B, &back, &f1.placement).expect("replans");
+    // Shared-cache trajectory: the identical periodic repeat is free.
+    let s1 = warmstart::replan_with_cache(&c, &OPT_30B, &away, &incumbent, &shared)
+        .expect("replans");
+    let s2 = warmstart::replan_with_cache(&c, &OPT_30B, &back, &s1.placement, &shared)
+        .expect("replans");
+    let s2b = warmstart::replan_with_cache(&c, &OPT_30B, &back, &s1.placement, &shared)
+        .expect("replans");
+
+    assert_eq!(fp(&f1.placement), fp(&s1.placement), "shared cache changed the away re-plan");
+    assert_eq!(fp(&f2.placement), fp(&s2.placement), "shared cache changed the return re-plan");
+    assert_eq!(fp(&f2b.placement), fp(&s2b.placement), "periodic repeat changed the plan");
+    assert_eq!(s2b.stats.evals, 0, "identical periodic re-plan re-executed evaluations");
+    assert!(f2b.stats.evals > 0, "fresh-cache repeat was unexpectedly free");
+    let fresh_execs = f1.stats.evals + f2.stats.evals + f2b.stats.evals;
+    let shared_execs = s1.stats.evals + s2.stats.evals + s2b.stats.evals;
+    assert!(
+        shared_execs < fresh_execs,
+        "shared cache saved nothing: {shared_execs} vs {fresh_execs} executions"
+    );
+}

@@ -35,7 +35,7 @@ fn warm_start_never_below_incumbent_under_new_workload() {
     // re-evaluated under the new mix (what "keep the placement" would yield).
     let task = scheduler::task_for(WorkloadKind::Hpld);
     let groups = warmstart::incumbent_groups(&incumbent);
-    let mut cache = hexgen2::scheduler::strategy::StrategyCache::new();
+    let cache = hexgen2::scheduler::strategy::StrategyCache::new();
     let keep = scheduler::evaluate_partition(
         &c,
         &OPT_30B,
@@ -44,7 +44,7 @@ fn warm_start_never_below_incumbent_under_new_workload() {
         &groups,
         64,
         Objective::Throughput,
-        &mut cache,
+        &cache,
     )
     .expect("incumbent evaluates under HPLD");
     let mut shifted = ScheduleOptions::new(WorkloadKind::Hpld);
