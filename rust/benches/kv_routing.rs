@@ -1,0 +1,10 @@
+//! Bench: KV routing study — transfer-engine route models and layer-wise
+//! pipelined chunking under shared-NIC contention (per-request admission).
+use hexgen2::experiments::{kvrouting, ExpOpts};
+use hexgen2::model::OPT_30B;
+
+fn main() {
+    kvrouting::kv_routing_table(&OPT_30B, "case_study", &ExpOpts::from_env())
+        .expect("case_study setting exists")
+        .print("KV routing: route models x pipelined chunking under shared-NIC contention (OPT-30B)");
+}

@@ -13,7 +13,7 @@ use std::time::Instant;
 use crate::cluster::{Cluster, DeviceId};
 use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};
 use crate::model::LlmSpec;
-use crate::scheduler::strategy;
+use crate::scheduler::{objective, strategy, Objective};
 use crate::util::rng::Rng;
 use crate::workload::WorkloadKind;
 
@@ -23,6 +23,10 @@ pub struct HexGenPlan {
     pub replicas: Vec<ReplicaConfig>,
     /// Estimated aggregate throughput, tokens/s.
     pub tokens_per_s: f64,
+    /// Score of the plan under the objective the GA ranked by (equals
+    /// `tokens_per_s` for [`Objective::Throughput`], the published
+    /// algorithm's fitness).
+    pub objective_score: f64,
     pub elapsed_s: f64,
 }
 
@@ -66,12 +70,20 @@ fn best_colocated(
     best
 }
 
+/// Fitness of one genome: (score under the active objective, aggregate
+/// colocated tokens/s, per-group strategies). Under
+/// [`Objective::Throughput`] the score *is* the summed colocated throughput
+/// — HexGen's published fitness, bit-for-bit — while other objectives rank
+/// the GA's internal search by the same criterion the deploy layer reports
+/// (`objective::colocated_objective_score`), instead of searching for
+/// throughput and only re-scoring the winner.
 fn plan_fitness(
     cluster: &Cluster,
     model: &LlmSpec,
     groups: &[Vec<DeviceId>],
     task: &TaskProfile,
-) -> (f64, Vec<Option<ReplicaConfig>>) {
+    objective: Objective,
+) -> (f64, f64, Vec<Option<ReplicaConfig>>) {
     let mut total = 0.0;
     let mut cfgs = Vec::new();
     for g in groups {
@@ -83,14 +95,35 @@ fn plan_fitness(
             None => cfgs.push(None),
         }
     }
-    (total, cfgs)
+    let replicas: Vec<ReplicaConfig> = cfgs.iter().flatten().cloned().collect();
+    let score = if replicas.is_empty() {
+        f64::NEG_INFINITY
+    } else {
+        objective::colocated_objective_score(cluster, model, task, objective, &replicas, total)
+    };
+    (score, total, cfgs)
 }
 
-/// GA scheduling of colocated replicas (HexGen's scheduler).
+/// GA scheduling of colocated replicas (HexGen's scheduler), ranked by
+/// throughput — the published algorithm.
 pub fn schedule_hexgen(
     cluster: &Cluster,
     model: &LlmSpec,
     workload: WorkloadKind,
+    seed: u64,
+    generations: usize,
+) -> Option<HexGenPlan> {
+    schedule_hexgen_with(cluster, model, workload, Objective::Throughput, seed, generations)
+}
+
+/// [`schedule_hexgen`] with the GA fitness ranked by an arbitrary
+/// [`Objective`] (ROADMAP PR-2 follow-up: the internal search optimizes the
+/// *active* objective instead of throughput-then-rescore).
+pub fn schedule_hexgen_with(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    workload: WorkloadKind,
+    objective: Objective,
     seed: u64,
     generations: usize,
 ) -> Option<HexGenPlan> {
@@ -117,11 +150,12 @@ pub fn schedule_hexgen(
 
     const POP: usize = 10;
     const ELITE: usize = 3;
-    let mut pop: Vec<(Vec<Vec<DeviceId>>, f64, Vec<Option<ReplicaConfig>>)> = (0..POP)
+    type Genome = (Vec<Vec<DeviceId>>, f64, f64, Vec<Option<ReplicaConfig>>);
+    let mut pop: Vec<Genome> = (0..POP)
         .map(|_| {
             let g = random_partition(&mut rng);
-            let (f, cfgs) = plan_fitness(cluster, model, &g, &task);
-            (g, f, cfgs)
+            let (score, tput, cfgs) = plan_fitness(cluster, model, &g, &task, objective);
+            (g, score, tput, cfgs)
         })
         .collect();
     pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
@@ -151,20 +185,25 @@ pub fn schedule_hexgen(
             if g.iter().any(|x| x.is_empty()) {
                 continue;
             }
-            let (f, cfgs) = plan_fitness(cluster, model, &g, &task);
-            children.push((g, f, cfgs));
+            let (score, tput, cfgs) = plan_fitness(cluster, model, &g, &task, objective);
+            children.push((g, score, tput, cfgs));
         }
         pop.truncate(ELITE);
         pop.extend(children);
         pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     }
 
-    let (_g, fitness, cfgs) = pop.into_iter().next().unwrap();
+    let (_g, score, tput, cfgs) = pop.into_iter().next().unwrap();
     let replicas: Vec<ReplicaConfig> = cfgs.into_iter().flatten().collect();
     if replicas.is_empty() {
         return None;
     }
-    Some(HexGenPlan { replicas, tokens_per_s: fitness, elapsed_s: t0.elapsed().as_secs_f64() })
+    Some(HexGenPlan {
+        replicas,
+        tokens_per_s: tput,
+        objective_score: score,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    })
 }
 
 #[cfg(test)]
@@ -198,6 +237,54 @@ mod tests {
         let rep = run_colocated(&c, &OPT_30B, &plan.replicas, &trace, None);
         assert_eq!(rep.records.len(), 40);
         assert!(rep.tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn objective_aware_ga_default_is_published_fitness() {
+        // Under Objective::Throughput the fitness is the summed colocated
+        // throughput — the published algorithm — so the generic entry must
+        // reproduce the legacy one exactly, and score == tokens/s.
+        let c = settings::het4();
+        let a = schedule_hexgen(&c, &OPT_30B, WorkloadKind::Lpld, 2, 4).expect("plans");
+        let b =
+            schedule_hexgen_with(&c, &OPT_30B, WorkloadKind::Lpld, Objective::Throughput, 2, 4)
+                .expect("plans");
+        assert_eq!(format!("{:?}", a.replicas), format!("{:?}", b.replicas));
+        assert_eq!(a.tokens_per_s, b.tokens_per_s);
+        assert_eq!(a.objective_score, a.tokens_per_s);
+    }
+
+    #[test]
+    fn ga_ranks_by_active_objective() {
+        // The internal search ranks by the chosen objective; the reported
+        // score is the ranking score (no throughput-then-rescore gap).
+        let c = settings::het1();
+        let p = schedule_hexgen_with(
+            &c,
+            &OPT_30B,
+            WorkloadKind::Lpld,
+            Objective::CostPerToken,
+            3,
+            5,
+        )
+        .expect("plans");
+        assert!(p.objective_score > 0.0);
+        let (s_in, s_out) = WorkloadKind::Lpld.mean_lengths();
+        let task = TaskProfile::new(1, s_in, s_out);
+        let rescore = objective::colocated_objective_score(
+            &c,
+            &OPT_30B,
+            &task,
+            Objective::CostPerToken,
+            &p.replicas,
+            p.tokens_per_s,
+        );
+        assert!(
+            (rescore - p.objective_score).abs() <= 1e-9 * rescore.abs().max(1.0),
+            "reported score {} != ranking score {}",
+            p.objective_score,
+            rescore
+        );
     }
 
     #[test]

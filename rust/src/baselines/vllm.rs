@@ -7,6 +7,7 @@
 use crate::cluster::Cluster;
 use crate::costmodel::{ReplicaConfig, TaskProfile};
 use crate::model::LlmSpec;
+use crate::scheduler::{objective, Objective};
 use crate::workload::WorkloadKind;
 
 use super::hexgen::colocated_throughput;
@@ -17,11 +18,27 @@ pub struct VllmPlan {
     pub replicas: Vec<ReplicaConfig>,
     pub tensor_parallel: usize,
     pub tokens_per_s: f64,
+    /// Score under the objective the sweep ranked by (equals
+    /// `tokens_per_s` for [`Objective::Throughput`]).
+    pub objective_score: f64,
 }
 
 /// Pick the best uniform TP degree (replicating the engine across the rest
-/// of the cluster, data-parallel style).
+/// of the cluster, data-parallel style), ranked by throughput.
 pub fn schedule_vllm(cluster: &Cluster, model: &LlmSpec, workload: WorkloadKind) -> Option<VllmPlan> {
+    schedule_vllm_with(cluster, model, workload, Objective::Throughput)
+}
+
+/// [`schedule_vllm`] with the TP sweep ranked by an arbitrary [`Objective`]
+/// (ROADMAP PR-2 follow-up): the candidate set is fixed, so the argmax
+/// under the active objective is at least as good — under that objective —
+/// as re-scoring the throughput winner.
+pub fn schedule_vllm_with(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    workload: WorkloadKind,
+    objective: Objective,
+) -> Option<VllmPlan> {
     let (s_in, s_out) = workload.mean_lengths();
     let task = TaskProfile::new(1, s_in, s_out);
     let n = cluster.n();
@@ -37,8 +54,18 @@ pub fn schedule_vllm(cluster: &Cluster, model: &LlmSpec, workload: WorkloadKind)
             .iter()
             .map(|cfg| colocated_throughput(cluster, model, cfg, &task))
             .sum();
-        if tput > 0.0 && best.as_ref().map(|b| tput > b.tokens_per_s).unwrap_or(true) {
-            best = Some(VllmPlan { replicas, tensor_parallel: tp, tokens_per_s: tput });
+        if tput <= 0.0 {
+            continue;
+        }
+        let score =
+            objective::colocated_objective_score(cluster, model, &task, objective, &replicas, tput);
+        if best.as_ref().map(|b| score > b.objective_score).unwrap_or(true) {
+            best = Some(VllmPlan {
+                replicas,
+                tensor_parallel: tp,
+                tokens_per_s: tput,
+                objective_score: score,
+            });
         }
     }
     best
@@ -67,6 +94,44 @@ mod tests {
         let p70 = schedule_vllm(&c, &LLAMA2_70B, WorkloadKind::Lpld).unwrap();
         let p30 = schedule_vllm(&c, &OPT_30B, WorkloadKind::Lpld).unwrap();
         assert!(p30.replicas.len() >= p70.replicas.len());
+    }
+
+    #[test]
+    fn objective_sweep_never_below_rescored_throughput_winner() {
+        // The candidate set is fixed, so ranking by the active objective
+        // dominates (under that objective) picking by throughput and then
+        // re-scoring — the exact gap the ROADMAP follow-up closes.
+        let c = settings::homogeneous();
+        for objective in [
+            Objective::CostPerToken,
+            Objective::MeanLatency,
+            Objective::SloGoodput { scale: 5.0 },
+        ] {
+            let aware =
+                schedule_vllm_with(&c, &OPT_30B, WorkloadKind::Lphd, objective).expect("plans");
+            let tput_winner = schedule_vllm(&c, &OPT_30B, WorkloadKind::Lphd).expect("plans");
+            let (s_in, s_out) = WorkloadKind::Lphd.mean_lengths();
+            let task = TaskProfile::new(1, s_in, s_out);
+            let rescored = objective::colocated_objective_score(
+                &c,
+                &OPT_30B,
+                &task,
+                objective,
+                &tput_winner.replicas,
+                tput_winner.tokens_per_s,
+            );
+            assert!(
+                aware.objective_score >= rescored - 1e-9 * rescored.abs().max(1.0),
+                "{objective:?}: aware {} < rescored throughput winner {}",
+                aware.objective_score,
+                rescored
+            );
+        }
+        // Throughput objective reproduces the legacy sweep exactly.
+        let a = schedule_vllm(&c, &OPT_30B, WorkloadKind::Lphd).unwrap();
+        let b = schedule_vllm_with(&c, &OPT_30B, WorkloadKind::Lphd, Objective::Throughput).unwrap();
+        assert_eq!(a.tensor_parallel, b.tensor_parallel);
+        assert_eq!(a.objective_score, a.tokens_per_s);
     }
 
     #[test]

@@ -25,6 +25,9 @@ fn sim_config(spec: &DeploymentSpec) -> SimConfig {
     SimConfig {
         sizing: spec.admission,
         chunked_prefill: spec.chunked_prefill,
+        link: spec.link,
+        kv_route: spec.kv_route,
+        kv_chunk_layers: spec.kv_chunk_layers,
         ..SimConfig::default()
     }
 }

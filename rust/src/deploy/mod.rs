@@ -36,6 +36,7 @@ use anyhow::{anyhow, Result};
 
 use crate::cluster::Cluster;
 use crate::costmodel::TaskProfile;
+use crate::kvtransfer::{LinkModel, RouteModel};
 use crate::model::LlmSpec;
 use crate::scheduler::{self, ScheduleOptions, SwapMode};
 use crate::simulator::{SimReport, Sizing};
@@ -67,6 +68,19 @@ pub struct DeploymentSpec {
     /// Simulator admission model: static mean-length sizing (default) or
     /// per-request KV/memory accounting with queueing under pressure.
     pub admission: Sizing,
+    /// KV link contention model (`--link`): per-route private bandwidth
+    /// (default, legacy) or shared egress NICs.
+    pub link: LinkModel,
+    /// KV route-selection policy (`--kv-route`): flow-proportional legacy,
+    /// least-loaded, or ETA-greedy (see [`kvtransfer`](crate::kvtransfer)).
+    pub kv_route: RouteModel,
+    /// Layer-wise pipelined KV push, layers per chunk
+    /// (`--kv-chunk-layers`); `None` = whole-cache transfer.
+    pub kv_chunk_layers: Option<usize>,
+    /// Rank candidate placements under predicted KV contention for the
+    /// spec's `link` model (`--contention-aware`):
+    /// `ScheduleOptions::kv_contention`.
+    pub contention_aware: bool,
     /// Planner worker threads for candidate evaluation (`--threads`);
     /// plans are bit-identical across thread counts.
     pub threads: usize,
@@ -89,6 +103,10 @@ impl DeploymentSpec {
             max_rounds: None,
             chunked_prefill: None,
             admission: Sizing::StaticMean,
+            link: LinkModel::PerRoute,
+            kv_route: RouteModel::FlowProportional,
+            kv_chunk_layers: None,
+            contention_aware: false,
             threads: 1,
             use_eval_cache: true,
         }
@@ -139,6 +157,26 @@ impl DeploymentSpec {
         self
     }
 
+    pub fn link(mut self, link: LinkModel) -> Self {
+        self.link = link;
+        self
+    }
+
+    pub fn kv_route(mut self, route: RouteModel) -> Self {
+        self.kv_route = route;
+        self
+    }
+
+    pub fn kv_chunk_layers(mut self, chunk: Option<usize>) -> Self {
+        self.kv_chunk_layers = chunk;
+        self
+    }
+
+    pub fn contention_aware(mut self, on: bool) -> Self {
+        self.contention_aware = on;
+        self
+    }
+
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
         self
@@ -176,6 +214,7 @@ impl DeploymentSpec {
         }
         o.threads = self.threads.max(1);
         o.use_eval_cache = self.use_eval_cache;
+        o.kv_contention = if self.contention_aware { Some(self.link) } else { None };
         o
     }
 
@@ -333,6 +372,10 @@ impl Deployment {
             ("unserved".to_string(), json::num(rep.stats.unserved as f64)),
             ("peak_resident_tokens".to_string(), json::num(rep.stats.peak_resident_tokens)),
             ("kv_link_wait_s".to_string(), json::num(rep.stats.kv_link_wait_s)),
+            // The transfer engine's ledger roll-up (DESIGN.md §11).
+            ("kv_transfers".to_string(), json::num(rep.stats.kv_transfers as f64)),
+            ("kv_bytes".to_string(), json::num(rep.stats.kv_bytes)),
+            ("kv_max_nic_util".to_string(), json::num(rep.stats.kv_max_nic_util)),
         ];
         fields.append(&mut result);
         Json::Obj(fields.into_iter().collect())

@@ -6,10 +6,8 @@
 //! over `&[&dyn Planner]` instead of calling four bespoke functions.
 
 use crate::baselines::{distserve, hexgen, vllm};
-use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};
-use crate::scheduler::{
-    self, genetic, objective, ConvergencePoint, Objective, Placement, SearchStats,
-};
+use crate::costmodel::ReplicaConfig;
+use crate::scheduler::{self, genetic, ConvergencePoint, Placement, SearchStats};
 
 use super::DeploymentSpec;
 
@@ -111,8 +109,10 @@ impl Planner for GeneticPlanner {
 }
 
 /// HexGen (Jiang et al., 2024b): colocated replicas, GA-scheduled. The GA's
-/// internal fitness is colocated throughput (the published algorithm); the
-/// returned plan is re-scored under the spec's objective for comparability.
+/// internal fitness ranks by the spec's [`Objective`] (the published
+/// algorithm's throughput fitness is the `Objective::Throughput` special
+/// case), so the search optimizes what the caller asked for instead of
+/// searching for throughput and re-scoring the winner.
 pub struct HexGenPlanner;
 
 impl Planner for HexGenPlanner {
@@ -126,10 +126,11 @@ impl Planner for HexGenPlanner {
 
     fn plan(&self, spec: &DeploymentSpec) -> Option<Plan> {
         let generations = if spec.quick { 6 } else { 25 };
-        let p = hexgen::schedule_hexgen(
+        let p = hexgen::schedule_hexgen_with(
             &spec.cluster,
             &spec.model,
             spec.workload,
+            spec.objective,
             spec.seed,
             generations,
         )?;
@@ -137,7 +138,7 @@ impl Planner for HexGenPlanner {
             planner: self.name(),
             display: self.display_name(),
             est_tokens_per_s: p.tokens_per_s,
-            objective_score: colocated_score(spec, &p.replicas, p.tokens_per_s),
+            objective_score: p.objective_score,
             elapsed_s: p.elapsed_s,
             history: Vec::new(),
             stats: SearchStats::default(),
@@ -194,12 +195,13 @@ impl Planner for VllmPlanner {
     }
 
     fn plan(&self, spec: &DeploymentSpec) -> Option<Plan> {
-        let p = vllm::schedule_vllm(&spec.cluster, &spec.model, spec.workload)?;
+        let p =
+            vllm::schedule_vllm_with(&spec.cluster, &spec.model, spec.workload, spec.objective)?;
         Some(Plan {
             planner: self.name(),
             display: self.display_name(),
             est_tokens_per_s: p.tokens_per_s,
-            objective_score: colocated_score(spec, &p.replicas, p.tokens_per_s),
+            objective_score: p.objective_score,
             elapsed_s: 0.0,
             history: Vec::new(),
             stats: SearchStats::default(),
@@ -228,66 +230,11 @@ pub fn planner_by_name(name: &str) -> Option<&'static dyn Planner> {
     }
 }
 
-/// Objective score of a colocated plan. There is no flow network: throughput
-/// is the sum of per-replica colocated estimates, latency the
-/// throughput-weighted macro-round (prefill + full decode) latency, and cost
-/// counts every replica's devices (colocated replicas all serve traffic).
-fn colocated_score(spec: &DeploymentSpec, replicas: &[ReplicaConfig], tokens_per_s: f64) -> f64 {
-    let task = spec.task();
-    match spec.objective {
-        Objective::Throughput => tokens_per_s,
-        Objective::MeanLatency => -colocated_latency(spec, replicas, &task),
-        Objective::SloGoodput { scale } => {
-            let lat = colocated_latency(spec, replicas, &task);
-            if !lat.is_finite() || lat <= 0.0 {
-                return 0.0;
-            }
-            let budget = scale * objective::mean_slo_base(&spec.model, &task);
-            tokens_per_s * (budget / lat).min(1.0)
-        }
-        Objective::CostPerToken => {
-            let cost: f64 = replicas
-                .iter()
-                .flat_map(|r| r.devices())
-                .map(|d| spec.cluster.devices[d].gpu.price_per_hour())
-                .sum();
-            if cost <= 0.0 {
-                0.0
-            } else {
-                tokens_per_s * 3600.0 / cost
-            }
-        }
-    }
-}
-
-/// Throughput-weighted mean request latency of colocated replicas: in steady
-/// state each macro-round prefills a batch then decodes it to completion
-/// (the same model as `baselines::hexgen::colocated_throughput`).
-fn colocated_latency(spec: &DeploymentSpec, replicas: &[ReplicaConfig], task: &TaskProfile) -> f64 {
-    let cm = CostModel::new(&spec.cluster, &spec.model);
-    let mut num = 0.0;
-    let mut den = 0.0;
-    for cfg in replicas {
-        let mb = cm.max_decode_batch(cfg, task);
-        if mb == 0 {
-            continue;
-        }
-        let b = mb.min(32);
-        let t = task.with_batch(b);
-        let lat = cm.prefill_latency(cfg, &t) + cm.decode_latency(cfg, &t);
-        if lat <= 0.0 {
-            continue;
-        }
-        let tput = b as f64 * task.s_out / lat;
-        num += tput * lat;
-        den += tput;
-    }
-    if den <= 0.0 {
-        f64::INFINITY
-    } else {
-        num / den
-    }
-}
+// Colocated-plan objective scoring lives in
+// `objective::colocated_objective_score` (it moved out of this module so
+// the HexGen GA and vLLM TP sweeps can rank their *internal* searches by
+// it — ROADMAP PR-2 follow-up); the planners above report the score their
+// search ranked by.
 
 #[cfg(test)]
 mod tests {
@@ -332,24 +279,32 @@ mod tests {
     }
 
     #[test]
-    fn colocated_scores_follow_objectives() {
+    fn colocated_planners_report_their_ranking_score() {
+        // The score a colocated planner reports is the one its internal
+        // search ranked by (objective::colocated_objective_score — its
+        // per-objective semantics are tested in scheduler::objective).
         let hom = settings::homogeneous_small();
-        let replicas =
-            vec![ReplicaConfig::new(vec![(0..4).collect()], vec![OPT_30B.n_layers])];
-        let s = spec(hom);
-        let tput = 500.0;
-        assert_eq!(colocated_score(&s, &replicas, tput), tput);
-        let lat_score =
-            colocated_score(&s.clone().objective(Objective::MeanLatency), &replicas, tput);
-        assert!(lat_score < 0.0 && lat_score.is_finite());
-        let cost_score =
-            colocated_score(&s.clone().objective(Objective::CostPerToken), &replicas, tput);
-        assert!(cost_score > 0.0);
-        let slo_score = colocated_score(
-            &s.objective(Objective::SloGoodput { scale: 5.0 }),
-            &replicas,
-            tput,
-        );
-        assert!(slo_score > 0.0 && slo_score <= tput + 1e-9);
+        let s = spec(hom).objective(crate::scheduler::Objective::CostPerToken);
+        for planner in [&HexGenPlanner as &dyn Planner, &VllmPlanner] {
+            let plan = planner.plan(&s).unwrap_or_else(|| panic!("{} plans", planner.name()));
+            let PlanKind::Colocated { ref replicas, .. } = plan.kind else {
+                panic!("{} is a colocated planner", planner.name());
+            };
+            let rescore = crate::scheduler::objective::colocated_objective_score(
+                &s.cluster,
+                &s.model,
+                &s.task(),
+                s.objective,
+                replicas,
+                plan.est_tokens_per_s,
+            );
+            assert!(
+                (plan.objective_score - rescore).abs() <= 1e-9 * rescore.abs().max(1.0),
+                "{}: reported {} != ranking score {}",
+                planner.name(),
+                plan.objective_score,
+                rescore
+            );
+        }
     }
 }

@@ -12,6 +12,7 @@
 pub mod batching;
 pub mod convergence;
 pub mod endtoend;
+pub mod kvrouting;
 pub mod perf;
 pub mod resched;
 pub mod tables;
@@ -22,7 +23,7 @@ use crate::deploy::{
     VllmPlanner,
 };
 use crate::model::LlmSpec;
-use crate::scheduler::{self, ScheduleOptions, SwapMode};
+use crate::scheduler::{self, EvalCache, ScheduleOptions, SwapMode};
 use crate::simulator::SimReport;
 use crate::workload::{Trace, WorkloadKind};
 
@@ -202,10 +203,27 @@ pub fn convergence_curve(
     seed: u64,
     opts: &ExpOpts,
 ) -> Vec<(f64, f64)> {
+    convergence_curve_cached(cluster, model, kind, mode, seed, opts, &EvalCache::new())
+}
+
+/// [`convergence_curve`] against a caller-owned [`EvalCache`]: the Fig.
+/// 10/11 sweeps repeat (workload × seed) runs over one cluster/model pair,
+/// and seeds/uniform layouts/re-proposed partitions recur heavily across
+/// them — a shared cache serves those for free. Sharing never changes a
+/// curve (memoized evaluations are bit-identical to recomputation).
+pub fn convergence_curve_cached(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    kind: WorkloadKind,
+    mode: SwapMode,
+    seed: u64,
+    opts: &ExpOpts,
+    cache: &EvalCache,
+) -> Vec<(f64, f64)> {
     let mut o = opts.sched_opts(kind);
     o.seed = seed;
     o.swap_mode = mode;
-    scheduler::schedule(cluster, model, &o)
+    scheduler::schedule_with_cache(cluster, model, &o, cache)
         .map(|r| r.history.iter().map(|p| (p.elapsed_s, p.tokens_per_s)).collect())
         .unwrap_or_default()
 }
@@ -217,9 +235,24 @@ pub fn convergence_curve_ga(
     seed: u64,
     opts: &ExpOpts,
 ) -> Vec<(f64, f64)> {
+    convergence_curve_ga_cached(cluster, model, kind, seed, opts, &EvalCache::new())
+}
+
+/// GA convergence curve against a caller-owned [`EvalCache`] (ROADMAP PR-4
+/// follow-up): GA populations re-breed identical genomes across seeds and
+/// workloads, so one cache across the whole Fig. 10/11 sweep turns most
+/// fitness calls into memo hits without changing any curve.
+pub fn convergence_curve_ga_cached(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    kind: WorkloadKind,
+    seed: u64,
+    opts: &ExpOpts,
+    cache: &EvalCache,
+) -> Vec<(f64, f64)> {
     let mut o = opts.sched_opts(kind);
     o.seed = seed;
-    scheduler::genetic::schedule_genetic(cluster, model, &o)
+    scheduler::genetic::schedule_genetic_with_cache(cluster, model, &o, cache)
         .map(|r| r.history.iter().map(|p| (p.elapsed_s, p.tokens_per_s)).collect())
         .unwrap_or_default()
 }

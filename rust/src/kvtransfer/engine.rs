@@ -1,0 +1,473 @@
+//! The transfer scheduler: per-link queues, bandwidth reservation,
+//! layer-wise pipelined chunking, and the link-load ledger.
+//!
+//! Time is plain `f64` seconds and the scheduler never owns a clock — the
+//! caller (the discrete-event simulator core, or a live coordinator) asks
+//! it to [`enqueue`](TransferScheduler::enqueue) a transfer at `now` and
+//! gets back the chosen destination and completion time. A link is a
+//! busy-until reservation: under [`LinkModel::PerRoute`] each (src, dst)
+//! pair has its own, under [`LinkModel::SharedNic`] every transfer leaving
+//! `src` shares one (the source's egress NIC).
+//!
+//! **Layer-wise pipelined chunking** (`chunk_layers = Some(c)`): the KV of a
+//! request ships in `ceil(n_layers / c)` chunks, and all but the last chunk
+//! may overlap the producing prefill burst — layer `l`'s KV exists as soon
+//! as layer `l`'s prefill completes, so only the final chunk is forced to
+//! wait for the burst to end. The reservation model: the transfer's
+//! *effective start* moves up to `min(burst, xfer·(n-1)/n)` seconds before
+//! the burst finished, and its completion is never earlier than `now +
+//! xfer/n` (the last chunk still has to transmit). On an uncontended link
+//! the arrival is therefore `xfer - overlap_credit` after prefill — never
+//! later than the whole-cache transfer — and under contention it degrades
+//! to exactly the whole-cache queueing behaviour (`tests/kvtransfer.rs`
+//! asserts the invariant).
+
+use std::collections::HashMap;
+
+use super::route::{Candidate, RouteModel};
+use super::LinkModel;
+
+/// Fixed configuration of one [`TransferScheduler`].
+#[derive(Clone, Copy, Debug)]
+pub struct TransferConfig {
+    pub route: RouteModel,
+    pub link: LinkModel,
+    /// Layer-wise pipelined chunking: layers per chunk (`None` = whole-cache
+    /// transfer, the legacy behaviour).
+    pub chunk_layers: Option<usize>,
+    /// Model depth (chunk count = `ceil(n_layers / chunk_layers)`).
+    pub n_layers: usize,
+}
+
+impl TransferConfig {
+    /// Number of chunks a transfer is split into (1 = whole-cache).
+    pub fn chunks(&self) -> usize {
+        match self.chunk_layers {
+            Some(c) if c > 0 => self.n_layers.div_ceil(c).max(1),
+            _ => 1,
+        }
+    }
+}
+
+/// Aggregate stats of one (src, dst) route in the ledger.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LinkStat {
+    pub transfers: usize,
+    pub bytes: f64,
+    /// Transmission seconds reserved on the link.
+    pub busy_s: f64,
+    /// Seconds transfers spent queued behind earlier reservations.
+    pub wait_s: f64,
+}
+
+/// One route's load record, exported on
+/// [`SimReport::link_loads`](crate::simulator::SimReport).
+#[derive(Clone, Copy, Debug)]
+pub struct LinkLoad {
+    /// Source (prefill) replica index.
+    pub src: usize,
+    /// Destination (decode) replica index.
+    pub dst: usize,
+    pub transfers: usize,
+    pub bytes: f64,
+    pub busy_s: f64,
+    pub wait_s: f64,
+}
+
+/// Copy-friendly roll-up of the ledger (lands in
+/// [`SimStats`](crate::simulator::SimStats)).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvSummary {
+    pub transfers: usize,
+    pub bytes: f64,
+    pub wait_s: f64,
+    /// Max over source NICs of transmission-busy fraction of the span.
+    pub max_nic_util: f64,
+    /// Queue-wait histogram, bucket edges [`Ledger::HIST_EDGES_S`].
+    pub wait_hist: [usize; 6],
+}
+
+/// The link-load ledger: every transfer's route, bytes, transmission time,
+/// and queue wait, accumulated per (src, dst) route plus a global wait
+/// histogram. This is the observability half of the planner↔engine loop:
+/// its NIC busy fraction is the measured counterpart of the analytic
+/// [`kv_nic_utilization`](crate::scheduler::objective::kv_nic_utilization)
+/// the contention-aware objective predicts.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    links: HashMap<(usize, usize), LinkStat>,
+    hist: [usize; 6],
+    transfers: usize,
+    bytes: f64,
+    wait_s: f64,
+}
+
+impl Ledger {
+    /// Upper edges (seconds) of the first five wait-histogram buckets; the
+    /// sixth bucket is everything ≥ 10 s.
+    pub const HIST_EDGES_S: [f64; 5] = [1e-3, 1e-2, 1e-1, 1.0, 10.0];
+
+    fn record(&mut self, src: usize, dst: usize, bytes: f64, busy_s: f64, wait_s: f64) {
+        let e = self.links.entry((src, dst)).or_default();
+        e.transfers += 1;
+        e.bytes += bytes;
+        e.busy_s += busy_s;
+        e.wait_s += wait_s;
+        self.transfers += 1;
+        self.bytes += bytes;
+        self.wait_s += wait_s;
+        let bucket = Ledger::HIST_EDGES_S
+            .iter()
+            .position(|&edge| wait_s < edge)
+            .unwrap_or(Ledger::HIST_EDGES_S.len());
+        self.hist[bucket] += 1;
+    }
+
+    pub fn transfers(&self) -> usize {
+        self.transfers
+    }
+
+    pub fn bytes(&self) -> f64 {
+        self.bytes
+    }
+
+    pub fn wait_s(&self) -> f64 {
+        self.wait_s
+    }
+
+    pub fn wait_hist(&self) -> [usize; 6] {
+        self.hist
+    }
+
+    /// Per-route load records, sorted by (src, dst) for deterministic output.
+    pub fn loads(&self) -> Vec<LinkLoad> {
+        let mut out: Vec<LinkLoad> = self
+            .links
+            .iter()
+            .map(|(&(src, dst), s)| LinkLoad {
+                src,
+                dst,
+                transfers: s.transfers,
+                bytes: s.bytes,
+                busy_s: s.busy_s,
+                wait_s: s.wait_s,
+            })
+            .collect();
+        out.sort_by_key(|l| (l.src, l.dst));
+        out
+    }
+
+    /// Transmission-busy seconds per source NIC (all routes of a source
+    /// summed — exact under `SharedNic`, offered-load under `PerRoute`).
+    pub fn nic_busy_s(&self) -> Vec<(usize, f64)> {
+        let mut per: HashMap<usize, f64> = HashMap::new();
+        for (&(src, _), s) in &self.links {
+            *per.entry(src).or_default() += s.busy_s;
+        }
+        let mut out: Vec<(usize, f64)> = per.into_iter().collect();
+        out.sort_by_key(|&(src, _)| src);
+        out
+    }
+
+    /// Roll-up over a serving span of `span` seconds.
+    pub fn summary(&self, span: f64) -> KvSummary {
+        let span = span.max(1e-9);
+        let max_nic_util = self
+            .nic_busy_s()
+            .iter()
+            .map(|&(_, busy)| busy / span)
+            .fold(0.0f64, f64::max);
+        KvSummary {
+            transfers: self.transfers,
+            bytes: self.bytes,
+            wait_s: self.wait_s,
+            max_nic_util,
+            wait_hist: self.hist,
+        }
+    }
+}
+
+/// A scheduled transfer: where the cache goes and when it lands.
+#[derive(Clone, Copy, Debug)]
+pub struct Transfer {
+    /// Chosen destination (decode replica index).
+    pub dst: usize,
+    /// Arrival time of the (last chunk of the) cache.
+    pub done: f64,
+    /// Queueing delay beyond the contention-free transfer.
+    pub wait_s: f64,
+}
+
+/// The transfer scheduler: max-flow route table, per-link busy-until
+/// reservations, in-flight counts, policy-driven route selection, and the
+/// [`Ledger`].
+pub struct TransferScheduler {
+    cfg: TransferConfig,
+    /// Max-flow route weights, keyed (src, dst) — §3.3 flow values.
+    route_w: HashMap<(usize, usize), f64>,
+    /// Transfers routed so far, keyed (dst, src) — the deficit counters
+    /// (key order kept from the legacy engine for bit-parity).
+    assigned_from: HashMap<(usize, usize), f64>,
+    /// Busy-until reservation per link key.
+    link_free: HashMap<(usize, usize), f64>,
+    /// Transfers queued or in flight per link key.
+    inflight: HashMap<(usize, usize), usize>,
+    ledger: Ledger,
+    /// Reused candidate buffer (the simulator's alloc-free hot loop).
+    cand_buf: Vec<Candidate>,
+}
+
+impl TransferScheduler {
+    pub fn new(cfg: TransferConfig) -> TransferScheduler {
+        TransferScheduler {
+            cfg,
+            route_w: HashMap::new(),
+            assigned_from: HashMap::new(),
+            link_free: HashMap::new(),
+            inflight: HashMap::new(),
+            ledger: Ledger::default(),
+            cand_buf: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &TransferConfig {
+        &self.cfg
+    }
+
+    pub fn ledger(&self) -> &Ledger {
+        &self.ledger
+    }
+
+    /// Register a max-flow route (weights accumulate across epochs, exactly
+    /// like the legacy in-core table).
+    pub fn add_route(&mut self, src: usize, dst: usize, flow: f64) {
+        *self.route_w.entry((src, dst)).or_default() += flow;
+    }
+
+    /// Register the tiny-weight fallback route the engine uses when
+    /// max-flow left a prefill replica unrouted.
+    pub fn add_fallback(&mut self, src: usize, dst: usize) {
+        self.route_w.insert((src, dst), 1e-6);
+    }
+
+    pub fn has_route(&self, src: usize, dst: usize) -> bool {
+        self.route_w.contains_key(&(src, dst))
+    }
+
+    fn key(&self, src: usize, dst: usize) -> (usize, usize) {
+        match self.cfg.link {
+            LinkModel::PerRoute => (src, dst),
+            LinkModel::SharedNic => (src, usize::MAX),
+        }
+    }
+
+    /// Route and reserve one KV transfer leaving `src` at `now`.
+    ///
+    /// `cands` lists the feasible destinations in ascending order (must be
+    /// non-empty); `xfer_of` yields a route's Table-1 transmission seconds
+    /// and is queried lazily — once per candidate only for policies that
+    /// rank by it ([`RouteModel::needs_xfer`]), otherwise once for the
+    /// chosen route (the per-candidate query is a device-pair link scan and
+    /// this is the simulator's hot path). `overlap_s` is the duration of
+    /// the prefill burst that produced this cache — the window layer-wise
+    /// chunks may pipeline into (ignored without chunking). `bytes` feeds
+    /// the ledger only.
+    pub fn enqueue(
+        &mut self,
+        src: usize,
+        bytes: f64,
+        now: f64,
+        overlap_s: f64,
+        cands: &[usize],
+        mut xfer_of: impl FnMut(usize) -> f64,
+    ) -> Transfer {
+        debug_assert!(!cands.is_empty(), "enqueue with no candidate route");
+        let need_xfer = self.cfg.route.needs_xfer();
+        let mut buf = std::mem::take(&mut self.cand_buf);
+        buf.clear();
+        for &dst in cands {
+            let key = self.key(src, dst);
+            buf.push(Candidate {
+                dst,
+                weight: self.route_w.get(&(src, dst)).copied().unwrap_or(1e-6),
+                assigned: self.assigned_from.get(&(dst, src)).copied().unwrap_or(0.0),
+                backlog_s: (self.link_free.get(&key).copied().unwrap_or(0.0) - now).max(0.0),
+                queue_len: self.inflight.get(&key).copied().unwrap_or(0),
+                xfer_s: if need_xfer { xfer_of(dst) } else { 0.0 },
+            });
+        }
+        let pick = self.cfg.route.policy().pick(&buf);
+        let dst = buf[pick].dst;
+        let xfer = if need_xfer { buf[pick].xfer_s } else { xfer_of(dst) };
+        self.cand_buf = buf;
+
+        *self.assigned_from.entry((dst, src)).or_default() += 1.0;
+        let key = self.key(src, dst);
+        let raw_free = self.link_free.get(&key).copied().unwrap_or(0.0);
+        let chunks = self.cfg.chunks();
+        let (done, wait_s) = if chunks > 1 {
+            // Pipelined: the first (chunks-1) chunks may ship while the
+            // prefill still runs, so the effective enqueue time moves back
+            // by the overlap credit. The credit cap already guarantees the
+            // last chunk transmits after `now`:
+            //   done >= eff + xfer = now + xfer - credit >= now + xfer/chunks.
+            let credit = overlap_s.max(0.0).min(xfer * (chunks as f64 - 1.0) / chunks as f64);
+            let eff = now - credit;
+            let start = raw_free.max(eff);
+            let done = start + xfer;
+            debug_assert!(done >= now + xfer / chunks as f64 - 1e-12);
+            (done, done - (eff + xfer))
+        } else {
+            // Whole-cache: exactly the legacy reservation arithmetic.
+            let free = raw_free.max(now);
+            (free + xfer, free - now)
+        };
+        self.link_free.insert(key, done);
+        *self.inflight.entry(key).or_default() += 1;
+        self.ledger.record(src, dst, bytes, xfer, wait_s);
+        Transfer { dst, done, wait_s }
+    }
+
+    /// A transfer previously enqueued on (src → dst) completed.
+    pub fn complete(&mut self, src: usize, dst: usize) {
+        let key = self.key(src, dst);
+        if let Some(n) = self.inflight.get_mut(&key) {
+            *n = n.saturating_sub(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(route: RouteModel, link: LinkModel, chunk: Option<usize>) -> TransferConfig {
+        TransferConfig { route, link, chunk_layers: chunk, n_layers: 48 }
+    }
+
+    #[test]
+    fn whole_cache_matches_legacy_reservation() {
+        let mut s = TransferScheduler::new(cfg(
+            RouteModel::FlowProportional,
+            LinkModel::PerRoute,
+            None,
+        ));
+        s.add_route(0, 1, 10.0);
+        // Idle link: no wait, done = now + xfer.
+        let a = s.enqueue(0, 100.0, 5.0, 0.0, &[1], |_| 2.0);
+        assert_eq!(a.dst, 1);
+        assert_eq!(a.done, 7.0);
+        assert_eq!(a.wait_s, 0.0);
+        // Second transfer queues behind the first: wait = 7 - 6 = 1.
+        let b = s.enqueue(0, 100.0, 6.0, 0.0, &[1], |_| 2.0);
+        assert_eq!(b.done, 9.0);
+        assert_eq!(b.wait_s, 1.0);
+        let l = s.ledger().summary(9.0);
+        assert_eq!(l.transfers, 2);
+        assert_eq!(l.bytes, 200.0);
+        assert!((l.wait_s - 1.0).abs() < 1e-12);
+        // 4 s of transmission over a 9 s span on NIC 0.
+        assert!((l.max_nic_util - 4.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shared_nic_serializes_across_destinations() {
+        let mut s =
+            TransferScheduler::new(cfg(RouteModel::FlowProportional, LinkModel::SharedNic, None));
+        s.add_route(0, 1, 1.0);
+        s.add_route(0, 2, 1.0);
+        let a = s.enqueue(0, 1.0, 0.0, 0.0, &[1], |_| 2.0);
+        // Different destination, same NIC: still queues.
+        let b = s.enqueue(0, 1.0, 0.0, 0.0, &[2], |_| 2.0);
+        assert_eq!(a.done, 2.0);
+        assert_eq!(b.done, 4.0);
+        assert_eq!(b.wait_s, 2.0);
+    }
+
+    #[test]
+    fn pipelined_chunks_never_later_than_whole_cache() {
+        // 48 layers in 8-layer chunks = 6 chunks; xfer 6 s; burst 10 s.
+        // Credit = min(10, 6*5/6) = 5 → done = now + 1 on an idle link.
+        let mut chunked =
+            TransferScheduler::new(cfg(RouteModel::FlowProportional, LinkModel::PerRoute, Some(8)));
+        chunked.add_route(0, 1, 1.0);
+        let c = chunked.enqueue(0, 1.0, 20.0, 10.0, &[1], |_| 6.0);
+        assert!((c.done - 21.0).abs() < 1e-12, "{}", c.done);
+        assert_eq!(c.wait_s, 0.0);
+        // Whole-cache reference on an identical fresh link: done = 26.
+        let mut whole =
+            TransferScheduler::new(cfg(RouteModel::FlowProportional, LinkModel::PerRoute, None));
+        whole.add_route(0, 1, 1.0);
+        let w = whole.enqueue(0, 1.0, 20.0, 10.0, &[1], |_| 6.0);
+        assert!((w.done - 26.0).abs() < 1e-12);
+        assert!(c.done <= w.done);
+        // Short burst: credit limited by the burst, done = 26 - 0.5.
+        let mut short =
+            TransferScheduler::new(cfg(RouteModel::FlowProportional, LinkModel::PerRoute, Some(8)));
+        short.add_route(0, 1, 1.0);
+        let sres = short.enqueue(0, 1.0, 20.0, 0.5, &[1], |_| 6.0);
+        assert!((sres.done - 25.5).abs() < 1e-12, "{}", sres.done);
+        // The last chunk can never land before now + xfer/chunks.
+        let mut floor =
+            TransferScheduler::new(cfg(RouteModel::FlowProportional, LinkModel::PerRoute, Some(8)));
+        floor.add_route(0, 1, 1.0);
+        let f = floor.enqueue(0, 1.0, 20.0, 1e9, &[1], |_| 6.0);
+        assert!((f.done - 21.0).abs() < 1e-12, "{}", f.done);
+    }
+
+    #[test]
+    fn pipelined_contended_degrades_to_whole_cache_queueing() {
+        let mut s =
+            TransferScheduler::new(cfg(RouteModel::FlowProportional, LinkModel::PerRoute, Some(8)));
+        s.add_route(0, 1, 1.0);
+        // Saturate the link until t=100.
+        let first = s.enqueue(0, 1.0, 0.0, 0.0, &[1], |_| 100.0);
+        assert_eq!(first.done, 100.0);
+        // A chunked transfer at t=50 starts when the link frees.
+        let c = s.enqueue(0, 1.0, 50.0, 10.0, &[1], |_| 6.0);
+        assert!((c.done - 106.0).abs() < 1e-12, "{}", c.done);
+        assert!(c.wait_s > 0.0);
+    }
+
+    #[test]
+    fn inflight_counts_track_completions() {
+        let mut s =
+            TransferScheduler::new(cfg(RouteModel::LeastLoaded, LinkModel::PerRoute, None));
+        s.add_route(0, 1, 1.0);
+        s.add_route(0, 2, 1.0);
+        let a = s.enqueue(0, 1.0, 0.0, 0.0, &[1, 2], |_| 1.0);
+        // Tie on idle links broken by weight (equal) → earliest = dst 1.
+        assert_eq!(a.dst, 1);
+        // Next transfer sees dst 1 backlogged and routes to dst 2.
+        let b = s.enqueue(0, 1.0, 0.0, 0.0, &[1, 2], |_| 1.0);
+        assert_eq!(b.dst, 2);
+        s.complete(0, a.dst);
+        s.complete(0, b.dst);
+        assert_eq!(*s.inflight.values().max().unwrap(), 0);
+    }
+
+    #[test]
+    fn eta_greedy_prefers_fast_route_on_shared_nic() {
+        let mut s = TransferScheduler::new(cfg(RouteModel::EtaGreedy, LinkModel::SharedNic, None));
+        s.add_route(0, 1, 100.0);
+        s.add_route(0, 2, 1.0);
+        // Same NIC backlog for both; the faster route wins regardless of
+        // its tiny flow weight.
+        let t = s.enqueue(0, 1.0, 0.0, 0.0, &[1, 2], |d| if d == 1 { 5.0 } else { 1.0 });
+        assert_eq!(t.dst, 2);
+    }
+
+    #[test]
+    fn ledger_histogram_buckets_waits() {
+        let mut s =
+            TransferScheduler::new(cfg(RouteModel::FlowProportional, LinkModel::PerRoute, None));
+        s.add_route(0, 1, 1.0);
+        let _ = s.enqueue(0, 1.0, 0.0, 0.0, &[1], |_| 0.5); // wait 0 → bucket 0
+        let _ = s.enqueue(0, 1.0, 0.0, 0.0, &[1], |_| 0.5); // wait 0.5 → bucket 3
+        let _ = s.enqueue(0, 1.0, 0.0, 0.0, &[1], |_| 20.0); // wait 1.0 → bucket 4
+        let _ = s.enqueue(0, 1.0, 0.0, 0.0, &[1], |_| 1.0); // wait 21 → bucket 5
+        assert_eq!(s.ledger().wait_hist(), [1, 0, 0, 1, 1, 1]);
+        assert_eq!(s.ledger().loads().len(), 1);
+        assert_eq!(s.ledger().loads()[0].transfers, 4);
+    }
+}

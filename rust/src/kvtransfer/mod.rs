@@ -1,0 +1,92 @@
+//! The KV transfer engine: every prefill→decode byte goes through here.
+//!
+//! HexGen-2's central claim is that inter-phase KV-cache communication is
+//! what makes disaggregation viable on poorly-connected GPUs — yet for four
+//! PRs the KV links were a passive cost buried inside the simulator: each
+//! transfer was priced flow-proportionally at admission and never re-routed,
+//! and the planner never saw the contention the engine produced. This
+//! subsystem makes the transfer path a first-class component (DESIGN.md
+//! §11), following the direction of "Beyond the Buzz" (KV-transfer overlap
+//! and routing dominate disaggregation viability at scale) and the ZTE
+//! multi-vendor disaggregation system (layer-wise pipelined KV push as an
+//! engine primitive):
+//!
+//! - [`TransferScheduler`] (in [`engine`]): per-link/per-NIC queues with
+//!   bandwidth reservation (busy-until tracking), and **layer-wise pipelined
+//!   chunked transfers** that overlap the KV push with the tail of the
+//!   producing prefill burst (configurable chunk size; `None` falls back to
+//!   whole-cache transfer).
+//! - [`RouteModel`] / [`RoutePolicy`] (in [`route`]): each transfer picks
+//!   among the max-flow-feasible routes — [`RouteModel::FlowProportional`]
+//!   reproduces the legacy deficit-weighted §3.3 assignment bit-for-bit
+//!   (`tests/golden_parity.rs`), [`RouteModel::LeastLoaded`] routes around
+//!   backlogged links, [`RouteModel::EtaGreedy`] minimizes the predicted KV
+//!   arrival time.
+//! - [`Ledger`] (in [`engine`]): the link-load ledger — per-route
+//!   utilization, queue-wait histogram, NIC saturation — exported through
+//!   [`SimStats`](crate::simulator::SimStats) /
+//!   [`SimReport::link_loads`](crate::simulator::SimReport), and closed back
+//!   into the planner: the same busy-fraction quantity the ledger measures
+//!   is what [`scheduler::objective::kv_nic_utilization`]
+//!   (crate::scheduler::objective::kv_nic_utilization) predicts from a
+//!   candidate placement, so plans can be *chosen* under contention
+//!   (`ScheduleOptions::kv_contention`), and the rescheduler's drift
+//!   detector / migration pricing consume the observed side
+//!   ([`WorkloadMonitor::observe_kv`](crate::rescheduler::WorkloadMonitor::observe_kv),
+//!   [`migration::plan_under_load`](crate::rescheduler::migration::plan_under_load)).
+//!
+//! The simulator core ([`simulator::core`](crate::simulator::core)) holds a
+//! `TransferScheduler` and delegates all KV routing/queueing to it; the
+//! engine itself is simulator-agnostic (plain time arithmetic), so a live
+//! coordinator can drive the same scheduler with wall-clock timestamps.
+
+pub mod engine;
+pub mod route;
+
+pub use engine::{KvSummary, Ledger, LinkLoad, Transfer, TransferConfig, TransferScheduler};
+pub use route::{Candidate, RouteModel, RoutePolicy};
+
+/// How concurrent KV-cache transfers contend for the fabric. (Lives here —
+/// the transfer engine owns link semantics; the simulator re-exports it.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum LinkModel {
+    /// Each (prefill, decode) route serializes independently (the original
+    /// engines' assumption: routes have private bandwidth).
+    #[default]
+    PerRoute,
+    /// Every transfer leaving a prefill replica shares its egress NIC:
+    /// transfers from the same source serialize regardless of destination.
+    SharedNic,
+}
+
+impl LinkModel {
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkModel::PerRoute => "per-route",
+            LinkModel::SharedNic => "shared-nic",
+        }
+    }
+
+    /// Parse `per-route` | `shared-nic` (plus underscore aliases).
+    pub fn from_name(s: &str) -> Option<LinkModel> {
+        match s.to_ascii_lowercase().as_str() {
+            "per-route" | "per_route" | "route" => Some(LinkModel::PerRoute),
+            "shared-nic" | "shared_nic" | "nic" => Some(LinkModel::SharedNic),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_model_names_roundtrip() {
+        for l in [LinkModel::PerRoute, LinkModel::SharedNic] {
+            assert_eq!(LinkModel::from_name(l.name()), Some(l));
+        }
+        assert_eq!(LinkModel::from_name("nic"), Some(LinkModel::SharedNic));
+        assert_eq!(LinkModel::from_name("wan"), None);
+    }
+}

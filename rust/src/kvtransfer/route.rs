@@ -1,0 +1,247 @@
+//! Contention-aware KV route selection.
+//!
+//! A prefill replica whose max-flow assignment connects it to several decode
+//! replicas must pick one per transfer. The paper's rule (§3.3,
+//! "communication frequency is set to be proportional to these flow
+//! values") is a *static* split that ignores what the links are doing right
+//! now; the policies here also see the live link state the
+//! [`TransferScheduler`](super::TransferScheduler) maintains — backlog
+//! seconds, queued transfers, per-route transmission time — and can route
+//! around a busy link or NIC.
+//!
+//! Adding a policy (DESIGN.md §11): implement [`RoutePolicy::pick`] over the
+//! [`Candidate`] slice (every candidate is max-flow-feasible and
+//! memory-feasible by the time it reaches the policy), add a [`RouteModel`]
+//! variant, and wire its `name`/`from_name`/`policy` arms — the scheduler,
+//! ledger, CLI (`--kv-route`), and experiment table pick it up from there.
+
+/// Which route-selection policy the transfer engine runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RouteModel {
+    /// The legacy §3.3 rule: deficit-weighted by max-flow route weight
+    /// (argmax `weight / (assigned + 1)`). Bit-identical to the pre-refactor
+    /// in-core KV path (`tests/golden_parity.rs`).
+    #[default]
+    FlowProportional,
+    /// Route around congestion: pick the link with the least queued work
+    /// (backlog seconds, then queued-transfer count, then route weight).
+    LeastLoaded,
+    /// Minimize the predicted KV arrival time: argmin over candidates of
+    /// `backlog + transmission`, i.e. when this cache would land if sent
+    /// down that route right now.
+    EtaGreedy,
+}
+
+impl RouteModel {
+    pub const ALL: [RouteModel; 3] =
+        [RouteModel::FlowProportional, RouteModel::LeastLoaded, RouteModel::EtaGreedy];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RouteModel::FlowProportional => "flow",
+            RouteModel::LeastLoaded => "least-loaded",
+            RouteModel::EtaGreedy => "eta-greedy",
+        }
+    }
+
+    /// Parse `flow` | `least-loaded` | `eta-greedy` (plus aliases).
+    pub fn from_name(s: &str) -> Option<RouteModel> {
+        match s.to_ascii_lowercase().as_str() {
+            "flow" | "flow-proportional" | "flow_proportional" | "proportional" => {
+                Some(RouteModel::FlowProportional)
+            }
+            "least-loaded" | "least_loaded" | "ll" => Some(RouteModel::LeastLoaded),
+            "eta-greedy" | "eta_greedy" | "eta" => Some(RouteModel::EtaGreedy),
+            _ => None,
+        }
+    }
+
+    /// The policy object implementing this model.
+    pub fn policy(self) -> &'static dyn RoutePolicy {
+        match self {
+            RouteModel::FlowProportional => &FlowProportionalPolicy,
+            RouteModel::LeastLoaded => &LeastLoadedPolicy,
+            RouteModel::EtaGreedy => &EtaGreedyPolicy,
+        }
+    }
+
+    /// Does this model's `pick` read [`Candidate::xfer_s`]? Transfer times
+    /// are a per-candidate cost-model query (a device-pair link scan), so
+    /// the scheduler computes them up front only for policies that rank by
+    /// them — everyone else gets the chosen route's time computed once,
+    /// after the pick. A new policy that ranks by transmission time must
+    /// add itself here or it will see `xfer_s == 0`.
+    pub fn needs_xfer(self) -> bool {
+        matches!(self, RouteModel::EtaGreedy)
+    }
+}
+
+/// One max-flow-feasible destination for a transfer, with the live link
+/// state the policies rank by. Built by the scheduler in ascending
+/// destination order.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    /// Decode replica index (the engine's arena index).
+    pub dst: usize,
+    /// Max-flow route weight (the §3.3 flow value; 1e-6 fallback floor).
+    pub weight: f64,
+    /// Transfers already routed (dst ← src) — the deficit counter.
+    pub assigned: f64,
+    /// Seconds of already-reserved work on the link this transfer would use
+    /// (0 when the link is idle).
+    pub backlog_s: f64,
+    /// Transfers queued or in flight on that link.
+    pub queue_len: usize,
+    /// Transmission seconds of *this* cache on this route (Table 1).
+    /// Populated only for policies whose [`RouteModel::needs_xfer`] holds
+    /// (0.0 otherwise — computing it per candidate is a hot-path cost).
+    pub xfer_s: f64,
+}
+
+/// A KV route-selection discipline. `pick` returns an index into `cands`
+/// (never empty). Policies must be deterministic: ties break toward a fixed
+/// candidate so seeded simulations replay bit-identically.
+pub trait RoutePolicy {
+    fn name(&self) -> &'static str;
+    fn pick(&self, cands: &[Candidate]) -> usize;
+}
+
+/// Legacy flow-proportional deficit routing. Tie-breaking deliberately
+/// mirrors `Iterator::max_by` (the pre-refactor implementation): among
+/// equal keys the *last* candidate wins.
+pub struct FlowProportionalPolicy;
+
+impl RoutePolicy for FlowProportionalPolicy {
+    fn name(&self) -> &'static str {
+        "flow"
+    }
+
+    fn pick(&self, cands: &[Candidate]) -> usize {
+        let mut best = 0usize;
+        for i in 1..cands.len() {
+            let wb = cands[best].weight / (cands[best].assigned + 1.0);
+            let wi = cands[i].weight / (cands[i].assigned + 1.0);
+            if wi >= wb {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Least queued work first; ties prefer the heavier max-flow route (it was
+/// provisioned to carry more), then the earliest candidate.
+pub struct LeastLoadedPolicy;
+
+impl RoutePolicy for LeastLoadedPolicy {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn pick(&self, cands: &[Candidate]) -> usize {
+        let mut best = 0usize;
+        for i in 1..cands.len() {
+            let a = &cands[best];
+            let b = &cands[i];
+            let better = b.backlog_s < a.backlog_s
+                || (b.backlog_s == a.backlog_s
+                    && (b.queue_len < a.queue_len
+                        || (b.queue_len == a.queue_len && b.weight > a.weight)));
+            if better {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Earliest predicted arrival first (`backlog + transmission`); ties prefer
+/// the heavier route, then the earliest candidate.
+pub struct EtaGreedyPolicy;
+
+impl RoutePolicy for EtaGreedyPolicy {
+    fn name(&self) -> &'static str {
+        "eta-greedy"
+    }
+
+    fn pick(&self, cands: &[Candidate]) -> usize {
+        let mut best = 0usize;
+        for i in 1..cands.len() {
+            let a = &cands[best];
+            let b = &cands[i];
+            let (ea, eb) = (a.backlog_s + a.xfer_s, b.backlog_s + b.xfer_s);
+            if eb < ea || (eb == ea && b.weight > a.weight) {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(dst: usize, weight: f64, assigned: f64, backlog: f64, q: usize, xfer: f64) -> Candidate {
+        Candidate { dst, weight, assigned, backlog_s: backlog, queue_len: q, xfer_s: xfer }
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for m in RouteModel::ALL {
+            assert_eq!(RouteModel::from_name(m.name()), Some(m));
+            assert_eq!(m.policy().name(), m.name());
+        }
+        assert_eq!(RouteModel::from_name("eta"), Some(RouteModel::EtaGreedy));
+        assert_eq!(RouteModel::from_name("ospf"), None);
+    }
+
+    #[test]
+    fn flow_proportional_is_deficit_weighted_last_tie() {
+        let p = FlowProportionalPolicy;
+        // weight/(assigned+1): 10/1=10, 30/2=15, 6/1=6 → index 1.
+        let cands = [
+            cand(0, 10.0, 0.0, 0.0, 0, 1.0),
+            cand(1, 30.0, 1.0, 9.0, 3, 9.0),
+            cand(2, 6.0, 0.0, 0.0, 0, 0.1),
+        ];
+        assert_eq!(p.pick(&cands), 1);
+        // Exact tie: the LAST maximum wins (Iterator::max_by semantics —
+        // what the legacy engine did).
+        let tied = [cand(0, 10.0, 0.0, 0.0, 0, 1.0), cand(1, 10.0, 0.0, 0.0, 0, 1.0)];
+        assert_eq!(p.pick(&tied), 1);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_links() {
+        let p = LeastLoadedPolicy;
+        let cands = [
+            cand(0, 100.0, 0.0, 5.0, 2, 1.0),
+            cand(1, 1.0, 0.0, 0.0, 0, 4.0), // idle but slow: still preferred
+            cand(2, 50.0, 0.0, 2.0, 1, 0.5),
+        ];
+        assert_eq!(p.pick(&cands), 1);
+        // Backlog tie → fewer queued; full tie → heavier route.
+        let tied = [cand(0, 1.0, 0.0, 1.0, 2, 1.0), cand(1, 1.0, 0.0, 1.0, 1, 1.0)];
+        assert_eq!(p.pick(&tied), 1);
+        let weight_tie = [cand(0, 2.0, 0.0, 1.0, 1, 1.0), cand(1, 1.0, 0.0, 1.0, 1, 1.0)];
+        assert_eq!(p.pick(&weight_tie), 0);
+    }
+
+    #[test]
+    fn eta_greedy_minimizes_arrival() {
+        let p = EtaGreedyPolicy;
+        // ETAs: 5+1=6, 0+4=4, 2+0.5=2.5 → index 2.
+        let cands = [
+            cand(0, 100.0, 0.0, 5.0, 2, 1.0),
+            cand(1, 1.0, 0.0, 0.0, 0, 4.0),
+            cand(2, 50.0, 0.0, 2.0, 1, 0.5),
+        ];
+        assert_eq!(p.pick(&cands), 2);
+        // Equal ETA → heavier route wins; full tie → earliest.
+        let tied = [cand(0, 1.0, 0.0, 1.0, 1, 1.0), cand(1, 5.0, 0.0, 0.0, 0, 2.0)];
+        assert_eq!(p.pick(&tied), 1);
+        let full_tie = [cand(0, 1.0, 0.0, 1.0, 1, 1.0), cand(1, 1.0, 0.0, 1.0, 1, 1.0)];
+        assert_eq!(p.pick(&full_tie), 0);
+    }
+}

@@ -11,8 +11,11 @@
 //!   graph partition → max-flow → iterative refinement) with pluggable
 //!   [`Objective`](scheduler::Objective)s, the online rescheduler
 //!   (`rescheduler`: drift monitoring → warm-started re-plan → priced
-//!   migration, closing the §3.3 per-period loop on live traffic), the
-//!   disaggregated serving coordinator, the discrete-event cluster
+//!   migration, closing the §3.3 per-period loop on live traffic), the KV
+//!   transfer engine (`kvtransfer`: contention-aware routing, layer-wise
+//!   pipelined transfers, and the link-load ledger fed back into the
+//!   planner objective), the disaggregated serving coordinator, the
+//!   discrete-event cluster
 //!   simulator (including mid-trace placement switches), baselines, and the
 //!   experiment harnesses — all tied together by the [`deploy`] API: one
 //!   [`Planner`](deploy::Planner) trait over every system and one
@@ -29,6 +32,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod deploy;
 pub mod experiments;
+pub mod kvtransfer;
 pub mod model;
 pub mod rescheduler;
 pub mod util;

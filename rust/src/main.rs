@@ -27,7 +27,16 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(
         &argv,
-        &["quick", "full", "verbose", "no-refine", "json", "resched", "no-eval-cache"],
+        &[
+            "quick",
+            "full",
+            "verbose",
+            "no-refine",
+            "json",
+            "resched",
+            "no-eval-cache",
+            "contention-aware",
+        ],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match run(cmd, &args) {
@@ -86,6 +95,27 @@ fn spec_of(args: &Args) -> Result<DeploymentSpec> {
         }
         other => bail!("unknown admission model {other} (try: static | per-request)"),
     }
+    // KV transfer engine knobs (DESIGN.md §11).
+    if let Some(l) = args.get("link") {
+        let link = hexgen2::kvtransfer::LinkModel::from_name(l)
+            .ok_or_else(|| anyhow!("unknown link model {l} (try: per-route | shared-nic)"))?;
+        spec = spec.link(link);
+    }
+    if let Some(r) = args.get("kv-route") {
+        let route = hexgen2::kvtransfer::RouteModel::from_name(r).ok_or_else(|| {
+            anyhow!("unknown KV route model {r} (try: flow | least-loaded | eta-greedy)")
+        })?;
+        spec = spec.kv_route(route);
+    }
+    if let Some(c) = args.get("kv-chunk-layers") {
+        let layers: usize = c
+            .parse()
+            .ok()
+            .filter(|&x| x > 0)
+            .ok_or_else(|| anyhow!("--kv-chunk-layers needs a positive layer count, got {c}"))?;
+        spec = spec.kv_chunk_layers(Some(layers));
+    }
+    spec = spec.contention_aware(args.has("contention-aware"));
     if let Some(r) = args.get("rounds").and_then(|s| s.parse().ok()) {
         spec = spec.max_rounds(r);
     }
@@ -396,12 +426,24 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             at 75% of the static placement's estimated peak.\n\
                  \x20 simulate    --setting het1 --model opt-30b --workload hphd [--planner P] [--objective O]\n\
                  \x20             [--requests N] [--resched] [--json] [--chunked-prefill TOKENS]\n\
-                 \x20             [--admission static|per-request]\n\
+                 \x20             [--admission static|per-request] [--link per-route|shared-nic]\n\
+                 \x20             [--kv-route flow|least-loaded|eta-greedy] [--kv-chunk-layers N]\n\
+                 \x20             [--contention-aware]\n\
                  \x20             plan + run on the unified discrete-event simulator (--resched enables the\n\
                  \x20             online rescheduling loop mid-trace; --chunked-prefill chunks prompts on\n\
                  \x20             both colocated and disaggregated prefill replicas; per-request admission\n\
                  \x20             charges actual request lengths against replica memory and reports\n\
                  \x20             mem_stalls/unserved — pair it with --workload heavy_tail).\n\
+                 \x20             KV transfer engine knobs: --link picks the fabric contention model\n\
+                 \x20             (shared-nic serializes every transfer leaving a prefill replica on its\n\
+                 \x20             egress NIC); --kv-route picks how each transfer chooses among its\n\
+                 \x20             max-flow routes (flow = paper \u{a7}3.3 proportional, least-loaded routes\n\
+                 \x20             around backlogged links, eta-greedy minimizes predicted KV arrival);\n\
+                 \x20             --kv-chunk-layers N ships the cache in N-layer chunks pipelined with the\n\
+                 \x20             producing prefill burst; --contention-aware makes the *planner* rank\n\
+                 \x20             candidate placements under predicted NIC load for the chosen --link\n\
+                 \x20             (also applies to `schedule`). The --json report carries the transfer\n\
+                 \x20             ledger (kv_transfers, kv_bytes, kv_max_nic_util, kv_link_wait_s).\n\
                  \x20 serve       --model tiny --requests 16 --prefill 2 --decode 1 [--throttle-mbps N] [--verbose]\n\
                  \x20 workload    --workload hpld --n 10   (classes: HPLD|HPHD|LPHD|LPLD|online|heavy_tail)\n\
                  \x20 bench       planner|sim [--full] [--threads N]\n\
@@ -409,7 +451,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             planning workload cached vs uncached vs threaded and writes\n\
                  \x20             BENCH_planner.json / BENCH_sim.json (counter-based: evals, cache hit\n\
                  \x20             rate, partitions explored — deterministic where wall-time is not).\n\
-                 \x20 experiments <fig1|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table2|table3|table4|table5|appd|heavy_tail|all> [--full]\n\
+                 \x20 experiments <fig1|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table2|table3|table4|table5|appd|heavy_tail|kv_routing|all> [--full]\n\
                  \x20 settings    print bandwidth matrices (paper Fig. 4)"
             );
         }
@@ -425,7 +467,7 @@ fn run_experiment(id: &str, opts: &ExpOpts, args: &Args) -> Result<()> {
     let hets: &[&str] = if opts.quick { &het_quick } else { &het_all };
     match id {
         "list" => {
-            println!("experiments: fig1 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 table2 table3 table4 table5 appd heavy_tail all");
+            println!("experiments: fig1 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 table2 table3 table4 table5 appd heavy_tail kv_routing all");
         }
         "fig1" => {
             let (p, d) = batching::fig1_batching();
@@ -503,10 +545,16 @@ fn run_experiment(id: &str, opts: &ExpOpts, args: &Args) -> Result<()> {
                 .ok_or_else(|| anyhow!("unknown setting {setting}"))?
                 .print("Heavy-tail admission: static mean-length sizing vs per-request KV accounting (OPT-30B)");
         }
+        "kv_routing" => {
+            let setting = args.get_or("setting", "case_study");
+            hexgen2::experiments::kvrouting::kv_routing_table(&OPT_30B, setting, opts)
+                .ok_or_else(|| anyhow!("unknown setting {setting}"))?
+                .print("KV routing: route models x pipelined chunking under shared-NIC contention (OPT-30B, per-request admission)");
+        }
         "all" => {
             for e in [
                 "fig1", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "table2",
-                "table3", "table4", "table5", "appd", "heavy_tail",
+                "table3", "table4", "table5", "appd", "heavy_tail", "kv_routing",
             ] {
                 run_experiment(e, opts, args)?;
             }

@@ -59,7 +59,33 @@ pub fn plan(
     period: f64,
     objective: Objective,
 ) -> MigrationPlan {
+    plan_under_load(cluster, model, old, new, task, period, objective, 0.0)
+}
+
+/// [`plan`] priced under observed/predicted NIC load: migration KV moves
+/// share the serving fabric, so the transfer bandwidth is derated by
+/// `nic_util` — the source NICs' KV busy fraction, either measured by the
+/// transfer engine's ledger
+/// ([`SimStats::kv_max_nic_util`](crate::simulator::SimStats)) or
+/// predicted analytically from the incumbent
+/// ([`objective::kv_nic_utilization`](crate::scheduler::objective::kv_nic_utilization)).
+/// `nic_util = 0` reproduces the unloaded pricing exactly; utilization is
+/// clamped at 95% so a saturated NIC prices migrations as very expensive
+/// rather than impossible (drains still make progress as serving traffic
+/// ebbs).
+#[allow(clippy::too_many_arguments)]
+pub fn plan_under_load(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    old: &Placement,
+    new: &Placement,
+    task: &TaskProfile,
+    period: f64,
+    objective: Objective,
+    nic_util: f64,
+) -> MigrationPlan {
     let cm = CostModel::new(cluster, model);
+    let bw_derate = 1.0 - nic_util.clamp(0.0, 0.95);
 
     // ---- Drain: worst residual service time across old groups. ----
     let mut drain_s = 0.0f64;
@@ -114,7 +140,10 @@ pub fn plan(
         kv_bytes += bytes;
         let (bw, lat) = cluster.best_link(&g.devices, &new_decode_devices);
         // Groups transfer in parallel; the slowest one bounds the stall.
-        let t = if bw > 0.0 { lat + bytes / bw } else { f64::INFINITY };
+        // Migration bytes compete with in-flight serving KV on the fabric:
+        // only the un-reserved bandwidth fraction is available.
+        let eff_bw = bw * bw_derate;
+        let t = if eff_bw > 0.0 { lat + bytes / eff_bw } else { f64::INFINITY };
         transfer_s = transfer_s.max(t);
     }
 
@@ -184,6 +213,40 @@ mod tests {
         assert!(m.tokens_lost > 0.0);
         assert!(m.gain_tokens > 0.0);
         assert!(!m.migrate, "drain+transfer cost exceeds gain yet approved: {m:?}");
+    }
+
+    #[test]
+    fn loaded_nic_inflates_transfer_cost() {
+        let (c, p) = incumbent();
+        let task = scheduler::task_for(WorkloadKind::Lphd);
+        let mut better = p.clone();
+        better.tokens_per_s = p.tokens_per_s * 2.0;
+        // Flip phases so KV actually moves.
+        for g in better.groups.iter_mut() {
+            g.is_prefill = !g.is_prefill;
+        }
+        let idle =
+            plan_under_load(&c, &OPT_30B, &p, &better, &task, 600.0, Objective::Throughput, 0.0);
+        let busy =
+            plan_under_load(&c, &OPT_30B, &p, &better, &task, 600.0, Objective::Throughput, 0.9);
+        assert!(idle.transfer_s > 0.0);
+        // 90% reserved bandwidth → ~10x the transfer time (latency term
+        // keeps it from being exact).
+        assert!(
+            busy.transfer_s > idle.transfer_s * 5.0,
+            "loaded NIC barely priced: {} vs {}",
+            busy.transfer_s,
+            idle.transfer_s
+        );
+        assert_eq!(idle.kv_bytes, busy.kv_bytes, "load must not change what moves");
+        // Saturation clamps rather than producing infinities.
+        let sat =
+            plan_under_load(&c, &OPT_30B, &p, &better, &task, 600.0, Objective::Throughput, 5.0);
+        assert!(sat.transfer_s.is_finite());
+        // The unloaded entry point is the legacy pricing bit-for-bit.
+        let legacy = plan(&c, &OPT_30B, &p, &better, &task, 600.0, Objective::Throughput);
+        assert_eq!(legacy.transfer_s, idle.transfer_s);
+        assert_eq!(legacy.migrate, idle.migrate);
     }
 
     #[test]

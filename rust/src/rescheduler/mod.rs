@@ -66,6 +66,14 @@ impl Rescheduler {
         self.detector.update(&stats)
     }
 
+    /// Feed one KV-transfer observation (the per-transfer queue wait the
+    /// transfer engine's ledger measured): with
+    /// [`MonitorConfig::kv_wait_threshold_s`] set, sustained congestion
+    /// fires a [`DriftKind::KvContention`] event on a later [`observe`].
+    pub fn observe_kv(&mut self, t: f64, wait_s: f64) {
+        self.monitor.observe_kv(t, wait_s);
+    }
+
     pub fn baseline(&self) -> Option<(WorkloadKind, f64)> {
         self.detector.baseline()
     }
@@ -110,7 +118,15 @@ pub fn replan_for_drift_with_cache(
     opts.workload = to_kind;
     let result = warmstart::replan_with_cache(cluster, model, &opts, incumbent, cache)?;
     let task = scheduler::task_for(to_kind);
-    let migration = migration::plan(
+    // Contention-aware planning also prices the migration under load: the
+    // incumbent's predicted NIC busy fraction derates the bandwidth its
+    // in-flight KV moves would get (migration bytes share the fabric with
+    // serving traffic).
+    let nic_util = opts
+        .kv_contention
+        .map(|link| scheduler::objective::kv_nic_utilization(incumbent, link))
+        .unwrap_or(0.0);
+    let migration = migration::plan_under_load(
         cluster,
         model,
         incumbent,
@@ -118,6 +134,7 @@ pub fn replan_for_drift_with_cache(
         &task,
         opts.period,
         opts.objective,
+        nic_util,
     );
     Some(ReplanOutcome { to_kind, result, migration })
 }

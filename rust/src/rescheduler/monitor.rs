@@ -11,6 +11,14 @@
 //! leave its hysteresis band — continuously for a dwell period before an
 //! event fires, and firing re-baselines the detector, so transients and
 //! threshold flapping never trigger spurious re-plans.
+//!
+//! Besides the request stream, the monitor can ingest the KV transfer
+//! engine's ledger ([`WorkloadMonitor::observe_kv`]): sustained per-transfer
+//! queue waits above [`MonitorConfig::kv_wait_threshold_s`] fire a
+//! [`DriftKind::KvContention`] event — the placement's KV fan-out is
+//! congesting the fabric even though the request mix looks steady, which a
+//! contention-aware re-plan (`ScheduleOptions::kv_contention`) can fix
+//! where a mix-driven one would not.
 
 use std::collections::VecDeque;
 
@@ -28,11 +36,25 @@ pub struct MonitorConfig {
     /// Relative hysteresis band on the arrival rate: a rate drift fires only
     /// when |rate / baseline - 1| exceeds this.
     pub rate_band: f64,
+    /// KV-contention drift threshold: when the windowed mean per-transfer
+    /// KV queue wait (fed from the transfer engine's ledger via
+    /// [`WorkloadMonitor::observe_kv`]) exceeds this many seconds —
+    /// sustained for the dwell — a [`DriftKind::KvContention`] event fires.
+    /// `INFINITY` (the default) disables the detector; after firing it
+    /// re-arms only once the mean wait drops below half the threshold, so
+    /// persistent congestion cannot flap it.
+    pub kv_wait_threshold_s: f64,
 }
 
 impl Default for MonitorConfig {
     fn default() -> MonitorConfig {
-        MonitorConfig { window: 30.0, min_samples: 20, dwell: 10.0, rate_band: 0.5 }
+        MonitorConfig {
+            window: 30.0,
+            min_samples: 20,
+            dwell: 10.0,
+            rate_band: 0.5,
+            kv_wait_threshold_s: f64::INFINITY,
+        }
     }
 }
 
@@ -42,9 +64,16 @@ impl MonitorConfig {
     /// rescheduler tests: a 20 s window reacts within a phase, 15 samples
     /// guard cold start, and the 10 s dwell + 60% rate band provide the
     /// no-thrash hysteresis. One definition so harnesses and backends can
-    /// never silently diverge.
+    /// never silently diverge. KV-contention sensing stays disabled here —
+    /// the trace-driven case studies have no live ledger feed.
     pub fn case_study() -> MonitorConfig {
-        MonitorConfig { window: 20.0, min_samples: 15, dwell: 10.0, rate_band: 0.6 }
+        MonitorConfig {
+            window: 20.0,
+            min_samples: 15,
+            dwell: 10.0,
+            rate_band: 0.6,
+            kv_wait_threshold_s: f64::INFINITY,
+        }
     }
 }
 
@@ -58,6 +87,11 @@ pub struct WindowStats {
     pub mean_input: f64,
     pub mean_output: f64,
     pub n: usize,
+    /// Mean per-transfer KV queue wait over the window, seconds (0 when no
+    /// KV observations were fed — the ledger-driven contention signal).
+    pub mean_kv_wait_s: f64,
+    /// KV transfer observations in the window.
+    pub n_kv: usize,
 }
 
 impl WindowStats {
@@ -80,11 +114,14 @@ pub struct WorkloadMonitor {
     cfg: MonitorConfig,
     /// (arrival, input_len, output_len), arrival-ordered.
     buf: VecDeque<(f64, usize, usize)>,
+    /// (time, per-transfer KV queue wait seconds), time-ordered — fed from
+    /// the transfer engine's ledger by a live coordinator or replay.
+    kv: VecDeque<(f64, f64)>,
 }
 
 impl WorkloadMonitor {
     pub fn new(cfg: MonitorConfig) -> WorkloadMonitor {
-        WorkloadMonitor { cfg, buf: VecDeque::new() }
+        WorkloadMonitor { cfg, buf: VecDeque::new(), kv: VecDeque::new() }
     }
 
     /// Record one request observation. Arrivals must be non-decreasing.
@@ -99,6 +136,20 @@ impl WorkloadMonitor {
         self.buf.push_back((t, input_len, output_len));
     }
 
+    /// Record one KV transfer observation: the queue wait the transfer
+    /// engine's ledger measured for a transfer completing at `t`. Times
+    /// must be non-decreasing (same contract as [`observe`](Self::observe)).
+    pub fn observe_kv(&mut self, t: f64, wait_s: f64) {
+        while let Some(&(t0, _)) = self.kv.front() {
+            if t0 < t - self.cfg.window {
+                self.kv.pop_front();
+            } else {
+                break;
+            }
+        }
+        self.kv.push_back((t, wait_s.max(0.0)));
+    }
+
     /// Current window stats, or None during cold start.
     pub fn stats(&self, now: f64) -> Option<WindowStats> {
         let n = self.buf.len();
@@ -110,12 +161,24 @@ impl WorkloadMonitor {
             .buf
             .iter()
             .fold((0usize, 0usize), |(a, b), &(_, i, o)| (a + i, b + o));
+        // The KV buffer is evicted on pushes, but pushes stop exactly when
+        // transfers stop — which is when staleness matters (a congestion
+        // episode must not keep reporting long after it ended). Filter
+        // against `now` here rather than trusting push-time eviction.
+        let (kv_sum, n_kv) = self
+            .kv
+            .iter()
+            .filter(|&&(t0, _)| t0 >= now - self.cfg.window)
+            .fold((0.0f64, 0usize), |(s, k), &(_, w)| (s + w, k + 1));
+        let mean_kv_wait_s = if n_kv == 0 { 0.0 } else { kv_sum / n_kv as f64 };
         Some(WindowStats {
             at: now,
             rate: n as f64 / span,
             mean_input: si as f64 / n as f64,
             mean_output: so as f64 / n as f64,
             n,
+            mean_kv_wait_s,
+            n_kv,
         })
     }
 
@@ -135,6 +198,12 @@ pub enum DriftKind {
     Workload { from: WorkloadKind, to: WorkloadKind },
     /// The arrival rate left its hysteresis band.
     Rate { from: f64, to: f64 },
+    /// The observed mean KV queue wait (transfer-engine ledger feed)
+    /// exceeded [`MonitorConfig::kv_wait_threshold_s`] — the placement's KV
+    /// fan-out is congesting the fabric even though the request mix looks
+    /// steady; a re-plan (ideally contention-aware,
+    /// `ScheduleOptions::kv_contention`) should reroute it.
+    KvContention { mean_wait_s: f64 },
 }
 
 /// A detected, sustained workload shift.
@@ -151,11 +220,15 @@ pub struct DriftDetector {
     baseline: Option<(WorkloadKind, f64)>,
     /// Time the current (not yet sustained) deviation started.
     pending_since: Option<f64>,
+    /// KV-contention alarm armed? Disarmed on firing; re-armed once the
+    /// mean wait drops below half the threshold (no flapping while the
+    /// congestion persists).
+    kv_armed: bool,
 }
 
 impl DriftDetector {
     pub fn new(cfg: MonitorConfig) -> DriftDetector {
-        DriftDetector { cfg, baseline: None, pending_since: None }
+        DriftDetector { cfg, baseline: None, pending_since: None, kv_armed: true }
     }
 
     /// The (kind, rate) the detector currently considers normal.
@@ -171,9 +244,16 @@ impl DriftDetector {
             self.baseline = Some((kind, stats.rate));
             return None;
         };
+        // Re-arm the KV alarm once congestion has genuinely cleared.
+        if !self.kv_armed && stats.mean_kv_wait_s < 0.5 * self.cfg.kv_wait_threshold_s {
+            self.kv_armed = true;
+        }
         let kind_shift = kind != bk;
         let rate_shift = br > 0.0 && (stats.rate / br - 1.0).abs() > self.cfg.rate_band;
-        if !kind_shift && !rate_shift {
+        let kv_shift = self.kv_armed
+            && stats.n_kv > 0
+            && stats.mean_kv_wait_s > self.cfg.kv_wait_threshold_s;
+        if !kind_shift && !rate_shift && !kv_shift {
             // Steady traffic: re-center the rate baseline (EWMA) so a noisy
             // first window cannot arm the band forever. A genuine sustained
             // jump still trips it — re-centering only happens while inside.
@@ -189,15 +269,18 @@ impl DriftDetector {
             Some(t0) if stats.at - t0 >= self.cfg.dwell => {
                 self.pending_since = None;
                 self.baseline = Some((kind, stats.rate));
-                Some(DriftEvent {
-                    at: stats.at,
-                    kind: if kind_shift {
-                        DriftKind::Workload { from: bk, to: kind }
-                    } else {
-                        DriftKind::Rate { from: br, to: stats.rate }
-                    },
-                    stats: *stats,
-                })
+                // Priority: a class shift explains a rate/KV anomaly better
+                // than the reverse; KV contention is reported only when the
+                // request mix itself looks steady.
+                let drift = if kind_shift {
+                    DriftKind::Workload { from: bk, to: kind }
+                } else if rate_shift {
+                    DriftKind::Rate { from: br, to: stats.rate }
+                } else {
+                    self.kv_armed = false;
+                    DriftKind::KvContention { mean_wait_s: stats.mean_kv_wait_s }
+                };
+                Some(DriftEvent { at: stats.at, kind: drift, stats: *stats })
             }
             Some(_) => None,
         }
@@ -209,12 +292,18 @@ mod tests {
     use super::*;
 
     fn cfg() -> MonitorConfig {
-        MonitorConfig { window: 20.0, min_samples: 10, dwell: 10.0, rate_band: 0.6 }
+        MonitorConfig {
+            window: 20.0,
+            min_samples: 10,
+            dwell: 10.0,
+            rate_band: 0.6,
+            kv_wait_threshold_s: f64::INFINITY,
+        }
     }
 
     #[test]
     fn classification_matches_thresholds() {
-        let mk = |i: f64, o: f64| WindowStats { at: 0.0, rate: 1.0, mean_input: i, mean_output: o, n: 10 };
+        let mk = |i: f64, o: f64| WindowStats { at: 0.0, rate: 1.0, mean_input: i, mean_output: o, n: 10, mean_kv_wait_s: 0.0, n_kv: 0 };
         assert_eq!(mk(1024.0, 64.0).effective_kind(), WorkloadKind::Hpld);
         assert_eq!(mk(1024.0, 256.0).effective_kind(), WorkloadKind::Hphd);
         assert_eq!(mk(256.0, 256.0).effective_kind(), WorkloadKind::Lphd);
@@ -250,7 +339,7 @@ mod tests {
     fn transient_blips_do_not_fire() {
         let c = cfg();
         let mut det = DriftDetector::new(c);
-        let mk = |t: f64, i: f64| WindowStats { at: t, rate: 2.0, mean_input: i, mean_output: 256.0, n: 40 };
+        let mk = |t: f64, i: f64| WindowStats { at: t, rate: 2.0, mean_input: i, mean_output: 256.0, n: 40, mean_kv_wait_s: 0.0, n_kv: 0 };
         assert!(det.update(&mk(0.0, 256.0)).is_none()); // baseline LPHD
         // A 5 s excursion above the prefill threshold: shorter than dwell.
         for t in [10.0, 12.0, 14.0] {
@@ -277,7 +366,7 @@ mod tests {
     fn rate_drift_respects_band() {
         let c = cfg();
         let mut det = DriftDetector::new(c);
-        let mk = |t: f64, r: f64| WindowStats { at: t, rate: r, mean_input: 256.0, mean_output: 256.0, n: 40 };
+        let mk = |t: f64, r: f64| WindowStats { at: t, rate: r, mean_input: 256.0, mean_output: 256.0, n: 40, mean_kv_wait_s: 0.0, n_kv: 0 };
         det.update(&mk(0.0, 2.0));
         // 30% above baseline: inside the 60% band.
         for t in [5.0, 20.0, 40.0] {
@@ -295,5 +384,72 @@ mod tests {
             other => panic!("wrong kind {other:?}"),
         }
         assert!(det.update(&mk(70.0, 4.4)).is_none());
+    }
+
+    #[test]
+    fn kv_observations_window_and_average() {
+        let mut m = WorkloadMonitor::new(cfg());
+        for k in 0..60 {
+            m.observe(k as f64, 100, 50);
+            m.observe_kv(k as f64, if k < 50 { 10.0 } else { 1.0 });
+        }
+        let s = m.stats(59.0).unwrap();
+        // 20 s window at the last push (t=59): keeps t in [39, 59] — eleven
+        // 10 s waits (k=39..=49) and ten 1 s waits (k=50..=59).
+        assert_eq!(s.n_kv, 21, "{}", s.n_kv);
+        assert!((s.mean_kv_wait_s - 120.0 / 21.0).abs() < 1e-9, "{}", s.mean_kv_wait_s);
+        // No KV feed → zero signal.
+        let m2 = {
+            let mut m2 = WorkloadMonitor::new(cfg());
+            for k in 0..20 {
+                m2.observe(k as f64, 100, 50);
+            }
+            m2
+        };
+        let s2 = m2.stats(19.0).unwrap();
+        assert_eq!(s2.n_kv, 0);
+        assert_eq!(s2.mean_kv_wait_s, 0.0);
+    }
+
+    #[test]
+    fn kv_contention_drift_fires_once_and_rearms() {
+        let mut c = cfg();
+        c.kv_wait_threshold_s = 0.5;
+        let mut det = DriftDetector::new(c);
+        let mk = |t: f64, kv: f64| WindowStats {
+            at: t,
+            rate: 2.0,
+            mean_input: 256.0,
+            mean_output: 256.0,
+            n: 40,
+            mean_kv_wait_s: kv,
+            n_kv: 20,
+        };
+        assert!(det.update(&mk(0.0, 0.1)).is_none()); // baseline
+        // Sustained congestion: pending at t=10, fires after the 10 s dwell.
+        assert!(det.update(&mk(10.0, 2.0)).is_none());
+        let e = det.update(&mk(21.0, 2.0)).expect("sustained KV congestion fires");
+        match e.kind {
+            DriftKind::KvContention { mean_wait_s } => {
+                assert!((mean_wait_s - 2.0).abs() < 1e-12)
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+        // Congestion persists: disarmed, never refires.
+        for t in [25.0, 40.0, 80.0] {
+            assert!(det.update(&mk(t, 2.0)).is_none(), "refired while disarmed");
+        }
+        // Clears below half the threshold → re-arms; congestion returns →
+        // fires again after the dwell.
+        assert!(det.update(&mk(90.0, 0.1)).is_none());
+        assert!(det.update(&mk(100.0, 2.0)).is_none());
+        let e2 = det.update(&mk(111.0, 2.0)).expect("re-armed KV drift fires");
+        assert!(matches!(e2.kind, DriftKind::KvContention { .. }));
+        // Default config: detector disabled, congestion never fires.
+        let mut off = DriftDetector::new(cfg());
+        assert!(off.update(&mk(0.0, 50.0)).is_none());
+        for t in [10.0, 30.0, 60.0] {
+            assert!(off.update(&mk(t, 50.0)).is_none(), "disabled KV detector fired");
+        }
     }
 }

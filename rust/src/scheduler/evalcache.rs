@@ -28,6 +28,7 @@ use std::sync::Mutex;
 
 use crate::cluster::{Cluster, DeviceId};
 use crate::costmodel::TaskProfile;
+use crate::kvtransfer::LinkModel;
 use crate::model::LlmSpec;
 
 use super::objective::Objective;
@@ -45,6 +46,10 @@ struct EvalKey {
     task: (usize, u64, u64),
     period_bits: u64,
     n_type_candidates: usize,
+    /// Contention-aware objective term discriminant
+    /// (`ScheduleOptions::kv_contention`): the penalty changes scores, so
+    /// blind and contention-aware searches must not share entries.
+    contention: u8,
 }
 
 fn objective_bits(o: Objective) -> (u8, u64) {
@@ -53,6 +58,14 @@ fn objective_bits(o: Objective) -> (u8, u64) {
         Objective::SloGoodput { scale } => (1, scale.to_bits()),
         Objective::MeanLatency => (2, 0),
         Objective::CostPerToken => (3, 0),
+    }
+}
+
+fn contention_bits(c: Option<LinkModel>) -> u8 {
+    match c {
+        None => 0,
+        Some(LinkModel::PerRoute) => 1,
+        Some(LinkModel::SharedNic) => 2,
     }
 }
 
@@ -182,6 +195,7 @@ impl EvalCache {
         groups: &[Vec<DeviceId>],
         n_type_candidates: usize,
         objective: Objective,
+        kv_contention: Option<LinkModel>,
     ) -> Option<Placement> {
         self.bind_owner(cluster, model);
         let key = EvalKey {
@@ -190,6 +204,7 @@ impl EvalCache {
             task: (task.batch, task.s_in.to_bits(), task.s_out.to_bits()),
             period_bits: period.to_bits(),
             n_type_candidates,
+            contention: contention_bits(kv_contention),
         };
         if self.enabled {
             if let Some(v) = self.map.lock().unwrap().get(&key) {
@@ -198,7 +213,7 @@ impl EvalCache {
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let v = super::evaluate_partition(
+        let v = super::evaluate_partition_with(
             cluster,
             model,
             task,
@@ -206,6 +221,7 @@ impl EvalCache {
             groups,
             n_type_candidates,
             objective,
+            kv_contention,
             &self.strategy,
         );
         if self.enabled {
@@ -254,12 +270,12 @@ mod tests {
         let c = settings::case_study();
         let task = task_for(WorkloadKind::Lphd);
         let cache = EvalCache::new();
-        let a = cache.evaluate(&c, &OPT_30B, &task, 600.0, &groups(), 8, Objective::Throughput);
+        let a = cache.evaluate(&c, &OPT_30B, &task, 600.0, &groups(), 8, Objective::Throughput, None);
         let before = cache.counters();
         assert_eq!(before.misses, 1);
         // Same partition with groups and devices permuted: same signature.
         let permuted = vec![vec![3, 2], vec![1, 0], vec![6, 7], vec![4, 5]];
-        let b = cache.evaluate(&c, &OPT_30B, &task, 600.0, &permuted, 8, Objective::Throughput);
+        let b = cache.evaluate(&c, &OPT_30B, &task, 600.0, &permuted, 8, Objective::Throughput, None);
         let after = cache.counters();
         assert_eq!(after.misses, 1, "permutation re-executed the evaluation");
         assert_eq!(after.hits, 1);
@@ -277,13 +293,13 @@ mod tests {
         let g = groups();
         let lphd = task_for(WorkloadKind::Lphd);
         let hpld = task_for(WorkloadKind::Hpld);
-        let _ = cache.evaluate(&c, &OPT_30B, &lphd, 600.0, &g, 8, Objective::Throughput);
-        let _ = cache.evaluate(&c, &OPT_30B, &hpld, 600.0, &g, 8, Objective::Throughput);
-        let _ = cache.evaluate(&c, &OPT_30B, &lphd, 600.0, &g, 8, Objective::MeanLatency);
+        let _ = cache.evaluate(&c, &OPT_30B, &lphd, 600.0, &g, 8, Objective::Throughput, None);
+        let _ = cache.evaluate(&c, &OPT_30B, &hpld, 600.0, &g, 8, Objective::Throughput, None);
+        let _ = cache.evaluate(&c, &OPT_30B, &lphd, 600.0, &g, 8, Objective::MeanLatency, None);
         let _ =
-            cache.evaluate(&c, &OPT_30B, &lphd, 600.0, &g, 8, Objective::SloGoodput { scale: 2.0 });
+            cache.evaluate(&c, &OPT_30B, &lphd, 600.0, &g, 8, Objective::SloGoodput { scale: 2.0 }, None);
         let _ =
-            cache.evaluate(&c, &OPT_30B, &lphd, 600.0, &g, 8, Objective::SloGoodput { scale: 4.0 });
+            cache.evaluate(&c, &OPT_30B, &lphd, 600.0, &g, 8, Objective::SloGoodput { scale: 4.0 }, None);
         assert_eq!(cache.counters().misses, 5, "keys collided across objective/workload");
         assert_eq!(cache.counters().hits, 0);
     }
@@ -296,8 +312,8 @@ mod tests {
         let uncached = EvalCache::disabled();
         let g = groups();
         for _ in 0..2 {
-            let a = cached.evaluate(&c, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput);
-            let b = uncached.evaluate(&c, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput);
+            let a = cached.evaluate(&c, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput, None);
+            let b = uncached.evaluate(&c, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput, None);
             assert_eq!(format!("{a:?}"), format!("{b:?}"));
         }
         assert_eq!(cached.counters().misses, 1);
@@ -313,11 +329,11 @@ mod tests {
         let task = task_for(WorkloadKind::Lphd);
         let cache = EvalCache::new();
         let g = groups();
-        let _ = cache.evaluate(&c, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput);
+        let _ = cache.evaluate(&c, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput, None);
         let mut degraded = c.clone();
         degraded.bandwidth[0][7] /= 100.0;
         degraded.bandwidth[7][0] /= 100.0;
-        let _ = cache.evaluate(&degraded, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput);
+        let _ = cache.evaluate(&degraded, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput, None);
         assert_eq!(cache.counters().hits, 0, "stale hit across a mutated topology");
         assert_eq!(cache.counters().misses, 2);
     }
@@ -328,11 +344,34 @@ mod tests {
         let task = task_for(WorkloadKind::Lphd);
         let cache = EvalCache::new();
         let g = groups();
-        let _ = cache.evaluate(&c, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput);
+        let _ = cache.evaluate(&c, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput, None);
         assert_eq!(cache.counters().unique_evals, 1);
         // A different model must not serve the OPT-30B entry.
-        let _ = cache.evaluate(&c, &LLAMA2_70B, &task, 600.0, &g, 8, Objective::Throughput);
+        let _ = cache.evaluate(&c, &LLAMA2_70B, &task, 600.0, &g, 8, Objective::Throughput, None);
         assert_eq!(cache.counters().hits, 0, "stale cross-model hit");
         assert_eq!(cache.counters().misses, 2);
+    }
+
+    #[test]
+    fn contention_term_keys_separately() {
+        // Blind and contention-aware evaluations score candidates
+        // differently, so they must not share memo entries.
+        let c = settings::case_study();
+        let task = task_for(WorkloadKind::Lphd);
+        let cache = EvalCache::new();
+        let g = groups();
+        let _ = cache.evaluate(&c, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput, None);
+        let _ = cache.evaluate(
+            &c,
+            &OPT_30B,
+            &task,
+            600.0,
+            &g,
+            8,
+            Objective::Throughput,
+            Some(crate::kvtransfer::LinkModel::SharedNic),
+        );
+        assert_eq!(cache.counters().misses, 2, "contention term collided in the key");
+        assert_eq!(cache.counters().hits, 0);
     }
 }

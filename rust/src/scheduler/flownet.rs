@@ -7,6 +7,20 @@
 //! capacity T / KV-transfer-cost. Preflow-push (maxflow.rs) then yields the
 //! system throughput bound and the flow assignments that drive both KV
 //! routing and the §3.4 edge-swap guidance.
+//!
+//! One constraint this network deliberately cannot express: shared-NIC
+//! contention. A KV edge's capacity caps *its own* busy fraction at 1
+//! (`flow / capacity = flow · transfer_time / T`), but when several routes
+//! leave one prefill group over a shared egress NIC
+//! ([`LinkModel::SharedNic`](crate::kvtransfer::LinkModel)) their busy
+//! fractions *add* — a per-node coupled constraint with heterogeneous
+//! per-edge costs, outside plain max-flow. The planner accounts for it as
+//! an objective penalty instead:
+//! [`objective::kv_nic_utilization`](super::objective::kv_nic_utilization)
+//! recovers each route's busy fraction from exactly the `flow`/`capacity`
+//! values this module emits, and
+//! [`evaluate_partition_with`](super::evaluate_partition_with) discounts
+//! overcommitted candidates (`ScheduleOptions::kv_contention`).
 
 use crate::cluster::{Cluster, DeviceId, LinkTier};
 use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};

@@ -121,6 +121,7 @@ pub fn schedule_genetic_with_cache(
             groups,
             opts.type_candidates,
             opts.objective,
+            opts.kv_contention,
         )
     };
 

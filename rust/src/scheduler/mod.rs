@@ -26,6 +26,7 @@ use std::time::Instant;
 
 use crate::cluster::{Cluster, DeviceId};
 use crate::costmodel::TaskProfile;
+use crate::kvtransfer::LinkModel;
 use crate::model::LlmSpec;
 use crate::util::rng::Rng;
 use crate::workload::WorkloadKind;
@@ -78,6 +79,16 @@ pub struct ScheduleOptions {
     /// re-executes every evaluation — same plans, useful only as the perf
     /// harness's uncached baseline.
     pub use_eval_cache: bool,
+    /// Choose plans *under KV link contention*: every candidate's objective
+    /// score is discounted by its predicted NIC overcommit under this link
+    /// model ([`objective::kv_nic_utilization`] /
+    /// [`objective::apply_kv_contention`] — the planner half of the
+    /// planner↔engine loop, DESIGN.md §11). `None` (default) is the legacy
+    /// contention-blind ranking; `Some(LinkModel::PerRoute)` is a no-op by
+    /// max-flow feasibility and only `Some(LinkModel::SharedNic)` can
+    /// change plans — and only on placements whose shared NICs would be
+    /// overcommitted.
+    pub kv_contention: Option<LinkModel>,
 }
 
 impl ScheduleOptions {
@@ -96,6 +107,7 @@ impl ScheduleOptions {
             initial_groups: None,
             threads: 1,
             use_eval_cache: true,
+            kv_contention: None,
         }
     }
 }
@@ -220,6 +232,37 @@ pub fn evaluate_partition(
     objective: Objective,
     cache: &StrategyCache,
 ) -> Option<Placement> {
+    evaluate_partition_with(
+        cluster,
+        model,
+        task,
+        period,
+        groups,
+        n_type_candidates,
+        objective,
+        None,
+        cache,
+    )
+}
+
+/// [`evaluate_partition`] with the optional contention-aware objective
+/// term: when `kv_contention` is set, every candidate's score is discounted
+/// by its predicted NIC overcommit under that link model
+/// ([`objective::kv_nic_utilization`]), so the inner type-assignment argmax
+/// — not just the outer partition ranking — prefers placements whose KV
+/// fan-out the fabric can actually carry.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_partition_with(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    task: &TaskProfile,
+    period: f64,
+    groups: &[Vec<DeviceId>],
+    n_type_candidates: usize,
+    objective: Objective,
+    kv_contention: Option<LinkModel>,
+    cache: &StrategyCache,
+) -> Option<Placement> {
     let mut net = flownet::PartitionFlowNet::new(cluster, model, task, period, groups, cache);
     // Per-group phase capacities feed the secondary-partition scoring.
     let caps = net.phase_caps();
@@ -230,7 +273,12 @@ pub fn evaluate_partition(
     let mut best: Option<Placement> = None;
     for assign in coarsen::type_candidates(&w, &caps, n_cand) {
         if let Some(mut p) = net.evaluate(&assign) {
-            p.objective_score = objective.score(cluster, model, task, &p);
+            let mut score = objective.score(cluster, model, task, &p);
+            if let Some(link) = kv_contention {
+                score =
+                    objective::apply_kv_contention(score, objective::kv_nic_utilization(&p, link));
+            }
+            p.objective_score = score;
             if best.as_ref().map(|b| p.objective_score > b.objective_score).unwrap_or(true) {
                 best = Some(p);
             }
@@ -434,11 +482,12 @@ fn evaluate_batch(
     cands: &[Groups],
     n_type_candidates: usize,
     objective: Objective,
+    kv_contention: Option<LinkModel>,
     cache: &EvalCache,
     threads: usize,
 ) -> Vec<Option<Placement>> {
     let eval = |g: &Groups| {
-        cache.evaluate(cluster, model, task, period, g, n_type_candidates, objective)
+        cache.evaluate(cluster, model, task, period, g, n_type_candidates, objective, kv_contention)
     };
     if threads <= 1 || cands.len() <= 1 {
         return cands.iter().map(eval).collect();
@@ -535,6 +584,7 @@ pub fn schedule_with_cache(
         &seeds,
         opts.type_candidates,
         opts.objective,
+        opts.kv_contention,
         cache,
         opts.threads,
     );
@@ -604,6 +654,7 @@ pub fn schedule_with_cache(
             &fresh,
             opts.type_candidates,
             opts.objective,
+            opts.kv_contention,
             cache,
             opts.threads,
         );

@@ -16,8 +16,11 @@
 //! placement by its raw `flow_value`, reproducing the pre-objective
 //! behaviour bit-for-bit (same seeds → same placements).
 
+use std::collections::HashMap;
+
 use crate::cluster::Cluster;
-use crate::costmodel::{CostModel, TaskProfile};
+use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile};
+use crate::kvtransfer::LinkModel;
 use crate::model::LlmSpec;
 use crate::simulator::slo_base;
 use crate::workload::Request;
@@ -179,6 +182,141 @@ pub fn mean_slo_base(model: &LlmSpec, task: &TaskProfile) -> f64 {
     slo_base(model, &req)
 }
 
+/// Predicted per-NIC KV egress utilization of a placement under a link
+/// model: the busy fraction of the scheduling period each prefill group's
+/// egress fabric would spend transmitting KV caches if the max-flow
+/// assignment were served. A KV edge's capacity is `period /
+/// transfer_time` (see [`flownet`](super::flownet)), so a route's busy
+/// fraction is exactly `flow / capacity`; under [`LinkModel::SharedNic`]
+/// the routes leaving one prefill group serialize on its NIC, so their
+/// fractions *add* — a coupled constraint plain max-flow cannot express
+/// (it caps each edge separately), which is why plans chosen blind to it
+/// can overcommit a NIC. This is the analytic twin of the measured NIC
+/// utilization the KV transfer engine's ledger reports
+/// ([`SimStats::kv_max_nic_util`](crate::simulator::SimStats)): predicted
+/// here to *choose* plans, observed there to validate them — the
+/// planner→engine→planner loop of DESIGN.md §11.
+///
+/// Returns the worst (max) utilization; ≤ 1 under `PerRoute` by max-flow
+/// feasibility, possibly ≫ 1 under `SharedNic`.
+pub fn kv_nic_utilization(p: &Placement, link: LinkModel) -> f64 {
+    let mut worst = 0.0f64;
+    match link {
+        LinkModel::PerRoute => {
+            for r in &p.routes {
+                if r.capacity > 0.0 {
+                    worst = worst.max(r.flow / r.capacity);
+                }
+            }
+        }
+        LinkModel::SharedNic => {
+            let mut per_src: HashMap<usize, f64> = HashMap::new();
+            for r in &p.routes {
+                if r.capacity > 0.0 && r.flow > 0.0 {
+                    *per_src.entry(r.prefill).or_default() += r.flow / r.capacity;
+                }
+            }
+            for &u in per_src.values() {
+                worst = worst.max(u);
+            }
+        }
+    }
+    worst
+}
+
+/// The contention penalty term: discount a candidate's objective score by
+/// predicted NIC overcommit. A NIC at utilization `u > 1` stretches the
+/// effective serving period by `u` (transfers serialize), so
+/// throughput-like (non-negative) scores divide by `u` and latency-like
+/// (negative) scores multiply by it. Utilization ≤ 1 is free: the score is
+/// unchanged, so on clusters whose links keep up the contention-aware
+/// search is bit-identical to the blind one.
+pub fn apply_kv_contention(score: f64, util: f64) -> f64 {
+    if util <= 1.0 {
+        score
+    } else if score >= 0.0 {
+        score / util
+    } else {
+        score * util
+    }
+}
+
+/// Objective score of a *colocated* plan (no flow network): throughput is
+/// the sum of per-replica colocated estimates, latency the
+/// throughput-weighted macro-round (prefill + full decode) latency, and
+/// cost counts every replica's devices (colocated replicas all serve
+/// traffic). Used both to rank the HexGen GA / vLLM TP internal searches by
+/// the active objective and to report their plans' scores through the
+/// deploy layer.
+pub fn colocated_objective_score(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    task: &TaskProfile,
+    objective: Objective,
+    replicas: &[ReplicaConfig],
+    tokens_per_s: f64,
+) -> f64 {
+    match objective {
+        Objective::Throughput => tokens_per_s,
+        Objective::MeanLatency => -colocated_mean_latency(cluster, model, task, replicas),
+        Objective::SloGoodput { scale } => {
+            let lat = colocated_mean_latency(cluster, model, task, replicas);
+            if !lat.is_finite() || lat <= 0.0 {
+                return 0.0;
+            }
+            let budget = scale * mean_slo_base(model, task);
+            tokens_per_s * (budget / lat).min(1.0)
+        }
+        Objective::CostPerToken => {
+            let cost: f64 = replicas
+                .iter()
+                .flat_map(|r| r.devices())
+                .map(|d| cluster.devices[d].gpu.price_per_hour())
+                .sum();
+            if cost <= 0.0 {
+                0.0
+            } else {
+                tokens_per_s * 3600.0 / cost
+            }
+        }
+    }
+}
+
+/// Throughput-weighted mean request latency of colocated replicas: in
+/// steady state each macro-round prefills a batch then decodes it to
+/// completion (the same model as
+/// [`baselines::hexgen::colocated_throughput`](crate::baselines::hexgen::colocated_throughput)).
+pub fn colocated_mean_latency(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    task: &TaskProfile,
+    replicas: &[ReplicaConfig],
+) -> f64 {
+    let cm = CostModel::new(cluster, model);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for cfg in replicas {
+        let mb = cm.max_decode_batch(cfg, task);
+        if mb == 0 {
+            continue;
+        }
+        let b = mb.min(32);
+        let t = task.with_batch(b);
+        let lat = cm.prefill_latency(cfg, &t) + cm.decode_latency(cfg, &t);
+        if lat <= 0.0 {
+            continue;
+        }
+        let tput = b as f64 * task.s_out / lat;
+        num += tput * lat;
+        den += tput;
+    }
+    if den <= 0.0 {
+        f64::INFINITY
+    } else {
+        num / den
+    }
+}
+
 /// Rental cost, $/hour, of the devices in groups that actually carry flow.
 /// Idle groups (zero capacity or zero utilization) are excluded: under a
 /// price budget they could be handed back to the provider.
@@ -314,6 +452,63 @@ mod tests {
         ] {
             assert_eq!(Objective::from_name(o.name()), Some(o));
         }
+    }
+
+    #[test]
+    fn nic_utilization_adds_under_shared_nic_only() {
+        let c = settings::homogeneous();
+        let mut p = placement(&c);
+        // Two live routes out of prefill group 0: 80/200 and 120/160.
+        p.routes[1].flow = 120.0;
+        p.routes[1].capacity = 160.0;
+        let per_route = kv_nic_utilization(&p, LinkModel::PerRoute);
+        assert!((per_route - 0.75).abs() < 1e-12, "{per_route}");
+        let shared = kv_nic_utilization(&p, LinkModel::SharedNic);
+        assert!((shared - (80.0 / 200.0 + 0.75)).abs() < 1e-12, "{shared}");
+        assert!(shared > 1.0, "the shared NIC is overcommitted here");
+    }
+
+    #[test]
+    fn contention_penalty_discounts_only_overcommit() {
+        // util <= 1: free.
+        assert_eq!(apply_kv_contention(100.0, 0.4), 100.0);
+        assert_eq!(apply_kv_contention(-5.0, 1.0), -5.0);
+        // util > 1: positive scores shrink, negative scores worsen.
+        assert!((apply_kv_contention(100.0, 2.0) - 50.0).abs() < 1e-12);
+        assert!((apply_kv_contention(-5.0, 2.0) - -10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn colocated_scores_follow_objectives() {
+        let c = settings::homogeneous();
+        let task = TaskProfile::new(1, 256.0, 256.0);
+        let replicas = vec![ReplicaConfig::new(vec![(0..4).collect()], vec![OPT_30B.n_layers])];
+        let tput = 500.0;
+        assert_eq!(
+            colocated_objective_score(&c, &OPT_30B, &task, Objective::Throughput, &replicas, tput),
+            tput
+        );
+        let lat =
+            colocated_objective_score(&c, &OPT_30B, &task, Objective::MeanLatency, &replicas, tput);
+        assert!(lat < 0.0 && lat.is_finite());
+        let cost = colocated_objective_score(
+            &c,
+            &OPT_30B,
+            &task,
+            Objective::CostPerToken,
+            &replicas,
+            tput,
+        );
+        assert!(cost > 0.0);
+        let slo = colocated_objective_score(
+            &c,
+            &OPT_30B,
+            &task,
+            Objective::SloGoodput { scale: 5.0 },
+            &replicas,
+            tput,
+        );
+        assert!(slo > 0.0 && slo <= tput + 1e-9);
     }
 
     #[test]

@@ -34,15 +34,22 @@
 //! reserves its actual token footprint against the replica's memory
 //! ([`CostModel::token_capacity`]) and waits in queue under memory
 //! pressure — the regime where heavy-tailed traces behave nothing like
-//! their means. KV transfers serialize through per-link queues
-//! ([`LinkModel`]): per-route (the classic assumption) or shared-NIC,
-//! where every transfer leaving a prefill replica contends for one egress
-//! link.
+//! their means. KV transfers are owned end-to-end by the
+//! [`kvtransfer`](crate::kvtransfer) subsystem (DESIGN.md §11): the engine
+//! hands every prefill→decode cache to a
+//! [`TransferScheduler`](crate::kvtransfer::TransferScheduler), which picks
+//! a route under the configured [`RouteModel`] (flow-proportional legacy,
+//! least-loaded, or ETA-greedy), reserves the link under the configured
+//! [`LinkModel`] (per-route or shared-NIC), optionally pipelines the push
+//! in layer-wise chunks that overlap the producing prefill burst, and
+//! accounts everything in a link-load ledger exported through
+//! [`SimStats`] / [`SimReport::link_loads`](super::SimReport).
 
 use std::collections::{HashMap, VecDeque};
 
 use crate::cluster::Cluster;
 use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile, MAX_DECODE_BATCH};
+use crate::kvtransfer::{LinkModel, RouteModel, TransferConfig, TransferScheduler};
 use crate::model::LlmSpec;
 use crate::scheduler::Placement;
 use crate::workload::{Request, Trace, WorkloadKind};
@@ -73,18 +80,6 @@ pub enum Sizing {
     PerRequest,
 }
 
-/// How concurrent KV-cache transfers contend for the fabric.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
-pub enum LinkModel {
-    /// Each (prefill, decode) route serializes independently (the original
-    /// engines' assumption: routes have private bandwidth).
-    #[default]
-    PerRoute,
-    /// Every transfer leaving a prefill replica shares its egress NIC:
-    /// transfers from the same source serialize regardless of destination.
-    SharedNic,
-}
-
 /// Knobs of one simulation run. `Default` reproduces the pre-refactor
 /// engines' behaviour except that the static prefill-batch cap is derived
 /// from device memory instead of the old hardcoded `1..=16` scan.
@@ -95,7 +90,16 @@ pub struct SimConfig {
     /// (tokens per chunk). Colocated replicas carry their chunk size in
     /// [`ServingSpec::Colocated`] because it is part of the plan.
     pub chunked_prefill: Option<usize>,
+    /// How concurrent KV transfers contend for the fabric (defined by the
+    /// transfer engine; `PerRoute` is the legacy assumption).
     pub link: LinkModel,
+    /// How each transfer picks among its max-flow-feasible routes
+    /// (`FlowProportional` is the legacy §3.3 rule, bit-identical to the
+    /// pre-subsystem in-core path).
+    pub kv_route: RouteModel,
+    /// Layer-wise pipelined KV push: layers per chunk (`None` = whole-cache
+    /// transfer). See [`TransferScheduler`] for the overlap model.
+    pub kv_chunk_layers: Option<usize>,
     /// Pin the static prefill-batch search bound (None = derive it from
     /// device memory via [`CostModel::max_prefill_batch`]). The golden
     /// parity suite pins this to 16 — the pre-refactor magic constant — to
@@ -759,12 +763,12 @@ struct Engine<'a> {
     weight: Vec<f64>,
     /// Requests assigned so far per replica (deficit routing).
     assigned: Vec<f64>,
-    /// Requests routed so far across (decode, prefill) pairs.
-    assigned_from: HashMap<(usize, usize), f64>,
-    /// Max-flow route weights across (prefill, decode) pairs.
-    route_w: HashMap<(usize, usize), f64>,
-    /// Busy-until time per KV link key.
-    link_free: HashMap<(usize, usize), f64>,
+    /// The KV transfer engine: route table, link reservations, pipelined
+    /// chunking, and the link-load ledger (DESIGN.md §11).
+    kv: TransferScheduler,
+    /// Latency of the burst currently (or last) in flight per replica — the
+    /// overlap window layer-wise pipelined transfers may ship into.
+    burst_lat: Vec<f64>,
     /// Entry replicas of the current epoch.
     active: Vec<usize>,
     router: Router,
@@ -787,6 +791,9 @@ struct Engine<'a> {
     /// route pooling, and quiesce drains — never live at the same time.
     outcome_buf: Vec<Outcome>,
     scratch: Vec<usize>,
+    /// Timestamp of the last processed event (the serving span the ledger's
+    /// NIC utilization is normalized by).
+    t_end: f64,
     stats: SimStats,
 }
 
@@ -873,18 +880,20 @@ impl<'a> Engine<'a> {
             self.weight.truncate(base);
             self.assigned.truncate(base);
             self.resident.truncate(base);
+            self.burst_lat.truncate(base);
             return None;
         }
 
         // Flow-proportional routing weights (§3.3: "communication frequency
-        // is set to be proportional to these flow values").
+        // is set to be proportional to these flow values") — registered
+        // with the KV transfer engine, which owns the route table.
         for r in &placement.routes {
             let (Some(&p), Some(&d)) = (p_of_group.get(&r.prefill), d_of_group.get(&r.decode))
             else {
                 continue;
             };
             if r.flow > 1e-9 {
-                *self.route_w.entry((p, d)).or_default() += r.flow;
+                self.kv.add_route(p, d, r.flow);
                 self.weight[p] += r.flow;
             }
         }
@@ -894,7 +903,7 @@ impl<'a> Engine<'a> {
         for &p in &new_p {
             if self.weight[p] <= 0.0 {
                 for &d in &new_d {
-                    self.route_w.insert((p, d), 1e-6);
+                    self.kv.add_fallback(p, d);
                 }
                 self.weight[p] = 1e-6 * new_d.len() as f64;
             }
@@ -951,6 +960,7 @@ impl<'a> Engine<'a> {
         self.weight.push(0.0);
         self.assigned.push(0.0);
         self.resident.push(0.0);
+        self.burst_lat.push(0.0);
     }
 
     /// Re-read replica `i`'s resident tokens after a reserve/free and fold
@@ -1014,6 +1024,9 @@ impl<'a> Engine<'a> {
         let mut env = penv!(self);
         if let Some(lat) = self.replicas[i].try_start(&mut env) {
             self.q.push(now + lat, Ev::Service(i));
+            // Remembered as the pipelining window: KV produced by this
+            // burst may overlap (part of) it when chunked transfer is on.
+            self.burst_lat[i] = lat;
         }
         // try_start is where admissions reserve memory.
         self.note_resident(i);
@@ -1055,16 +1068,17 @@ impl<'a> Engine<'a> {
         self.try_start(i, now);
     }
 
-    /// Prefill of `r` finished on replica `p`: stamp TTFT, pick a decode
-    /// replica flow-proportionally, and enqueue the KV transfer on the
-    /// link.
+    /// Prefill of `r` finished on replica `p`: stamp TTFT, hand the cache
+    /// to the KV transfer engine (route selection under the configured
+    /// [`RouteModel`], link reservation, optional pipelined chunking), and
+    /// schedule its arrival.
     fn route_kv(&mut self, p: usize, r: usize, now: f64) {
         self.prefill_done_at[r] = now;
         let mut pool = std::mem::take(&mut self.scratch);
         pool.clear();
         pool.extend(
             (0..self.replicas.len())
-                .filter(|&d| self.kinds[d] == PolicyKind::Decode && self.route_w.contains_key(&(p, d))),
+                .filter(|&d| self.kinds[d] == PolicyKind::Decode && self.kv.has_route(p, d)),
         );
         // Legacy fallback: an unrouted prefill replica sends to the first
         // decode replica in the arena.
@@ -1097,31 +1111,20 @@ impl<'a> Engine<'a> {
                 return;
             }
         }
-        let d = *pool
-            .iter()
-            .max_by(|&&a, &&b| {
-                let wa = self.route_w.get(&(p, a)).copied().unwrap_or(1e-6)
-                    / (self.assigned_from.get(&(a, p)).copied().unwrap_or(0.0) + 1.0);
-                let wb = self.route_w.get(&(p, b)).copied().unwrap_or(1e-6)
-                    / (self.assigned_from.get(&(b, p)).copied().unwrap_or(0.0) + 1.0);
-                wa.partial_cmp(&wb).unwrap()
-            })
-            .expect("pool checked non-empty");
-        self.scratch = pool;
-        *self.assigned_from.entry((d, p)).or_default() += 1.0;
-        // KV transfer over the link; links serialize through a shared
-        // queue (per route, or per source NIC).
+        // Hand the cache to the transfer engine. Transfer times are queried
+        // lazily (`RouteModel::needs_xfer`): per candidate only when the
+        // policy ranks by them, otherwise once for the chosen route — the
+        // Table-1 query scans device pairs and this is the hot loop.
         let t_task = TaskProfile::new(1, self.reqs[r].input_len as f64, 0.0);
-        let xfer = self.cm.kv_transfer_time(self.replicas[p].cfg(), self.replicas[d].cfg(), &t_task);
-        let key = match self.sim.link {
-            LinkModel::PerRoute => (p, d),
-            LinkModel::SharedNic => (p, usize::MAX),
-        };
-        let free = self.link_free.get(&key).copied().unwrap_or(0.0).max(now);
-        self.stats.kv_link_wait_s += free - now;
-        let done = free + xfer;
-        self.link_free.insert(key, done);
-        self.q.push(done, Ev::KvArrive { p, d, r });
+        let bytes = self.cm.kv_bytes(self.reqs[r].input_len as f64, self.cm.model.n_layers);
+        let burst = self.burst_lat[p];
+        let (cm, replicas, kv) = (&self.cm, &self.replicas, &mut self.kv);
+        let tr = kv.enqueue(p, bytes, now, burst, &pool, |d| {
+            cm.kv_transfer_time(replicas[p].cfg(), replicas[d].cfg(), &t_task)
+        });
+        self.scratch = pool;
+        self.stats.kv_link_wait_s += tr.wait_s;
+        self.q.push(tr.done, Ev::KvArrive { p, d: tr.dst, r });
     }
 
     fn finish(&mut self, r: usize, now: f64) {
@@ -1144,6 +1147,9 @@ impl<'a> Engine<'a> {
         base_means: (f64, f64),
     ) {
         while let Some((now, ev)) = self.q.pop() {
+            // The event heap pops in time order, so this tracks the serving
+            // span (the ledger's NIC-utilization denominator).
+            self.t_end = now;
             match ev {
                 Ev::Arrive(r) => self.admit(r, now),
                 Ev::Resched(i) => {
@@ -1205,6 +1211,7 @@ impl<'a> Engine<'a> {
                     self.try_start(i, now);
                 }
                 Ev::KvArrive { p, d, r } => {
+                    self.kv.complete(p, d);
                     if self.sim.sizing == Sizing::PerRequest {
                         // The shipped KV frees prefill-side memory, which
                         // may unblock queued prompts.
@@ -1259,9 +1266,13 @@ pub fn simulate(
         kinds: Vec::new(),
         weight: Vec::new(),
         assigned: Vec::new(),
-        assigned_from: HashMap::new(),
-        route_w: HashMap::new(),
-        link_free: HashMap::new(),
+        kv: TransferScheduler::new(TransferConfig {
+            route: cfg.kv_route,
+            link: cfg.link,
+            chunk_layers: cfg.kv_chunk_layers,
+            n_layers: model.n_layers,
+        }),
+        burst_lat: Vec::new(),
         active: Vec::new(),
         router: Router::FlowWeighted,
         // Arrivals + resched/activate pairs, plus slack for in-flight
@@ -1277,6 +1288,7 @@ pub fn simulate(
         resident_total: 0.0,
         outcome_buf: Vec::new(),
         scratch: Vec::new(),
+        t_end: 0.0,
         stats: SimStats::default(),
     };
 
@@ -1301,7 +1313,16 @@ pub fn simulate(
     eng.run(switches, (s_in_mean, s_out_mean));
 
     eng.stats.unserved = eng.done.iter().filter(|&&d| !d).count();
+    // Export the transfer engine's ledger: the Copy summary onto SimStats,
+    // the per-route detail onto the report.
+    let kv_summary = eng.kv.ledger().summary(eng.t_end);
+    eng.stats.kv_transfers = kv_summary.transfers;
+    eng.stats.kv_bytes = kv_summary.bytes;
+    eng.stats.kv_max_nic_util = kv_summary.max_nic_util;
+    eng.stats.kv_wait_hist = kv_summary.wait_hist;
+    let link_loads = eng.kv.ledger().loads();
     let mut rep = SimReport::from_records(eng.records);
     rep.stats = eng.stats;
+    rep.link_loads = link_loads;
     rep
 }

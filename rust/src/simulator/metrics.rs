@@ -2,6 +2,7 @@
 //! serving goal"): decode throughput (tokens/s), end-to-end latency
 //! statistics, and SLO attainment at configurable SLO scales.
 
+use crate::kvtransfer::LinkLoad;
 use crate::util::stats;
 
 /// Per-request timing record.
@@ -52,6 +53,18 @@ pub struct SimStats {
     pub peak_resident_tokens: f64,
     /// Total seconds KV transfers spent queued behind a busy link.
     pub kv_link_wait_s: f64,
+    /// KV transfers completed (one per disaggregated prefill completion).
+    pub kv_transfers: usize,
+    /// KV bytes moved prefill→decode (Table 1's 2·s·H·B per layer).
+    pub kv_bytes: f64,
+    /// Max over source NICs of KV transmission-busy fraction of the serving
+    /// span — the measured counterpart of the planner's analytic
+    /// [`kv_nic_utilization`](crate::scheduler::objective::kv_nic_utilization).
+    pub kv_max_nic_util: f64,
+    /// Per-transfer queue-wait histogram; bucket edges are
+    /// [`Ledger::HIST_EDGES_S`](crate::kvtransfer::Ledger::HIST_EDGES_S)
+    /// (<1 ms, <10 ms, <100 ms, <1 s, <10 s, ≥10 s).
+    pub kv_wait_hist: [usize; 6],
 }
 
 /// Aggregated simulation report.
@@ -64,6 +77,10 @@ pub struct SimReport {
     pub total_input_tokens: usize,
     /// Engine-level counters (memory pressure, rejections, link waits).
     pub stats: SimStats,
+    /// The KV transfer engine's per-route load ledger (empty for reports
+    /// built purely from records — windowed sub-reports, the live
+    /// coordinator — and for colocated runs, which move no KV).
+    pub link_loads: Vec<LinkLoad>,
 }
 
 impl SimReport {
@@ -79,6 +96,7 @@ impl SimReport {
             total_output_tokens,
             total_input_tokens,
             stats: SimStats::default(),
+            link_loads: Vec::new(),
         }
     }
 

@@ -28,12 +28,15 @@ pub mod metrics;
 pub use colocated::{run_colocated, run_colocated_cfg};
 // `self::` disambiguates the submodule from the `core` crate.
 pub use self::core::{
-    simulate, LinkModel, Outcome, PolicyEnv, PolicyKind, ReplicaPolicy, ServingSpec, SimConfig,
-    Sizing, SwitchSpec,
+    simulate, Outcome, PolicyEnv, PolicyKind, ReplicaPolicy, ServingSpec, SimConfig, Sizing,
+    SwitchSpec,
 };
 pub use disagg::{
     run_disaggregated, run_disaggregated_cfg, run_disaggregated_with_resched, PlacementSwitch,
 };
+// Link/route semantics are owned by the KV transfer subsystem (DESIGN.md
+// §11); re-exported here because the simulator config carries them.
+pub use crate::kvtransfer::{LinkModel, RouteModel};
 pub use metrics::{RequestRecord, SimReport, SimStats};
 
 use crate::cluster::GpuType;
