@@ -28,6 +28,8 @@ fn sim_config(spec: &DeploymentSpec) -> SimConfig {
         link: spec.link,
         kv_route: spec.kv_route,
         kv_chunk_layers: spec.kv_chunk_layers,
+        trace: spec.trace,
+        trace_sample_rate: spec.trace_sample,
         ..SimConfig::default()
     }
 }
@@ -90,7 +92,45 @@ impl Backend for ReschedBackend {
             return SimBackend.run(spec, plan, trace);
         };
         let base = spec.sched_opts();
-        let drive = rescheduler::drive(
+        let cfg = sim_config(spec);
+        // KV-contention sensing (monitor threshold finite): the live loop
+        // would feed the transfer engine's ledger into the monitor as
+        // transfers complete. The simulated loop gets the same signal by
+        // flight-recording one epoch on the incumbent placement and
+        // replaying its `KvEnqueue` (time, queue-wait) stream into
+        // `monitor::observe_kv` — so sustained fabric congestion fires
+        // `DriftKind::KvContention` and gets re-planned end to end. With
+        // the default infinite threshold the feed is empty and this path
+        // is byte-identical to the blind drive.
+        let kv_feed: Vec<(f64, f64)> = if self.monitor.kv_wait_threshold_s.is_finite() {
+            let mut tcfg = cfg;
+            tcfg.trace = true;
+            tcfg.trace_sample_rate = 1.0;
+            let pre = simulate(
+                &spec.cluster,
+                &spec.model,
+                &ServingSpec::Disaggregated(initial.clone()),
+                &[],
+                trace,
+                &tcfg,
+            );
+            pre.trace
+                .map(|log| {
+                    log.events
+                        .iter()
+                        .filter_map(|s| match s.ev {
+                            crate::telemetry::TraceEvent::KvEnqueue { wait_s, .. } => {
+                                Some((s.t, wait_s))
+                            }
+                            _ => None,
+                        })
+                        .collect()
+                })
+                .unwrap_or_default()
+        } else {
+            Vec::new()
+        };
+        let drive = rescheduler::drive_with_kv(
             &spec.cluster,
             &spec.model,
             initial,
@@ -98,17 +138,19 @@ impl Backend for ReschedBackend {
             self.monitor,
             &base,
             self.modeled_replan_s,
+            &kv_feed,
         );
-        let cfg = sim_config(spec);
         let switches: Vec<SwitchSpec> = drive.switches.iter().map(SwitchSpec::from).collect();
-        Ok(simulate(
+        let mut rep = simulate(
             &spec.cluster,
             &spec.model,
             &ServingSpec::Disaggregated(initial.clone()),
             &switches,
             trace,
             &cfg,
-        ))
+        );
+        rep.audit = drive.audit;
+        Ok(rep)
     }
 }
 

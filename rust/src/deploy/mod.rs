@@ -87,6 +87,19 @@ pub struct DeploymentSpec {
     /// Memoize whole partition evaluations during planning
     /// (`--no-eval-cache` turns it off — the perf harness's A/B baseline).
     pub use_eval_cache: bool,
+    /// Flight-recorder request tracing (`--trace`): the simulator records
+    /// per-request lifecycle events into [`SimReport::trace`] for the
+    /// Chrome-trace / Prometheus exporters (DESIGN.md §12). Off by default
+    /// — the hot loop is untouched when off.
+    pub trace: bool,
+    /// Fraction of requests whose spans are kept (`--trace-sample`);
+    /// engine/replica-scoped events are always kept. 1.0 = everything
+    /// (required for exact metric conservation).
+    pub trace_sample: f64,
+    /// Capture planner/rescheduler decision audit records (`--audit`):
+    /// per-candidate score breakdowns into [`Plan::audit`], drift/gate
+    /// records into [`SimReport::audit`] on the resched backend.
+    pub audit: bool,
 }
 
 impl DeploymentSpec {
@@ -109,6 +122,9 @@ impl DeploymentSpec {
             contention_aware: false,
             threads: 1,
             use_eval_cache: true,
+            trace: false,
+            trace_sample: 1.0,
+            audit: false,
         }
     }
 
@@ -187,6 +203,21 @@ impl DeploymentSpec {
         self
     }
 
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
+    pub fn trace_sample(mut self, rate: f64) -> Self {
+        self.trace_sample = rate.clamp(0.0, 1.0);
+        self
+    }
+
+    pub fn audit(mut self, on: bool) -> Self {
+        self.audit = on;
+        self
+    }
+
     /// The mean-lengths task profile the planners size capacities with.
     pub fn task(&self) -> TaskProfile {
         scheduler::task_for(self.workload)
@@ -215,6 +246,7 @@ impl DeploymentSpec {
         o.threads = self.threads.max(1);
         o.use_eval_cache = self.use_eval_cache;
         o.kv_contention = if self.contention_aware { Some(self.link) } else { None };
+        o.audit = self.audit;
         o
     }
 
@@ -377,6 +409,42 @@ impl Deployment {
             ("kv_bytes".to_string(), json::num(rep.stats.kv_bytes)),
             ("kv_max_nic_util".to_string(), json::num(rep.stats.kv_max_nic_util)),
         ];
+        // Flight-recorder extras (`--trace`): recording health plus a
+        // per-request span summary rebuilt purely from the event stream.
+        if let Some(log) = &rep.trace {
+            use crate::telemetry::TraceEvent;
+            use std::collections::BTreeMap;
+            let m = crate::telemetry::derive_metrics(log);
+            let mut req_kv_wait: BTreeMap<u32, f64> = BTreeMap::new();
+            let mut req_kv_bytes: BTreeMap<u32, f64> = BTreeMap::new();
+            for s in &log.events {
+                if let TraceEvent::KvEnqueue { req, bytes, wait_s, .. } = s.ev {
+                    *req_kv_wait.entry(req).or_insert(0.0) += wait_s;
+                    *req_kv_bytes.entry(req).or_insert(0.0) += bytes;
+                }
+            }
+            let spans: Vec<Json> = m
+                .latency
+                .iter()
+                .map(|(&req, &lat)| {
+                    json::obj(vec![
+                        ("req", json::num(req as f64)),
+                        ("ttft_s", json::num(m.ttft.get(&req).copied().unwrap_or(0.0))),
+                        ("latency_s", json::num(lat)),
+                        ("kv_wait_s", json::num(req_kv_wait.get(&req).copied().unwrap_or(0.0))),
+                        ("kv_bytes", json::num(req_kv_bytes.get(&req).copied().unwrap_or(0.0))),
+                    ])
+                })
+                .collect();
+            result.push(("trace_events".to_string(), json::num(log.events.len() as f64)));
+            result.push(("trace_dropped".to_string(), json::num(log.dropped as f64)));
+            result.push(("trace_sample_rate".to_string(), json::num(log.sample_rate)));
+            result.push(("request_spans".to_string(), json::arr(spans)));
+        }
+        let n_audit = self.plan.audit.len() + rep.audit.len();
+        if n_audit > 0 {
+            result.push(("audit_records".to_string(), json::num(n_audit as f64)));
+        }
         fields.append(&mut result);
         Json::Obj(fields.into_iter().collect())
     }

@@ -41,6 +41,9 @@ pub struct Plan {
     /// Search-effort counters (zeroed for baselines that don't run the
     /// evaluation pipeline through the cache).
     pub stats: SearchStats,
+    /// Per-candidate decision audit (`DeploymentSpec::audit`; empty when
+    /// off, and always empty for the baselines that bypass the EvalCache).
+    pub audit: Vec<crate::telemetry::AuditRecord>,
 }
 
 /// A deployment planner: turns a [`DeploymentSpec`] into a [`Plan`], or
@@ -76,6 +79,7 @@ impl Planner for HexGen2Planner {
             elapsed_s: r.elapsed_s,
             history: r.history,
             stats: r.stats,
+            audit: r.audit,
             kind: PlanKind::Disaggregated(r.placement),
         })
     }
@@ -103,6 +107,7 @@ impl Planner for GeneticPlanner {
             elapsed_s: r.elapsed_s,
             history: r.history,
             stats: r.stats,
+            audit: r.audit,
             kind: PlanKind::Disaggregated(r.placement),
         })
     }
@@ -142,6 +147,7 @@ impl Planner for HexGenPlanner {
             elapsed_s: p.elapsed_s,
             history: Vec::new(),
             stats: SearchStats::default(),
+            audit: Vec::new(),
             kind: PlanKind::Colocated { replicas: p.replicas, chunked_prefill: None },
         })
     }
@@ -175,6 +181,7 @@ impl Planner for DistServePlanner {
             elapsed_s: p.elapsed_s,
             history: Vec::new(),
             stats: SearchStats::default(),
+            audit: Vec::new(),
             kind: PlanKind::Disaggregated(p.placement),
         })
     }
@@ -205,6 +212,7 @@ impl Planner for VllmPlanner {
             elapsed_s: 0.0,
             history: Vec::new(),
             stats: SearchStats::default(),
+            audit: Vec::new(),
             kind: PlanKind::Colocated {
                 replicas: p.replicas,
                 chunked_prefill: spec.chunked_prefill,

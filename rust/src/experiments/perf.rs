@@ -229,7 +229,12 @@ pub fn bench_planner(quick: bool, threads: usize) -> Json {
 
 /// Run the simulator bench and return the `BENCH_sim.json` document: plan
 /// once per case, then time repeated discrete-event runs of the same trace
-/// (the post-allocation-sweep hot loop).
+/// (the post-allocation-sweep hot loop), once with the flight recorder off
+/// and once recording a full (sample rate 1.0) trace. The events/sec pair
+/// is the tracing-overhead signal CI's advisory gate reads: with tracing
+/// off the engine monomorphizes over `NoopSink`, so `events_per_s` must
+/// stay at the seed's level, and `trace_overhead_pct` quantifies what the
+/// recording sink costs when it *is* on.
 pub fn bench_sim(quick: bool) -> Json {
     let n_requests = if quick { 200 } else { 1000 };
     let samples = if quick { 3 } else { 10 };
@@ -238,26 +243,44 @@ pub fn bench_sim(quick: bool) -> Json {
         let cluster = settings::by_name(setting).expect("bench setting exists");
         let spec = DeploymentSpec::new(cluster, model).workload(kind).quick(true).seed(7);
         let Ok(dep) = spec.plan(&HexGen2Planner) else { continue };
+        // Same plan, tracing on: only the sink differs between the loops.
+        let traced = crate::deploy::Deployment {
+            spec: dep.spec.clone().trace(true).trace_sample(1.0),
+            plan: dep.plan.clone(),
+        };
         let trace = Trace::offline(kind, n_requests, 7);
         // Warm once (also provides the report the throughput fields quote).
         let rep = dep.run(&SimBackend, &trace).expect("simulates");
-        let mut walls = Vec::with_capacity(samples);
-        for _ in 0..samples {
-            let t0 = Instant::now();
-            let r = dep.run(&SimBackend, &trace).expect("simulates");
-            std::hint::black_box(r.records.len());
-            walls.push(t0.elapsed().as_secs_f64());
-        }
-        walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let time_runs = |d: &crate::deploy::Deployment| -> Vec<f64> {
+            let mut walls = Vec::with_capacity(samples);
+            for _ in 0..samples {
+                let t0 = Instant::now();
+                let r = d.run(&SimBackend, &trace).expect("simulates");
+                std::hint::black_box(r.records.len());
+                walls.push(t0.elapsed().as_secs_f64());
+            }
+            walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            walls
+        };
+        let walls = time_runs(&dep);
+        let walls_traced = time_runs(&traced);
         let mean = walls.iter().sum::<f64>() / walls.len() as f64;
         let p50 = walls[walls.len() / 2];
+        let mean_traced = walls_traced.iter().sum::<f64>() / walls_traced.len() as f64;
+        let events = rep.stats.events;
+        let events_per_s = events as f64 / mean.max(1e-12);
+        let events_per_s_traced = events as f64 / mean_traced.max(1e-12);
+        let overhead_pct = if mean > 0.0 { (mean_traced / mean - 1.0) * 100.0 } else { 0.0 };
         println!(
-            "bench sim/{setting}/{}/{}: {} requests in {:.4}s mean ({:.0} req/s), {:.0} tokens/s served",
+            "bench sim/{setting}/{}/{}: {} requests in {:.4}s mean ({:.0} req/s), \
+             {:.0} events/s off vs {:.0} on ({overhead_pct:+.1}% tracing), {:.0} tokens/s served",
             model.name,
             kind.name(),
             rep.records.len(),
             mean,
             n_requests as f64 / mean.max(1e-12),
+            events_per_s,
+            events_per_s_traced,
             rep.tokens_per_s(),
         );
         cases.push(json::obj(vec![
@@ -269,7 +292,12 @@ pub fn bench_sim(quick: bool) -> Json {
             ("unserved", json::num(rep.stats.unserved as f64)),
             ("wall_s_mean", json::num(mean)),
             ("wall_s_p50", json::num(p50)),
+            ("wall_s_mean_traced", json::num(mean_traced)),
             ("reqs_per_s", json::num(n_requests as f64 / mean.max(1e-12))),
+            ("events", json::num(events as f64)),
+            ("events_per_s", json::num(events_per_s)),
+            ("events_per_s_traced", json::num(events_per_s_traced)),
+            ("trace_overhead_pct", json::num(overhead_pct)),
             ("sim_tokens_per_s", json::num(rep.tokens_per_s())),
         ]));
     }

@@ -192,6 +192,11 @@ impl Ledger {
 pub struct Transfer {
     /// Chosen destination (decode replica index).
     pub dst: usize,
+    /// When transmission occupies the link (start of the reserved window;
+    /// under pipelined chunking this may precede the enqueue time by the
+    /// overlap credit). `done - start` is the transmission itself — the
+    /// flight recorder's per-chunk span source.
+    pub start: f64,
     /// Arrival time of the (last chunk of the) cache.
     pub done: f64,
     /// Queueing delay beyond the contention-free transfer.
@@ -305,7 +310,7 @@ impl TransferScheduler {
         let key = self.key(src, dst);
         let raw_free = self.link_free.get(&key).copied().unwrap_or(0.0);
         let chunks = self.cfg.chunks();
-        let (done, wait_s) = if chunks > 1 {
+        let (start, done, wait_s) = if chunks > 1 {
             // Pipelined: the first (chunks-1) chunks may ship while the
             // prefill still runs, so the effective enqueue time moves back
             // by the overlap credit. The credit cap already guarantees the
@@ -316,16 +321,16 @@ impl TransferScheduler {
             let start = raw_free.max(eff);
             let done = start + xfer;
             debug_assert!(done >= now + xfer / chunks as f64 - 1e-12);
-            (done, done - (eff + xfer))
+            (start, done, done - (eff + xfer))
         } else {
             // Whole-cache: exactly the legacy reservation arithmetic.
             let free = raw_free.max(now);
-            (free + xfer, free - now)
+            (free, free + xfer, free - now)
         };
         self.link_free.insert(key, done);
         *self.inflight.entry(key).or_default() += 1;
         self.ledger.record(src, dst, bytes, xfer, wait_s);
-        Transfer { dst, done, wait_s }
+        Transfer { dst, start, done, wait_s }
     }
 
     /// A transfer previously enqueued on (src → dst) completed.

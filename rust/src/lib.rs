@@ -39,4 +39,5 @@ pub mod util;
 pub mod runtime;
 pub mod scheduler;
 pub mod simulator;
+pub mod telemetry;
 pub mod workload;

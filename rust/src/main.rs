@@ -18,6 +18,7 @@ use hexgen2::experiments::{self, ExpOpts};
 use hexgen2::model::LlmSpec;
 use hexgen2::scheduler::SwapMode;
 use hexgen2::simulator::SimReport;
+use hexgen2::telemetry;
 use hexgen2::util::args::Args;
 use hexgen2::util::json;
 use hexgen2::util::rng::Rng;
@@ -116,6 +117,22 @@ fn spec_of(args: &Args) -> Result<DeploymentSpec> {
         spec = spec.kv_chunk_layers(Some(layers));
     }
     spec = spec.contention_aware(args.has("contention-aware"));
+    // Flight recorder (DESIGN.md §12): --trace FILE / --prom FILE enable
+    // event recording; --audit FILE enables planner decision capture.
+    if args.get("trace").is_some() || args.get("prom").is_some() {
+        spec = spec.trace(true);
+    }
+    if let Some(r) = args.get("trace-sample") {
+        let rate: f64 = r
+            .parse()
+            .ok()
+            .filter(|x: &f64| (0.0..=1.0).contains(x))
+            .ok_or_else(|| anyhow!("--trace-sample needs a rate in [0, 1], got {r}"))?;
+        spec = spec.trace_sample(rate);
+    }
+    if args.get("audit").is_some() {
+        spec = spec.audit(true);
+    }
     if let Some(r) = args.get("rounds").and_then(|s| s.parse().ok()) {
         spec = spec.max_rounds(r);
     }
@@ -186,6 +203,14 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let mut spec = spec_of(args)?;
             let planner = planner_of(args, &mut spec)?;
             let dep = spec.plan(planner)?;
+            if let Some(path) = args.get("audit") {
+                let mut body = telemetry::audit_json(&dep.plan.audit).to_string_pretty();
+                body.push('\n');
+                std::fs::write(path, body).map_err(|e| anyhow!("writing {path}: {e}"))?;
+                if !args.has("json") {
+                    println!("wrote {} audit records to {path}", dep.plan.audit.len());
+                }
+            }
             if args.has("json") {
                 println!("{}", dep.plan_json().to_string_pretty());
                 return Ok(());
@@ -281,6 +306,43 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             } else {
                 dep.run(&SimBackend, &trace)?
             };
+            // Flight-recorder exports (DESIGN.md §12).
+            if let Some(path) = args.get("trace") {
+                let log = rep
+                    .trace
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("--trace requested but the run produced no trace"))?;
+                let mut body = telemetry::chrome_trace(log).to_string_pretty();
+                body.push('\n');
+                std::fs::write(path, body).map_err(|e| anyhow!("writing {path}: {e}"))?;
+                if !json_out {
+                    println!(
+                        "wrote {} trace events to {path} (Perfetto: ui.perfetto.dev)",
+                        log.events.len()
+                    );
+                }
+            }
+            if let Some(path) = args.get("prom") {
+                let log = rep
+                    .trace
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("--prom requested but the run produced no trace"))?;
+                let body = telemetry::prometheus_dump(log, args.get_f64("prom-window", 60.0));
+                std::fs::write(path, body).map_err(|e| anyhow!("writing {path}: {e}"))?;
+                if !json_out {
+                    println!("wrote Prometheus text dump to {path}");
+                }
+            }
+            if let Some(path) = args.get("audit") {
+                let mut records = dep.plan.audit.clone();
+                records.extend(rep.audit.iter().cloned());
+                let mut body = telemetry::audit_json(&records).to_string_pretty();
+                body.push('\n');
+                std::fs::write(path, body).map_err(|e| anyhow!("writing {path}: {e}"))?;
+                if !json_out {
+                    println!("wrote {} audit records to {path}", records.len());
+                }
+            }
             if json_out {
                 println!("{}", dep.report_json(&rep).to_string_pretty());
             } else {
@@ -409,7 +471,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  commands:\n\
                  \x20 schedule    --setting het1 --model llama2-70b --workload online [--planner P]\n\
                  \x20             [--objective O] [--no-refine] [--rounds N] [--threads N]\n\
-                 \x20             [--no-eval-cache] [--json] [--verbose]\n\
+                 \x20             [--no-eval-cache] [--audit FILE] [--json] [--verbose]\n\
                  \x20             plan only: print the placement (Table-2 style) or a JSON report.\n\
                  \x20             --threads fans candidate evaluation over worker threads (plans are\n\
                  \x20             bit-identical to sequential); --no-eval-cache disables evaluation\n\
@@ -428,7 +490,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             [--requests N] [--resched] [--json] [--chunked-prefill TOKENS]\n\
                  \x20             [--admission static|per-request] [--link per-route|shared-nic]\n\
                  \x20             [--kv-route flow|least-loaded|eta-greedy] [--kv-chunk-layers N]\n\
-                 \x20             [--contention-aware]\n\
+                 \x20             [--contention-aware] [--trace FILE] [--trace-sample RATE]\n\
+                 \x20             [--audit FILE] [--prom FILE] [--prom-window SECONDS]\n\
                  \x20             plan + run on the unified discrete-event simulator (--resched enables the\n\
                  \x20             online rescheduling loop mid-trace; --chunked-prefill chunks prompts on\n\
                  \x20             both colocated and disaggregated prefill replicas; per-request admission\n\
@@ -444,6 +507,15 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             candidate placements under predicted NIC load for the chosen --link\n\
                  \x20             (also applies to `schedule`). The --json report carries the transfer\n\
                  \x20             ledger (kv_transfers, kv_bytes, kv_max_nic_util, kv_link_wait_s).\n\
+                 \x20             Flight recorder (DESIGN.md \u{a7}12): --trace FILE writes a Chrome\n\
+                 \x20             trace-event JSON of every request's lifecycle (open in\n\
+                 \x20             ui.perfetto.dev — one lane per replica + per KV link);\n\
+                 \x20             --trace-sample R keeps a deterministic R fraction of requests;\n\
+                 \x20             --audit FILE writes the planner/rescheduler decision audit (per-\n\
+                 \x20             candidate score breakdowns, drift events, migration-gate pricing);\n\
+                 \x20             --prom FILE writes Prometheus-style windowed counters\n\
+                 \x20             (--prom-window seconds per window, default 60). With tracing on,\n\
+                 \x20             the --json report gains per-request span summaries.\n\
                  \x20 serve       --model tiny --requests 16 --prefill 2 --decode 1 [--throttle-mbps N] [--verbose]\n\
                  \x20 workload    --workload hpld --n 10   (classes: HPLD|HPHD|LPHD|LPLD|online|heavy_tail)\n\
                  \x20 bench       planner|sim [--full] [--threads N]\n\

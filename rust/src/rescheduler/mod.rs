@@ -38,6 +38,7 @@ use crate::cluster::Cluster;
 use crate::model::LlmSpec;
 use crate::scheduler::{self, Placement, ScheduleOptions, ScheduleResult};
 use crate::simulator::PlacementSwitch;
+use crate::telemetry::AuditRecord;
 use crate::workload::{Trace, WorkloadKind};
 
 /// Modeled online re-planning budget, simulated seconds: an approved switch
@@ -86,6 +87,10 @@ pub struct ReplanOutcome {
     pub to_kind: WorkloadKind,
     pub result: ScheduleResult,
     pub migration: MigrationPlan,
+    /// The incumbent's predicted NIC busy fraction the migration was priced
+    /// under (0.0 when contention-aware planning is off) — recorded so the
+    /// decision audit can show *why* the transfer was priced as it was.
+    pub nic_util: f64,
 }
 
 /// React to a drift event: warm-start a re-plan for the observed workload
@@ -136,7 +141,7 @@ pub fn replan_for_drift_with_cache(
         opts.objective,
         nic_util,
     );
-    Some(ReplanOutcome { to_kind, result, migration })
+    Some(ReplanOutcome { to_kind, result, migration, nic_util })
 }
 
 /// Everything one closed-loop pass over a trace produced: the drift events
@@ -148,6 +153,12 @@ pub struct DriveOutcome {
     /// One entry per event: `None` when the warm re-plan found no placement.
     pub outcomes: Vec<Option<ReplanOutcome>>,
     pub switches: Vec<PlacementSwitch>,
+    /// Flight-recorder decision audit of the whole closed loop, in decision
+    /// order: for each drift, a [`AuditRecord::Drift`] record, the re-plan's
+    /// per-candidate records (when `base.audit` is on), the priced
+    /// [`AuditRecord::MigrationGate`] verdict, and the
+    /// [`AuditRecord::Replan`] summary (`--audit`; DESIGN.md §12).
+    pub audit: Vec<AuditRecord>,
 }
 
 /// Run the full §3.3 online loop over a trace's arrival stream: sense every
@@ -165,11 +176,35 @@ pub fn drive(
     base: &ScheduleOptions,
     modeled_replan_s: f64,
 ) -> DriveOutcome {
+    drive_with_kv(cluster, model, initial, trace, mcfg, base, modeled_replan_s, &[])
+}
+
+/// [`drive`] with a KV-congestion feed: `kv_feed` is a time-ordered list of
+/// `(t, wait_s)` per-transfer queue waits — typically the previous epoch's
+/// transfer-engine ledger, replayed from a flight-recorder trace's
+/// `KvEnqueue` events ([`deploy::ReschedBackend`](crate::deploy)). Entries
+/// are streamed into [`Rescheduler::observe_kv`] in arrival order so, with
+/// [`MonitorConfig::kv_wait_threshold_s`] finite, sustained fabric
+/// congestion fires [`DriftKind::KvContention`] and gets a (preferably
+/// contention-aware) re-plan even when the request mix is steady. An empty
+/// feed is exactly [`drive`].
+#[allow(clippy::too_many_arguments)]
+pub fn drive_with_kv(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    initial: &Placement,
+    trace: &Trace,
+    mcfg: MonitorConfig,
+    base: &ScheduleOptions,
+    modeled_replan_s: f64,
+    kv_feed: &[(f64, f64)],
+) -> DriveOutcome {
     let mut sensor = Rescheduler::new(mcfg);
     let mut incumbent = initial.clone();
     let mut events = Vec::new();
     let mut outcomes = Vec::new();
     let mut switches: Vec<PlacementSwitch> = Vec::new();
+    let mut audit: Vec<AuditRecord> = Vec::new();
     // One evaluation cache for the whole closed loop: every re-plan seeds
     // from some recent incumbent and oscillating traffic revisits earlier
     // workloads, so most re-plan evaluations are repeats of work already
@@ -180,11 +215,49 @@ pub fn drive(
     } else {
         scheduler::EvalCache::disabled()
     };
+    // Two-pointer merge: all KV observations up to each arrival are fed
+    // before the request itself (both streams are time-ordered).
+    let mut kv_i = 0usize;
     for r in &trace.requests {
+        while kv_i < kv_feed.len() && kv_feed[kv_i].0 <= r.arrival {
+            let (t, w) = kv_feed[kv_i];
+            sensor.observe_kv(t, w);
+            kv_i += 1;
+        }
         let Some(e) = sensor.observe(r.arrival, r.input_len, r.output_len) else { continue };
         events.push(e);
+        audit.push(AuditRecord::Drift {
+            at: e.at,
+            kind: match e.kind {
+                DriftKind::Workload { .. } => "workload".to_string(),
+                DriftKind::Rate { .. } => "rate".to_string(),
+                DriftKind::KvContention { .. } => "kv".to_string(),
+            },
+            rate: e.stats.rate,
+            mean_input: e.stats.mean_input,
+            mean_output: e.stats.mean_output,
+            n: e.stats.n as u32,
+            mean_kv_wait_s: e.stats.mean_kv_wait_s,
+        });
         let out = replan_for_drift_with_cache(cluster, model, &incumbent, &e, base, &cache);
         if let Some(o) = &out {
+            audit.extend(o.result.audit.iter().cloned());
+            audit.push(AuditRecord::MigrationGate {
+                at: e.at,
+                nic_util: o.nic_util,
+                drain_s: o.migration.drain_s,
+                kv_bytes: o.migration.kv_bytes,
+                transfer_s: o.migration.transfer_s,
+                total_delay_s: o.migration.total_delay_s,
+                tokens_lost: o.migration.tokens_lost,
+                gain_tokens: o.migration.gain_tokens,
+                accepted: o.migration.migrate,
+            });
+            audit.push(AuditRecord::Replan {
+                at: e.at,
+                to: format!("{:?}", o.to_kind),
+                accepted: o.migration.migrate,
+            });
             if o.migration.migrate {
                 // The switch lands after the modeled re-planning budget, and
                 // never before the previous switch has fully activated (the
@@ -199,10 +272,16 @@ pub fn drive(
                     workload: Some(o.to_kind),
                 });
             }
+        } else {
+            audit.push(AuditRecord::Replan {
+                at: e.at,
+                to: format!("{:?}", e.stats.effective_kind()),
+                accepted: false,
+            });
         }
         outcomes.push(out);
     }
-    DriveOutcome { events, outcomes, switches }
+    DriveOutcome { events, outcomes, switches, audit }
 }
 
 #[cfg(test)]

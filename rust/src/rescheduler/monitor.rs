@@ -64,8 +64,11 @@ impl MonitorConfig {
     /// rescheduler tests: a 20 s window reacts within a phase, 15 samples
     /// guard cold start, and the 10 s dwell + 60% rate band provide the
     /// no-thrash hysteresis. One definition so harnesses and backends can
-    /// never silently diverge. KV-contention sensing stays disabled here —
-    /// the trace-driven case studies have no live ledger feed.
+    /// never silently diverge. KV-contention sensing stays disabled here by
+    /// default; backends that replay a simulated epoch's ledger into
+    /// [`observe_kv`](WorkloadMonitor::observe_kv) (the flight-recorder
+    /// feed in [`deploy::ReschedBackend`](crate::deploy)) opt in by setting
+    /// [`kv_wait_threshold_s`](MonitorConfig::kv_wait_threshold_s) finite.
     pub fn case_study() -> MonitorConfig {
         MonitorConfig {
             window: 20.0,

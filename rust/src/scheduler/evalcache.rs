@@ -23,15 +23,16 @@
 //!   workers.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::cluster::{Cluster, DeviceId};
 use crate::costmodel::TaskProfile;
 use crate::kvtransfer::LinkModel;
 use crate::model::LlmSpec;
+use crate::telemetry::audit::{signature_hash, AuditRecord};
 
-use super::objective::Objective;
+use super::objective::{kv_nic_utilization, Objective};
 use super::strategy::StrategyCache;
 use super::Placement;
 
@@ -131,6 +132,14 @@ pub struct EvalCache {
     enabled: bool,
     /// Content fingerprint of the (cluster, model) the entries belong to.
     owner: Mutex<Option<u64>>,
+    /// Decision-audit capture (`ScheduleOptions::audit`): one
+    /// [`AuditRecord::Candidate`] per `evaluate` call, hit or miss. Off by
+    /// default — the hot path only pays a relaxed atomic load. Under
+    /// parallel proposal evaluation the record *order* is
+    /// thread-interleaved (the scores themselves stay deterministic), so
+    /// audit files are for reading, not byte-diffing.
+    audit_on: AtomicBool,
+    audit: Mutex<Vec<AuditRecord>>,
 }
 
 impl Default for EvalCache {
@@ -148,6 +157,8 @@ impl EvalCache {
             misses: AtomicUsize::new(0),
             enabled: true,
             owner: Mutex::new(None),
+            audit_on: AtomicBool::new(false),
+            audit: Mutex::new(Vec::new()),
         }
     }
 
@@ -163,6 +174,59 @@ impl EvalCache {
 
     pub fn is_enabled(&self) -> bool {
         self.enabled
+    }
+
+    /// Start capturing one [`AuditRecord::Candidate`] per evaluation
+    /// (`ScheduleOptions::audit` / `--audit`; DESIGN.md §12).
+    pub fn enable_audit(&self) {
+        self.audit_on.store(true, Ordering::Relaxed);
+    }
+
+    /// Drain the captured candidate records (capture keeps running).
+    pub fn take_audit(&self) -> Vec<AuditRecord> {
+        std::mem::take(&mut *self.audit.lock().unwrap())
+    }
+
+    /// One candidate record: signature hash, score breakdown (final vs
+    /// pre-discount, recovered by inverting `apply_kv_contention`'s
+    /// piecewise map), analytic NIC utilization, and whether the memo
+    /// served it.
+    fn push_audit(
+        &self,
+        sig: &[usize],
+        groups: usize,
+        v: &Option<Placement>,
+        kv_contention: Option<LinkModel>,
+        cache_hit: bool,
+    ) {
+        let (score, raw_score, nic_util) = match v {
+            Some(p) => {
+                let util = kv_contention.map(|l| kv_nic_utilization(p, l)).unwrap_or(0.0);
+                let s = p.objective_score;
+                // Inverse of apply_kv_contention: recover the
+                // pre-discount score from the discounted one.
+                let raw = if util <= 1.0 {
+                    s
+                } else if s >= 0.0 {
+                    s * util
+                } else {
+                    s / util
+                };
+                (s, raw, util)
+            }
+            // Infeasible candidates carry no score; 0.0 keeps the JSON
+            // finite — `feasible: false` is the signal.
+            None => (0.0, 0.0, 0.0),
+        };
+        self.audit.lock().unwrap().push(AuditRecord::Candidate {
+            sig: signature_hash(sig),
+            groups: groups as u32,
+            score,
+            raw_score,
+            nic_util,
+            cache_hit,
+            feasible: v.is_some(),
+        });
     }
 
     /// The shared per-group strategy cache (the inner memo layer).
@@ -206,10 +270,15 @@ impl EvalCache {
             n_type_candidates,
             contention: contention_bits(kv_contention),
         };
+        let audit_on = self.audit_on.load(Ordering::Relaxed);
         if self.enabled {
-            if let Some(v) = self.map.lock().unwrap().get(&key) {
+            let hit = self.map.lock().unwrap().get(&key).cloned();
+            if let Some(v) = hit {
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                return v.clone();
+                if audit_on {
+                    self.push_audit(&key.sig, groups.len(), &v, kv_contention, true);
+                }
+                return v;
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -224,6 +293,9 @@ impl EvalCache {
             kv_contention,
             &self.strategy,
         );
+        if audit_on {
+            self.push_audit(&key.sig, groups.len(), &v, kv_contention, false);
+        }
         if self.enabled {
             self.map.lock().unwrap().insert(key, v.clone());
         }
@@ -350,6 +422,39 @@ mod tests {
         let _ = cache.evaluate(&c, &LLAMA2_70B, &task, 600.0, &g, 8, Objective::Throughput, None);
         assert_eq!(cache.counters().hits, 0, "stale cross-model hit");
         assert_eq!(cache.counters().misses, 2);
+    }
+
+    #[test]
+    fn audit_records_hits_and_misses() {
+        let c = settings::case_study();
+        let task = task_for(WorkloadKind::Lphd);
+        let cache = EvalCache::new();
+        let g = groups();
+        // Off by default: no records.
+        let _ = cache.evaluate(&c, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput, None);
+        assert!(cache.take_audit().is_empty());
+        cache.enable_audit();
+        let v = cache.evaluate(&c, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput, None);
+        let _ = cache.evaluate(&c, &OPT_30B, &task, 600.0, &g, 8, Objective::Throughput, None);
+        let audit = cache.take_audit();
+        assert_eq!(audit.len(), 2);
+        let hits: Vec<bool> = audit
+            .iter()
+            .map(|r| match r {
+                AuditRecord::Candidate { cache_hit, .. } => *cache_hit,
+                other => panic!("unexpected record {other:?}"),
+            })
+            .collect();
+        assert_eq!(hits, vec![true, true], "pre-audit entry should be served from the memo");
+        if let AuditRecord::Candidate { score, raw_score, nic_util, feasible, .. } = &audit[0] {
+            assert!(*feasible);
+            assert_eq!(*score, v.as_ref().unwrap().objective_score);
+            // No contention term: no discount.
+            assert_eq!(*score, *raw_score);
+            assert_eq!(*nic_util, 0.0);
+        }
+        // Drained: a second take returns nothing new until more evals run.
+        assert!(cache.take_audit().is_empty());
     }
 
     #[test]

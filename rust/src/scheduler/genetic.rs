@@ -100,6 +100,9 @@ pub fn schedule_genetic_with_cache(
     cache: &EvalCache,
 ) -> Option<ScheduleResult> {
     let t0 = Instant::now();
+    if opts.audit {
+        cache.enable_audit();
+    }
     let c0 = cache.counters();
     let task = task_for(opts.workload);
     let k = opts.force_k.unwrap_or_else(|| super::choose_k(cluster, model, &task));
@@ -193,6 +196,7 @@ pub fn schedule_genetic_with_cache(
         rounds,
         elapsed_s: t0.elapsed().as_secs_f64(),
         stats,
+        audit: cache.take_audit(),
     })
 }
 

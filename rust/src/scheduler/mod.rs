@@ -89,6 +89,12 @@ pub struct ScheduleOptions {
     /// change plans — and only on placements whose shared NICs would be
     /// overcommitted.
     pub kv_contention: Option<LinkModel>,
+    /// Capture one [`AuditRecord`](crate::telemetry::AuditRecord) per
+    /// candidate evaluation (partition signature, score breakdown,
+    /// KV-contention discount, cache hit/miss) into
+    /// [`ScheduleResult::audit`] — the planner half of the flight
+    /// recorder's decision audit (`--audit`; DESIGN.md §12).
+    pub audit: bool,
 }
 
 impl ScheduleOptions {
@@ -108,6 +114,7 @@ impl ScheduleOptions {
             threads: 1,
             use_eval_cache: true,
             kv_contention: None,
+            audit: false,
         }
     }
 }
@@ -190,6 +197,10 @@ pub struct ScheduleResult {
     pub elapsed_s: f64,
     /// Evaluation-effort counters for this run (deltas, not cache totals).
     pub stats: SearchStats,
+    /// Per-candidate decision audit ([`ScheduleOptions::audit`]); empty
+    /// when capture is off. Record order is thread-interleaved under
+    /// parallel evaluation — read it, don't byte-diff it.
+    pub audit: Vec<crate::telemetry::AuditRecord>,
 }
 
 /// Appendix A: memory needed by one model replica = parameters + 32
@@ -527,6 +538,11 @@ pub fn schedule_with_cache(
     cache: &EvalCache,
 ) -> Option<ScheduleResult> {
     let t0 = Instant::now();
+    if opts.audit {
+        // Sticky on a shared cache; per-run records are drained into
+        // `ScheduleResult::audit` either way.
+        cache.enable_audit();
+    }
     let c0 = cache.counters();
     let task = task_for(opts.workload);
     let k = opts.force_k.unwrap_or_else(|| choose_k(cluster, model, &task));
@@ -615,6 +631,7 @@ pub fn schedule_with_cache(
             rounds: 0,
             elapsed_s: t0.elapsed().as_secs_f64(),
             stats,
+            audit: cache.take_audit(),
         });
     }
 
@@ -691,6 +708,7 @@ pub fn schedule_with_cache(
         rounds,
         elapsed_s: t0.elapsed().as_secs_f64(),
         stats,
+        audit: cache.take_audit(),
     })
 }
 

@@ -52,6 +52,7 @@ use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile, MAX_DECODE_BATCH};
 use crate::kvtransfer::{LinkModel, RouteModel, TransferConfig, TransferScheduler};
 use crate::model::LlmSpec;
 use crate::scheduler::Placement;
+use crate::telemetry::{Lane, NoopSink, Recorder, TraceEvent, TraceSink};
 use crate::workload::{Request, Trace, WorkloadKind};
 
 use super::events::EventQueue;
@@ -83,7 +84,7 @@ pub enum Sizing {
 /// Knobs of one simulation run. `Default` reproduces the pre-refactor
 /// engines' behaviour except that the static prefill-batch cap is derived
 /// from device memory instead of the old hardcoded `1..=16` scan.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct SimConfig {
     pub sizing: Sizing,
     /// SARATHI-style chunked prefill for **disaggregated** prefill replicas
@@ -105,6 +106,32 @@ pub struct SimConfig {
     /// parity suite pins this to 16 — the pre-refactor magic constant — to
     /// isolate the engine refactor from that deliberate sizing fix.
     pub static_prefill_cap: Option<usize>,
+    /// Record a flight-recorder trace (DESIGN.md §12). Off by default: the
+    /// engine then runs with the [`NoopSink`] instantiation and every
+    /// emission site compiles away — the PR-4 allocation-free hot path is
+    /// untouched.
+    pub trace: bool,
+    /// Fraction of requests whose lifecycle events are kept (deterministic
+    /// per-request hash; replica/engine-scoped events are always kept).
+    pub trace_sample_rate: f64,
+    /// Ring-buffer capacity of the recorder, in events.
+    pub trace_buffer: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig {
+            sizing: Sizing::default(),
+            chunked_prefill: None,
+            link: LinkModel::default(),
+            kv_route: RouteModel::default(),
+            kv_chunk_layers: None,
+            static_prefill_cap: None,
+            trace: false,
+            trace_sample_rate: 1.0,
+            trace_buffer: 1 << 20,
+        }
+    }
 }
 
 /// What to instantiate when a serving epoch starts: a disaggregated
@@ -140,6 +167,35 @@ pub struct PolicyEnv<'a, 'b> {
     pub reqs: &'a [Request],
     pub sim: &'a SimConfig,
     pub stats: &'a mut SimStats,
+    /// Current event time.
+    pub now: f64,
+    /// Arena index of the replica being driven.
+    pub replica: usize,
+    /// Flight recorder, `None` when tracing is off. A plain `Option`
+    /// rather than a generic sink because policies live behind
+    /// `dyn ReplicaPolicy`; with tracing off this is a constant `None`
+    /// (the engine instantiates [`NoopSink`]), so [`PolicyEnv::emit`]
+    /// reduces to one predictable branch.
+    pub trace: Option<&'a mut Recorder>,
+}
+
+impl PolicyEnv<'_, '_> {
+    /// Record `ev` at the current event time (no-op when tracing is off).
+    #[inline]
+    pub fn emit(&mut self, ev: TraceEvent) {
+        if let Some(rec) = self.trace.as_deref_mut() {
+            rec.emit(self.now, ev);
+        }
+    }
+
+    /// Count (and trace) one memory-pressure admission stall on the
+    /// replica being driven.
+    #[inline]
+    pub fn mem_stall(&mut self) {
+        self.stats.mem_stalls += 1;
+        let replica = self.replica as u32;
+        self.emit(TraceEvent::MemStall { replica });
+    }
 }
 
 /// What a completed service burst did to each affected request.
@@ -289,7 +345,7 @@ fn admit_chunked(
         }
         let fp = footprint(&env.reqs[r]);
         if !ledger.fits(fp) {
-            env.stats.mem_stalls += 1;
+            env.mem_stall();
             break;
         }
         queue.pop_front();
@@ -301,7 +357,7 @@ fn admit_chunked(
 /// Shared per-iteration chunk work: process up to `per_req` tokens of each
 /// in-flight prompt within the shared budget. Returns (tokens processed,
 /// prompts touched).
-fn chunk_work(inflight: &mut [PendingPrefill], per_req: usize) -> (f64, usize) {
+fn chunk_work(inflight: &mut [PendingPrefill], per_req: usize, env: &mut PolicyEnv) -> (f64, usize) {
     let mut tokens = 0.0;
     let mut worked = 0usize;
     for p in inflight.iter_mut() {
@@ -311,6 +367,14 @@ fn chunk_work(inflight: &mut [PendingPrefill], per_req: usize) -> (f64, usize) {
         let work = p.remaining.min(per_req);
         if work == 0 {
             continue;
+        }
+        if env.trace.is_some() {
+            // Chunk index of this iteration's work (0 for the first chunk;
+            // whole-prompt mode is a single chunk 0).
+            let total = env.reqs[p.req].input_len;
+            let chunk = ((total - p.remaining) / per_req.max(1)) as u32;
+            let replica = env.replica as u32;
+            env.emit(TraceEvent::PrefillChunk { req: p.req as u32, replica, chunk });
         }
         tokens += work as f64;
         p.remaining -= work;
@@ -384,7 +448,7 @@ impl ReplicaPolicy for DisaggPrefill {
                         break;
                     }
                     if !self.ledger.fits(len as f64) {
-                        env.stats.mem_stalls += 1;
+                        env.mem_stall();
                         break;
                     }
                     self.queue.pop_front();
@@ -418,7 +482,7 @@ impl ReplicaPolicy for DisaggPrefill {
                     env,
                     |r| r.input_len as f64,
                 );
-                let (tokens, worked) = chunk_work(&mut self.chunks, c);
+                let (tokens, worked) = chunk_work(&mut self.chunks, c, env);
                 if worked == 0 {
                     return None;
                 }
@@ -512,11 +576,12 @@ impl ReplicaPolicy for DisaggDecode {
             let Some(&r) = self.waiting.front() else { break };
             let tok = gen_footprint(&env.reqs[r]);
             if !self.ledger.fits(tok) {
-                env.stats.mem_stalls += 1;
+                env.mem_stall();
                 break;
             }
             self.waiting.pop_front();
             self.ledger.reserve(tok);
+            env.emit(TraceEvent::DecodeJoin { req: r as u32, replica: env.replica as u32 });
             self.running.push(Running { req: r, generated: 0 });
         }
         if self.running.is_empty() {
@@ -631,7 +696,7 @@ impl ReplicaPolicy for Colocated {
         }
         // Prefill work this iteration: chunks (or whole remainders) within
         // the shared iteration budget.
-        let (pf_tokens, pf_reqs) = chunk_work(&mut self.inflight, per_req);
+        let (pf_tokens, pf_reqs) = chunk_work(&mut self.inflight, per_req, env);
         let avg_ctx = if self.running.is_empty() {
             0.0
         } else {
@@ -706,6 +771,7 @@ impl ReplicaPolicy for Colocated {
                 out.push(Outcome::Finished(r));
                 freed += gen_footprint(&reqs[r]);
             } else {
+                env.emit(TraceEvent::DecodeJoin { req: r as u32, replica: env.replica as u32 });
                 self.running.push(Running { req: r, generated: 1 });
             }
         }
@@ -745,6 +811,16 @@ enum Ev {
     Activate(usize),
 }
 
+/// Telemetry lane of a policy kind (the trace module is
+/// simulator-independent, hence the mirror type).
+fn lane_of(kind: PolicyKind) -> Lane {
+    match kind {
+        PolicyKind::Prefill => Lane::Prefill,
+        PolicyKind::Decode => Lane::Decode,
+        PolicyKind::Colocated => Lane::Colocated,
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Router {
     /// Deficit-weighted by max-flow route weight (disaggregated entry).
@@ -753,7 +829,7 @@ enum Router {
     LeastLoaded,
 }
 
-struct Engine<'a> {
+struct Engine<'a, S: TraceSink> {
     cm: CostModel<'a>,
     reqs: &'a [Request],
     sim: &'a SimConfig,
@@ -795,15 +871,32 @@ struct Engine<'a> {
     /// NIC utilization is normalized by).
     t_end: f64,
     stats: SimStats,
+    /// Flight recorder (DESIGN.md §12). Monomorphized: with [`NoopSink`]
+    /// every `emit` call and `recorder().is_some()` gate folds away.
+    sink: &'a mut S,
 }
 
 macro_rules! penv {
-    ($self:ident) => {
-        PolicyEnv { cm: &$self.cm, reqs: $self.reqs, sim: $self.sim, stats: &mut $self.stats }
+    ($self:ident, $i:expr, $now:expr) => {
+        PolicyEnv {
+            cm: &$self.cm,
+            reqs: $self.reqs,
+            sim: $self.sim,
+            stats: &mut $self.stats,
+            now: $now,
+            replica: $i,
+            trace: $self.sink.recorder(),
+        }
     };
 }
 
-impl<'a> Engine<'a> {
+impl<'a, S: TraceSink> Engine<'a, S> {
+    /// Record an engine-level trace event (no-op under [`NoopSink`]).
+    #[inline]
+    fn emit(&mut self, t: f64, ev: TraceEvent) {
+        self.sink.emit(t, ev);
+    }
+
     /// Append one disaggregated placement's replicas to the arena. Returns
     /// the arena indices of the new entry (prefill) replicas, or None when
     /// the placement has no feasible prefill or decode replica.
@@ -1021,8 +1114,12 @@ impl<'a> Engine<'a> {
 
     /// If the replica can start a burst, schedule its completion.
     fn try_start(&mut self, i: usize, now: f64) {
-        let mut env = penv!(self);
-        if let Some(lat) = self.replicas[i].try_start(&mut env) {
+        let started = {
+            let mut env = penv!(self, i, now);
+            self.replicas[i].try_start(&mut env)
+        };
+        if let Some(lat) = started {
+            self.emit(now, TraceEvent::Burst { replica: i as u32, lane: lane_of(self.kinds[i]), dur_s: lat });
             self.q.push(now + lat, Ev::Service(i));
             // Remembered as the pipelining window: KV produced by this
             // burst may overlap (part of) it when chunked transfer is on.
@@ -1036,6 +1133,7 @@ impl<'a> Engine<'a> {
     /// hold it through a migration blackout.
     fn admit(&mut self, r: usize, now: f64) {
         if self.active.is_empty() {
+            self.emit(now, TraceEvent::Hold { req: r as u32 });
             self.holding.push(r);
             return;
         }
@@ -1053,6 +1151,7 @@ impl<'a> Engine<'a> {
                 // than wedge a queue forever.
                 self.scratch = fitting;
                 self.stats.rejected += 1;
+                self.emit(now, TraceEvent::Reject { req: r as u32 });
                 return;
             }
             let i = self.pick(&fitting);
@@ -1064,6 +1163,7 @@ impl<'a> Engine<'a> {
         if self.router == Router::FlowWeighted {
             self.assigned[i] += 1.0;
         }
+        self.emit(now, TraceEvent::Admit { req: r as u32, replica: i as u32 });
         self.replicas[i].admit(r);
         self.try_start(i, now);
     }
@@ -1074,6 +1174,7 @@ impl<'a> Engine<'a> {
     /// schedule its arrival.
     fn route_kv(&mut self, p: usize, r: usize, now: f64) {
         self.prefill_done_at[r] = now;
+        self.emit(now, TraceEvent::PrefillDone { req: r as u32, replica: p as u32 });
         let mut pool = std::mem::take(&mut self.scratch);
         pool.clear();
         pool.extend(
@@ -1092,7 +1193,8 @@ impl<'a> Engine<'a> {
                     // prefill-side reservation defensively.
                     self.scratch = pool;
                     self.stats.rejected += 1;
-                    let mut env = penv!(self);
+                    self.emit(now, TraceEvent::Reject { req: r as u32 });
+                    let mut env = penv!(self, p, now);
                     self.replicas[p].release_kv(r, &mut env);
                     return;
                 }
@@ -1106,7 +1208,8 @@ impl<'a> Engine<'a> {
                 // KV and report the request unserved.
                 self.scratch = pool;
                 self.stats.rejected += 1;
-                let mut env = penv!(self);
+                self.emit(now, TraceEvent::Reject { req: r as u32 });
+                let mut env = penv!(self, p, now);
                 self.replicas[p].release_kv(r, &mut env);
                 return;
             }
@@ -1124,6 +1227,33 @@ impl<'a> Engine<'a> {
         });
         self.scratch = pool;
         self.stats.kv_link_wait_s += tr.wait_s;
+        self.emit(
+            now,
+            TraceEvent::KvEnqueue { req: r as u32, src: p as u32, dst: tr.dst as u32, bytes, wait_s: tr.wait_s },
+        );
+        if self.sink.recorder().is_some() {
+            // Synthesize per-chunk transfer spans over the reserved link
+            // window (the engine reserves the window as a whole; chunks
+            // partition it evenly — see TransferScheduler's overlap model).
+            let n = self.kv.config().chunks().max(1);
+            let span = tr.done - tr.start;
+            for c in 0..n {
+                let cs = tr.start + span * c as f64 / n as f64;
+                let ce = tr.start + span * (c + 1) as f64 / n as f64;
+                self.emit(
+                    now,
+                    TraceEvent::KvXfer {
+                        req: r as u32,
+                        src: p as u32,
+                        dst: tr.dst as u32,
+                        chunk: c as u32,
+                        n_chunks: n as u32,
+                        start: cs,
+                        end: ce,
+                    },
+                );
+            }
+        }
         self.q.push(tr.done, Ev::KvArrive { p, d: tr.dst, r });
     }
 
@@ -1150,9 +1280,14 @@ impl<'a> Engine<'a> {
             // The event heap pops in time order, so this tracks the serving
             // span (the ledger's NIC-utilization denominator).
             self.t_end = now;
+            self.stats.events += 1;
             match ev {
-                Ev::Arrive(r) => self.admit(r, now),
+                Ev::Arrive(r) => {
+                    self.emit(now, TraceEvent::Arrive { req: r as u32 });
+                    self.admit(r, now)
+                }
                 Ev::Resched(i) => {
+                    self.emit(now, TraceEvent::Quiesce { switch: i as u32 });
                     // Quiesce: stop admitting to the active replicas; pull
                     // their unstarted requests back into the holding buffer
                     // (arrival order preserved by sorting on request index).
@@ -1182,9 +1317,13 @@ impl<'a> Engine<'a> {
                         Some((fresh, router)) => {
                             self.active = fresh;
                             self.router = router;
+                            self.emit(now, TraceEvent::Activate { switch: i as u32, ok: true });
                         }
                         // Infeasible new epoch: resume the old replicas.
-                        None => self.active = std::mem::take(&mut self.quiesced[i]),
+                        None => {
+                            self.active = std::mem::take(&mut self.quiesced[i]);
+                            self.emit(now, TraceEvent::Activate { switch: i as u32, ok: false });
+                        }
                     }
                     for r in std::mem::take(&mut self.holding) {
                         self.admit(r, now);
@@ -1195,14 +1334,30 @@ impl<'a> Engine<'a> {
                     let mut out = std::mem::take(&mut self.outcome_buf);
                     out.clear();
                     {
-                        let mut env = penv!(self);
+                        let mut env = penv!(self, i, now);
                         self.replicas[i].service_done(&mut env, &mut out);
                     }
                     for o in out.drain(..) {
                         match o {
                             Outcome::KvReady(r) => self.route_kv(i, r, now),
-                            Outcome::FirstToken(r) => self.prefill_done_at[r] = now,
-                            Outcome::Finished(r) => self.finish(r, now),
+                            Outcome::FirstToken(r) => {
+                                self.prefill_done_at[r] = now;
+                                self.emit(
+                                    now,
+                                    TraceEvent::PrefillDone { req: r as u32, replica: i as u32 },
+                                );
+                            }
+                            Outcome::Finished(r) => {
+                                self.emit(
+                                    now,
+                                    TraceEvent::Finish {
+                                        req: r as u32,
+                                        replica: i as u32,
+                                        output_len: self.reqs[r].output_len as u32,
+                                    },
+                                );
+                                self.finish(r, now)
+                            }
                         }
                     }
                     self.outcome_buf = out;
@@ -1212,10 +1367,11 @@ impl<'a> Engine<'a> {
                 }
                 Ev::KvArrive { p, d, r } => {
                     self.kv.complete(p, d);
+                    self.emit(now, TraceEvent::KvDone { req: r as u32, src: p as u32, dst: d as u32 });
                     if self.sim.sizing == Sizing::PerRequest {
                         // The shipped KV frees prefill-side memory, which
                         // may unblock queued prompts.
-                        let mut env = penv!(self);
+                        let mut env = penv!(self, p, now);
                         self.replicas[p].release_kv(r, &mut env);
                         self.try_start(p, now);
                     }
@@ -1232,6 +1388,10 @@ impl<'a> Engine<'a> {
 /// `at + delay` before the next `at`), and the run's [`SimConfig`].
 /// Requests that cannot be served at all are dropped from the records and
 /// counted in [`SimStats::unserved`].
+///
+/// With [`SimConfig::trace`] set, the run records a flight-recorder trace
+/// ([`SimReport::trace`]); otherwise the engine monomorphizes over
+/// [`NoopSink`] and pays nothing.
 pub fn simulate(
     cluster: &Cluster,
     model: &LlmSpec,
@@ -1239,6 +1399,27 @@ pub fn simulate(
     switches: &[SwitchSpec],
     trace: &Trace,
     cfg: &SimConfig,
+) -> SimReport {
+    if cfg.trace {
+        let mut rec = Recorder::new(cfg.trace_sample_rate, cfg.trace_buffer);
+        let mut rep = simulate_sink(cluster, model, initial, switches, trace, cfg, &mut rec);
+        rep.trace = Some(rec.into_log());
+        rep
+    } else {
+        simulate_sink(cluster, model, initial, switches, trace, cfg, &mut NoopSink)
+    }
+}
+
+/// The engine run itself, generic over the trace sink.
+#[allow(clippy::too_many_arguments)]
+fn simulate_sink<S: TraceSink>(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    initial: &ServingSpec,
+    switches: &[SwitchSpec],
+    trace: &Trace,
+    cfg: &SimConfig,
+    sink: &mut S,
 ) -> SimReport {
     for s in switches {
         assert!(
@@ -1290,6 +1471,7 @@ pub fn simulate(
         scratch: Vec::new(),
         t_end: 0.0,
         stats: SimStats::default(),
+        sink,
     };
 
     // Replica arena: switches append; indices stay valid for in-flight
@@ -1313,6 +1495,10 @@ pub fn simulate(
     eng.run(switches, (s_in_mean, s_out_mean));
 
     eng.stats.unserved = eng.done.iter().filter(|&&d| !d).count();
+    // Hand the recorder the replica lane map (Perfetto lane names).
+    if let Some(rec) = eng.sink.recorder() {
+        rec.set_lanes(eng.kinds.iter().map(|&k| lane_of(k)).collect());
+    }
     // Export the transfer engine's ledger: the Copy summary onto SimStats,
     // the per-route detail onto the report.
     let kv_summary = eng.kv.ledger().summary(eng.t_end);

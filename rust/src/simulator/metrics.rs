@@ -3,6 +3,7 @@
 //! statistics, and SLO attainment at configurable SLO scales.
 
 use crate::kvtransfer::LinkLoad;
+use crate::telemetry::{AuditRecord, TraceLog};
 use crate::util::stats;
 
 /// Per-request timing record.
@@ -34,10 +35,15 @@ impl RequestRecord {
 /// Engine-level counters the per-request records cannot express: memory
 /// pressure, rejections, link contention. Filled by the unified simulation
 /// core ([`simulate`](crate::simulator::simulate)); zeroed on reports built
-/// purely from records (e.g. [`SimReport::windowed`] sub-reports and the
-/// live coordinator's report).
+/// purely from records (the live coordinator's report, and
+/// [`SimReport::windowed`] sub-reports when the parent has no trace — with
+/// tracing on, `windowed` reconstructs `mem_stalls` / `kv_link_wait_s`
+/// from the flight recorder's events).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SimStats {
+    /// Simulation events processed (heap pops) — the denominator of the
+    /// bench harness's events/sec tracing-overhead column.
+    pub events: usize,
     /// Admissions deferred because a replica's KV/activation memory was
     /// full (per-request accounting mode): each count is one service
     /// boundary at which the head of a queue could not be admitted.
@@ -81,6 +87,12 @@ pub struct SimReport {
     /// built purely from records — windowed sub-reports, the live
     /// coordinator — and for colocated runs, which move no KV).
     pub link_loads: Vec<LinkLoad>,
+    /// Flight-recorder trace of the run ([`SimConfig::trace`]; DESIGN.md
+    /// §12). `None` when tracing was off.
+    pub trace: Option<TraceLog>,
+    /// Planner/rescheduler decision audit (attached by the deploy layer
+    /// when `--audit` is on; empty otherwise).
+    pub audit: Vec<AuditRecord>,
 }
 
 impl SimReport {
@@ -97,6 +109,8 @@ impl SimReport {
             total_input_tokens,
             stats: SimStats::default(),
             link_loads: Vec::new(),
+            trace: None,
+            audit: Vec::new(),
         }
     }
 
@@ -142,10 +156,23 @@ impl SimReport {
     /// Sub-report of the requests that *arrived* in `[t0, t1)` — used by the
     /// rescheduler case studies to compare per-phase service quality before
     /// and after a workload shift.
+    ///
+    /// Engine counters: when the parent report carries a flight-recorder
+    /// trace, the sub-report's [`SimStats::mem_stalls`] and
+    /// [`SimStats::kv_link_wait_s`] are reconstructed from events stamped
+    /// in `[t0, t1)` (by *event* time — a stall or transfer enqueued in
+    /// the window, regardless of when its request arrived). Without a
+    /// trace the engine's scalar counters cannot be attributed to a
+    /// window, so they stay zero — a documented limitation, not data.
     pub fn windowed(&self, t0: f64, t1: f64) -> SimReport {
-        SimReport::from_records(
+        let mut w = SimReport::from_records(
             self.records.iter().filter(|r| r.arrival >= t0 && r.arrival < t1).copied().collect(),
-        )
+        );
+        if let Some(log) = &self.trace {
+            w.stats.mem_stalls = log.mem_stalls_in(t0, t1);
+            w.stats.kv_link_wait_s = log.kv_wait_in(t0, t1);
+        }
+        w
     }
 
     /// Smallest SLO scale achieving the given attainment (bisection over

@@ -1,0 +1,228 @@
+//! Decision audit records: *why* the planner and the §3.3 online loop did
+//! what they did (DESIGN.md §12).
+//!
+//! The scheduler pushes one [`AuditRecord::Candidate`] per evaluated
+//! partition (objective score with the `kv_contention` discount unpacked,
+//! EvalCache hit/miss); the rescheduler pushes [`AuditRecord::Drift`] /
+//! [`AuditRecord::Replan`] / [`AuditRecord::MigrationGate`] records for
+//! every drift window it acted on, so `--audit` can explain every accepted
+//! *and* denied re-plan. Records are plain data exported through
+//! [`audit_json`].
+//!
+//! Ordering caveat: candidate records are pushed from the planner's
+//! parallel evaluation workers, so their order (unlike trace files) is
+//! *not* deterministic across `threads > 1` runs — consumers must not diff
+//! audit JSON byte-for-byte.
+
+use crate::util::json::{self, Json};
+
+/// One planner/rescheduler decision, in the order it was made.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AuditRecord {
+    /// One candidate partition evaluated by the scheduler.
+    Candidate {
+        /// FNV-1a hash of the canonical partition signature
+        /// (`scheduler::partition_signature`) — stable across runs, cheap
+        /// to diff.
+        sig: u64,
+        /// Number of model groups in the candidate.
+        groups: u32,
+        /// Final objective score (after the KV-contention discount).
+        score: f64,
+        /// Score before the discount (`== score` when contention-aware
+        /// planning is off or the NIC is uncontended).
+        raw_score: f64,
+        /// Analytic worst NIC overcommit of the candidate's KV routes
+        /// (`scheduler::objective::kv_nic_utilization`); 0 when
+        /// contention-aware planning is off.
+        nic_util: f64,
+        /// Served from the EvalCache instead of re-running the pipeline.
+        cache_hit: bool,
+        /// Candidate produced a feasible placement.
+        feasible: bool,
+    },
+    /// The drift monitor fired (§3.3 observation window).
+    Drift {
+        at: f64,
+        /// `DriftKind` rendered as text ("workload", "rate", "kv").
+        kind: String,
+        rate: f64,
+        mean_input: f64,
+        mean_output: f64,
+        n: u32,
+        mean_kv_wait_s: f64,
+    },
+    /// A warm re-plan ran for a drift event.
+    Replan {
+        at: f64,
+        /// Workload kind the re-plan targeted.
+        to: String,
+        /// Whether the migration gate let the new plan go live.
+        accepted: bool,
+    },
+    /// The priced migration gate's verdict on a re-plan (§3.3 pricing).
+    MigrationGate {
+        at: f64,
+        /// Live NIC utilization the transfer bandwidth was derated by.
+        nic_util: f64,
+        drain_s: f64,
+        kv_bytes: f64,
+        transfer_s: f64,
+        total_delay_s: f64,
+        tokens_lost: f64,
+        gain_tokens: f64,
+        accepted: bool,
+    },
+}
+
+impl AuditRecord {
+    pub fn to_json(&self) -> Json {
+        match self {
+            AuditRecord::Candidate { sig, groups, score, raw_score, nic_util, cache_hit, feasible } => {
+                json::obj(vec![
+                    ("record", json::s("candidate")),
+                    ("sig", json::s(&format!("{sig:016x}"))),
+                    ("groups", json::num(*groups as f64)),
+                    ("score", json::num(*score)),
+                    ("raw_score", json::num(*raw_score)),
+                    ("kv_contention_discount", json::num(*raw_score - *score)),
+                    ("nic_util", json::num(*nic_util)),
+                    ("cache_hit", Json::Bool(*cache_hit)),
+                    ("feasible", Json::Bool(*feasible)),
+                ])
+            }
+            AuditRecord::Drift { at, kind, rate, mean_input, mean_output, n, mean_kv_wait_s } => {
+                json::obj(vec![
+                    ("record", json::s("drift")),
+                    ("at", json::num(*at)),
+                    ("kind", json::s(kind)),
+                    ("rate", json::num(*rate)),
+                    ("mean_input", json::num(*mean_input)),
+                    ("mean_output", json::num(*mean_output)),
+                    ("window_n", json::num(*n as f64)),
+                    ("mean_kv_wait_s", json::num(*mean_kv_wait_s)),
+                ])
+            }
+            AuditRecord::Replan { at, to, accepted } => json::obj(vec![
+                ("record", json::s("replan")),
+                ("at", json::num(*at)),
+                ("to", json::s(to)),
+                ("accepted", Json::Bool(*accepted)),
+            ]),
+            AuditRecord::MigrationGate {
+                at,
+                nic_util,
+                drain_s,
+                kv_bytes,
+                transfer_s,
+                total_delay_s,
+                tokens_lost,
+                gain_tokens,
+                accepted,
+            } => json::obj(vec![
+                ("record", json::s("migration_gate")),
+                ("at", json::num(*at)),
+                ("nic_util", json::num(*nic_util)),
+                ("drain_s", json::num(*drain_s)),
+                ("kv_bytes", json::num(*kv_bytes)),
+                ("transfer_s", json::num(*transfer_s)),
+                ("total_delay_s", json::num(*total_delay_s)),
+                ("tokens_lost", json::num(*tokens_lost)),
+                ("gain_tokens", json::num(*gain_tokens)),
+                ("accepted", Json::Bool(*accepted)),
+            ]),
+        }
+    }
+}
+
+/// FNV-1a over a canonical partition signature
+/// (`scheduler::partition_signature` output) — the candidate fingerprint
+/// audit records carry.
+pub fn signature_hash(sig: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &x in sig {
+        for b in (x as u64).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// The `--audit` file format: a schema header plus the records in decision
+/// order.
+pub fn audit_json(records: &[AuditRecord]) -> Json {
+    let candidates = records
+        .iter()
+        .filter(|r| matches!(r, AuditRecord::Candidate { .. }))
+        .count();
+    let gates = records
+        .iter()
+        .filter(|r| matches!(r, AuditRecord::MigrationGate { .. }))
+        .count();
+    json::obj(vec![
+        ("schema", json::s("hexgen2-audit/v1")),
+        ("n_records", json::num(records.len() as f64)),
+        ("n_candidates", json::num(candidates as f64)),
+        ("n_migration_gates", json::num(gates as f64)),
+        ("records", json::arr(records.iter().map(|r| r.to_json()).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signature_hash_is_stable_and_discriminating() {
+        let a = signature_hash(&[0, 0, 1, 1]);
+        assert_eq!(a, signature_hash(&[0, 0, 1, 1]));
+        assert_ne!(a, signature_hash(&[0, 1, 0, 1]));
+        assert_ne!(a, signature_hash(&[0, 0, 1]));
+    }
+
+    #[test]
+    fn audit_json_counts_record_kinds() {
+        let recs = vec![
+            AuditRecord::Candidate {
+                sig: 7,
+                groups: 2,
+                score: 10.0,
+                raw_score: 12.0,
+                nic_util: 1.2,
+                cache_hit: false,
+                feasible: true,
+            },
+            AuditRecord::Drift {
+                at: 30.0,
+                kind: "workload".into(),
+                rate: 4.0,
+                mean_input: 512.0,
+                mean_output: 64.0,
+                n: 20,
+                mean_kv_wait_s: 0.0,
+            },
+            AuditRecord::MigrationGate {
+                at: 30.0,
+                nic_util: 0.4,
+                drain_s: 1.0,
+                kv_bytes: 1e9,
+                transfer_s: 2.0,
+                total_delay_s: 3.0,
+                tokens_lost: 100.0,
+                gain_tokens: 5000.0,
+                accepted: true,
+            },
+        ];
+        let j = audit_json(&recs);
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("hexgen2-audit/v1"));
+        assert_eq!(j.get("n_records").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("n_candidates").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("n_migration_gates").unwrap().as_usize(), Some(1));
+        let recs_j = j.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs_j[0].get("record").unwrap().as_str(), Some("candidate"));
+        // The discount field unpacks raw − final.
+        assert_eq!(recs_j[0].get("kv_contention_discount").unwrap().as_f64(), Some(2.0));
+        assert_eq!(recs_j[2].get("accepted").unwrap().as_bool(), Some(true));
+    }
+}

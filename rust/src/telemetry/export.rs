@@ -1,0 +1,490 @@
+//! Trace exporters (DESIGN.md §12): Chrome trace-event JSON (Perfetto),
+//! Prometheus-style text, and trace-derived metrics.
+//!
+//! [`derive_metrics`] is the conservation check: it recomputes the
+//! simulator's headline numbers (tokens/s, TTFT, per-route KV bytes and
+//! waits, mem stalls) *purely* from the event stream, mirroring the exact
+//! fold order of `SimReport::from_records` and the engine's accumulators
+//! so the results match bit-for-bit when the trace is complete
+//! (`sample_rate == 1.0`, `dropped == 0`).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
+
+use super::{Stamped, TraceEvent, TraceLog};
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event JSON
+// ---------------------------------------------------------------------------
+
+fn us(t: f64) -> f64 {
+    t * 1e6
+}
+
+fn meta(name: &str, pid: u32, tid: Option<u32>, label: &str) -> Json {
+    let mut fields = vec![
+        ("ph", json::s("M")),
+        ("name", json::s(name)),
+        ("pid", json::num(pid as f64)),
+        ("args", json::obj(vec![("name", json::s(label))])),
+    ];
+    if let Some(tid) = tid {
+        fields.push(("tid", json::num(tid as f64)));
+    }
+    json::obj(fields)
+}
+
+fn span(name: &str, pid: u32, tid: u32, ts: f64, dur: f64, args: Json) -> Json {
+    json::obj(vec![
+        ("ph", json::s("X")),
+        ("name", json::s(name)),
+        ("pid", json::num(pid as f64)),
+        ("tid", json::num(tid as f64)),
+        ("ts", json::num(us(ts))),
+        ("dur", json::num(us(dur))),
+        ("args", args),
+    ])
+}
+
+fn instant(name: &str, pid: u32, tid: u32, ts: f64, args: Json) -> Json {
+    json::obj(vec![
+        ("ph", json::s("i")),
+        ("name", json::s(name)),
+        ("pid", json::num(pid as f64)),
+        ("tid", json::num(tid as f64)),
+        ("ts", json::num(us(ts))),
+        ("s", json::s("t")),
+        ("args", args),
+    ])
+}
+
+const PID_REPLICAS: u32 = 1;
+const PID_LINKS: u32 = 2;
+
+/// Export a [`TraceLog`] as Chrome trace-event JSON, viewable in Perfetto
+/// (`ui.perfetto.dev`) or `chrome://tracing`. Process 1 holds one lane per
+/// replica (named by serving discipline) plus an "engine" lane for
+/// arrival/resched markers; process 2 holds one lane per KV route, with
+/// transfer chunks as spans.
+pub fn chrome_trace(log: &TraceLog) -> Json {
+    let engine_tid = log.lanes.len() as u32;
+    let mut events: Vec<Json> = Vec::with_capacity(log.events.len() + log.lanes.len() + 8);
+    events.push(meta("process_name", PID_REPLICAS, None, "replicas"));
+    events.push(meta("process_name", PID_LINKS, None, "kv-links"));
+    for (i, lane) in log.lanes.iter().enumerate() {
+        events.push(meta(
+            "thread_name",
+            PID_REPLICAS,
+            Some(i as u32),
+            &format!("r{i} {}", lane.name()),
+        ));
+    }
+    events.push(meta("thread_name", PID_REPLICAS, Some(engine_tid), "engine"));
+
+    // KV-route lanes in first-seen order.
+    let mut route_tid: BTreeMap<(u32, u32), u32> = BTreeMap::new();
+    let mut tid_of = |src: u32, dst: u32, events: &mut Vec<Json>| -> u32 {
+        if let Some(&t) = route_tid.get(&(src, dst)) {
+            return t;
+        }
+        let t = route_tid.len() as u32;
+        route_tid.insert((src, dst), t);
+        events.push(meta(
+            "thread_name",
+            PID_LINKS,
+            Some(t),
+            &format!("kv {src}\u{2192}{dst}"),
+        ));
+        t
+    };
+
+    for &Stamped { t, ev } in &log.events {
+        let j = match ev {
+            TraceEvent::Arrive { req } => instant(
+                "arrive",
+                PID_REPLICAS,
+                engine_tid,
+                t,
+                json::obj(vec![("req", json::num(req as f64))]),
+            ),
+            TraceEvent::Hold { req } => instant(
+                "hold",
+                PID_REPLICAS,
+                engine_tid,
+                t,
+                json::obj(vec![("req", json::num(req as f64))]),
+            ),
+            TraceEvent::Reject { req } => instant(
+                "reject",
+                PID_REPLICAS,
+                engine_tid,
+                t,
+                json::obj(vec![("req", json::num(req as f64))]),
+            ),
+            TraceEvent::Quiesce { switch } => instant(
+                "quiesce",
+                PID_REPLICAS,
+                engine_tid,
+                t,
+                json::obj(vec![("switch", json::num(switch as f64))]),
+            ),
+            TraceEvent::Activate { switch, ok } => instant(
+                "activate",
+                PID_REPLICAS,
+                engine_tid,
+                t,
+                json::obj(vec![("switch", json::num(switch as f64)), ("ok", Json::Bool(ok))]),
+            ),
+            TraceEvent::Admit { req, replica } => instant(
+                "admit",
+                PID_REPLICAS,
+                replica,
+                t,
+                json::obj(vec![("req", json::num(req as f64))]),
+            ),
+            TraceEvent::MemStall { replica } => {
+                instant("mem-stall", PID_REPLICAS, replica, t, json::obj(vec![]))
+            }
+            TraceEvent::Burst { replica, lane, dur_s } => {
+                span(lane.name(), PID_REPLICAS, replica, t, dur_s, json::obj(vec![]))
+            }
+            TraceEvent::PrefillChunk { req, replica, chunk } => instant(
+                "prefill-chunk",
+                PID_REPLICAS,
+                replica,
+                t,
+                json::obj(vec![
+                    ("req", json::num(req as f64)),
+                    ("chunk", json::num(chunk as f64)),
+                ]),
+            ),
+            TraceEvent::PrefillDone { req, replica } => instant(
+                "prefill-done",
+                PID_REPLICAS,
+                replica,
+                t,
+                json::obj(vec![("req", json::num(req as f64))]),
+            ),
+            TraceEvent::DecodeJoin { req, replica } => instant(
+                "decode-join",
+                PID_REPLICAS,
+                replica,
+                t,
+                json::obj(vec![("req", json::num(req as f64))]),
+            ),
+            TraceEvent::Finish { req, replica, output_len } => instant(
+                "finish",
+                PID_REPLICAS,
+                replica,
+                t,
+                json::obj(vec![
+                    ("req", json::num(req as f64)),
+                    ("output_len", json::num(output_len as f64)),
+                ]),
+            ),
+            TraceEvent::KvEnqueue { req, src, dst, bytes, wait_s } => {
+                let tid = tid_of(src, dst, &mut events);
+                instant(
+                    "kv-enqueue",
+                    PID_LINKS,
+                    tid,
+                    t,
+                    json::obj(vec![
+                        ("req", json::num(req as f64)),
+                        ("bytes", json::num(bytes)),
+                        ("wait_s", json::num(wait_s)),
+                    ]),
+                )
+            }
+            TraceEvent::KvXfer { req, src, dst, chunk, n_chunks, start, end } => {
+                let tid = tid_of(src, dst, &mut events);
+                span(
+                    "kv-chunk",
+                    PID_LINKS,
+                    tid,
+                    start,
+                    (end - start).max(0.0),
+                    json::obj(vec![
+                        ("req", json::num(req as f64)),
+                        ("chunk", json::num(chunk as f64)),
+                        ("n_chunks", json::num(n_chunks as f64)),
+                    ]),
+                )
+            }
+            TraceEvent::KvDone { req, src, dst } => {
+                let tid = tid_of(src, dst, &mut events);
+                instant(
+                    "kv-done",
+                    PID_LINKS,
+                    tid,
+                    t,
+                    json::obj(vec![("req", json::num(req as f64))]),
+                )
+            }
+        };
+        events.push(j);
+    }
+
+    json::obj(vec![
+        ("traceEvents", json::arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+        (
+            "otherData",
+            json::obj(vec![
+                ("schema", json::s("hexgen2-trace/v1")),
+                ("sample_rate", json::num(log.sample_rate)),
+                ("dropped", json::num(log.dropped as f64)),
+                ("n_events", json::num(log.events.len() as f64)),
+            ]),
+        ),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+/// Windowed counters in the Prometheus text exposition format: one sample
+/// per `window_s`-wide window (label `window="k"` covering
+/// `[k·window_s, (k+1)·window_s)`). `window_s <= 0` collapses to one
+/// all-time window.
+pub fn prometheus_dump(log: &TraceLog, window_s: f64) -> String {
+    let t_max = log.events.last().map(|s| s.t).unwrap_or(0.0);
+    let (window_s, n_win) = if window_s > 0.0 {
+        (window_s, ((t_max / window_s).floor() as usize) + 1)
+    } else {
+        (t_max.max(1e-9), 1)
+    };
+    let mut completions = vec![0usize; n_win];
+    let mut out_tokens = vec![0usize; n_win];
+    let mut stalls = vec![0usize; n_win];
+    let mut kv_wait = vec![0.0f64; n_win];
+    let mut kv_bytes = vec![0.0f64; n_win];
+    let mut n_events = vec![0usize; n_win];
+    for s in &log.events {
+        let w = ((s.t / window_s).floor() as usize).min(n_win - 1);
+        n_events[w] += 1;
+        match s.ev {
+            TraceEvent::Finish { output_len, .. } => {
+                completions[w] += 1;
+                out_tokens[w] += output_len as usize;
+            }
+            TraceEvent::MemStall { .. } => stalls[w] += 1,
+            TraceEvent::KvEnqueue { bytes, wait_s, .. } => {
+                kv_wait[w] += wait_s;
+                kv_bytes[w] += bytes;
+            }
+            _ => {}
+        }
+    }
+    let mut out = String::new();
+    let mut counter = |name: &str, help: &str, vals: &dyn Fn(usize) -> String| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n"));
+        for w in 0..n_win {
+            out.push_str(&format!("{name}{{window=\"{w}\"}} {}\n", vals(w)));
+        }
+    };
+    counter(
+        "hexgen2_requests_completed_total",
+        "Requests that finished generation in the window.",
+        &|w| completions[w].to_string(),
+    );
+    counter(
+        "hexgen2_output_tokens_total",
+        "Output tokens generated in the window.",
+        &|w| out_tokens[w].to_string(),
+    );
+    counter(
+        "hexgen2_mem_stalls_total",
+        "Admissions blocked on replica memory in the window.",
+        &|w| stalls[w].to_string(),
+    );
+    counter(
+        "hexgen2_kv_wait_seconds_total",
+        "Seconds KV transfers queued behind busy links (by enqueue time).",
+        &|w| format!("{}", kv_wait[w]),
+    );
+    counter(
+        "hexgen2_kv_bytes_total",
+        "KV bytes handed to the transfer engine (by enqueue time).",
+        &|w| format!("{}", kv_bytes[w]),
+    );
+    counter("hexgen2_trace_events_total", "Trace events recorded in the window.", &|w| {
+        n_events[w].to_string()
+    });
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Trace-derived metrics (the conservation check)
+// ---------------------------------------------------------------------------
+
+/// Metrics recomputed purely from the event stream.
+#[derive(Clone, Debug, Default)]
+pub struct DerivedMetrics {
+    /// Requests with a `Finish` event.
+    pub completions: usize,
+    pub total_output_tokens: usize,
+    /// First arrival → last completion, over *finished* requests — the
+    /// same span `SimReport::from_records` computes from its records.
+    pub makespan: f64,
+    pub tokens_per_s: f64,
+    /// Per-request TTFT (`PrefillDone − Arrive`), keyed by trace index;
+    /// finished requests only.
+    pub ttft: BTreeMap<u32, f64>,
+    /// Per-request end-to-end latency (`Finish − Arrive`).
+    pub latency: BTreeMap<u32, f64>,
+    /// KV bytes per route, summed in enqueue order (bit-exact vs the
+    /// transfer ledger).
+    pub route_bytes: BTreeMap<(u32, u32), f64>,
+    /// KV queue-wait seconds per route, summed in enqueue order.
+    pub route_wait_s: BTreeMap<(u32, u32), f64>,
+    pub route_transfers: BTreeMap<(u32, u32), usize>,
+    /// Total KV queue wait (the engine's `SimStats::kv_link_wait_s`
+    /// accumulation order).
+    pub kv_wait_total_s: f64,
+    pub mem_stalls: usize,
+    pub rejects: usize,
+}
+
+/// Recompute the simulator's headline metrics from a trace alone. With a
+/// complete trace (`sample_rate == 1.0`, `dropped == 0`) every field
+/// matches the engine's `SimReport` / `Ledger` counters exactly — the
+/// conservation property the telemetry test suite pins.
+pub fn derive_metrics(log: &TraceLog) -> DerivedMetrics {
+    let mut m = DerivedMetrics::default();
+    let mut arrival: BTreeMap<u32, f64> = BTreeMap::new();
+    let mut prefill_done: BTreeMap<u32, f64> = BTreeMap::new();
+    let mut completion: BTreeMap<u32, f64> = BTreeMap::new();
+    for &Stamped { t, ev } in &log.events {
+        match ev {
+            TraceEvent::Arrive { req } => {
+                arrival.insert(req, t);
+            }
+            // Chunked colocated prefills can re-stamp; keep the last, as
+            // the engine's `prefill_done_at` overwrite does.
+            TraceEvent::PrefillDone { req, .. } => {
+                prefill_done.insert(req, t);
+            }
+            TraceEvent::Finish { req, output_len, .. } => {
+                completion.insert(req, t);
+                m.completions += 1;
+                m.total_output_tokens += output_len as usize;
+            }
+            TraceEvent::KvEnqueue { src, dst, bytes, wait_s, .. } => {
+                *m.route_bytes.entry((src, dst)).or_insert(0.0) += bytes;
+                *m.route_wait_s.entry((src, dst)).or_insert(0.0) += wait_s;
+                *m.route_transfers.entry((src, dst)).or_insert(0) += 1;
+                m.kv_wait_total_s += wait_s;
+            }
+            TraceEvent::MemStall { .. } => m.mem_stalls += 1,
+            TraceEvent::Reject { .. } => m.rejects += 1,
+            _ => {}
+        }
+    }
+    // Mirror `SimReport::from_records`: fold min over arrivals and max
+    // over completions of *finished* requests (min/max folds are
+    // order-independent, so iteration order vs record order is immaterial).
+    let mut first = f64::INFINITY;
+    let mut last = 0.0f64;
+    for (&req, &done) in &completion {
+        if let Some(&a) = arrival.get(&req) {
+            first = first.min(a);
+            last = last.max(done);
+            m.latency.insert(req, done - a);
+            if let Some(&p) = prefill_done.get(&req) {
+                m.ttft.insert(req, p - a);
+            }
+        }
+    }
+    m.makespan = if m.completions == 0 { 0.0 } else { (last - first).max(1e-9) };
+    m.tokens_per_s =
+        if m.completions == 0 { 0.0 } else { m.total_output_tokens as f64 / m.makespan };
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Lane, Recorder};
+
+    fn sample_log() -> TraceLog {
+        let mut r = Recorder::new(1.0, 1 << 10);
+        r.emit(0.0, TraceEvent::Arrive { req: 0 });
+        r.emit(0.0, TraceEvent::Admit { req: 0, replica: 0 });
+        r.emit(0.0, TraceEvent::Burst { replica: 0, lane: Lane::Prefill, dur_s: 0.5 });
+        r.emit(0.5, TraceEvent::PrefillDone { req: 0, replica: 0 });
+        r.emit(
+            0.5,
+            TraceEvent::KvEnqueue { req: 0, src: 0, dst: 1, bytes: 1e6, wait_s: 0.125 },
+        );
+        r.emit(
+            0.5,
+            TraceEvent::KvXfer {
+                req: 0,
+                src: 0,
+                dst: 1,
+                chunk: 0,
+                n_chunks: 1,
+                start: 0.625,
+                end: 0.75,
+            },
+        );
+        r.emit(0.75, TraceEvent::KvDone { req: 0, src: 0, dst: 1 });
+        r.emit(0.75, TraceEvent::DecodeJoin { req: 0, replica: 1 });
+        r.emit(2.0, TraceEvent::Finish { req: 0, replica: 1, output_len: 64 });
+        r.set_lanes(vec![Lane::Prefill, Lane::Decode]);
+        r.into_log()
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let j = chrome_trace(&sample_log());
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 process metas + 2 replica lanes + engine lane + 1 route lane
+        // + 9 events.
+        assert_eq!(evs.len(), 15);
+        for e in evs {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            assert!(matches!(ph, "M" | "X" | "i"), "{ph}");
+            assert!(e.get("pid").is_some());
+        }
+        // Spans carry µs timestamps/durations.
+        let burst = evs
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("prefill"))
+            .unwrap();
+        assert_eq!(burst.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(burst.get("dur").unwrap().as_f64(), Some(0.5e6));
+        // Deterministic serialization (BTreeMap keys + fixed event order).
+        assert_eq!(j.to_string_pretty(), chrome_trace(&sample_log()).to_string_pretty());
+    }
+
+    #[test]
+    fn derive_metrics_from_sample() {
+        let m = derive_metrics(&sample_log());
+        assert_eq!(m.completions, 1);
+        assert_eq!(m.total_output_tokens, 64);
+        assert_eq!(m.makespan, 2.0);
+        assert_eq!(m.tokens_per_s, 32.0);
+        assert_eq!(m.ttft.get(&0).copied(), Some(0.5));
+        assert_eq!(m.latency.get(&0).copied(), Some(2.0));
+        assert_eq!(m.route_bytes.get(&(0, 1)).copied(), Some(1e6));
+        assert_eq!(m.route_wait_s.get(&(0, 1)).copied(), Some(0.125));
+        assert_eq!(m.kv_wait_total_s, 0.125);
+    }
+
+    #[test]
+    fn prometheus_dump_windows() {
+        let text = prometheus_dump(&sample_log(), 1.0);
+        assert!(text.contains("# TYPE hexgen2_requests_completed_total counter"));
+        // Finish at t=2.0 lands in window 2.
+        assert!(text.contains("hexgen2_requests_completed_total{window=\"2\"} 1"));
+        assert!(text.contains("hexgen2_output_tokens_total{window=\"2\"} 64"));
+        assert!(text.contains("hexgen2_kv_wait_seconds_total{window=\"0\"} 0.125"));
+        // Collapsed single window.
+        let all = prometheus_dump(&sample_log(), 0.0);
+        assert!(all.contains("hexgen2_requests_completed_total{window=\"0\"} 1"));
+    }
+}

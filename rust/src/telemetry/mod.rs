@@ -1,0 +1,375 @@
+//! Flight recorder: end-to-end request tracing and planner decision audit
+//! (DESIGN.md §12).
+//!
+//! The simulator's aggregates ([`SimStats`](crate::simulator::SimStats),
+//! the KV [`Ledger`](crate::kvtransfer::Ledger), `SearchStats`) say *how
+//! much* time went where; this module records *which* request spent it and
+//! *why* the planner decided what it did. Three pieces:
+//!
+//! - **[`TraceSink`]** — the recording interface the unified simulation
+//!   core is generic over. [`NoopSink`] is the zero-cost default: its
+//!   methods are empty/`None` and `#[inline(always)]`, so with tracing off
+//!   the engine monomorphizes every emission site away and the PR-4
+//!   allocation-free hot loop is untouched. [`Recorder`] is the live sink:
+//!   a bounded ring buffer of [`Stamped`] events with per-request
+//!   sampling.
+//! - **Event taxonomy** — [`TraceEvent`]: the request lifecycle (arrival,
+//!   admit/hold/reject, mem-stall, prefill chunks, KV
+//!   enqueue/transfer/done with route + queue wait, decode join, finish)
+//!   plus engine-level resched markers. Request-scoped events are sampled
+//!   by a deterministic per-request hash so one request's spans are kept
+//!   or dropped *together*; replica- and engine-scoped events are always
+//!   recorded.
+//! - **[`TraceLog`]** — the exported recording: chronological events plus
+//!   the replica lane map, consumed by [`export`] (Chrome trace-event
+//!   JSON for Perfetto, Prometheus text, trace-derived metrics) and by
+//!   `SimReport::windowed` to reconstruct per-window engine counters.
+//!
+//! Decision audit records ([`AuditRecord`](audit::AuditRecord)) are the
+//! planner/rescheduler side of the same story: per-candidate objective
+//! breakdowns and migration-gate pricing, exported as JSON.
+
+pub mod audit;
+pub mod export;
+
+pub use audit::{audit_json, AuditRecord};
+pub use export::{chrome_trace, derive_metrics, prometheus_dump, DerivedMetrics};
+
+/// Serving discipline of a replica lane (mirrors the simulator's
+/// `PolicyKind`; duplicated here so `telemetry` has no simulator
+/// dependency and can be consumed by the scheduler side too).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    Prefill,
+    Decode,
+    Colocated,
+}
+
+impl Lane {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lane::Prefill => "prefill",
+            Lane::Decode => "decode",
+            Lane::Colocated => "colocated",
+        }
+    }
+}
+
+/// One typed span/instant event of the request lifecycle. `req` values are
+/// trace indices (positions in `Trace::requests`), `replica`/`src`/`dst`
+/// are simulation-arena indices, both `u32` to keep the event `Copy` and
+/// small (24 B stamped): a full unsampled run is one event stream in the
+/// ring, not a per-request allocation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Request entered the system (event time == its arrival time).
+    Arrive { req: u32 },
+    /// Routed to entry replica `replica` (queue admission).
+    Admit { req: u32, replica: u32 },
+    /// Parked in the holding buffer (migration blackout, no entry replica).
+    Hold { req: u32 },
+    /// Dropped: larger than every eligible replica's memory.
+    Reject { req: u32 },
+    /// Admission blocked at a service boundary: replica memory full.
+    MemStall { replica: u32 },
+    /// A service burst (prefill batch, decode step, colocated iteration)
+    /// started at the event time and runs for `dur_s`.
+    Burst { replica: u32, lane: Lane, dur_s: f64 },
+    /// One SARATHI chunk of `req`'s prefill processed (chunk index from 0).
+    PrefillChunk { req: u32, replica: u32, chunk: u32 },
+    /// Prefill finished: first token (colocated) or KV ready (disagg) —
+    /// the TTFT stamp.
+    PrefillDone { req: u32, replica: u32 },
+    /// KV cache handed to the transfer engine on route `src → dst`;
+    /// `wait_s` is the queue wait behind the busy link.
+    KvEnqueue { req: u32, src: u32, dst: u32, bytes: f64, wait_s: f64 },
+    /// One pipelined chunk of the transfer occupies `[start, end]` on the
+    /// link (whole-cache transfers emit a single chunk). Stamped at
+    /// enqueue time so the ring stays time-ordered; the span lives in the
+    /// payload.
+    KvXfer { req: u32, src: u32, dst: u32, chunk: u32, n_chunks: u32, start: f64, end: f64 },
+    /// KV cache fully arrived at the decode replica.
+    KvDone { req: u32, src: u32, dst: u32 },
+    /// Joined a decode/colocated running batch (continuous batching).
+    DecodeJoin { req: u32, replica: u32 },
+    /// All output tokens generated.
+    Finish { req: u32, replica: u32, output_len: u32 },
+    /// Rescheduling switch `switch`: active replicas quiesced.
+    Quiesce { switch: u32 },
+    /// Switch `switch` activated (`ok`) or rolled back as infeasible.
+    Activate { switch: u32, ok: bool },
+}
+
+impl TraceEvent {
+    /// The request this event belongs to, if it is request-scoped (the
+    /// sampling unit). Replica/engine-scoped events return `None` and are
+    /// always recorded.
+    pub fn req(&self) -> Option<u32> {
+        match *self {
+            TraceEvent::Arrive { req }
+            | TraceEvent::Admit { req, .. }
+            | TraceEvent::Hold { req }
+            | TraceEvent::Reject { req }
+            | TraceEvent::PrefillChunk { req, .. }
+            | TraceEvent::PrefillDone { req, .. }
+            | TraceEvent::KvEnqueue { req, .. }
+            | TraceEvent::KvXfer { req, .. }
+            | TraceEvent::KvDone { req, .. }
+            | TraceEvent::DecodeJoin { req, .. }
+            | TraceEvent::Finish { req, .. } => Some(req),
+            TraceEvent::MemStall { .. }
+            | TraceEvent::Burst { .. }
+            | TraceEvent::Quiesce { .. }
+            | TraceEvent::Activate { .. } => None,
+        }
+    }
+}
+
+/// A timestamped event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stamped {
+    pub t: f64,
+    pub ev: TraceEvent,
+}
+
+/// The recording interface the simulation core is generic over. The two
+/// implementations bracket the cost spectrum: [`NoopSink`] (tracing off,
+/// everything folds away under monomorphization) and [`Recorder`].
+pub trait TraceSink {
+    /// Record `ev` at simulation time `t`.
+    fn emit(&mut self, t: f64, ev: TraceEvent);
+    /// The live recorder, if any — policies receive this through
+    /// `PolicyEnv` (as a plain `Option`, since `PolicyEnv` cannot be
+    /// generic behind `dyn ReplicaPolicy`), and the engine uses
+    /// `is_some()` to gate trace-only work like per-chunk span synthesis.
+    fn recorder(&mut self) -> Option<&mut Recorder>;
+}
+
+/// Tracing off: every emission site compiles to nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    #[inline(always)]
+    fn emit(&mut self, _t: f64, _ev: TraceEvent) {}
+
+    #[inline(always)]
+    fn recorder(&mut self) -> Option<&mut Recorder> {
+        None
+    }
+}
+
+/// FNV-1a over the request index: a deterministic, platform-independent
+/// hash for sampling, so the same request keeps (or loses) *all* its spans
+/// and same-seed runs produce byte-identical traces.
+fn fnv1a(x: u32) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in x.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Bounded ring-buffer recorder with per-request sampling.
+#[derive(Clone, Debug)]
+pub struct Recorder {
+    sample_rate: f64,
+    cap: usize,
+    buf: Vec<Stamped>,
+    /// Oldest slot once the ring has wrapped.
+    head: usize,
+    /// Events overwritten after the ring filled (metric conservation only
+    /// holds when this stays 0 — see [`TraceLog::dropped`]).
+    dropped: usize,
+    lanes: Vec<Lane>,
+}
+
+impl Recorder {
+    /// `sample_rate` is the kept fraction of *requests* (1.0 = everything);
+    /// `cap` bounds the ring (0 is clamped to 1).
+    pub fn new(sample_rate: f64, cap: usize) -> Recorder {
+        Recorder {
+            sample_rate,
+            cap: cap.max(1),
+            buf: Vec::new(),
+            head: 0,
+            dropped: 0,
+            lanes: Vec::new(),
+        }
+    }
+
+    /// Deterministic per-request sampling decision.
+    pub fn sampled(&self, req: u32) -> bool {
+        if self.sample_rate >= 1.0 {
+            return true;
+        }
+        if self.sample_rate <= 0.0 {
+            return false;
+        }
+        // Top 53 bits → uniform in [0, 1).
+        let u = (fnv1a(req) >> 11) as f64 / (1u64 << 53) as f64;
+        u < self.sample_rate
+    }
+
+    pub fn emit(&mut self, t: f64, ev: TraceEvent) {
+        if let Some(r) = ev.req() {
+            if !self.sampled(r) {
+                return;
+            }
+        }
+        let s = Stamped { t, ev };
+        if self.buf.len() < self.cap {
+            self.buf.push(s);
+        } else {
+            // Ring wrap: overwrite the oldest event.
+            self.buf[self.head] = s;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Replica lane map (index = arena index), set by the engine at the
+    /// end of a run.
+    pub fn set_lanes(&mut self, lanes: Vec<Lane>) {
+        self.lanes = lanes;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Finish the recording: rotate the ring back to chronological order.
+    pub fn into_log(mut self) -> TraceLog {
+        self.buf.rotate_left(self.head);
+        TraceLog {
+            events: self.buf,
+            dropped: self.dropped,
+            sample_rate: self.sample_rate,
+            lanes: self.lanes,
+        }
+    }
+}
+
+impl TraceSink for Recorder {
+    #[inline]
+    fn emit(&mut self, t: f64, ev: TraceEvent) {
+        Recorder::emit(self, t, ev)
+    }
+
+    #[inline]
+    fn recorder(&mut self) -> Option<&mut Recorder> {
+        Some(self)
+    }
+}
+
+/// A finished recording: chronological events plus lane metadata.
+#[derive(Clone, Debug, Default)]
+pub struct TraceLog {
+    /// Events in time order (ring rotated on export).
+    pub events: Vec<Stamped>,
+    /// Events lost to ring-buffer wrap. Trace-derived metrics
+    /// ([`derive_metrics`]) only conserve the engine's counters when this
+    /// is 0 and `sample_rate` is 1.0.
+    pub dropped: usize,
+    pub sample_rate: f64,
+    /// Serving discipline per arena replica index (Perfetto lane names).
+    pub lanes: Vec<Lane>,
+}
+
+impl TraceLog {
+    /// Mem-stall count among events stamped in `[t0, t1)` — the per-window
+    /// reconstruction `SimReport::windowed` uses.
+    pub fn mem_stalls_in(&self, t0: f64, t1: f64) -> usize {
+        self.events
+            .iter()
+            .filter(|s| s.t >= t0 && s.t < t1)
+            .filter(|s| matches!(s.ev, TraceEvent::MemStall { .. }))
+            .count()
+    }
+
+    /// KV queue-wait seconds among transfers enqueued in `[t0, t1)`.
+    pub fn kv_wait_in(&self, t0: f64, t1: f64) -> f64 {
+        self.events
+            .iter()
+            .filter(|s| s.t >= t0 && s.t < t1)
+            .filter_map(|s| match s.ev {
+                TraceEvent::KvEnqueue { wait_s, .. } => Some(wait_s),
+                _ => None,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_sink_records_nothing() {
+        let mut s = NoopSink;
+        s.emit(1.0, TraceEvent::Arrive { req: 0 });
+        assert!(s.recorder().is_none());
+    }
+
+    #[test]
+    fn recorder_keeps_events_in_order() {
+        let mut r = Recorder::new(1.0, 1024);
+        for i in 0..10u32 {
+            r.emit(i as f64, TraceEvent::Arrive { req: i });
+        }
+        let log = r.into_log();
+        assert_eq!(log.events.len(), 10);
+        assert_eq!(log.dropped, 0);
+        assert!(log.events.windows(2).all(|w| w[0].t <= w[1].t));
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_dropped() {
+        let mut r = Recorder::new(1.0, 4);
+        for i in 0..10u32 {
+            r.emit(i as f64, TraceEvent::Arrive { req: i });
+        }
+        let log = r.into_log();
+        assert_eq!(log.events.len(), 4);
+        assert_eq!(log.dropped, 6);
+        // Oldest events were overwritten; the survivors are chronological.
+        assert_eq!(log.events[0].t, 6.0);
+        assert!(log.events.windows(2).all(|w| w[0].t <= w[1].t));
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_per_request() {
+        let r = Recorder::new(0.5, 16);
+        let kept: Vec<bool> = (0..64).map(|i| r.sampled(i)).collect();
+        let again: Vec<bool> = (0..64).map(|i| r.sampled(i)).collect();
+        assert_eq!(kept, again);
+        let n = kept.iter().filter(|&&k| k).count();
+        assert!(n > 8 && n < 56, "rate 0.5 kept {n}/64");
+        // Replica-scoped events bypass sampling entirely.
+        let mut r0 = Recorder::new(0.0, 16);
+        r0.emit(0.0, TraceEvent::Arrive { req: 3 });
+        r0.emit(0.0, TraceEvent::MemStall { replica: 1 });
+        assert_eq!(r0.len(), 1);
+    }
+
+    #[test]
+    fn windowed_helpers_filter_by_time() {
+        let mut r = Recorder::new(1.0, 64);
+        r.emit(1.0, TraceEvent::MemStall { replica: 0 });
+        r.emit(5.0, TraceEvent::MemStall { replica: 0 });
+        r.emit(
+            5.0,
+            TraceEvent::KvEnqueue { req: 0, src: 0, dst: 1, bytes: 8.0, wait_s: 0.25 },
+        );
+        let log = r.into_log();
+        assert_eq!(log.mem_stalls_in(0.0, 2.0), 1);
+        assert_eq!(log.mem_stalls_in(0.0, 10.0), 2);
+        assert_eq!(log.kv_wait_in(0.0, 2.0), 0.0);
+        assert_eq!(log.kv_wait_in(2.0, 10.0), 0.25);
+    }
+}
