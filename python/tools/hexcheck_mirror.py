@@ -1,0 +1,720 @@
+#!/usr/bin/env python3
+"""Non-canonical Python mirror of `hexgen2 check` (rust/src/analysis/).
+
+The canonical checker is the Rust implementation; this transliteration
+exists so environments without a Rust toolchain (like the one this repo
+is grown in) can triage findings and seed `rust/hexcheck-baseline.json`.
+Keep it in lockstep with the Rust lexer/rules — the self-check test in
+`rust/tests/hexcheck.rs` catches baseline drift when tier-1 runs.
+
+Usage:
+    python3 python/tools/hexcheck_mirror.py [--src rust/src] [--json]
+    python3 python/tools/hexcheck_mirror.py --update-baseline
+"""
+
+import json
+import os
+import sys
+
+# ---------------------------------------------------------------- lexer
+
+
+def is_ident(c):
+    return c.isalnum() and c.isascii() or c == "_"
+
+
+def clean_text(src, keep_comments=False):
+    chars = src
+    n = len(chars)
+    out = []
+    cur = []
+    i = 0
+
+    def put(c):
+        if c == "\n":
+            out.append("".join(cur))
+            cur.clear()
+        else:
+            cur.append(c)
+
+    def keep(c):
+        return c if keep_comments else " "
+
+    while i < n:
+        c = chars[i]
+        nxt = chars[i + 1] if i + 1 < n else "\0"
+        prev = chars[i - 1] if i > 0 else "\0"
+        if c == "/" and nxt == "/":
+            while i < n and chars[i] != "\n":
+                put(keep(chars[i]))
+                i += 1
+            continue
+        if c == "/" and nxt == "*":
+            depth = 1
+            put(keep("/"))
+            put(keep("*"))
+            i += 2
+            while i < n and depth > 0:
+                if chars[i] == "/" and i + 1 < n and chars[i + 1] == "*":
+                    depth += 1
+                    put(keep("/"))
+                    put(keep("*"))
+                    i += 2
+                elif chars[i] == "*" and i + 1 < n and chars[i + 1] == "/":
+                    depth -= 1
+                    put(keep("*"))
+                    put(keep("/"))
+                    i += 2
+                else:
+                    put("\n" if chars[i] == "\n" else keep(chars[i]))
+                    i += 1
+            continue
+        if not is_ident(prev) and (c == "r" or (c == "b" and nxt == "r")):
+            j = i + 1 if c == "r" else i + 2
+            hashes = 0
+            while j < n and chars[j] == "#":
+                hashes += 1
+                j += 1
+            if j < n and chars[j] == '"':
+                k = j + 1
+                close = n
+                while k < n:
+                    if chars[k] == '"':
+                        h = 0
+                        while k + 1 + h < n and h < hashes and chars[k + 1 + h] == "#":
+                            h += 1
+                        if h == hashes:
+                            close = k + hashes
+                            break
+                    k += 1
+                while i < n and i <= close:
+                    put("\n" if chars[i] == "\n" else " ")
+                    i += 1
+                continue
+        if c == '"' or (c == "b" and nxt == '"' and not is_ident(prev)):
+            if c == "b":
+                put(" ")
+                i += 1
+            put('"')
+            i += 1
+            while i < n:
+                if chars[i] == "\\" and i + 1 < n:
+                    put(" ")
+                    put("\n" if chars[i + 1] == "\n" else " ")
+                    i += 2
+                elif chars[i] == '"':
+                    put('"')
+                    i += 1
+                    break
+                else:
+                    put("\n" if chars[i] == "\n" else " ")
+                    i += 1
+            continue
+        if c == "'":
+            lifetime = (
+                i + 1 < n
+                and (chars[i + 1].isascii() and chars[i + 1].isalpha() or chars[i + 1] == "_")
+                and not (i + 2 < n and chars[i + 2] == "'")
+            )
+            if lifetime:
+                put(c)
+                i += 1
+                continue
+            put(" ")
+            i += 1
+            while i < n and chars[i] != "'":
+                if chars[i] == "\\" and i + 1 < n:
+                    put(" ")
+                    put(" ")
+                    i += 2
+                else:
+                    put(" ")
+                    i += 1
+            if i < n:
+                put(" ")
+                i += 1
+            continue
+        put(c)
+        i += 1
+    out.append("".join(cur))
+    return out
+
+
+def mark_test_blocks(lines):
+    excluded = [False] * len(lines)
+    li = 0
+    while li < len(lines):
+        if "#[cfg(test)]" not in lines[li]:
+            li += 1
+            continue
+        depth = 0
+        opened = False
+        lj = li
+        broke = False
+        while lj < len(lines):
+            excluded[lj] = True
+            for ch in lines[lj]:
+                if ch == "{":
+                    depth += 1
+                    opened = True
+                elif ch == "}":
+                    depth = max(0, depth - 1)
+                    if opened and depth == 0:
+                        broke = True
+                        break
+            if broke:
+                break
+            if not opened and ";" in lines[lj]:
+                break
+            lj += 1
+        li = lj + 1
+    return excluded
+
+
+MARK = "hexcheck: allow("
+
+
+def parse_allows(commented, cleaned, excluded):
+    allows = []  # (target_line_1b, comment_line_1b, rule, reason)
+    bad = []  # (line_1b, why)
+    for idx, line in enumerate(commented):
+        if idx < len(excluded) and excluded[idx]:
+            continue
+        at = line.find(MARK)
+        if at < 0:
+            continue
+        rest = line[at + len(MARK):]
+        close = rest.find(")")
+        if close < 0:
+            bad.append((idx + 1, "unclosed allow(...)"))
+            continue
+        rule = rest[:close].strip()
+        if not rule or not all(c.isalnum() and c.isascii() for c in rule):
+            bad.append((idx + 1, f"bad rule id '{rule}'"))
+            continue
+        tail = rest[close + 1:].strip()
+        reason = tail[2:].strip() if tail.startswith("--") else ""
+        if not reason:
+            bad.append((idx + 1, f"allow({rule}) without a `-- <reason>`"))
+            continue
+        target = idx
+        if idx >= len(cleaned) or not cleaned[idx].strip():
+            j = idx + 1
+            while j < len(cleaned) and not cleaned[j].strip():
+                j += 1
+            target = j
+        allows.append((target + 1, idx + 1, rule, reason))
+    return allows, bad
+
+
+def clean(src):
+    lines = clean_text(src, False)
+    if src.endswith("\n") and lines and lines[-1] == "":
+        lines.pop()
+    commented = clean_text(src, True)
+    if src.endswith("\n") and commented and commented[-1] == "":
+        commented.pop()
+    excluded = mark_test_blocks(lines)
+    allows, bad = parse_allows(commented, lines, excluded)
+    return lines, excluded, allows, bad
+
+
+# ---------------------------------------------------------------- rules
+
+
+def find_bounded(hay, needle):
+    needs_boundary = bool(needle) and is_ident(needle[0])
+    out = []
+    start = 0
+    while True:
+        at = hay.find(needle, start)
+        if at < 0:
+            return out
+        prev = hay[at - 1] if at > 0 else ""
+        if not needs_boundary or not (prev and is_ident(prev)):
+            out.append(at)
+        start = at + len(needle)
+
+
+def ident_before(line, end):
+    i = end
+    while i > 0 and is_ident(line[i - 1]):
+        i -= 1
+    if i == end:
+        return None
+    return line[i:end]
+
+
+def decl_name_before(line, at):
+    i = at
+    while i > 0:
+        c = line[i - 1]
+        if is_ident(c) or c in "<& '":
+            i -= 1
+        else:
+            break
+    if i == 0 or line[i - 1] != ":":
+        return None
+    if i >= 2 and line[i - 2] == ":":
+        return None
+    end = i - 1
+    j = end
+    while j > 0 and is_ident(line[j - 1]):
+        j -= 1
+    if j == end:
+        return None
+    return line[j:end]
+
+
+def hash_bindings(lines, excluded):
+    names = set()
+    for li, line in enumerate(lines):
+        if excluded[li]:
+            continue
+        trimmed = line.lstrip()
+        if trimmed.startswith("use "):
+            continue
+        if not any(p in line for p in ("HashMap<", "HashSet<", "HashMap::", "HashSet::")):
+            continue
+        lets = find_bounded(line, "let ")
+        if lets:
+            rest = line[lets[0] + 4:].lstrip()
+            if rest.startswith("mut "):
+                rest = rest[4:].lstrip()
+            name = ""
+            for c in rest:
+                if is_ident(c):
+                    name += c
+                else:
+                    break
+            if name:
+                names.add(name)
+            continue
+        for pat in ("HashMap<", "HashSet<"):
+            start = 0
+            while True:
+                at = line.find(pat, start)
+                if at < 0:
+                    break
+                name = decl_name_before(line, at)
+                if name:
+                    names.add(name)
+                start = at + len(pat)
+    return names
+
+
+def statement_tail(lines, li, col, max_lines):
+    out = []
+    depth = 0
+    for k in range(li, min(li + max_lines, len(lines))):
+        text = lines[k][col:] if k == li else lines[k]
+        for c in text:
+            out.append(c)
+            if c in "([{":
+                depth += 1
+            elif c in ")]}":
+                depth -= 1
+                if depth < 0:
+                    return "".join(out)
+            elif c == ";" and depth == 0:
+                return "".join(out)
+        out.append("\n")
+    return "".join(out)
+
+
+ORDERED = [".sort", ".len()", ".count()", ".is_empty()", ".contains", ".any(", ".all("]
+FLOAT_FOLD = ["sum::<f64>", "sum::<f32>", ".fold(0.0", ".fold(0f64", ".fold(0f32"]
+ITERS = [".iter()", ".iter_mut()", ".into_iter()", ".keys()", ".values()", ".values_mut()", ".drain("]
+D2_EXEMPT = ["util/rng.rs", "util/bench.rs", "experiments/perf.rs"]
+D2_PATTERNS = [
+    ("Instant::now(", "wall-clock read"),
+    ("SystemTime", "wall-clock read"),
+    ("thread_rng", "ad-hoc RNG"),
+    ("from_entropy", "ad-hoc RNG seeding"),
+    ("StdRng", "external RNG type"),
+    ("SmallRng", "external RNG type"),
+]
+P1_INDEX_MODULES = ["rescheduler", "kvtransfer"]
+PANICS = [".unwrap()", "panic!", "unreachable!", "todo!", "unimplemented!"]
+
+
+def module_of(path):
+    first = path.split("/")[0]
+    if first != path:
+        return first
+    return path[:-3] if path.endswith(".rs") else path
+
+
+def check_map_iteration(path, lines, excluded, module, out):
+    names = hash_bindings(lines, excluded)
+    if not names:
+        return
+    for li, line in enumerate(lines):
+        if excluded[li]:
+            continue
+        hits = []
+        for pat in ITERS:
+            for at in find_bounded(line, pat):
+                recv = ident_before(line, at)
+                if recv and recv in names:
+                    hits.append(at)
+        fats = find_bounded(line, "for ")
+        if fats:
+            fat = fats[0]
+            inats = find_bounded(line[fat:], " in ")
+            if inats:
+                expr_at = fat + inats[0] + 4
+                e = line[expr_at:].lstrip()
+                while True:
+                    if e.startswith("&"):
+                        e = e[1:].lstrip()
+                    elif e.startswith("mut "):
+                        e = e[4:].lstrip()
+                    elif e.startswith("self."):
+                        e = e[5:]
+                    else:
+                        break
+                name = ""
+                for c in e:
+                    if is_ident(c):
+                        name += c
+                    else:
+                        break
+                after = e[len(name):].lstrip()
+                bare = after.startswith("{") or after == ""
+                if bare and name in names:
+                    hits.append(expr_at)
+        for at in sorted(set(hits)):
+            tail = statement_tail(lines, li, at, 8)
+            sorted_after = ".collect" in tail and any(
+                ".sort" in l for l in lines[li:li + 3]
+            )
+            if any(p in tail for p in FLOAT_FOLD):
+                out.append(("F1", path, li + 1, module, line.strip()))
+            elif not any(p in tail for p in ORDERED) and not sorted_after:
+                out.append(("D1", path, li + 1, module, line.strip()))
+
+
+def check_banned_nondeterminism(path, lines, excluded, module, out):
+    if any(path.endswith(e) for e in D2_EXEMPT):
+        return
+    for li, line in enumerate(lines):
+        if excluded[li]:
+            continue
+        for pat, _what in D2_PATTERNS:
+            if find_bounded(line, pat):
+                out.append(("D2", path, li + 1, module, line.strip()))
+                break
+
+
+def check_panic_hygiene(path, lines, excluded, module, out):
+    check_indexing = module in P1_INDEX_MODULES
+    for li, line in enumerate(lines):
+        if excluded[li]:
+            continue
+        for pat in PANICS:
+            if find_bounded(line, pat):
+                out.append(("P1", path, li + 1, module, line.strip()))
+                break
+        if check_indexing:
+            for i, b in enumerate(line):
+                if b != "[" or i == 0:
+                    continue
+                prev = line[i - 1]
+                if is_ident(prev) or prev in "])":
+                    out.append(("P1", path, li + 1, module, line.strip()))
+                    break
+
+
+# ------------------------------------------------------------ lockorder
+
+LOCK_RANKS = [
+    ("scheduler/evalcache.rs", "owner", 10),
+    ("scheduler/evalcache.rs", "map", 20),
+    ("scheduler/strategy.rs", "prefill", 30),
+    ("scheduler/strategy.rs", "decode", 31),
+    ("scheduler/evalcache.rs", "audit", 40),
+]
+
+
+def rank_of(path, name):
+    for f, n, r in LOCK_RANKS:
+        if path.endswith(f) and n == name:
+            return r
+    return None
+
+
+def rank_by_name(name):
+    for _f, n, r in LOCK_RANKS:
+        if n == name:
+            return r
+    return None
+
+
+def lock_decls(lines, excluded):
+    out = []
+    for li, line in enumerate(lines):
+        if excluded[li]:
+            continue
+        trimmed = line.lstrip()
+        if trimmed.startswith("use "):
+            continue
+        if "Mutex<" not in line and "RwLock<" not in line:
+            continue
+        decl = trimmed
+        for prefix in ("pub(crate) ", "pub(super) ", "pub "):
+            if decl.startswith(prefix):
+                decl = decl[len(prefix):]
+        name = ""
+        for c in decl:
+            if is_ident(c):
+                name += c
+            else:
+                break
+        if not name or name in ("fn", "impl", "struct", "let", "type"):
+            continue
+        after = decl[len(name):]
+        colon = after.find(":")
+        if colon >= 0:
+            ty = after[colon:]
+            if "Mutex<" in ty or "RwLock<" in ty:
+                out.append((li + 1, name))
+    return out
+
+
+def binds_guard(line, after):
+    rest = line[after:].lstrip()
+    while True:
+        if rest.startswith(".unwrap()"):
+            rest = rest[len(".unwrap()"):].lstrip()
+        elif rest.startswith(".expect("):
+            r = rest[len(".expect("):]
+            close = r.find(")")
+            if close < 0:
+                return False
+            rest = r[close + 1:].lstrip()
+        else:
+            break
+    return rest == ";" or rest == ""
+
+
+def check_lock_order(path, lines, excluded, module, edges, out):
+    for line_no, name in lock_decls(lines, excluded):
+        if rank_of(path, name) is None:
+            out.append((
+                "L1", path, line_no, module,
+                f"lock `{name}` is not in the declared rank table",
+            ))
+    held = []  # (lock, depth, var)
+    depth = 0
+    for li, line in enumerate(lines):
+        if excluded[li]:
+            continue
+        trimmed = line.lstrip()
+        if trimmed.startswith(("fn ", "pub fn ", "pub(crate) fn ")):
+            held.clear()
+        positions = []  # (at, end, name)
+        for pat in (".lock()", ".read()", ".write()"):
+            start = 0
+            while True:
+                at = line.find(pat, start)
+                if at < 0:
+                    break
+                name = ident_before(line, at)
+                if name and (pat == ".lock()" or rank_by_name(name) is not None):
+                    positions.append((at, at + len(pat), name))
+                start = at + len(pat)
+        positions.sort()
+        acquired = []
+        for _at, _end, lock in positions:
+            live = [g[0] for g in held] + acquired
+            for h in live:
+                if h == lock:
+                    continue
+                edges.append((h, lock, path, li + 1))
+                hr, ar = rank_by_name(h), rank_by_name(lock)
+                if hr is None or ar is None or ar <= hr:
+                    out.append((
+                        "L1", path, li + 1, module,
+                        f"acquires `{lock}` while holding `{h}`",
+                    ))
+            acquired.append(lock)
+        named_var = None
+        if trimmed.startswith("let "):
+            rest = trimmed[4:]
+            if rest.startswith("mut "):
+                rest = rest[4:]
+            named_var = ""
+            for c in rest:
+                if is_ident(c):
+                    named_var += c
+                else:
+                    break
+        if named_var and len(positions) == 1 and binds_guard(line, positions[0][1]):
+            held.append((positions[0][2], depth, named_var))
+        for c in line:
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+                held = [g for g in held if g[1] <= depth]
+        start = 0
+        while True:
+            at = line.find("drop(", start)
+            if at < 0:
+                break
+            prev = line[at - 1] if at > 0 else ""
+            if not (prev and (is_ident(prev) or prev == ".")):
+                inner = ""
+                for c in line[at + 5:]:
+                    if is_ident(c):
+                        inner += c
+                    else:
+                        break
+                held = [g for g in held if g[2] != inner]
+            start = at + 5
+
+
+def detect_cycles(edges, out):
+    adj = {}
+    for h, a, f, line_no in edges:
+        adj.setdefault(h, []).append((a, f, line_no))
+    found = set()
+    for start in sorted(adj):
+        stack = [(start, [start])]
+        seen = []
+        while stack:
+            node, p = stack.pop()
+            for nxt, f, line_no in adj.get(node, []):
+                if nxt == start:
+                    found.add(("L1", f, line_no, "analysis",
+                               "lock cycle through {" + ", ".join(sorted(p)) + "}"))
+                    continue
+                if nxt in p or nxt in seen:
+                    continue
+                seen.append(nxt)
+                stack.append((nxt, p + [nxt]))
+    out.extend(sorted(found))
+
+
+# --------------------------------------------------------------- driver
+
+DENY_ALL = ["F1", "L1", "A0"]
+D1_DENY = ["simulator", "scheduler", "kvtransfer", "telemetry", "rescheduler"]
+P1_DENY = ["rescheduler", "kvtransfer"]
+
+
+def is_deny(rule, module):
+    if rule in DENY_ALL or rule == "D2":
+        return True
+    if rule == "D1":
+        return module in D1_DENY
+    if rule == "P1":
+        return module in P1_DENY
+    return False
+
+
+def check_files(files):
+    raw = []
+    edges = []
+    all_allows = []  # (path, target, comment_line, rule, reason)
+    for path, src in files:
+        lines, excluded, allows, bad = clean(src)
+        module = module_of(path)
+        check_map_iteration(path, lines, excluded, module, raw)
+        check_banned_nondeterminism(path, lines, excluded, module, raw)
+        check_panic_hygiene(path, lines, excluded, module, raw)
+        check_lock_order(path, lines, excluded, module, edges, raw)
+        for line_no, why in bad:
+            raw.append(("A0", path, line_no, module, f"malformed suppression: {why}"))
+        for target, comment_line, rule, reason in allows:
+            all_allows.append((path, target, comment_line, rule, reason))
+    detect_cycles(edges, raw)
+
+    findings, suppressed = [], []
+    used = [False] * len(all_allows)
+    for f in raw:
+        rule, path, line_no = f[0], f[1], f[2]
+        hit = None
+        for i, (apath, target, _cl, arule, _reason) in enumerate(all_allows):
+            if apath == path and target == line_no and arule == rule:
+                hit = i
+                break
+        if hit is not None:
+            used[hit] = True
+            suppressed.append(f)
+        else:
+            findings.append(f)
+    unused = [
+        (apath, cl, arule)
+        for i, (apath, _t, cl, arule, _r) in enumerate(all_allows)
+        if not used[i]
+    ]
+    findings.sort(key=lambda f: (f[1], f[2], f[0]))
+    return findings, suppressed, unused, edges
+
+
+def load_tree(root):
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for fn in sorted(filenames):
+            if fn.endswith(".rs"):
+                p = os.path.join(dirpath, fn)
+                rel = os.path.relpath(p, root).replace(os.sep, "/")
+                with open(p, encoding="utf-8") as fh:
+                    out.append((rel, fh.read()))
+    out.sort()
+    return out
+
+
+def main():
+    argv = sys.argv[1:]
+    src = "rust/src"
+    if "--src" in argv:
+        src = argv[argv.index("--src") + 1]
+    files = load_tree(src)
+    findings, suppressed, unused, edges = check_files(files)
+
+    if "--update-baseline" in argv:
+        counts = {}
+        for rule, _path, _line, module, _snip in findings:
+            if is_deny(rule, module):
+                continue
+            counts.setdefault(rule, {}).setdefault(module, 0)
+            counts[rule][module] += 1
+        doc = {
+            "schema": "hexgen2-hexcheck-baseline/v1",
+            "rules": {r: dict(sorted(m.items())) for r, m in sorted(counts.items())},
+        }
+        path = os.path.join(os.path.dirname(src.rstrip("/")) or ".", "hexcheck-baseline.json")
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(doc, fh, indent=1)
+            fh.write("\n")
+        print(f"wrote {path}")
+        return
+
+    if "--json" in argv:
+        print(json.dumps(
+            [
+                {"rule": r, "file": p, "line": l, "module": m, "snippet": s}
+                for r, p, l, m, s in findings
+            ],
+            indent=1,
+        ))
+    else:
+        print(
+            f"{len(files)} files, {len(findings)} findings, "
+            f"{len(suppressed)} suppressed, {len(unused)} unused allows, "
+            f"{len(edges)} lock edges"
+        )
+        for rule, path, line_no, module, snip in findings:
+            print(f"{rule} {path}:{line_no} [{module}] {snip[:100]}")
+        for path, line_no, rule in unused:
+            print(f"note: unused allow({rule}) at {path}:{line_no}")
+        for e in edges:
+            print(f"edge: {e[0]} -> {e[1]} at {e[2]}:{e[3]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,256 @@
+//! Ratchet baseline for `hexcheck` (DESIGN.md §13).
+//!
+//! The checked-in `rust/hexcheck-baseline.json` records, per (rule,
+//! module), how many findings existed when the ratchet was introduced.
+//! The gate fails when a bucket *rises* above its baseline; falling below
+//! is reported as a shrink opportunity (run `hexgen2 check
+//! --update-baseline` to lock the lower number in). Deny-listed buckets
+//! ignore the baseline entirely: any finding fails.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
+
+use super::Finding;
+
+pub const SCHEMA: &str = "hexgen2-hexcheck-baseline/v1";
+
+/// Per-(rule, module) allowed finding counts.
+#[derive(Clone, Debug, Default)]
+pub struct Baseline {
+    pub counts: BTreeMap<(String, String), usize>,
+}
+
+/// Rules that are deny (baseline-exempt) *everywhere*.
+const DENY_ALL: [&str; 3] = ["F1", "L1", "A0"];
+
+/// D1 deny modules: the determinism-critical planning/serving path.
+const D1_DENY: [&str; 5] = ["simulator", "scheduler", "kvtransfer", "telemetry", "rescheduler"];
+
+/// P1 deny modules: the online control loops.
+const P1_DENY: [&str; 2] = ["rescheduler", "kvtransfer"];
+
+/// Is this (rule, module) bucket deny (fails on any finding, baseline
+/// ignored) rather than ratcheted?
+pub fn is_deny(rule: &str, module: &str) -> bool {
+    if DENY_ALL.contains(&rule) {
+        return true;
+    }
+    match rule {
+        // D2's exempt files are skipped inside the rule itself; every
+        // finding that *does* surface is a policy violation.
+        "D2" => true,
+        "D1" => D1_DENY.contains(&module),
+        "P1" => P1_DENY.contains(&module),
+        _ => false,
+    }
+}
+
+impl Baseline {
+    pub fn from_findings(findings: &[Finding]) -> Self {
+        let mut counts: BTreeMap<(String, String), usize> = BTreeMap::new();
+        for f in findings {
+            if is_deny(&f.rule, &f.module) {
+                continue; // deny buckets never enter the baseline
+            }
+            *counts.entry((f.rule.clone(), f.module.clone())).or_insert(0) += 1;
+        }
+        Baseline { counts }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut rules: BTreeMap<&str, Vec<(&str, Json)>> = BTreeMap::new();
+        for ((rule, module), &n) in &self.counts {
+            rules
+                .entry(rule.as_str())
+                .or_default()
+                .push((module.as_str(), json::num(n as f64)));
+        }
+        json::obj(vec![
+            ("schema", json::s(SCHEMA)),
+            (
+                "rules",
+                json::obj(
+                    rules
+                        .into_iter()
+                        .map(|(rule, mods)| (rule, json::obj(mods)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let doc = Json::parse(text).map_err(|e| format!("baseline: {e}"))?;
+        let schema = doc.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != SCHEMA {
+            return Err(format!("baseline: unknown schema {schema:?} (want {SCHEMA})"));
+        }
+        let mut counts = BTreeMap::new();
+        let Some(Json::Obj(rules)) = doc.get("rules") else {
+            return Err("baseline: missing `rules` object".to_string());
+        };
+        for (rule, mods) in rules {
+            let Json::Obj(mods) = mods else {
+                return Err(format!("baseline: rules.{rule} is not an object"));
+            };
+            for (module, n) in mods {
+                let Some(n) = n.as_f64() else {
+                    return Err(format!("baseline: rules.{rule}.{module} is not a number"));
+                };
+                counts.insert((rule.clone(), module.clone()), n as usize);
+            }
+        }
+        Ok(Baseline { counts })
+    }
+}
+
+/// One gate decision for a (rule, module) bucket.
+#[derive(Clone, Debug)]
+pub struct GateEntry {
+    pub rule: String,
+    pub module: String,
+    pub count: usize,
+    pub allowed: usize,
+    pub deny: bool,
+}
+
+/// Result of gating a finding set against a baseline.
+#[derive(Clone, Debug, Default)]
+pub struct GateResult {
+    /// Buckets over budget — any entry here fails the run.
+    pub failures: Vec<GateEntry>,
+    /// Buckets now below their baseline — shrink the ratchet.
+    pub shrinkable: Vec<GateEntry>,
+}
+
+impl GateResult {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Gate `findings` (already suppression-filtered) against `baseline`.
+pub fn gate(findings: &[Finding], baseline: &Baseline) -> GateResult {
+    let mut counts: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for f in findings {
+        *counts.entry((f.rule.clone(), f.module.clone())).or_insert(0) += 1;
+    }
+    let mut res = GateResult::default();
+    for ((rule, module), &count) in &counts {
+        let deny = is_deny(rule, module);
+        let allowed = if deny {
+            0
+        } else {
+            baseline.counts.get(&(rule.clone(), module.clone())).copied().unwrap_or(0)
+        };
+        if count > allowed {
+            res.failures.push(GateEntry {
+                rule: rule.clone(),
+                module: module.clone(),
+                count,
+                allowed,
+                deny,
+            });
+        }
+    }
+    // Buckets whose debt shrank (or vanished entirely).
+    for ((rule, module), &allowed) in &baseline.counts {
+        let count = counts.get(&(rule.clone(), module.clone())).copied().unwrap_or(0);
+        if count < allowed {
+            res.shrinkable.push(GateEntry {
+                rule: rule.clone(),
+                module: module.clone(),
+                count,
+                allowed,
+                deny: false,
+            });
+        }
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &str, module: &str, line: usize) -> Finding {
+        Finding {
+            rule: rule.to_string(),
+            file: format!("{module}/x.rs"),
+            line,
+            module: module.to_string(),
+            msg: String::new(),
+            snippet: String::new(),
+        }
+    }
+
+    #[test]
+    fn deny_matrix() {
+        assert!(is_deny("D1", "simulator"));
+        assert!(is_deny("D1", "kvtransfer"));
+        assert!(!is_deny("D1", "coordinator"));
+        assert!(is_deny("P1", "rescheduler"));
+        assert!(!is_deny("P1", "model"));
+        assert!(is_deny("F1", "anything"));
+        assert!(is_deny("L1", "anything"));
+        assert!(is_deny("D2", "anything"));
+        assert!(is_deny("A0", "anything"));
+    }
+
+    #[test]
+    fn ratchet_fails_only_above_baseline() {
+        let base = Baseline::from_findings(&[
+            finding("P1", "model", 1),
+            finding("P1", "model", 2),
+        ]);
+        assert_eq!(base.counts.get(&("P1".into(), "model".into())), Some(&2));
+        // At baseline: clean.
+        let now = vec![finding("P1", "model", 1), finding("P1", "model", 9)];
+        assert!(gate(&now, &base).ok());
+        // Above: fails with the bucket identified.
+        let worse = vec![
+            finding("P1", "model", 1),
+            finding("P1", "model", 2),
+            finding("P1", "model", 3),
+        ];
+        let g = gate(&worse, &base);
+        assert!(!g.ok());
+        assert_eq!(g.failures[0].count, 3);
+        assert_eq!(g.failures[0].allowed, 2);
+        // Below: clean, but reported shrinkable.
+        let better = vec![finding("P1", "model", 1)];
+        let g = gate(&better, &base);
+        assert!(g.ok());
+        assert_eq!(g.shrinkable.len(), 1);
+        assert_eq!(g.shrinkable[0].count, 1);
+    }
+
+    #[test]
+    fn deny_findings_fail_regardless_of_baseline() {
+        // A deny finding can't be baselined away: from_findings skips it
+        // and gate() zeroes its budget.
+        let base = Baseline::from_findings(&[finding("P1", "kvtransfer", 1)]);
+        assert!(base.counts.is_empty());
+        let g = gate(&[finding("P1", "kvtransfer", 1)], &base);
+        assert!(!g.ok());
+        assert!(g.failures[0].deny);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let base = Baseline::from_findings(&[
+            finding("P1", "model", 1),
+            finding("P1", "model", 2),
+            finding("D1", "coordinator", 3),
+        ]);
+        let text = base.to_json().to_string_pretty();
+        let back = Baseline::parse(&text).expect("round trip parses");
+        assert_eq!(back.counts, base.counts);
+    }
+
+    #[test]
+    fn parse_rejects_bad_schema() {
+        assert!(Baseline::parse("{\"schema\": \"nope\", \"rules\": {}}").is_err());
+    }
+}

@@ -1,0 +1,394 @@
+//! Source preparation for `hexcheck` (DESIGN.md §13): strip comments and
+//! literal contents, excise `#[cfg(test)]` items, and collect inline
+//! suppression comments — `allow(<rule>) -- <reason>` after the
+//! `hexcheck:` marker.
+//!
+//! Suppressions are scanned on a *strings-blanked, comments-kept* view of
+//! the source (and never in test-excluded regions), so the marker text
+//! appearing inside a string literal — this crate's own pattern tables,
+//! test fixtures, the CLI help — is not a suppression.
+//!
+//! This is deliberately a *lexer*, not a parser: every downstream rule works
+//! on cleaned line text whose byte offsets match the original (each blanked
+//! character becomes a space, newlines stay put), so findings report real
+//! line numbers without needing a Rust grammar. The machine knows exactly
+//! the lexical constructs that can hide rule patterns: line comments,
+//! nested block comments, string literals (plain, byte, raw with any `#`
+//! count, multi-line), char literals vs lifetimes, and test modules.
+//!
+//! `python/tools/hexcheck_mirror.py` is a line-for-line transliteration of
+//! this module used to seed `hexcheck-baseline.json` in environments
+//! without a Rust toolchain; behavioural changes here must be mirrored
+//! there (the self-check test in `tests/hexcheck.rs` catches drift).
+
+/// A suppression comment resolved to the line it covers.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// 1-based line the suppression applies to (the next code line, or the
+    /// comment's own line when it trails code).
+    pub line: usize,
+    /// 1-based line of the comment itself.
+    pub comment_line: usize,
+    /// Rule id inside `allow(...)`, e.g. `D1`.
+    pub rule: String,
+    /// Justification after `--` (never empty; empty ones land in
+    /// [`Cleaned::bad_allows`] instead).
+    pub reason: String,
+}
+
+/// Cleaned view of one source file.
+pub struct Cleaned {
+    /// Code text per line: comments and string/char contents blanked with
+    /// spaces (string quotes kept), aligned with the original line by line.
+    pub lines: Vec<String>,
+    /// Per line: inside a `#[cfg(test)]` item (excluded from every rule).
+    pub excluded: Vec<bool>,
+    pub allows: Vec<Allow>,
+    /// Malformed suppressions, (1-based line, why): an `allow` without a
+    /// `-- <reason>` tail is itself a finding (rule A0).
+    pub bad_allows: Vec<(usize, String)>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Blank literal contents — and comments too unless `keep_comments` —
+/// preserving line structure.
+fn clean_text(src: &str, keep_comments: bool) -> Vec<String> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out: Vec<String> = Vec::new();
+    let mut cur = String::new();
+    let mut i = 0usize;
+    // Append `c` to the current line, splitting on newlines. Blanked
+    // regions call this with spaces so columns stay aligned.
+    macro_rules! put {
+        ($c:expr) => {{
+            let c: char = $c;
+            if c == '\n' {
+                out.push(std::mem::take(&mut cur));
+            } else {
+                cur.push(c);
+            }
+        }};
+    }
+    while i < n {
+        let c = chars[i];
+        let next = if i + 1 < n { chars[i + 1] } else { '\0' };
+        let prev = if i > 0 { chars[i - 1] } else { '\0' };
+        if c == '/' && next == '/' {
+            // Line comment: blank (or copy) to end of line.
+            while i < n && chars[i] != '\n' {
+                put!(if keep_comments { chars[i] } else { ' ' });
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && next == '*' {
+            // Block comment, nesting per Rust.
+            let mut depth = 1usize;
+            let keep = |c: char| if keep_comments { c } else { ' ' };
+            put!(keep('/'));
+            put!(keep('*'));
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    put!(keep('/'));
+                    put!(keep('*'));
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    put!(keep('*'));
+                    put!(keep('/'));
+                    i += 2;
+                } else {
+                    put!(if chars[i] == '\n' { '\n' } else { keep(chars[i]) });
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw strings r"..", r#".."#, br".." (prev char must not be ident:
+        // `var` ends in r but is not a raw-string opener).
+        if !is_ident(prev) && (c == 'r' || (c == 'b' && next == 'r')) {
+            let mut j = if c == 'r' { i + 1 } else { i + 2 };
+            let mut hashes = 0usize;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && chars[j] == '"' {
+                // Blank from i through the closing quote + hashes.
+                let mut k = j + 1;
+                let close = loop {
+                    if k >= n {
+                        break n;
+                    }
+                    if chars[k] == '"' {
+                        let mut h = 0usize;
+                        while k + 1 + h < n && h < hashes && chars[k + 1 + h] == '#' {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            break k + hashes;
+                        }
+                    }
+                    k += 1;
+                };
+                while i < n && i <= close {
+                    put!(if chars[i] == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Plain / byte strings (multi-line capable).
+        if c == '"' || (c == 'b' && next == '"' && !is_ident(prev)) {
+            if c == 'b' {
+                put!(' ');
+                i += 1;
+            }
+            put!('"');
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' && i + 1 < n {
+                    put!(' ');
+                    put!(if chars[i + 1] == '\n' { '\n' } else { ' ' });
+                    i += 2;
+                } else if chars[i] == '"' {
+                    put!('"');
+                    i += 1;
+                    break;
+                } else {
+                    put!(if chars[i] == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime: `'a` followed by a non-quote is a
+        // lifetime (kept as code); otherwise consume the literal.
+        if c == '\'' {
+            let lifetime = i + 1 < n
+                && (chars[i + 1].is_ascii_alphabetic() || chars[i + 1] == '_')
+                && !(i + 2 < n && chars[i + 2] == '\'');
+            if lifetime {
+                put!(c);
+                i += 1;
+                continue;
+            }
+            put!(' ');
+            i += 1;
+            while i < n && chars[i] != '\'' {
+                if chars[i] == '\\' && i + 1 < n {
+                    put!(' ');
+                    put!(' ');
+                    i += 2;
+                } else {
+                    put!(' ');
+                    i += 1;
+                }
+            }
+            if i < n {
+                put!(' '); // closing quote
+                i += 1;
+            }
+            continue;
+        }
+        put!(c);
+        i += 1;
+    }
+    out.push(cur);
+    out
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item: from the attribute
+/// through the matching close brace of the item it decorates.
+fn mark_test_blocks(lines: &[String]) -> Vec<bool> {
+    let mut excluded = vec![false; lines.len()];
+    let mut li = 0usize;
+    while li < lines.len() {
+        if !lines[li].contains("#[cfg(test)]") {
+            li += 1;
+            continue;
+        }
+        // Find the first `{` at or after the attribute; brace-match from it.
+        let mut depth = 0usize;
+        let mut opened = false;
+        let mut lj = li;
+        'outer: while lj < lines.len() {
+            excluded[lj] = true;
+            for ch in lines[lj].chars() {
+                if ch == '{' {
+                    depth += 1;
+                    opened = true;
+                } else if ch == '}' {
+                    depth = depth.saturating_sub(1);
+                    if opened && depth == 0 {
+                        break 'outer;
+                    }
+                }
+            }
+            // A braceless item (`#[cfg(test)] mod tests;`) ends at `;`.
+            if !opened && lines[lj].contains(';') {
+                break;
+            }
+            lj += 1;
+        }
+        li = lj + 1;
+    }
+    excluded
+}
+
+/// Parse suppression comments (`allow(RULE) -- reason` after the marker)
+/// from the strings-blanked/comments-kept view, skipping test-excluded
+/// lines.
+fn parse_allows(
+    commented: &[String],
+    cleaned: &[String],
+    excluded: &[bool],
+) -> (Vec<Allow>, Vec<(usize, String)>) {
+    const MARK: &str = "hexcheck: allow(";
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    for (idx, line) in commented.iter().enumerate() {
+        if excluded.get(idx).copied().unwrap_or(false) {
+            continue;
+        }
+        let Some(at) = line.find(MARK) else { continue };
+        let rest = &line[at + MARK.len()..];
+        let Some(close) = rest.find(')') else {
+            bad.push((idx + 1, "unclosed allow(...)".to_string()));
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        if rule.is_empty() || !rule.chars().all(|c| c.is_ascii_alphanumeric()) {
+            bad.push((idx + 1, format!("bad rule id '{rule}'")));
+            continue;
+        }
+        let tail = rest[close + 1..].trim();
+        let reason = tail.strip_prefix("--").map(str::trim).unwrap_or("");
+        if reason.is_empty() {
+            bad.push((idx + 1, format!("allow({rule}) without a `-- <reason>`")));
+            continue;
+        }
+        // Target: the comment's own line if it trails code, else the next
+        // line with any code on it.
+        let mut target = idx;
+        if cleaned.get(idx).map(|l| l.trim().is_empty()).unwrap_or(true) {
+            let mut j = idx + 1;
+            while j < cleaned.len() && cleaned[j].trim().is_empty() {
+                j += 1;
+            }
+            target = j;
+        }
+        allows.push(Allow {
+            line: target + 1,
+            comment_line: idx + 1,
+            rule,
+            reason: reason.to_string(),
+        });
+    }
+    (allows, bad)
+}
+
+/// Run the full lexical pass over one file's source.
+pub fn clean(src: &str) -> Cleaned {
+    let mut lines = clean_text(src, false);
+    // `clean_text` emits a trailing empty line for sources ending in \n;
+    // drop it so line counts match `str::lines`.
+    if src.ends_with('\n') && lines.last().map(|l| l.is_empty()).unwrap_or(false) {
+        lines.pop();
+    }
+    let mut commented = clean_text(src, true);
+    if src.ends_with('\n') && commented.last().map(|l| l.is_empty()).unwrap_or(false) {
+        commented.pop();
+    }
+    let excluded = mark_test_blocks(&lines);
+    let (allows, bad_allows) = parse_allows(&commented, &lines, &excluded);
+    Cleaned { lines, excluded, allows, bad_allows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_blank_but_align() {
+        let c = clean("let x = \"a.unwrap()\"; // trailing unwrap()\nlet y = 1; /* u() */ z();");
+        assert_eq!(c.lines.len(), 2);
+        assert!(!c.lines[0].contains("unwrap"));
+        assert!(!c.lines[1].contains("u()"));
+        assert!(c.lines[1].contains("z();"));
+        // Offsets preserved.
+        assert_eq!(c.lines[0].find("let"), Some(0));
+        assert_eq!(c.lines[0].len(), "let x = \"a.unwrap()\"; // trailing unwrap()".len());
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings() {
+        let c = clean("a(); /* x /* y */ z */ b();\nlet s = r#\"panic!(\"#; c();");
+        assert!(c.lines[0].contains("a();"));
+        assert!(c.lines[0].contains("b();"));
+        assert!(!c.lines[0].contains('z'));
+        assert!(!c.lines[1].contains("panic"));
+        assert!(c.lines[1].contains("c();"));
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_structure() {
+        let c = clean("let s = \"line one\n  .unwrap()\n\"; f();");
+        assert_eq!(c.lines.len(), 3);
+        assert!(!c.lines[1].contains("unwrap"));
+        assert!(c.lines[2].contains("f();"));
+    }
+
+    #[test]
+    fn lifetimes_survive_char_literals_blank() {
+        let c = clean("fn f<'a>(x: &'a str) { let c = 'x'; let q = '\\''; g(c, q); }");
+        assert!(c.lines[0].contains("<'a>"));
+        assert!(c.lines[0].contains("&'a str"));
+        assert!(!c.lines[0].contains("'x'"));
+        assert!(c.lines[0].contains("g(c, q);"));
+    }
+
+    #[test]
+    fn test_modules_are_excluded() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\nfn tail() {}\n";
+        let c = clean(src);
+        assert_eq!(c.excluded, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn allows_resolve_to_code_lines() {
+        let src = "\
+// hexcheck: allow(D1) -- max-fold is order independent
+for v in m.values() { }
+x(); // hexcheck: allow(P1) -- guarded by is_empty above
+// hexcheck: allow(D2)
+y();
+";
+        let c = clean(src);
+        assert_eq!(c.allows.len(), 2);
+        assert_eq!((c.allows[0].line, c.allows[0].rule.as_str()), (2, "D1"));
+        assert_eq!((c.allows[1].line, c.allows[1].rule.as_str()), (3, "P1"));
+        assert_eq!(c.bad_allows.len(), 1, "reasonless allow must be malformed");
+        assert_eq!(c.bad_allows[0].0, 4);
+    }
+
+    #[test]
+    fn marker_in_strings_or_test_code_is_not_a_suppression() {
+        // The marker inside a string literal (the checker's own pattern
+        // tables, CLI help) must not parse as an allow...
+        let src = "let m = \"hexcheck: allow(D1) -- not real\";\n";
+        let c = clean(src);
+        assert!(c.allows.is_empty(), "{:?}", c.allows[0].rule);
+        assert!(c.bad_allows.is_empty());
+        // ...and neither must comments inside #[cfg(test)] items.
+        let src2 = "#[cfg(test)]\nmod tests {\n    // hexcheck: allow(P1) -- fixture\n    fn t() {}\n}\n";
+        let c2 = clean(src2);
+        assert!(c2.allows.is_empty());
+    }
+}

@@ -1,0 +1,457 @@
+//! L1 lock-order analysis (DESIGN.md §13): extract `Mutex`/`RwLock`
+//! declaration and acquisition sites, check nested acquisitions against
+//! the declared rank table, and run cycle detection over the static lock
+//! graph.
+//!
+//! Scope and honesty: this is an *intra-function, lexical* analysis. A
+//! named guard (`let g = x.lock().unwrap();`) is held from its binding
+//! until the enclosing brace closes or an explicit `drop(g)`; a
+//! statement-temporary holds only for earlier-vs-later acquisitions on
+//! the same line. Cross-function holding (calling a method that locks
+//! while the caller holds a guard) is not modeled — the declared rank
+//! table plus the small, deliberate lock universe (EvalCache →
+//! StrategyCache → AuditLog) keeps that gap acceptable, and the table
+//! itself documents the convention that previously existed only in a
+//! commit message.
+
+use std::collections::BTreeMap;
+
+use super::lexer::Cleaned;
+use super::{Finding, SourceFile};
+
+/// Declared lock ranks, lowest acquired first. Nested acquisitions must
+/// strictly increase in rank. The three logical levels are EvalCache
+/// (owner, map) → StrategyCache (prefill, decode) → AuditLog. The audit
+/// ring buffer lives inside `EvalCache` as the `audit` field but ranks
+/// *after* the strategy caches: audit records are appended leaf-last,
+/// never while another lock is wanted.
+pub const LOCK_RANKS: &[(&str, &str, u32)] = &[
+    ("scheduler/evalcache.rs", "owner", 10),
+    ("scheduler/evalcache.rs", "map", 20),
+    ("scheduler/strategy.rs", "prefill", 30),
+    ("scheduler/strategy.rs", "decode", 31),
+    ("scheduler/evalcache.rs", "audit", 40),
+];
+
+/// A nested-acquisition edge in the static lock graph.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LockEdge {
+    /// Lock already held (field name as declared).
+    pub held: String,
+    /// Lock acquired while `held` is live.
+    pub acquired: String,
+    pub file: String,
+    pub line: usize,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn rank_of(file: &str, name: &str) -> Option<u32> {
+    LOCK_RANKS
+        .iter()
+        .find(|(f, n, _)| file.ends_with(f) && *n == name)
+        .map(|&(_, _, r)| r)
+}
+
+/// Any rank declared under this name in any file — used at acquisition
+/// sites, where the receiver name is all the lexer knows.
+fn rank_by_name(name: &str) -> Option<u32> {
+    LOCK_RANKS.iter().find(|(_, n, _)| *n == name).map(|&(_, _, r)| r)
+}
+
+/// Every declared lock name, for the stale-table check in the self-test.
+pub fn declared_lock_names() -> Vec<(&'static str, &'static str)> {
+    LOCK_RANKS.iter().map(|&(f, n, _)| (f, n)).collect()
+}
+
+/// `Mutex<`/`RwLock<` field declarations in this file: (1-based line, name).
+pub fn lock_decls(cleaned: &Cleaned) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (li, line) in cleaned.lines.iter().enumerate() {
+        if cleaned.excluded[li] {
+            continue;
+        }
+        let trimmed = line.trim_start();
+        if trimmed.starts_with("use ") {
+            continue;
+        }
+        if !(line.contains("Mutex<") || line.contains("RwLock<")) {
+            continue;
+        }
+        let mut decl = trimmed;
+        for prefix in ["pub(crate) ", "pub(super) ", "pub "] {
+            if let Some(r) = decl.strip_prefix(prefix) {
+                decl = r;
+            }
+        }
+        let name: String = decl.chars().take_while(|&c| is_ident(c)).collect();
+        if name.is_empty() || ["fn", "impl", "struct", "let", "type"].contains(&name.as_str()) {
+            continue;
+        }
+        let after = &decl[name.len()..];
+        if let Some(colon) = after.find(':') {
+            let ty = &after[colon..];
+            if ty.contains("Mutex<") || ty.contains("RwLock<") {
+                out.push((li + 1, name));
+            }
+        }
+    }
+    out
+}
+
+/// Receiver identifier of an acquisition at `at` (the byte of the `.`
+/// before `lock()`), e.g. `self.map.lock()` → `map`.
+fn receiver(line: &str, at: usize) -> Option<&str> {
+    let bytes = line.as_bytes();
+    let mut i = at;
+    while i > 0 && is_ident(bytes[i - 1] as char) {
+        i -= 1;
+    }
+    if i == at {
+        return None;
+    }
+    Some(&line[i..at])
+}
+
+/// Does the text after the acquisition consist only of `.unwrap()` /
+/// `.expect(..)` and then end the statement? If so a `let` on this line
+/// binds a *guard* (the lock stays held); anything else (`.len()`,
+/// `.get(..)`, `.clone()`) extracts a value and the guard is a temporary.
+fn binds_guard(line: &str, after: usize) -> bool {
+    let mut rest = line[after..].trim_start();
+    loop {
+        if let Some(r) = rest.strip_prefix(".unwrap()") {
+            rest = r.trim_start();
+        } else if let Some(r) = rest.strip_prefix(".expect(") {
+            // String contents are blanked by the lexer, so the first `)`
+            // really closes the expect call.
+            match r.find(')') {
+                Some(close) => rest = r[close + 1..].trim_start(),
+                None => return false,
+            }
+        } else {
+            break;
+        }
+    }
+    rest == ";" || rest.is_empty()
+}
+
+/// One live named guard inside a function scan.
+struct Guard {
+    lock: String,
+    /// Brace depth at the binding; the guard dies when depth drops below.
+    depth: i32,
+    /// Bound variable name, for `drop(name)` release.
+    var: String,
+}
+
+/// Scan one file, producing lock-graph edges and findings for undeclared
+/// or mis-ranked nested acquisitions.
+pub fn check_file(
+    file: &SourceFile,
+    cleaned: &Cleaned,
+    module: &str,
+    edges: &mut Vec<LockEdge>,
+    out: &mut Vec<Finding>,
+) {
+    // Any Mutex/RwLock field this file declares must appear in LOCK_RANKS,
+    // else the rank table has silently drifted from the code.
+    for (line, name) in lock_decls(cleaned) {
+        if rank_of(&file.path, &name).is_none() {
+            out.push(Finding {
+                rule: "L1".to_string(),
+                file: file.path.clone(),
+                line,
+                module: module.to_string(),
+                msg: format!(
+                    "lock `{name}` is not in the declared rank table \
+                     (analysis/lockorder.rs LOCK_RANKS); declare its rank or \
+                     justify with an allow"
+                ),
+                snippet: cleaned.lines[line - 1].trim().to_string(),
+            });
+        }
+    }
+
+    let mut held: Vec<Guard> = Vec::new();
+    let mut depth: i32 = 0;
+    for (li, line) in cleaned.lines.iter().enumerate() {
+        if cleaned.excluded[li] {
+            continue;
+        }
+        let trimmed = line.trim_start();
+        // Function boundary: guards never leak across items (belt — the
+        // depth-based retain below is the suspenders).
+        if trimmed.starts_with("fn ")
+            || trimmed.starts_with("pub fn ")
+            || trimmed.starts_with("pub(crate) fn ")
+        {
+            held.clear();
+        }
+
+        // Acquisitions on this line, textual order. `.lock()` always
+        // counts; `.read()`/`.write()` only for names in the rank table
+        // (those method names are too common to scan unconditionally).
+        let mut positions: Vec<(usize, usize, String)> = Vec::new(); // (at, end, name)
+        for pat in [".lock()", ".read()", ".write()"] {
+            let mut from = 0usize;
+            while let Some(rel) = line[from..].find(pat) {
+                let at = from + rel;
+                if let Some(name) = receiver(line, at) {
+                    let known = rank_by_name(name).is_some();
+                    if pat == ".lock()" || known {
+                        positions.push((at, at + pat.len(), name.to_string()));
+                    }
+                }
+                from = at + pat.len();
+            }
+        }
+        positions.sort_by_key(|&(at, _, _)| at);
+
+        let mut acquired_this_stmt: Vec<String> = Vec::new();
+        for (_, _, lock) in &positions {
+            let live: Vec<&str> = held
+                .iter()
+                .map(|g| g.lock.as_str())
+                .chain(acquired_this_stmt.iter().map(String::as_str))
+                .collect();
+            for h in live {
+                if h == lock.as_str() {
+                    continue;
+                }
+                edges.push(LockEdge {
+                    held: h.to_string(),
+                    acquired: lock.clone(),
+                    file: file.path.clone(),
+                    line: li + 1,
+                });
+                let (hr, ar) = (rank_by_name(h), rank_by_name(lock));
+                let violation = match (hr, ar) {
+                    (Some(hr), Some(ar)) => ar <= hr,
+                    _ => true, // nesting undeclared locks is itself a finding
+                };
+                if violation {
+                    out.push(Finding {
+                        rule: "L1".to_string(),
+                        file: file.path.clone(),
+                        line: li + 1,
+                        module: module.to_string(),
+                        msg: format!(
+                            "acquires `{lock}` (rank {ar:?}) while holding `{h}` \
+                             (rank {hr:?}); nested acquisitions must strictly \
+                             increase in declared rank"
+                        ),
+                        snippet: line.trim().to_string(),
+                    });
+                }
+            }
+            acquired_this_stmt.push(lock.clone());
+        }
+
+        // A named guard: `let g = self.x.lock().unwrap();` keeps the lock
+        // held past this statement (value-extracting lets do not).
+        let named_var: Option<String> = trimmed.strip_prefix("let ").map(|rest| {
+            let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+            rest.chars().take_while(|&c| is_ident(c)).collect::<String>()
+        });
+        if let (Some(var), [(_, end, lock)]) = (named_var, positions.as_slice()) {
+            if !var.is_empty() && binds_guard(line, *end) {
+                held.push(Guard { lock: lock.clone(), depth, var });
+            }
+        }
+
+        for c in line.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    held.retain(|g| g.depth <= depth);
+                }
+                _ => {}
+            }
+        }
+        // Explicit early release: `drop(g);`.
+        let mut from = 0usize;
+        while let Some(rel) = line[from..].find("drop(") {
+            let at = from + rel;
+            let prev = line[..at].chars().next_back();
+            if !prev.map(|c| is_ident(c) || c == '.').unwrap_or(false) {
+                let inner: String =
+                    line[at + 5..].chars().take_while(|&c| is_ident(c)).collect();
+                held.retain(|g| g.var != inner);
+            }
+            from = at + 5;
+        }
+    }
+}
+
+/// DFS cycle detection over the accumulated edge set, appending one
+/// finding per distinct cycle.
+pub fn detect_cycles(edges: &[LockEdge], out: &mut Vec<Finding>) {
+    let mut adj: BTreeMap<&str, Vec<&LockEdge>> = BTreeMap::new();
+    for e in edges {
+        adj.entry(e.held.as_str()).or_default().push(e);
+    }
+    let mut found: Vec<Finding> = Vec::new();
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for &start in &nodes {
+        let mut stack: Vec<(&str, Vec<&str>)> = vec![(start, vec![start])];
+        let mut seen: Vec<&str> = Vec::new();
+        while let Some((node, path)) = stack.pop() {
+            for e in adj.get(node).map(Vec::as_slice).unwrap_or(&[]) {
+                let next = e.acquired.as_str();
+                if next == start {
+                    // Canonicalize so each cycle is reported once no
+                    // matter which node the DFS started from.
+                    let mut cyc: Vec<&str> = path.clone();
+                    cyc.sort_unstable();
+                    found.push(Finding {
+                        rule: "L1".to_string(),
+                        file: e.file.clone(),
+                        line: e.line,
+                        module: "analysis".to_string(),
+                        msg: format!("lock cycle through {{{}}}", cyc.join(", ")),
+                        snippet: format!("{} -> {} -> {}", path.join(" -> "), start, "…"),
+                    });
+                    continue;
+                }
+                if path.contains(&next) || seen.contains(&next) {
+                    continue;
+                }
+                seen.push(next);
+                let mut p = path.clone();
+                p.push(next);
+                stack.push((next, p));
+            }
+        }
+    }
+    found.sort_by(|a, b| a.msg.cmp(&b.msg));
+    found.dedup_by(|a, b| a.msg == b.msg);
+    out.extend(found);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer;
+
+    fn scan(path: &str, src: &str) -> (Vec<LockEdge>, Vec<Finding>) {
+        let f = SourceFile { path: path.to_string(), src: src.to_string() };
+        let cleaned = lexer::clean(src);
+        let mut edges = Vec::new();
+        let mut out = Vec::new();
+        check_file(&f, &cleaned, "scheduler", &mut edges, &mut out);
+        (edges, out)
+    }
+
+    #[test]
+    fn undeclared_mutex_field_is_flagged() {
+        let (_, fs) =
+            scan("scheduler/evalcache.rs", "struct C {\n    rogue: Mutex<Vec<u32>>,\n}\n");
+        assert!(fs.iter().any(|f| f.rule == "L1" && f.msg.contains("rogue")), "{fs:?}");
+    }
+
+    #[test]
+    fn declared_in_rank_order_is_clean() {
+        let src = "\
+struct C {
+    owner: Mutex<Option<u64>>,
+    map: Mutex<HashMap<u32, u32>>,
+}
+impl C {
+    fn bind(&self) {
+        let mut owner = self.owner.lock().unwrap();
+        self.map.lock().unwrap().clear();
+        *owner = Some(1);
+    }
+}
+";
+        let (edges, fs) = scan("scheduler/evalcache.rs", src);
+        assert_eq!(edges.len(), 1, "{edges:?}");
+        assert_eq!((edges[0].held.as_str(), edges[0].acquired.as_str()), ("owner", "map"));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn rank_inversion_is_flagged() {
+        let src = "\
+impl C {
+    fn bad(&self) {
+        let mut m = self.map.lock().unwrap();
+        self.owner.lock().unwrap().take();
+        m.clear();
+    }
+}
+";
+        let (_, fs) = scan("scheduler/evalcache.rs", src);
+        assert!(
+            fs.iter().any(|f| f.msg.contains("`owner`") && f.msg.contains("`map`")),
+            "{fs:?}"
+        );
+    }
+
+    #[test]
+    fn value_extracting_let_is_not_a_guard() {
+        // `let n = ...lock().unwrap().len();` copies a value out; the
+        // guard is a temporary and the next lock is NOT nested.
+        let src = "\
+impl C {
+    fn ok(&self) {
+        let n = self.map.lock().unwrap().len();
+        self.owner.lock().unwrap().take();
+        use_it(n);
+    }
+}
+";
+        let (edges, fs) = scan("scheduler/evalcache.rs", src);
+        assert!(edges.is_empty(), "{edges:?}");
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn drop_releases_a_named_guard() {
+        let src = "\
+impl C {
+    fn ok(&self) {
+        let m = self.map.lock().unwrap();
+        drop(m);
+        self.owner.lock().unwrap().take();
+    }
+}
+";
+        let (edges, fs) = scan("scheduler/evalcache.rs", src);
+        assert!(edges.is_empty(), "{edges:?}");
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn scope_exit_releases_a_named_guard() {
+        let src = "\
+impl C {
+    fn ok(&self) {
+        {
+            let m = self.map.lock().unwrap();
+            m.len();
+        }
+        self.owner.lock().unwrap().take();
+    }
+}
+";
+        let (edges, _) = scan("scheduler/evalcache.rs", src);
+        assert!(edges.is_empty(), "{edges:?}");
+    }
+
+    #[test]
+    fn cycles_are_detected_once() {
+        let edges = vec![
+            LockEdge { held: "a".into(), acquired: "b".into(), file: "x.rs".into(), line: 1 },
+            LockEdge { held: "b".into(), acquired: "a".into(), file: "y.rs".into(), line: 2 },
+        ];
+        let mut out = Vec::new();
+        detect_cycles(&edges, &mut out);
+        let cycles: Vec<_> = out.iter().filter(|f| f.msg.contains("lock cycle")).collect();
+        assert_eq!(cycles.len(), 1, "{out:?}");
+    }
+}

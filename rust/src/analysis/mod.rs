@@ -1,0 +1,364 @@
+//! `hexcheck` — in-repo static analysis for determinism, panic hygiene,
+//! and lock ordering (DESIGN.md §13).
+//!
+//! Zero external dependencies: a lexical cleaner ([`lexer`]) feeds simple
+//! per-line rule passes ([`rules`], [`lockorder`]), findings are filtered
+//! through inline suppression comments (`allow(<rule>) -- <reason>` after
+//! the `hexcheck:` marker — see [`lexer`] for the exact syntax),
+//! and the remainder is gated against the checked-in ratchet
+//! [`baseline`] (`rust/hexcheck-baseline.json`). Exposed as the
+//! `hexgen2 check` subcommand; CI runs it with `--json` and fails on any
+//! new finding.
+//!
+//! Rule ids are stable API (tests, baseline, and allows reference them):
+//!
+//! | id | name                 | what it catches                          |
+//! |----|----------------------|------------------------------------------|
+//! | D1 | map-iter-determinism | HashMap/HashSet iteration order escaping |
+//! | D2 | banned-nondeterminism| wall clocks / ad-hoc RNG outside util    |
+//! | P1 | panic-hygiene        | unwrap/panic!/indexing in library code   |
+//! | F1 | float-fold           | f64 reductions in hash iteration order   |
+//! | L1 | lock-order           | undeclared/mis-ranked/cyclic lock nests  |
+//! | A0 | bad-allow            | malformed or reasonless suppressions     |
+
+pub mod baseline;
+pub mod lexer;
+pub mod lockorder;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+/// One source file handed to the checker (path is repo-src-relative, e.g.
+/// `scheduler/evalcache.rs`).
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    pub path: String,
+    pub src: String,
+}
+
+/// One finding, pre- or post-suppression.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: String,
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub module: String,
+    pub msg: String,
+    pub snippet: String,
+}
+
+/// Module bucket of a src-relative path: the first directory component,
+/// or the file stem for crate-root files (`main.rs` → `main`).
+pub fn module_of(path: &str) -> String {
+    match path.split('/').next() {
+        Some(first) if first != path => first.to_string(),
+        _ => path.strip_suffix(".rs").unwrap_or(path).to_string(),
+    }
+}
+
+/// A suppression that fired, kept for reporting.
+#[derive(Clone, Debug)]
+pub struct Suppressed {
+    pub finding: Finding,
+    pub reason: String,
+}
+
+/// Full result of a check run (pre-gate).
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Findings that survived suppression — the set the gate sees.
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<Suppressed>,
+    /// Allows that matched nothing: stale annotations worth deleting.
+    /// (file, line, rule)
+    pub unused_allows: Vec<(String, usize, String)>,
+    /// Static lock graph, for reporting and the self-check test.
+    pub lock_edges: Vec<lockorder::LockEdge>,
+}
+
+/// Run every rule over `files`, apply suppressions, detect lock cycles.
+pub fn check_files(files: &[SourceFile]) -> Report {
+    let mut raw: Vec<Finding> = Vec::new();
+    let mut edges: Vec<lockorder::LockEdge> = Vec::new();
+    let mut all_allows: Vec<(String, lexer::Allow)> = Vec::new();
+
+    for file in files {
+        let cleaned = lexer::clean(&file.src);
+        let module = module_of(&file.path);
+        rules::check_file(file, &cleaned, &module, &mut raw);
+        lockorder::check_file(file, &cleaned, &module, &mut edges, &mut raw);
+        for (line, why) in &cleaned.bad_allows {
+            raw.push(Finding {
+                rule: "A0".to_string(),
+                file: file.path.clone(),
+                line: *line,
+                module: module.clone(),
+                msg: format!("malformed suppression: {why}"),
+                snippet: file
+                    .src
+                    .lines()
+                    .nth(line - 1)
+                    .unwrap_or("")
+                    .trim()
+                    .to_string(),
+            });
+        }
+        for a in &cleaned.allows {
+            all_allows.push((file.path.clone(), a.clone()));
+        }
+    }
+    lockorder::detect_cycles(&edges, &mut raw);
+
+    // Apply suppressions: an allow covers every finding of its rule on
+    // its target line of its file.
+    let mut report = Report { lock_edges: edges, ..Report::default() };
+    let mut used = vec![false; all_allows.len()];
+    for f in raw {
+        let hit = all_allows.iter().enumerate().find(|(_, (path, a))| {
+            *path == f.file && a.line == f.line && a.rule == f.rule
+        });
+        match hit {
+            Some((i, (_, a))) => {
+                used[i] = true;
+                report.suppressed.push(Suppressed { finding: f, reason: a.reason.clone() });
+            }
+            None => report.findings.push(f),
+        }
+    }
+    for (i, (path, a)) in all_allows.iter().enumerate() {
+        if !used[i] {
+            report.unused_allows.push((path.clone(), a.comment_line, a.rule.clone()));
+        }
+    }
+    // Deterministic output order regardless of walk order.
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    report
+        .suppressed
+        .sort_by(|a, b| (&a.finding.file, a.finding.line).cmp(&(&b.finding.file, b.finding.line)));
+    report.unused_allows.sort();
+    report
+}
+
+/// Load every `.rs` file under `root` (sorted, recursive), with paths
+/// relative to `root`.
+pub fn load_tree(root: &Path) -> std::io::Result<Vec<SourceFile>> {
+    fn walk(dir: &Path, root: &Path, out: &mut Vec<SourceFile>) -> std::io::Result<()> {
+        let mut entries: Vec<_> =
+            fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?;
+        entries.sort_by_key(|e| e.path());
+        for e in entries {
+            let p = e.path();
+            if p.is_dir() {
+                walk(&p, root, out)?;
+            } else if p.extension().map(|x| x == "rs").unwrap_or(false) {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap_or(&p)
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.push(SourceFile { path: rel, src: fs::read_to_string(&p)? });
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(root, root, &mut out)?;
+    Ok(out)
+}
+
+fn finding_json(f: &Finding) -> Json {
+    json::obj(vec![
+        ("rule", json::s(&f.rule)),
+        ("file", json::s(&f.file)),
+        ("line", json::num(f.line as f64)),
+        ("module", json::s(&f.module)),
+        ("msg", json::s(&f.msg)),
+        ("snippet", json::s(&f.snippet)),
+    ])
+}
+
+/// Machine-readable report (`hexgen2 check --json`), schema
+/// `hexgen2-hexcheck/v1`.
+pub fn report_json(report: &Report, gate: &baseline::GateResult) -> Json {
+    let by_rule = |fs: &[Finding]| {
+        let mut m: BTreeMap<&str, usize> = BTreeMap::new();
+        for f in fs {
+            *m.entry(f.rule.as_str()).or_insert(0) += 1;
+        }
+        json::obj(m.into_iter().map(|(k, v)| (k, json::num(v as f64))).collect())
+    };
+    json::obj(vec![
+        ("schema", json::s("hexgen2-hexcheck/v1")),
+        ("n_findings", json::num(report.findings.len() as f64)),
+        ("n_suppressed", json::num(report.suppressed.len() as f64)),
+        ("n_unused_allows", json::num(report.unused_allows.len() as f64)),
+        ("ok", Json::Bool(gate.ok())),
+        ("counts_by_rule", by_rule(&report.findings)),
+        ("findings", json::arr(report.findings.iter().map(finding_json).collect())),
+        (
+            "suppressed",
+            json::arr(
+                report
+                    .suppressed
+                    .iter()
+                    .map(|s| {
+                        json::obj(vec![
+                            ("rule", json::s(&s.finding.rule)),
+                            ("file", json::s(&s.finding.file)),
+                            ("line", json::num(s.finding.line as f64)),
+                            ("reason", json::s(&s.reason)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "unused_allows",
+            json::arr(
+                report
+                    .unused_allows
+                    .iter()
+                    .map(|(file, line, rule)| {
+                        json::obj(vec![
+                            ("file", json::s(file)),
+                            ("line", json::num(*line as f64)),
+                            ("rule", json::s(rule)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "gate_failures",
+            json::arr(
+                gate.failures
+                    .iter()
+                    .map(|g| {
+                        json::obj(vec![
+                            ("rule", json::s(&g.rule)),
+                            ("module", json::s(&g.module)),
+                            ("count", json::num(g.count as f64)),
+                            ("allowed", json::num(g.allowed as f64)),
+                            ("deny", Json::Bool(g.deny)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "shrinkable",
+            json::arr(
+                gate.shrinkable
+                    .iter()
+                    .map(|g| {
+                        json::obj(vec![
+                            ("rule", json::s(&g.rule)),
+                            ("module", json::s(&g.module)),
+                            ("count", json::num(g.count as f64)),
+                            ("allowed", json::num(g.allowed as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "lock_edges",
+            json::arr(
+                report
+                    .lock_edges
+                    .iter()
+                    .map(|e| {
+                        json::obj(vec![
+                            ("held", json::s(&e.held)),
+                            ("acquired", json::s(&e.acquired)),
+                            ("file", json::s(&e.file)),
+                            ("line", json::num(e.line as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(path: &str, src: &str) -> SourceFile {
+        SourceFile { path: path.to_string(), src: src.to_string() }
+    }
+
+    #[test]
+    fn module_buckets() {
+        assert_eq!(module_of("scheduler/evalcache.rs"), "scheduler");
+        assert_eq!(module_of("kvtransfer/engine.rs"), "kvtransfer");
+        assert_eq!(module_of("main.rs"), "main");
+        assert_eq!(module_of("lib.rs"), "lib");
+    }
+
+    #[test]
+    fn suppression_round_trip() {
+        let src = "\
+fn f(m: HashMap<u32, f64>) {
+    // hexcheck: allow(D1) -- replayed into a BTreeMap by the caller
+    for (k, v) in &m { emit(k, v); }
+}
+";
+        let r = check_files(&[file("scheduler/x.rs", src)]);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.suppressed.len(), 1);
+        assert_eq!(r.suppressed[0].finding.rule, "D1");
+        assert!(r.suppressed[0].reason.contains("BTreeMap"));
+        assert!(r.unused_allows.is_empty());
+    }
+
+    #[test]
+    fn wrong_rule_allow_does_not_suppress_and_is_unused() {
+        let src = "\
+fn f(m: HashMap<u32, f64>) {
+    // hexcheck: allow(P1) -- wrong rule id for this site
+    for (k, v) in &m { emit(k, v); }
+}
+";
+        let r = check_files(&[file("scheduler/x.rs", src)]);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "D1");
+        assert_eq!(r.unused_allows.len(), 1);
+        assert_eq!(r.unused_allows[0].2, "P1");
+    }
+
+    #[test]
+    fn reasonless_allow_is_a0() {
+        let src = "// hexcheck: allow(D1)\nfn f() {}\n";
+        let r = check_files(&[file("model/x.rs", src)]);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "A0");
+    }
+
+    #[test]
+    fn report_json_schema() {
+        let src = "fn f(o: Option<u32>) -> u32 { o.unwrap() }\n";
+        let r = check_files(&[file("model/x.rs", src)]);
+        let base = baseline::Baseline::default();
+        let g = baseline::gate(&r.findings, &base);
+        assert!(!g.ok(), "P1 in model with empty baseline must gate");
+        let doc = report_json(&r, &g);
+        assert_eq!(
+            doc.get("schema").and_then(Json::as_str),
+            Some("hexgen2-hexcheck/v1")
+        );
+        assert_eq!(doc.get("n_findings").and_then(Json::as_usize), Some(1));
+        assert_eq!(doc.get("ok").and_then(Json::as_bool), Some(false));
+        // Round-trips through the in-tree parser.
+        let back = Json::parse(&doc.to_string_pretty()).expect("report json parses");
+        assert_eq!(back.get("n_findings").and_then(Json::as_usize), Some(1));
+    }
+}

@@ -1,0 +1,492 @@
+//! Rule passes D1/D2/P1/F1 over lexed source (DESIGN.md §13).
+//!
+//! Every rule works on [`lexer::Cleaned`] lines — comments and literal
+//! contents already blanked, test modules marked — so simple substring
+//! scans with identifier-boundary checks are sound: a pattern that
+//! survives cleaning is real code.
+
+use super::lexer::Cleaned;
+use super::{Finding, SourceFile};
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// All start offsets of `needle` in `hay`. When the needle begins with an
+/// identifier character, the preceding character must not be one (so
+/// `Instant::now` doesn't match `MyInstant::now`); needles starting with
+/// `.` or `#` need no boundary.
+fn find_bounded(hay: &str, needle: &str) -> Vec<usize> {
+    let needs_boundary = needle.chars().next().map(is_ident).unwrap_or(false);
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = hay[from..].find(needle) {
+        let at = from + rel;
+        let prev = hay[..at].chars().next_back();
+        if !needs_boundary || !prev.map(is_ident).unwrap_or(false) {
+            out.push(at);
+        }
+        from = at + needle.len();
+    }
+    out
+}
+
+/// Last identifier ending at byte offset `end` in `line` (exclusive):
+/// for `self.links.iter()` with `end` at the `.iter` dot, returns `links`.
+fn ident_before(line: &str, end: usize) -> Option<&str> {
+    let bytes = line.as_bytes();
+    let mut i = end;
+    while i > 0 && is_ident(bytes[i - 1] as char) {
+        i -= 1;
+    }
+    if i == end {
+        return None;
+    }
+    Some(&line[i..end])
+}
+
+fn snippet(line: &str) -> String {
+    let t = line.trim();
+    if t.len() <= 96 {
+        return t.to_string();
+    }
+    let mut end = 93;
+    while !t.is_char_boundary(end) {
+        end -= 1;
+    }
+    format!("{}…", &t[..end])
+}
+
+/// Identifier immediately before a `: ...HashMap<` type annotation, walking
+/// back over wrapper-type characters (`Mutex<`, `&`, lifetimes, spaces).
+/// Rejects `::` paths so `std::collections::HashMap` isn't a declaration.
+fn decl_name_before(line: &str, at: usize) -> Option<String> {
+    let bytes = line.as_bytes();
+    let mut i = at;
+    while i > 0 {
+        let c = bytes[i - 1] as char;
+        if is_ident(c) || c == '<' || c == '&' || c == ' ' || c == '\'' {
+            i -= 1;
+        } else {
+            break;
+        }
+    }
+    if i == 0 || bytes[i - 1] as char != ':' {
+        return None;
+    }
+    if i >= 2 && bytes[i - 2] as char == ':' {
+        return None; // `::` path segment, not a declaration
+    }
+    let end = i - 1;
+    let mut j = end;
+    while j > 0 && is_ident(bytes[j - 1] as char) {
+        j -= 1;
+    }
+    if j == end {
+        return None;
+    }
+    Some(line[j..end].to_string())
+}
+
+/// Collect names bound to `HashMap`/`HashSet` in this file: let-bindings,
+/// struct fields, and fn params whose declared type mentions a hash
+/// collection (including wrapped forms like `Mutex<HashMap<...>>`).
+fn hash_bindings(cleaned: &Cleaned) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for (li, line) in cleaned.lines.iter().enumerate() {
+        if cleaned.excluded[li] {
+            continue;
+        }
+        let trimmed = line.trim_start();
+        if trimmed.starts_with("use ") {
+            continue;
+        }
+        let has_hash = ["HashMap<", "HashSet<", "HashMap::", "HashSet::"]
+            .iter()
+            .any(|p| line.contains(p));
+        if !has_hash {
+            continue;
+        }
+        // `let mut name = HashMap::new()` / `let name: HashMap<..> = ..`.
+        if let Some(&at) = find_bounded(line, "let ").first() {
+            let mut rest = line[at + 4..].trim_start();
+            if let Some(r) = rest.strip_prefix("mut ") {
+                rest = r.trim_start();
+            }
+            let name: String = rest.chars().take_while(|&c| is_ident(c)).collect();
+            if !name.is_empty() {
+                names.push(name);
+            }
+            continue;
+        }
+        // Declaration sites: every `name: ...HashMap<..>` on the line
+        // (struct fields, fn params — one line can declare several).
+        for pat in ["HashMap<", "HashSet<"] {
+            let mut from = 0usize;
+            while let Some(rel) = line[from..].find(pat) {
+                let at = from + rel;
+                if let Some(name) = decl_name_before(line, at) {
+                    names.push(name);
+                }
+                from = at + pat.len();
+            }
+        }
+    }
+    names.sort_unstable();
+    names.dedup();
+    names
+}
+
+/// The statement tail starting at byte `col` of line `li`: text up to the
+/// first `;` at bracket depth 0 or the close of the enclosing expression,
+/// capped at `max_lines` lines. Used to decide whether an iteration's
+/// result is immediately ordered or consumed order-insensitively.
+fn statement_tail(cleaned: &Cleaned, li: usize, col: usize, max_lines: usize) -> String {
+    let mut out = String::new();
+    let mut depth: i32 = 0;
+    for (k, line) in cleaned.lines.iter().enumerate().skip(li).take(max_lines) {
+        let text: &str = if k == li { &line[col..] } else { line };
+        for c in text.chars() {
+            out.push(c);
+            match c {
+                '(' | '[' | '{' => depth += 1,
+                ')' | ']' | '}' => {
+                    depth -= 1;
+                    if depth < 0 {
+                        return out;
+                    }
+                }
+                ';' if depth == 0 => return out,
+                _ => {}
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Tail consumes the iteration in an order-insensitive or re-ordered way.
+/// Deliberately narrow: max/min folds are order-independent too, but they
+/// must carry an explicit `allow(D1)` stating so (the reviewer's proof
+/// burden lives in the annotation, not in the linter's guesswork).
+fn tail_is_ordered(tail: &str) -> bool {
+    [
+        ".sort", // sort(), sort_unstable(), sort_by_key(...)
+        ".len()",
+        ".count()",
+        ".is_empty()",
+        ".contains",
+        ".any(",
+        ".all(",
+    ]
+    .iter()
+    .any(|p| tail.contains(p))
+}
+
+/// Tail folds floats in hash order — the F1 case, worse than plain D1:
+/// the accumulated bits differ run to run, not just the element order.
+fn tail_is_float_fold(tail: &str) -> bool {
+    ["sum::<f64>", "sum::<f32>", ".fold(0.0", ".fold(0f64", ".fold(0f32"]
+        .iter()
+        .any(|p| tail.contains(p))
+}
+
+/// D1 map-iter-determinism + F1 float-fold.
+fn check_map_iteration(
+    file: &SourceFile,
+    cleaned: &Cleaned,
+    out: &mut Vec<Finding>,
+    module: &str,
+) {
+    let names = hash_bindings(cleaned);
+    if names.is_empty() {
+        return;
+    }
+    const ITERS: [&str; 7] = [
+        ".iter()",
+        ".iter_mut()",
+        ".into_iter()",
+        ".keys()",
+        ".values()",
+        ".values_mut()",
+        ".drain(",
+    ];
+    for (li, line) in cleaned.lines.iter().enumerate() {
+        if cleaned.excluded[li] {
+            continue;
+        }
+        let mut hits: Vec<usize> = Vec::new();
+        for pat in ITERS {
+            for at in find_bounded(line, pat) {
+                let Some(recv) = ident_before(line, at) else { continue };
+                if names.iter().any(|n| n == recv) {
+                    hits.push(at);
+                }
+            }
+        }
+        // `for (k, v) in &map { .. }` / `for x in set { .. }` forms (the
+        // method forms above don't cover iterating the collection itself).
+        if let Some(&fat) = find_bounded(line, "for ").first() {
+            if let Some(&inat) = find_bounded(&line[fat..], " in ").first() {
+                let expr_at = fat + inat + 4;
+                let mut e = line[expr_at..].trim_start();
+                loop {
+                    if let Some(r) = e.strip_prefix('&') {
+                        e = r.trim_start();
+                    } else if let Some(r) = e.strip_prefix("mut ") {
+                        e = r.trim_start();
+                    } else if let Some(r) = e.strip_prefix("self.") {
+                        e = r;
+                    } else {
+                        break;
+                    }
+                }
+                let name: String = e.chars().take_while(|&c| is_ident(c)).collect();
+                let after = e[name.len()..].trim_start();
+                let bare = after.starts_with('{') || after.is_empty();
+                if bare && names.iter().any(|n| *n == name) {
+                    hits.push(expr_at);
+                }
+            }
+        }
+        hits.sort_unstable();
+        hits.dedup();
+        for at in hits {
+            let tail = statement_tail(cleaned, li, at, 8);
+            // Collect-then-sort idiom: `let v: Vec<_> = m.keys()...collect();`
+            // with the sort as the *next* statement. The tail stops at `;`,
+            // so look a couple of lines ahead for the ordering call.
+            let sorted_after = tail.contains(".collect")
+                && cleaned
+                    .lines
+                    .iter()
+                    .skip(li)
+                    .take(3)
+                    .any(|l| l.contains(".sort"));
+            if tail_is_float_fold(&tail) {
+                out.push(Finding {
+                    rule: "F1".to_string(),
+                    file: file.path.clone(),
+                    line: li + 1,
+                    module: module.to_string(),
+                    msg: "float reduction in hash-map iteration order; accumulate over a \
+                          sorted/BTree collection instead"
+                        .to_string(),
+                    snippet: snippet(line),
+                });
+            } else if !tail_is_ordered(&tail) && !sorted_after {
+                out.push(Finding {
+                    rule: "D1".to_string(),
+                    file: file.path.clone(),
+                    line: li + 1,
+                    module: module.to_string(),
+                    msg: "HashMap/HashSet iteration order escapes unsorted; use BTreeMap/\
+                          BTreeSet or sort before use"
+                        .to_string(),
+                    snippet: snippet(line),
+                });
+            }
+        }
+    }
+}
+
+/// Files exempt from D2: they own wall-clock / entropy by design.
+const D2_EXEMPT: [&str; 3] = ["util/rng.rs", "util/bench.rs", "experiments/perf.rs"];
+
+fn check_banned_nondeterminism(
+    file: &SourceFile,
+    cleaned: &Cleaned,
+    out: &mut Vec<Finding>,
+    module: &str,
+) {
+    if D2_EXEMPT.iter().any(|e| file.path.ends_with(e)) {
+        return;
+    }
+    const PATTERNS: [(&str, &str); 6] = [
+        ("Instant::now(", "wall-clock read"),
+        ("SystemTime", "wall-clock read"),
+        ("thread_rng", "ad-hoc RNG"),
+        ("from_entropy", "ad-hoc RNG seeding"),
+        ("StdRng", "external RNG type"),
+        ("SmallRng", "external RNG type"),
+    ];
+    for (li, line) in cleaned.lines.iter().enumerate() {
+        if cleaned.excluded[li] {
+            continue;
+        }
+        for (pat, what) in PATTERNS {
+            if !find_bounded(line, pat).is_empty() {
+                out.push(Finding {
+                    rule: "D2".to_string(),
+                    file: file.path.clone(),
+                    line: li + 1,
+                    module: module.to_string(),
+                    msg: format!(
+                        "{what} (`{}`) outside util/rng, util/bench, experiments/perf; \
+                         thread determinism through util::rng / passed-in clocks",
+                        pat.trim_end_matches('(')
+                    ),
+                    snippet: snippet(line),
+                });
+                break; // one D2 finding per line is enough
+            }
+        }
+    }
+}
+
+/// Modules where P1 additionally checks slice/array indexing: the online
+/// control loops, where an out-of-bounds panic kills the serving loop.
+const P1_INDEX_MODULES: [&str; 2] = ["rescheduler", "kvtransfer"];
+
+fn check_panic_hygiene(
+    file: &SourceFile,
+    cleaned: &Cleaned,
+    out: &mut Vec<Finding>,
+    module: &str,
+) {
+    let check_indexing = P1_INDEX_MODULES.contains(&module);
+    const PANICS: [(&str, &str); 5] = [
+        (".unwrap()", "unwrap(): document the invariant with expect(\"...\") or propagate"),
+        ("panic!", "panic! in library code"),
+        ("unreachable!", "unreachable! in library code"),
+        ("todo!", "todo! left in library code"),
+        ("unimplemented!", "unimplemented! left in library code"),
+    ];
+    for (li, line) in cleaned.lines.iter().enumerate() {
+        if cleaned.excluded[li] {
+            continue;
+        }
+        for (pat, why) in PANICS {
+            if !find_bounded(line, pat).is_empty() {
+                out.push(Finding {
+                    rule: "P1".to_string(),
+                    file: file.path.clone(),
+                    line: li + 1,
+                    module: module.to_string(),
+                    msg: why.to_string(),
+                    snippet: snippet(line),
+                });
+                break;
+            }
+        }
+        if check_indexing {
+            // `expr[` where expr ends in an identifier, `]`, or `)` is a
+            // panicking index; `#[`, `&[`, `: [` and friends are not.
+            let bytes = line.as_bytes();
+            for (i, &b) in bytes.iter().enumerate() {
+                if b != b'[' || i == 0 {
+                    continue;
+                }
+                let prev = bytes[i - 1] as char;
+                if is_ident(prev) || prev == ']' || prev == ')' {
+                    out.push(Finding {
+                        rule: "P1".to_string(),
+                        file: file.path.clone(),
+                        line: li + 1,
+                        module: module.to_string(),
+                        msg: "panicking index in a control-loop module; use .get() or \
+                              justify the bound with an allow"
+                            .to_string(),
+                        snippet: snippet(line),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Run D1/D2/P1/F1 for one file, appending raw (pre-suppression) findings.
+pub fn check_file(file: &SourceFile, cleaned: &Cleaned, module: &str, out: &mut Vec<Finding>) {
+    check_map_iteration(file, cleaned, out, module);
+    check_banned_nondeterminism(file, cleaned, out, module);
+    check_panic_hygiene(file, cleaned, out, module);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer;
+
+    fn run(path: &str, src: &str) -> Vec<Finding> {
+        let f = SourceFile { path: path.to_string(), src: src.to_string() };
+        let cleaned = lexer::clean(src);
+        let module = crate::analysis::module_of(path);
+        let mut out = Vec::new();
+        check_file(&f, &cleaned, &module, &mut out);
+        out
+    }
+
+    #[test]
+    fn d1_fires_on_unsorted_iteration() {
+        let src = "fn f() {\n    let m: HashMap<u32, f64> = HashMap::new();\n    for (k, v) in &m { use_it(k, v); }\n}\n";
+        let fs = run("scheduler/x.rs", src);
+        assert!(fs.iter().any(|f| f.rule == "D1" && f.line == 3), "{fs:?}");
+    }
+
+    #[test]
+    fn d1_sees_fields_params_and_wrapped_types() {
+        let src = "struct S { m: Mutex<HashMap<u32, f64>> }\nfn g(seen: HashSet<u64>) {\n    for x in &seen { emit(x); }\n}\n";
+        let fs = run("scheduler/x.rs", src);
+        assert!(fs.iter().any(|f| f.rule == "D1" && f.line == 3), "{fs:?}");
+    }
+
+    #[test]
+    fn d1_quiet_when_sorted_or_counted() {
+        // `.sort` / `.any(` / `.len()` in the same statement tail exempt
+        // the site — the iteration's order cannot escape.
+        let sorted = "fn f(m: HashMap<u32, f64>) -> Vec<u32> {\n    let mut v: Vec<u32> = m.keys().copied().collect(); v.sort_unstable(); v\n}\n";
+        assert!(run("scheduler/x.rs", sorted).iter().all(|f| f.rule != "D1"));
+        let any = "fn f(m: HashMap<u32, f64>) -> bool { m.values().any(|v| *v > 0.0) }\n";
+        assert!(run("scheduler/x.rs", any).iter().all(|f| f.rule != "D1"));
+    }
+
+    #[test]
+    fn d1_max_fold_requires_explicit_allow() {
+        // Order-independent in truth, but the proof burden is on the
+        // annotation: an unannotated max-fold still fires.
+        let src = "fn f(m: HashMap<u32, f64>) -> f64 {\n    let mut w = 0.0;\n    for &u in m.values() { w = w.max(u); }\n    w\n}\n";
+        assert!(run("scheduler/x.rs", src).iter().any(|f| f.rule == "D1"));
+    }
+
+    #[test]
+    fn f1_fires_on_hash_order_float_sum() {
+        let src = "fn f(m: HashMap<u32, f64>) -> f64 {\n    m.values().sum::<f64>()\n}\n";
+        let fs = run("scheduler/x.rs", src);
+        assert!(fs.iter().any(|f| f.rule == "F1" && f.line == 2), "{fs:?}");
+        assert!(fs.iter().all(|f| f.rule != "D1"), "F1 supersedes D1: {fs:?}");
+    }
+
+    #[test]
+    fn d2_fires_outside_exempt_files() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert!(run("scheduler/x.rs", src).iter().any(|f| f.rule == "D2"));
+        assert!(run("util/bench.rs", src).iter().all(|f| f.rule != "D2"));
+        assert!(run("experiments/perf.rs", src).iter().all(|f| f.rule != "D2"));
+    }
+
+    #[test]
+    fn p1_unwrap_fires_expect_does_not() {
+        let src = "fn f(o: Option<u32>) -> u32 { o.unwrap() }\n";
+        assert!(run("model/x.rs", src).iter().any(|f| f.rule == "P1"));
+        let src2 = "fn f(o: Option<u32>) -> u32 { o.expect(\"caller checked\") }\n";
+        assert!(run("model/x.rs", src2).iter().all(|f| f.rule != "P1"));
+        let src3 = "fn f(o: Option<u32>) -> u32 { o.unwrap_or(0) }\n";
+        assert!(run("model/x.rs", src3).iter().all(|f| f.rule != "P1"));
+    }
+
+    #[test]
+    fn p1_indexing_only_in_control_loops() {
+        let src = "fn f(v: &[u32], i: usize) -> u32 { v[i] }\n";
+        assert!(run("kvtransfer/x.rs", src).iter().any(|f| f.rule == "P1"));
+        assert!(run("scheduler/x.rs", src).iter().all(|f| f.rule != "P1"));
+        let src2 = "#[derive(Clone)]\nstruct S { v: Vec<u32> }\nfn g(x: &[u32]) {}\n";
+        assert!(run("rescheduler/x.rs", src2).iter().all(|f| f.rule != "P1"));
+    }
+
+    #[test]
+    fn patterns_in_strings_and_tests_do_not_fire() {
+        let src = "fn f() { log(\"x.unwrap() Instant::now()\"); }\n#[cfg(test)]\nmod tests {\n    fn t() { None::<u32>.unwrap(); }\n}\n";
+        assert!(run("model/x.rs", src).is_empty());
+    }
+}

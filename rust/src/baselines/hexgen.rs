@@ -127,6 +127,7 @@ pub fn schedule_hexgen_with(
     seed: u64,
     generations: usize,
 ) -> Option<HexGenPlan> {
+    // hexcheck: allow(D2) -- wall-clock timing of the planner itself (reported as plan_ms); never feeds plan decisions
     let t0 = Instant::now();
     let (s_in, s_out) = workload.mean_lengths();
     let task = TaskProfile::new(1, s_in, s_out);

@@ -125,6 +125,7 @@ pub fn prefill_worker(
             lengths[i] = r.tokens.len() as i32;
         }
         let out = rt.prefill(vb, vs, &tokens, &lengths)?;
+        // hexcheck: allow(D2) -- live-serving latency measurement (TTFT telemetry); this module never runs inside the deterministic simulator
         let done = Instant::now();
         let first = argmax_rows(&out.logits, rt.vocab());
         let dims = rt.manifest.cache_dims(vb);
@@ -244,6 +245,7 @@ pub fn decode_worker(
         let out = rt.decode_step(batch, &token, &pos, slots.k(), slots.v())?;
         slots.update(out.k_cache, out.v_cache);
         let next = argmax_rows(&out.logits, rt.vocab());
+        // hexcheck: allow(D2) -- live-serving latency measurement (per-token telemetry); this module never runs inside the deterministic simulator
         let now = Instant::now();
 
         let mut finished: Vec<usize> = Vec::new();

@@ -61,6 +61,7 @@ pub fn serve(cfg: &CoordinatorConfig, requests: Vec<LiveRequest>) -> Result<Live
         bail!("need at least one prefill and one decode worker");
     }
     let n_req = requests.len();
+    // hexcheck: allow(D2) -- live-serving wall-clock span (elapsed_s in the report); this module never runs inside the deterministic simulator
     let t0 = Instant::now();
 
     // Channels.
@@ -135,6 +136,7 @@ pub fn serve(cfg: &CoordinatorConfig, requests: Vec<LiveRequest>) -> Result<Live
             .recv_timeout(std::time::Duration::from_secs(600))
             .map_err(|_| anyhow::anyhow!("worker failed to become ready"))?;
     }
+    // hexcheck: allow(D2) -- live-serving wall-clock anchor for per-request latencies
     let serve_start = Instant::now();
 
     // Dispatch all requests (offline mode), flow-weighted round-robin over
@@ -142,6 +144,7 @@ pub fn serve(cfg: &CoordinatorConfig, requests: Vec<LiveRequest>) -> Result<Live
     for (i, r) in requests.into_iter().enumerate() {
         let p = i % cfg.n_prefill;
         prefill_txs[p]
+            // hexcheck: allow(D2) -- live-serving dispatch timestamp (queueing telemetry)
             .send(PrefillMsg::Req(r, Instant::now()))
             .map_err(|_| anyhow::anyhow!("prefill worker {p} died"))?;
     }

@@ -95,6 +95,7 @@ pub fn table5_scalability(model: &LlmSpec, sizes: &[usize], opts: &ExpOpts) -> T
             o.proposals_per_round = 4;
             o.type_candidates = 2;
         }
+        // hexcheck: allow(D2) -- wall-clock timing is the measurement this table reports; never feeds plan decisions
         let t0 = Instant::now();
         match crate::scheduler::schedule(&c, model, &o) {
             Some(r) => t.row(&[

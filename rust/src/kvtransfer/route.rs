@@ -119,8 +119,8 @@ impl RoutePolicy for FlowProportionalPolicy {
     fn pick(&self, cands: &[Candidate]) -> usize {
         let mut best = 0usize;
         for i in 1..cands.len() {
-            let wb = cands[best].weight / (cands[best].assigned + 1.0);
-            let wi = cands[i].weight / (cands[i].assigned + 1.0);
+            let wb = cands[best].weight / (cands[best].assigned + 1.0); // hexcheck: allow(P1) -- best starts at 0 and only takes values of i, both in-bounds loop indices
+            let wi = cands[i].weight / (cands[i].assigned + 1.0); // hexcheck: allow(P1) -- i ranges over 1..cands.len()
             if wi >= wb {
                 best = i;
             }
@@ -141,8 +141,8 @@ impl RoutePolicy for LeastLoadedPolicy {
     fn pick(&self, cands: &[Candidate]) -> usize {
         let mut best = 0usize;
         for i in 1..cands.len() {
-            let a = &cands[best];
-            let b = &cands[i];
+            let a = &cands[best]; // hexcheck: allow(P1) -- best starts at 0 and only takes values of i, both in-bounds loop indices
+            let b = &cands[i]; // hexcheck: allow(P1) -- i ranges over 1..cands.len()
             let better = b.backlog_s < a.backlog_s
                 || (b.backlog_s == a.backlog_s
                     && (b.queue_len < a.queue_len
@@ -167,8 +167,8 @@ impl RoutePolicy for EtaGreedyPolicy {
     fn pick(&self, cands: &[Candidate]) -> usize {
         let mut best = 0usize;
         for i in 1..cands.len() {
-            let a = &cands[best];
-            let b = &cands[i];
+            let a = &cands[best]; // hexcheck: allow(P1) -- best starts at 0 and only takes values of i, both in-bounds loop indices
+            let b = &cands[i]; // hexcheck: allow(P1) -- i ranges over 1..cands.len()
             let (ea, eb) = (a.backlog_s + a.xfer_s, b.backlog_s + b.xfer_s);
             if eb < ea || (eb == ea && b.weight > a.weight) {
                 best = i;

@@ -26,6 +26,7 @@
 //!   AOT-lowered to HLO text once; `runtime` executes those artifacts via
 //!   PJRT with Python never on the request path.
 
+pub mod analysis;
 pub mod baselines;
 pub mod cluster;
 pub mod coordinator;

@@ -8,6 +8,7 @@
 //!   workload     generate and dump a request trace (JSON)
 //!   experiments  regenerate a paper figure/table by id
 //!   settings     print the cluster settings (paper Fig. 4)
+//!   check        hexcheck static analysis over rust/src (DESIGN.md §13)
 
 use anyhow::{anyhow, bail, Result};
 
@@ -37,6 +38,7 @@ fn main() {
             "resched",
             "no-eval-cache",
             "contention-aware",
+            "update-baseline",
         ],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -459,6 +461,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 println!("{}", c.bandwidth_matrix_gbps());
             }
         }
+        "check" => run_check(args)?,
         _ => {
             println!(
                 "hexgen2 — disaggregated LLM inference over heterogeneous GPUs (ICLR'25 reproduction)\n\n\
@@ -524,9 +527,117 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             BENCH_planner.json / BENCH_sim.json (counter-based: evals, cache hit\n\
                  \x20             rate, partitions explored — deterministic where wall-time is not).\n\
                  \x20 experiments <fig1|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table2|table3|table4|table5|appd|heavy_tail|kv_routing|all> [--full]\n\
-                 \x20 settings    print bandwidth matrices (paper Fig. 4)"
+                 \x20 settings    print bandwidth matrices (paper Fig. 4)\n\
+                 \x20 check       [--src DIR] [--baseline FILE] [--json] [--update-baseline]\n\
+                 \x20             hexcheck static analysis (DESIGN.md \u{a7}13): determinism (D1/D2/F1),\n\
+                 \x20             panic hygiene (P1), and lock ordering (L1) over the crate source.\n\
+                 \x20             Suppress a finding inline with `// hexcheck: allow(RULE) -- reason`;\n\
+                 \x20             ratcheted debt lives in hexcheck-baseline.json and can only shrink\n\
+                 \x20             (--update-baseline rewrites it after paying debt down). Exits\n\
+                 \x20             nonzero on any new finding — CI runs this with --json."
             );
         }
+    }
+    Ok(())
+}
+
+/// `hexgen2 check`: run hexcheck over the crate source and gate against
+/// the ratchet baseline (DESIGN.md §13).
+fn run_check(args: &Args) -> Result<()> {
+    use hexgen2::analysis::{self, baseline::Baseline};
+    use std::path::{Path, PathBuf};
+
+    // Default source root: `src/` when run from rust/ (CI), else
+    // `rust/src/` from the repo root.
+    let src_root: PathBuf = match args.get("src") {
+        Some(p) => PathBuf::from(p),
+        None if Path::new("src/lib.rs").exists() => PathBuf::from("src"),
+        None => PathBuf::from("rust/src"),
+    };
+    if !src_root.is_dir() {
+        bail!("source root {} not found (use --src DIR)", src_root.display());
+    }
+    let baseline_path: PathBuf = match args.get("baseline") {
+        Some(p) => PathBuf::from(p),
+        // hexcheck-baseline.json lives next to Cargo.toml, one level
+        // above the source root.
+        None => src_root
+            .parent()
+            .unwrap_or(Path::new("."))
+            .join("hexcheck-baseline.json"),
+    };
+
+    let files = analysis::load_tree(&src_root)
+        .map_err(|e| anyhow!("reading {}: {e}", src_root.display()))?;
+    if files.is_empty() {
+        bail!("no .rs files under {}", src_root.display());
+    }
+    let report = analysis::check_files(&files);
+
+    if args.has("update-baseline") {
+        let base = Baseline::from_findings(&report.findings);
+        let mut body = base.to_json().to_string_pretty();
+        body.push('\n');
+        std::fs::write(&baseline_path, body)
+            .map_err(|e| anyhow!("writing {}: {e}", baseline_path.display()))?;
+        println!(
+            "wrote {} ({} ratchet buckets from {} findings)",
+            baseline_path.display(),
+            base.counts.len(),
+            report.findings.len(),
+        );
+        return Ok(());
+    }
+
+    let base = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => Baseline::parse(&text).map_err(|e| anyhow!("{}: {e}", baseline_path.display()))?,
+        Err(_) => Baseline::default(),
+    };
+    let gate = analysis::baseline::gate(&report.findings, &base);
+
+    if args.has("json") {
+        println!("{}", analysis::report_json(&report, &gate).to_string_pretty());
+    } else {
+        println!(
+            "hexcheck: {} file(s), {} finding(s) ({} suppressed, {} unused allow(s)), {} lock edge(s)",
+            files.len(),
+            report.findings.len(),
+            report.suppressed.len(),
+            report.unused_allows.len(),
+            report.lock_edges.len(),
+        );
+        for f in &report.findings {
+            println!("  {} {}:{} [{}] {}", f.rule, f.file, f.line, f.module, f.msg);
+            if !f.snippet.is_empty() {
+                println!("      {}", f.snippet);
+            }
+        }
+        for (file, line, rule) in &report.unused_allows {
+            println!("  note: unused allow({rule}) at {file}:{line} — delete it");
+        }
+        for g in &gate.shrinkable {
+            println!(
+                "  note: {}/{} debt shrank {} -> {} — run `hexgen2 check --update-baseline` to ratchet",
+                g.rule, g.module, g.allowed, g.count
+            );
+        }
+    }
+    if !gate.ok() {
+        let buckets: Vec<String> = gate
+            .failures
+            .iter()
+            .map(|g| {
+                format!(
+                    "{}/{}: {} finding(s), {} allowed{}",
+                    g.rule,
+                    g.module,
+                    g.count,
+                    g.allowed,
+                    if g.deny { " (deny)" } else { "" }
+                )
+            })
+            .collect();
+        bail!("hexcheck gate failed — {}", buckets.join("; "));
     }
     Ok(())
 }

@@ -219,8 +219,9 @@ pub fn drive_with_kv(
     // before the request itself (both streams are time-ordered).
     let mut kv_i = 0usize;
     for r in &trace.requests {
+        // hexcheck: allow(P1) -- short-circuit && bounds kv_i < kv_feed.len() before indexing
         while kv_i < kv_feed.len() && kv_feed[kv_i].0 <= r.arrival {
-            let (t, w) = kv_feed[kv_i];
+            let (t, w) = kv_feed[kv_i]; // hexcheck: allow(P1) -- guarded by the while condition on this index
             sensor.observe_kv(t, w);
             kv_i += 1;
         }

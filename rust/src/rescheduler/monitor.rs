@@ -159,7 +159,7 @@ impl WorkloadMonitor {
         if n < self.cfg.min_samples.max(2) {
             return None;
         }
-        let span = (now - self.buf.front().unwrap().0).max(1e-9);
+        let span = (now - self.buf.front().expect("min_samples guard above ensures buf is non-empty").0).max(1e-9);
         let (si, so) = self
             .buf
             .iter()

@@ -99,6 +99,7 @@ pub fn schedule_genetic_with_cache(
     opts: &ScheduleOptions,
     cache: &EvalCache,
 ) -> Option<ScheduleResult> {
+    // hexcheck: allow(D2) -- wall-clock timing of the planner itself (ScheduleStats::elapsed); never feeds plan decisions
     let t0 = Instant::now();
     if opts.audit {
         cache.enable_audit();

@@ -537,6 +537,7 @@ pub fn schedule_with_cache(
     opts: &ScheduleOptions,
     cache: &EvalCache,
 ) -> Option<ScheduleResult> {
+    // hexcheck: allow(D2) -- wall-clock timing of the planner itself (ScheduleStats::elapsed); never feeds plan decisions
     let t0 = Instant::now();
     if opts.audit {
         // Sticky on a shared cache; per-run records are drained into

@@ -45,7 +45,7 @@
 //! accounts everything in a link-load ledger exported through
 //! [`SimStats`] / [`SimReport::link_loads`](super::SimReport).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::cluster::Cluster;
 use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile, MAX_DECODE_BATCH};
@@ -907,8 +907,10 @@ impl<'a, S: TraceSink> Engine<'a, S> {
         task: &TaskProfile,
     ) -> Option<Vec<usize>> {
         let base = self.replicas.len();
-        let mut p_of_group: HashMap<usize, usize> = HashMap::new();
-        let mut d_of_group: HashMap<usize, usize> = HashMap::new();
+        // BTreeMap: iterated below to wire prefill→decode routes, and route
+        // order must be identical run-to-run for bit-identical replays.
+        let mut p_of_group: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut d_of_group: BTreeMap<usize, usize> = BTreeMap::new();
         let mut new_p: Vec<usize> = Vec::new();
         let mut new_d: Vec<usize> = Vec::new();
         for (gi, g) in placement.groups.iter().enumerate() {

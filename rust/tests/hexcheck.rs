@@ -1,0 +1,112 @@
+//! Self-check: `hexcheck` must run clean over this repository's own
+//! source tree (DESIGN.md §13).
+//!
+//! "Clean" means: no deny findings, no ratchet bucket above the checked-in
+//! baseline, no malformed suppressions, and no stale (unused) allows. This
+//! is the same gate CI applies via `hexgen2 check --json`; keeping it in
+//! the test suite means `cargo test` catches a regression before the CI
+//! job does, and that the baseline file can never drift out of sync with
+//! the tree unnoticed.
+
+use std::path::Path;
+
+use hexgen2::analysis::{self, baseline::Baseline, lexer, lockorder};
+
+fn src_root() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+fn run_check() -> (analysis::Report, Baseline) {
+    let files = analysis::load_tree(&src_root()).expect("walk rust/src");
+    assert!(files.len() > 20, "expected the full source tree, got {} files", files.len());
+    let report = analysis::check_files(&files);
+    let base_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("hexcheck-baseline.json");
+    let text = std::fs::read_to_string(&base_path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", base_path.display()));
+    let baseline = Baseline::parse(&text).expect("baseline parses");
+    (report, baseline)
+}
+
+#[test]
+fn repo_gates_clean_against_baseline() {
+    let (report, baseline) = run_check();
+    let gate = analysis::baseline::gate(&report.findings, &baseline);
+    assert!(
+        gate.ok(),
+        "hexcheck gate failed — fix the finding or (with a written reason) \
+         suppress it; never raise the baseline:\n{:#?}\nfindings:\n{}",
+        gate.failures,
+        report
+            .findings
+            .iter()
+            .map(|f| format!("  {} {}:{} {}", f.rule, f.file, f.line, f.msg))
+            .collect::<Vec<_>>()
+            .join("\n"),
+    );
+}
+
+#[test]
+fn no_deny_findings_survive_suppression() {
+    let (report, _) = run_check();
+    let deny: Vec<_> = report
+        .findings
+        .iter()
+        .filter(|f| analysis::baseline::is_deny(&f.rule, &f.module))
+        .collect();
+    assert!(deny.is_empty(), "deny findings in tree: {deny:#?}");
+}
+
+#[test]
+fn no_malformed_or_stale_allows() {
+    let (report, _) = run_check();
+    let a0: Vec<_> = report.findings.iter().filter(|f| f.rule == "A0").collect();
+    assert!(a0.is_empty(), "malformed suppressions: {a0:#?}");
+    assert!(
+        report.unused_allows.is_empty(),
+        "stale allows (delete them): {:#?}",
+        report.unused_allows
+    );
+}
+
+#[test]
+fn every_suppression_has_a_written_reason() {
+    let (report, _) = run_check();
+    for s in &report.suppressed {
+        assert!(
+            s.reason.trim().len() >= 10,
+            "suppression at {}:{} has no substantive reason: {:?}",
+            s.finding.file,
+            s.finding.line,
+            s.reason
+        );
+    }
+}
+
+#[test]
+fn lock_rank_table_matches_real_mutex_sites() {
+    // Every declared lock must still exist at its declared site — a rank
+    // table entry pointing at deleted code is as stale as a bad baseline.
+    let files = analysis::load_tree(&src_root()).expect("walk rust/src");
+    for &(file, name, _rank) in lockorder::LOCK_RANKS {
+        let f = files
+            .iter()
+            .find(|f| f.path == file)
+            .unwrap_or_else(|| panic!("lock rank table names missing file {file}"));
+        let decls = lockorder::lock_decls(&lexer::clean(&f.src));
+        assert!(
+            decls.iter().any(|(_, d)| d == name),
+            "lock rank table: no Mutex/RwLock field `{name}` declared in {file} (found {decls:?})"
+        );
+    }
+    // And the one real nesting the repo has today must be visible to the
+    // analysis: EvalCache::bind_owner acquires `map` while holding `owner`.
+    let (report, _) = run_check();
+    assert!(
+        report
+            .lock_edges
+            .iter()
+            .any(|e| e.held == "owner" && e.acquired == "map" && e.file.ends_with("evalcache.rs")),
+        "expected the owner->map edge in scheduler/evalcache.rs, got {:#?}",
+        report.lock_edges
+    );
+}
