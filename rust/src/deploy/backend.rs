@@ -10,8 +10,8 @@ use crate::coordinator::{self, CoordinatorConfig, KvThrottle, LiveRequest};
 use crate::rescheduler::{self, MonitorConfig, MODELED_REPLAN_S};
 use crate::runtime;
 use crate::simulator::{
-    run_colocated_cfg, run_disaggregated_cfg, simulate, ServingSpec, SimConfig, SimReport,
-    SwitchSpec,
+    run_colocated_cfg, run_disaggregated_cfg, simulate, RecordMode, ServingSpec, SimConfig,
+    SimReport, SwitchSpec,
 };
 use crate::util::rng::Rng;
 use crate::workload::Trace;
@@ -30,6 +30,7 @@ fn sim_config(spec: &DeploymentSpec) -> SimConfig {
         kv_chunk_layers: spec.kv_chunk_layers,
         trace: spec.trace,
         trace_sample_rate: spec.trace_sample,
+        record_mode: if spec.windowed { RecordMode::Windowed } else { RecordMode::Full },
         ..SimConfig::default()
     }
 }

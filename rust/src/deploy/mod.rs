@@ -100,6 +100,16 @@ pub struct DeploymentSpec {
     /// per-candidate score breakdowns into [`Plan::audit`], drift/gate
     /// records into [`SimReport::audit`] on the resched backend.
     pub audit: bool,
+    /// Hierarchical zone planning (`--hierarchical [zones=N]`):
+    /// `ScheduleOptions::hierarchical`. `Some(0)` auto-sizes to ~32 devices
+    /// per zone; `None` (default) is the flat search.
+    pub hierarchical: Option<usize>,
+    /// Windowed metric recording (`--windowed`):
+    /// [`RecordMode::Windowed`](crate::simulator::RecordMode::Windowed) —
+    /// O(1) metric accumulation instead of per-request records, the
+    /// million-request streaming mode. Percentiles become
+    /// bucket-approximate (~13%); exact means/throughput are unchanged.
+    pub windowed: bool,
 }
 
 impl DeploymentSpec {
@@ -125,6 +135,8 @@ impl DeploymentSpec {
             trace: false,
             trace_sample: 1.0,
             audit: false,
+            hierarchical: None,
+            windowed: false,
         }
     }
 
@@ -218,6 +230,16 @@ impl DeploymentSpec {
         self
     }
 
+    pub fn hierarchical(mut self, zones: Option<usize>) -> Self {
+        self.hierarchical = zones;
+        self
+    }
+
+    pub fn windowed(mut self, on: bool) -> Self {
+        self.windowed = on;
+        self
+    }
+
     /// The mean-lengths task profile the planners size capacities with.
     pub fn task(&self) -> TaskProfile {
         scheduler::task_for(self.workload)
@@ -247,6 +269,7 @@ impl DeploymentSpec {
         o.use_eval_cache = self.use_eval_cache;
         o.kv_contention = if self.contention_aware { Some(self.link) } else { None };
         o.audit = self.audit;
+        o.hierarchical = self.hierarchical;
         o
     }
 
@@ -391,7 +414,9 @@ impl Deployment {
             _ => unreachable!("plan_json always returns an object"),
         };
         let mut result = vec![
-            ("requests".to_string(), json::num(rep.records.len() as f64)),
+            // Mode-independent completion count: windowed runs carry no
+            // per-request records.
+            ("requests".to_string(), json::num(rep.completed() as f64)),
             ("tokens_per_s".to_string(), json::num(rep.tokens_per_s())),
             ("avg_latency_s".to_string(), json::num(rep.avg_latency())),
             ("p95_latency_s".to_string(), json::num(rep.p_latency(95.0))),
@@ -501,6 +526,21 @@ mod tests {
         assert!(j.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
         // describe() renders the Table-2 style placement.
         assert!(dep.describe().contains("Prefill Instance"), "{}", dep.describe());
+    }
+
+    #[test]
+    fn windowed_spec_reports_through_agg() {
+        // `--windowed` drops per-request records; the JSON report must
+        // count completions from the aggregate instead.
+        let s = spec().windowed(true);
+        let dep = s.plan(&HexGen2Planner).expect("plans");
+        let trace = Trace::offline(WorkloadKind::Lpld, 30, 2);
+        let rep = dep.run(&SimBackend, &trace).expect("runs");
+        assert!(rep.records.is_empty(), "windowed runs keep no records");
+        assert_eq!(rep.completed(), 30);
+        assert!(rep.tokens_per_s() > 0.0);
+        let j = dep.report_json(&rep);
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(30));
     }
 
     #[test]

@@ -17,12 +17,13 @@
 use std::time::Instant;
 
 use crate::cluster::{settings, Cluster};
-use crate::deploy::{DeploymentSpec, HexGen2Planner, SimBackend};
+use crate::deploy::{DeploymentSpec, HexGen2Planner, PlanKind, SimBackend};
 use crate::model::{LlmSpec, LLAMA2_70B, OPT_30B};
 use crate::rescheduler::warmstart;
 use crate::scheduler::{self, genetic, EvalCache, ScheduleOptions};
+use crate::simulator::{simulate_stream, RecordMode, ServingSpec, SimConfig};
 use crate::util::json::{self, Json};
-use crate::workload::{Trace, WorkloadKind};
+use crate::workload::{Trace, TraceSource, WorkloadKind};
 
 /// The benched (setting, model, workload) grid: the paper's case-study
 /// cluster plus the two het1 end-to-end models.
@@ -224,6 +225,59 @@ pub fn bench_planner(quick: bool, threads: usize) -> Json {
         ("quick", Json::Bool(quick)),
         ("threads", json::num(par as f64)),
         ("cases", json::arr(cases)),
+        ("hierarchical", bench_planner_hierarchical(quick)),
+    ])
+}
+
+/// Hierarchical-planning columns for `BENCH_planner.json` (DESIGN.md §14):
+/// flat vs zoned planner wall-clock on a Table-5-style synthetic cluster,
+/// the objective retention of the stitched plan, and the threads=1 vs
+/// threads=4 bit-identity check the CI determinism gate greps.
+fn bench_planner_hierarchical(quick: bool) -> Json {
+    let n = if quick { 64 } else { 128 };
+    let c = settings::synthetic(n, 11);
+    let mut o = ScheduleOptions::new(WorkloadKind::Online);
+    o.max_rounds = if quick { 4 } else { 12 };
+    o.patience = if quick { 2 } else { 6 };
+    o.proposals_per_round = if quick { 4 } else { 8 };
+    o.type_candidates = if quick { 2 } else { 4 };
+    let t0 = Instant::now();
+    let flat = scheduler::schedule(&c, &LLAMA2_70B, &o);
+    let flat_s = t0.elapsed().as_secs_f64();
+    let mut h1 = o.clone();
+    h1.hierarchical = Some(0);
+    let t1 = Instant::now();
+    let hier1 = scheduler::schedule(&c, &LLAMA2_70B, &h1);
+    let hier1_s = t1.elapsed().as_secs_f64();
+    let mut h4 = h1.clone();
+    h4.threads = 4;
+    let t4 = Instant::now();
+    let hier4 = scheduler::schedule(&c, &LLAMA2_70B, &h4);
+    let hier4_s = t4.elapsed().as_secs_f64();
+    let (Some(f), Some(z1), Some(z4)) = (flat, hier1, hier4) else {
+        return Json::Null;
+    };
+    let identical = format!("{:?}", z1.placement) == format!("{:?}", z4.placement);
+    let retention = z1.placement.objective_score / f.placement.objective_score.max(1e-12);
+    println!(
+        "bench planner/hierarchical: {n} GPUs, flat {flat_s:.2}s vs zoned {hier1_s:.2}s \
+         ({:.1}x; {hier4_s:.2}s on 4 threads), {:.0}% objective retained, \
+         t1-vs-t4 bit-identical: {identical}",
+        flat_s / hier1_s.max(1e-12),
+        retention * 100.0,
+    );
+    json::obj(vec![
+        ("gpus", json::num(n as f64)),
+        ("zones", json::num(scheduler::hierarchy::auto_zone_count(n) as f64)),
+        ("wall_s_flat", json::num(flat_s)),
+        ("wall_s_hier", json::num(hier1_s)),
+        ("wall_s_hier_t4", json::num(hier4_s)),
+        ("speedup", json::num(flat_s / hier1_s.max(1e-12))),
+        ("speedup_t4", json::num(flat_s / hier4_s.max(1e-12))),
+        ("score_flat", json::num(f.placement.objective_score)),
+        ("score_hier", json::num(z1.placement.objective_score)),
+        ("objective_retention", json::num(retention)),
+        ("plans_bit_identical_across_threads", Json::Bool(identical)),
     ])
 }
 
@@ -235,7 +289,9 @@ pub fn bench_planner(quick: bool, threads: usize) -> Json {
 /// off the engine monomorphizes over `NoopSink`, so `events_per_s` must
 /// stay at the seed's level, and `trace_overhead_pct` quantifies what the
 /// recording sink costs when it *is* on.
-pub fn bench_sim(quick: bool) -> Json {
+/// `requests` overrides the streaming headline's arrival target
+/// (`--requests`; default 100k quick / 1M full — see [`bench_sim_stream`]).
+pub fn bench_sim(quick: bool, requests: Option<usize>) -> Json {
     let n_requests = if quick { 200 } else { 1000 };
     let samples = if quick { 3 } else { 10 };
     let mut cases = Vec::new();
@@ -276,7 +332,7 @@ pub fn bench_sim(quick: bool) -> Json {
              {:.0} events/s off vs {:.0} on ({overhead_pct:+.1}% tracing), {:.0} tokens/s served",
             model.name,
             kind.name(),
-            rep.records.len(),
+            rep.completed(),
             mean,
             n_requests as f64 / mean.max(1e-12),
             events_per_s,
@@ -288,7 +344,7 @@ pub fn bench_sim(quick: bool) -> Json {
             ("model", json::s(model.name)),
             ("workload", json::s(kind.name())),
             ("requests", json::num(n_requests as f64)),
-            ("served", json::num(rep.records.len() as f64)),
+            ("served", json::num(rep.completed() as f64)),
             ("unserved", json::num(rep.stats.unserved as f64)),
             ("wall_s_mean", json::num(mean)),
             ("wall_s_p50", json::num(p50)),
@@ -306,6 +362,62 @@ pub fn bench_sim(quick: bool) -> Json {
         ("quick", Json::Bool(quick)),
         ("samples", json::num(samples as f64)),
         ("cases", json::arr(cases)),
+        ("stream", bench_sim_stream(quick, requests)),
+    ])
+}
+
+/// The streaming headline (DESIGN.md §14): one windowed, generator-fed run
+/// of ~`n` online requests through [`simulate_stream`] — no materialized
+/// trace, no per-request records, memory O(active requests). `events_per_s_1m`
+/// is the trended events/sec @ 1M-requests figure; `peak_live_requests`
+/// is the bounded-memory proof CI's RSS guard cross-checks.
+fn bench_sim_stream(quick: bool, requests: Option<usize>) -> Json {
+    let n = requests.unwrap_or(if quick { 100_000 } else { 1_000_000 });
+    let Some(cluster) = settings::by_name("case_study") else { return Json::Null };
+    let spec =
+        DeploymentSpec::new(cluster.clone(), OPT_30B).workload(WorkloadKind::Online).quick(true).seed(7);
+    let Ok(dep) = spec.plan(&HexGen2Planner) else { return Json::Null };
+    let PlanKind::Disaggregated(p) = &dep.plan.kind else { return Json::Null };
+    // 75% of the planned peak (§5.1's loading rule) keeps the live set
+    // bounded: an offline trace would arrive all at t=0 and hold every
+    // request resident at once.
+    let (_s_in, s_out) = WorkloadKind::Online.mean_lengths();
+    let rate = (0.75 * dep.plan.est_tokens_per_s / s_out).max(1.0);
+    let duration = n as f64 / rate;
+    let cfg = SimConfig { record_mode: RecordMode::Windowed, ..SimConfig::default() };
+    let source = TraceSource::online(WorkloadKind::Online, rate, duration, 7);
+    let t0 = Instant::now();
+    let rep = simulate_stream(
+        &cluster,
+        &OPT_30B,
+        &ServingSpec::Disaggregated(p.clone()),
+        &[],
+        source,
+        &cfg,
+    );
+    let wall = t0.elapsed().as_secs_f64();
+    let events_per_s = rep.stats.events as f64 / wall.max(1e-12);
+    println!(
+        "bench sim/stream: ~{n} arrivals at {rate:.1} req/s, {} completed, {} events in \
+         {wall:.2}s ({events_per_s:.0} events/s), peak {} live requests",
+        rep.completed(),
+        rep.stats.events,
+        rep.stats.peak_live_requests,
+    );
+    json::obj(vec![
+        ("setting", json::s("case_study")),
+        ("model", json::s(OPT_30B.name)),
+        ("workload", json::s("online")),
+        ("mode", json::s("windowed-stream")),
+        ("requests_target", json::num(n as f64)),
+        ("completed", json::num(rep.completed() as f64)),
+        ("unserved", json::num(rep.stats.unserved as f64)),
+        ("events", json::num(rep.stats.events as f64)),
+        ("wall_s", json::num(wall)),
+        ("events_per_s_1m", json::num(events_per_s)),
+        ("reqs_per_s", json::num(rep.completed() as f64 / wall.max(1e-12))),
+        ("peak_live_requests", json::num(rep.stats.peak_live_requests as f64)),
+        ("sim_tokens_per_s", json::num(rep.tokens_per_s())),
     ])
 }
 

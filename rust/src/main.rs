@@ -39,6 +39,8 @@ fn main() {
             "no-eval-cache",
             "contention-aware",
             "update-baseline",
+            "hierarchical",
+            "windowed",
         ],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -141,6 +143,17 @@ fn spec_of(args: &Args) -> Result<DeploymentSpec> {
     if args.has("no-refine") {
         spec = spec.swap_mode(SwapMode::None);
     }
+    // Hierarchical zone planning: bare --hierarchical auto-sizes zones
+    // (~32 devices each); --hierarchical=N pins the zone count.
+    if let Some(z) = args.get("hierarchical") {
+        let zones: usize = z
+            .parse()
+            .map_err(|_| anyhow!("--hierarchical needs a zone count, got {z}"))?;
+        spec = spec.hierarchical(Some(zones));
+    } else if args.has("hierarchical") {
+        spec = spec.hierarchical(Some(0));
+    }
+    spec = spec.windowed(args.has("windowed"));
     Ok(spec)
 }
 
@@ -166,7 +179,7 @@ fn planner_of(args: &Args, spec: &mut DeploymentSpec) -> Result<&'static dyn dep
 fn print_report(label: &str, rep: &SimReport) {
     println!(
         "{label}: {} requests, {:.0} tokens/s, avg latency {:.2}s, p95 {:.2}s, TTFT {:.2}s, SLO@99 scale {:.1}",
-        rep.records.len(),
+        rep.completed(),
         rep.tokens_per_s(),
         rep.avg_latency(),
         rep.p_latency(95.0),
@@ -442,7 +455,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     println!("wrote BENCH_planner.json");
                 }
                 "sim" => {
-                    let j = experiments::perf::bench_sim(quick);
+                    let n = args.get("requests").and_then(|s| s.parse().ok());
+                    let j = experiments::perf::bench_sim(quick, n);
                     std::fs::write("BENCH_sim.json", j.to_string_pretty())
                         .map_err(|e| anyhow!("writing BENCH_sim.json: {e}"))?;
                     println!("wrote BENCH_sim.json");
@@ -474,11 +488,14 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  commands:\n\
                  \x20 schedule    --setting het1 --model llama2-70b --workload online [--planner P]\n\
                  \x20             [--objective O] [--no-refine] [--rounds N] [--threads N]\n\
-                 \x20             [--no-eval-cache] [--audit FILE] [--json] [--verbose]\n\
+                 \x20             [--hierarchical[=ZONES]] [--no-eval-cache] [--audit FILE] [--json] [--verbose]\n\
                  \x20             plan only: print the placement (Table-2 style) or a JSON report.\n\
                  \x20             --threads fans candidate evaluation over worker threads (plans are\n\
                  \x20             bit-identical to sequential); --no-eval-cache disables evaluation\n\
-                 \x20             memoization (A/B perf baseline, same plans).\n\
+                 \x20             memoization (A/B perf baseline, same plans). --hierarchical cuts the\n\
+                 \x20             cluster into bandwidth-coherent zones (~32 devices each, or =ZONES),\n\
+                 \x20             plans zones independently in parallel, and stitches with a top-level\n\
+                 \x20             max-flow — planner time scales with zone size, not cluster size.\n\
                  \x20 reschedule  --setting case_study --model opt30b [--phases SPEC] [--seed N] [--full]\n\
                  \x20             online rescheduling case study on a phased (drifting) trace: detects every\n\
                  \x20             sustained workload shift, warm-starts re-plans from the incumbent placement,\n\
@@ -519,14 +536,19 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             --prom FILE writes Prometheus-style windowed counters\n\
                  \x20             (--prom-window seconds per window, default 60). With tracing on,\n\
                  \x20             the --json report gains per-request span summaries.\n\
+                 \x20             --windowed streams metrics through an O(1) accumulator instead of\n\
+                 \x20             per-request records (million-request runs in bounded memory; exact\n\
+                 \x20             means/throughput, ~13%-bucket percentiles).\n\
                  \x20 serve       --model tiny --requests 16 --prefill 2 --decode 1 [--throttle-mbps N] [--verbose]\n\
                  \x20 workload    --workload hpld --n 10   (classes: HPLD|HPHD|LPHD|LPLD|online|heavy_tail)\n\
-                 \x20 bench       planner|sim [--full] [--threads N]\n\
+                 \x20 bench       planner|sim [--full] [--threads N] [--requests N]\n\
                  \x20             perf-regression harness (DESIGN.md \u{a7}10): replays the \u{a7}3.3 serving-loop\n\
                  \x20             planning workload cached vs uncached vs threaded and writes\n\
                  \x20             BENCH_planner.json / BENCH_sim.json (counter-based: evals, cache hit\n\
                  \x20             rate, partitions explored — deterministic where wall-time is not).\n\
-                 \x20 experiments <fig1|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table2|table3|table4|table5|appd|heavy_tail|kv_routing|all> [--full]\n\
+                 \x20             bench sim also streams a windowed online trace (--requests, default\n\
+                 \x20             100k quick / 1M full) for the events/sec @ 1M headline.\n\
+                 \x20 experiments <fig1|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table2|table3|table4|table5|table5h|appd|heavy_tail|kv_routing|all> [--full]\n\
                  \x20 settings    print bandwidth matrices (paper Fig. 4)\n\
                  \x20 check       [--src DIR] [--baseline FILE] [--json] [--update-baseline]\n\
                  \x20             hexcheck static analysis (DESIGN.md \u{a7}13): determinism (D1/D2/F1),\n\
@@ -650,7 +672,7 @@ fn run_experiment(id: &str, opts: &ExpOpts, args: &Args) -> Result<()> {
     let hets: &[&str] = if opts.quick { &het_quick } else { &het_all };
     match id {
         "list" => {
-            println!("experiments: fig1 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 table2 table3 table4 table5 appd heavy_tail kv_routing all");
+            println!("experiments: fig1 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 table2 table3 table4 table5 table5h appd heavy_tail kv_routing all");
         }
         "fig1" => {
             let (p, d) = batching::fig1_batching();
@@ -717,6 +739,14 @@ fn run_experiment(id: &str, opts: &ExpOpts, args: &Args) -> Result<()> {
                 if opts.quick { vec![16, 32, 64] } else { vec![64, 128, 192, 256, 320] };
             tables::table5_scalability(&LLAMA2_70B, &sizes, opts)
                 .print("Table 5: scheduler scalability");
+        }
+        "table5h" => {
+            // Hierarchical extension: flat vs zoned planner on ≥4x the
+            // Table-5 quick sizes (wall-clock, objective retention).
+            let sizes: Vec<usize> =
+                if opts.quick { vec![64, 128] } else { vec![128, 256, 320] };
+            tables::table5_hierarchical(&LLAMA2_70B, &sizes, opts)
+                .print("Table 5 (ext): flat vs hierarchical zone planning");
         }
         "appd" => {
             tables::appd_chunked_prefill(&OPT_30B, opts)

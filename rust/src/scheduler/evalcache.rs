@@ -32,6 +32,7 @@ use crate::kvtransfer::LinkModel;
 use crate::model::LlmSpec;
 use crate::telemetry::audit::{signature_hash, AuditRecord};
 
+use super::flownet::FlowNetPool;
 use super::objective::{kv_nic_utilization, Objective};
 use super::strategy::StrategyCache;
 use super::Placement;
@@ -261,6 +262,40 @@ impl EvalCache {
         objective: Objective,
         kv_contention: Option<LinkModel>,
     ) -> Option<Placement> {
+        self.evaluate_pooled(
+            cluster,
+            model,
+            task,
+            period,
+            groups,
+            n_type_candidates,
+            objective,
+            kv_contention,
+            1,
+            &mut FlowNetPool::new(),
+        )
+    }
+
+    /// [`EvalCache::evaluate`] with an inner worker budget for the miss
+    /// path's per-group strategy search and a recycled solver allocation
+    /// ([`FlowNetPool`]). Hits leave the pool untouched; misses adopt its
+    /// skeleton and hand it back. Neither knob can change a memoized value
+    /// — evaluation stays a pure function of the key, which is what keeps
+    /// one cache shareable across searches, thread counts, and pool states.
+    #[allow(clippy::too_many_arguments)]
+    pub fn evaluate_pooled(
+        &self,
+        cluster: &Cluster,
+        model: &LlmSpec,
+        task: &TaskProfile,
+        period: f64,
+        groups: &[Vec<DeviceId>],
+        n_type_candidates: usize,
+        objective: Objective,
+        kv_contention: Option<LinkModel>,
+        threads: usize,
+        pool: &mut FlowNetPool,
+    ) -> Option<Placement> {
         self.bind_owner(cluster, model);
         let key = EvalKey {
             sig: super::partition_signature(groups),
@@ -282,7 +317,7 @@ impl EvalCache {
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let v = super::evaluate_partition_with(
+        let v = super::evaluate_partition_pooled(
             cluster,
             model,
             task,
@@ -292,6 +327,8 @@ impl EvalCache {
             objective,
             kv_contention,
             &self.strategy,
+            threads,
+            pool,
         );
         if audit_on {
             self.push_audit(&key.sig, groups.len(), &v, kv_contention, false);

@@ -30,6 +30,112 @@ use super::maxflow::{EdgeRef, FlowNetwork};
 use super::placement::{GroupPlan, KvRoute, Placement};
 use super::strategy::StrategyCache;
 
+/// Per-group (prefill, decode) strategy + capacity search over `gs` through
+/// the shared [`StrategyCache`]. A free function so the scoped workers of
+/// [`PartitionFlowNet::new_in`] can each run one contiguous chunk.
+#[allow(clippy::type_complexity)]
+fn strategize(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    task: &TaskProfile,
+    period: f64,
+    gs: &[Vec<DeviceId>],
+    cache: &StrategyCache,
+) -> Vec<(Option<(ReplicaConfig, f64)>, Option<(ReplicaConfig, f64)>)> {
+    let cm = CostModel::new(cluster, model);
+    gs.iter()
+        .map(|g| {
+            let p = cache.best_prefill(cluster, model, g, task).map(|(cfg, _lat)| {
+                let cap = cm.prefill_capacity(&cfg, task, period);
+                (cfg, cap)
+            });
+            let d = cache.best_decode(cluster, model, g, task).map(|(cfg, _tput)| {
+                let cap = cm.decode_capacity(&cfg, task, period);
+                (cfg, cap)
+            });
+            (p, d)
+        })
+        .collect()
+}
+
+/// The width-determined solver skeleton: node layout, edge handles, and the
+/// network itself. Every ordered (p, d) orientation gets a KV edge whether
+/// or not both sides are feasible (dead orientations just keep capacity 0,
+/// which the solver never finds admissible), so the *structure* is a pure
+/// function of the group count — which is what lets one proposal's network
+/// be adopted wholesale by the next.
+struct NetSkeleton {
+    k: usize,
+    net: FlowNetwork,
+    compute_edges: Vec<EdgeRef>,
+    ingress_edges: Vec<EdgeRef>,
+    egress_edges: Vec<EdgeRef>,
+    kv_edges: Vec<(usize, usize, EdgeRef)>,
+}
+
+/// Node layout: 0 = source (h), 1 = sink (h), then in/out per group.
+fn build_skeleton(k: usize) -> NetSkeleton {
+    let node_in = |g: usize| 2 + 2 * g;
+    let node_out = |g: usize| 3 + 2 * g;
+    let mut net = FlowNetwork::new(2 + 2 * k);
+    // All edges start at capacity 0; `evaluate` retunes them per
+    // assignment. Every group gets both an ingress and an egress edge —
+    // only the side matching its assigned type is ever opened.
+    let mut compute_edges = Vec::with_capacity(k);
+    let mut ingress_edges = Vec::with_capacity(k);
+    let mut egress_edges = Vec::with_capacity(k);
+    for g in 0..k {
+        compute_edges.push(net.add_edge(node_in(g), node_out(g), 0.0));
+        ingress_edges.push(net.add_edge(0, node_in(g), 0.0));
+        egress_edges.push(net.add_edge(node_out(g), 1, 0.0));
+    }
+    let mut kv_edges = Vec::with_capacity(k * k.saturating_sub(1));
+    for p in 0..k {
+        for d in 0..k {
+            if p != d {
+                kv_edges.push((p, d, net.add_edge(node_out(p), node_in(d), 0.0)));
+            }
+        }
+    }
+    NetSkeleton { k, net, compute_edges, ingress_edges, egress_edges, kv_edges }
+}
+
+/// Recycles one proposal's solver skeleton into the next: the §3.4
+/// refinement loop builds thousands of same-width networks, and before this
+/// pool each one re-allocated its adjacency lists and edge tables from
+/// scratch. Flows are zeroed on reuse and every capacity is retuned before
+/// the first solve, so a recycled first solve is arithmetically identical
+/// to a cold one — plans stay bit-identical with the pool absent, fresh, or
+/// shared across a whole proposal batch. That purity is load-bearing:
+/// [`EvalCache`](super::EvalCache) memoizes whole evaluations, so results
+/// must be functions of the partition alone, never of which proposal
+/// happened to run before it. (Carrying *residual flows* across proposals
+/// would violate exactly that — max flows are not unique per edge — which
+/// is why the across-proposal reuse is allocation + structure, while
+/// residual warm-starting stays within one partition's candidate sweep.)
+#[derive(Default)]
+pub struct FlowNetPool {
+    slot: Option<NetSkeleton>,
+}
+
+impl FlowNetPool {
+    pub fn new() -> FlowNetPool {
+        FlowNetPool::default()
+    }
+
+    /// A zero-flow skeleton of width `k`: recycled when the previous
+    /// occupant matches, freshly built otherwise.
+    fn take(&mut self, k: usize) -> NetSkeleton {
+        match self.slot.take() {
+            Some(mut s) if s.k == k => {
+                s.net.reset_flows();
+                s
+            }
+            _ => build_skeleton(k),
+        }
+    }
+}
+
 /// Incremental evaluator of every type assignment of *one* partition.
 ///
 /// Built once per partition: the per-group strategy search (through the
@@ -40,7 +146,8 @@ use super::strategy::StrategyCache;
 /// consecutive assignments are a handful of edges) and warm-starts max-flow
 /// from the previous residual state via
 /// [`FlowNetwork::max_flow_incremental`], instead of rebuilding and
-/// re-solving the network from scratch per candidate.
+/// re-solving the network from scratch per candidate. Across partitions the
+/// allocation itself is recycled through a [`FlowNetPool`].
 pub struct PartitionFlowNet<'a> {
     groups: &'a [Vec<DeviceId>],
     task: TaskProfile,
@@ -52,13 +159,9 @@ pub struct PartitionFlowNet<'a> {
     /// Throughput-optimal decode strategy + capacity per group.
     decode: Vec<Option<(ReplicaConfig, f64)>>,
     /// KV edge capacity for every ordered (p, d) pair; 0.0 when either
-    /// side has no feasible strategy (no edge exists then).
+    /// side has no feasible strategy (the edge then stays closed).
     kv_cap: Vec<Vec<f64>>,
-    net: FlowNetwork,
-    compute_edges: Vec<EdgeRef>,
-    ingress_edges: Vec<EdgeRef>,
-    egress_edges: Vec<EdgeRef>,
-    kv_edges: Vec<(usize, usize, EdgeRef)>,
+    skel: NetSkeleton,
 }
 
 impl<'a> PartitionFlowNet<'a> {
@@ -70,29 +173,46 @@ impl<'a> PartitionFlowNet<'a> {
         groups: &'a [Vec<DeviceId>],
         cache: &StrategyCache,
     ) -> PartitionFlowNet<'a> {
-        let cm = CostModel::new(cluster, model);
-        let prefill: Vec<Option<(ReplicaConfig, f64)>> = groups
-            .iter()
-            .map(|g| {
-                cache
-                    .best_prefill(cluster, model, g, task)
-                    .map(|(cfg, _lat)| {
-                        let cap = cm.prefill_capacity(&cfg, task, period);
-                        (cfg, cap)
+        Self::new_in(cluster, model, task, period, groups, cache, 1, &mut FlowNetPool::new())
+    }
+
+    /// [`PartitionFlowNet::new`] with a worker budget for the per-group
+    /// strategy search and a recycled solver allocation. `threads > 1`
+    /// chunks the groups over `std::thread::scope` workers — results are
+    /// joined in group order, so the built evaluator is bit-identical to a
+    /// sequential build for any worker count. Neither knob can change a
+    /// result; both only cut wall-clock and allocation churn.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_in(
+        cluster: &Cluster,
+        model: &LlmSpec,
+        task: &TaskProfile,
+        period: f64,
+        groups: &'a [Vec<DeviceId>],
+        cache: &StrategyCache,
+        threads: usize,
+        pool: &mut FlowNetPool,
+    ) -> PartitionFlowNet<'a> {
+        let k = groups.len();
+        let workers = threads.min(k).max(1);
+        let per_group = if workers <= 1 {
+            strategize(cluster, model, task, period, groups, cache)
+        } else {
+            let chunk = k.div_ceil(workers);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = groups
+                    .chunks(chunk)
+                    .map(|part| {
+                        s.spawn(move || strategize(cluster, model, task, period, part, cache))
                     })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("strategy worker panicked"))
+                    .collect::<Vec<_>>()
             })
-            .collect();
-        let decode: Vec<Option<(ReplicaConfig, f64)>> = groups
-            .iter()
-            .map(|g| {
-                cache
-                    .best_decode(cluster, model, g, task)
-                    .map(|(cfg, _tput)| {
-                        let cap = cm.decode_capacity(&cfg, task, period);
-                        (cfg, cap)
-                    })
-            })
-            .collect();
+        };
+        let (prefill, decode): (Vec<_>, Vec<_>) = per_group.into_iter().unzip();
 
         // Coordinator ingress/egress capacity (connection types (1)/(2)):
         // request/response payloads over the coordinator's NIC. Rarely
@@ -101,39 +221,20 @@ impl<'a> PartitionFlowNet<'a> {
         let ingress_cap = period * nic / (task.s_in * model.bytes_per_elem).max(1.0);
         let egress_cap = period * nic / (task.s_out * model.bytes_per_elem).max(1.0);
 
-        // Node layout: 0 = source (h), 1 = sink (h), then in/out per group.
-        let k = groups.len();
-        let node_in = |g: usize| 2 + 2 * g;
-        let node_out = |g: usize| 3 + 2 * g;
-        let mut net = FlowNetwork::new(2 + 2 * k);
-
-        // All edges start at capacity 0; `evaluate` retunes them per
-        // assignment. Every group gets both an ingress and an egress edge —
-        // only the side matching its assigned type is ever opened.
-        let mut compute_edges = Vec::with_capacity(k);
-        let mut ingress_edges = Vec::with_capacity(k);
-        let mut egress_edges = Vec::with_capacity(k);
-        for g in 0..k {
-            compute_edges.push(net.add_edge(node_in(g), node_out(g), 0.0));
-            ingress_edges.push(net.add_edge(0, node_in(g), 0.0));
-            egress_edges.push(net.add_edge(node_out(g), 1, 0.0));
-        }
-
-        // KV edges (connection type (3)) with stage-order-optimized
-        // capacity, for every orientation both strategies support.
+        // KV capacities (connection type (3)) with stage-order-optimized
+        // cost, for every orientation both strategies support; the other
+        // orientations keep 0.0 and their (always-present) edges closed.
+        let cm = CostModel::new(cluster, model);
         let mut kv_cap = vec![vec![0.0f64; k]; k];
-        let mut kv_edges: Vec<(usize, usize, EdgeRef)> = Vec::new();
-        for p in 0..k {
-            let Some((pcfg, _)) = &prefill[p] else { continue };
-            for d in 0..k {
+        for (p, pre) in prefill.iter().enumerate() {
+            let Some((pcfg, _)) = pre else { continue };
+            for (d, dec) in decode.iter().enumerate() {
                 if p == d {
                     continue;
                 }
-                let Some((dcfg, _)) = &decode[d] else { continue };
+                let Some((dcfg, _)) = dec else { continue };
                 let t = cm.kv_transfer_time(pcfg, dcfg, &task.with_batch(1));
-                let cap = if t <= 0.0 { ingress_cap } else { period / t };
-                kv_cap[p][d] = cap;
-                kv_edges.push((p, d, net.add_edge(node_out(p), node_in(d), 0.0)));
+                kv_cap[p][d] = if t <= 0.0 { ingress_cap } else { period / t };
             }
         }
 
@@ -146,12 +247,14 @@ impl<'a> PartitionFlowNet<'a> {
             prefill,
             decode,
             kv_cap,
-            net,
-            compute_edges,
-            ingress_edges,
-            egress_edges,
-            kv_edges,
+            skel: pool.take(k),
         }
+    }
+
+    /// Hand the solver skeleton back for the next proposal (the
+    /// across-proposal half of the warm start — see [`FlowNetPool`]).
+    pub fn recycle(self, pool: &mut FlowNetPool) {
+        pool.slot = Some(self.skel);
     }
 
     /// Per-group (prefill_capacity, decode_capacity) — the secondary
@@ -195,26 +298,33 @@ impl<'a> PartitionFlowNet<'a> {
             return None;
         }
 
+        let net = &mut self.skel.net;
         for g in 0..k {
-            self.net.set_capacity(self.compute_edges[g], plans[g].capacity);
-            self.net
-                .set_capacity(self.ingress_edges[g], if is_prefill[g] { self.ingress_cap } else { 0.0 });
-            self.net
-                .set_capacity(self.egress_edges[g], if is_prefill[g] { 0.0 } else { self.egress_cap });
+            net.set_capacity(self.skel.compute_edges[g], plans[g].capacity);
+            net.set_capacity(
+                self.skel.ingress_edges[g],
+                if is_prefill[g] { self.ingress_cap } else { 0.0 },
+            );
+            net.set_capacity(
+                self.skel.egress_edges[g],
+                if is_prefill[g] { 0.0 } else { self.egress_cap },
+            );
         }
-        for &(p, d, e) in &self.kv_edges {
+        for &(p, d, e) in &self.skel.kv_edges {
             let live = is_prefill[p]
                 && !is_prefill[d]
                 && plans[p].capacity > 0.0
                 && plans[d].capacity > 0.0;
-            self.net.set_capacity(e, if live { self.kv_cap[p][d] } else { 0.0 });
+            net.set_capacity(e, if live { self.kv_cap[p][d] } else { 0.0 });
         }
 
-        let flow_value = self.net.max_flow_incremental(0, 1);
+        let flow_value = net.max_flow_incremental(0, 1);
 
+        let net = &self.skel.net;
         let group_utilization: Vec<f64> =
-            self.compute_edges.iter().map(|&e| self.net.utilization(e)).collect();
+            self.skel.compute_edges.iter().map(|&e| net.utilization(e)).collect();
         let routes: Vec<KvRoute> = self
+            .skel
             .kv_edges
             .iter()
             .filter(|&&(p, d, _)| {
@@ -223,7 +333,7 @@ impl<'a> PartitionFlowNet<'a> {
             .map(|&(p, d, e)| KvRoute {
                 prefill: p,
                 decode: d,
-                flow: self.net.flow(e),
+                flow: net.flow(e),
                 capacity: self.kv_cap[p][d],
             })
             .collect();
@@ -346,6 +456,67 @@ mod tests {
             );
         }
         assert!(evaluated >= 4, "too few feasible assignments exercised: {evaluated}");
+    }
+
+    #[test]
+    fn pooled_skeleton_matches_fresh_bit_for_bit() {
+        // Across-proposal reuse contract: adopting the previous partition's
+        // solver skeleton (flows zeroed) must leave every placement —
+        // per-edge flows included — bit-identical to a fresh build, or the
+        // EvalCache could memoize history-dependent results.
+        let c = settings::case_study();
+        let task = TaskProfile::new(1, 512.0, 128.0);
+        let partitions: Vec<Vec<Vec<usize>>> = vec![
+            vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]],
+            vec![vec![0, 4], vec![1, 5], vec![2, 6], vec![3, 7]],
+            vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]], // different width: pool rebuilds
+            vec![vec![0, 2], vec![1, 3], vec![4, 6], vec![5, 7]],
+        ];
+        let cache = StrategyCache::new();
+        let mut pool = FlowNetPool::new();
+        for groups in &partitions {
+            let assign: Vec<bool> = (0..groups.len()).map(|g| g % 2 == 0).collect();
+            let mut pooled =
+                PartitionFlowNet::new_in(&c, &OPT_30B, &task, 600.0, groups, &cache, 1, &mut pool);
+            let a = pooled.evaluate(&assign);
+            pooled.recycle(&mut pool);
+            let mut fresh = PartitionFlowNet::new(&c, &OPT_30B, &task, 600.0, groups, &cache);
+            let b = fresh.evaluate(&assign);
+            assert_eq!(format!("{a:?}"), format!("{b:?}"), "pooled result drifted for {groups:?}");
+        }
+    }
+
+    #[test]
+    fn threaded_strategy_build_matches_sequential() {
+        // The per-group strategy fan-out joins in group order; the evaluator
+        // it assembles must be indistinguishable from a sequential build.
+        let c = settings::het1();
+        let task = TaskProfile::new(1, 512.0, 128.0);
+        let groups: Vec<Vec<usize>> =
+            vec![vec![0, 1], vec![2, 3], vec![4, 5, 6, 7], vec![8, 9, 10, 11], vec![12, 13, 14, 15], vec![16, 17, 18, 19]];
+        let assign = [true, false, true, false, true, false];
+        for threads in [2usize, 4, 16] {
+            let seq_cache = StrategyCache::new();
+            let par_cache = StrategyCache::new();
+            let mut seq = PartitionFlowNet::new(&c, &OPT_30B, &task, 600.0, &groups, &seq_cache);
+            let mut par = PartitionFlowNet::new_in(
+                &c,
+                &OPT_30B,
+                &task,
+                600.0,
+                &groups,
+                &par_cache,
+                threads,
+                &mut FlowNetPool::new(),
+            );
+            let a = seq.evaluate(&assign);
+            let b = par.evaluate(&assign);
+            assert_eq!(
+                format!("{a:?}"),
+                format!("{b:?}"),
+                "threads={threads} changed the evaluation"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,403 @@
+//! Hierarchical zone planning (DESIGN.md §14): plan planet-scale clusters
+//! by coarsening them into bandwidth-coherent *zones*, running the flat §3
+//! search inside each zone independently, and stitching the zone plans with
+//! a top-level max-flow over zone aggregates.
+//!
+//! The flat search's wall-clock grows superlinearly with device count
+//! (spectral partition, per-group strategy search, and the proposal sweep
+//! all widen with `n`). Zoning caps the working set each search sees at the
+//! zone size, so total planner time scales with *zone* size times zone
+//! count — and zones are embarrassingly parallel, so they fan out over
+//! [`ScheduleOptions::threads`]. The price is optimality: groups can no
+//! longer span zones, and cross-zone KV traffic is modelled at zone
+//! granularity. The Table-5 extension quantifies both sides.
+//!
+//! Determinism contract: plans are bit-identical across thread counts. Zone
+//! formation is the deterministic spectral cut, each zone search carries a
+//! seed derived only from `(opts.seed, zone index)`, zone results join in
+//! zone order, and the stitch solve is sequential. Hierarchical plans
+//! legitimately *differ* from flat plans — that is the trade, not a bug.
+
+use std::time::Instant;
+
+use crate::cluster::{Cluster, Device, DeviceId};
+use crate::costmodel::ReplicaConfig;
+use crate::model::LlmSpec;
+
+use super::maxflow::FlowNetwork;
+use super::placement::{GroupPlan, KvRoute, Placement};
+use super::{
+    coarsen, objective, spectral, task_for, ConvergencePoint, EvalCache, ScheduleOptions,
+    ScheduleResult, SearchStats,
+};
+
+/// Auto zone count for `--hierarchical` without an explicit `zones=`:
+/// roughly 32 devices per zone, clamped to [2, 16] zones. 32 keeps each
+/// zone search in the regime where the flat planner is fast, and 16 zones
+/// saturates any realistic `--threads` fan-out.
+pub fn auto_zone_count(n: usize) -> usize {
+    (n / 32).clamp(2, 16)
+}
+
+/// Plan `cluster` hierarchically: cut into `zones` zones (0 = auto-size),
+/// plan each zone with the flat search, stitch with a top-level max-flow.
+///
+/// Falls back to the flat planner (same options, `hierarchical` cleared)
+/// when the cluster is too small to zone (< 4 devices), when no zone count
+/// down to 2 yields zones of at least 2 devices, or when any zone search
+/// fails — a hierarchical *request* never turns a schedulable cluster into
+/// `None`.
+pub fn schedule_hierarchical(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    opts: &ScheduleOptions,
+    cache: &EvalCache,
+    zones: usize,
+) -> Option<ScheduleResult> {
+    // hexcheck: allow(D2) -- wall-clock timing of the planner itself (ScheduleResult::elapsed_s); never feeds plan decisions
+    let t0 = Instant::now();
+    let n = cluster.n();
+    let flat = || {
+        let mut fo = opts.clone();
+        fo.hierarchical = None;
+        super::schedule_with_cache(cluster, model, &fo, cache)
+    };
+    if n < 4 {
+        return flat();
+    }
+    let mut z = if zones == 0 { auto_zone_count(n) } else { zones };
+    z = z.clamp(2, n / 2);
+
+    // Zone formation: deterministic spectral k-way cut over the bandwidth
+    // graph, shrinking z until every zone has at least 2 devices (a
+    // singleton zone cannot host both phases of anything).
+    let devs: Vec<DeviceId> = (0..n).collect();
+    let zone_devs = loop {
+        let parts = spectral::partition_k(cluster, &devs, z);
+        if parts.iter().all(|p| p.len() >= 2) {
+            break parts;
+        }
+        if z == 2 {
+            return flat();
+        }
+        z -= 1;
+    };
+
+    let zone_clusters: Vec<Cluster> =
+        zone_devs.iter().enumerate().map(|(zi, zd)| zone_cluster(cluster, zi, zd)).collect();
+
+    // Plan zones independently. Each zone gets its own EvalCache: the
+    // caller's cache binds to one (cluster, model) owner and fingerprint-
+    // flushes on change, so sharing it across zone sub-clusters would
+    // thrash it. Zone searches fan out over opts.threads; leftover workers
+    // fan *into* each zone search (zo.threads), and both knobs are
+    // result-invariant, so the join (in zone order) is bit-stable.
+    let plan_zone = |zi: usize, zc: &Cluster| -> Option<ScheduleResult> {
+        let zcache = if opts.use_eval_cache { EvalCache::new() } else { EvalCache::disabled() };
+        let mut zo = opts.clone();
+        zo.hierarchical = None;
+        zo.threads = (opts.threads / z).max(1);
+        zo.initial_groups = None;
+        zo.force_k = None;
+        zo.audit = false;
+        zo.seed = opts.seed ^ (zi as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        super::schedule_with_cache(zc, model, &zo, &zcache)
+    };
+    let workers = opts.threads.clamp(1, z);
+    let zone_results: Vec<Option<ScheduleResult>> = if workers <= 1 {
+        zone_clusters.iter().enumerate().map(|(zi, zc)| plan_zone(zi, zc)).collect()
+    } else {
+        let chunk = z.div_ceil(workers);
+        std::thread::scope(|s| {
+            let plan_zone = &plan_zone;
+            let handles: Vec<_> = zone_clusters
+                .chunks(chunk)
+                .enumerate()
+                .map(|(ci, part)| {
+                    s.spawn(move || {
+                        part.iter()
+                            .enumerate()
+                            .map(|(j, zc)| plan_zone(ci * chunk + j, zc))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("zone planner panicked"))
+                .collect()
+        })
+    };
+    let mut zone_plans: Vec<ScheduleResult> = Vec::with_capacity(z);
+    for r in zone_results {
+        match r {
+            Some(r) => zone_plans.push(r),
+            None => return flat(),
+        }
+    }
+
+    // Stitch: a 2z+2-node max-flow over zone aggregates. Node layout:
+    // 0 = source, 1 = sink, 2+2z = P_z (zone z prefill side), 3+2z = D_z.
+    //   src  -> P_z : summed capacity of zone z's prefill groups
+    //   D_z  -> sink: summed capacity of zone z's decode groups
+    //   P_z  -> D_z : the zone's own solved flow value (its internal KV
+    //                 fabric already admits exactly that much)
+    //   P_z  -> D_w : aggregate inter-zone KV budget — requests per period
+    //                 the summed pairwise bandwidth between the two zones'
+    //                 devices can carry (optimistic zone-granular bound).
+    // Solve intra-zone edges first (recovers the sum of zone flows), then
+    // open the inter-zone edges via set_capacity and warm re-solve
+    // incrementally: the stitched value only ever adds cross-zone gains on
+    // top of the zone-local base.
+    let task = task_for(opts.workload);
+    let period = opts.period;
+    let aggs: Vec<(f64, f64, f64)> = zone_plans
+        .iter()
+        .map(|r| {
+            let p = &r.placement;
+            let pre: f64 =
+                p.groups.iter().filter(|g| g.is_prefill).map(|g| g.capacity).sum();
+            let dec: f64 =
+                p.groups.iter().filter(|g| !g.is_prefill).map(|g| g.capacity).sum();
+            (pre, dec, p.flow_value)
+        })
+        .collect();
+    let zbw = coarsen::inter_group_bandwidth(cluster, &zone_devs);
+    let kv_bytes = model.kv_bytes_per_token(model.n_layers) * task.s_in;
+    let mut net = FlowNetwork::new(2 + 2 * z);
+    for (zi, &(pre, dec, own)) in aggs.iter().enumerate() {
+        net.add_edge(0, 2 + 2 * zi, pre);
+        net.add_edge(3 + 2 * zi, 1, dec);
+        net.add_edge(2 + 2 * zi, 3 + 2 * zi, own);
+    }
+    let mut inter = Vec::with_capacity(z * (z - 1));
+    for zp in 0..z {
+        for zd in 0..z {
+            if zp == zd {
+                continue;
+            }
+            let cap = if kv_bytes > 0.0 { period * zbw[zp][zd] / kv_bytes } else { 0.0 };
+            inter.push((zp, zd, net.add_edge(2 + 2 * zp, 3 + 2 * zd, 0.0), cap));
+        }
+    }
+    let _zone_local = net.max_flow_incremental(0, 1);
+    for &(_, _, e, cap) in &inter {
+        net.set_capacity(e, cap);
+    }
+    let flow_value = net.max_flow_incremental(0, 1);
+
+    // Assemble the global placement: concatenate zone groups with devices
+    // (and ReplicaConfig stages) remapped to global ids, offset the zone
+    // routes, and synthesize one KV route per stitched cross-zone flow
+    // (highest-capacity prefill group of the source zone to
+    // highest-capacity decode group of the target zone, first index on
+    // ties — the engine spreads actual transfers by flow weight).
+    let mut groups: Vec<GroupPlan> = Vec::new();
+    let mut routes: Vec<KvRoute> = Vec::new();
+    let mut group_utilization: Vec<f64> = Vec::new();
+    let mut offsets: Vec<usize> = Vec::with_capacity(z);
+    for (zi, r) in zone_plans.iter().enumerate() {
+        let off = groups.len();
+        offsets.push(off);
+        let map = &zone_devs[zi];
+        for g in &r.placement.groups {
+            let devices: Vec<DeviceId> = g.devices.iter().map(|&d| map[d]).collect();
+            let config = g.config.as_ref().map(|c| {
+                ReplicaConfig::new(
+                    c.stages.iter().map(|st| st.iter().map(|&d| map[d]).collect()).collect(),
+                    c.layers.clone(),
+                )
+            });
+            groups.push(GroupPlan {
+                devices,
+                is_prefill: g.is_prefill,
+                config,
+                capacity: g.capacity,
+            });
+        }
+        group_utilization.extend_from_slice(&r.placement.group_utilization);
+        for rt in &r.placement.routes {
+            routes.push(KvRoute {
+                prefill: off + rt.prefill,
+                decode: off + rt.decode,
+                ..*rt
+            });
+        }
+    }
+    for &(zp, zd, e, cap) in &inter {
+        let f = net.flow(e);
+        if f <= 1e-9 {
+            continue;
+        }
+        if let (Some(pg), Some(dg)) = (
+            best_group(&zone_plans[zp].placement, offsets[zp], true),
+            best_group(&zone_plans[zd].placement, offsets[zd], false),
+        ) {
+            routes.push(KvRoute { prefill: pg, decode: dg, flow: f, capacity: cap });
+        }
+    }
+
+    let tokens_per_s = flow_value * task.s_out / period;
+    let mut placement = Placement {
+        groups,
+        routes,
+        flow_value,
+        tokens_per_s,
+        group_utilization,
+        objective_score: 0.0,
+    };
+    let mut score = opts.objective.score(cluster, model, &task, &placement);
+    if let Some(link) = opts.kv_contention {
+        score = objective::apply_kv_contention(score, objective::kv_nic_utilization(&placement, link));
+    }
+    placement.objective_score = score;
+
+    let mut stats = SearchStats::default();
+    for r in &zone_plans {
+        stats.evals += r.stats.evals;
+        stats.eval_cache_hits += r.stats.eval_cache_hits;
+        stats.strategy_misses += r.stats.strategy_misses;
+        stats.strategy_hits += r.stats.strategy_hits;
+        stats.partitions_explored += r.stats.partitions_explored;
+    }
+    stats.threads = opts.threads.max(1);
+    let rounds = zone_plans.iter().map(|r| r.rounds).max().unwrap_or(0);
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    Some(ScheduleResult {
+        history: vec![ConvergencePoint {
+            elapsed_s,
+            round: rounds,
+            tokens_per_s: placement.tokens_per_s,
+            score: placement.objective_score,
+        }],
+        rounds,
+        elapsed_s,
+        stats,
+        audit: Vec::new(),
+        placement,
+    })
+}
+
+/// Sub-cluster for one zone: devices renumbered to local ids with their
+/// hardware identity (GPU type, node, DC) intact, bandwidth/latency sliced
+/// from the parent matrices (diagonal ∞ slices through unchanged).
+fn zone_cluster(cluster: &Cluster, zi: usize, devs: &[DeviceId]) -> Cluster {
+    let devices: Vec<Device> = devs
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| Device { id: i, ..cluster.devices[d] })
+        .collect();
+    let bandwidth: Vec<Vec<f64>> = devs
+        .iter()
+        .map(|&a| devs.iter().map(|&b| cluster.bandwidth[a][b]).collect())
+        .collect();
+    let latency: Vec<Vec<f64>> = devs
+        .iter()
+        .map(|&a| devs.iter().map(|&b| cluster.latency[a][b]).collect())
+        .collect();
+    Cluster { name: format!("{}/zone{zi}", cluster.name), devices, bandwidth, latency }
+}
+
+/// Global index (zone offset + local index) of the zone's highest-capacity
+/// group of the requested phase; first index wins ties.
+fn best_group(p: &Placement, off: usize, prefill: bool) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, g) in p.groups.iter().enumerate() {
+        if g.is_prefill != prefill {
+            continue;
+        }
+        if best.map(|(_, c)| g.capacity > c).unwrap_or(true) {
+            best = Some((i, g.capacity));
+        }
+    }
+    best.map(|(i, _)| off + i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{is_valid_partition, schedule, SwapMode};
+    use super::*;
+    use crate::cluster::settings;
+    use crate::model::OPT_30B;
+    use crate::workload::WorkloadKind;
+
+    fn quick_opts() -> ScheduleOptions {
+        let mut opts = ScheduleOptions::new(WorkloadKind::Lphd);
+        opts.max_rounds = 2;
+        opts.patience = 2;
+        opts.proposals_per_round = 4;
+        opts
+    }
+
+    /// The hierarchical planner must produce a valid global placement
+    /// (every device in exactly one group, positive flow) and, per the
+    /// determinism contract, bit-identical plans for any thread count.
+    #[test]
+    fn hierarchical_plan_valid_and_thread_count_invariant() {
+        let c = settings::synthetic(64, 5);
+        let mut opts = quick_opts();
+        opts.hierarchical = Some(4);
+        let r1 = schedule(&c, &OPT_30B, &opts).expect("hierarchical plan");
+        let groups: Vec<Vec<DeviceId>> =
+            r1.placement.groups.iter().map(|g| g.devices.clone()).collect();
+        assert!(is_valid_partition(&c, &groups), "zone groups must tile the cluster");
+        assert!(r1.placement.flow_value > 0.0);
+        assert!(r1.placement.objective_score > 0.0);
+        // Remapped replica stages must reference global device ids only.
+        for g in &r1.placement.groups {
+            if let Some(cfg) = &g.config {
+                for st in &cfg.stages {
+                    for d in st {
+                        assert!(g.devices.contains(d), "stage device {d} outside its group");
+                    }
+                }
+            }
+        }
+        let mut o4 = opts.clone();
+        o4.threads = 4;
+        let r4 = schedule(&c, &OPT_30B, &o4).expect("hierarchical plan (threaded)");
+        assert_eq!(
+            format!("{:?}", r1.placement),
+            format!("{:?}", r4.placement),
+            "hierarchical plans must be bit-identical across thread counts"
+        );
+    }
+
+    /// Plan quality: zoning trades optimality for wall-clock, but the
+    /// stitched objective must stay within 2x of the flat one-shot plan on
+    /// a Table-5-style synthetic cluster (zone-local flows sum into the
+    /// stitch base, so the gap comes only from groups that no longer span
+    /// zones).
+    #[test]
+    fn hierarchical_objective_within_bound_of_flat() {
+        let c = settings::synthetic(64, 7);
+        let mut flat = ScheduleOptions::new(WorkloadKind::Lphd);
+        flat.swap_mode = SwapMode::None;
+        let mut hier = flat.clone();
+        hier.hierarchical = Some(4);
+        let rf = schedule(&c, &OPT_30B, &flat).expect("flat plan");
+        let rh = schedule(&c, &OPT_30B, &hier).expect("hierarchical plan");
+        assert!(
+            rh.placement.objective_score >= 0.5 * rf.placement.objective_score,
+            "hierarchical {} fell below half of flat {}",
+            rh.placement.objective_score,
+            rf.placement.objective_score
+        );
+    }
+
+    /// `zones = 0` auto-sizes (~32 devices per zone) and must match the
+    /// equivalent explicit zone count exactly.
+    #[test]
+    fn auto_zone_count_matches_explicit() {
+        assert_eq!(auto_zone_count(64), 2);
+        let c = settings::synthetic(64, 3);
+        let mut auto = quick_opts();
+        auto.swap_mode = SwapMode::None;
+        auto.hierarchical = Some(0);
+        let mut explicit = auto.clone();
+        explicit.hierarchical = Some(2);
+        let ra = schedule(&c, &OPT_30B, &auto).expect("auto-zoned plan");
+        let re = schedule(&c, &OPT_30B, &explicit).expect("explicit plan");
+        assert_eq!(format!("{:?}", ra.placement), format!("{:?}", re.placement));
+    }
+}

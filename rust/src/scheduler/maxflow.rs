@@ -92,7 +92,14 @@ impl FlowNetwork {
         ed.cap > 0.0 && ed.flow >= ed.cap - EPS * (1.0 + ed.cap)
     }
 
-    fn reset_flows(&mut self) {
+    /// Zero every edge's flow, returning the network to its freshly-built
+    /// state (capacities kept). A subsequent [`max_flow_incremental`]
+    /// performs exactly the cold Edmonds–Karp pass a brand-new network
+    /// would — which is what lets callers recycle a network's allocation
+    /// across independent solves without changing any result.
+    ///
+    /// [`max_flow_incremental`]: FlowNetwork::max_flow_incremental
+    pub(super) fn reset_flows(&mut self) {
         for v in &mut self.adj {
             for e in v {
                 e.flow = 0.0;

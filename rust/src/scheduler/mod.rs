@@ -11,6 +11,7 @@ pub mod coarsen;
 pub mod evalcache;
 pub mod flownet;
 pub mod genetic;
+pub mod hierarchy;
 pub mod kl;
 pub mod maxflow;
 pub mod objective;
@@ -95,6 +96,16 @@ pub struct ScheduleOptions {
     /// [`ScheduleResult::audit`] — the planner half of the flight
     /// recorder's decision audit (`--audit`; DESIGN.md §12).
     pub audit: bool,
+    /// Hierarchical zone planning ([`hierarchy`], DESIGN.md §14):
+    /// `Some(z)` coarsens the cluster into `z` zones (`Some(0)` auto-sizes
+    /// to ~32 devices per zone), plans each zone independently — zones fan
+    /// out over [`ScheduleOptions::threads`] — and stitches the zone plans
+    /// with a top-level max-flow over zone aggregates. `None` (default) is
+    /// the flat §3 search. Plans stay bit-identical across thread counts,
+    /// but hierarchical plans legitimately differ from flat ones: the point
+    /// is a planner wall-clock that scales with zone size, not cluster
+    /// size, at a bounded objective cost.
+    pub hierarchical: Option<usize>,
 }
 
 impl ScheduleOptions {
@@ -115,6 +126,7 @@ impl ScheduleOptions {
             use_eval_cache: true,
             kv_contention: None,
             audit: false,
+            hierarchical: None,
         }
     }
 }
@@ -274,7 +286,44 @@ pub fn evaluate_partition_with(
     kv_contention: Option<LinkModel>,
     cache: &StrategyCache,
 ) -> Option<Placement> {
-    let mut net = flownet::PartitionFlowNet::new(cluster, model, task, period, groups, cache);
+    evaluate_partition_pooled(
+        cluster,
+        model,
+        task,
+        period,
+        groups,
+        n_type_candidates,
+        objective,
+        kv_contention,
+        cache,
+        1,
+        &mut flownet::FlowNetPool::new(),
+    )
+}
+
+/// [`evaluate_partition_with`] with a worker budget for the per-group
+/// strategy search and a recycled solver allocation
+/// ([`flownet::FlowNetPool`]): the evaluator adopts the pool's skeleton and
+/// hands it back when the sweep is done. Results are bit-identical for any
+/// `threads` value or pool state — both knobs only cut wall-clock, which is
+/// what lets [`EvalCache`] memoize this as a pure function of the partition.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_partition_pooled(
+    cluster: &Cluster,
+    model: &LlmSpec,
+    task: &TaskProfile,
+    period: f64,
+    groups: &[Vec<DeviceId>],
+    n_type_candidates: usize,
+    objective: Objective,
+    kv_contention: Option<LinkModel>,
+    cache: &StrategyCache,
+    threads: usize,
+    pool: &mut flownet::FlowNetPool,
+) -> Option<Placement> {
+    let mut net = flownet::PartitionFlowNet::new_in(
+        cluster, model, task, period, groups, cache, threads, pool,
+    );
     // Per-group phase capacities feed the secondary-partition scoring.
     let caps = net.phase_caps();
     let w = coarsen::inter_group_bandwidth(cluster, groups);
@@ -295,6 +344,7 @@ pub fn evaluate_partition_with(
             }
         }
     }
+    net.recycle(pool);
     best
 }
 
@@ -497,11 +547,22 @@ fn evaluate_batch(
     cache: &EvalCache,
     threads: usize,
 ) -> Vec<Option<Placement>> {
-    let eval = |g: &Groups| {
-        cache.evaluate(cluster, model, task, period, g, n_type_candidates, objective, kv_contention)
+    // Leftover parallelism fans *into* each evaluation's per-group strategy
+    // search when there are more workers than candidates (a single huge
+    // partition — the hierarchical planner's zone batches, a lone seed —
+    // would otherwise leave threads idle). Each worker also carries one
+    // FlowNetPool across its chunk so consecutive proposals recycle the
+    // solver allocation. Neither affects results (see evaluate_pooled).
+    let inner = (threads / cands.len().max(1)).max(1);
+    let eval = |g: &Groups, inner: usize, pool: &mut flownet::FlowNetPool| {
+        cache.evaluate_pooled(
+            cluster, model, task, period, g, n_type_candidates, objective, kv_contention, inner,
+            pool,
+        )
     };
     if threads <= 1 || cands.len() <= 1 {
-        return cands.iter().map(eval).collect();
+        let mut pool = flownet::FlowNetPool::new();
+        return cands.iter().map(|g| eval(g, inner, &mut pool)).collect();
     }
     // Contiguous chunks keep the join order deterministic; the chunk count
     // matches the worker count so every thread gets one spawn.
@@ -509,7 +570,13 @@ fn evaluate_batch(
     std::thread::scope(|s| {
         let handles: Vec<_> = cands
             .chunks(chunk)
-            .map(|part| s.spawn(move || part.iter().map(eval).collect::<Vec<_>>()))
+            .map(|part| {
+                let eval = &eval;
+                s.spawn(move || {
+                    let mut pool = flownet::FlowNetPool::new();
+                    part.iter().map(|g| eval(g, inner, &mut pool)).collect::<Vec<_>>()
+                })
+            })
             .collect();
         handles
             .into_iter()
@@ -537,6 +604,9 @@ pub fn schedule_with_cache(
     opts: &ScheduleOptions,
     cache: &EvalCache,
 ) -> Option<ScheduleResult> {
+    if let Some(zones) = opts.hierarchical {
+        return hierarchy::schedule_hierarchical(cluster, model, opts, cache, zones);
+    }
     // hexcheck: allow(D2) -- wall-clock timing of the planner itself (ScheduleStats::elapsed); never feeds plan decisions
     let t0 = Instant::now();
     if opts.audit {

@@ -250,6 +250,97 @@ mod tests {
     }
 
     #[test]
+    fn streaming_matches_materialized_bit_for_bit() {
+        // DESIGN.md §14: pulling requests lazily from a TraceSource through
+        // the bounded arrival frontier must reproduce the materialized
+        // run's aggregates exactly — same seed, same SimReport, on the
+        // paper's case-study cluster.
+        use crate::simulator::core::simulate_stream;
+        use crate::workload::TraceSource;
+        let c = settings::case_study();
+        let mut opts = ScheduleOptions::new(WorkloadKind::Lphd);
+        opts.max_rounds = 4;
+        opts.seed = 7;
+        let p = scheduler::schedule(&c, &OPT_30B, &opts).unwrap().placement;
+        let cfg = SimConfig::default();
+        let spec = ServingSpec::Disaggregated(p);
+        let trace = Trace::online(WorkloadKind::Lphd, 2.0, 90.0, 11);
+        let mat = simulate(&c, &OPT_30B, &spec, &[], &trace, &cfg);
+        let src = TraceSource::online(WorkloadKind::Lphd, 2.0, 90.0, 11);
+        let stream = simulate_stream(&c, &OPT_30B, &spec, &[], src, &cfg);
+        assert_eq!(stream.records.len(), mat.records.len());
+        assert_eq!(stream.makespan, mat.makespan);
+        assert_eq!(stream.tokens_per_s(), mat.tokens_per_s());
+        assert_eq!(stream.avg_latency(), mat.avg_latency());
+        assert_eq!(stream.avg_ttft(), mat.avg_ttft());
+        assert_eq!(stream.p_latency(99.0), mat.p_latency(99.0));
+        assert_eq!(stream.slo_attainment(1.5), mat.slo_attainment(1.5));
+        assert_eq!(stream.stats.events, mat.stats.events);
+        assert_eq!(stream.stats.unserved, mat.stats.unserved);
+        assert_eq!(stream.stats.kv_transfers, mat.stats.kv_transfers);
+        assert_eq!(stream.stats.kv_bytes, mat.stats.kv_bytes);
+        for (a, b) in stream.records.iter().zip(mat.records.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.prefill_done, b.prefill_done);
+            assert_eq!(a.completion, b.completion);
+        }
+        // The bounded frontier keeps the live set far below the trace
+        // length even on this small run.
+        assert!(stream.stats.peak_live_requests >= 1);
+        assert!(stream.stats.peak_live_requests <= mat.records.len() + mat.stats.unserved);
+    }
+
+    #[test]
+    fn windowed_mode_matches_full_on_exact_aggregates() {
+        use crate::simulator::RecordMode;
+        let (c, p) = small_placement();
+        let trace = Trace::online(WorkloadKind::Lpld, 1.0, 80.0, 13);
+        let full = run_disaggregated(&c, &OPT_30B, &p, &trace);
+        let cfg = SimConfig { record_mode: RecordMode::Windowed, ..SimConfig::default() };
+        let win = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &cfg);
+        assert!(win.records.is_empty(), "windowed mode kept records");
+        assert_eq!(win.completed(), full.completed());
+        assert_eq!(win.makespan, full.makespan);
+        assert_eq!(win.total_output_tokens, full.total_output_tokens);
+        assert_eq!(win.total_input_tokens, full.total_input_tokens);
+        assert_eq!(win.tokens_per_s(), full.tokens_per_s());
+        assert_eq!(win.avg_latency(), full.avg_latency());
+        assert_eq!(win.avg_ttft(), full.avg_ttft());
+        assert_eq!(win.stats.events, full.stats.events);
+        // Approximate metrics stay within the documented one-bucket bound.
+        let (pw, pf) = (win.p_latency(99.0), full.p_latency(99.0));
+        assert!(pw >= pf * 0.99 && pw <= pf * 1.14, "{pw} vs {pf}");
+    }
+
+    #[test]
+    fn windowed_all_rejected_returns_empty_report() {
+        // Regression (ISSUE 8 satellite): windowed mode + hard rejection of
+        // every request must produce a well-formed zero report — no NaN, no
+        // panic in the min/max folds.
+        use crate::simulator::{RecordMode, Sizing};
+        let (c, p) = small_placement();
+        let mut trace = Trace::offline(WorkloadKind::Lpld, 8, 17);
+        for r in trace.requests.iter_mut() {
+            r.input_len = 50_000_000; // larger than any replica's memory
+        }
+        let cfg = SimConfig {
+            sizing: Sizing::PerRequest,
+            record_mode: RecordMode::Windowed,
+            ..SimConfig::default()
+        };
+        let rep = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &cfg);
+        assert_eq!(rep.completed(), 0);
+        assert_eq!(rep.stats.rejected, 8);
+        assert_eq!(rep.stats.unserved, 8);
+        assert_eq!(rep.makespan, 0.0);
+        assert_eq!(rep.tokens_per_s(), 0.0);
+        assert!(rep.avg_latency().is_finite());
+        assert!(rep.p_latency(99.0).is_finite());
+        assert_eq!(rep.slo_attainment(1.0), 0.0);
+    }
+
+    #[test]
     fn resched_blackout_delays_held_requests() {
         let (c, p) = small_placement();
         // All arrivals land inside the blackout: their TTFT must include the

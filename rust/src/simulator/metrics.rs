@@ -71,6 +71,152 @@ pub struct SimStats {
     /// [`Ledger::HIST_EDGES_S`](crate::kvtransfer::Ledger::HIST_EDGES_S)
     /// (<1 ms, <10 ms, <100 ms, <1 s, <10 s, ≥10 s).
     pub kv_wait_hist: [usize; 6],
+    /// Peak simultaneously-live (arrived, not yet finished or rejected)
+    /// requests — the observable behind the streaming engine's O(active)
+    /// memory contract (DESIGN.md §14): heap, request store, and replica
+    /// queues are all bounded by this, never by trace length.
+    pub peak_live_requests: usize,
+}
+
+/// Log-spaced histogram bucket count for [`WindowedAgg`]. 128 buckets over
+/// 7 decades ⇒ ~13% relative width, the documented percentile error bound
+/// of windowed mode.
+const AGG_BUCKETS: usize = 128;
+/// Latency histogram range (seconds): anything under 1 ms folds into the
+/// first bucket, anything over ~2.8 h into the last.
+const LAT_RANGE: (f64, f64) = (1e-3, 1e4);
+/// SLO-ratio (latency / single-device base) histogram range — matches the
+/// `slo_scale_for_attainment` bisection interval.
+const SLO_RANGE: (f64, f64) = (0.1, 1000.0);
+
+/// O(1)-per-completion accumulator behind [`RecordMode::Windowed`]
+/// (DESIGN.md §14): sums for exact means/throughput plus log-spaced
+/// histograms for approximate percentiles and SLO attainment. Exact
+/// quantities: completion count, token totals, mean latency/TTFT, makespan.
+/// Approximate (≤ one bucket width, ~13% relative): latency percentiles and
+/// SLO scales. Unavailable: per-request records, `windowed()` sub-reports.
+///
+/// [`RecordMode::Windowed`]: crate::simulator::RecordMode::Windowed
+#[derive(Clone, Debug)]
+pub struct WindowedAgg {
+    pub completed: usize,
+    pub total_output_tokens: usize,
+    pub total_input_tokens: usize,
+    latency_sum: f64,
+    ttft_sum: f64,
+    first_arrival: f64,
+    last_completion: f64,
+    latency_hist: Vec<usize>,
+    slo_hist: Vec<usize>,
+}
+
+/// Bucket index of `x` in the log-spaced range `[lo, hi]`.
+fn agg_bucket(x: f64, (lo, hi): (f64, f64)) -> usize {
+    if x <= lo {
+        return 0;
+    }
+    // NaN (e.g. a 0/0 SLO ratio) saturate-casts to 0; +inf to the top.
+    let frac = (x / lo).ln() / (hi / lo).ln();
+    ((frac * AGG_BUCKETS as f64) as usize).min(AGG_BUCKETS - 1)
+}
+
+/// Upper edge of bucket `i` (the conservative value reported for any
+/// quantile landing in it).
+fn agg_edge(i: usize, (lo, hi): (f64, f64)) -> f64 {
+    lo * (hi / lo).powf((i + 1) as f64 / AGG_BUCKETS as f64)
+}
+
+impl Default for WindowedAgg {
+    fn default() -> WindowedAgg {
+        WindowedAgg::new()
+    }
+}
+
+impl WindowedAgg {
+    pub fn new() -> WindowedAgg {
+        WindowedAgg {
+            completed: 0,
+            total_output_tokens: 0,
+            total_input_tokens: 0,
+            latency_sum: 0.0,
+            ttft_sum: 0.0,
+            first_arrival: f64::INFINITY,
+            last_completion: 0.0,
+            latency_hist: vec![0; AGG_BUCKETS],
+            slo_hist: vec![0; AGG_BUCKETS],
+        }
+    }
+
+    /// Fold one completion in (the engine's per-finish hot path).
+    pub fn push(&mut self, r: &RequestRecord) {
+        self.completed += 1;
+        self.total_output_tokens += r.output_len;
+        self.total_input_tokens += r.input_len;
+        self.latency_sum += r.latency();
+        self.ttft_sum += r.ttft();
+        self.first_arrival = self.first_arrival.min(r.arrival);
+        self.last_completion = self.last_completion.max(r.completion);
+        self.latency_hist[agg_bucket(r.latency(), LAT_RANGE)] += 1;
+        self.slo_hist[agg_bucket(r.latency() / r.slo_base, SLO_RANGE)] += 1;
+    }
+
+    /// First arrival → last completion; 0.0 when nothing completed.
+    fn makespan(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            (self.last_completion - self.first_arrival).max(1e-9)
+        }
+    }
+
+    fn mean_latency(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.latency_sum / self.completed as f64
+        }
+    }
+
+    fn mean_ttft(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.ttft_sum / self.completed as f64
+        }
+    }
+
+    /// Histogram percentile: upper edge of the bucket holding the rank
+    /// (conservative by ≤ one bucket width); 0.0 when nothing completed.
+    fn latency_percentile(&self, p: f64) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.completed as f64).ceil().max(1.0) as usize;
+        let mut seen = 0usize;
+        for (i, &n) in self.latency_hist.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return agg_edge(i, LAT_RANGE);
+            }
+        }
+        agg_edge(AGG_BUCKETS - 1, LAT_RANGE)
+    }
+
+    /// Fraction of completions whose latency/base ratio bucket lies fully
+    /// within `scale`; 0.0 when nothing completed.
+    fn attainment(&self, scale: f64) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        let ok: usize = self
+            .slo_hist
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| agg_edge(i, SLO_RANGE) <= scale)
+            .map(|(_, &n)| n)
+            .sum();
+        ok as f64 / self.completed as f64
+    }
 }
 
 /// Aggregated simulation report.
@@ -93,6 +239,11 @@ pub struct SimReport {
     /// Planner/rescheduler decision audit (attached by the deploy layer
     /// when `--audit` is on; empty otherwise).
     pub audit: Vec<AuditRecord>,
+    /// Windowed accumulator the report was built from
+    /// ([`RecordMode::Windowed`](crate::simulator::RecordMode::Windowed));
+    /// `None` for full-record reports. When set, `records` is empty and
+    /// every metric below reads the aggregate instead.
+    pub agg: Option<WindowedAgg>,
 }
 
 impl SimReport {
@@ -111,12 +262,39 @@ impl SimReport {
             link_loads: Vec::new(),
             trace: None,
             audit: Vec::new(),
+            agg: None,
+        }
+    }
+
+    /// Build a report from a windowed accumulator (streaming runs). The
+    /// 0-completion edge (everything rejected, or an empty trace) yields a
+    /// well-formed all-zero report, never NaN.
+    pub fn from_windowed(agg: WindowedAgg) -> SimReport {
+        SimReport {
+            records: Vec::new(),
+            makespan: agg.makespan(),
+            total_output_tokens: agg.total_output_tokens,
+            total_input_tokens: agg.total_input_tokens,
+            stats: SimStats::default(),
+            link_loads: Vec::new(),
+            trace: None,
+            audit: Vec::new(),
+            agg: Some(agg),
+        }
+    }
+
+    /// Completed-request count, mode-independent (use instead of
+    /// `records.len()`, which is always 0 under windowed mode).
+    pub fn completed(&self) -> usize {
+        match &self.agg {
+            Some(a) => a.completed,
+            None => self.records.len(),
         }
     }
 
     /// The paper's offline metric: generated tokens per second.
     pub fn tokens_per_s(&self) -> f64 {
-        if self.records.is_empty() {
+        if self.completed() == 0 {
             return 0.0;
         }
         self.total_output_tokens as f64 / self.makespan
@@ -127,21 +305,33 @@ impl SimReport {
     }
 
     pub fn avg_latency(&self) -> f64 {
-        stats::mean(&self.latencies())
+        match &self.agg {
+            Some(a) => a.mean_latency(),
+            None => stats::mean(&self.latencies()),
+        }
     }
 
     pub fn p_latency(&self, p: f64) -> f64 {
-        stats::percentile(&self.latencies(), p)
+        match &self.agg {
+            Some(a) => a.latency_percentile(p),
+            None => stats::percentile(&self.latencies(), p),
+        }
     }
 
     pub fn avg_ttft(&self) -> f64 {
-        stats::mean(&self.records.iter().map(|r| r.ttft()).collect::<Vec<_>>())
+        match &self.agg {
+            Some(a) => a.mean_ttft(),
+            None => stats::mean(&self.records.iter().map(|r| r.ttft()).collect::<Vec<_>>()),
+        }
     }
 
     /// SLO attainment at the given scale: fraction of requests whose
     /// end-to-end latency is within `scale` × their single-device base
-    /// latency (§2 "SLO scale").
+    /// latency (§2 "SLO scale"). Bucket-approximate under windowed mode.
     pub fn slo_attainment(&self, scale: f64) -> f64 {
+        if let Some(a) = &self.agg {
+            return a.attainment(scale);
+        }
         if self.records.is_empty() {
             return 0.0;
         }
@@ -164,6 +354,10 @@ impl SimReport {
     /// the window, regardless of when its request arrived). Without a
     /// trace the engine's scalar counters cannot be attributed to a
     /// window, so they stay zero — a documented limitation, not data.
+    /// Unavailable under [`RecordMode::Windowed`]
+    /// (`records` is empty, so every sub-report is empty).
+    ///
+    /// [`RecordMode::Windowed`]: crate::simulator::RecordMode::Windowed
     pub fn windowed(&self, t0: f64, t1: f64) -> SimReport {
         let mut w = SimReport::from_records(
             self.records.iter().filter(|r| r.arrival >= t0 && r.arrival < t1).copied().collect(),
@@ -244,5 +438,59 @@ mod tests {
         let r = SimReport::from_records(vec![]);
         assert_eq!(r.tokens_per_s(), 0.0);
         assert_eq!(r.slo_attainment(1.0), 0.0);
+    }
+
+    #[test]
+    fn windowed_agg_tracks_exact_sums_and_approximate_percentiles() {
+        let recs = vec![
+            rec(0, 0.0, 1.0, 10, 1.0),
+            rec(1, 0.0, 2.0, 20, 1.0),
+            rec(2, 0.0, 4.0, 30, 1.0),
+            rec(3, 0.0, 8.0, 40, 1.0),
+        ];
+        let mut agg = WindowedAgg::new();
+        for r in &recs {
+            agg.push(r);
+        }
+        let full = SimReport::from_records(recs);
+        let win = SimReport::from_windowed(agg);
+        // Exact quantities match bit-for-bit.
+        assert_eq!(win.completed(), full.completed());
+        assert_eq!(win.total_output_tokens, full.total_output_tokens);
+        assert_eq!(win.total_input_tokens, full.total_input_tokens);
+        assert_eq!(win.makespan, full.makespan);
+        assert_eq!(win.avg_latency(), full.avg_latency());
+        assert_eq!(win.avg_ttft(), full.avg_ttft());
+        // Percentiles approximate the nearest-rank value within one
+        // log-bucket (~13% relative), always conservatively from above
+        // (upper bucket edge). Nearest-rank: p50→2.0, p75→4.0, p100→8.0.
+        for (p, exact) in [(50.0, 2.0), (75.0, 4.0), (100.0, 8.0)] {
+            let approx = win.p_latency(p);
+            assert!(approx >= exact, "p{p}: {approx} < {exact}");
+            assert!(approx <= exact * 1.14, "p{p}: {approx} vs {exact}");
+        }
+        // SLO attainment: latencies/base 1,2,4,8 — at scale 3 exactly two
+        // requests attain; bucket rounding may shift by one bucket's worth.
+        let att = win.slo_attainment(3.0);
+        assert!((att - 0.5).abs() <= 0.26, "{att}");
+        // The bisection works off the aggregate too.
+        let s99 = win.slo_scale_for_attainment(0.99);
+        assert!(s99 >= 8.0 && s99 <= 8.0 * 1.14, "{s99}");
+    }
+
+    #[test]
+    fn empty_windowed_report_is_well_formed() {
+        // The 0-completed edge (windowed mode + hard rejection of every
+        // request) must yield zeros, not NaN or a panic.
+        let r = SimReport::from_windowed(WindowedAgg::new());
+        assert_eq!(r.completed(), 0);
+        assert_eq!(r.makespan, 0.0);
+        assert_eq!(r.tokens_per_s(), 0.0);
+        assert_eq!(r.avg_latency(), 0.0);
+        assert_eq!(r.avg_ttft(), 0.0);
+        assert_eq!(r.p_latency(99.0), 0.0);
+        assert_eq!(r.slo_attainment(1.0), 0.0);
+        assert!(r.avg_latency().is_finite());
+        assert!(r.slo_scale_for_attainment(0.99).is_finite());
     }
 }

@@ -28,8 +28,8 @@ pub mod metrics;
 pub use colocated::{run_colocated, run_colocated_cfg};
 // `self::` disambiguates the submodule from the `core` crate.
 pub use self::core::{
-    simulate, Outcome, PolicyEnv, PolicyKind, ReplicaPolicy, ServingSpec, SimConfig, Sizing,
-    SwitchSpec,
+    simulate, simulate_stream, Outcome, PolicyEnv, PolicyKind, RecordMode, ReplicaPolicy, ReqStore,
+    ServingSpec, SimConfig, Sizing, SwitchSpec,
 };
 pub use disagg::{
     run_disaggregated, run_disaggregated_cfg, run_disaggregated_with_resched, PlacementSwitch,
@@ -37,7 +37,7 @@ pub use disagg::{
 // Link/route semantics are owned by the KV transfer subsystem (DESIGN.md
 // §11); re-exported here because the simulator config carries them.
 pub use crate::kvtransfer::{LinkModel, RouteModel};
-pub use metrics::{RequestRecord, SimReport, SimStats};
+pub use metrics::{RequestRecord, SimReport, SimStats, WindowedAgg};
 
 use crate::cluster::GpuType;
 use crate::model::LlmSpec;

@@ -96,6 +96,150 @@ impl WorkloadKind {
     }
 }
 
+/// A streaming source of requests (DESIGN.md §14): a pull-based generator
+/// for traces too large to materialize. The engine core draws one request
+/// at a time and keeps only a bounded arrival frontier in its event heap,
+/// so a million-request run needs O(active requests) memory instead of
+/// O(trace length).
+///
+/// Each constructor replicates the RNG stream of the matching [`Trace`]
+/// constructor bit-exactly — in fact the `Trace` constructors are
+/// implemented as collects over the source, so
+/// `TraceSource::offline(k, n, s).collect::<Vec<_>>()` equals
+/// `Trace::offline(k, n, s).requests` by construction.
+pub struct TraceSource {
+    kind: WorkloadKind,
+    inner: SourceInner,
+}
+
+enum SourceInner {
+    Offline { rng: Rng, kind: WorkloadKind, remaining: usize, next_id: usize },
+    Online { rng: Rng, kind: WorkloadKind, rate: f64, duration: f64, t: f64, next_id: usize },
+    Phases { rng: Rng, phases: Vec<(WorkloadKind, f64, f64)>, idx: usize, t0: f64, t: f64, next_id: usize },
+    Materialized { requests: std::vec::IntoIter<Request> },
+}
+
+impl TraceSource {
+    /// Streaming equivalent of [`Trace::offline`].
+    pub fn offline(kind: WorkloadKind, n: usize, seed: u64) -> TraceSource {
+        let rng = Rng::new(seed ^ 0x0FF1CE);
+        TraceSource { kind, inner: SourceInner::Offline { rng, kind, remaining: n, next_id: 0 } }
+    }
+
+    /// Streaming equivalent of [`Trace::online`].
+    pub fn online(kind: WorkloadKind, rate: f64, duration: f64, seed: u64) -> TraceSource {
+        let rng = Rng::new(seed ^ 0x0411_15E5);
+        TraceSource {
+            kind,
+            inner: SourceInner::Online { rng, kind, rate, duration, t: 0.0, next_id: 0 },
+        }
+    }
+
+    /// Streaming equivalent of [`Trace::phases`].
+    pub fn phases(phases: &[(WorkloadKind, f64, f64)], seed: u64) -> TraceSource {
+        assert!(!phases.is_empty(), "need at least one phase");
+        for &(_, rate, duration) in phases {
+            assert!(
+                rate > 0.0 && rate.is_finite() && duration > 0.0 && duration.is_finite(),
+                "phase rate/duration must be positive and finite"
+            );
+        }
+        let rng = Rng::new(seed ^ 0x9_4A5E_D0);
+        TraceSource {
+            kind: phases[0].0,
+            inner: SourceInner::Phases {
+                rng,
+                phases: phases.to_vec(),
+                idx: 0,
+                t0: 0.0,
+                t: 0.0,
+                next_id: 0,
+            },
+        }
+    }
+
+    /// Replay an already-materialized trace through the streaming
+    /// interface (the parity bridge: every `Trace`-driven run is a
+    /// `TraceSource`-driven run over this wrapper).
+    pub fn replay(trace: &Trace) -> TraceSource {
+        TraceSource {
+            kind: trace.kind,
+            inner: SourceInner::Materialized { requests: trace.requests.clone().into_iter() },
+        }
+    }
+
+    pub fn kind(&self) -> WorkloadKind {
+        self.kind
+    }
+}
+
+impl Iterator for TraceSource {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        match &mut self.inner {
+            SourceInner::Offline { rng, kind, remaining, next_id } => {
+                if *remaining == 0 {
+                    return None;
+                }
+                *remaining -= 1;
+                let (input_len, output_len) = kind.sample_lengths(rng);
+                let id = *next_id;
+                *next_id += 1;
+                Some(Request { id, arrival: 0.0, input_len, output_len })
+            }
+            SourceInner::Online { rng, kind, rate, duration, t, next_id } => {
+                let prev = *t;
+                *t += rng.exp(*rate);
+                if *t <= prev {
+                    *t = next_after(prev);
+                }
+                if *t >= *duration {
+                    return None;
+                }
+                let (input_len, output_len) = kind.sample_lengths(rng);
+                let id = *next_id;
+                *next_id += 1;
+                Some(Request { id, arrival: *t, input_len, output_len })
+            }
+            SourceInner::Phases { rng, phases, idx, t0, t, next_id } => {
+                loop {
+                    let &(kind, rate, duration) = phases.get(*idx)?;
+                    let end = *t0 + duration;
+                    let prev = *t;
+                    *t += rng.exp(rate);
+                    if *t <= prev {
+                        *t = next_after(prev);
+                    }
+                    if *t >= end {
+                        // Poisson arrivals are memoryless: the next phase
+                        // restarts its clock at the boundary (carrying the
+                        // overshoot gap would distort the first window
+                        // after the boundary whenever rates differ).
+                        *t0 = end;
+                        *t = end;
+                        *idx += 1;
+                        continue;
+                    }
+                    let (input_len, output_len) = kind.sample_lengths(rng);
+                    let id = *next_id;
+                    *next_id += 1;
+                    return Some(Request { id, arrival: *t, input_len, output_len });
+                }
+            }
+            SourceInner::Materialized { requests } => requests.next(),
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        match &self.inner {
+            SourceInner::Offline { remaining, .. } => (*remaining, Some(*remaining)),
+            SourceInner::Materialized { requests } => requests.size_hint(),
+            _ => (0, None),
+        }
+    }
+}
+
 /// A generated request trace.
 #[derive(Clone, Debug)]
 pub struct Trace {
@@ -107,14 +251,7 @@ impl Trace {
     /// Offline trace: `n` requests all available at t=0 ("requests arrive at
     /// a rate that fully utilizes the cluster", §5.1).
     pub fn offline(kind: WorkloadKind, n: usize, seed: u64) -> Trace {
-        let mut rng = Rng::new(seed ^ 0x0FF1CE);
-        let requests = (0..n)
-            .map(|id| {
-                let (input_len, output_len) = kind.sample_lengths(&mut rng);
-                Request { id, arrival: 0.0, input_len, output_len }
-            })
-            .collect();
-        Trace { kind, requests }
+        Trace { kind, requests: TraceSource::offline(kind, n, seed).collect() }
     }
 
     /// Online trace: Poisson arrivals at `rate` req/s for `duration` seconds
@@ -123,22 +260,7 @@ impl Trace {
     /// `t` is large, so equal timestamps are deduplicated at generation by
     /// nudging to the next representable instant.
     pub fn online(kind: WorkloadKind, rate: f64, duration: f64, seed: u64) -> Trace {
-        let mut rng = Rng::new(seed ^ 0x0411_15E5);
-        let mut requests = Vec::new();
-        let mut t = 0.0f64;
-        loop {
-            let prev = t;
-            t += rng.exp(rate);
-            if t <= prev {
-                t = next_after(prev);
-            }
-            if t >= duration {
-                break;
-            }
-            let (input_len, output_len) = kind.sample_lengths(&mut rng);
-            requests.push(Request { id: requests.len(), arrival: t, input_len, output_len });
-        }
-        Trace { kind, requests }
+        Trace { kind, requests: TraceSource::online(kind, rate, duration, seed).collect() }
     }
 
     /// Phased trace for workload-drift scenarios (rescheduler case studies):
@@ -148,36 +270,8 @@ impl Trace {
     /// scheduler would provision for). Arrivals are strictly increasing
     /// across phase boundaries.
     pub fn phases(phases: &[(WorkloadKind, f64, f64)], seed: u64) -> Trace {
-        assert!(!phases.is_empty(), "need at least one phase");
-        let mut rng = Rng::new(seed ^ 0x9_4A5E_D0);
-        let mut requests: Vec<Request> = Vec::new();
-        let mut t0 = 0.0f64;
-        for &(kind, rate, duration) in phases {
-            assert!(
-                rate > 0.0 && rate.is_finite() && duration > 0.0 && duration.is_finite(),
-                "phase rate/duration must be positive and finite"
-            );
-            let end = t0 + duration;
-            // Poisson arrivals are memoryless: each phase restarts its clock
-            // at the boundary with gaps drawn at its own rate (carrying the
-            // previous phase's overshoot gap would distort the first window
-            // after the boundary whenever rates differ).
-            let mut t = t0;
-            loop {
-                let prev = t;
-                t += rng.exp(rate);
-                if t <= prev {
-                    t = next_after(prev);
-                }
-                if t >= end {
-                    break;
-                }
-                let (input_len, output_len) = kind.sample_lengths(&mut rng);
-                requests.push(Request { id: requests.len(), arrival: t, input_len, output_len });
-            }
-            t0 = end;
-        }
-        Trace { kind: phases[0].0, requests }
+        let src = TraceSource::phases(phases, seed);
+        Trace { kind: src.kind(), requests: src.collect() }
     }
 
     /// Phase boundary times of a phased trace spec: `boundaries[i]` is the
@@ -285,6 +379,31 @@ mod tests {
         let n1 = t.requests.iter().filter(|r| r.arrival < 50.0).count();
         let n2 = t.requests.len() - n1;
         assert!(n1 > 100 && n2 > 100, "{n1}/{n2}");
+    }
+
+    #[test]
+    fn trace_source_matches_materialized_constructors() {
+        // Bit-exact stream parity: the Trace constructors are collects over
+        // TraceSource, and replay() round-trips a materialized trace.
+        let off: Vec<Request> = TraceSource::offline(WorkloadKind::Hphd, 200, 9).collect();
+        assert_eq!(off, Trace::offline(WorkloadKind::Hphd, 200, 9).requests);
+        let on: Vec<Request> = TraceSource::online(WorkloadKind::Online, 4.0, 60.0, 3).collect();
+        assert_eq!(on, Trace::online(WorkloadKind::Online, 4.0, 60.0, 3).requests);
+        let spec = [(WorkloadKind::Lphd, 3.0, 40.0), (WorkloadKind::Hpld, 5.0, 40.0)];
+        let ph: Vec<Request> = TraceSource::phases(&spec, 11).collect();
+        assert_eq!(ph, Trace::phases(&spec, 11).requests);
+        let t = Trace::online(WorkloadKind::Online, 2.0, 30.0, 5);
+        let replayed: Vec<Request> = TraceSource::replay(&t).collect();
+        assert_eq!(replayed, t.requests);
+        assert_eq!(TraceSource::replay(&t).kind(), t.kind);
+    }
+
+    #[test]
+    fn trace_source_offline_size_hint_is_exact() {
+        let mut src = TraceSource::offline(WorkloadKind::Lpld, 5, 1);
+        assert_eq!(src.size_hint(), (5, Some(5)));
+        src.next();
+        assert_eq!(src.size_hint(), (4, Some(4)));
     }
 
     #[test]
