@@ -4,11 +4,22 @@
 //! column, and ship it *directly* to a decode worker (the coordinator is not
 //! on the KV path, matching §4's NCCL-SendRecv design). Decode workers run
 //! continuous batching over slot-managed caches.
+//!
+//! KV routing and pacing go through the same
+//! [`TransferScheduler`](crate::kvtransfer::TransferScheduler) the
+//! simulator uses: every prefill worker enqueues against one shared,
+//! coordinator-owned scheduler, so route deficits are cluster-wide (not
+//! per-worker) and a throttled shared NIC queues transfers from *all*
+//! workers on one busy-until reservation instead of each worker sleeping
+//! blindly.
 
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+
+use crate::kvtransfer::TransferScheduler;
 
 use crate::runtime::{argmax_rows, ModelRuntime};
 
@@ -62,22 +73,27 @@ pub struct KvThrottle {
     pub bytes_per_s: f64,
 }
 
-/// Prefill worker main loop. Routes each finished request's KV packet to a
-/// decode worker chosen by flow-proportional deficit weighting (§3.3).
+/// Prefill worker main loop. Each finished request's KV packet is routed
+/// and paced by the shared [`TransferScheduler`] (`kv`): the scheduler
+/// picks the decode destination (flow-proportional deficit, §3.3, with
+/// cluster-wide deficit counters) and reserves the link; the worker sleeps
+/// out the reserved window before handing the packet over. `t0` is the
+/// shared clock anchor that converts wall time to the scheduler's f64
+/// seconds.
 #[allow(clippy::too_many_arguments)]
 pub fn prefill_worker(
     worker_id: usize,
     rt: ModelRuntime,
     rx: Receiver<PrefillMsg>,
     decode_txs: Vec<Sender<DecodeMsg>>,
-    route_weights: Vec<f64>,
+    kv: Arc<Mutex<TransferScheduler>>,
+    t0: Instant,
     throttle: Option<KvThrottle>,
 ) -> Result<usize> {
-    assert_eq!(decode_txs.len(), route_weights.len());
     let variants = rt.prefill_variants();
     let max_batch = variants.iter().map(|&(b, _)| b).max().unwrap_or(1);
+    let cands: Vec<usize> = (0..decode_txs.len()).collect();
     let mut queue: Vec<(LiveRequest, Instant)> = Vec::new();
-    let mut routed = vec![0.0f64; decode_txs.len()];
     let mut processed = 0usize;
     let mut stopping = false;
 
@@ -133,23 +149,29 @@ pub fn prefill_worker(
         for (i, (r, dispatched_at)) in batch_items.into_iter().enumerate() {
             let k = KvSlots::extract_request(&out.k_cache, dims, i);
             let v = KvSlots::extract_request(&out.v_cache, dims, i);
-            // Throttled "transmission" of the KV payload.
-            if let Some(t) = throttle {
-                let bytes = (k.len() + v.len()) * 4;
-                std::thread::sleep(std::time::Duration::from_secs_f64(
-                    bytes as f64 / t.bytes_per_s,
-                ));
+            let bytes = ((k.len() + v.len()) * 4) as f64;
+            // Transmission seconds under the (optional) bandwidth throttle;
+            // an unthrottled link transfers "instantly" and the scheduler
+            // degenerates to pure routing.
+            let xfer_s = throttle.map(|t| bytes / t.bytes_per_s).unwrap_or(0.0);
+            let now = t0.elapsed().as_secs_f64();
+            let transfer = {
+                let mut sched =
+                    kv.lock().map_err(|_| anyhow!("transfer scheduler mutex poisoned"))?;
+                sched.enqueue(worker_id, bytes, now, 0.0, &cands, |_| xfer_s)
+            };
+            // Pace the transfer to its reserved window: queueing behind
+            // other workers' reservations shows up here as extra sleep.
+            let delay = transfer.done - t0.elapsed().as_secs_f64();
+            if delay > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(delay));
             }
-            // Flow-proportional deficit routing.
-            let d = (0..decode_txs.len())
-                .max_by(|&a, &b| {
-                    let fa = route_weights[a] / (routed[a] + 1.0);
-                    let fb = route_weights[b] / (routed[b] + 1.0);
-                    fa.partial_cmp(&fb).unwrap()
-                })
-                .expect("no decode workers");
-            routed[d] += 1.0;
-            decode_txs[d]
+            {
+                let mut sched =
+                    kv.lock().map_err(|_| anyhow!("transfer scheduler mutex poisoned"))?;
+                sched.complete(worker_id, transfer.dst);
+            }
+            decode_txs[transfer.dst]
                 .send(DecodeMsg::Kv(KvPacket {
                     first_token: first[i],
                     req: r,

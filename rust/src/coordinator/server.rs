@@ -6,10 +6,12 @@
 
 use std::path::PathBuf;
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use crate::kvtransfer::{LinkModel, RouteModel, TransferConfig, TransferScheduler};
 use crate::runtime::ModelRuntime;
 use crate::simulator::metrics::{RequestRecord, SimReport};
 
@@ -80,6 +82,23 @@ pub fn serve(cfg: &CoordinatorConfig, requests: Vec<LiveRequest>) -> Result<Live
         decode_rxs.push(rx);
     }
     let (comp_tx, comp_rx) = mpsc::channel::<Completion>();
+    // One shared transfer scheduler drives every prefill worker's KV
+    // routing and pacing — the same engine the simulator uses, so the live
+    // path exercises identical route/reservation logic. The throttle (when
+    // set) models every worker's egress sharing one NIC.
+    let mut sched = TransferScheduler::new(TransferConfig {
+        route: RouteModel::FlowProportional,
+        link: LinkModel::SharedNic,
+        chunk_layers: None,
+        n_layers: 1,
+    });
+    for p in 0..cfg.n_prefill {
+        for d in 0..cfg.n_decode {
+            let w = cfg.route_weights.as_ref().map(|w| w[p][d]).unwrap_or(1.0);
+            sched.add_route(p, d, w);
+        }
+    }
+    let kv_sched = Arc::new(Mutex::new(sched));
     // Readiness barrier: workers signal after compiling their modules, so
     // dispatch timestamps (and therefore latency/throughput) measure
     // serving, not XLA compilation.
@@ -114,18 +133,14 @@ pub fn serve(cfg: &CoordinatorConfig, requests: Vec<LiveRequest>) -> Result<Live
         let artifacts = cfg.artifacts.clone();
         let model = cfg.model.clone();
         let dtxs = decode_txs.clone();
-        let weights = cfg
-            .route_weights
-            .as_ref()
-            .map(|w| w[p].clone())
-            .unwrap_or_else(|| vec![1.0; cfg.n_decode]);
+        let kv = kv_sched.clone();
         let throttle = cfg.kv_throttle;
         let ready = ready_tx.clone();
         handles.push(std::thread::spawn(move || -> Result<usize> {
             let rt = ModelRuntime::load_filtered(&artifacts, &model, |m| m.kind == "prefill")
                 .context("prefill worker load")?;
             ready.send(()).ok();
-            prefill_worker(p, rt, rx, dtxs, weights, throttle)
+            prefill_worker(p, rt, rx, dtxs, kv, t0, throttle)
         }));
     }
     drop(ready_tx);
@@ -193,12 +208,20 @@ pub fn serve(cfg: &CoordinatorConfig, requests: Vec<LiveRequest>) -> Result<Live
             slo_base: 1.0,
         })
         .collect();
-    Ok(LiveReport {
-        report: SimReport::from_records(records),
-        outputs,
-        kv_bytes_total,
-        elapsed_s: serve_start.elapsed().as_secs_f64(),
-    })
+    let elapsed_s = serve_start.elapsed().as_secs_f64();
+    let mut report = SimReport::from_records(records);
+    // Fold the transfer ledger into the report: the live run carries the
+    // same kv_* counters the simulator reports (--json parity).
+    {
+        let sched = kv_sched.lock().map_err(|_| anyhow!("transfer scheduler mutex poisoned"))?;
+        let s = sched.ledger().summary(elapsed_s);
+        report.stats.kv_transfers = s.transfers;
+        report.stats.kv_bytes = s.bytes;
+        report.stats.kv_link_wait_s = s.wait_s;
+        report.stats.kv_max_nic_util = s.max_nic_util;
+        report.stats.kv_wait_hist = s.wait_hist;
+    }
+    Ok(LiveReport { report, outputs, kv_bytes_total, elapsed_s })
 }
 
 #[cfg(test)]

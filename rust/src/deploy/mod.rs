@@ -107,9 +107,19 @@ pub struct DeploymentSpec {
     /// Windowed metric recording (`--windowed`):
     /// [`RecordMode::Windowed`](crate::simulator::RecordMode::Windowed) —
     /// O(1) metric accumulation instead of per-request records, the
-    /// million-request streaming mode. Percentiles become
-    /// bucket-approximate (~13%); exact means/throughput are unchanged.
+    /// million-request streaming mode. Percentiles come from t-digest
+    /// sketches (≲2%); exact means/throughput are unchanged.
     pub windowed: bool,
+    /// Override the workload's shared-prefix share (`--prefix-share`):
+    /// fraction of requests that declare their hot prefix to the cluster
+    /// pool. `None` keeps the workload class default; `Some(0.0)` disables
+    /// prefix reuse entirely (bit-identical to the pre-pool engine).
+    pub prefix_share: Option<f64>,
+    /// Cache-aware planning (`--prefix-hit-aware`): discount the expected
+    /// prefill demand by the workload's expected prefix savings
+    /// (`ScheduleOptions::prefix_hit_rate`), the way `--contention-aware`
+    /// feeds predicted NIC contention into the same search.
+    pub prefix_hit_aware: bool,
 }
 
 impl DeploymentSpec {
@@ -137,6 +147,8 @@ impl DeploymentSpec {
             audit: false,
             hierarchical: None,
             windowed: false,
+            prefix_share: None,
+            prefix_hit_aware: false,
         }
     }
 
@@ -240,6 +252,27 @@ impl DeploymentSpec {
         self
     }
 
+    pub fn prefix_share(mut self, share: Option<f64>) -> Self {
+        self.prefix_share = share.map(|s| s.clamp(0.0, 1.0));
+        self
+    }
+
+    pub fn prefix_hit_aware(mut self, on: bool) -> Self {
+        self.prefix_hit_aware = on;
+        self
+    }
+
+    /// Expected fraction of prefill work the prefix pool saves for this
+    /// spec's workload (0.0 when hit-aware planning is off or the workload
+    /// has no shared-prefix structure).
+    pub fn expected_prefix_hit_rate(&self) -> f64 {
+        if self.prefix_hit_aware {
+            self.workload.expected_prefix_savings(self.prefix_share)
+        } else {
+            0.0
+        }
+    }
+
     /// The mean-lengths task profile the planners size capacities with.
     pub fn task(&self) -> TaskProfile {
         scheduler::task_for(self.workload)
@@ -270,6 +303,7 @@ impl DeploymentSpec {
         o.kv_contention = if self.contention_aware { Some(self.link) } else { None };
         o.audit = self.audit;
         o.hierarchical = self.hierarchical;
+        o.prefix_hit_rate = self.expected_prefix_hit_rate();
         o
     }
 
@@ -433,6 +467,20 @@ impl Deployment {
             ("kv_transfers".to_string(), json::num(rep.stats.kv_transfers as f64)),
             ("kv_bytes".to_string(), json::num(rep.stats.kv_bytes)),
             ("kv_max_nic_util".to_string(), json::num(rep.stats.kv_max_nic_util)),
+            // Prefix-pool counters (DESIGN.md §15): all-zero on workloads
+            // with no shared-prefix structure.
+            ("prefix_hits".to_string(), json::num(rep.stats.prefix_hits as f64)),
+            ("prefix_host_hits".to_string(), json::num(rep.stats.prefix_host_hits as f64)),
+            ("prefix_misses".to_string(), json::num(rep.stats.prefix_misses as f64)),
+            ("prefix_hit_rate".to_string(), json::num(rep.stats.prefix_hit_rate())),
+            ("prefix_reused_tokens".to_string(), json::num(rep.stats.prefix_reused_tokens)),
+            (
+                "prefix_published_tokens".to_string(),
+                json::num(rep.stats.prefix_published_tokens),
+            ),
+            ("prefix_spilled_tokens".to_string(), json::num(rep.stats.prefix_spilled_tokens)),
+            ("prefix_evicted_tokens".to_string(), json::num(rep.stats.prefix_evicted_tokens)),
+            ("prefix_reload_s".to_string(), json::num(rep.stats.prefix_reload_s)),
         ];
         // Flight-recorder extras (`--trace`): recording health plus a
         // per-request span summary rebuilt purely from the event stream.

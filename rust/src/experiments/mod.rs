@@ -14,6 +14,7 @@ pub mod convergence;
 pub mod endtoend;
 pub mod kvrouting;
 pub mod perf;
+pub mod prefix;
 pub mod resched;
 pub mod tables;
 

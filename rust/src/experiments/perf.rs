@@ -43,6 +43,9 @@ fn osc_pair(kind: WorkloadKind) -> WorkloadKind {
         WorkloadKind::Hphd => WorkloadKind::Lpld,
         WorkloadKind::Lpld => WorkloadKind::Hphd,
         WorkloadKind::Online | WorkloadKind::HeavyTail => WorkloadKind::Hpld,
+        // Prefix classes drift to the closest classic class (heavy prompt):
+        // the bench grid never starts from one, but the match stays total.
+        WorkloadKind::PrefixChat | WorkloadKind::Rag | WorkloadKind::Agent => WorkloadKind::Hphd,
     }
 }
 
@@ -363,6 +366,64 @@ pub fn bench_sim(quick: bool, requests: Option<usize>) -> Json {
         ("samples", json::num(samples as f64)),
         ("cases", json::arr(cases)),
         ("stream", bench_sim_stream(quick, requests)),
+        ("prefix", bench_sim_prefix(quick)),
+    ])
+}
+
+/// Prefix-pool columns for `BENCH_sim.json` (DESIGN.md §15): one
+/// agent-workload run through the cluster-wide prefix pool — hit/miss
+/// counters, measured hit rate, reused/spilled token totals — plus a
+/// legacy-workload control run on the same plan whose counters must be
+/// exactly zero. CI's jq guard pins both: nonzero reuse on the prefix
+/// class, bit-zero on the classic classes (the `--prefix-share 0` parity
+/// story in counter form).
+fn bench_sim_prefix(quick: bool) -> Json {
+    let n = if quick { 200 } else { 1000 };
+    let Some(cluster) = settings::by_name("case_study") else { return Json::Null };
+    let spec =
+        DeploymentSpec::new(cluster, OPT_30B).workload(WorkloadKind::Agent).quick(true).seed(7);
+    let Ok(dep) = spec.plan(&HexGen2Planner) else { return Json::Null };
+    let trace = Trace::offline(WorkloadKind::Agent, n, 7);
+    let t0 = Instant::now();
+    let rep = dep.run(&SimBackend, &trace).expect("simulates");
+    let wall = t0.elapsed().as_secs_f64();
+    // Control: the same plan on a classic (prefix-free) class must leave
+    // every pool counter at exactly zero.
+    let legacy =
+        dep.run(&SimBackend, &Trace::offline(WorkloadKind::Lphd, n, 7)).expect("simulates");
+    println!(
+        "bench sim/prefix: {} requests, hit rate {:.2} ({} gpu / {} host hits, {} misses), \
+         {:.0} tokens reused, {:.0} spilled, legacy counters {}+{}",
+        rep.completed(),
+        rep.stats.prefix_hit_rate(),
+        rep.stats.prefix_hits,
+        rep.stats.prefix_host_hits,
+        rep.stats.prefix_misses,
+        rep.stats.prefix_reused_tokens,
+        rep.stats.prefix_spilled_tokens,
+        legacy.stats.prefix_hits,
+        legacy.stats.prefix_misses,
+    );
+    json::obj(vec![
+        ("setting", json::s("case_study")),
+        ("model", json::s(OPT_30B.name)),
+        ("workload", json::s(WorkloadKind::Agent.name())),
+        ("requests", json::num(n as f64)),
+        ("wall_s", json::num(wall)),
+        ("prefix_hits", json::num(rep.stats.prefix_hits as f64)),
+        ("prefix_host_hits", json::num(rep.stats.prefix_host_hits as f64)),
+        ("prefix_misses", json::num(rep.stats.prefix_misses as f64)),
+        ("hit_rate", json::num(rep.stats.prefix_hit_rate())),
+        ("reused_tokens", json::num(rep.stats.prefix_reused_tokens)),
+        ("published_tokens", json::num(rep.stats.prefix_published_tokens)),
+        ("spilled_tokens", json::num(rep.stats.prefix_spilled_tokens)),
+        ("evicted_tokens", json::num(rep.stats.prefix_evicted_tokens)),
+        ("reload_s", json::num(rep.stats.prefix_reload_s)),
+        ("mean_ttft_s", json::num(rep.avg_ttft())),
+        ("sim_tokens_per_s", json::num(rep.tokens_per_s())),
+        ("legacy_workload", json::s(WorkloadKind::Lphd.name())),
+        ("legacy_prefix_hits", json::num(legacy.stats.prefix_hits as f64)),
+        ("legacy_prefix_misses", json::num(legacy.stats.prefix_misses as f64)),
     ])
 }
 

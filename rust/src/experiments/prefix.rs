@@ -1,0 +1,209 @@
+//! Prefix-reuse study (DESIGN.md §15): the cluster-wide prefix KV pool
+//! across `--prefix-share` levels, at equal load. Arrivals and lengths are
+//! bit-identical across the share sweep (generation consumes a fixed
+//! number of RNG draws per request), and every row runs the *same*
+//! placement — so hit rate is the only moving part, and the TTFT /
+//! throughput deltas are attributable to the pool alone. The summary then
+//! re-plans with `--prefix-hit-aware` and contrasts the decode-device
+//! share: discounting expected prefill demand by the expected hit rate
+//! shifts the optimal partition decode-heavy.
+
+use crate::cluster::settings;
+use crate::deploy::{DeploymentSpec, HexGen2Planner, PlanKind, SimBackend};
+use crate::model::LlmSpec;
+use crate::util::bench::Table;
+use crate::workload::{Trace, TraceSource, WorkloadKind};
+
+use super::ExpOpts;
+
+/// One share level of the sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct PrefixRow {
+    pub share: f64,
+    /// Measured pool hit rate (GPU + host hits over resolved lookups).
+    pub hit_rate: f64,
+    pub mean_ttft: f64,
+    pub tokens_per_s: f64,
+    pub reused_tokens: f64,
+    pub spilled_tokens: f64,
+}
+
+/// The full study: the share sweep plus the hit-aware planner contrast.
+pub struct PrefixStudy {
+    pub table: Table,
+    pub rows: Vec<PrefixRow>,
+    /// Fraction of devices the hit-blind plan gives to decode groups.
+    pub blind_decode_share: f64,
+    /// Same under `--prefix-hit-aware` at the sweep's top share.
+    pub aware_decode_share: f64,
+    /// The expected hit rate the hit-aware planner discounted by.
+    pub planner_hit_rate: f64,
+}
+
+/// Fraction of devices assigned to decode groups (0.0 for non-disaggregated
+/// plans, which have no prefill/decode split to shift).
+pub fn decode_device_share(kind: &PlanKind) -> f64 {
+    match kind {
+        PlanKind::Disaggregated(p) => {
+            let total: usize = p.groups.iter().map(|g| g.devices.len()).sum();
+            let dec: usize =
+                p.groups.iter().filter(|g| !g.is_prefill).map(|g| g.devices.len()).sum();
+            if total == 0 {
+                0.0
+            } else {
+                dec as f64 / total as f64
+            }
+        }
+        _ => 0.0,
+    }
+}
+
+fn base_spec(model: &LlmSpec, setting: &str, opts: &ExpOpts) -> Option<DeploymentSpec> {
+    let cluster = settings::by_name(setting)?;
+    let mut spec = DeploymentSpec::new(cluster, *model)
+        .workload(WorkloadKind::Agent)
+        .seed(opts.seed)
+        .quick(opts.quick);
+    if setting == "case_study" {
+        // Pin K as the case studies do so the contrast is stable across
+        // search-budget changes.
+        spec = spec.force_k(4);
+    }
+    Some(spec)
+}
+
+/// The share sweep + planner contrast on one setting. Returns `None` for
+/// an unknown setting name.
+pub fn prefix_reuse(model: &LlmSpec, setting: &str, opts: &ExpOpts) -> Option<PrefixStudy> {
+    let shares: &[f64] =
+        if opts.quick { &[0.0, 0.5, 0.95] } else { &[0.0, 0.25, 0.5, 0.75, 0.95] };
+    let n = opts.offline_n().max(120);
+    let mut table = Table::new(&[
+        "prefix share",
+        "hit rate",
+        "mean TTFT (s)",
+        "tokens/s",
+        "reused tokens",
+        "spilled tokens",
+    ]);
+    let mut rows = Vec::new();
+
+    // One hit-blind plan serves the whole sweep: share is a trace/engine
+    // knob, so every row runs the identical placement.
+    let spec = base_spec(model, setting, opts)?;
+    let dep = match spec.plan(&HexGen2Planner) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("prefix_reuse: planning failed on {setting}: {e}");
+            return None;
+        }
+    };
+    let blind_decode_share = decode_device_share(&dep.plan.kind);
+
+    for &share in shares {
+        let trace = Trace::from_source(
+            TraceSource::offline(WorkloadKind::Agent, n, opts.seed.wrapping_add(53))
+                .with_prefix_share(share),
+        );
+        let rep = match dep.run(&SimBackend, &trace) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("prefix_reuse: share {share} failed: {e}");
+                continue;
+            }
+        };
+        let row = PrefixRow {
+            share,
+            hit_rate: rep.stats.prefix_hit_rate(),
+            mean_ttft: rep.avg_ttft(),
+            tokens_per_s: rep.tokens_per_s(),
+            reused_tokens: rep.stats.prefix_reused_tokens,
+            spilled_tokens: rep.stats.prefix_spilled_tokens,
+        };
+        table.row(&[
+            format!("{share:.2}"),
+            format!("{:.2}", row.hit_rate),
+            format!("{:.3}", row.mean_ttft),
+            format!("{:.0}", row.tokens_per_s),
+            format!("{:.0}", row.reused_tokens),
+            format!("{:.0}", row.spilled_tokens),
+        ]);
+        rows.push(row);
+    }
+
+    // Planner contrast: same cluster/workload, but the planner discounts
+    // expected prefill demand by the class's expected hit rate at the top
+    // share level.
+    let top_share = shares.last().copied().unwrap_or(0.95);
+    let aware_spec =
+        base_spec(model, setting, opts)?.prefix_share(Some(top_share)).prefix_hit_aware(true);
+    let planner_hit_rate = aware_spec.expected_prefix_hit_rate();
+    let aware_decode_share = match aware_spec.plan(&HexGen2Planner) {
+        Ok(d) => decode_device_share(&d.plan.kind),
+        Err(e) => {
+            eprintln!("prefix_reuse: hit-aware planning failed on {setting}: {e}");
+            blind_decode_share
+        }
+    };
+
+    Some(PrefixStudy { table, rows, blind_decode_share, aware_decode_share, planner_hit_rate })
+}
+
+/// Headline lines under the table: pool gains at equal load, and the
+/// hit-aware partition shift.
+pub fn print_summary(s: &PrefixStudy) {
+    if let (Some(base), Some(top)) = (s.rows.first(), s.rows.last()) {
+        if base.share == 0.0 && top.share > 0.0 {
+            println!(
+                "prefix pool @ share {:.2}: mean TTFT {:.3}s -> {:.3}s ({:+.0}%), \
+                 tokens/s {:.0} -> {:.0} ({:+.0}%), measured hit rate {:.2}",
+                top.share,
+                base.mean_ttft,
+                top.mean_ttft,
+                (top.mean_ttft / base.mean_ttft.max(1e-12) - 1.0) * 100.0,
+                base.tokens_per_s,
+                top.tokens_per_s,
+                (top.tokens_per_s / base.tokens_per_s.max(1e-12) - 1.0) * 100.0,
+                top.hit_rate,
+            );
+        }
+    }
+    println!(
+        "hit-aware planner (expected hit rate {:.2}): decode device share {:.2} -> {:.2} \
+         (hit-blind -> hit-aware)",
+        s.planner_hit_rate, s.blind_decode_share, s.aware_decode_share,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::OPT_30B;
+
+    #[test]
+    fn sweep_covers_shares_and_reuse_pays() {
+        let opts = ExpOpts { quick: true, seed: 0 };
+        let s = prefix_reuse(&OPT_30B, "case_study", &opts).expect("setting exists");
+        assert_eq!(s.rows.len(), 3, "quick sweep is 3 share levels");
+        let base = &s.rows[0];
+        let top = s.rows.last().unwrap();
+        assert_eq!(base.share, 0.0);
+        assert_eq!(base.hit_rate, 0.0, "share 0 must never touch the pool");
+        assert!(top.hit_rate >= 0.5, "top share should mostly hit, got {}", top.hit_rate);
+        // The headline claim: reuse strictly improves BOTH mean TTFT and
+        // throughput at equal load.
+        assert!(
+            top.mean_ttft < base.mean_ttft,
+            "TTFT should drop: {} vs {}",
+            top.mean_ttft,
+            base.mean_ttft
+        );
+        assert!(
+            top.tokens_per_s > base.tokens_per_s,
+            "throughput should rise: {} vs {}",
+            top.tokens_per_s,
+            base.tokens_per_s
+        );
+        assert!(prefix_reuse(&OPT_30B, "nonexistent", &opts).is_none());
+    }
+}

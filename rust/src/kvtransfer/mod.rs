@@ -41,9 +41,11 @@
 //! coordinator can drive the same scheduler with wall-clock timestamps.
 
 pub mod engine;
+pub mod prefix;
 pub mod route;
 
 pub use engine::{KvSummary, Ledger, LinkLoad, Transfer, TransferConfig, TransferScheduler};
+pub use prefix::{EvictRecord, PrefixPool, PrefixTier};
 pub use route::{Candidate, RouteModel, RoutePolicy};
 
 /// How concurrent KV-cache transfers contend for the fabric. (Lives here —

@@ -1,0 +1,370 @@
+//! Cluster-wide prefix KV pool (DESIGN.md §15).
+//!
+//! KV caches of shared prompt prefixes (system prompts, hot RAG
+//! documents, re-sent agent histories) are a *reusable, poolable asset*,
+//! not a one-shot prefill→decode byte stream. The pool tracks, per
+//! prefix id, where that prefix's KV currently lives:
+//!
+//! - **GPU tier**: resident on one prefill replica, charged against that
+//!   replica's pool budget (a slice of `CostModel::token_capacity`).
+//!   A GPU hit steers the request to the holder, which prefills only
+//!   the suffix.
+//! - **Host tier**: LRU-spilled to cluster host memory. A host hit pays
+//!   a re-load transfer (prefix KV bytes over the host-reload
+//!   bandwidth) before the suffix prefill can start, then the entry is
+//!   promoted back to the serving replica's GPU tier.
+//! - **Evicted**: LRU-dropped from the host tier once it overflows; the
+//!   next request for the prefix is a full miss and re-publishes.
+//!
+//! All bookkeeping is deterministic: recency is a logical u64 clock
+//! bumped on every lookup/publish (no wall time), LRU scans iterate
+//! `BTreeMap`s in ascending id order, and ties break toward the smaller
+//! prefix id — so pool state is bit-identical across `--threads`.
+
+use std::collections::BTreeMap;
+
+/// Host tier budget as a multiple of the summed per-replica GPU budgets
+/// (when no explicit override is configured).
+pub const HOST_BUDGET_FACTOR: f64 = 4.0;
+
+/// Where a prefix's KV currently lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefixTier {
+    /// GPU-resident on the prefill replica with this arena index.
+    Gpu(usize),
+    /// Spilled to the cluster host-memory tier.
+    Host,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    tokens: f64,
+    tier: PrefixTier,
+    /// Logical LRU clock stamp (monotone, deterministic).
+    touched: u64,
+}
+
+/// One spill or eviction performed while making room.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvictRecord {
+    pub prefix: usize,
+    pub tokens: f64,
+    /// `true`: GPU → host spill (KV survives, re-loadable).
+    /// `false`: dropped from the host tier (KV gone).
+    pub to_host: bool,
+}
+
+/// The pool. Owned by the simulator engine (one per run) and registered
+/// with every prefill replica at build time; the same structure can back
+/// a live coordinator since it does plain token arithmetic.
+#[derive(Clone, Debug)]
+pub struct PrefixPool {
+    entries: BTreeMap<usize, Entry>,
+    /// Per-replica GPU pool budget / usage in tokens (arena index key).
+    gpu_budget: BTreeMap<usize, f64>,
+    gpu_used: BTreeMap<usize, f64>,
+    host_budget_override: Option<f64>,
+    host_used: f64,
+    clock: u64,
+    /// Cumulative tokens first published into the pool.
+    pub published_tokens: f64,
+    /// Cumulative tokens spilled GPU → host.
+    pub spilled_tokens: f64,
+    /// Cumulative tokens dropped from the host tier.
+    pub evicted_tokens: f64,
+}
+
+impl Default for PrefixPool {
+    fn default() -> PrefixPool {
+        PrefixPool::new(None)
+    }
+}
+
+impl PrefixPool {
+    pub fn new(host_budget_override: Option<f64>) -> PrefixPool {
+        PrefixPool {
+            entries: BTreeMap::new(),
+            gpu_budget: BTreeMap::new(),
+            gpu_used: BTreeMap::new(),
+            host_budget_override,
+            host_used: 0.0,
+            clock: 0,
+            published_tokens: 0.0,
+            spilled_tokens: 0.0,
+            evicted_tokens: 0.0,
+        }
+    }
+
+    /// Register a prefill replica's GPU pool budget (tokens).
+    pub fn register_replica(&mut self, replica: usize, budget_tokens: f64) {
+        self.gpu_budget.insert(replica, budget_tokens.max(0.0));
+        self.gpu_used.entry(replica).or_insert(0.0);
+    }
+
+    /// Drop registrations for replicas with arena index ≥ `base` (the
+    /// engine's placement-rollback path; no entries exist on them yet).
+    pub fn unregister_from(&mut self, base: usize) {
+        self.gpu_budget.split_off(&base);
+        self.gpu_used.split_off(&base);
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.gpu_budget.len()
+    }
+
+    fn host_budget(&self) -> f64 {
+        match self.host_budget_override {
+            Some(b) => b.max(0.0),
+            None => HOST_BUDGET_FACTOR * self.gpu_budget.values().sum::<f64>(),
+        }
+    }
+
+    /// Where does `prefix` live right now? Bumps the entry's recency.
+    pub fn lookup(&mut self, prefix: usize) -> Option<PrefixTier> {
+        self.clock += 1;
+        let clock = self.clock;
+        let e = self.entries.get_mut(&prefix)?;
+        e.touched = clock;
+        Some(e.tier)
+    }
+
+    /// The prefix's KV is now materialized on `replica`'s GPU: a fresh
+    /// publish on a miss, or a promotion after a host-hit re-load.
+    /// Idempotent — an entry already GPU-resident just has its recency
+    /// bumped (it stays with its original holder). Returns `true` when
+    /// tokens were newly published (first sighting of this prefix).
+    /// Spills/evictions performed to make room are appended to `out`.
+    pub fn publish(
+        &mut self,
+        prefix: usize,
+        tokens: f64,
+        replica: usize,
+        out: &mut Vec<EvictRecord>,
+    ) -> bool {
+        if !self.gpu_budget.contains_key(&replica) {
+            return false;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let fresh = match self.entries.get_mut(&prefix) {
+            Some(e) => {
+                e.touched = clock;
+                match e.tier {
+                    PrefixTier::Gpu(_) => return false,
+                    PrefixTier::Host => {
+                        // Promote host → GPU of the serving replica.
+                        e.tier = PrefixTier::Gpu(replica);
+                        let t = e.tokens;
+                        self.host_used = (self.host_used - t).max(0.0);
+                        *self.gpu_used.entry(replica).or_insert(0.0) += t;
+                        false
+                    }
+                }
+            }
+            None => {
+                self.entries
+                    .insert(prefix, Entry { tokens, tier: PrefixTier::Gpu(replica), touched: clock });
+                *self.gpu_used.entry(replica).or_insert(0.0) += tokens;
+                self.published_tokens += tokens;
+                true
+            }
+        };
+        self.make_room(replica, out);
+        fresh
+    }
+
+    /// Spill every entry held on `replica`'s GPU to the host tier (the
+    /// replica is being deactivated by a placement switch — its GPU cache
+    /// flushes, the host tier persists). Evictions from the resulting
+    /// host-tier overflow are appended to `out`.
+    pub fn flush_replica(&mut self, replica: usize, out: &mut Vec<EvictRecord>) {
+        let mut moved = 0.0;
+        for (&id, e) in self.entries.iter_mut() {
+            if e.tier == PrefixTier::Gpu(replica) {
+                e.tier = PrefixTier::Host;
+                moved += e.tokens;
+                out.push(EvictRecord { prefix: id, tokens: e.tokens, to_host: true });
+            }
+        }
+        if moved > 0.0 {
+            self.spilled_tokens += moved;
+            self.host_used += moved;
+            if let Some(u) = self.gpu_used.get_mut(&replica) {
+                *u = (*u - moved).max(0.0);
+            }
+            self.evict_host_overflow(out);
+        }
+    }
+
+    /// Enforce `replica`'s GPU budget (LRU spill to host), then the host
+    /// budget (LRU drop).
+    fn make_room(&mut self, replica: usize, out: &mut Vec<EvictRecord>) {
+        let budget = self.gpu_budget.get(&replica).copied().unwrap_or(0.0);
+        loop {
+            let used = self.gpu_used.get(&replica).copied().unwrap_or(0.0);
+            if used <= budget {
+                break;
+            }
+            // LRU victim on this replica: oldest clock, ties to the
+            // smallest prefix id (ascending BTreeMap scan + strict `<`).
+            let mut victim: Option<(usize, f64, u64)> = None;
+            for (&id, e) in &self.entries {
+                if e.tier == PrefixTier::Gpu(replica)
+                    && victim.map_or(true, |(_, _, c)| e.touched < c)
+                {
+                    victim = Some((id, e.tokens, e.touched));
+                }
+            }
+            let Some((id, t, _)) = victim else { break };
+            if let Some(e) = self.entries.get_mut(&id) {
+                e.tier = PrefixTier::Host;
+            }
+            if let Some(u) = self.gpu_used.get_mut(&replica) {
+                *u = (*u - t).max(0.0);
+            }
+            self.host_used += t;
+            self.spilled_tokens += t;
+            out.push(EvictRecord { prefix: id, tokens: t, to_host: true });
+        }
+        self.evict_host_overflow(out);
+    }
+
+    fn evict_host_overflow(&mut self, out: &mut Vec<EvictRecord>) {
+        let budget = self.host_budget();
+        while self.host_used > budget {
+            let mut victim: Option<(usize, f64, u64)> = None;
+            for (&id, e) in &self.entries {
+                if e.tier == PrefixTier::Host && victim.map_or(true, |(_, _, c)| e.touched < c) {
+                    victim = Some((id, e.tokens, e.touched));
+                }
+            }
+            let Some((id, t, _)) = victim else { break };
+            self.entries.remove(&id);
+            self.host_used = (self.host_used - t).max(0.0);
+            self.evicted_tokens += t;
+            out.push(EvictRecord { prefix: id, tokens: t, to_host: false });
+        }
+    }
+
+    /// Tokens currently GPU-resident across all replicas.
+    pub fn gpu_resident(&self) -> f64 {
+        self.gpu_used.values().sum()
+    }
+
+    /// Tokens currently in the host tier.
+    pub fn host_resident(&self) -> f64 {
+        self.host_used
+    }
+
+    /// Token conservation: everything ever published is either still
+    /// resident (GPU or host) or was dropped from the host tier.
+    /// Returns (published, resident + evicted) for assertion.
+    pub fn conservation(&self) -> (f64, f64) {
+        (self.published_tokens, self.gpu_resident() + self.host_resident() + self.evicted_tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_lookup_roundtrip() {
+        let mut pool = PrefixPool::new(None);
+        pool.register_replica(0, 1000.0);
+        pool.register_replica(1, 1000.0);
+        let mut out = Vec::new();
+        assert!(pool.publish(7, 300.0, 0, &mut out));
+        assert!(out.is_empty());
+        assert_eq!(pool.lookup(7), Some(PrefixTier::Gpu(0)));
+        assert_eq!(pool.lookup(8), None);
+        // Idempotent: re-publishing (even from another replica) does not
+        // move or double-count the entry.
+        assert!(!pool.publish(7, 300.0, 1, &mut out));
+        assert_eq!(pool.lookup(7), Some(PrefixTier::Gpu(0)));
+        assert_eq!(pool.published_tokens, 300.0);
+        assert_eq!(pool.gpu_resident(), 300.0);
+    }
+
+    #[test]
+    fn lru_spills_to_host_then_evicts() {
+        let mut pool = PrefixPool::new(Some(250.0));
+        pool.register_replica(0, 500.0);
+        let mut out = Vec::new();
+        pool.publish(1, 200.0, 0, &mut out);
+        pool.publish(2, 200.0, 0, &mut out);
+        assert!(out.is_empty());
+        // Touch 1 so 2 becomes LRU.
+        pool.lookup(1);
+        pool.publish(3, 200.0, 0, &mut out);
+        // 2 spilled to host (oldest), fits the 250-token host budget.
+        assert_eq!(out, vec![EvictRecord { prefix: 2, tokens: 200.0, to_host: true }]);
+        assert_eq!(pool.lookup(2), Some(PrefixTier::Host));
+        out.clear();
+        // Another overflow: 1 is now LRU on GPU (3 is newest), spills;
+        // host would hold 400 > 250, so 2 (older in host) is dropped.
+        pool.publish(4, 200.0, 0, &mut out);
+        assert_eq!(
+            out,
+            vec![
+                EvictRecord { prefix: 1, tokens: 200.0, to_host: true },
+                EvictRecord { prefix: 2, tokens: 200.0, to_host: false },
+            ]
+        );
+        assert_eq!(pool.lookup(2), None);
+        let (published, accounted) = pool.conservation();
+        assert!((published - accounted).abs() < 1e-9, "{published} vs {accounted}");
+    }
+
+    #[test]
+    fn host_hit_promotes_back_to_gpu() {
+        let mut pool = PrefixPool::new(None);
+        pool.register_replica(0, 300.0);
+        pool.register_replica(1, 300.0);
+        let mut out = Vec::new();
+        pool.publish(1, 200.0, 0, &mut out);
+        pool.publish(2, 200.0, 0, &mut out); // spills 1 to host
+        assert_eq!(pool.lookup(1), Some(PrefixTier::Host));
+        out.clear();
+        // Re-load lands on replica 1: promotion moves host → Gpu(1).
+        assert!(!pool.publish(1, 200.0, 1, &mut out));
+        assert_eq!(pool.lookup(1), Some(PrefixTier::Gpu(1)));
+        assert!(out.is_empty());
+        assert_eq!(pool.published_tokens, 400.0);
+        assert_eq!(pool.host_resident(), 0.0);
+        assert_eq!(pool.gpu_resident(), 400.0);
+    }
+
+    #[test]
+    fn flush_replica_moves_everything_to_host() {
+        let mut pool = PrefixPool::new(None);
+        pool.register_replica(0, 1000.0);
+        let mut out = Vec::new();
+        pool.publish(1, 100.0, 0, &mut out);
+        pool.publish(2, 150.0, 0, &mut out);
+        out.clear();
+        pool.flush_replica(0, &mut out);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|e| e.to_host));
+        assert_eq!(pool.lookup(1), Some(PrefixTier::Host));
+        assert_eq!(pool.lookup(2), Some(PrefixTier::Host));
+        assert_eq!(pool.gpu_resident(), 0.0);
+        assert_eq!(pool.host_resident(), 250.0);
+        let (published, accounted) = pool.conservation();
+        assert!((published - accounted).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unregistered_replica_cannot_publish() {
+        let mut pool = PrefixPool::new(None);
+        let mut out = Vec::new();
+        assert!(!pool.publish(1, 100.0, 0, &mut out));
+        assert_eq!(pool.lookup(1), None);
+        pool.register_replica(0, 100.0);
+        pool.register_replica(1, 100.0);
+        pool.unregister_from(1);
+        assert_eq!(pool.replicas(), 1);
+        assert!(!pool.publish(1, 50.0, 1, &mut out));
+        assert!(pool.publish(1, 50.0, 0, &mut out));
+    }
+}

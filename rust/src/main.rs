@@ -23,7 +23,7 @@ use hexgen2::telemetry;
 use hexgen2::util::args::Args;
 use hexgen2::util::json;
 use hexgen2::util::rng::Rng;
-use hexgen2::workload::{Trace, WorkloadKind};
+use hexgen2::workload::{Trace, TraceSource, WorkloadKind};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -41,6 +41,7 @@ fn main() {
             "update-baseline",
             "hierarchical",
             "windowed",
+            "prefix-hit-aware",
         ],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -121,6 +122,19 @@ fn spec_of(args: &Args) -> Result<DeploymentSpec> {
         spec = spec.kv_chunk_layers(Some(layers));
     }
     spec = spec.contention_aware(args.has("contention-aware"));
+    // Prefix KV reuse (DESIGN.md §15): --prefix-share overrides the
+    // workload class's reusable-prefix fraction (0 disables the pool);
+    // --prefix-hit-aware lets the planner discount expected prefill demand
+    // by the workload's expected hit rate.
+    if let Some(s) = args.get("prefix-share") {
+        let share: f64 = s
+            .parse()
+            .ok()
+            .filter(|x: &f64| (0.0..=1.0).contains(x))
+            .ok_or_else(|| anyhow!("--prefix-share needs a fraction in [0, 1], got {s}"))?;
+        spec = spec.prefix_share(Some(share));
+    }
+    spec = spec.prefix_hit_aware(args.has("prefix-hit-aware"));
     // Flight recorder (DESIGN.md §12): --trace FILE / --prom FILE enable
     // event recording; --audit FILE enables planner decision capture.
     if args.get("trace").is_some() || args.get("prom").is_some() {
@@ -299,7 +313,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let seed = spec.seed;
             let n = args.get_usize("requests", 100);
             let json_out = args.has("json");
-            let trace = if kind == WorkloadKind::Online {
+            let src = if kind == WorkloadKind::Online {
                 let opts = ExpOpts { quick: true, seed };
                 let rate = args
                     .get("rate")
@@ -308,9 +322,13 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 if !json_out {
                     println!("online rate: {rate:.2} req/s");
                 }
-                Trace::online(kind, rate, args.get_f64("duration", 120.0), seed)
+                TraceSource::online(kind, rate, args.get_f64("duration", 120.0), seed)
             } else {
-                Trace::offline(kind, n, seed)
+                TraceSource::offline(kind, n, seed)
+            };
+            let trace = match spec.prefix_share {
+                Some(share) => Trace::from_source(src.with_prefix_share(share)),
+                None => Trace::from_source(src),
             };
             let dep = spec.plan(planner)?;
             if !json_out {
@@ -420,26 +438,36 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "workload" => {
             let kind = workload_of(args)?;
             let n = args.get_usize("n", 10);
-            let trace = if kind == WorkloadKind::Online {
-                Trace::online(
+            let src = if kind == WorkloadKind::Online {
+                TraceSource::online(
                     kind,
                     args.get_f64("rate", 2.0),
                     args.get_f64("duration", 30.0),
                     args.get_u64("seed", 0),
                 )
             } else {
-                Trace::offline(kind, n, args.get_u64("seed", 0))
+                TraceSource::offline(kind, n, args.get_u64("seed", 0))
             };
+            let src = match args.get("prefix-share").and_then(|s| s.parse().ok()) {
+                Some(share) => src.with_prefix_share(share),
+                None => src,
+            };
+            let trace = Trace::from_source(src);
             let rows: Vec<json::Json> = trace
                 .requests
                 .iter()
                 .map(|r| {
-                    json::obj(vec![
+                    let mut fields = vec![
                         ("id", json::num(r.id as f64)),
                         ("arrival", json::num(r.arrival)),
                         ("input_len", json::num(r.input_len as f64)),
                         ("output_len", json::num(r.output_len as f64)),
-                    ])
+                    ];
+                    if let Some(px) = r.prefix {
+                        fields.push(("prefix_id", json::num(px.id as f64)));
+                        fields.push(("prefix_len", json::num(px.len as f64)));
+                    }
+                    json::obj(fields)
                 })
                 .collect();
             println!("{}", json::arr(rows).to_string_pretty());
@@ -512,6 +540,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             [--kv-route flow|least-loaded|eta-greedy] [--kv-chunk-layers N]\n\
                  \x20             [--contention-aware] [--trace FILE] [--trace-sample RATE]\n\
                  \x20             [--audit FILE] [--prom FILE] [--prom-window SECONDS]\n\
+                 \x20             [--prefix-share F] [--prefix-hit-aware]\n\
                  \x20             plan + run on the unified discrete-event simulator (--resched enables the\n\
                  \x20             online rescheduling loop mid-trace; --chunked-prefill chunks prompts on\n\
                  \x20             both colocated and disaggregated prefill replicas; per-request admission\n\
@@ -538,9 +567,22 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             the --json report gains per-request span summaries.\n\
                  \x20             --windowed streams metrics through an O(1) accumulator instead of\n\
                  \x20             per-request records (million-request runs in bounded memory; exact\n\
-                 \x20             means/throughput, ~13%-bucket percentiles).\n\
+                 \x20             means/throughput, t-digest percentiles ≲2% relative error).\n\
+                 \x20             Prefix KV reuse (DESIGN.md \u{a7}15): --workload prefix_chat|rag|agent\n\
+                 \x20             draws Zipf-distributed hot shared prefixes (system prompts, RAG\n\
+                 \x20             documents, agent histories); the engine keeps a cluster-wide prefix\n\
+                 \x20             pool on the prefill replicas — a hit prefills only the suffix, a\n\
+                 \x20             host-tier hit pays a PCIe re-load, a miss publishes for later reuse.\n\
+                 \x20             --prefix-share F overrides the class's reusable fraction (0 disables\n\
+                 \x20             the pool bit-identically to the legacy engine; arrivals/lengths are\n\
+                 \x20             unchanged across a share sweep); --prefix-hit-aware lets the planner\n\
+                 \x20             discount expected prefill demand by the expected hit rate, shifting\n\
+                 \x20             the optimal partition decode-heavy (also applies to `schedule`).\n\
+                 \x20             The --json report carries prefix_{hits,host_hits,misses,hit_rate,\n\
+                 \x20             reused_tokens,published_tokens,spilled_tokens,evicted_tokens,reload_s}.\n\
                  \x20 serve       --model tiny --requests 16 --prefill 2 --decode 1 [--throttle-mbps N] [--verbose]\n\
-                 \x20 workload    --workload hpld --n 10   (classes: HPLD|HPHD|LPHD|LPLD|online|heavy_tail)\n\
+                 \x20 workload    --workload hpld --n 10 [--prefix-share F]\n\
+                 \x20             (classes: HPLD|HPHD|LPHD|LPLD|online|heavy_tail|prefix_chat|rag|agent)\n\
                  \x20 bench       planner|sim [--full] [--threads N] [--requests N]\n\
                  \x20             perf-regression harness (DESIGN.md \u{a7}10): replays the \u{a7}3.3 serving-loop\n\
                  \x20             planning workload cached vs uncached vs threaded and writes\n\
@@ -548,7 +590,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             rate, partitions explored — deterministic where wall-time is not).\n\
                  \x20             bench sim also streams a windowed online trace (--requests, default\n\
                  \x20             100k quick / 1M full) for the events/sec @ 1M headline.\n\
-                 \x20 experiments <fig1|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table2|table3|table4|table5|table5h|appd|heavy_tail|kv_routing|all> [--full]\n\
+                 \x20 experiments <fig1|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|table2|table3|table4|table5|table5h|appd|heavy_tail|kv_routing|prefix_reuse|all> [--full]\n\
                  \x20 settings    print bandwidth matrices (paper Fig. 4)\n\
                  \x20 check       [--src DIR] [--baseline FILE] [--json] [--update-baseline]\n\
                  \x20             hexcheck static analysis (DESIGN.md \u{a7}13): determinism (D1/D2/F1),\n\
@@ -672,7 +714,7 @@ fn run_experiment(id: &str, opts: &ExpOpts, args: &Args) -> Result<()> {
     let hets: &[&str] = if opts.quick { &het_quick } else { &het_all };
     match id {
         "list" => {
-            println!("experiments: fig1 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 table2 table3 table4 table5 table5h appd heavy_tail kv_routing all");
+            println!("experiments: fig1 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 table2 table3 table4 table5 table5h appd heavy_tail kv_routing prefix_reuse all");
         }
         "fig1" => {
             let (p, d) = batching::fig1_batching();
@@ -764,10 +806,19 @@ fn run_experiment(id: &str, opts: &ExpOpts, args: &Args) -> Result<()> {
                 .ok_or_else(|| anyhow!("unknown setting {setting}"))?
                 .print("KV routing: route models x pipelined chunking under shared-NIC contention (OPT-30B, per-request admission)");
         }
+        "prefix_reuse" => {
+            let setting = args.get_or("setting", "case_study");
+            let out = hexgen2::experiments::prefix::prefix_reuse(&OPT_30B, setting, opts)
+                .ok_or_else(|| anyhow!("unknown setting {setting}"))?;
+            out.table.print(
+                "Prefix reuse: cluster-wide KV pool across share levels (OPT-30B, agent workload)",
+            );
+            hexgen2::experiments::prefix::print_summary(&out);
+        }
         "all" => {
             for e in [
                 "fig1", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "table2",
-                "table3", "table4", "table5", "appd", "heavy_tail", "kv_routing",
+                "table3", "table4", "table5", "appd", "heavy_tail", "kv_routing", "prefix_reuse",
             ] {
                 run_experiment(e, opts, args)?;
             }

@@ -52,6 +52,11 @@ struct EvalKey {
     /// (`ScheduleOptions::kv_contention`): the penalty changes scores, so
     /// blind and contention-aware searches must not share entries.
     contention: u8,
+    /// Cache-aware prefill discount bits
+    /// (`ScheduleOptions::prefix_hit_rate`): the discount changes prefill
+    /// capacities, so hit-blind and hit-aware searches must not share
+    /// entries.
+    prefix_bits: u64,
 }
 
 fn objective_bits(o: Objective) -> (u8, u64) {
@@ -273,6 +278,7 @@ impl EvalCache {
             kv_contention,
             1,
             &mut FlowNetPool::new(),
+            0.0,
         )
     }
 
@@ -295,6 +301,7 @@ impl EvalCache {
         kv_contention: Option<LinkModel>,
         threads: usize,
         pool: &mut FlowNetPool,
+        prefix_hit_rate: f64,
     ) -> Option<Placement> {
         self.bind_owner(cluster, model);
         let key = EvalKey {
@@ -304,6 +311,7 @@ impl EvalCache {
             period_bits: period.to_bits(),
             n_type_candidates,
             contention: contention_bits(kv_contention),
+            prefix_bits: prefix_hit_rate.to_bits(),
         };
         let audit_on = self.audit_on.load(Ordering::Relaxed);
         if self.enabled {
@@ -329,6 +337,7 @@ impl EvalCache {
             &self.strategy,
             threads,
             pool,
+            prefix_hit_rate,
         );
         if audit_on {
             self.push_audit(&key.sig, groups.len(), &v, kv_contention, false);

@@ -33,6 +33,17 @@ use super::strategy::StrategyCache;
 /// Per-group (prefill, decode) strategy + capacity search over `gs` through
 /// the shared [`StrategyCache`]. A free function so the scoped workers of
 /// [`PartitionFlowNet::new_in`] can each run one contiguous chunk.
+///
+/// `prefix_hit_rate` is the cache-aware planning discount
+/// ([`ScheduleOptions::prefix_hit_rate`](super::ScheduleOptions::prefix_hit_rate)):
+/// a prefix-pool hit serves only the suffix, so *prefill capacity* is
+/// computed against a task whose input length is scaled by
+/// `1 - prefix_hit_rate`. Strategy *selection* (`best_prefill` /
+/// `best_decode`), decode capacity, and everything downstream (KV edges,
+/// ingress) keep the original task — reuse changes how much prefill compute
+/// a group must supply, not which parallelism fits it, and the pool still
+/// ships and stores full-length KV. Keeping selection on the original task
+/// also keeps the [`StrategyCache`] shared across hit rates.
 #[allow(clippy::type_complexity)]
 fn strategize(
     cluster: &Cluster,
@@ -41,12 +52,17 @@ fn strategize(
     period: f64,
     gs: &[Vec<DeviceId>],
     cache: &StrategyCache,
+    prefix_hit_rate: f64,
 ) -> Vec<(Option<(ReplicaConfig, f64)>, Option<(ReplicaConfig, f64)>)> {
     let cm = CostModel::new(cluster, model);
+    let ptask = TaskProfile {
+        s_in: task.s_in * (1.0 - prefix_hit_rate.clamp(0.0, 0.95)),
+        ..*task
+    };
     gs.iter()
         .map(|g| {
             let p = cache.best_prefill(cluster, model, g, task).map(|(cfg, _lat)| {
-                let cap = cm.prefill_capacity(&cfg, task, period);
+                let cap = cm.prefill_capacity(&cfg, &ptask, period);
                 (cfg, cap)
             });
             let d = cache.best_decode(cluster, model, g, task).map(|(cfg, _tput)| {
@@ -173,7 +189,7 @@ impl<'a> PartitionFlowNet<'a> {
         groups: &'a [Vec<DeviceId>],
         cache: &StrategyCache,
     ) -> PartitionFlowNet<'a> {
-        Self::new_in(cluster, model, task, period, groups, cache, 1, &mut FlowNetPool::new())
+        Self::new_in(cluster, model, task, period, groups, cache, 1, &mut FlowNetPool::new(), 0.0)
     }
 
     /// [`PartitionFlowNet::new`] with a worker budget for the per-group
@@ -192,18 +208,21 @@ impl<'a> PartitionFlowNet<'a> {
         cache: &StrategyCache,
         threads: usize,
         pool: &mut FlowNetPool,
+        prefix_hit_rate: f64,
     ) -> PartitionFlowNet<'a> {
         let k = groups.len();
         let workers = threads.min(k).max(1);
         let per_group = if workers <= 1 {
-            strategize(cluster, model, task, period, groups, cache)
+            strategize(cluster, model, task, period, groups, cache, prefix_hit_rate)
         } else {
             let chunk = k.div_ceil(workers);
             std::thread::scope(|s| {
                 let handles: Vec<_> = groups
                     .chunks(chunk)
                     .map(|part| {
-                        s.spawn(move || strategize(cluster, model, task, period, part, cache))
+                        s.spawn(move || {
+                            strategize(cluster, model, task, period, part, cache, prefix_hit_rate)
+                        })
                     })
                     .collect();
                 handles
@@ -477,7 +496,9 @@ mod tests {
         for groups in &partitions {
             let assign: Vec<bool> = (0..groups.len()).map(|g| g % 2 == 0).collect();
             let mut pooled =
-                PartitionFlowNet::new_in(&c, &OPT_30B, &task, 600.0, groups, &cache, 1, &mut pool);
+                PartitionFlowNet::new_in(
+                    &c, &OPT_30B, &task, 600.0, groups, &cache, 1, &mut pool, 0.0,
+                );
             let a = pooled.evaluate(&assign);
             pooled.recycle(&mut pool);
             let mut fresh = PartitionFlowNet::new(&c, &OPT_30B, &task, 600.0, groups, &cache);
@@ -508,6 +529,7 @@ mod tests {
                 &par_cache,
                 threads,
                 &mut FlowNetPool::new(),
+                0.0,
             );
             let a = seq.evaluate(&assign);
             let b = par.evaluate(&assign);

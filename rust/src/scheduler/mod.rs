@@ -106,6 +106,17 @@ pub struct ScheduleOptions {
     /// is a planner wall-clock that scales with zone size, not cluster
     /// size, at a bounded objective cost.
     pub hierarchical: Option<usize>,
+    /// Cache-aware planning (DESIGN.md §15): discount expected prefill
+    /// demand by this expected prefix-pool hit rate in [0, 1). Each
+    /// candidate's prefill capacity is computed against a task whose input
+    /// length is scaled by `1 - prefix_hit_rate` — a hit serves only the
+    /// suffix — while KV-transfer volume, ingress, and memory keep the full
+    /// prompt (the pool reserves full-length KV). The prefill analogue of
+    /// [`ScheduleOptions::kv_contention`]; `0.0` (default) is the
+    /// hit-blind legacy ranking. Set from
+    /// [`DeploymentSpec::expected_prefix_hit_rate`](crate::deploy::DeploymentSpec::expected_prefix_hit_rate)
+    /// under `--prefix-hit-aware`.
+    pub prefix_hit_rate: f64,
 }
 
 impl ScheduleOptions {
@@ -127,6 +138,7 @@ impl ScheduleOptions {
             kv_contention: None,
             audit: false,
             hierarchical: None,
+            prefix_hit_rate: 0.0,
         }
     }
 }
@@ -298,6 +310,7 @@ pub fn evaluate_partition_with(
         cache,
         1,
         &mut flownet::FlowNetPool::new(),
+        0.0,
     )
 }
 
@@ -320,9 +333,10 @@ pub fn evaluate_partition_pooled(
     cache: &StrategyCache,
     threads: usize,
     pool: &mut flownet::FlowNetPool,
+    prefix_hit_rate: f64,
 ) -> Option<Placement> {
     let mut net = flownet::PartitionFlowNet::new_in(
-        cluster, model, task, period, groups, cache, threads, pool,
+        cluster, model, task, period, groups, cache, threads, pool, prefix_hit_rate,
     );
     // Per-group phase capacities feed the secondary-partition scoring.
     let caps = net.phase_caps();
@@ -546,6 +560,7 @@ fn evaluate_batch(
     kv_contention: Option<LinkModel>,
     cache: &EvalCache,
     threads: usize,
+    prefix_hit_rate: f64,
 ) -> Vec<Option<Placement>> {
     // Leftover parallelism fans *into* each evaluation's per-group strategy
     // search when there are more workers than candidates (a single huge
@@ -557,7 +572,7 @@ fn evaluate_batch(
     let eval = |g: &Groups, inner: usize, pool: &mut flownet::FlowNetPool| {
         cache.evaluate_pooled(
             cluster, model, task, period, g, n_type_candidates, objective, kv_contention, inner,
-            pool,
+            pool, prefix_hit_rate,
         )
     };
     if threads <= 1 || cands.len() <= 1 {
@@ -674,6 +689,7 @@ pub fn schedule_with_cache(
         opts.kv_contention,
         cache,
         opts.threads,
+        opts.prefix_hit_rate,
     );
     let mut best_placement: Option<Placement> = None;
     let mut best_groups: Groups = Vec::new();
@@ -745,6 +761,7 @@ pub fn schedule_with_cache(
             opts.kv_contention,
             cache,
             opts.threads,
+            opts.prefix_hit_rate,
         );
         let mut improved = false;
         for (cand, p) in fresh.into_iter().zip(evals) {

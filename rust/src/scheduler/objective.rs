@@ -178,6 +178,7 @@ pub fn mean_slo_base(model: &LlmSpec, task: &TaskProfile) -> f64 {
         arrival: 0.0,
         input_len: task.s_in.round().max(1.0) as usize,
         output_len: task.s_out.round().max(1.0) as usize,
+        prefix: None,
     };
     slo_base(model, &req)
 }

@@ -90,6 +90,7 @@ mod tests {
                 arrival: 0.0,
                 input_len: 2048,
                 output_len: 8,
+                prefix: None,
             });
         }
         let r_quiet = run_colocated(&c, &OPT_30B, &one_replica(&c), &quiet, None);

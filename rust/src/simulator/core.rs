@@ -49,7 +49,9 @@ use std::collections::{BTreeMap, VecDeque};
 
 use crate::cluster::Cluster;
 use crate::costmodel::{CostModel, ReplicaConfig, TaskProfile, MAX_DECODE_BATCH};
-use crate::kvtransfer::{LinkModel, RouteModel, TransferConfig, TransferScheduler};
+use crate::kvtransfer::{
+    EvictRecord, LinkModel, PrefixPool, PrefixTier, RouteModel, TransferConfig, TransferScheduler,
+};
 use crate::model::LlmSpec;
 use crate::scheduler::Placement;
 use crate::telemetry::{Lane, NoopSink, Recorder, TraceEvent, TraceSink};
@@ -62,6 +64,15 @@ use super::{slo_base, PREFILL_TOKEN_BUDGET};
 // ---------------------------------------------------------------------------
 // Configuration
 // ---------------------------------------------------------------------------
+
+/// Fraction of a prefill replica's [`CostModel::token_capacity`] carved out
+/// as its prefix-pool GPU budget when [`SimConfig::prefix_gpu_budget`] is
+/// not set (LMCache-style: the cache shares device memory with live KV).
+pub const PREFIX_POOL_GPU_FRACTION: f64 = 0.2;
+
+/// Host → GPU re-load bandwidth for host-tier prefix hits, bytes/s
+/// (PCIe-class staging path: pinned host memory over a 16 GB/s link).
+pub const HOST_RELOAD_BYTES_PER_S: f64 = 16.0e9;
 
 /// How replicas admit work against their memory.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -89,12 +100,12 @@ pub enum RecordMode {
     /// spans — at O(trace length) memory.
     #[default]
     Full,
-    /// Fold each completion into a [`WindowedAgg`] (sums + log-spaced
-    /// histograms) and keep no per-request records: O(1) memory per
+    /// Fold each completion into a [`WindowedAgg`] (sums + t-digest
+    /// quantile sketches) and keep no per-request records: O(1) memory per
     /// completion, so million-request streaming runs fit in RAM.
-    /// Percentiles and SLO scales become histogram-bucket approximations
-    /// (≤ one bucket width, ~13% relative), and `windowed()` /
-    /// per-request trace spans are unavailable.
+    /// Percentiles and SLO scales become sketch approximations (exact up
+    /// to the centroid cap, ≲2% relative error beyond it), and
+    /// `windowed()` / per-request trace spans are unavailable.
     Windowed,
 }
 
@@ -135,6 +146,13 @@ pub struct SimConfig {
     pub trace_sample_rate: f64,
     /// Ring-buffer capacity of the recorder, in events.
     pub trace_buffer: usize,
+    /// Per-prefill-replica prefix-pool GPU budget in tokens (`None` =
+    /// [`PREFIX_POOL_GPU_FRACTION`] of the replica's token capacity).
+    pub prefix_gpu_budget: Option<f64>,
+    /// Host-tier prefix-pool budget in tokens (`None` =
+    /// [`HOST_BUDGET_FACTOR`](crate::kvtransfer::prefix::HOST_BUDGET_FACTOR)
+    /// × the summed GPU budgets).
+    pub prefix_host_budget: Option<f64>,
 }
 
 impl Default for SimConfig {
@@ -150,6 +168,8 @@ impl Default for SimConfig {
             trace: false,
             trace_sample_rate: 1.0,
             trace_buffer: 1 << 20,
+            prefix_gpu_budget: None,
+            prefix_host_budget: None,
         }
     }
 }
@@ -200,6 +220,14 @@ struct Slot {
     req: Request,
     /// When the prefill finished (≈ TTFT); 0.0 until stamped.
     prefill_done: f64,
+    /// Tokens this request must actually prefill: `input_len`, minus the
+    /// shared-prefix length when the prefix pool served a hit. Memory
+    /// footprints and KV transfer sizes still use the full `input_len`
+    /// (the reused prefix KV occupies the replica all the same).
+    prefill_tokens: usize,
+    /// The prefix pool has been consulted for this request (hit, miss, or
+    /// re-admission after a host-tier re-load) — never look up twice.
+    prefix_resolved: bool,
     /// Retired but not yet popped (retirement is strictly front-to-back).
     dead: bool,
 }
@@ -212,7 +240,14 @@ impl ReqStore {
     /// Admit the next arriving request; returns its engine index.
     fn push(&mut self, req: Request) -> usize {
         let idx = self.base + self.slots.len();
-        self.slots.push_back(Slot { req, prefill_done: 0.0, dead: false });
+        let prefill_tokens = req.input_len;
+        self.slots.push_back(Slot {
+            req,
+            prefill_done: 0.0,
+            prefill_tokens,
+            prefix_resolved: false,
+            dead: false,
+        });
         self.n_arrived += 1;
         idx
     }
@@ -223,6 +258,24 @@ impl ReqStore {
 
     fn prefill_done(&self, r: usize) -> f64 {
         self.slots[r - self.base].prefill_done
+    }
+
+    /// Tokens request `r` actually prefills (suffix-only after a prefix
+    /// hit; full `input_len` otherwise).
+    pub fn prefill_tokens(&self, r: usize) -> usize {
+        self.slots[r - self.base].prefill_tokens
+    }
+
+    fn set_prefill_tokens(&mut self, r: usize, tokens: usize) {
+        self.slots[r - self.base].prefill_tokens = tokens;
+    }
+
+    fn prefix_resolved(&self, r: usize) -> bool {
+        self.slots[r - self.base].prefix_resolved
+    }
+
+    fn set_prefix_resolved(&mut self, r: usize) {
+        self.slots[r - self.base].prefix_resolved = true;
     }
 
     /// Drop `r` from the window (finished or rejected — no event can
@@ -474,7 +527,7 @@ fn admit_chunked(
     };
     while occupied_slots + inflight.len() < max_batch {
         let Some(&r) = queue.front() else { break };
-        let remaining = env.reqs[r].input_len;
+        let remaining = env.reqs.prefill_tokens(r);
         let next_work = remaining.min(per_req) as f64;
         if !inflight.is_empty() && projected(inflight) + next_work > PREFILL_TOKEN_BUDGET {
             break;
@@ -507,7 +560,7 @@ fn chunk_work(inflight: &mut [PendingPrefill], per_req: usize, env: &mut PolicyE
         if env.trace.is_some() {
             // Chunk index of this iteration's work (0 for the first chunk;
             // whole-prompt mode is a single chunk 0).
-            let total = env.reqs[p.req].input_len;
+            let total = env.reqs.prefill_tokens(p.req);
             let chunk = ((total - p.remaining) / per_req.max(1)) as u32;
             let replica = env.replica as u32;
             env.emit(TraceEvent::PrefillChunk { req: p.req as u32, replica, chunk });
@@ -576,9 +629,13 @@ impl ReplicaPolicy for DisaggPrefill {
                 let mut tokens = 0.0;
                 let mut max_len = 0usize;
                 while let Some(&r) = self.queue.front() {
+                    // Compute over the suffix a prefix hit left to prefill;
+                    // reserve the full prompt (reused prefix KV included —
+                    // it occupies this replica either way).
                     let len = env.reqs[r].input_len;
+                    let work = env.reqs.prefill_tokens(r);
                     if !self.batch.is_empty()
-                        && (tokens + len as f64 > PREFILL_TOKEN_BUDGET
+                        && (tokens + work as f64 > PREFILL_TOKEN_BUDGET
                             || self.batch.len() >= self.max_batch)
                     {
                         break;
@@ -589,8 +646,8 @@ impl ReplicaPolicy for DisaggPrefill {
                     }
                     self.queue.pop_front();
                     self.ledger.reserve(len as f64);
-                    tokens += len as f64;
-                    max_len = max_len.max(len);
+                    tokens += work as f64;
+                    max_len = max_len.max(work);
                     self.batch.push(r);
                 }
                 if self.batch.is_empty() {
@@ -945,6 +1002,9 @@ enum Ev {
     Resched(usize),
     /// Switch `i`'s new epoch goes live.
     Activate(usize),
+    /// Request `r`'s host-tier prefix KV finished re-loading to GPU; admit
+    /// it for its suffix prefill.
+    Reload(usize),
 }
 
 /// Telemetry lane of a policy kind (the trace module is
@@ -955,6 +1015,17 @@ fn lane_of(kind: PolicyKind) -> Lane {
         PolicyKind::Decode => Lane::Decode,
         PolicyKind::Colocated => Lane::Colocated,
     }
+}
+
+/// Outcome of consulting the prefix pool at admission time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PrefixRoute {
+    /// GPU hit: admit on this holder (suffix-only prefill).
+    Steer(usize),
+    /// Host hit: admission deferred behind the re-load (`Ev::Reload`).
+    Defer,
+    /// No prefix, already resolved, or a miss: generic routing.
+    Pass,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -981,6 +1052,11 @@ struct Engine<'a, S: TraceSink> {
     /// The KV transfer engine: route table, link reservations, pipelined
     /// chunking, and the link-load ledger (DESIGN.md §11).
     kv: TransferScheduler,
+    /// Cluster-wide prefix KV pool (DESIGN.md §15): per-prefill-replica
+    /// GPU partitions with LRU spill to a host tier.
+    prefix_pool: PrefixPool,
+    /// Reused eviction-record buffer for pool publishes/flushes.
+    evict_buf: Vec<EvictRecord>,
     /// Latency of the burst currently (or last) in flight per replica — the
     /// overlap window layer-wise pipelined transfers may ship into.
     burst_lat: Vec<f64>,
@@ -1071,6 +1147,14 @@ impl<'a, S: TraceSink> Engine<'a, S> {
                     Sizing::PerRequest => MAX_DECODE_BATCH,
                 };
                 let ledger = MemLedger::new(&self.cm, &cfg, self.sim.sizing);
+                // Carve this replica's prefix-pool partition out of its
+                // token capacity before `cfg` moves into the policy box.
+                let px_budget = self
+                    .sim
+                    .prefix_gpu_budget
+                    .unwrap_or_else(|| PREFIX_POOL_GPU_FRACTION * self.cm.token_capacity(&cfg))
+                    .max(0.0);
+                self.prefix_pool.register_replica(idx, px_budget);
                 p_of_group.insert(gi, idx);
                 new_p.push(idx);
                 self.push_replica(
@@ -1110,6 +1194,7 @@ impl<'a, S: TraceSink> Engine<'a, S> {
         if new_p.is_empty() || new_d.is_empty() {
             // Infeasible placement: roll back the partial build (the new
             // entries are all zero-resident, so the running total stands).
+            self.prefix_pool.unregister_from(base);
             self.replicas.truncate(base);
             self.kinds.truncate(base);
             self.weight.truncate(base);
@@ -1285,6 +1370,93 @@ impl<'a, S: TraceSink> Engine<'a, S> {
         self.note_resident(i);
     }
 
+    /// Can GPU-tier prefix holder `p` serve request `r` right now? It must
+    /// be an entry replica of the current epoch and (under per-request
+    /// accounting) able to ever fit the request.
+    fn eligible_prefix_holder(&self, p: usize, r: usize) -> bool {
+        self.active.contains(&p)
+            && (self.sim.sizing != Sizing::PerRequest
+                || self.replicas[p].mem_capacity_tokens() >= self.entry_footprint(p, r))
+    }
+
+    /// Resolve request `r`'s shared prefix against the pool (exactly once
+    /// per request): steer to a GPU-tier holder, defer behind a host-tier
+    /// re-load, or fall through to the generic router.
+    fn resolve_prefix(&mut self, r: usize, now: f64) -> PrefixRoute {
+        let Some(px) = self.store[r].prefix else { return PrefixRoute::Pass };
+        if self.store.prefix_resolved(r) {
+            return PrefixRoute::Pass;
+        }
+        self.store.set_prefix_resolved(r);
+        match self.prefix_pool.lookup(px.id) {
+            Some(PrefixTier::Gpu(holder)) if self.eligible_prefix_holder(holder, r) => {
+                // GPU hit: prefill only the suffix, on the holder.
+                self.stats.prefix_hits += 1;
+                self.stats.prefix_reused_tokens += px.len as f64;
+                self.store.set_prefill_tokens(r, self.store[r].input_len - px.len);
+                self.emit(
+                    now,
+                    TraceEvent::PrefixHit { req: r as u32, tokens: px.len as u32, host: false },
+                );
+                PrefixRoute::Steer(holder)
+            }
+            Some(PrefixTier::Host) => {
+                // Host hit: the suffix discount still applies, but the
+                // prefix KV must re-load host → GPU first; the request
+                // re-enters admission when the re-load completes and the
+                // entry is promoted onto whichever replica serves it.
+                self.stats.prefix_host_hits += 1;
+                self.stats.prefix_reused_tokens += px.len as f64;
+                let bytes = self.cm.kv_bytes(px.len as f64, self.cm.model.n_layers);
+                let reload_s = bytes / HOST_RELOAD_BYTES_PER_S;
+                self.stats.prefix_reload_s += reload_s;
+                self.store.set_prefill_tokens(r, self.store[r].input_len - px.len);
+                self.emit(
+                    now,
+                    TraceEvent::PrefixHit { req: r as u32, tokens: px.len as u32, host: true },
+                );
+                self.q.push(now + reload_s, Ev::Reload(r));
+                PrefixRoute::Defer
+            }
+            _ => {
+                // Full miss (or the GPU holder left the active set and
+                // cannot serve): full prefill, publish at the picked
+                // replica. An ineligible holder's entry stays where it is
+                // (`publish` only bumps recency on GPU-resident entries).
+                self.stats.prefix_misses += 1;
+                self.emit(now, TraceEvent::PrefixMiss { req: r as u32, prefix: px.id as u32 });
+                PrefixRoute::Pass
+            }
+        }
+    }
+
+    /// Publish (or promote, after a host-hit re-load) request `r`'s shared
+    /// prefix onto prefill replica `i`'s pool partition; spills and
+    /// evictions made to fit it are traced via [`Engine::note_evictions`].
+    fn publish_prefix(&mut self, i: usize, r: usize, now: f64) {
+        let Some(px) = self.store[r].prefix else { return };
+        let mut out = std::mem::take(&mut self.evict_buf);
+        out.clear();
+        self.prefix_pool.publish(px.id, px.len as f64, i, &mut out);
+        self.note_evictions(now, &mut out);
+        self.evict_buf = out;
+    }
+
+    /// Trace the pool's spill/eviction records (cumulative token totals
+    /// live on the pool itself and land in [`SimStats`] at end of run).
+    fn note_evictions(&mut self, now: f64, out: &mut Vec<EvictRecord>) {
+        for ev in out.drain(..) {
+            self.emit(
+                now,
+                TraceEvent::PrefixEvict {
+                    prefix: ev.prefix as u32,
+                    tokens: ev.tokens as u32,
+                    to_host: ev.to_host,
+                },
+            );
+        }
+    }
+
     /// Route an arrived (or re-flushed) request to an entry replica, or
     /// hold it through a migration blackout.
     fn admit(&mut self, r: usize, now: f64) {
@@ -1292,6 +1464,23 @@ impl<'a, S: TraceSink> Engine<'a, S> {
             self.emit(now, TraceEvent::Hold { req: r as u32 });
             self.holding.push(r);
             return;
+        }
+        // Cache-aware routing (DESIGN.md §15): a GPU-tier prefix hit
+        // overrides the generic router and steers to the holder; a
+        // host-tier hit defers admission behind the re-load (the request
+        // re-enters via `Ev::Reload` with its prefix already resolved).
+        match self.resolve_prefix(r, now) {
+            PrefixRoute::Steer(holder) => {
+                if self.router == Router::FlowWeighted {
+                    self.assigned[holder] += 1.0;
+                }
+                self.emit(now, TraceEvent::Admit { req: r as u32, replica: holder as u32 });
+                self.replicas[holder].admit(r);
+                self.try_start(holder, now);
+                return;
+            }
+            PrefixRoute::Defer => return,
+            PrefixRoute::Pass => {}
         }
         let i = if self.sim.sizing == Sizing::PerRequest {
             let mut fitting = std::mem::take(&mut self.scratch);
@@ -1321,6 +1510,13 @@ impl<'a, S: TraceSink> Engine<'a, S> {
             self.assigned[i] += 1.0;
         }
         self.emit(now, TraceEvent::Admit { req: r as u32, replica: i as u32 });
+        // Publish-at-admit: a missed (or host-promoted) prefix becomes
+        // GPU-resident on the serving prefill replica as soon as the
+        // request is queued there — later queued requests for the same
+        // prefix hit it (FIFO order keeps the reuse causally sound).
+        if self.kinds[i] == PolicyKind::Prefill {
+            self.publish_prefix(i, r, now);
+        }
         self.replicas[i].admit(r);
         self.try_start(i, now);
     }
@@ -1474,6 +1670,18 @@ impl<'a, S: TraceSink> Engine<'a, S> {
                     pulled.sort_unstable();
                     self.holding.extend(pulled.drain(..));
                     self.scratch = pulled;
+                    // A quiesced prefill replica's GPU prefix cache
+                    // flushes to the host tier (the device is being
+                    // repurposed; host-tier KV survives the migration).
+                    let mut evs = std::mem::take(&mut self.evict_buf);
+                    evs.clear();
+                    for &p in &old {
+                        if self.kinds[p] == PolicyKind::Prefill {
+                            self.prefix_pool.flush_replica(p, &mut evs);
+                        }
+                    }
+                    self.note_evictions(now, &mut evs);
+                    self.evict_buf = evs;
                     self.quiesced[i] = old;
                 }
                 Ev::Activate(i) => {
@@ -1549,6 +1757,9 @@ impl<'a, S: TraceSink> Engine<'a, S> {
                     self.replicas[d].deliver_kv(r);
                     self.try_start(d, now);
                 }
+                // Host-tier prefix KV re-loaded: admit for suffix prefill
+                // (the prefix is already resolved, so this cannot recurse).
+                Ev::Reload(r) => self.admit(r, now),
             }
         }
     }
@@ -1664,6 +1875,8 @@ fn simulate_sink<S: TraceSink>(
             chunk_layers: cfg.kv_chunk_layers,
             n_layers: model.n_layers,
         }),
+        prefix_pool: PrefixPool::new(cfg.prefix_host_budget),
+        evict_buf: Vec::new(),
         burst_lat: Vec::new(),
         active: Vec::new(),
         router: Router::FlowWeighted,
@@ -1721,6 +1934,13 @@ fn simulate_sink<S: TraceSink>(
     eng.stats.kv_bytes = kv_summary.bytes;
     eng.stats.kv_max_nic_util = kv_summary.max_nic_util;
     eng.stats.kv_wait_hist = kv_summary.wait_hist;
+    // Prefix-pool ledger: cumulative publish/spill/evict totals plus the
+    // end-of-run residency split (hit/miss counters accrued live).
+    eng.stats.prefix_published_tokens = eng.prefix_pool.published_tokens;
+    eng.stats.prefix_spilled_tokens = eng.prefix_pool.spilled_tokens;
+    eng.stats.prefix_evicted_tokens = eng.prefix_pool.evicted_tokens;
+    eng.stats.prefix_gpu_tokens = eng.prefix_pool.gpu_resident();
+    eng.stats.prefix_host_tokens = eng.prefix_pool.host_resident();
     let link_loads = eng.kv.ledger().loads();
     let mut rep = match eng.agg.take() {
         Some(a) => SimReport::from_windowed(a),

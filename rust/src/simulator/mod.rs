@@ -66,8 +66,8 @@ mod tests {
 
     #[test]
     fn slo_base_scales_with_lengths() {
-        let short = Request { id: 0, arrival: 0.0, input_len: 128, output_len: 16 };
-        let long = Request { id: 1, arrival: 0.0, input_len: 1024, output_len: 256 };
+        let short = Request { id: 0, arrival: 0.0, input_len: 128, output_len: 16, prefix: None };
+        let long = Request { id: 1, arrival: 0.0, input_len: 1024, output_len: 256, prefix: None };
         let a = slo_base(&LLAMA2_70B, &short);
         let b = slo_base(&LLAMA2_70B, &long);
         assert!(b > a * 5.0, "{a} vs {b}");

@@ -222,6 +222,38 @@ pub fn chrome_trace(log: &TraceLog) -> Json {
                     json::obj(vec![("req", json::num(req as f64))]),
                 )
             }
+            TraceEvent::PrefixHit { req, tokens, host } => instant(
+                "prefix-hit",
+                PID_REPLICAS,
+                engine_tid,
+                t,
+                json::obj(vec![
+                    ("req", json::num(req as f64)),
+                    ("tokens", json::num(tokens as f64)),
+                    ("host", Json::Bool(host)),
+                ]),
+            ),
+            TraceEvent::PrefixMiss { req, prefix } => instant(
+                "prefix-miss",
+                PID_REPLICAS,
+                engine_tid,
+                t,
+                json::obj(vec![
+                    ("req", json::num(req as f64)),
+                    ("prefix", json::num(prefix as f64)),
+                ]),
+            ),
+            TraceEvent::PrefixEvict { prefix, tokens, to_host } => instant(
+                "prefix-evict",
+                PID_REPLICAS,
+                engine_tid,
+                t,
+                json::obj(vec![
+                    ("prefix", json::num(prefix as f64)),
+                    ("tokens", json::num(tokens as f64)),
+                    ("to_host", Json::Bool(to_host)),
+                ]),
+            ),
         };
         events.push(j);
     }
@@ -262,6 +294,9 @@ pub fn prometheus_dump(log: &TraceLog, window_s: f64) -> String {
     let mut kv_wait = vec![0.0f64; n_win];
     let mut kv_bytes = vec![0.0f64; n_win];
     let mut n_events = vec![0usize; n_win];
+    let mut px_hits = vec![0usize; n_win];
+    let mut px_misses = vec![0usize; n_win];
+    let mut px_evicts = vec![0usize; n_win];
     for s in &log.events {
         let w = ((s.t / window_s).floor() as usize).min(n_win - 1);
         n_events[w] += 1;
@@ -275,6 +310,9 @@ pub fn prometheus_dump(log: &TraceLog, window_s: f64) -> String {
                 kv_wait[w] += wait_s;
                 kv_bytes[w] += bytes;
             }
+            TraceEvent::PrefixHit { .. } => px_hits[w] += 1,
+            TraceEvent::PrefixMiss { .. } => px_misses[w] += 1,
+            TraceEvent::PrefixEvict { .. } => px_evicts[w] += 1,
             _ => {}
         }
     }
@@ -309,6 +347,21 @@ pub fn prometheus_dump(log: &TraceLog, window_s: f64) -> String {
         "hexgen2_kv_bytes_total",
         "KV bytes handed to the transfer engine (by enqueue time).",
         &|w| format!("{}", kv_bytes[w]),
+    );
+    counter(
+        "hexgen2_prefix_hits_total",
+        "Prefix-pool hits (GPU + host tier) in the window.",
+        &|w| px_hits[w].to_string(),
+    );
+    counter(
+        "hexgen2_prefix_misses_total",
+        "Prefix-pool misses (full prefill + publish) in the window.",
+        &|w| px_misses[w].to_string(),
+    );
+    counter(
+        "hexgen2_prefix_evictions_total",
+        "Prefix-pool spills/evictions in the window.",
+        &|w| px_evicts[w].to_string(),
     );
     counter("hexgen2_trace_events_total", "Trace events recorded in the window.", &|w| {
         n_events[w].to_string()
@@ -346,6 +399,18 @@ pub struct DerivedMetrics {
     pub kv_wait_total_s: f64,
     pub mem_stalls: usize,
     pub rejects: usize,
+    /// Prefix-pool GPU hits (`PrefixHit` with `host == false`) — conserved
+    /// against `SimStats::prefix_hits` at sample 1.0.
+    pub prefix_hits: usize,
+    /// Prefix-pool host-tier hits (`PrefixHit` with `host == true`).
+    pub prefix_host_hits: usize,
+    /// Prefix-pool misses.
+    pub prefix_misses: usize,
+    /// Tokens spilled GPU → host (`PrefixEvict` with `to_host == true`),
+    /// summed in event order.
+    pub prefix_spilled_tokens: f64,
+    /// Tokens dropped from the host tier.
+    pub prefix_evicted_tokens: f64,
 }
 
 /// Recompute the simulator's headline metrics from a trace alone. With a
@@ -380,6 +445,21 @@ pub fn derive_metrics(log: &TraceLog) -> DerivedMetrics {
             }
             TraceEvent::MemStall { .. } => m.mem_stalls += 1,
             TraceEvent::Reject { .. } => m.rejects += 1,
+            TraceEvent::PrefixHit { host, .. } => {
+                if host {
+                    m.prefix_host_hits += 1;
+                } else {
+                    m.prefix_hits += 1;
+                }
+            }
+            TraceEvent::PrefixMiss { .. } => m.prefix_misses += 1,
+            TraceEvent::PrefixEvict { tokens, to_host, .. } => {
+                if to_host {
+                    m.prefix_spilled_tokens += tokens as f64;
+                } else {
+                    m.prefix_evicted_tokens += tokens as f64;
+                }
+            }
             _ => {}
         }
     }

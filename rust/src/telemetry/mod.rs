@@ -98,6 +98,17 @@ pub enum TraceEvent {
     Quiesce { switch: u32 },
     /// Switch `switch` activated (`ok`) or rolled back as infeasible.
     Activate { switch: u32, ok: bool },
+    /// Prefix-pool hit (DESIGN.md §15): `tokens` of prefill skipped.
+    /// `host: false` → GPU hit, request steered to the holder (the
+    /// `Admit` that follows names it); `host: true` → the prefix KV
+    /// re-loads from the host tier first.
+    PrefixHit { req: u32, tokens: u32, host: bool },
+    /// Request declared prefix `prefix` but the pool could not serve it:
+    /// full prefill, then the entry replica publishes.
+    PrefixMiss { req: u32, prefix: u32 },
+    /// Pool made room: prefix spilled GPU → host (`to_host`) or dropped
+    /// from the host tier.
+    PrefixEvict { prefix: u32, tokens: u32, to_host: bool },
 }
 
 impl TraceEvent {
@@ -116,11 +127,14 @@ impl TraceEvent {
             | TraceEvent::KvXfer { req, .. }
             | TraceEvent::KvDone { req, .. }
             | TraceEvent::DecodeJoin { req, .. }
-            | TraceEvent::Finish { req, .. } => Some(req),
+            | TraceEvent::Finish { req, .. }
+            | TraceEvent::PrefixHit { req, .. }
+            | TraceEvent::PrefixMiss { req, .. } => Some(req),
             TraceEvent::MemStall { .. }
             | TraceEvent::Burst { .. }
             | TraceEvent::Quiesce { .. }
-            | TraceEvent::Activate { .. } => None,
+            | TraceEvent::Activate { .. }
+            | TraceEvent::PrefixEvict { .. } => None,
         }
     }
 }

@@ -1,6 +1,8 @@
 //! LLM inference workloads: the paper's four offline workload classes
-//! (HPLD / HPHD / LPHD / LPLD, §5.1) and the online Azure-conversation-like
-//! trace (Fig. 5), with Poisson arrivals.
+//! (HPLD / HPHD / LPHD / LPLD, §5.1), the online Azure-conversation-like
+//! trace (Fig. 5) with Poisson arrivals, and the shared-prefix classes
+//! (PREFIX_CHAT / RAG / AGENT, DESIGN.md §15) whose requests re-send
+//! Zipf-distributed hot prefixes the cluster-wide prefix pool can reuse.
 //!
 //! Thresholds follow the paper: prefill > 512 tokens is "heavy"; decode
 //! > 128 tokens is "heavy" (after Hu et al., 2024).
@@ -12,6 +14,18 @@ use crate::util::rng::Rng;
 pub const HEAVY_PREFILL_THRESHOLD: usize = 512;
 pub const HEAVY_DECODE_THRESHOLD: usize = 128;
 
+/// Shared-prefix declaration carried by a request (DESIGN.md §15): the
+/// leading `len` tokens of `input_len` are the prefix identified by `id`
+/// (system prompt, hot RAG document, re-sent agent history). `len` is a
+/// deterministic function of `id` ([`PrefixParams::prefix_len`]) so every
+/// request agrees on a prefix's size — the pool's token accounting relies
+/// on that.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Prefix {
+    pub id: usize,
+    pub len: usize,
+}
+
 /// One inference request.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Request {
@@ -20,6 +34,10 @@ pub struct Request {
     pub arrival: f64,
     pub input_len: usize,
     pub output_len: usize,
+    /// Shared prefix this request re-sends, if any. `input_len` always
+    /// *includes* the prefix tokens; this field only marks the reusable
+    /// span for the prefix pool.
+    pub prefix: Option<Prefix>,
 }
 
 /// The paper's workload classes.
@@ -40,10 +58,73 @@ pub enum WorkloadKind {
     /// tokens): the stress case for per-request KV admission, where mean
     /// lengths say nothing about memory demand.
     HeavyTail,
+    /// System-prompt-heavy chat: a small set of hot system prompts
+    /// (prefixes) shared across conversations, long answers.
+    PrefixChat,
+    /// Retrieval-augmented generation: a larger catalogue of hot documents
+    /// prepended to short questions, short extractive answers.
+    Rag,
+    /// Agent loops re-sending accumulated history each turn: near-certain
+    /// prefix reuse, short tool-call outputs.
+    Agent,
 }
 
 pub const OFFLINE_KINDS: [WorkloadKind; 4] =
     [WorkloadKind::Hpld, WorkloadKind::Hphd, WorkloadKind::Lphd, WorkloadKind::Lpld];
+
+/// Shared-prefix population parameters of a prefix workload class
+/// (DESIGN.md §15). Prefix ids are drawn Zipf(`zipf_s`) over
+/// `n_prefixes`; a request declares its prefix reusable with probability
+/// `share` (the `--prefix-share` override replaces this). Prefix lengths
+/// are deterministic in the id so every request agrees on a prefix's
+/// size.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefixParams {
+    pub n_prefixes: usize,
+    pub zipf_s: f64,
+    pub share: f64,
+    pub len_base: usize,
+    pub len_step: usize,
+}
+
+impl PrefixParams {
+    /// Length in tokens of prefix `id` — a pure function of the id.
+    pub fn prefix_len(&self, id: usize) -> usize {
+        self.len_base + (id % 8) * self.len_step
+    }
+
+    /// Draw a prefix id Zipf-distributed over the population. Consumes
+    /// exactly one uniform draw (inverse-CDF walk over the unnormalized
+    /// weights), independent of the outcome.
+    pub fn sample_id(&self, rng: &mut Rng) -> usize {
+        let n = self.n_prefixes.max(1);
+        let mut total = 0.0;
+        for i in 0..n {
+            total += ((i + 1) as f64).powf(-self.zipf_s);
+        }
+        let mut target = rng.f64() * total;
+        for i in 0..n {
+            let w = ((i + 1) as f64).powf(-self.zipf_s);
+            if target < w {
+                return i;
+            }
+            target -= w;
+        }
+        n - 1
+    }
+
+    /// Zipf-weighted mean prefix length in tokens.
+    pub fn mean_prefix_len(&self) -> f64 {
+        let n = self.n_prefixes.max(1);
+        let (mut num, mut den) = (0.0, 0.0);
+        for i in 0..n {
+            let w = ((i + 1) as f64).powf(-self.zipf_s);
+            num += w * self.prefix_len(i) as f64;
+            den += w;
+        }
+        num / den
+    }
+}
 
 impl WorkloadKind {
     pub fn name(self) -> &'static str {
@@ -54,6 +135,9 @@ impl WorkloadKind {
             WorkloadKind::Lpld => "LPLD",
             WorkloadKind::Online => "Online",
             WorkloadKind::HeavyTail => "HEAVY_TAIL",
+            WorkloadKind::PrefixChat => "PREFIX_CHAT",
+            WorkloadKind::Rag => "RAG",
+            WorkloadKind::Agent => "AGENT",
         }
     }
 
@@ -65,11 +149,16 @@ impl WorkloadKind {
             "LPLD" => Some(WorkloadKind::Lpld),
             "ONLINE" => Some(WorkloadKind::Online),
             "HEAVY_TAIL" | "HEAVY-TAIL" | "HEAVYTAIL" => Some(WorkloadKind::HeavyTail),
+            "PREFIX_CHAT" | "PREFIX-CHAT" | "PREFIXCHAT" => Some(WorkloadKind::PrefixChat),
+            "RAG" => Some(WorkloadKind::Rag),
+            "AGENT" => Some(WorkloadKind::Agent),
             _ => None,
         }
     }
 
-    /// Sample (input_len, output_len) for this class.
+    /// Sample (input_len, output_len) for this class. For prefix classes
+    /// this is the *suffix* (the unique part of the prompt) — the shared
+    /// prefix is added on top during trace generation.
     pub fn sample_lengths(self, rng: &mut Rng) -> (usize, usize) {
         match self {
             WorkloadKind::Hpld => (azure::sample_heavy_prefill(rng), azure::sample_light_decode(rng)),
@@ -78,11 +167,49 @@ impl WorkloadKind {
             WorkloadKind::Lpld => (azure::sample_light_prefill(rng), azure::sample_light_decode(rng)),
             WorkloadKind::Online => azure::sample_conversation(rng),
             WorkloadKind::HeavyTail => azure::sample_heavy_tail(rng),
+            WorkloadKind::PrefixChat => {
+                (azure::sample_light_prefill(rng), azure::sample_heavy_decode(rng))
+            }
+            WorkloadKind::Rag => (azure::sample_light_prefill(rng), azure::sample_light_decode(rng)),
+            WorkloadKind::Agent => {
+                (azure::sample_light_prefill(rng), azure::sample_light_decode(rng))
+            }
+        }
+    }
+
+    /// Shared-prefix population of this class, if it is a prefix class.
+    pub fn prefix_params(self) -> Option<PrefixParams> {
+        match self {
+            WorkloadKind::PrefixChat => Some(PrefixParams {
+                n_prefixes: 16,
+                zipf_s: 1.2,
+                share: 0.9,
+                len_base: 512,
+                len_step: 64,
+            }),
+            WorkloadKind::Rag => Some(PrefixParams {
+                n_prefixes: 64,
+                zipf_s: 1.0,
+                share: 0.7,
+                len_base: 1024,
+                len_step: 128,
+            }),
+            WorkloadKind::Agent => Some(PrefixParams {
+                n_prefixes: 24,
+                zipf_s: 1.1,
+                share: 0.95,
+                len_base: 768,
+                len_step: 96,
+            }),
+            _ => None,
         }
     }
 
     /// Representative task profile (mean lengths) used by the scheduler to
-    /// size capacities for this workload class.
+    /// size capacities for this workload class. Prefix classes include the
+    /// mean shared-prefix tokens — the planner's demand model sees the
+    /// full prompt; the expected *reused* fraction is discounted
+    /// separately via [`WorkloadKind::expected_prefix_savings`].
     pub fn mean_lengths(self) -> (f64, f64) {
         match self {
             WorkloadKind::Hpld => (1024.0, 64.0),
@@ -92,6 +219,36 @@ impl WorkloadKind {
             WorkloadKind::Online => (1020.0, 211.0),
             // Means alone badly undersell this class — that is the point.
             WorkloadKind::HeavyTail => (1100.0, 180.0),
+            WorkloadKind::PrefixChat | WorkloadKind::Rag | WorkloadKind::Agent => {
+                let (suffix, out) = match self {
+                    WorkloadKind::Rag | WorkloadKind::Agent => (256.0, 64.0),
+                    _ => (256.0, 256.0),
+                };
+                let px = match self.prefix_params() {
+                    Some(pp) => pp.mean_prefix_len(),
+                    None => 0.0,
+                };
+                (suffix + px, out)
+            }
+        }
+    }
+
+    /// Expected fraction of cluster prefill work a warm prefix pool
+    /// removes for this class: declared-share × (mean prefix tokens /
+    /// mean prompt tokens). This is what `--prefix-hit-aware` feeds the
+    /// planner as `ScheduleOptions::prefix_hit_rate`. Zero for classes
+    /// without prefixes.
+    pub fn expected_prefix_savings(self, share_override: Option<f64>) -> f64 {
+        match self.prefix_params() {
+            None => 0.0,
+            Some(pp) => {
+                let share = share_override.unwrap_or(pp.share).clamp(0.0, 1.0);
+                let (s_in, _) = self.mean_lengths();
+                if s_in <= 0.0 {
+                    return 0.0;
+                }
+                (share * pp.mean_prefix_len() / s_in).clamp(0.0, 0.95)
+            }
         }
     }
 }
@@ -110,6 +267,14 @@ impl WorkloadKind {
 pub struct TraceSource {
     kind: WorkloadKind,
     inner: SourceInner,
+    /// `--prefix-share` override: replaces the class-intrinsic declared
+    /// share. Generation consumes a *fixed* number of RNG draws per
+    /// request regardless of this value, so arrivals and lengths are
+    /// bit-identical across a share sweep ("equal load").
+    prefix_share: Option<f64>,
+    /// Test hook: replace the class-intrinsic prefix population (e.g. to
+    /// sweep Zipf skew at fixed lengths).
+    prefix_params: Option<PrefixParams>,
 }
 
 enum SourceInner {
@@ -123,7 +288,12 @@ impl TraceSource {
     /// Streaming equivalent of [`Trace::offline`].
     pub fn offline(kind: WorkloadKind, n: usize, seed: u64) -> TraceSource {
         let rng = Rng::new(seed ^ 0x0FF1CE);
-        TraceSource { kind, inner: SourceInner::Offline { rng, kind, remaining: n, next_id: 0 } }
+        TraceSource {
+            kind,
+            inner: SourceInner::Offline { rng, kind, remaining: n, next_id: 0 },
+            prefix_share: None,
+            prefix_params: None,
+        }
     }
 
     /// Streaming equivalent of [`Trace::online`].
@@ -132,6 +302,8 @@ impl TraceSource {
         TraceSource {
             kind,
             inner: SourceInner::Online { rng, kind, rate, duration, t: 0.0, next_id: 0 },
+            prefix_share: None,
+            prefix_params: None,
         }
     }
 
@@ -155,6 +327,8 @@ impl TraceSource {
                 t: 0.0,
                 next_id: 0,
             },
+            prefix_share: None,
+            prefix_params: None,
         }
     }
 
@@ -165,11 +339,53 @@ impl TraceSource {
         TraceSource {
             kind: trace.kind,
             inner: SourceInner::Materialized { requests: trace.requests.clone().into_iter() },
+            prefix_share: None,
+            prefix_params: None,
         }
     }
 
     pub fn kind(&self) -> WorkloadKind {
         self.kind
+    }
+
+    /// Override the declared prefix share (`--prefix-share`). Clamped to
+    /// [0, 1]; 0 yields a trace whose requests carry no `prefix` at all
+    /// while arrivals and lengths stay bit-identical to any other share.
+    /// No effect on classes without prefixes or on `replay` sources.
+    pub fn with_prefix_share(mut self, share: f64) -> TraceSource {
+        self.prefix_share = Some(share.clamp(0.0, 1.0));
+        self
+    }
+
+    /// Override the prefix population (test hook, e.g. Zipf-skew sweeps).
+    pub fn with_prefix_params(mut self, params: PrefixParams) -> TraceSource {
+        self.prefix_params = Some(params);
+        self
+    }
+}
+
+/// Attach the shared prefix to a freshly sampled request. Always consumes
+/// exactly two uniform draws for prefix classes (keep?, which id?) and
+/// none otherwise, so a share sweep replays identical arrivals/lengths.
+/// The prefix tokens are part of `input_len` whether or not the request
+/// declares them reusable.
+fn gen_prefix(
+    rng: &mut Rng,
+    kind: WorkloadKind,
+    share_override: Option<f64>,
+    params_override: Option<PrefixParams>,
+    input_len: &mut usize,
+) -> Option<Prefix> {
+    let pp = params_override.or_else(|| kind.prefix_params())?;
+    let share = share_override.unwrap_or(pp.share).clamp(0.0, 1.0);
+    let keep = rng.f64() < share;
+    let id = pp.sample_id(rng);
+    let len = pp.prefix_len(id);
+    *input_len += len;
+    if keep {
+        Some(Prefix { id, len })
+    } else {
+        None
     }
 }
 
@@ -177,16 +393,18 @@ impl Iterator for TraceSource {
     type Item = Request;
 
     fn next(&mut self) -> Option<Request> {
+        let (share, params) = (self.prefix_share, self.prefix_params);
         match &mut self.inner {
             SourceInner::Offline { rng, kind, remaining, next_id } => {
                 if *remaining == 0 {
                     return None;
                 }
                 *remaining -= 1;
-                let (input_len, output_len) = kind.sample_lengths(rng);
+                let (mut input_len, output_len) = kind.sample_lengths(rng);
+                let prefix = gen_prefix(rng, *kind, share, params, &mut input_len);
                 let id = *next_id;
                 *next_id += 1;
-                Some(Request { id, arrival: 0.0, input_len, output_len })
+                Some(Request { id, arrival: 0.0, input_len, output_len, prefix })
             }
             SourceInner::Online { rng, kind, rate, duration, t, next_id } => {
                 let prev = *t;
@@ -197,10 +415,11 @@ impl Iterator for TraceSource {
                 if *t >= *duration {
                     return None;
                 }
-                let (input_len, output_len) = kind.sample_lengths(rng);
+                let (mut input_len, output_len) = kind.sample_lengths(rng);
+                let prefix = gen_prefix(rng, *kind, share, params, &mut input_len);
                 let id = *next_id;
                 *next_id += 1;
-                Some(Request { id, arrival: *t, input_len, output_len })
+                Some(Request { id, arrival: *t, input_len, output_len, prefix })
             }
             SourceInner::Phases { rng, phases, idx, t0, t, next_id } => {
                 loop {
@@ -221,10 +440,11 @@ impl Iterator for TraceSource {
                         *idx += 1;
                         continue;
                     }
-                    let (input_len, output_len) = kind.sample_lengths(rng);
+                    let (mut input_len, output_len) = kind.sample_lengths(rng);
+                    let prefix = gen_prefix(rng, kind, share, params, &mut input_len);
                     let id = *next_id;
                     *next_id += 1;
-                    return Some(Request { id, arrival: *t, input_len, output_len });
+                    return Some(Request { id, arrival: *t, input_len, output_len, prefix });
                 }
             }
             SourceInner::Materialized { requests } => requests.next(),
@@ -284,6 +504,13 @@ impl Trace {
             out.push(acc);
         }
         out
+    }
+
+    /// Materialize any configured source (the path `--prefix-share` takes:
+    /// `TraceSource::offline(..).with_prefix_share(s)` → `Trace`).
+    pub fn from_source(src: TraceSource) -> Trace {
+        let kind = src.kind();
+        Trace { kind, requests: src.collect() }
     }
 
     pub fn total_output_tokens(&self) -> usize {
@@ -437,6 +664,75 @@ mod tests {
         assert_eq!(WorkloadKind::from_name("hpld"), Some(WorkloadKind::Hpld));
         // CLI alias: `--workload heavy_tail`.
         assert_eq!(WorkloadKind::from_name("heavy_tail"), Some(WorkloadKind::HeavyTail));
+    }
+
+    #[test]
+    fn prefix_kinds_roundtrip_and_have_params() {
+        for k in [WorkloadKind::PrefixChat, WorkloadKind::Rag, WorkloadKind::Agent] {
+            assert_eq!(WorkloadKind::from_name(k.name()), Some(k));
+            let pp = k.prefix_params().expect("prefix class has params");
+            assert!(pp.n_prefixes > 0 && pp.share > 0.0 && pp.share <= 1.0);
+            // mean_lengths includes the mean prefix.
+            let (s_in, _) = k.mean_lengths();
+            assert!(s_in > pp.mean_prefix_len());
+            let f = k.expected_prefix_savings(None);
+            assert!(f > 0.0 && f < 1.0, "{f}");
+        }
+        assert_eq!(WorkloadKind::from_name("prefix_chat"), Some(WorkloadKind::PrefixChat));
+        assert_eq!(WorkloadKind::Hpld.expected_prefix_savings(None), 0.0);
+        assert_eq!(WorkloadKind::Hpld.prefix_params(), None);
+    }
+
+    #[test]
+    fn prefix_share_sweep_keeps_load_identical() {
+        // Fixed draw count: only the `prefix` field may differ across
+        // shares — arrivals, lengths, and ids are bit-identical.
+        let full = Trace::from_source(
+            TraceSource::online(WorkloadKind::PrefixChat, 4.0, 50.0, 7).with_prefix_share(1.0),
+        );
+        let none = Trace::from_source(
+            TraceSource::online(WorkloadKind::PrefixChat, 4.0, 50.0, 7).with_prefix_share(0.0),
+        );
+        let half = Trace::from_source(
+            TraceSource::online(WorkloadKind::PrefixChat, 4.0, 50.0, 7).with_prefix_share(0.5),
+        );
+        assert_eq!(full.requests.len(), none.requests.len());
+        assert_eq!(full.requests.len(), half.requests.len());
+        for ((a, b), c) in full.requests.iter().zip(&none.requests).zip(&half.requests) {
+            assert_eq!((a.arrival, a.input_len, a.output_len), (b.arrival, b.input_len, b.output_len));
+            assert_eq!((a.arrival, a.input_len, a.output_len), (c.arrival, c.input_len, c.output_len));
+            assert!(a.prefix.is_some(), "share 1.0 declares every prefix");
+            assert!(b.prefix.is_none(), "share 0.0 declares none");
+            if let Some(px) = a.prefix {
+                assert!(px.len < a.input_len, "prefix is a strict prefix of the prompt");
+                let pp = WorkloadKind::PrefixChat.prefix_params().expect("params");
+                assert_eq!(px.len, pp.prefix_len(px.id));
+                assert!(px.id < pp.n_prefixes);
+            }
+        }
+        let kept = half.requests.iter().filter(|r| r.prefix.is_some()).count();
+        assert!(kept > 0 && kept < half.requests.len(), "{kept}");
+    }
+
+    #[test]
+    fn prefix_default_share_and_zipf_skew() {
+        // Intrinsic share applies without an override.
+        let t = Trace::offline(WorkloadKind::Agent, 400, 5);
+        let declared = t.requests.iter().filter(|r| r.prefix.is_some()).count() as f64;
+        assert!((declared / 400.0 - 0.95).abs() < 0.05, "{declared}");
+        // Zipf skew concentrates mass on low ids: id 0 strictly most common.
+        let mut counts = std::collections::BTreeMap::new();
+        for r in &t.requests {
+            if let Some(px) = r.prefix {
+                *counts.entry(px.id).or_insert(0usize) += 1;
+            }
+        }
+        let c0 = counts.get(&0).copied().unwrap_or(0);
+        for (&id, &c) in &counts {
+            if id != 0 {
+                assert!(c0 > c, "id 0 ({c0}) should dominate id {id} ({c})");
+            }
+        }
     }
 
     #[test]

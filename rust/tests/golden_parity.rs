@@ -747,6 +747,35 @@ fn kv_engine_flow_proportional_parity_explicit_config() {
 }
 
 #[test]
+fn prefix_share_zero_matches_legacy_engine_bit_for_bit() {
+    // ISSUE 9 guard: at `--prefix-share 0` a prefix class degrades to a
+    // plain trace (no request declares a prefix), and the pool-wired
+    // engine must reproduce the pre-pool timelines exactly — pinned here
+    // against the frozen pre-refactor reference, which predates the pool
+    // entirely and ignores the `prefix` field.
+    use hexgen2::workload::TraceSource;
+    let c = settings::case_study();
+    let p = schedule(&c, WorkloadKind::Lphd, 4, 0);
+    let cfg = legacy_compatible_cfg();
+    for (kind, n, seed) in [
+        (WorkloadKind::Agent, 60, 3),
+        (WorkloadKind::Rag, 50, 9),
+        (WorkloadKind::PrefixChat, 40, 5),
+    ] {
+        let trace = Trace::from_source(TraceSource::offline(kind, n, seed).with_prefix_share(0.0));
+        assert!(
+            trace.requests.iter().all(|r| r.prefix.is_none()),
+            "share 0 still declared a prefix"
+        );
+        let old = legacy::run_disaggregated(&c, &OPT_30B, &p, &trace);
+        let new = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &cfg);
+        assert!(!old.records.is_empty(), "legacy reference produced nothing");
+        assert_reports_match(&new, &old, "share-0 prefix class disagg");
+        assert_eq!(new.stats.prefix_misses, 0, "share 0 consulted the pool");
+    }
+}
+
+#[test]
 fn colocated_parity_plain_and_chunked() {
     use hexgen2::costmodel::ReplicaConfig;
     let c = settings::homogeneous_small();

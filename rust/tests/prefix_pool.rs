@@ -1,0 +1,270 @@
+//! Cluster-wide prefix KV pool contracts (DESIGN.md §15): token
+//! conservation through the tiered pool, equal-load share sweeps (share 0
+//! never touches the pool and replays bit-identical arrivals), Zipf-skew
+//! monotonicity (skew → hit rate → TTFT), the cache-aware planner's
+//! decode-heavy partition shift with thread-count determinism, and
+//! t-digest percentile parity between `RecordMode::Windowed` and full
+//! per-request records at 50k-completion scale.
+
+use hexgen2::cluster::settings;
+use hexgen2::model::OPT_30B;
+use hexgen2::scheduler::{self, Placement, ScheduleOptions};
+use hexgen2::simulator::metrics::{RequestRecord, SimReport, WindowedAgg};
+use hexgen2::simulator::{run_disaggregated_cfg, RecordMode, SimConfig};
+use hexgen2::util::rng::Rng;
+use hexgen2::workload::{PrefixParams, Trace, TraceSource, WorkloadKind};
+
+fn schedule(kind: WorkloadKind, seed: u64) -> Placement {
+    let mut opts = ScheduleOptions::new(kind);
+    opts.max_rounds = 4;
+    opts.force_k = Some(4);
+    opts.seed = seed;
+    scheduler::schedule(&settings::case_study(), &OPT_30B, &opts).expect("schedules").placement
+}
+
+fn decode_device_share(p: &Placement) -> f64 {
+    let total: usize = p.groups.iter().map(|g| g.devices.len()).sum();
+    let dec: usize = p.groups.iter().filter(|g| !g.is_prefill).map(|g| g.devices.len()).sum();
+    dec as f64 / total.max(1) as f64
+}
+
+#[test]
+fn pool_conserves_tokens_and_resolves_every_prefixed_request() {
+    // Every prefix-declaring request is resolved against the pool exactly
+    // once (hit, host hit, or miss), and every token ever published is
+    // either still resident (GPU or host tier) or was dropped from the
+    // host tier — the ledger never mints or leaks KV.
+    let c = settings::case_study();
+    let p = schedule(WorkloadKind::Agent, 0);
+    let trace = Trace::offline(WorkloadKind::Agent, 160, 9);
+    let prefixed = trace.requests.iter().filter(|r| r.prefix.is_some()).count();
+    assert!(prefixed > 100, "agent class should declare most prefixes, got {prefixed}");
+    let rep = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &SimConfig::default());
+    assert_eq!(rep.stats.unserved, 0, "feasible agent trace left requests unserved");
+    let s = &rep.stats;
+    assert_eq!(
+        s.prefix_hits + s.prefix_host_hits + s.prefix_misses,
+        prefixed,
+        "lookups ({} + {} + {}) must cover each prefixed request once",
+        s.prefix_hits,
+        s.prefix_host_hits,
+        s.prefix_misses
+    );
+    assert!(s.prefix_hits > 0, "hot Zipf prefixes never hit");
+    assert!(s.prefix_reused_tokens > 0.0);
+    assert!(s.prefix_published_tokens > 0.0);
+    let accounted = s.prefix_gpu_tokens + s.prefix_host_tokens + s.prefix_evicted_tokens;
+    assert!(
+        (s.prefix_published_tokens - accounted).abs() <= 1e-9 * s.prefix_published_tokens,
+        "token conservation broke: published {} vs resident+evicted {}",
+        s.prefix_published_tokens,
+        accounted
+    );
+}
+
+#[test]
+fn share_sweep_is_equal_load_and_share_zero_never_touches_pool() {
+    // The fixed-draw RNG discipline: a share sweep replays bit-identical
+    // arrivals and lengths, only the declared-reusable flag moves. At
+    // share 0 no request carries a prefix, so the engine's pool machinery
+    // must stay provably cold — every counter exactly zero.
+    let t0 = Trace::from_source(
+        TraceSource::offline(WorkloadKind::Agent, 120, 5).with_prefix_share(0.0),
+    );
+    let t95 = Trace::from_source(
+        TraceSource::offline(WorkloadKind::Agent, 120, 5).with_prefix_share(0.95),
+    );
+    assert_eq!(t0.requests.len(), t95.requests.len());
+    for (a, b) in t0.requests.iter().zip(&t95.requests) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.arrival.to_bits(), b.arrival.to_bits(), "arrival moved with share");
+        assert_eq!(a.input_len, b.input_len, "input_len moved with share on {}", a.id);
+        assert_eq!(a.output_len, b.output_len, "output_len moved with share on {}", a.id);
+        assert!(a.prefix.is_none(), "share 0 declared a prefix on {}", a.id);
+    }
+    assert!(
+        t95.requests.iter().filter(|r| r.prefix.is_some()).count() > 80,
+        "share 0.95 declared almost nothing"
+    );
+    let c = settings::case_study();
+    let p = schedule(WorkloadKind::Agent, 0);
+    let rep = run_disaggregated_cfg(&c, &OPT_30B, &p, &t0, &SimConfig::default());
+    let s = &rep.stats;
+    assert_eq!(s.prefix_hits, 0);
+    assert_eq!(s.prefix_host_hits, 0);
+    assert_eq!(s.prefix_misses, 0);
+    assert_eq!(s.prefix_reused_tokens, 0.0);
+    assert_eq!(s.prefix_published_tokens, 0.0);
+    assert_eq!(s.prefix_spilled_tokens, 0.0);
+    assert_eq!(s.prefix_evicted_tokens, 0.0);
+    assert_eq!(s.prefix_gpu_tokens, 0.0);
+    assert_eq!(s.prefix_host_tokens, 0.0);
+    assert_eq!(s.prefix_reload_s, 0.0);
+}
+
+#[test]
+fn higher_zipf_skew_raises_hit_rate_and_cuts_mean_ttft() {
+    // Monotonicity headline: at fixed share and population, a more skewed
+    // prefix popularity concentrates traffic on fewer hot prefixes — more
+    // reuse, fewer full prefills, lower mean TTFT. Hit rate must rise
+    // strictly with skew; TTFT must be strictly better at the high end.
+    let c = settings::case_study();
+    let p = schedule(WorkloadKind::Agent, 0);
+    let mut rates = Vec::new();
+    let mut ttfts = Vec::new();
+    for &skew in &[0.2, 1.1, 2.5] {
+        let params =
+            PrefixParams { n_prefixes: 64, zipf_s: skew, share: 0.95, len_base: 768, len_step: 96 };
+        let trace = Trace::from_source(
+            TraceSource::offline(WorkloadKind::Agent, 200, 5).with_prefix_params(params),
+        );
+        let rep = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &SimConfig::default());
+        assert_eq!(rep.stats.unserved, 0);
+        rates.push(rep.stats.prefix_hit_rate());
+        ttfts.push(rep.avg_ttft());
+    }
+    assert!(
+        rates[0] < rates[1] && rates[1] < rates[2],
+        "hit rate not strictly increasing in skew: {rates:?}"
+    );
+    assert!(
+        ttfts[2] < ttfts[0],
+        "more reuse should cut mean TTFT: {:?} (hit rates {:?})",
+        ttfts,
+        rates
+    );
+}
+
+#[test]
+fn hit_aware_planner_shifts_partition_decode_heavy() {
+    // Acceptance: with `ScheduleOptions::prefix_hit_rate` set, the planner
+    // discounts expected prefill demand, so the optimal typed partition
+    // allocates a strictly larger device share to decode than the
+    // hit-blind ranking at the same load.
+    let c = settings::case_study();
+    let plan_at = |hit_rate: f64, threads: usize| -> Placement {
+        let mut o = ScheduleOptions::new(WorkloadKind::Agent);
+        o.max_rounds = 8;
+        o.force_k = Some(4);
+        o.seed = 0;
+        o.prefix_hit_rate = hit_rate;
+        o.threads = threads;
+        scheduler::schedule(&c, &OPT_30B, &o).expect("schedules").placement
+    };
+    let blind = decode_device_share(&plan_at(0.0, 1));
+    let aware: Vec<f64> =
+        [0.5, 0.75, 0.95].iter().map(|&f| decode_device_share(&plan_at(f, 1))).collect();
+    for (f, a) in [0.5, 0.75, 0.95].iter().zip(&aware) {
+        assert!(
+            *a >= blind - 1e-12,
+            "hit rate {f} went prefill-heavier than blind: {a} vs {blind}"
+        );
+    }
+    let best = aware.iter().cloned().fold(0.0f64, f64::max);
+    assert!(
+        best > blind,
+        "hit-aware planner never shifted decode-heavy: blind {blind}, aware {aware:?}"
+    );
+}
+
+#[test]
+fn hit_aware_plans_bit_identical_across_threads() {
+    // Acceptance: the cache-aware discount keys into the eval cache and
+    // the strategy fan-out deterministically — `--threads 1` and
+    // `--threads 4` produce bit-identical plans at a nonzero hit rate.
+    let c = settings::case_study();
+    let plan_at = |threads: usize| -> Placement {
+        let mut o = ScheduleOptions::new(WorkloadKind::Agent);
+        o.max_rounds = 6;
+        o.force_k = Some(4);
+        o.seed = 3;
+        o.prefix_hit_rate = 0.75;
+        o.threads = threads;
+        scheduler::schedule(&c, &OPT_30B, &o).expect("schedules").placement
+    };
+    let (t1, t4) = (plan_at(1), plan_at(4));
+    assert_eq!(
+        format!("{t1:?}"),
+        format!("{t4:?}"),
+        "hit-aware plan differs across thread counts"
+    );
+}
+
+#[test]
+fn windowed_engine_run_matches_full_within_sketch_bound() {
+    // End-to-end t-digest check on a prefix workload: windowed mode keeps
+    // the exact aggregates bit-identical and the sketch percentiles within
+    // the documented ≲2% relative error (the run exceeds the 256-centroid
+    // exact regime).
+    let c = settings::case_study();
+    let p = schedule(WorkloadKind::Agent, 0);
+    let trace = Trace::online(WorkloadKind::Agent, 4.0, 120.0, 3);
+    assert!(trace.requests.len() > 300, "need enough completions to leave the exact regime");
+    let full = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &SimConfig::default());
+    let cfg = SimConfig { record_mode: RecordMode::Windowed, ..SimConfig::default() };
+    let win = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &cfg);
+    assert!(win.records.is_empty());
+    assert_eq!(win.completed(), full.completed());
+    assert_eq!(win.makespan, full.makespan);
+    assert_eq!(win.total_output_tokens, full.total_output_tokens);
+    assert_eq!(win.avg_latency(), full.avg_latency());
+    assert_eq!(win.avg_ttft(), full.avg_ttft());
+    assert_eq!(win.stats.prefix_hits, full.stats.prefix_hits);
+    assert_eq!(win.stats.prefix_misses, full.stats.prefix_misses);
+    for q in [50.0, 90.0, 99.0] {
+        let (w, f) = (win.p_latency(q), full.p_latency(q));
+        assert!(
+            (w - f).abs() <= 0.02 * f.abs().max(1e-12),
+            "p{q}: windowed {w} vs full {f}"
+        );
+    }
+}
+
+#[test]
+fn tdigest_matches_full_records_on_50k_completions() {
+    // Satellite parity: the `WindowedAgg` t-digest against
+    // `RecordMode::Full` ground truth on a 50k-request trace's worth of
+    // completions with a heavy-tailed latency profile. Exact fields are
+    // bit-identical; percentiles land within 2% relative error — roughly
+    // a 10x improvement on the ~13%-error log-bucket histograms the
+    // sketch replaced.
+    let n = 50_000;
+    let mut rng = Rng::new(77);
+    let mut agg = WindowedAgg::new();
+    let mut records = Vec::with_capacity(n);
+    for id in 0..n {
+        let arrival = id as f64 * 0.01;
+        let latency = 0.5 + rng.exp(1.0) * (1.0 + 9.0 * rng.f64());
+        let r = RequestRecord {
+            id,
+            arrival,
+            prefill_done: arrival + 0.2 * latency,
+            completion: arrival + latency,
+            input_len: 512,
+            output_len: 64,
+            slo_base: 1.0,
+        };
+        agg.push(&r);
+        records.push(r);
+    }
+    let full = SimReport::from_records(records);
+    let win = SimReport::from_windowed(agg);
+    assert_eq!(win.completed(), full.completed());
+    assert_eq!(win.total_output_tokens, full.total_output_tokens);
+    assert_eq!(win.makespan.to_bits(), full.makespan.to_bits());
+    assert_eq!(win.avg_latency().to_bits(), full.avg_latency().to_bits());
+    assert_eq!(win.avg_ttft().to_bits(), full.avg_ttft().to_bits());
+    for q in [50.0, 90.0, 95.0, 99.0, 99.9] {
+        let (w, f) = (win.p_latency(q), full.p_latency(q));
+        assert!(
+            (w - f).abs() <= 0.02 * f.abs(),
+            "p{q}: sketch {w} vs exact {f} (rel {})",
+            ((w - f) / f).abs()
+        );
+    }
+    // SLO attainment derives from the same sketch: CDF within 2%.
+    for scale in [2.0, 5.0, 10.0] {
+        let (w, f) = (win.slo_attainment(scale), full.slo_attainment(scale));
+        assert!((w - f).abs() <= 0.02, "attainment@{scale}: {w} vs {f}");
+    }
+}

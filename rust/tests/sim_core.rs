@@ -236,6 +236,7 @@ fn oversized_requests_are_rejected_not_wedged() {
         arrival: 0.0,
         input_len: 3_000_000,
         output_len: 8,
+        prefix: None,
     });
     let cfg = SimConfig { sizing: Sizing::PerRequest, ..SimConfig::default() };
     let rep = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &cfg);

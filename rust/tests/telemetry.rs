@@ -67,6 +67,21 @@ fn assert_conserved(rep: &SimReport, what: &str) {
     }
     assert_eq!(m.mem_stalls, rep.stats.mem_stalls, "{what}: mem stalls");
     assert_eq!(m.rejects, rep.stats.rejected, "{what}: rejects");
+    // Prefix-pool counters (DESIGN.md §15): hit/miss/spill totals
+    // re-derived from `PrefixHit`/`PrefixMiss`/`PrefixEvict` events equal
+    // the engine's counters exactly (token sums are whole numbers, so f64
+    // addition order is immaterial). All-zero on prefix-free workloads.
+    assert_eq!(m.prefix_hits, rep.stats.prefix_hits, "{what}: prefix GPU hits");
+    assert_eq!(m.prefix_host_hits, rep.stats.prefix_host_hits, "{what}: prefix host hits");
+    assert_eq!(m.prefix_misses, rep.stats.prefix_misses, "{what}: prefix misses");
+    assert_eq!(
+        m.prefix_spilled_tokens, rep.stats.prefix_spilled_tokens,
+        "{what}: prefix spilled tokens"
+    );
+    assert_eq!(
+        m.prefix_evicted_tokens, rep.stats.prefix_evicted_tokens,
+        "{what}: prefix evicted tokens"
+    );
     // The engine adds each transfer's queue wait at enqueue time; the
     // derivation folds the same values in the same (event) order.
     assert_eq!(
@@ -146,6 +161,23 @@ fn trace_conserves_counters_under_memory_pressure() {
     let rep = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &traced(cfg));
     assert!(rep.stats.mem_stalls > 0, "flood produced no memory pressure");
     assert_conserved(&rep, "heavy-tail per-request disagg");
+}
+
+#[test]
+fn trace_conserves_prefix_pool_counters() {
+    // ISSUE 9 satellite: on a prefix workload at sample rate 1.0, the
+    // trace-derived hit/miss/spill totals must equal the engine counters
+    // exactly — the flight recorder never under- or over-reports reuse.
+    let c = settings::case_study();
+    let p = schedule(&c, WorkloadKind::Agent, 4, 0);
+    let trace = Trace::offline(WorkloadKind::Agent, 160, 9);
+    let rep = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &traced(SimConfig::default()));
+    assert!(rep.stats.prefix_hits > 0, "agent workload never hit the pool");
+    assert!(
+        rep.stats.prefix_hits + rep.stats.prefix_host_hits + rep.stats.prefix_misses > 0,
+        "no prefix lookups recorded"
+    );
+    assert_conserved(&rep, "agent prefix pool");
 }
 
 #[test]
