@@ -12,8 +12,10 @@ use std::time::Instant;
 
 use crate::cluster::Cluster;
 use crate::costmodel::TaskProfile;
+use crate::kvtransfer::LinkModel;
 use crate::model::LlmSpec;
 use crate::scheduler::flownet;
+use crate::scheduler::objective::{apply_kv_contention, kv_nic_utilization};
 use crate::scheduler::strategy::StrategyCache;
 use crate::scheduler::{Objective, Placement};
 use crate::workload::WorkloadKind;
@@ -35,17 +37,24 @@ pub fn schedule_distserve(
     model: &LlmSpec,
     workload: WorkloadKind,
 ) -> Option<DistServePlan> {
-    schedule_distserve_with(cluster, model, workload, Objective::Throughput)
+    schedule_distserve_with(cluster, model, workload, Objective::Throughput, None)
 }
 
 /// Objective-aware DistServe sweep: the same uniform enumeration, with each
 /// candidate ranked under the caller's [`Objective`] (the deploy layer's
-/// unified `Planner` path).
+/// unified `Planner` path). With `kv_contention` set, every candidate's
+/// score is discounted by its analytic worst-NIC overcommit under that
+/// link model ([`apply_kv_contention`]) — the same weighting the HexGen-2
+/// planner applies under `--contention-aware` — so the ratio sweep stops
+/// picking prefill-heavy splits whose KV flow a shared NIC cannot carry.
+/// Identity for uncontended candidates (utilization ≤ 1): plans are
+/// bit-identical to the blind sweep when the fabric keeps up.
 pub fn schedule_distserve_with(
     cluster: &Cluster,
     model: &LlmSpec,
     workload: WorkloadKind,
     objective: Objective,
+    kv_contention: Option<LinkModel>,
 ) -> Option<DistServePlan> {
     // hexcheck: allow(D2) -- wall-clock timing of the planner itself (reported as plan_ms); never feeds plan decisions
     let t0 = Instant::now();
@@ -72,6 +81,10 @@ pub fn schedule_distserve_with(
             let assign: Vec<bool> = (0..k).map(|g| g < n_prefill).collect();
             if let Some(mut p) = net.evaluate(&assign) {
                 p.objective_score = objective.score(cluster, model, &task, &p);
+                if let Some(link) = kv_contention {
+                    p.objective_score =
+                        apply_kv_contention(p.objective_score, kv_nic_utilization(&p, link));
+                }
                 if best
                     .as_ref()
                     .map(|b| p.objective_score > b.placement.objective_score)
@@ -122,6 +135,47 @@ mod tests {
         let frac_h = hpld.n_prefill as f64 / hpld.placement.groups.len() as f64;
         let frac_l = lphd.n_prefill as f64 / lphd.placement.groups.len() as f64;
         assert!(frac_h >= frac_l, "HPLD prefill frac {frac_h} < LPHD {frac_l}");
+    }
+
+    #[test]
+    fn contention_weighting_discounts_scores_consistently() {
+        // The contention-aware sweep's winning score must be exactly the
+        // raw objective score of its own placement run through
+        // `apply_kv_contention` at that placement's shared-NIC overcommit —
+        // and identical to the blind sweep whenever the winner's NIC is
+        // uncontended.
+        let c = settings::homogeneous();
+        let (s_in, s_out) = WorkloadKind::Hpld.mean_lengths();
+        let task = TaskProfile::new(1, s_in, s_out);
+        let blind = schedule_distserve_with(
+            &c,
+            &OPT_30B,
+            WorkloadKind::Hpld,
+            Objective::Throughput,
+            None,
+        )
+        .expect("blind plan");
+        let aware = schedule_distserve_with(
+            &c,
+            &OPT_30B,
+            WorkloadKind::Hpld,
+            Objective::Throughput,
+            Some(LinkModel::SharedNic),
+        )
+        .expect("contention-aware plan");
+        let raw = Objective::Throughput.score(&c, &OPT_30B, &task, &aware.placement);
+        let util = kv_nic_utilization(&aware.placement, LinkModel::SharedNic);
+        assert_eq!(
+            aware.placement.objective_score,
+            apply_kv_contention(raw, util),
+            "winner's score is not its discounted raw score"
+        );
+        assert!(aware.placement.objective_score <= raw + 1e-12);
+        if util <= 1.0 && kv_nic_utilization(&blind.placement, LinkModel::SharedNic) <= 1.0 {
+            assert_eq!(blind.placement.objective_score, aware.placement.objective_score);
+            assert_eq!(blind.n_prefill, aware.n_prefill);
+            assert_eq!(blind.group_size, aware.group_size);
+        }
     }
 
     #[test]

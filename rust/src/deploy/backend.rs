@@ -28,9 +28,12 @@ fn sim_config(spec: &DeploymentSpec) -> SimConfig {
         link: spec.link,
         kv_route: spec.kv_route,
         kv_chunk_layers: spec.kv_chunk_layers,
-        trace: spec.trace,
+        // Attribution folds the blame vectors out of the event stream, so
+        // it implies tracing even when `--trace` itself is off.
+        trace: spec.trace || spec.attribution,
         trace_sample_rate: spec.trace_sample,
         record_mode: if spec.windowed { RecordMode::Windowed } else { RecordMode::Full },
+        attribution: spec.attribution,
         ..SimConfig::default()
     }
 }
@@ -103,6 +106,11 @@ impl Backend for ReschedBackend {
         // `DriftKind::KvContention` and gets re-planned end to end. With
         // the default infinite threshold the feed is empty and this path
         // is byte-identical to the blind drive.
+        // Bottleneck-attributed drift context: when attribution is on, the
+        // same pre-epoch run folds a blame report, and its dominant
+        // component is stamped into every `AuditRecord::Drift` this pass
+        // emits (DESIGN.md §16).
+        let mut pre_blame: Option<&'static str> = None;
         let kv_feed: Vec<(f64, f64)> = if self.monitor.kv_wait_threshold_s.is_finite() {
             let mut tcfg = cfg;
             tcfg.trace = true;
@@ -115,6 +123,7 @@ impl Backend for ReschedBackend {
                 trace,
                 &tcfg,
             );
+            pre_blame = pre.attr.as_ref().map(|a| a.dominant_name());
             pre.trace
                 .map(|log| {
                     log.events
@@ -140,6 +149,7 @@ impl Backend for ReschedBackend {
             &base,
             self.modeled_replan_s,
             &kv_feed,
+            pre_blame,
         );
         let switches: Vec<SwitchSpec> = drive.switches.iter().map(SwitchSpec::from).collect();
         let mut rep = simulate(

@@ -120,6 +120,12 @@ pub struct DeploymentSpec {
     /// (`ScheduleOptions::prefix_hit_rate`), the way `--contention-aware`
     /// feeds predicted NIC contention into the same search.
     pub prefix_hit_aware: bool,
+    /// Critical-path latency attribution (`hexgen2 attribute` /
+    /// `--attribution`): tee every trace event through the O(active)
+    /// [`Attributor`](crate::telemetry::Attributor) and attach the blame
+    /// report to [`SimReport::attr`] (DESIGN.md §16). Implies tracing;
+    /// works in both Full and Windowed record modes.
+    pub attribution: bool,
 }
 
 impl DeploymentSpec {
@@ -149,6 +155,7 @@ impl DeploymentSpec {
             windowed: false,
             prefix_share: None,
             prefix_hit_aware: false,
+            attribution: false,
         }
     }
 
@@ -262,6 +269,11 @@ impl DeploymentSpec {
         self
     }
 
+    pub fn attribution(mut self, on: bool) -> Self {
+        self.attribution = on;
+        self
+    }
+
     /// Expected fraction of prefill work the prefix pool saves for this
     /// spec's workload (0.0 when hit-aware planning is off or the workload
     /// has no shared-prefix structure).
@@ -332,6 +344,25 @@ impl Deployment {
     /// Execute the plan on a backend over a request trace.
     pub fn run(&self, backend: &dyn Backend, trace: &Trace) -> Result<SimReport> {
         backend.run(&self.spec, &self.plan, trace)
+    }
+
+    /// Advisor pricing context for this deployment's incumbent plan
+    /// (DESIGN.md §16): the planner inputs that scored it, so the
+    /// bottleneck advisor can re-score the partition with a lever's
+    /// capacity perturbed. `None` for colocated plans — the P:D-split and
+    /// KV-bandwidth levers are disaggregation knobs.
+    pub fn advisor_ctx(&self) -> Option<crate::telemetry::AdvisorCtx<'_>> {
+        let PlanKind::Disaggregated(p) = &self.plan.kind else { return None };
+        let opts = self.spec.sched_opts();
+        Some(crate::telemetry::AdvisorCtx {
+            cluster: &self.spec.cluster,
+            model: &self.spec.model,
+            task: self.spec.task(),
+            period: opts.period,
+            groups: p.groups.iter().map(|g| g.devices.clone()).collect(),
+            objective: self.spec.objective,
+            link: opts.kv_contention,
+        })
     }
 
     /// Human-readable description of the plan (Table-2 style for
@@ -517,6 +548,14 @@ impl Deployment {
         let n_audit = self.plan.audit.len() + rep.audit.len();
         if n_audit > 0 {
             result.push(("audit_records".to_string(), json::num(n_audit as f64)));
+        }
+        // Critical-path attribution (`--attribution`; DESIGN.md §16): the
+        // full blame report + ranked advisor, priced against the incumbent
+        // when the plan is disaggregated.
+        if let Some(attr) = &rep.attr {
+            let ctx = self.advisor_ctx();
+            let advice = crate::telemetry::advise(attr, ctx.as_ref());
+            result.push(("attribution".to_string(), crate::telemetry::attr_json(attr, &advice)));
         }
         fields.append(&mut result);
         Json::Obj(fields.into_iter().collect())

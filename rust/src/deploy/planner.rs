@@ -172,6 +172,9 @@ impl Planner for DistServePlanner {
             &spec.model,
             spec.workload,
             spec.objective,
+            // `--contention-aware` weighs the spec's link model into the
+            // ratio sweep, mirroring the HexGen-2 planner's discount.
+            if spec.contention_aware { Some(spec.link) } else { None },
         )?;
         Some(Plan {
             planner: self.name(),

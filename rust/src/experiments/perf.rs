@@ -465,6 +465,39 @@ fn bench_sim_stream(quick: bool, requests: Option<usize>) -> Json {
         rep.stats.events,
         rep.stats.peak_live_requests,
     );
+    // Attribution satellite (DESIGN.md §16): the same streaming run with
+    // the tracing + attribution tee on. The attributor's open-chain map is
+    // O(active requests) and the trace ring is bounded, so the pass must
+    // fit inside the same CI RSS guard while folding the full blame report
+    // without a single per-request record.
+    let acfg = SimConfig {
+        record_mode: RecordMode::Windowed,
+        trace: true,
+        trace_sample_rate: 1.0,
+        attribution: true,
+        ..SimConfig::default()
+    };
+    let asource = TraceSource::online(WorkloadKind::Online, rate, duration, 7);
+    let t1 = Instant::now();
+    let arep = simulate_stream(
+        &cluster,
+        &OPT_30B,
+        &ServingSpec::Disaggregated(p.clone()),
+        &[],
+        asource,
+        &acfg,
+    );
+    let wall_attr = t1.elapsed().as_secs_f64();
+    let events_per_s_attr = arep.stats.events as f64 / wall_attr.max(1e-12);
+    let attr = arep.attr.as_ref().expect("attribution was on");
+    println!(
+        "bench sim/stream+attr: {} attributed in {wall_attr:.2}s ({events_per_s_attr:.0} \
+         events/s), dominant {} ({:.1}s), {} open at end",
+        attr.n,
+        attr.dominant_name(),
+        attr.dominant().1,
+        attr.open_at_end,
+    );
     json::obj(vec![
         ("setting", json::s("case_study")),
         ("model", json::s(OPT_30B.name)),
@@ -479,6 +512,12 @@ fn bench_sim_stream(quick: bool, requests: Option<usize>) -> Json {
         ("reqs_per_s", json::num(rep.completed() as f64 / wall.max(1e-12))),
         ("peak_live_requests", json::num(rep.stats.peak_live_requests as f64)),
         ("sim_tokens_per_s", json::num(rep.tokens_per_s())),
+        ("wall_s_attr", json::num(wall_attr)),
+        ("events_per_s_1m_attr", json::num(events_per_s_attr)),
+        ("attr_requests", json::num(attr.n as f64)),
+        ("attr_open_at_end", json::num(attr.open_at_end as f64)),
+        ("attr_dominant", json::s(attr.dominant_name())),
+        ("attr_residual_s", json::num(attr.residual_s())),
     ])
 }
 

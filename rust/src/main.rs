@@ -4,6 +4,7 @@
 //!   schedule     run the scheduling algorithm on a cluster setting
 //!   reschedule   online rescheduling case study on a phased (drifting) trace
 //!   simulate     simulate a system serving a workload on a setting
+//!   attribute    critical-path latency attribution + bottleneck advisor
 //!   serve        live disaggregated serving over the AOT artifacts
 //!   workload     generate and dump a request trace (JSON)
 //!   experiments  regenerate a paper figure/table by id
@@ -136,9 +137,14 @@ fn spec_of(args: &Args) -> Result<DeploymentSpec> {
     }
     spec = spec.prefix_hit_aware(args.has("prefix-hit-aware"));
     // Flight recorder (DESIGN.md §12): --trace FILE / --prom FILE enable
-    // event recording; --audit FILE enables planner decision capture.
+    // event recording; --audit FILE enables planner decision capture;
+    // --attribution FILE folds critical-path blame vectors out of the same
+    // event stream (DESIGN.md §16).
     if args.get("trace").is_some() || args.get("prom").is_some() {
         spec = spec.trace(true);
+    }
+    if args.get("attribution").is_some() {
+        spec = spec.attribution(true);
     }
     if let Some(r) = args.get("trace-sample") {
         let rate: f64 = r
@@ -376,6 +382,23 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     println!("wrote {} audit records to {path}", records.len());
                 }
             }
+            if let Some(path) = args.get("attribution") {
+                let attr = rep.attr.as_ref().ok_or_else(|| {
+                    anyhow!("--attribution requested but the run produced no attribution report")
+                })?;
+                let ctx = dep.advisor_ctx();
+                let advice = telemetry::advise(attr, ctx.as_ref());
+                let mut body = telemetry::attr_json(attr, &advice).to_string_pretty();
+                body.push('\n');
+                std::fs::write(path, body).map_err(|e| anyhow!("writing {path}: {e}"))?;
+                if !json_out {
+                    println!(
+                        "wrote attribution report ({} requests, dominant: {}) to {path}",
+                        attr.n,
+                        attr.dominant_name()
+                    );
+                }
+            }
             if json_out {
                 println!("{}", dep.report_json(&rep).to_string_pretty());
             } else {
@@ -389,6 +412,95 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     ),
                     &rep,
                 );
+            }
+        }
+        "attribute" => {
+            // Plan + run with critical-path attribution on, then print the
+            // ranked bottleneck report (DESIGN.md §16). `--out FILE` writes
+            // the hexgen2-attr/v1 JSON; `--json` prints it instead of the
+            // human-readable ranking.
+            let mut spec = spec_of(args)?.attribution(true);
+            let planner = planner_of(args, &mut spec)?;
+            let kind = spec.workload;
+            let seed = spec.seed;
+            let json_out = args.has("json");
+            let src = if kind == WorkloadKind::Online {
+                let opts = ExpOpts { quick: true, seed };
+                let rate = args
+                    .get("rate")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or_else(|| experiments::online_rate(&spec.cluster, &spec.model, &opts));
+                TraceSource::online(kind, rate, args.get_f64("duration", 120.0), seed)
+            } else {
+                TraceSource::offline(kind, args.get_usize("requests", 100), seed)
+            };
+            let trace = match spec.prefix_share {
+                Some(share) => Trace::from_source(src.with_prefix_share(share)),
+                None => Trace::from_source(src),
+            };
+            let dep = spec.plan(planner)?;
+            let rep = if args.has("resched") {
+                dep.run(&ReschedBackend::default(), &trace)?
+            } else {
+                dep.run(&SimBackend, &trace)?
+            };
+            let attr = rep
+                .attr
+                .as_ref()
+                .ok_or_else(|| anyhow!("attribution run produced no report"))?;
+            let ctx = dep.advisor_ctx();
+            let advice = telemetry::advise(attr, ctx.as_ref());
+            let out = telemetry::attr_json(attr, &advice);
+            if let Some(path) = args.get("out") {
+                let mut body = out.to_string_pretty();
+                body.push('\n');
+                std::fs::write(path, body).map_err(|e| anyhow!("writing {path}: {e}"))?;
+                if !json_out {
+                    println!("wrote attribution report to {path}");
+                }
+            }
+            if json_out {
+                println!("{}", out.to_string_pretty());
+            } else {
+                println!(
+                    "critical-path attribution on {} / {} ({}): {} requests, \
+                     {:.1}s total latency attributed, residual {:.3e}s, {} in flight at end",
+                    dep.spec.cluster.name,
+                    dep.spec.model.name,
+                    kind.name(),
+                    attr.n,
+                    attr.latency_sum,
+                    attr.residual_s(),
+                    attr.open_at_end,
+                );
+                println!("what to fix next (blame-ranked, priced against planner levers):");
+                for (rank, a) in advice.iter().enumerate() {
+                    let priced = if ctx.is_some() {
+                        format!(
+                            ", score {:.4} -> {:.4} ({:+.4})",
+                            a.baseline_score,
+                            a.predicted_score,
+                            a.gain()
+                        )
+                    } else {
+                        String::new()
+                    };
+                    println!(
+                        "  #{} {:<18} {:>9.2}s ({:>4.1}%)  lever: {}{}",
+                        rank + 1,
+                        a.component_name(),
+                        a.blame_s,
+                        a.share * 100.0,
+                        a.lever,
+                        priced,
+                    );
+                }
+                if !attr.per_nic.is_empty() {
+                    println!("per-NIC KV blame (src replica: serialize wait / transmit):");
+                    for (nic, (w, x)) in &attr.per_nic {
+                        println!("  nic {nic}: {w:.2}s / {x:.2}s");
+                    }
+                }
             }
         }
         "serve" => {
@@ -540,7 +652,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             [--kv-route flow|least-loaded|eta-greedy] [--kv-chunk-layers N]\n\
                  \x20             [--contention-aware] [--trace FILE] [--trace-sample RATE]\n\
                  \x20             [--audit FILE] [--prom FILE] [--prom-window SECONDS]\n\
-                 \x20             [--prefix-share F] [--prefix-hit-aware]\n\
+                 \x20             [--attribution FILE] [--prefix-share F] [--prefix-hit-aware]\n\
                  \x20             plan + run on the unified discrete-event simulator (--resched enables the\n\
                  \x20             online rescheduling loop mid-trace; --chunked-prefill chunks prompts on\n\
                  \x20             both colocated and disaggregated prefill replicas; per-request admission\n\
@@ -562,9 +674,16 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             --trace-sample R keeps a deterministic R fraction of requests;\n\
                  \x20             --audit FILE writes the planner/rescheduler decision audit (per-\n\
                  \x20             candidate score breakdowns, drift events, migration-gate pricing);\n\
-                 \x20             --prom FILE writes Prometheus-style windowed counters\n\
-                 \x20             (--prom-window seconds per window, default 60). With tracing on,\n\
-                 \x20             the --json report gains per-request span summaries.\n\
+                 \x20             --prom FILE writes Prometheus-style windowed counters plus\n\
+                 \x20             p50/p95/p99 TTFT/TBT/latency summaries and the KV queue-wait\n\
+                 \x20             histogram (--prom-window seconds per window, default 60). With\n\
+                 \x20             tracing on, the --json report gains per-request span summaries.\n\
+                 \x20             --attribution FILE writes the critical-path blame report\n\
+                 \x20             (hexgen2-attr/v1, DESIGN.md \u{a7}16): per-request latency decomposed\n\
+                 \x20             into admission / prefill / KV-transfer / decode components that\n\
+                 \x20             sum bit-exactly to the measured latency, aggregated per replica,\n\
+                 \x20             per KV route/NIC, and per window, with the ranked bottleneck\n\
+                 \x20             advisor (also embedded in the --json report).\n\
                  \x20             --windowed streams metrics through an O(1) accumulator instead of\n\
                  \x20             per-request records (million-request runs in bounded memory; exact\n\
                  \x20             means/throughput, t-digest percentiles ≲2% relative error).\n\
@@ -580,6 +699,16 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             the optimal partition decode-heavy (also applies to `schedule`).\n\
                  \x20             The --json report carries prefix_{hits,host_hits,misses,hit_rate,\n\
                  \x20             reused_tokens,published_tokens,spilled_tokens,evicted_tokens,reload_s}.\n\
+                 \x20 attribute   --setting het1 --model opt-30b --workload hphd [--planner P] [--objective O]\n\
+                 \x20             [--requests N] [--resched] [--windowed] [--out FILE] [--json]\n\
+                 \x20             (accepts every `simulate` engine knob)\n\
+                 \x20             run with critical-path attribution on and print the cluster\n\
+                 \x20             bottleneck report: blame-ranked components, each priced against\n\
+                 \x20             the planner lever that attacks it (shift the P:D split, add KV\n\
+                 \x20             bandwidth, raise the chunk size) by re-scoring the incumbent\n\
+                 \x20             partition with that capacity perturbed. --out writes the\n\
+                 \x20             hexgen2-attr/v1 JSON; --windowed streams attribution in O(active)\n\
+                 \x20             memory for million-request runs.\n\
                  \x20 serve       --model tiny --requests 16 --prefill 2 --decode 1 [--throttle-mbps N] [--verbose]\n\
                  \x20 workload    --workload hpld --n 10 [--prefix-share F]\n\
                  \x20             (classes: HPLD|HPHD|LPHD|LPLD|online|heavy_tail|prefix_chat|rag|agent)\n\

@@ -176,7 +176,17 @@ pub fn drive(
     base: &ScheduleOptions,
     modeled_replan_s: f64,
 ) -> DriveOutcome {
-    drive_with_kv(cluster, model, initial, trace, mcfg, base, modeled_replan_s, &[])
+    drive_with_kv(cluster, model, initial, trace, mcfg, base, modeled_replan_s, &[], None)
+}
+
+/// Coarse drift-blame default when no attribution report is on hand: the
+/// component family the drift kind itself implicates (DESIGN.md §16).
+fn default_blame(kind: &DriftKind) -> &'static str {
+    match kind {
+        DriftKind::Workload { .. } => "mix",
+        DriftKind::Rate { .. } => "rate",
+        DriftKind::KvContention { .. } => "kv-transfer",
+    }
 }
 
 /// [`drive`] with a KV-congestion feed: `kv_feed` is a time-ordered list of
@@ -188,6 +198,12 @@ pub fn drive(
 /// congestion fires [`DriftKind::KvContention`] and gets a (preferably
 /// contention-aware) re-plan even when the request mix is steady. An empty
 /// feed is exactly [`drive`].
+///
+/// `blame` is optional attribution context for the drift audit records:
+/// when the caller ran critical-path attribution over the previous epoch
+/// ([`crate::telemetry::AttrReport::dominant_name`]), every
+/// [`AuditRecord::Drift`] this pass emits names that component; otherwise
+/// the record falls back to a coarse default derived from the drift kind.
 #[allow(clippy::too_many_arguments)]
 pub fn drive_with_kv(
     cluster: &Cluster,
@@ -198,6 +214,7 @@ pub fn drive_with_kv(
     base: &ScheduleOptions,
     modeled_replan_s: f64,
     kv_feed: &[(f64, f64)],
+    blame: Option<&str>,
 ) -> DriveOutcome {
     let mut sensor = Rescheduler::new(mcfg);
     let mut incumbent = initial.clone();
@@ -239,6 +256,7 @@ pub fn drive_with_kv(
             mean_output: e.stats.mean_output,
             n: e.stats.n as u32,
             mean_kv_wait_s: e.stats.mean_kv_wait_s,
+            blamed: blame.unwrap_or_else(|| default_blame(&e.kind)).to_string(),
         });
         let out = replan_for_drift_with_cache(cluster, model, &incumbent, &e, base, &cache);
         if let Some(o) = &out {

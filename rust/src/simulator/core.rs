@@ -153,6 +153,13 @@ pub struct SimConfig {
     /// [`HOST_BUDGET_FACTOR`](crate::kvtransfer::prefix::HOST_BUDGET_FACTOR)
     /// × the summed GPU budgets).
     pub prefix_host_budget: Option<f64>,
+    /// Critical-path latency attribution (DESIGN.md §16): tee every trace
+    /// event through an [`Attributor`](crate::telemetry::Attributor)
+    /// *before* sampling/ring wrap and attach the blame report to
+    /// [`SimReport::attr`]. Requires [`SimConfig::trace`]; the attributor
+    /// state is O(active requests), so it composes with
+    /// [`RecordMode::Windowed`] streaming runs.
+    pub attribution: bool,
 }
 
 impl Default for SimConfig {
@@ -170,6 +177,7 @@ impl Default for SimConfig {
             trace_buffer: 1 << 20,
             prefix_gpu_budget: None,
             prefix_host_budget: None,
+            attribution: false,
         }
     }
 }
@@ -360,20 +368,23 @@ pub struct PolicyEnv<'a, 'b> {
     pub now: f64,
     /// Arena index of the replica being driven.
     pub replica: usize,
-    /// Flight recorder, `None` when tracing is off. A plain `Option`
+    /// Flight recorder, `None` when tracing is off. A plain trait object
     /// rather than a generic sink because policies live behind
     /// `dyn ReplicaPolicy`; with tracing off this is a constant `None`
-    /// (the engine instantiates [`NoopSink`]), so [`PolicyEnv::emit`]
-    /// reduces to one predictable branch.
-    pub trace: Option<&'a mut Recorder>,
+    /// (the engine instantiates [`NoopSink`], whose
+    /// [`active()`](TraceSink::active) is an `#[inline(always)]` `None`),
+    /// so [`PolicyEnv::emit`] reduces to one predictable branch. Routing
+    /// through the sink — not the raw [`Recorder`] — keeps wrapping sinks
+    /// (the attribution tee) in the loop for policy-emitted events.
+    pub trace: Option<&'a mut dyn TraceSink>,
 }
 
 impl PolicyEnv<'_, '_> {
     /// Record `ev` at the current event time (no-op when tracing is off).
     #[inline]
     pub fn emit(&mut self, ev: TraceEvent) {
-        if let Some(rec) = self.trace.as_deref_mut() {
-            rec.emit(self.now, ev);
+        if let Some(sink) = self.trace.as_deref_mut() {
+            sink.emit(self.now, ev);
         }
     }
 
@@ -1101,7 +1112,7 @@ macro_rules! penv {
             stats: &mut $self.stats,
             now: $now,
             replica: $i,
-            trace: $self.sink.recorder(),
+            trace: $self.sink.active(),
         }
     };
 }
@@ -1815,7 +1826,22 @@ fn simulate_feed(
     kind: WorkloadKind,
     cfg: &SimConfig,
 ) -> SimReport {
-    if cfg.trace {
+    if cfg.trace && cfg.attribution {
+        // Attribution tee (DESIGN.md §16): the attributor observes every
+        // event before the ring's sampling/wrap, so the blame report is
+        // exact even for sampled or truncated traces. Per-request blame
+        // vectors are kept only in Full mode; Windowed keeps the O(1)
+        // aggregates, matching the streaming memory contract.
+        let keep = cfg.record_mode == RecordMode::Full;
+        let mut ar = crate::telemetry::AttribRecorder::new(
+            Recorder::new(cfg.trace_sample_rate, cfg.trace_buffer),
+            crate::telemetry::Attributor::new(crate::telemetry::attribution::DEFAULT_WINDOW_S, keep),
+        );
+        let mut rep = simulate_sink(cluster, model, initial, switches, feed, kind, cfg, &mut ar);
+        rep.trace = Some(ar.rec.into_log());
+        rep.attr = Some(ar.attr.finish());
+        rep
+    } else if cfg.trace {
         let mut rec = Recorder::new(cfg.trace_sample_rate, cfg.trace_buffer);
         let mut rep = simulate_sink(cluster, model, initial, switches, feed, kind, cfg, &mut rec);
         rep.trace = Some(rec.into_log());

@@ -3,7 +3,7 @@
 //! statistics, and SLO attainment at configurable SLO scales.
 
 use crate::kvtransfer::LinkLoad;
-use crate::telemetry::{AuditRecord, TraceLog};
+use crate::telemetry::{AttrReport, AuditRecord, TraceLog};
 use crate::util::stats;
 
 /// Per-request timing record.
@@ -379,6 +379,10 @@ pub struct SimReport {
     /// `None` for full-record reports. When set, `records` is empty and
     /// every metric below reads the aggregate instead.
     pub agg: Option<WindowedAgg>,
+    /// Critical-path latency attribution ([`SimConfig::attribution`]
+    /// (crate::simulator::SimConfig::attribution); DESIGN.md §16). `None`
+    /// when attribution was off.
+    pub attr: Option<AttrReport>,
 }
 
 impl SimReport {
@@ -398,6 +402,7 @@ impl SimReport {
             trace: None,
             audit: Vec::new(),
             agg: None,
+            attr: None,
         }
     }
 
@@ -415,6 +420,7 @@ impl SimReport {
             trace: None,
             audit: Vec::new(),
             agg: Some(agg),
+            attr: None,
         }
     }
 

@@ -1,0 +1,1040 @@
+//! Critical-path latency attribution and the cluster bottleneck advisor
+//! (DESIGN.md §16).
+//!
+//! The flight recorder (§12) captures *what happened* to every request;
+//! this module reconstructs *where the time went*. Each request's causal
+//! chain — `Arrive → Admit/Hold → PrefillChunk* → PrefillDone → KvEnqueue
+//! → KvXfer → KvDone → DecodeJoin → Finish` — folds into a per-request
+//! **blame vector** of [`N_COMPONENTS`] non-overlapping components whose
+//! sum equals the measured end-to-end latency *bit-exactly*
+//! ([`BlameVector::close`]); the cluster-wide [`AttrReport`] aggregates
+//! them per component, per replica, per KV route/NIC, and per time window
+//! (TTFT vs TBT split), and [`advise`] ranks the dominant blame terms
+//! against the planner's own levers by re-scoring the incumbent partition
+//! through [`evaluate_partition_with`] with the corresponding capacity
+//! perturbed.
+//!
+//! Two operating points, one accumulator:
+//! - **Online** ([`AttribRecorder`]): wraps the ring-buffer [`Recorder`]
+//!   as a [`TraceSink`]; the [`Attributor`] observes every event *before*
+//!   sampling and ring wrap, so attribution stays exact even when the
+//!   exported trace is sampled or truncated. State is O(active requests)
+//!   — open chains die on `Finish`/`Reject` — so `RecordMode::Windowed`
+//!   million-request runs get attribution inside the CI RSS guard.
+//! - **Replay** ([`attribute_log`]): re-derive the same report from a
+//!   finished [`TraceLog`] (exact only at sample rate 1.0 with no ring
+//!   drops — the conservation caveat of `derive_metrics` applies).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::Cluster;
+use crate::costmodel::TaskProfile;
+use crate::kvtransfer::LinkModel;
+use crate::model::LlmSpec;
+use crate::scheduler::strategy::StrategyCache;
+use crate::scheduler::{evaluate_partition_with, Objective};
+use crate::simulator::metrics::QuantileSketch;
+use crate::util::json::{self, Json};
+
+use super::{Lane, Recorder, TraceEvent, TraceLog, TraceSink};
+
+/// Blame component indices, in the canonical (summation) order. The order
+/// is load-bearing: per-request conservation folds the floating-point
+/// residual into [`DECODE_COMPUTE`], the last term.
+pub const ADMISSION_WAIT: usize = 0;
+pub const PREFILL_QUEUE: usize = 1;
+pub const PREFILL_COMPUTE: usize = 2;
+pub const PREFILL_INTERLEAVE: usize = 3;
+pub const KV_SERIALIZE_WAIT: usize = 4;
+pub const KV_TRANSMIT: usize = 5;
+pub const DECODE_BATCH_WAIT: usize = 6;
+pub const DECODE_COMPUTE: usize = 7;
+pub const N_COMPONENTS: usize = 8;
+
+/// Component names, indexed by the constants above (the attr/v1 schema
+/// keys).
+pub const COMPONENT_NAMES: [&str; N_COMPONENTS] = [
+    "admission_wait",
+    "prefill_queue",
+    "prefill_compute",
+    "prefill_interleave",
+    "kv_serialize_wait",
+    "kv_transmit",
+    "decode_batch_wait",
+    "decode_compute",
+];
+
+/// Default aggregation window for the TTFT-vs-TBT split (matches the
+/// Prometheus exporter's default).
+pub const DEFAULT_WINDOW_S: f64 = 60.0;
+
+/// One request's latency decomposition. Components are wall-clock seconds
+/// of the request's own end-to-end span; they partition `[arrival,
+/// finish]`, so concurrent requests legitimately blame the same busy
+/// second of a replica (blame is per-request time, not device time).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BlameVector {
+    pub c: [f64; N_COMPONENTS],
+}
+
+impl BlameVector {
+    /// Sum in canonical component order (the conservation-invariant side).
+    pub fn total(&self) -> f64 {
+        let mut s = 0.0;
+        for i in 0..N_COMPONENTS {
+            s += self.c[i];
+        }
+        s
+    }
+
+    /// Enforce the conservation invariant: iteratively fold the
+    /// floating-point summation residual into the last component until
+    /// `total() == latency` bit-exactly. Each pass is a compensated-sum
+    /// refinement step; because every component is bounded by the latency,
+    /// the residual is at ulp scale and the fixpoint lands in a step or
+    /// two (the bound is pure paranoia).
+    pub fn close(&mut self, latency: f64) {
+        for _ in 0..32 {
+            let r = latency - self.total();
+            if r == 0.0 {
+                return;
+            }
+            let before = self.c[DECODE_COMPUTE];
+            self.c[DECODE_COMPUTE] += r;
+            if self.c[DECODE_COMPUTE] == before {
+                // Residual below the component's ulp: no further progress
+                // is possible (never observed for non-degenerate chains).
+                return;
+            }
+        }
+    }
+}
+
+/// One finished request's attribution (`RecordMode::Full` only — the
+/// windowed path keeps aggregates and drops per-request vectors).
+#[derive(Clone, Copy, Debug)]
+pub struct RequestBlame {
+    pub req: u32,
+    pub arrival: f64,
+    pub finish: f64,
+    /// Replica that generated the final token.
+    pub replica: u32,
+    pub blame: BlameVector,
+}
+
+impl RequestBlame {
+    pub fn latency(&self) -> f64 {
+        self.finish - self.arrival
+    }
+}
+
+/// Per-window TTFT-vs-TBT split (window of a request = the window its
+/// `Finish` lands in, mirroring `SimReport::windowed` completion
+/// bucketing).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WindowBlame {
+    /// Summed `PrefillDone − Arrive` over the window's finishers.
+    pub ttft_s: f64,
+    /// Summed decode span (`Finish − PrefillDone`).
+    pub tbt_s: f64,
+    pub n: u32,
+}
+
+/// Open causal chain of an in-flight request. One entry per *active*
+/// request — the windowed-mode memory contract.
+#[derive(Clone, Copy, Debug, Default)]
+struct Open {
+    t_arrive: f64,
+    t_admit: f64,
+    t_first_work: f64,
+    prefill_compute: f64,
+    t_prefill_done: f64,
+    prefill_replica: u32,
+    kv_wait: f64,
+    kv_src: u32,
+    kv_dst: u32,
+    t_kv_done: f64,
+    t_join: f64,
+    has_admit: bool,
+    has_work: bool,
+    has_prefill_done: bool,
+    has_kv_done: bool,
+    has_join: bool,
+}
+
+/// Streaming attribution accumulator: feed it every [`TraceEvent`] in
+/// stamp order (via [`AttribRecorder`] online, or [`attribute_log`] in
+/// replay) and [`Attributor::finish`] the report.
+#[derive(Clone, Debug)]
+pub struct Attributor {
+    window_s: f64,
+    keep_requests: bool,
+    open: BTreeMap<u32, Open>,
+    /// Requests whose prefill chunks were scheduled in the burst the
+    /// engine is about to stamp, per replica (`PrefillChunk` precedes its
+    /// `Burst` at the same timestamp).
+    pending_chunks: BTreeMap<u32, Vec<u32>>,
+    /// Last prefill burst per replica, `(start, dur)` — matches unchunked
+    /// disaggregated prefills to their burst (`PrefillDone` lands
+    /// bit-exactly on `start + dur`, the engine's own heap key).
+    last_burst: BTreeMap<u32, (f64, f64)>,
+    // --- aggregates (all O(replicas + routes + windows)) ---
+    n: usize,
+    totals: BlameVector,
+    per_replica: BTreeMap<u32, BlameVector>,
+    per_route: BTreeMap<(u32, u32), (f64, f64)>,
+    per_nic: BTreeMap<u32, (f64, f64)>,
+    stalls: BTreeMap<u32, usize>,
+    windows: Vec<WindowBlame>,
+    latency_sum: f64,
+    ttft_sum: f64,
+    /// KV queue-wait folded in engine emission order — the bit-exact
+    /// anchor against `SimStats::kv_link_wait_s` (includes transfers whose
+    /// requests never finished).
+    kv_wait_seen_s: f64,
+    ttft_sketch: QuantileSketch,
+    tbt_sketch: QuantileSketch,
+    latency_sketch: QuantileSketch,
+    requests: Vec<RequestBlame>,
+}
+
+impl Attributor {
+    /// `keep_requests` retains per-request [`RequestBlame`] vectors
+    /// (`RecordMode::Full`); the windowed path passes `false` and keeps
+    /// only the aggregates.
+    pub fn new(window_s: f64, keep_requests: bool) -> Attributor {
+        Attributor {
+            window_s: if window_s > 0.0 { window_s } else { DEFAULT_WINDOW_S },
+            keep_requests,
+            open: BTreeMap::new(),
+            pending_chunks: BTreeMap::new(),
+            last_burst: BTreeMap::new(),
+            n: 0,
+            totals: BlameVector::default(),
+            per_replica: BTreeMap::new(),
+            per_route: BTreeMap::new(),
+            per_nic: BTreeMap::new(),
+            stalls: BTreeMap::new(),
+            windows: Vec::new(),
+            latency_sum: 0.0,
+            ttft_sum: 0.0,
+            kv_wait_seen_s: 0.0,
+            ttft_sketch: QuantileSketch::new(),
+            tbt_sketch: QuantileSketch::new(),
+            latency_sketch: QuantileSketch::new(),
+            requests: Vec::new(),
+        }
+    }
+
+    /// In-flight chain count (the windowed-memory contract's observable).
+    pub fn open_len(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Observe one event. Events must arrive in stamp order (the engine's
+    /// emission order); same-stamp ordering follows emission order too,
+    /// which the chunk→burst and done→burst matches rely on.
+    pub fn observe(&mut self, t: f64, ev: TraceEvent) {
+        match ev {
+            TraceEvent::Arrive { req } => {
+                let o = self.open.entry(req).or_default();
+                o.t_arrive = t;
+            }
+            TraceEvent::Admit { req, replica } => {
+                if let Some(o) = self.open.get_mut(&req) {
+                    // Re-admission after a rescheduling blackout restarts
+                    // the queue clock only if no prefill work ran yet;
+                    // otherwise the blackout is interleave, not admission.
+                    if !o.has_admit || !o.has_work {
+                        o.t_admit = t;
+                        o.has_admit = true;
+                    }
+                    o.prefill_replica = replica;
+                }
+            }
+            TraceEvent::Hold { .. } => {}
+            TraceEvent::Reject { req } => {
+                self.open.remove(&req);
+            }
+            TraceEvent::MemStall { replica } => {
+                *self.stalls.entry(replica).or_default() += 1;
+            }
+            TraceEvent::PrefillChunk { req, replica, .. } => {
+                self.pending_chunks.entry(replica).or_default().push(req);
+            }
+            TraceEvent::Burst { replica, lane, dur_s } => {
+                if let Some(reqs) = self.pending_chunks.get_mut(&replica) {
+                    for req in reqs.drain(..) {
+                        if let Some(o) = self.open.get_mut(&req) {
+                            o.prefill_compute += dur_s;
+                            if !o.has_work {
+                                o.t_first_work = t;
+                                o.has_work = true;
+                            }
+                        }
+                    }
+                }
+                if lane == Lane::Prefill {
+                    self.last_burst.insert(replica, (t, dur_s));
+                }
+            }
+            TraceEvent::PrefillDone { req, replica } => {
+                if let Some(o) = self.open.get_mut(&req) {
+                    o.t_prefill_done = t;
+                    o.prefill_replica = replica;
+                    o.has_prefill_done = true;
+                    if !o.has_work {
+                        // Unchunked disaggregated prefill emits no chunk
+                        // events; its whole-batch burst ends exactly at
+                        // this stamp (`start + dur` is the engine's own
+                        // completion key, so the f64 match is exact).
+                        if let Some(&(bs, bd)) = self.last_burst.get(&replica) {
+                            if bs + bd == t {
+                                o.prefill_compute += bd;
+                                o.t_first_work = bs;
+                                o.has_work = true;
+                            }
+                        }
+                    }
+                }
+            }
+            TraceEvent::KvEnqueue { req, src, dst, wait_s, .. } => {
+                self.kv_wait_seen_s += wait_s;
+                if let Some(o) = self.open.get_mut(&req) {
+                    o.kv_wait += wait_s;
+                    o.kv_src = src;
+                    o.kv_dst = dst;
+                }
+            }
+            TraceEvent::KvXfer { .. } => {}
+            TraceEvent::KvDone { req, src, dst } => {
+                if let Some(o) = self.open.get_mut(&req) {
+                    o.t_kv_done = t;
+                    o.kv_src = src;
+                    o.kv_dst = dst;
+                    o.has_kv_done = true;
+                }
+            }
+            TraceEvent::DecodeJoin { req, .. } => {
+                if let Some(o) = self.open.get_mut(&req) {
+                    if !o.has_join {
+                        o.t_join = t;
+                        o.has_join = true;
+                    }
+                }
+            }
+            TraceEvent::Finish { req, replica, output_len } => {
+                if let Some(o) = self.open.remove(&req) {
+                    self.fold(t, req, replica, output_len, &o);
+                }
+            }
+            TraceEvent::Quiesce { .. }
+            | TraceEvent::Activate { .. }
+            | TraceEvent::PrefixHit { .. }
+            | TraceEvent::PrefixMiss { .. }
+            | TraceEvent::PrefixEvict { .. } => {}
+        }
+    }
+
+    /// Decompose one finished chain and fold it into the aggregates.
+    fn fold(&mut self, t: f64, req: u32, replica: u32, output_len: u32, o: &Open) {
+        let latency = t - o.t_arrive;
+        let t_admit = if o.has_admit { o.t_admit } else { o.t_arrive };
+        let t_pd = if o.has_prefill_done { o.t_prefill_done } else { t };
+        let mut b = BlameVector::default();
+        b.c[ADMISSION_WAIT] = t_admit - o.t_arrive;
+        if o.has_work {
+            b.c[PREFILL_QUEUE] = o.t_first_work - t_admit;
+            b.c[PREFILL_COMPUTE] = o.prefill_compute;
+            // Remainder of the admit → prefill-done span: the request sat
+            // admitted while *other* requests' chunks ran (SARATHI
+            // interleaving), or drained through a rescheduling blackout.
+            b.c[PREFILL_INTERLEAVE] =
+                (t_pd - t_admit) - (o.t_first_work - t_admit) - o.prefill_compute;
+        } else {
+            // No burst ever matched (fully degenerate chain): the whole
+            // span up to prefill-done is queueing.
+            b.c[PREFILL_QUEUE] = t_pd - t_admit;
+        }
+        if o.has_kv_done {
+            b.c[KV_SERIALIZE_WAIT] = o.kv_wait;
+            // Chunked transfers credit prefill overlap, so `done −
+            // prefill_done` is `wait + transmit − credit`; the ledger
+            // bounds the credit by the transmit time, keeping this term
+            // non-negative.
+            b.c[KV_TRANSMIT] = (o.t_kv_done - t_pd) - o.kv_wait;
+        }
+        let t_ready = if o.has_kv_done { o.t_kv_done } else { t_pd };
+        let t_join = if o.has_join { o.t_join } else { t_ready };
+        b.c[DECODE_BATCH_WAIT] = t_join - t_ready;
+        b.c[DECODE_COMPUTE] = t - t_join;
+        b.close(latency);
+
+        self.n += 1;
+        self.latency_sum += latency;
+        let ttft = t_pd - o.t_arrive;
+        self.ttft_sum += ttft;
+        for i in 0..N_COMPONENTS {
+            self.totals.c[i] += b.c[i];
+        }
+        {
+            let pre = self.per_replica.entry(o.prefill_replica).or_default();
+            for i in ADMISSION_WAIT..=PREFILL_INTERLEAVE {
+                pre.c[i] += b.c[i];
+            }
+        }
+        {
+            let dec = self.per_replica.entry(replica).or_default();
+            dec.c[DECODE_BATCH_WAIT] += b.c[DECODE_BATCH_WAIT];
+            dec.c[DECODE_COMPUTE] += b.c[DECODE_COMPUTE];
+        }
+        if o.has_kv_done {
+            let r = self.per_route.entry((o.kv_src, o.kv_dst)).or_default();
+            r.0 += b.c[KV_SERIALIZE_WAIT];
+            r.1 += b.c[KV_TRANSMIT];
+            let n = self.per_nic.entry(o.kv_src).or_default();
+            n.0 += b.c[KV_SERIALIZE_WAIT];
+            n.1 += b.c[KV_TRANSMIT];
+        }
+        let w = (t / self.window_s).max(0.0) as usize;
+        if w >= self.windows.len() {
+            self.windows.resize(w + 1, WindowBlame::default());
+        }
+        self.windows[w].ttft_s += ttft;
+        self.windows[w].tbt_s += t - t_pd;
+        self.windows[w].n += 1;
+        self.ttft_sketch.push(ttft);
+        self.tbt_sketch.push((t - t_pd) / (output_len.saturating_sub(1).max(1)) as f64);
+        self.latency_sketch.push(latency);
+        if self.keep_requests {
+            self.requests.push(RequestBlame {
+                req,
+                arrival: o.t_arrive,
+                finish: t,
+                replica,
+                blame: b,
+            });
+        }
+    }
+
+    /// Close the accumulator into the exported report. Requests still
+    /// in flight are dropped (counted in [`AttrReport::open_at_end`]) —
+    /// blame only covers completed chains, like every latency metric.
+    pub fn finish(self) -> AttrReport {
+        AttrReport {
+            n: self.n,
+            window_s: self.window_s,
+            totals: self.totals,
+            per_replica: self.per_replica,
+            per_route: self.per_route,
+            per_nic: self.per_nic,
+            stalls: self.stalls,
+            windows: self.windows,
+            latency_sum: self.latency_sum,
+            ttft_sum: self.ttft_sum,
+            kv_wait_seen_s: self.kv_wait_seen_s,
+            ttft_sketch: self.ttft_sketch,
+            tbt_sketch: self.tbt_sketch,
+            latency_sketch: self.latency_sketch,
+            requests: self.requests,
+            open_at_end: self.open.len(),
+        }
+    }
+}
+
+/// [`TraceSink`] that tees every event into an [`Attributor`] *before*
+/// the ring-buffer [`Recorder`]'s sampling/wrap, so attribution is exact
+/// regardless of `--trace-sample` or ring capacity.
+#[derive(Clone, Debug)]
+pub struct AttribRecorder {
+    pub rec: Recorder,
+    pub attr: Attributor,
+}
+
+impl AttribRecorder {
+    pub fn new(rec: Recorder, attr: Attributor) -> AttribRecorder {
+        AttribRecorder { rec, attr }
+    }
+}
+
+impl TraceSink for AttribRecorder {
+    #[inline]
+    fn emit(&mut self, t: f64, ev: TraceEvent) {
+        self.attr.observe(t, ev);
+        self.rec.emit(t, ev);
+    }
+
+    #[inline]
+    fn recorder(&mut self) -> Option<&mut Recorder> {
+        Some(&mut self.rec)
+    }
+
+    #[inline]
+    fn active(&mut self) -> Option<&mut dyn TraceSink> {
+        Some(self)
+    }
+}
+
+/// Replay attribution over a finished trace. Exact only when the log kept
+/// everything (`sample_rate == 1.0`, `dropped == 0`); a sampled log still
+/// yields an unbiased *per-kept-request* report.
+pub fn attribute_log(log: &TraceLog, window_s: f64) -> AttrReport {
+    let mut a = Attributor::new(window_s, true);
+    for s in &log.events {
+        a.observe(s.t, s.ev);
+    }
+    a.finish()
+}
+
+/// The cluster-wide bottleneck report (`hexgen2 attribute` /
+/// `--attribution`, schema `hexgen2-attr/v1`).
+#[derive(Clone, Debug)]
+pub struct AttrReport {
+    /// Finished requests attributed.
+    pub n: usize,
+    pub window_s: f64,
+    /// Cluster-wide blame totals, seconds per component.
+    pub totals: BlameVector,
+    /// Prefill-side components on the prefill replica, decode-side on the
+    /// finishing replica (KV components live in the route/NIC maps).
+    pub per_replica: BTreeMap<u32, BlameVector>,
+    /// `(src, dst) → (serialize_wait_s, transmit_s)`.
+    pub per_route: BTreeMap<(u32, u32), (f64, f64)>,
+    /// Egress NIC (prefill src) → `(serialize_wait_s, transmit_s)`.
+    pub per_nic: BTreeMap<u32, (f64, f64)>,
+    /// Memory-stall events per replica (stall *time* surfaces inside
+    /// `prefill_queue`; these counters disambiguate which replica's
+    /// memory caused it).
+    pub stalls: BTreeMap<u32, usize>,
+    pub windows: Vec<WindowBlame>,
+    pub latency_sum: f64,
+    pub ttft_sum: f64,
+    /// Bit-exact anchor against `SimStats::kv_link_wait_s` (accumulated
+    /// in engine emission order over *all* transfers).
+    pub kv_wait_seen_s: f64,
+    pub ttft_sketch: QuantileSketch,
+    /// Per-request mean time-between-tokens (decode span / (out − 1)).
+    pub tbt_sketch: QuantileSketch,
+    pub latency_sketch: QuantileSketch,
+    /// `RecordMode::Full` only; empty in windowed runs.
+    pub requests: Vec<RequestBlame>,
+    /// Chains still open when the run ended (unserved/in-flight).
+    pub open_at_end: usize,
+}
+
+impl AttrReport {
+    /// Aggregate conservation residual: `Σ latency − Σ blame`. Zero per
+    /// request by construction; the aggregate differs only by summation
+    /// re-ordering, so it stays at ulp scale.
+    pub fn residual_s(&self) -> f64 {
+        self.latency_sum - self.totals.total()
+    }
+
+    /// The dominant blame component `(index, seconds)`.
+    pub fn dominant(&self) -> (usize, f64) {
+        let mut best = 0;
+        for i in 1..N_COMPONENTS {
+            if self.totals.c[i] > self.totals.c[best] {
+                best = i;
+            }
+        }
+        (best, self.totals.c[best])
+    }
+
+    /// Name of the dominant component (the drift-audit blame tag).
+    pub fn dominant_name(&self) -> &'static str {
+        COMPONENT_NAMES[self.dominant().0]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Advisor
+// ---------------------------------------------------------------------------
+
+/// Everything the advisor needs to *price* a lever: the incumbent
+/// partition and the planner inputs that scored it. Built by the deploy
+/// layer from the spec + plan; without it ([`advise`] with `None`) the
+/// advisor still ranks, it just cannot price.
+#[derive(Clone, Debug)]
+pub struct AdvisorCtx<'a> {
+    pub cluster: &'a Cluster,
+    pub model: &'a LlmSpec,
+    pub task: TaskProfile,
+    pub period: f64,
+    /// Incumbent device partition (`Placement` group devices).
+    pub groups: Vec<Vec<usize>>,
+    pub objective: Objective,
+    /// Link model the plan was chosen (and the run executed) under.
+    pub link: Option<LinkModel>,
+}
+
+/// One ranked "what to fix next" line: a blame component, the planner
+/// lever that attacks it, and the incumbent's re-scored objective with
+/// the corresponding capacity perturbed.
+#[derive(Clone, Debug)]
+pub struct Advice {
+    /// Component index (into [`COMPONENT_NAMES`]).
+    pub component: usize,
+    pub blame_s: f64,
+    /// Fraction of total attributed latency.
+    pub share: f64,
+    pub lever: &'static str,
+    /// Incumbent score under the run's own conditions (0 when unpriced).
+    pub baseline_score: f64,
+    /// Incumbent score with the lever's capacity perturbation applied.
+    pub predicted_score: f64,
+}
+
+impl Advice {
+    pub fn component_name(&self) -> &'static str {
+        COMPONENT_NAMES[self.component]
+    }
+
+    /// Predicted objective gain of pulling the lever (0 when unpriced).
+    pub fn gain(&self) -> f64 {
+        self.predicted_score - self.baseline_score
+    }
+}
+
+/// The planner lever that attacks a blame component.
+pub fn lever_for(component: usize) -> &'static str {
+    match component {
+        ADMISSION_WAIT | PREFILL_QUEUE | PREFILL_COMPUTE => "shift-pd-split-toward-prefill",
+        PREFILL_INTERLEAVE => "raise-chunk-size",
+        KV_SERIALIZE_WAIT | KV_TRANSMIT => "add-kv-bandwidth",
+        _ => "shift-pd-split-toward-decode",
+    }
+}
+
+/// Re-score the incumbent with a perturbed task/link — the pricing
+/// primitive (a fresh [`StrategyCache`] per call: the advisor runs once
+/// per report, not in the planner's hot loop).
+fn rescore(ctx: &AdvisorCtx, task: &TaskProfile, link: Option<LinkModel>) -> f64 {
+    let cache = StrategyCache::new();
+    evaluate_partition_with(
+        ctx.cluster,
+        ctx.model,
+        task,
+        ctx.period,
+        &ctx.groups,
+        6,
+        ctx.objective,
+        link,
+        &cache,
+    )
+    .map(|p| p.objective_score)
+    .unwrap_or(0.0)
+}
+
+/// Rank blame components (largest first) and price each against its
+/// lever by re-scoring the incumbent through `evaluate_partition` with
+/// the corresponding capacity perturbed:
+///
+/// - **add-kv-bandwidth** — drop the KV-contention discount (score the
+///   partition as if the fabric kept up): the gap *is* the bandwidth
+///   headroom.
+/// - **shift-pd-split-toward-prefill / -decode** — lighten the blamed
+///   phase's demand by 10% (`s_in`/`s_out` × 0.9): the score delta prices
+///   what one step of P:D rebalancing buys.
+/// - **raise-chunk-size** — interleave waits shrink as chunks grow;
+///   modeled as the same 10% prefill-demand reclaim.
+pub fn advise(rep: &AttrReport, ctx: Option<&AdvisorCtx>) -> Vec<Advice> {
+    let mut order: Vec<usize> = (0..N_COMPONENTS).collect();
+    // Stable by construction: sort_by on equal keys keeps index order.
+    order.sort_by(|&a, &b| {
+        rep.totals.c[b].partial_cmp(&rep.totals.c[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let total = rep.totals.total();
+    let baseline = ctx.map(|c| rescore(c, &c.task, c.link)).unwrap_or(0.0);
+    order
+        .into_iter()
+        .filter(|&i| rep.totals.c[i] > 0.0)
+        .map(|i| {
+            let lever = lever_for(i);
+            let predicted = match ctx {
+                None => 0.0,
+                Some(c) => match lever {
+                    "add-kv-bandwidth" => rescore(c, &c.task, None),
+                    "shift-pd-split-toward-decode" => {
+                        let t = TaskProfile::new(1, c.task.s_in, c.task.s_out * 0.9);
+                        rescore(c, &t, c.link)
+                    }
+                    // toward-prefill and raise-chunk-size both reclaim
+                    // prefill-side demand.
+                    _ => {
+                        let t = TaskProfile::new(1, c.task.s_in * 0.9, c.task.s_out);
+                        rescore(c, &t, c.link)
+                    }
+                },
+            };
+            Advice {
+                component: i,
+                blame_s: rep.totals.c[i],
+                share: if total > 0.0 { rep.totals.c[i] / total } else { 0.0 },
+                lever,
+                baseline_score: baseline,
+                predicted_score: predicted,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Export
+// ---------------------------------------------------------------------------
+
+fn blame_obj(b: &BlameVector) -> Vec<(&'static str, Json)> {
+    (0..N_COMPONENTS).map(|i| (COMPONENT_NAMES[i], json::num(b.c[i]))).collect()
+}
+
+/// The `--attribution` file format (schema `hexgen2-attr/v1`): blame
+/// totals + shares, per-replica/route/NIC splits, the TTFT-vs-TBT window
+/// series, sketch quantiles, and the ranked advisor verdicts.
+pub fn attr_json(rep: &AttrReport, advice: &[Advice]) -> Json {
+    let total = rep.totals.total();
+    let mut share = BlameVector::default();
+    if total > 0.0 {
+        for i in 0..N_COMPONENTS {
+            share.c[i] = rep.totals.c[i] / total;
+        }
+    }
+    let per_replica: Vec<Json> = rep
+        .per_replica
+        .iter()
+        .map(|(r, b)| {
+            let mut fields = vec![("replica", json::num(*r as f64))];
+            fields.extend(blame_obj(b));
+            json::obj(fields)
+        })
+        .collect();
+    let per_route: Vec<Json> = rep
+        .per_route
+        .iter()
+        .map(|((s, d), (w, x))| {
+            json::obj(vec![
+                ("src", json::num(*s as f64)),
+                ("dst", json::num(*d as f64)),
+                ("serialize_wait_s", json::num(*w)),
+                ("transmit_s", json::num(*x)),
+            ])
+        })
+        .collect();
+    let per_nic: Vec<Json> = rep
+        .per_nic
+        .iter()
+        .map(|(n, (w, x))| {
+            json::obj(vec![
+                ("nic", json::num(*n as f64)),
+                ("serialize_wait_s", json::num(*w)),
+                ("transmit_s", json::num(*x)),
+            ])
+        })
+        .collect();
+    let stalls: Vec<Json> = rep
+        .stalls
+        .iter()
+        .map(|(r, n)| {
+            json::obj(vec![("replica", json::num(*r as f64)), ("stalls", json::num(*n as f64))])
+        })
+        .collect();
+    let windows: Vec<Json> = rep
+        .windows
+        .iter()
+        .enumerate()
+        .filter(|(_, w)| w.n > 0)
+        .map(|(i, w)| {
+            json::obj(vec![
+                ("window", json::num(i as f64)),
+                ("t0_s", json::num(i as f64 * rep.window_s)),
+                ("ttft_s", json::num(w.ttft_s)),
+                ("tbt_s", json::num(w.tbt_s)),
+                ("n", json::num(w.n as f64)),
+            ])
+        })
+        .collect();
+    let q = |sk: &QuantileSketch| {
+        json::obj(vec![
+            ("p50", json::num(sk.quantile(0.50))),
+            ("p95", json::num(sk.quantile(0.95))),
+            ("p99", json::num(sk.quantile(0.99))),
+        ])
+    };
+    let advisor: Vec<Json> = advice
+        .iter()
+        .enumerate()
+        .map(|(rank, a)| {
+            json::obj(vec![
+                ("rank", json::num(rank as f64)),
+                ("component", json::s(a.component_name())),
+                ("blame_s", json::num(a.blame_s)),
+                ("share", json::num(a.share)),
+                ("lever", json::s(a.lever)),
+                ("baseline_score", json::num(a.baseline_score)),
+                ("predicted_score", json::num(a.predicted_score)),
+                ("gain", json::num(a.gain())),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("schema", json::s("hexgen2-attr/v1")),
+        ("n_requests", json::num(rep.n as f64)),
+        ("open_at_end", json::num(rep.open_at_end as f64)),
+        ("window_s", json::num(rep.window_s)),
+        ("latency_sum_s", json::num(rep.latency_sum)),
+        ("ttft_sum_s", json::num(rep.ttft_sum)),
+        ("blame_total_s", json::num(total)),
+        ("conservation_residual_s", json::num(rep.residual_s())),
+        ("kv_wait_seen_s", json::num(rep.kv_wait_seen_s)),
+        ("totals", json::obj(blame_obj(&rep.totals))),
+        ("share", json::obj(blame_obj(&share))),
+        ("per_replica", json::arr(per_replica)),
+        ("per_route", json::arr(per_route)),
+        ("per_nic", json::arr(per_nic)),
+        ("mem_stalls", json::arr(stalls)),
+        ("windows", json::arr(windows)),
+        (
+            "quantiles",
+            json::obj(vec![
+                ("ttft", q(&rep.ttft_sketch)),
+                ("tbt", q(&rep.tbt_sketch)),
+                ("latency", q(&rep.latency_sketch)),
+            ]),
+        ),
+        ("advisor", json::arr(advisor)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A full disaggregated chain with every phase distinct.
+    fn disagg_chain(req: u32) -> Vec<(f64, TraceEvent)> {
+        vec![
+            (0.0, TraceEvent::Arrive { req }),
+            (1.0, TraceEvent::Admit { req, replica: 0 }),
+            (1.0, TraceEvent::PrefillChunk { req, replica: 0, chunk: 0 }),
+            (1.0, TraceEvent::Burst { replica: 0, lane: Lane::Prefill, dur_s: 0.5 }),
+            (2.0, TraceEvent::PrefillChunk { req, replica: 0, chunk: 1 }),
+            (2.0, TraceEvent::Burst { replica: 0, lane: Lane::Prefill, dur_s: 0.5 }),
+            (2.5, TraceEvent::PrefillDone { req, replica: 0 }),
+            (
+                2.5,
+                TraceEvent::KvEnqueue { req, src: 0, dst: 1, bytes: 1e6, wait_s: 0.25 },
+            ),
+            (3.5, TraceEvent::KvDone { req, src: 0, dst: 1 }),
+            (4.0, TraceEvent::DecodeJoin { req, replica: 1 }),
+            (6.0, TraceEvent::Finish { req, replica: 1, output_len: 16 }),
+        ]
+    }
+
+    fn run(events: &[(f64, TraceEvent)]) -> AttrReport {
+        let mut a = Attributor::new(60.0, true);
+        for &(t, ev) in events {
+            a.observe(t, ev);
+        }
+        a.finish()
+    }
+
+    #[test]
+    fn disagg_chain_decomposes_every_phase() {
+        let rep = run(&disagg_chain(0));
+        assert_eq!(rep.n, 1);
+        let b = rep.requests[0].blame;
+        assert_eq!(b.c[ADMISSION_WAIT], 1.0);
+        // First chunk starts the moment it was admitted.
+        assert_eq!(b.c[PREFILL_QUEUE], 0.0);
+        assert_eq!(b.c[PREFILL_COMPUTE], 1.0);
+        // Admit 1.0 → done 2.5 is 1.5 s; 1.0 s computed → 0.5 s interleave.
+        assert!((b.c[PREFILL_INTERLEAVE] - 0.5).abs() < 1e-12);
+        assert_eq!(b.c[KV_SERIALIZE_WAIT], 0.25);
+        // KvDone − PrefillDone = 1.0; minus 0.25 wait.
+        assert!((b.c[KV_TRANSMIT] - 0.75).abs() < 1e-12);
+        assert_eq!(b.c[DECODE_BATCH_WAIT], 0.5);
+        assert_eq!(b.c[DECODE_COMPUTE], 2.0);
+        // Conservation, bit-exact.
+        assert_eq!(b.total(), 6.0);
+        assert_eq!(rep.requests[0].latency(), 6.0);
+        // Route/NIC split captured.
+        assert_eq!(rep.per_route.get(&(0, 1)).unwrap().0, 0.25);
+        assert_eq!(rep.per_nic.get(&0).unwrap().0, 0.25);
+        assert_eq!(rep.kv_wait_seen_s, 0.25);
+    }
+
+    #[test]
+    fn conservation_is_bit_exact_on_awkward_floats() {
+        // Timestamps chosen so the naive sum of differences rounds.
+        let t0 = 1.0 / 3.0;
+        let ts = [t0, t0 + 0.1, t0 + 0.1 + 1e-9, t0 + 0.7, t0 + 0.7 + 0.3, t0 + 1.1, t0 + 2.3];
+        let req = 7;
+        let events = vec![
+            (ts[0], TraceEvent::Arrive { req }),
+            (ts[1], TraceEvent::Admit { req, replica: 0 }),
+            (ts[2], TraceEvent::PrefillChunk { req, replica: 0, chunk: 0 }),
+            (ts[2], TraceEvent::Burst { replica: 0, lane: Lane::Prefill, dur_s: 0.13 }),
+            (ts[3], TraceEvent::PrefillDone { req, replica: 0 }),
+            (ts[3], TraceEvent::KvEnqueue { req, src: 0, dst: 1, bytes: 1.0, wait_s: 0.017 }),
+            (ts[4], TraceEvent::KvDone { req, src: 0, dst: 1 }),
+            (ts[5], TraceEvent::DecodeJoin { req, replica: 1 }),
+            (ts[6], TraceEvent::Finish { req, replica: 1, output_len: 4 }),
+        ];
+        let rep = run(&events);
+        let b = rep.requests[0].blame;
+        assert_eq!(b.total(), ts[6] - ts[0], "blame must sum bit-exactly to latency");
+    }
+
+    #[test]
+    fn unchunked_prefill_matches_its_burst() {
+        let req = 3;
+        let events = vec![
+            (0.0, TraceEvent::Arrive { req }),
+            (0.5, TraceEvent::Admit { req, replica: 2 }),
+            // Whole-batch burst, no chunk events (unchunked disagg).
+            (1.0, TraceEvent::Burst { replica: 2, lane: Lane::Prefill, dur_s: 0.8 }),
+            (1.8, TraceEvent::PrefillDone { req, replica: 2 }),
+            (1.8, TraceEvent::KvEnqueue { req, src: 2, dst: 3, bytes: 1.0, wait_s: 0.0 }),
+            (2.0, TraceEvent::KvDone { req, src: 2, dst: 3 }),
+            (2.0, TraceEvent::DecodeJoin { req, replica: 3 }),
+            (3.0, TraceEvent::Finish { req, replica: 3, output_len: 8 }),
+        ];
+        let rep = run(&events);
+        let b = rep.requests[0].blame;
+        assert!((b.c[PREFILL_COMPUTE] - 0.8).abs() < 1e-12);
+        assert!((b.c[PREFILL_QUEUE] - 0.5).abs() < 1e-12);
+        assert_eq!(b.c[PREFILL_INTERLEAVE], 0.0);
+        assert_eq!(b.total(), 3.0);
+    }
+
+    #[test]
+    fn colocated_chain_has_no_kv_or_batch_wait() {
+        let req = 1;
+        let events = vec![
+            (0.0, TraceEvent::Arrive { req }),
+            (0.2, TraceEvent::Admit { req, replica: 0 }),
+            (0.4, TraceEvent::PrefillChunk { req, replica: 0, chunk: 0 }),
+            (0.4, TraceEvent::Burst { replica: 0, lane: Lane::Colocated, dur_s: 0.3 }),
+            (0.7, TraceEvent::PrefillDone { req, replica: 0 }),
+            (0.7, TraceEvent::DecodeJoin { req, replica: 0 }),
+            (1.5, TraceEvent::Finish { req, replica: 0, output_len: 8 }),
+        ];
+        let rep = run(&events);
+        let b = rep.requests[0].blame;
+        assert_eq!(b.c[KV_SERIALIZE_WAIT], 0.0);
+        assert_eq!(b.c[KV_TRANSMIT], 0.0);
+        assert_eq!(b.c[DECODE_BATCH_WAIT], 0.0);
+        assert!((b.c[DECODE_COMPUTE] - 0.8).abs() < 1e-12);
+        assert_eq!(b.total(), 1.5);
+    }
+
+    #[test]
+    fn rejected_and_inflight_requests_are_not_attributed() {
+        let mut a = Attributor::new(60.0, true);
+        a.observe(0.0, TraceEvent::Arrive { req: 0 });
+        a.observe(0.1, TraceEvent::Reject { req: 0 });
+        a.observe(0.2, TraceEvent::Arrive { req: 1 });
+        a.observe(0.3, TraceEvent::Admit { req: 1, replica: 0 });
+        assert_eq!(a.open_len(), 1);
+        let rep = a.finish();
+        assert_eq!(rep.n, 0);
+        assert_eq!(rep.open_at_end, 1);
+    }
+
+    #[test]
+    fn windows_split_ttft_from_tbt() {
+        let mut events = disagg_chain(0);
+        // Second request finishing in a later window.
+        events.extend(vec![
+            (70.0, TraceEvent::Arrive { req: 1 }),
+            (70.0, TraceEvent::Admit { req: 1, replica: 0 }),
+            (71.0, TraceEvent::PrefillChunk { req: 1, replica: 0, chunk: 0 }),
+            (71.0, TraceEvent::Burst { replica: 0, lane: Lane::Prefill, dur_s: 1.0 }),
+            (72.0, TraceEvent::PrefillDone { req: 1, replica: 0 }),
+            (72.0, TraceEvent::KvEnqueue { req: 1, src: 0, dst: 1, bytes: 1.0, wait_s: 0.0 }),
+            (72.5, TraceEvent::KvDone { req: 1, src: 0, dst: 1 }),
+            (72.5, TraceEvent::DecodeJoin { req: 1, replica: 1 }),
+            (75.0, TraceEvent::Finish { req: 1, replica: 1, output_len: 8 }),
+        ]);
+        let rep = run(&events);
+        assert_eq!(rep.windows.len(), 2);
+        assert_eq!(rep.windows[0].n, 1);
+        assert_eq!(rep.windows[1].n, 1);
+        // Req 0: ttft 2.5, decode span 3.5. Req 1: ttft 2.0, span 3.0.
+        assert!((rep.windows[0].ttft_s - 2.5).abs() < 1e-12);
+        assert!((rep.windows[0].tbt_s - 3.5).abs() < 1e-12);
+        assert!((rep.windows[1].ttft_s - 2.0).abs() < 1e-12);
+        assert!((rep.windows[1].tbt_s - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advisor_ranks_dominant_component_first() {
+        let rep = run(&disagg_chain(0));
+        let advice = advise(&rep, None);
+        assert!(!advice.is_empty());
+        // decode_compute (2.0 s) dominates this chain.
+        assert_eq!(advice[0].component_name(), "decode_compute");
+        assert_eq!(advice[0].lever, "shift-pd-split-toward-decode");
+        assert_eq!(rep.dominant_name(), "decode_compute");
+        // Shares sum to ~1 over the emitted advice (all components > 0
+        // are listed).
+        let s: f64 = advice.iter().map(|a| a.share).sum();
+        assert!((s - 1.0).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn lever_mapping_covers_all_components() {
+        assert_eq!(lever_for(KV_SERIALIZE_WAIT), "add-kv-bandwidth");
+        assert_eq!(lever_for(KV_TRANSMIT), "add-kv-bandwidth");
+        assert_eq!(lever_for(DECODE_BATCH_WAIT), "shift-pd-split-toward-decode");
+        assert_eq!(lever_for(DECODE_COMPUTE), "shift-pd-split-toward-decode");
+        assert_eq!(lever_for(ADMISSION_WAIT), "shift-pd-split-toward-prefill");
+        assert_eq!(lever_for(PREFILL_QUEUE), "shift-pd-split-toward-prefill");
+        assert_eq!(lever_for(PREFILL_COMPUTE), "shift-pd-split-toward-prefill");
+        assert_eq!(lever_for(PREFILL_INTERLEAVE), "raise-chunk-size");
+    }
+
+    #[test]
+    fn attr_json_schema_and_conservation_fields() {
+        let rep = run(&disagg_chain(0));
+        let advice = advise(&rep, None);
+        let j = attr_json(&rep, &advice);
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("hexgen2-attr/v1"));
+        assert_eq!(j.get("n_requests").unwrap().as_usize(), Some(1));
+        let resid = j.get("conservation_residual_s").unwrap().as_f64().unwrap();
+        assert_eq!(resid, 0.0, "single request: aggregate == per-request sum");
+        let totals = j.get("totals").unwrap();
+        assert_eq!(totals.get("decode_compute").unwrap().as_f64(), Some(2.0));
+        let adv = j.get("advisor").unwrap().as_arr().unwrap();
+        assert_eq!(adv[0].get("component").unwrap().as_str(), Some("decode_compute"));
+        assert!(j.get("per_nic").unwrap().as_arr().unwrap().len() == 1);
+    }
+
+    #[test]
+    fn attrib_recorder_sees_events_the_ring_drops() {
+        // Sample rate 0 drops every request-scoped event from the ring,
+        // but the attributor still sees (and attributes) everything.
+        let mut ar = AttribRecorder::new(Recorder::new(0.0, 4), Attributor::new(60.0, true));
+        for &(t, ev) in &disagg_chain(0) {
+            ar.emit(t, ev);
+        }
+        assert_eq!(ar.rec.len(), 2, "only the replica-scoped bursts stay in the ring");
+        let rep = ar.attr.finish();
+        assert_eq!(rep.n, 1);
+        assert_eq!(rep.requests[0].blame.total(), 6.0);
+    }
+
+    #[test]
+    fn replay_matches_online_attribution() {
+        let events = disagg_chain(0);
+        let mut rec = Recorder::new(1.0, 1 << 12);
+        let mut online = Attributor::new(60.0, true);
+        for &(t, ev) in &events {
+            online.observe(t, ev);
+            rec.emit(t, ev);
+        }
+        let replay = attribute_log(&rec.into_log(), 60.0);
+        let a = online.finish();
+        assert_eq!(a.totals, replay.totals);
+        assert_eq!(a.latency_sum, replay.latency_sum);
+        assert_eq!(a.kv_wait_seen_s, replay.kv_wait_seen_s);
+    }
+}

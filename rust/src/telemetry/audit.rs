@@ -51,6 +51,11 @@ pub enum AuditRecord {
         mean_output: f64,
         n: u32,
         mean_kv_wait_s: f64,
+        /// Blamed latency component (DESIGN.md §16): the dominant
+        /// attribution component of the epoch the drift was observed in
+        /// when attribution ran, else a coarse default derived from the
+        /// drift kind ("kv-transfer", "mix", "rate").
+        blamed: String,
     },
     /// A warm re-plan ran for a drift event.
     Replan {
@@ -91,18 +96,26 @@ impl AuditRecord {
                     ("feasible", Json::Bool(*feasible)),
                 ])
             }
-            AuditRecord::Drift { at, kind, rate, mean_input, mean_output, n, mean_kv_wait_s } => {
-                json::obj(vec![
-                    ("record", json::s("drift")),
-                    ("at", json::num(*at)),
-                    ("kind", json::s(kind)),
-                    ("rate", json::num(*rate)),
-                    ("mean_input", json::num(*mean_input)),
-                    ("mean_output", json::num(*mean_output)),
-                    ("window_n", json::num(*n as f64)),
-                    ("mean_kv_wait_s", json::num(*mean_kv_wait_s)),
-                ])
-            }
+            AuditRecord::Drift {
+                at,
+                kind,
+                rate,
+                mean_input,
+                mean_output,
+                n,
+                mean_kv_wait_s,
+                blamed,
+            } => json::obj(vec![
+                ("record", json::s("drift")),
+                ("at", json::num(*at)),
+                ("kind", json::s(kind)),
+                ("rate", json::num(*rate)),
+                ("mean_input", json::num(*mean_input)),
+                ("mean_output", json::num(*mean_output)),
+                ("window_n", json::num(*n as f64)),
+                ("mean_kv_wait_s", json::num(*mean_kv_wait_s)),
+                ("blamed", json::s(blamed)),
+            ]),
             AuditRecord::Replan { at, to, accepted } => json::obj(vec![
                 ("record", json::s("replan")),
                 ("at", json::num(*at)),
@@ -201,6 +214,7 @@ mod tests {
                 mean_output: 64.0,
                 n: 20,
                 mean_kv_wait_s: 0.0,
+                blamed: "mix".into(),
             },
             AuditRecord::MigrationGate {
                 at: 30.0,
@@ -223,6 +237,7 @@ mod tests {
         assert_eq!(recs_j[0].get("record").unwrap().as_str(), Some("candidate"));
         // The discount field unpacks raw − final.
         assert_eq!(recs_j[0].get("kv_contention_discount").unwrap().as_f64(), Some(2.0));
+        assert_eq!(recs_j[1].get("blamed").unwrap().as_str(), Some("mix"));
         assert_eq!(recs_j[2].get("accepted").unwrap().as_bool(), Some(true));
     }
 }

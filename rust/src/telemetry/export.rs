@@ -280,7 +280,9 @@ pub fn chrome_trace(log: &TraceLog) -> Json {
 /// Windowed counters in the Prometheus text exposition format: one sample
 /// per `window_s`-wide window (label `window="k"` covering
 /// `[k·window_s, (k+1)·window_s)`). `window_s <= 0` collapses to one
-/// all-time window.
+/// all-time window. After the counters come run-scoped p50/p95/p99
+/// summaries for TTFT, per-request mean TBT, and end-to-end latency, and
+/// the KV queue-wait histogram with the transfer ledger's bucket edges.
 pub fn prometheus_dump(log: &TraceLog, window_s: f64) -> String {
     let t_max = log.events.last().map(|s| s.t).unwrap_or(0.0);
     let (window_s, n_win) = if window_s > 0.0 {
@@ -366,6 +368,93 @@ pub fn prometheus_dump(log: &TraceLog, window_s: f64) -> String {
     counter("hexgen2_trace_events_total", "Trace events recorded in the window.", &|w| {
         n_events[w].to_string()
     });
+
+    // Run-scoped summary quantiles: TTFT, per-request mean TBT, and
+    // end-to-end latency through the same t-digest sketch the windowed
+    // aggregator uses (≲2% rank error, exact for small populations), plus
+    // the transfer engine's queue-wait histogram re-derived from
+    // `KvEnqueue` events with the ledger's own bucket edges
+    // ([`Ledger::HIST_EDGES_S`](crate::kvtransfer::Ledger::HIST_EDGES_S)).
+    use crate::kvtransfer::Ledger;
+    use crate::simulator::metrics::QuantileSketch;
+    let mut arrival: BTreeMap<u32, f64> = BTreeMap::new();
+    let mut prefill_done: BTreeMap<u32, f64> = BTreeMap::new();
+    let mut ttft = QuantileSketch::new();
+    let mut tbt = QuantileSketch::new();
+    let mut latency = QuantileSketch::new();
+    let (mut ttft_sum, mut tbt_sum, mut lat_sum) = (0.0f64, 0.0f64, 0.0f64);
+    let mut hist = [0usize; 6];
+    let mut hist_wait_sum = 0.0f64;
+    for &Stamped { t, ev } in &log.events {
+        match ev {
+            TraceEvent::Arrive { req } => {
+                arrival.insert(req, t);
+            }
+            TraceEvent::PrefillDone { req, .. } => {
+                prefill_done.insert(req, t);
+            }
+            TraceEvent::KvEnqueue { wait_s, .. } => {
+                let b = Ledger::HIST_EDGES_S
+                    .iter()
+                    .position(|&edge| wait_s < edge)
+                    .unwrap_or(Ledger::HIST_EDGES_S.len());
+                hist[b] += 1;
+                hist_wait_sum += wait_s;
+            }
+            TraceEvent::Finish { req, output_len, .. } => {
+                let Some(&a) = arrival.get(&req) else { continue };
+                let pd = prefill_done.get(&req).copied().unwrap_or(t);
+                let l = t - a;
+                let tt = pd - a;
+                let per_tok = (t - pd) / (output_len.saturating_sub(1).max(1)) as f64;
+                latency.push(l);
+                lat_sum += l;
+                ttft.push(tt);
+                ttft_sum += tt;
+                tbt.push(per_tok);
+                tbt_sum += per_tok;
+            }
+            _ => {}
+        }
+    }
+    let mut summary = |name: &str, help: &str, sk: &QuantileSketch, sum: f64| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} summary\n"));
+        for (label, q) in [("0.5", 0.50), ("0.95", 0.95), ("0.99", 0.99)] {
+            out.push_str(&format!("{name}{{quantile=\"{label}\"}} {}\n", sk.quantile(q)));
+        }
+        out.push_str(&format!("{name}_sum {sum}\n{name}_count {}\n", sk.count() as u64));
+    };
+    summary(
+        "hexgen2_ttft_seconds",
+        "Time to first token (arrival to prefill completion), t-digest quantiles.",
+        &ttft,
+        ttft_sum,
+    );
+    summary(
+        "hexgen2_tbt_seconds",
+        "Per-request mean time between tokens (decode span / (output_len - 1)).",
+        &tbt,
+        tbt_sum,
+    );
+    summary(
+        "hexgen2_latency_seconds",
+        "End-to-end request latency, t-digest quantiles.",
+        &latency,
+        lat_sum,
+    );
+    out.push_str(
+        "# HELP hexgen2_kv_wait_seconds KV transfer queue wait (transfer-engine ledger buckets).\n\
+         # TYPE hexgen2_kv_wait_seconds histogram\n",
+    );
+    let mut cum = 0usize;
+    for (i, edge) in Ledger::HIST_EDGES_S.iter().enumerate() {
+        cum += hist[i];
+        out.push_str(&format!("hexgen2_kv_wait_seconds_bucket{{le=\"{edge}\"}} {cum}\n"));
+    }
+    cum += hist[Ledger::HIST_EDGES_S.len()];
+    out.push_str(&format!("hexgen2_kv_wait_seconds_bucket{{le=\"+Inf\"}} {cum}\n"));
+    out.push_str(&format!("hexgen2_kv_wait_seconds_sum {hist_wait_sum}\n"));
+    out.push_str(&format!("hexgen2_kv_wait_seconds_count {cum}\n"));
     out
 }
 
@@ -566,5 +655,28 @@ mod tests {
         // Collapsed single window.
         let all = prometheus_dump(&sample_log(), 0.0);
         assert!(all.contains("hexgen2_requests_completed_total{window=\"0\"} 1"));
+    }
+
+    #[test]
+    fn prometheus_dump_summaries_and_histogram() {
+        let text = prometheus_dump(&sample_log(), 1.0);
+        // Summary quantiles: one request, TTFT 0.5s, latency 2s — with a
+        // single insertion every quantile is that exact value.
+        assert!(text.contains("# TYPE hexgen2_ttft_seconds summary"), "{text}");
+        assert!(text.contains("hexgen2_ttft_seconds{quantile=\"0.5\"} 0.5"), "{text}");
+        assert!(text.contains("hexgen2_ttft_seconds{quantile=\"0.99\"} 0.5"), "{text}");
+        assert!(text.contains("hexgen2_latency_seconds{quantile=\"0.95\"} 2\n"), "{text}");
+        assert!(text.contains("hexgen2_latency_seconds_sum 2\n"), "{text}");
+        assert!(text.contains("hexgen2_latency_seconds_count 1\n"), "{text}");
+        assert!(text.contains("# TYPE hexgen2_tbt_seconds summary"), "{text}");
+        assert!(text.contains("hexgen2_tbt_seconds_count 1\n"), "{text}");
+        // KV wait histogram: the single 0.125s wait is ≥0.1 and <1, so the
+        // cumulative buckets step from 0 to 1 at le="1".
+        assert!(text.contains("# TYPE hexgen2_kv_wait_seconds histogram"), "{text}");
+        assert!(text.contains("hexgen2_kv_wait_seconds_bucket{le=\"0.1\"} 0\n"), "{text}");
+        assert!(text.contains("hexgen2_kv_wait_seconds_bucket{le=\"1\"} 1\n"), "{text}");
+        assert!(text.contains("hexgen2_kv_wait_seconds_bucket{le=\"+Inf\"} 1\n"), "{text}");
+        assert!(text.contains("hexgen2_kv_wait_seconds_sum 0.125\n"), "{text}");
+        assert!(text.contains("hexgen2_kv_wait_seconds_count 1\n"), "{text}");
     }
 }

@@ -29,9 +29,14 @@
 //! planner/rescheduler side of the same story: per-candidate objective
 //! breakdowns and migration-gate pricing, exported as JSON.
 
+pub mod attribution;
 pub mod audit;
 pub mod export;
 
+pub use attribution::{
+    advise, attr_json, attribute_log, Advice, AdvisorCtx, AttrReport, AttribRecorder, Attributor,
+    RequestBlame,
+};
 pub use audit::{audit_json, AuditRecord};
 pub use export::{chrome_trace, derive_metrics, prometheus_dump, DerivedMetrics};
 
@@ -152,11 +157,17 @@ pub struct Stamped {
 pub trait TraceSink {
     /// Record `ev` at simulation time `t`.
     fn emit(&mut self, t: f64, ev: TraceEvent);
-    /// The live recorder, if any — policies receive this through
-    /// `PolicyEnv` (as a plain `Option`, since `PolicyEnv` cannot be
-    /// generic behind `dyn ReplicaPolicy`), and the engine uses
-    /// `is_some()` to gate trace-only work like per-chunk span synthesis.
+    /// The live recorder, if any — the engine uses `is_some()` to gate
+    /// trace-only work like per-chunk span synthesis, and drains the ring
+    /// through it at the end of a run.
     fn recorder(&mut self) -> Option<&mut Recorder>;
+    /// The sink itself when recording is active, `None` when it is a
+    /// no-op. Policies receive this through `PolicyEnv` (as a plain
+    /// `Option<&mut dyn TraceSink>`, since `PolicyEnv` cannot be generic
+    /// behind `dyn ReplicaPolicy`) so policy-emitted events (decode joins,
+    /// prefill chunks, mem-stalls) reach *wrapping* sinks — the
+    /// attribution recorder — and not just the raw ring buffer.
+    fn active(&mut self) -> Option<&mut dyn TraceSink>;
 }
 
 /// Tracing off: every emission site compiles to nothing.
@@ -169,6 +180,11 @@ impl TraceSink for NoopSink {
 
     #[inline(always)]
     fn recorder(&mut self) -> Option<&mut Recorder> {
+        None
+    }
+
+    #[inline(always)]
+    fn active(&mut self) -> Option<&mut dyn TraceSink> {
         None
     }
 }
@@ -279,6 +295,11 @@ impl TraceSink for Recorder {
     fn recorder(&mut self) -> Option<&mut Recorder> {
         Some(self)
     }
+
+    #[inline]
+    fn active(&mut self) -> Option<&mut dyn TraceSink> {
+        Some(self)
+    }
 }
 
 /// A finished recording: chronological events plus lane metadata.
@@ -328,6 +349,7 @@ mod tests {
         let mut s = NoopSink;
         s.emit(1.0, TraceEvent::Arrive { req: 0 });
         assert!(s.recorder().is_none());
+        assert!(s.active().is_none());
     }
 
     #[test]

@@ -1,0 +1,413 @@
+//! Critical-path latency attribution contracts (DESIGN.md §16): per-request
+//! blame vectors sum *bit-exactly* to measured end-to-end latency at sample
+//! rate 1.0 on every serving shape (disaggregated, shared-NIC heterogeneous,
+//! colocated); the streaming `RecordMode::Windowed` accumulator reproduces
+//! the Full-mode aggregates from the same event stream; and the bottleneck
+//! advisor names the injected bottleneck in constructed scenarios — a
+//! throttled KV NIC, a starved decode pool, an undersized prefill pool —
+//! and prices levers against the incumbent partition. The satellite closed
+//! loop: with attribution on, `ReschedBackend`'s drift audit records carry
+//! the blamed component.
+
+use std::collections::BTreeMap;
+
+use hexgen2::cluster::settings;
+use hexgen2::costmodel::{ReplicaConfig, TaskProfile};
+use hexgen2::deploy::{DeploymentSpec, HexGen2Planner, ReschedBackend, SimBackend};
+use hexgen2::model::OPT_30B;
+use hexgen2::rescheduler::MonitorConfig;
+use hexgen2::scheduler::{self, Objective, Placement, ScheduleOptions};
+use hexgen2::simulator::{
+    run_colocated_cfg, run_disaggregated_cfg, LinkModel, RecordMode, SimConfig, SimReport,
+};
+use hexgen2::telemetry::attribution::{
+    self, ADMISSION_WAIT, COMPONENT_NAMES, DECODE_BATCH_WAIT, KV_SERIALIZE_WAIT, KV_TRANSMIT,
+    N_COMPONENTS,
+};
+use hexgen2::telemetry::{advise, AdvisorCtx, AttrReport, AuditRecord, Lane, TraceEvent};
+use hexgen2::workload::{Trace, WorkloadKind};
+
+fn schedule(
+    cluster: &hexgen2::cluster::Cluster,
+    kind: WorkloadKind,
+    k: usize,
+    seed: u64,
+) -> Placement {
+    let mut opts = ScheduleOptions::new(kind);
+    opts.max_rounds = 4;
+    opts.force_k = Some(k);
+    opts.seed = seed;
+    scheduler::schedule(cluster, &OPT_30B, &opts).expect("schedules").placement
+}
+
+fn attributed(cfg: SimConfig) -> SimConfig {
+    SimConfig { trace: true, trace_sample_rate: 1.0, attribution: true, ..cfg }
+}
+
+/// The conservation invariant at sample 1.0: every finished request has a
+/// blame vector whose components sum bit-exactly to its measured latency,
+/// and the per-request spans agree with the engine's own records.
+fn assert_blame_conserved(rep: &SimReport, what: &str) {
+    let attr = rep.attr.as_ref().unwrap_or_else(|| panic!("{what}: attribution was on"));
+    assert_eq!(attr.n, rep.records.len(), "{what}: one blame vector per completion");
+    assert_eq!(attr.requests.len(), attr.n, "{what}: Full mode keeps per-request vectors");
+    let by_id: BTreeMap<u32, &hexgen2::simulator::RequestRecord> =
+        rep.records.iter().map(|r| (r.id as u32, r)).collect();
+    for rb in &attr.requests {
+        let rec = by_id
+            .get(&rb.req)
+            .unwrap_or_else(|| panic!("{what}: blamed request {} has no record", rb.req));
+        assert_eq!(rb.arrival, rec.arrival, "{what}: arrival of request {}", rb.req);
+        assert_eq!(rb.finish, rec.completion, "{what}: completion of request {}", rb.req);
+        // The invariant itself: bit-exact, not within-epsilon.
+        assert_eq!(
+            rb.blame.total(),
+            rb.latency(),
+            "{what}: request {} blame does not sum to latency",
+            rb.req
+        );
+        for i in 0..N_COMPONENTS {
+            assert!(
+                rb.blame.c[i] >= -1e-9 * rb.latency().max(1.0),
+                "{what}: request {} component {} is negative: {}",
+                rb.req,
+                COMPONENT_NAMES[i],
+                rb.blame.c[i]
+            );
+        }
+    }
+    // Aggregate residual is pure summation re-ordering: ulp scale.
+    assert!(
+        attr.residual_s().abs() <= 1e-9 * attr.latency_sum.max(1.0),
+        "{what}: aggregate residual {} vs Σ latency {}",
+        attr.residual_s(),
+        attr.latency_sum
+    );
+    // The KV anchor accumulates in engine emission order on both sides.
+    assert_eq!(
+        attr.kv_wait_seen_s, rep.stats.kv_link_wait_s,
+        "{what}: KV queue-wait anchor not bit-exact"
+    );
+}
+
+#[test]
+fn blame_conserves_latency_case_study_disagg() {
+    let c = settings::case_study();
+    let p = schedule(&c, WorkloadKind::Lphd, 4, 0);
+    let trace = Trace::online(WorkloadKind::Lphd, 2.0, 90.0, 11);
+    let rep = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &attributed(SimConfig::default()));
+    assert!(rep.stats.kv_transfers > 0, "disagg run moved no KV");
+    assert_blame_conserved(&rep, "case_study disagg");
+    let attr = rep.attr.as_ref().unwrap();
+    // A disaggregated run transfers KV, so route/NIC blame exists and the
+    // route map's serialize column folds only finished requests' waits.
+    assert!(!attr.per_route.is_empty(), "no KV route blame on a disagg run");
+    assert!(!attr.per_nic.is_empty());
+}
+
+#[test]
+fn blame_conserves_latency_het1_shared_nic() {
+    // Heterogeneous slow routes + serialized NICs: waits are nonzero and
+    // the KV components must still close bit-exactly.
+    let c = settings::het1();
+    let p = schedule(&c, WorkloadKind::Lphd, 4, 7);
+    let trace = Trace::offline(WorkloadKind::Lphd, 80, 13);
+    let cfg = SimConfig { link: LinkModel::SharedNic, ..SimConfig::default() };
+    let rep = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &attributed(cfg));
+    assert_blame_conserved(&rep, "het1 shared-NIC disagg");
+}
+
+#[test]
+fn blame_conserves_latency_colocated() {
+    let c = settings::homogeneous_small();
+    let replicas = vec![ReplicaConfig::new(vec![(0..4).collect()], vec![OPT_30B.n_layers])];
+    let trace = Trace::online(WorkloadKind::Lpld, 1.5, 60.0, 3);
+    let rep = run_colocated_cfg(
+        &c,
+        &OPT_30B,
+        &replicas,
+        &trace,
+        Some(512),
+        &attributed(SimConfig::default()),
+    );
+    assert_blame_conserved(&rep, "colocated chunked prefill");
+    // Colocated serving moves no KV: those components stay exactly zero.
+    let attr = rep.attr.as_ref().unwrap();
+    assert_eq!(attr.totals.c[KV_SERIALIZE_WAIT], 0.0);
+    assert_eq!(attr.totals.c[KV_TRANSMIT], 0.0);
+    assert!(attr.per_route.is_empty());
+}
+
+#[test]
+fn attribution_does_not_perturb_the_simulation() {
+    // The attribution tee is observation only: records and counters equal
+    // the trace-only run's bit-for-bit.
+    let c = settings::case_study();
+    let p = schedule(&c, WorkloadKind::Lphd, 4, 0);
+    let trace = Trace::online(WorkloadKind::Lphd, 2.0, 60.0, 11);
+    let plain = SimConfig { trace: true, trace_sample_rate: 1.0, ..SimConfig::default() };
+    let off = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &plain);
+    let on = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &attributed(SimConfig::default()));
+    assert!(off.attr.is_none());
+    assert!(on.attr.is_some());
+    assert_eq!(off.records.len(), on.records.len());
+    assert_eq!(off.tokens_per_s(), on.tokens_per_s());
+    assert_eq!(off.stats.events, on.stats.events);
+    assert_eq!(off.stats.kv_link_wait_s, on.stats.kv_link_wait_s);
+    for (x, y) in off.records.iter().zip(&on.records) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.completion, y.completion);
+    }
+}
+
+#[test]
+fn windowed_attribution_matches_full_mode() {
+    // Satellite: the streaming accumulator sees the identical event stream
+    // (tracing never perturbs the engine), so every aggregate — totals,
+    // window series, sketch quantiles, the KV anchor — matches Full mode
+    // bit-for-bit; only the per-request vectors are dropped.
+    let c = settings::case_study();
+    let p = schedule(&c, WorkloadKind::Lphd, 4, 0);
+    let trace = Trace::online(WorkloadKind::Lphd, 2.0, 90.0, 11);
+    let full = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &attributed(SimConfig::default()));
+    let wcfg = SimConfig { record_mode: RecordMode::Windowed, ..SimConfig::default() };
+    let win = run_disaggregated_cfg(&c, &OPT_30B, &p, &trace, &attributed(wcfg));
+    let (fa, wa) = (full.attr.as_ref().unwrap(), win.attr.as_ref().unwrap());
+    assert!(!fa.requests.is_empty(), "Full mode keeps per-request vectors");
+    assert!(wa.requests.is_empty(), "Windowed mode must drop per-request vectors");
+    assert_eq!(fa.n, wa.n);
+    assert_eq!(fa.open_at_end, wa.open_at_end);
+    for i in 0..N_COMPONENTS {
+        assert_eq!(fa.totals.c[i], wa.totals.c[i], "component {}", COMPONENT_NAMES[i]);
+    }
+    assert_eq!(fa.latency_sum, wa.latency_sum);
+    assert_eq!(fa.ttft_sum, wa.ttft_sum);
+    assert_eq!(fa.kv_wait_seen_s, wa.kv_wait_seen_s);
+    assert_eq!(fa.windows, wa.windows);
+    assert_eq!(fa.per_replica, wa.per_replica);
+    assert_eq!(fa.per_route, wa.per_route);
+    assert_eq!(fa.per_nic, wa.per_nic);
+    for q in [0.5, 0.95, 0.99] {
+        assert_eq!(fa.ttft_sketch.quantile(q), wa.ttft_sketch.quantile(q), "ttft p{q}");
+        assert_eq!(fa.tbt_sketch.quantile(q), wa.tbt_sketch.quantile(q), "tbt p{q}");
+        assert_eq!(fa.latency_sketch.quantile(q), wa.latency_sketch.quantile(q), "latency p{q}");
+    }
+    // Windowed-memory contract: the report works without any per-request
+    // state surviving, and the blame still sums to the measured latency.
+    assert!(
+        (wa.residual_s()).abs() <= 1e-9 * wa.latency_sum.max(1.0),
+        "windowed residual {}",
+        wa.residual_s()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Injected-bottleneck advisor scenarios
+// ---------------------------------------------------------------------------
+
+/// One fully-controlled request chain: every phase duration is injected, so
+/// the dominant blame component is known by construction.
+#[allow(clippy::too_many_arguments)]
+fn chain(
+    req: u32,
+    t0: f64,
+    admission: f64,
+    prefill: f64,
+    kv_wait: f64,
+    kv_xmit: f64,
+    batch_wait: f64,
+    decode: f64,
+) -> Vec<(f64, TraceEvent)> {
+    let t_admit = t0 + admission;
+    let t_pd = t_admit + prefill;
+    let t_kv = t_pd + kv_wait + kv_xmit;
+    let t_join = t_kv + batch_wait;
+    let t_fin = t_join + decode;
+    vec![
+        (t0, TraceEvent::Arrive { req }),
+        (t_admit, TraceEvent::Admit { req, replica: 0 }),
+        (t_admit, TraceEvent::PrefillChunk { req, replica: 0, chunk: 0 }),
+        (t_admit, TraceEvent::Burst { replica: 0, lane: Lane::Prefill, dur_s: prefill }),
+        (t_pd, TraceEvent::PrefillDone { req, replica: 0 }),
+        (t_pd, TraceEvent::KvEnqueue { req, src: 0, dst: 1, bytes: 1e6, wait_s: kv_wait }),
+        (t_kv, TraceEvent::KvDone { req, src: 0, dst: 1 }),
+        (t_join, TraceEvent::DecodeJoin { req, replica: 1 }),
+        (t_fin, TraceEvent::Finish { req, replica: 1, output_len: 8 }),
+    ]
+}
+
+fn report_of(chains: Vec<Vec<(f64, TraceEvent)>>) -> AttrReport {
+    let mut a = attribution::Attributor::new(60.0, true);
+    let mut events: Vec<(f64, TraceEvent)> = chains.into_iter().flatten().collect();
+    events.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+    for (t, ev) in events {
+        a.observe(t, ev);
+    }
+    a.finish()
+}
+
+#[test]
+fn advisor_names_throttled_kv_nic() {
+    // Every request queues ~5 s behind a serialized NIC; everything else
+    // is fast. The advisor must blame KV serialization and prescribe
+    // bandwidth.
+    let rep = report_of(
+        (0..8).map(|i| chain(i, i as f64 * 20.0, 0.05, 0.2, 5.0, 1.0, 0.05, 0.3)).collect(),
+    );
+    assert_eq!(rep.n, 8);
+    assert_eq!(rep.dominant().0, KV_SERIALIZE_WAIT);
+    assert_eq!(rep.dominant_name(), "kv_serialize_wait");
+    let advice = advise(&rep, None);
+    assert_eq!(advice[0].component_name(), "kv_serialize_wait");
+    assert_eq!(advice[0].lever, "add-kv-bandwidth");
+    assert!(advice[0].share > 0.5, "injected bottleneck owns the latency");
+    // The NIC split points at the throttled egress NIC.
+    let (wait, _xmit) = rep.per_nic.get(&0).copied().expect("NIC 0 blamed");
+    assert!((wait - 8.0 * 5.0).abs() < 1e-9);
+}
+
+#[test]
+fn advisor_names_starved_decode_pool() {
+    // KV arrives promptly but requests sit ~6 s waiting for a decode slot.
+    let rep = report_of(
+        (0..8).map(|i| chain(i, i as f64 * 20.0, 0.05, 0.2, 0.05, 0.1, 6.0, 0.4)).collect(),
+    );
+    assert_eq!(rep.dominant().0, DECODE_BATCH_WAIT);
+    let advice = advise(&rep, None);
+    assert_eq!(advice[0].component_name(), "decode_batch_wait");
+    assert_eq!(advice[0].lever, "shift-pd-split-toward-decode");
+    assert!(advice[0].share > 0.5);
+}
+
+#[test]
+fn advisor_names_undersized_prefill_pool() {
+    // Admission queues ~4 s before a prefill slot opens (and prefill itself
+    // runs 2 s): prefill-side blame dominates and the lever shifts the P:D
+    // split toward prefill.
+    let rep = report_of(
+        (0..8).map(|i| chain(i, i as f64 * 20.0, 4.0, 2.0, 0.05, 0.1, 0.05, 0.3)).collect(),
+    );
+    assert_eq!(rep.dominant().0, ADMISSION_WAIT);
+    let advice = advise(&rep, None);
+    assert_eq!(advice[0].component_name(), "admission_wait");
+    assert_eq!(advice[0].lever, "shift-pd-split-toward-prefill");
+    // The prefill family (admission + queue + compute) owns the latency.
+    let prefill_side: f64 = advice
+        .iter()
+        .filter(|a| a.lever == "shift-pd-split-toward-prefill")
+        .map(|a| a.share)
+        .sum();
+    assert!(prefill_side > 0.5, "prefill-side share {prefill_side}");
+}
+
+#[test]
+fn advisor_prices_levers_against_the_incumbent() {
+    // With a real incumbent partition in context, every advice line carries
+    // the incumbent's re-scored objective; un-discounting the KV fabric
+    // can only help (apply_kv_contention never raises a score).
+    let c = settings::case_study();
+    let p = schedule(&c, WorkloadKind::Lphd, 4, 0);
+    let (s_in, s_out) = WorkloadKind::Lphd.mean_lengths();
+    let ctx = AdvisorCtx {
+        cluster: &c,
+        model: &OPT_30B,
+        task: TaskProfile::new(1, s_in, s_out),
+        period: 600.0,
+        groups: p.groups.iter().map(|g| g.devices.clone()).collect(),
+        objective: Objective::Throughput,
+        link: Some(LinkModel::SharedNic),
+    };
+    let rep = report_of(
+        (0..4).map(|i| chain(i, i as f64 * 20.0, 0.05, 0.2, 5.0, 1.0, 0.05, 0.3)).collect(),
+    );
+    let advice = advise(&rep, Some(&ctx));
+    assert!(!advice.is_empty());
+    assert!(
+        advice[0].baseline_score > 0.0,
+        "incumbent re-score failed: {}",
+        advice[0].baseline_score
+    );
+    for a in &advice {
+        assert!(a.predicted_score.is_finite() && a.predicted_score >= 0.0);
+        assert_eq!(a.baseline_score, advice[0].baseline_score, "one shared baseline");
+        if a.lever == "add-kv-bandwidth" {
+            assert!(
+                a.gain() >= -1e-12,
+                "dropping the KV discount lowered the score: {}",
+                a.gain()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deploy + rescheduler integration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deployment_report_carries_attribution() {
+    let spec = DeploymentSpec::new(settings::case_study(), OPT_30B)
+        .workload(WorkloadKind::Lphd)
+        .quick(true)
+        .force_k(4)
+        .max_rounds(4)
+        .attribution(true);
+    let dep = spec.plan(&HexGen2Planner).expect("plans");
+    let trace = Trace::offline(WorkloadKind::Lphd, 40, 4);
+    let rep = dep.run(&SimBackend, &trace).expect("runs");
+    assert!(rep.attr.is_some(), "attribution implies tracing and a report");
+    let j = dep.report_json(&rep);
+    let a = j.get("attribution").expect("report embeds the attribution block");
+    assert_eq!(a.get("schema").unwrap().as_str(), Some("hexgen2-attr/v1"));
+    assert_eq!(
+        a.get("n_requests").unwrap().as_usize(),
+        Some(rep.records.len()),
+        "every completion attributed"
+    );
+    let resid = a.get("conservation_residual_s").unwrap().as_f64().unwrap();
+    let lat = a.get("latency_sum_s").unwrap().as_f64().unwrap();
+    assert!(resid.abs() <= 1e-9 * lat.max(1.0), "residual {resid} vs Σ latency {lat}");
+    let advisor = a.get("advisor").unwrap().as_arr().unwrap();
+    assert!(!advisor.is_empty(), "disagg plan prices at least one lever");
+    assert!(
+        advisor[0].get("baseline_score").unwrap().as_f64().unwrap() > 0.0,
+        "deploy layer supplied the advisor context"
+    );
+}
+
+#[test]
+fn drift_audit_records_carry_blamed_component() {
+    // Satellite closed loop: attribution on + a microsecond KV threshold —
+    // the pre-epoch blame report's dominant component is stamped into
+    // every drift the monitor fires.
+    let spec = DeploymentSpec::new(settings::case_study(), OPT_30B)
+        .workload(WorkloadKind::Lphd)
+        .quick(true)
+        .force_k(4)
+        .max_rounds(4)
+        .link(LinkModel::SharedNic)
+        .attribution(true);
+    let dep = spec.plan(&HexGen2Planner).expect("plans");
+    let trace = Trace::online(WorkloadKind::Lphd, 6.0, 120.0, 5);
+    let backend = ReschedBackend {
+        monitor: MonitorConfig {
+            window: 30.0,
+            min_samples: 10,
+            dwell: 3.0,
+            rate_band: 1e9,
+            kv_wait_threshold_s: 1e-6,
+        },
+        modeled_replan_s: 5.0,
+    };
+    let rep = dep.run(&backend, &trace).expect("resched runs");
+    let drifts: Vec<&AuditRecord> =
+        rep.audit.iter().filter(|r| matches!(r, AuditRecord::Drift { .. })).collect();
+    assert!(!drifts.is_empty(), "contention never fired a drift");
+    for d in &drifts {
+        let AuditRecord::Drift { blamed, .. } = d else { unreachable!() };
+        assert!(
+            COMPONENT_NAMES.contains(&blamed.as_str()),
+            "drift blamed {blamed:?}, not an attribution component"
+        );
+    }
+}

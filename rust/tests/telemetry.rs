@@ -447,7 +447,7 @@ fn drive_with_empty_kv_feed_is_exactly_drive() {
     let mcfg = MonitorConfig::case_study();
     let a = hexgen2::rescheduler::drive(&c, &OPT_30B, &incumbent, &trace, mcfg, &base, 10.0);
     let b = hexgen2::rescheduler::drive_with_kv(
-        &c, &OPT_30B, &incumbent, &trace, mcfg, &base, 10.0, &[],
+        &c, &OPT_30B, &incumbent, &trace, mcfg, &base, 10.0, &[], None,
     );
     assert_eq!(a.events.len(), b.events.len());
     assert_eq!(a.switches.len(), b.switches.len());
